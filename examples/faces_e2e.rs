@@ -1,0 +1,65 @@
+//! End-to-end Faces driver with REAL numerics — the full-system proof:
+//!
+//! * L1/L2: every kernel (pack / spectral-element ax / unpack-add) is the
+//!   AOT-compiled XLA artifact authored in JAX+Pallas;
+//! * L3: the simulated cluster (8 Frontier-like nodes, Slingshot-11-style
+//!   NICs with triggered ops, GPU streams + control processors, the MPI
+//!   matching layer and progress threads) moves the actual bytes;
+//! * every variant's final fields are checked against the sequential CPU
+//!   reference (the paper's own methodology, §V-A), and the headline
+//!   baseline-vs-ST comparison is reported.
+//!
+//! Run: `make artifacts && cargo run --release --example faces_e2e`
+
+use stmpi::coordinator::report::pct_delta;
+use stmpi::faces::{run_faces, FacesConfig, Variant};
+use stmpi::world::ComputeMode;
+
+fn main() {
+    let base = FacesConfig {
+        dist: (2, 2, 2),
+        nodes: 8,
+        ranks_per_node: 1,
+        g: 32,
+        outer: 1,
+        middle: 2,
+        inner: 10,
+        variant: Variant::Baseline,
+        compute: ComputeMode::Real,
+        check: true,
+        seed: 11,
+        cost: stmpi::costmodel::presets::frontier_like(),
+    };
+    println!(
+        "Faces end-to-end: {}x{}x{} ranks on {} nodes, G={} ({} inner iters, real XLA numerics)\n",
+        base.dist.0, base.dist.1, base.dist.2, base.nodes, base.g, base.inner
+    );
+
+    let mut rows = Vec::new();
+    for variant in [Variant::Baseline, Variant::St, Variant::StShader] {
+        let cfg = FacesConfig { variant, ..base.clone() };
+        let t0 = std::time::Instant::now();
+        let r = run_faces(&cfg).expect("faces run failed");
+        let err = r.max_err.expect("check enabled");
+        println!(
+            "{:<10} virtual {:>9.3} ms | max|field-reference| = {:.2e} {} | {} wire B, {} ipc B, {} kernels (wall {:.1}s)",
+            variant.name(),
+            r.time_ns as f64 / 1e6,
+            err,
+            if err < 1e-3 { "OK" } else { "FAIL" },
+            r.metrics.bytes_wire,
+            r.metrics.bytes_ipc,
+            r.metrics.kernels_launched,
+            t0.elapsed().as_secs_f64(),
+        );
+        assert!(err < 1e-3, "{} diverged from the CPU reference", variant.name());
+        rows.push((variant, r.time_ns as f64 / 1e6));
+    }
+
+    let baseline = rows[0].1;
+    println!("\nheadline (paper §V): execution time vs baseline");
+    for (v, t) in &rows[1..] {
+        println!("  {:<10} {:+.1}%", v.name(), pct_delta(baseline, *t));
+    }
+    println!("\nall variants validated against the CPU-only reference — recorded in EXPERIMENTS.md");
+}

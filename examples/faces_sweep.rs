@@ -1,0 +1,17 @@
+//! Regenerate every evaluation figure of the paper in one run
+//! (Figs 8-12; see DESIGN.md §Experiment index and EXPERIMENTS.md for
+//! the paper-vs-measured record).
+//!
+//! Run: `cargo run --release --example faces_sweep`
+
+use stmpi::faces::figures::{all_figures, run_figure, Loops, FIGURE_G, SEEDS};
+
+fn main() {
+    println!("Faces figure sweep: 5 seeds per variant, G={FIGURE_G}, Modeled compute\n");
+    for spec in all_figures() {
+        let t0 = std::time::Instant::now();
+        let report = run_figure(&spec, &SEEDS, Loops::default(), FIGURE_G);
+        println!("{}", report.render());
+        println!("(wall {:.1}s)\n", t0.elapsed().as_secs_f64());
+    }
+}

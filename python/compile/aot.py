@@ -1,0 +1,104 @@
+"""AOT compile path: lower every L2 entry point to HLO text + manifest.
+
+HLO *text* (never `.serialize()`): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (behind the rust `xla`
+crate) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Faces grid sizes to ship (rust picks by config; tests use 16).
+FACES_GRIDS = [16, 32]
+
+
+def to_hlo_text(fn, *specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.float32)
+
+
+def shape_str(shapes) -> str:
+    if not shapes:
+        return "-"
+    return ",".join("x".join(str(d) for d in s.shape) for s in shapes)
+
+
+def entries():
+    """(name, fn, input_specs, output_shapes) for every artifact."""
+    out = []
+    for g in FACES_GRIDS:
+        out.append(
+            (f"faces_pack_g{g}", model.faces_pack, [f32(g, g, g)],
+             [f32(6, g, g), f32(12, g), f32(8)])
+        )
+        out.append(
+            (
+                f"faces_ax_g{g}",
+                model.faces_ax,
+                [f32(g, g, g), f32(model.Q, model.Q)],
+                [f32(g, g, g)],
+            )
+        )
+        out.append(
+            (
+                f"faces_unpack_g{g}",
+                model.faces_unpack_add,
+                [f32(g, g, g), f32(6, g, g), f32(12, g), f32(8)],
+                [f32(g, g, g)],
+            )
+        )
+    n = model.param_count()
+    bs1 = (model.BATCH, model.SEQ + 1)
+    out.append(("train_init", model.init_params, [], [f32(n)]))
+    out.append(
+        ("train_grad", model.train_grad, [f32(n), f32(*bs1)], [f32(1), f32(n)])
+    )
+    out.append(("sgd_apply", model.sgd_apply, [f32(n), f32(n)], [f32(n)]))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest_lines = ["# AOT artifact manifest: name, HLO file, f32 arg/result shapes"]
+    for name, fn, specs, outs in entries():
+        if only and name not in only:
+            continue
+        text = to_hlo_text(fn, *specs)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        line = f"name={name} file={fname} in={shape_str(specs)} out={shape_str(outs)}"
+        manifest_lines.append(line)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

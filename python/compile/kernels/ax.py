@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: the Nekbone-style spectral-element operator `ax`.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's compute
+kernels are HIP on MI250X, where each element's tensor contractions run on
+a wavefront with LDS staging. On TPU the same contractions are batched
+small matmuls — ideal MXU work. We tile the element batch with the Pallas
+grid so each block's operands stay inside VMEM:
+
+  * block = EBLK elements of (Q,Q,Q) f32 -> EBLK*Q^3*4 bytes
+    (EBLK=8, Q=8: 16 KiB in + 16 KiB out + D 256 B, far below 16 MiB VMEM;
+    larger EBLK amortizes grid overhead, see EXPERIMENTS.md §Perf);
+  * contractions are expressed as dot_general-shaped matmuls on (Q, Q^2)
+    and (Q^2, Q) operands so the MXU systolic array does all FLOPs;
+  * the kernel runs with interpret=True here (CPU PJRT cannot execute
+    Mosaic custom-calls); TPU perf is estimated from VMEM footprint + MXU
+    utilization in EXPERIMENTS.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block size in elements. Q is fixed by the artifact shape.
+EBLK = 8
+
+
+def _ax_kernel(u_ref, d_ref, o_ref):
+    """One grid step: apply the operator to an [EBLK, Q, Q, Q] block."""
+    u = u_ref[...]
+    d = d_ref[...]
+    e, q = u.shape[0], u.shape[1]
+
+    # Axis-0 contraction: for every element, D @ U with U = (Q, Q^2).
+    u_r = u.reshape(e, q, q * q)
+    ur = jnp.einsum("am,emk->eak", d, u_r).reshape(e, q, q, q)
+    # Axis-1: move axis 1 to front of the trailing matrix.
+    u_s = u.transpose(0, 2, 1, 3).reshape(e, q, q * q)
+    us = (
+        jnp.einsum("bm,emk->ebk", d, u_s)
+        .reshape(e, q, q, q)
+        .transpose(0, 2, 1, 3)
+    )
+    # Axis-2: (Q^2, Q) @ D^T.
+    u_t = u.reshape(e, q * q, q)
+    ut = jnp.einsum("cm,ekm->ekc", d, u_t).reshape(e, q, q, q)
+
+    # Second application (transposed), summed over the three axes.
+    w = (
+        jnp.einsum("ma,emk->eak", d, ur.reshape(e, q, q * q)).reshape(e, q, q, q)
+        + jnp.einsum("mb,emk->ebk", d, us.transpose(0, 2, 1, 3).reshape(e, q, q * q))
+        .reshape(e, q, q, q)
+        .transpose(0, 2, 1, 3)
+        + jnp.einsum("mc,ekm->ekc", d, ut.reshape(e, q * q, q)).reshape(e, q, q, q)
+    )
+    o_ref[...] = w
+
+
+@functools.partial(jax.jit, static_argnames=("eblk",))
+def ax(u: jnp.ndarray, d: jnp.ndarray, eblk: int = EBLK) -> jnp.ndarray:
+    """Apply the spectral operator to `u` [E, Q, Q, Q] with matrix `d` [Q, Q]."""
+    e, q = u.shape[0], u.shape[1]
+    # Largest divisor of e not exceeding the requested block size, so any
+    # element count tiles cleanly.
+    eblk = max(b for b in range(1, min(eblk, e) + 1) if e % b == 0)
+    return pl.pallas_call(
+        _ax_kernel,
+        grid=(e // eblk,),
+        in_specs=[
+            pl.BlockSpec((eblk, q, q, q), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((q, q), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((eblk, q, q, q), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, q, q, q), jnp.float32),
+        interpret=True,
+    )(u, d)
+
+
+def _ax_grid_kernel(u_ref, d_ref, o_ref):
+    """One grid step: the operator on a single (Q,Q,Q) element tile."""
+    u = u_ref[...]
+    d = d_ref[...]
+    q = u.shape[0]
+    ur = jnp.einsum("am,mbc->abc", d, u)
+    us = jnp.einsum("bm,amc->abc", d, u)
+    ut = jnp.einsum("cm,abm->abc", d, u)
+    o_ref[...] = (
+        jnp.einsum("ma,mbc->abc", d, ur)
+        + jnp.einsum("mb,amc->abc", d, us)
+        + jnp.einsum("mc,abm->abc", d, ut)
+    )
+
+
+@jax.jit
+def ax_grid(u: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
+    """Apply the spectral operator to a [G,G,G] block laid out as a grid
+    of (Q,Q,Q) spectral elements, tiling the elements directly with a 3-D
+    Pallas grid (no grid<->element transpose on the HBM side — each
+    BlockSpec step *is* one element, which is also the natural VMEM
+    tiling on TPU)."""
+    g = u.shape[0]
+    q = d.shape[0]
+    assert g % q == 0, f"grid edge {g} must be a multiple of Q={q}"
+    n = g // q
+    return pl.pallas_call(
+        _ax_grid_kernel,
+        grid=(n, n, n),
+        in_specs=[
+            pl.BlockSpec((q, q, q), lambda i, j, k: (i, j, k)),
+            pl.BlockSpec((q, q), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((q, q, q), lambda i, j, k: (i, j, k)),
+        out_shape=jax.ShapeDtypeStruct((g, g, g), jnp.float32),
+        interpret=True,
+    )(u, d)
+
+
+def ax_flops(e: int, q: int) -> int:
+    """FLOPs of one application: 6 contractions x 2*Q^4 per element."""
+    return e * 12 * q**4
+
+
+def ax_bytes(e: int, q: int) -> int:
+    """HBM traffic: read u, write w (D is negligible)."""
+    return e * q**3 * 4 * 2

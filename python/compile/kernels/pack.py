@@ -1,0 +1,111 @@
+"""L1 Pallas kernels: surface pack / unpack-add for the Faces exchange.
+
+These are the bandwidth-bound kernels the Faces benchmark launches around
+its MPI phase ("copy into contiguous MPI buffers from faces, edges, and
+corners of the local block" / "add the received messages back", paper
+§V-A). On TPU the [G,G,G] block fits VMEM whole for the sizes we ship
+(G=32: 128 KiB), so both kernels run as a single grid step; the packed
+faces/edges/corners layout keeps the outgoing MPI buffers contiguous in
+HBM, the TPU analogue of the coalesced-write HIP packing kernels.
+
+Both kernels run with interpret=True (see ax.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(u_ref, f_ref, e_ref, c_ref):
+    u = u_ref[...]
+    g = u.shape[0]
+    f_ref[0, :, :] = u[0, :, :]
+    f_ref[1, :, :] = u[g - 1, :, :]
+    f_ref[2, :, :] = u[:, 0, :]
+    f_ref[3, :, :] = u[:, g - 1, :]
+    f_ref[4, :, :] = u[:, :, 0]
+    f_ref[5, :, :] = u[:, :, g - 1]
+
+    e_ref[0, :] = u[0, 0, :]
+    e_ref[1, :] = u[0, g - 1, :]
+    e_ref[2, :] = u[g - 1, 0, :]
+    e_ref[3, :] = u[g - 1, g - 1, :]
+    e_ref[4, :] = u[0, :, 0]
+    e_ref[5, :] = u[0, :, g - 1]
+    e_ref[6, :] = u[g - 1, :, 0]
+    e_ref[7, :] = u[g - 1, :, g - 1]
+    e_ref[8, :] = u[:, 0, 0]
+    e_ref[9, :] = u[:, 0, g - 1]
+    e_ref[10, :] = u[:, g - 1, 0]
+    e_ref[11, :] = u[:, g - 1, g - 1]
+
+    c_ref[0] = u[0, 0, 0]
+    c_ref[1] = u[0, 0, g - 1]
+    c_ref[2] = u[0, g - 1, 0]
+    c_ref[3] = u[0, g - 1, g - 1]
+    c_ref[4] = u[g - 1, 0, 0]
+    c_ref[5] = u[g - 1, 0, g - 1]
+    c_ref[6] = u[g - 1, g - 1, 0]
+    c_ref[7] = u[g - 1, g - 1, g - 1]
+
+
+@jax.jit
+def pack(u: jnp.ndarray):
+    """Extract surface regions of `u` [G,G,G] -> (faces [6,G,G], edges
+    [12,G], corners [8]). Region order documented in ref.pack_ref."""
+    g = u.shape[0]
+    return pl.pallas_call(
+        _pack_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((6, g, g), jnp.float32),
+            jax.ShapeDtypeStruct((12, g), jnp.float32),
+            jax.ShapeDtypeStruct((8,), jnp.float32),
+        ],
+        interpret=True,
+    )(u)
+
+
+def _unpack_add_kernel(u_ref, f_ref, e_ref, c_ref, o_ref):
+    u = u_ref[...]
+    f = f_ref[...]
+    e = e_ref[...]
+    c = c_ref[...]
+    g = u.shape[0]
+    u = u.at[0, :, :].add(f[0]).at[g - 1, :, :].add(f[1])
+    u = u.at[:, 0, :].add(f[2]).at[:, g - 1, :].add(f[3])
+    u = u.at[:, :, 0].add(f[4]).at[:, :, g - 1].add(f[5])
+
+    u = u.at[0, 0, :].add(e[0]).at[0, g - 1, :].add(e[1])
+    u = u.at[g - 1, 0, :].add(e[2]).at[g - 1, g - 1, :].add(e[3])
+    u = u.at[0, :, 0].add(e[4]).at[0, :, g - 1].add(e[5])
+    u = u.at[g - 1, :, 0].add(e[6]).at[g - 1, :, g - 1].add(e[7])
+    u = u.at[:, 0, 0].add(e[8]).at[:, 0, g - 1].add(e[9])
+    u = u.at[:, g - 1, 0].add(e[10]).at[:, g - 1, g - 1].add(e[11])
+
+    u = u.at[0, 0, 0].add(c[0]).at[0, 0, g - 1].add(c[1])
+    u = u.at[0, g - 1, 0].add(c[2]).at[0, g - 1, g - 1].add(c[3])
+    u = u.at[g - 1, 0, 0].add(c[4]).at[g - 1, 0, g - 1].add(c[5])
+    u = u.at[g - 1, g - 1, 0].add(c[6]).at[g - 1, g - 1, g - 1].add(c[7])
+    o_ref[...] = u
+
+
+@jax.jit
+def unpack_add(u: jnp.ndarray, faces: jnp.ndarray, edges: jnp.ndarray, corners: jnp.ndarray):
+    """Add received boundary contributions into `u`'s surface."""
+    g = u.shape[0]
+    return pl.pallas_call(
+        _unpack_add_kernel,
+        out_shape=jax.ShapeDtypeStruct((g, g, g), jnp.float32),
+        interpret=True,
+    )(u, faces, edges, corners)
+
+
+def pack_bytes(g: int) -> int:
+    """HBM traffic of pack: read the block surface, write the buffers."""
+    surface = 6 * g * g + 12 * g + 8
+    return 2 * surface * 4
+
+
+def unpack_bytes(g: int) -> int:
+    """HBM traffic of unpack_add: read+write the whole block plus buffers."""
+    return (2 * g**3 + 6 * g * g + 12 * g + 8) * 4

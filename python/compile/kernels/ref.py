@@ -1,0 +1,96 @@
+"""Pure-jnp oracle implementations for the L1 Pallas kernels.
+
+These are the correctness references: pytest checks every Pallas kernel
+against these functions, and the rust side's CPU reference (used by the
+Faces benchmark's self-check) implements the same math.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def deriv_matrix(q: int) -> np.ndarray:
+    """A fixed, well-conditioned QxQ 'spectral derivative'-like matrix.
+
+    Nekbone uses the Gauss-Lobatto-Legendre differentiation matrix; any
+    fixed dense matrix exercises the same tensor-contraction structure.
+    We use a deterministic, integer-friendly construction so rust can
+    reproduce it bit-for-bit in f32 (see rust/src/faces/reference.rs).
+    """
+    d = np.zeros((q, q), dtype=np.float32)
+    for a in range(q):
+        for m in range(q):
+            # Small magnitudes, exactly representable in f32.
+            d[a, m] = ((a - m) % q - (q - 1) / 2.0) / q
+    return d
+
+
+def ax_ref(u: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
+    """Spectral-element local operator (Nekbone's `ax` hot loop).
+
+    u: [E, Q, Q, Q] per-element nodal values; d: [Q, Q].
+    w = sum over the three axes of D^T (D u) applied along that axis.
+    """
+    ur = jnp.einsum("am,embc->eabc", d, u)
+    us = jnp.einsum("bm,eamc->eabc", d, u)
+    ut = jnp.einsum("cm,eabm->eabc", d, u)
+    w = (
+        jnp.einsum("ma,embc->eabc", d, ur)
+        + jnp.einsum("mb,eamc->eabc", d, us)
+        + jnp.einsum("mc,eabm->eabc", d, ut)
+    )
+    return w
+
+
+def pack_ref(u: jnp.ndarray):
+    """Extract the 6 faces, 12 edges, and 8 corners of a [G,G,G] block.
+
+    Order matches `rust/src/faces/neighbors.rs` (documented there):
+    faces:  -x, +x, -y, +y, -z, +z              -> [6, G, G]
+    edges:  (xy) --, -+, +-, ++  then (xz) --, -+, +-, ++
+            then (yz) --, -+, +-, ++            -> [12, G]
+    corners: (-,-,-) .. (+,+,+) lexicographic   -> [8]
+    """
+    g = u.shape[0]
+    faces = jnp.stack(
+        [u[0, :, :], u[g - 1, :, :], u[:, 0, :], u[:, g - 1, :], u[:, :, 0], u[:, :, g - 1]]
+    )
+    edges = jnp.stack(
+        [
+            u[0, 0, :], u[0, g - 1, :], u[g - 1, 0, :], u[g - 1, g - 1, :],
+            u[0, :, 0], u[0, :, g - 1], u[g - 1, :, 0], u[g - 1, :, g - 1],
+            u[:, 0, 0], u[:, 0, g - 1], u[:, g - 1, 0], u[:, g - 1, g - 1],
+        ]
+    )
+    corners = jnp.stack(
+        [
+            u[0, 0, 0], u[0, 0, g - 1], u[0, g - 1, 0], u[0, g - 1, g - 1],
+            u[g - 1, 0, 0], u[g - 1, 0, g - 1], u[g - 1, g - 1, 0], u[g - 1, g - 1, g - 1],
+        ]
+    )
+    return faces, edges, corners
+
+
+def unpack_add_ref(u, faces, edges, corners):
+    """Add received boundary contributions back into the block surface.
+
+    Mirror of `pack_ref`: the face received from the -x neighbor is added
+    onto this block's -x face, etc.
+    """
+    g = u.shape[0]
+    u = u.at[0, :, :].add(faces[0]).at[g - 1, :, :].add(faces[1])
+    u = u.at[:, 0, :].add(faces[2]).at[:, g - 1, :].add(faces[3])
+    u = u.at[:, :, 0].add(faces[4]).at[:, :, g - 1].add(faces[5])
+
+    u = u.at[0, 0, :].add(edges[0]).at[0, g - 1, :].add(edges[1])
+    u = u.at[g - 1, 0, :].add(edges[2]).at[g - 1, g - 1, :].add(edges[3])
+    u = u.at[0, :, 0].add(edges[4]).at[0, :, g - 1].add(edges[5])
+    u = u.at[g - 1, :, 0].add(edges[6]).at[g - 1, :, g - 1].add(edges[7])
+    u = u.at[:, 0, 0].add(edges[8]).at[:, 0, g - 1].add(edges[9])
+    u = u.at[:, g - 1, 0].add(edges[10]).at[:, g - 1, g - 1].add(edges[11])
+
+    u = u.at[0, 0, 0].add(corners[0]).at[0, 0, g - 1].add(corners[1])
+    u = u.at[0, g - 1, 0].add(corners[2]).at[0, g - 1, g - 1].add(corners[3])
+    u = u.at[g - 1, 0, 0].add(corners[4]).at[g - 1, 0, g - 1].add(corners[5])
+    u = u.at[g - 1, g - 1, 0].add(corners[6]).at[g - 1, g - 1, g - 1].add(corners[7])
+    return u

@@ -1,0 +1,144 @@
+"""L2: JAX entry points lowered to the AOT artifacts the rust side runs.
+
+Two groups:
+
+* **Faces** — the compute kernels of the Faces microbenchmark (paper
+  §V-A): `faces_pack` (surface -> contiguous MPI buffers), `faces_ax`
+  (interior spectral-element operator while communication is in flight),
+  `faces_unpack_add` (add received contributions). Each calls the L1
+  Pallas kernels in `kernels/`.
+
+* **Trainer** — a small causal language model used by the
+  `st_allreduce_train` example: data-parallel ranks each run
+  `train_grad`, allreduce the flat gradient through the ST collective,
+  then run `sgd_apply`. Parameters travel as ONE flat f32 vector so the
+  rust collective layer treats them as a single buffer.
+
+Everything here is shape-static; `aot.py` lowers one artifact per
+configured size.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ax as ax_kernel
+from .kernels import pack as pack_kernel
+from .kernels.ref import deriv_matrix
+
+Q = 8  # spectral element order + 1 (points per dimension)
+
+
+# ---------------------------------------------------------------------
+# Faces entries
+# ---------------------------------------------------------------------
+
+def faces_pack(u):
+    """[G,G,G] -> (faces [6,G,G], edges [12,G], corners [8])."""
+    f, e, c = pack_kernel.pack(u)
+    return f, e, c
+
+
+def faces_ax(u, d):
+    """Interior compute: the spectral operator applied to every (Q,Q,Q)
+    element tile of the [G,G,G] block (the Pallas grid tiles elements
+    directly; see kernels/ax.py::ax_grid).
+
+    `d` is a runtime argument, NOT a baked constant: xla_extension 0.5.1
+    (the version behind the rust `xla` crate) miscompiles constant
+    operands of gridded pallas_calls to zeros — see DESIGN.md §Gotchas.
+    """
+    return (ax_kernel.ax_grid(u, d),)
+
+
+def faces_unpack_add(u, faces, edges, corners):
+    """Add received boundary contributions into the block surface."""
+    return (pack_kernel.unpack_add(u, faces, edges, corners),)
+
+
+# ---------------------------------------------------------------------
+# Trainer entries (data-parallel LM for the ST-allreduce example)
+# ---------------------------------------------------------------------
+
+# Model dimensions (small enough to train a few hundred steps on CPU).
+VOCAB = 32
+SEQ = 16
+BATCH = 8
+DIM = 64
+HIDDEN = 4 * DIM
+LR = 0.5
+
+
+def _param_shapes():
+    return [
+        ("embed", (VOCAB, DIM)),
+        ("wq", (DIM, DIM)),
+        ("wk", (DIM, DIM)),
+        ("wv", (DIM, DIM)),
+        ("wo", (DIM, DIM)),
+        ("w1", (DIM, HIDDEN)),
+        ("w2", (HIDDEN, DIM)),
+        ("head", (DIM, VOCAB)),
+    ]
+
+
+def param_count() -> int:
+    return sum(int(np.prod(s)) for _, s in _param_shapes())
+
+
+def _unflatten(flat):
+    out = {}
+    off = 0
+    for name, shape in _param_shapes():
+        n = int(np.prod(shape))
+        out[name] = flat[off : off + n].reshape(shape)
+        off += n
+    return out
+
+
+def init_params():
+    """Deterministic initialization, emitted as a zero-input artifact."""
+    key = jax.random.PRNGKey(0)
+    parts = []
+    for name, shape in _param_shapes():
+        key, sub = jax.random.split(key)
+        scale = 0.02 if name == "embed" else (1.0 / np.sqrt(shape[0]))
+        parts.append((jax.random.normal(sub, shape, jnp.float32) * scale).reshape(-1))
+    return (jnp.concatenate(parts),)
+
+
+def _forward(p, tokens):
+    """Single-block causal transformer; tokens int32 [B, S]."""
+    x = p["embed"][tokens]  # [B, S, D]
+    # Causal single-head attention.
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    att = jnp.einsum("bsd,btd->bst", q, k) / np.sqrt(DIM).astype(np.float32)
+    mask = jnp.tril(jnp.ones((SEQ, SEQ), jnp.float32))
+    att = jnp.where(mask == 1.0, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    x = x + (att @ v) @ p["wo"]
+    # MLP.
+    x = x + jax.nn.gelu(x @ p["w1"]) @ p["w2"]
+    return x @ p["head"]  # [B, S, V]
+
+
+def _loss(flat, tokens_f):
+    tokens = tokens_f.astype(jnp.int32)  # [B, S+1] as f32 on the wire
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = _forward(_unflatten(flat), inp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def train_grad(flat, tokens_f):
+    """-> (loss [1], grads [N]): each rank computes its local gradient."""
+    loss, g = jax.value_and_grad(_loss)(flat, tokens_f)
+    return loss.reshape(1), g
+
+
+def sgd_apply(flat, grads):
+    """Apply the (allreduce-averaged) gradient."""
+    return (flat - LR * grads,)

@@ -1,0 +1,92 @@
+"""L2 model tests: faces entries and the trainer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import ax_ref, deriv_matrix, pack_ref, unpack_add_ref
+
+Q = model.Q
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+@pytest.mark.parametrize("g", [8, 16])
+def test_faces_ax_equals_elementwise_ref(g):
+    """The grid<->element reshape in faces_ax must be exact."""
+    u = rand((g, g, g), 1)
+    (w,) = model.faces_ax(u, jnp.asarray(deriv_matrix(Q)))
+    n = g // Q
+    ue = (
+        u.reshape(n, Q, n, Q, n, Q).transpose(0, 2, 4, 1, 3, 5).reshape(n**3, Q, Q, Q)
+    )
+    we = ax_ref(ue, jnp.asarray(deriv_matrix(Q)))
+    want = (
+        we.reshape(n, n, n, Q, Q, Q).transpose(0, 3, 1, 4, 2, 5).reshape(g, g, g)
+    )
+    np.testing.assert_allclose(w, want, rtol=1e-5, atol=1e-5)
+
+
+def test_faces_pack_and_unpack_against_ref():
+    g = 16
+    u = rand((g, g, g), 2)
+    f, e, c = model.faces_pack(u)
+    rf, re, rc = pack_ref(u)
+    np.testing.assert_array_equal(f, rf)
+    np.testing.assert_array_equal(e, re)
+    np.testing.assert_array_equal(c, rc)
+    (u2,) = model.faces_unpack_add(u, f, e, c)
+    np.testing.assert_allclose(u2, unpack_add_ref(u, rf, re, rc), rtol=1e-6)
+
+
+def test_param_count_matches_layout():
+    (flat,) = model.init_params()
+    assert flat.shape == (model.param_count(),)
+    assert flat.dtype == jnp.float32
+    # Deterministic init.
+    (flat2,) = model.init_params()
+    np.testing.assert_array_equal(flat, flat2)
+
+
+def make_tokens(seed):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, model.VOCAB, size=(model.BATCH, model.SEQ + 1))
+    return jnp.asarray(toks, jnp.float32)
+
+
+def test_train_grad_shapes_and_finite():
+    (flat,) = model.init_params()
+    loss, g = model.train_grad(flat, make_tokens(0))
+    assert loss.shape == (1,)
+    assert g.shape == flat.shape
+    assert np.isfinite(float(loss[0]))
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_loss_decreases_under_sgd():
+    (flat,) = model.init_params()
+    toks = make_tokens(1)
+    losses = []
+    for _ in range(100):
+        loss, g = model.train_grad(flat, toks)
+        losses.append(float(loss[0]))
+        (flat,) = model.sgd_apply(flat, g)
+    assert losses[-1] < losses[0] * 0.5, f"no learning: {losses[0]} -> {losses[-1]}"
+
+
+def test_initial_loss_near_uniform():
+    (flat,) = model.init_params()
+    loss, _ = model.train_grad(flat, make_tokens(2))
+    assert abs(float(loss[0]) - np.log(model.VOCAB)) < 0.5
+
+
+def test_sgd_apply_is_descent_step():
+    (flat,) = model.init_params()
+    g = jnp.ones_like(flat)
+    (out,) = model.sgd_apply(flat, g)
+    np.testing.assert_allclose(out, flat - model.LR, rtol=1e-6)

@@ -1,0 +1,117 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. progress-thread cost sweep — how software emulation overhead drives
+//!    the intra-node ST penalty (paper §V-D's mechanism);
+//! 2. rendezvous threshold sweep — protocol crossover for ST vs baseline;
+//! 3. batching width — one `MPIX_Enqueue_start` per N sends (the §III-A
+//!    batching feature) vs a start per send;
+//! 4. rank-order locality (paper §V-G item 3): neighbors packed on the
+//!    same node vs striped across nodes.
+
+use stmpi::costmodel::presets;
+use stmpi::faces::figures::FIGURE_G;
+use stmpi::faces::{run_faces, FacesConfig, Variant};
+use stmpi::world::ComputeMode;
+
+fn cfg_base() -> FacesConfig {
+    FacesConfig {
+        dist: (8, 1, 1),
+        nodes: 8,
+        ranks_per_node: 1,
+        g: FIGURE_G,
+        outer: 1,
+        middle: 2,
+        inner: 20,
+        variant: Variant::St,
+        compute: ComputeMode::Modeled,
+        check: false,
+        seed: 11,
+        cost: presets::frontier_like(),
+    }
+}
+
+fn pct(b: f64, v: f64) -> f64 {
+    (v - b) / b * 100.0
+}
+
+fn progress_cost_sweep() {
+    println!("== ablation: progress-thread per-op cost (fig9 topology) ==");
+    println!("{:>12} {:>12} {:>12} {:>10}", "per_op (us)", "base (ms)", "st (ms)", "delta");
+    for per_op in [500u64, 1_650, 3_300, 6_600, 13_200] {
+        let mut cfg = cfg_base();
+        cfg.nodes = 1;
+        cfg.ranks_per_node = 8;
+        cfg.cost.progress_per_op = per_op;
+        cfg.variant = Variant::Baseline;
+        let b = run_faces(&cfg).unwrap().time_ns as f64 / 1e6;
+        cfg.variant = Variant::St;
+        let s = run_faces(&cfg).unwrap().time_ns as f64 / 1e6;
+        println!(
+            "{:>12.1} {:>12.3} {:>12.3} {:>+9.1}%",
+            per_op as f64 / 1000.0,
+            b,
+            s,
+            pct(b, s)
+        );
+    }
+    println!();
+}
+
+fn rendezvous_threshold_sweep() {
+    println!("== ablation: eager/rendezvous threshold (fig10 topology) ==");
+    println!("{:>12} {:>12} {:>12} {:>10}", "thresh (KiB)", "base (ms)", "st (ms)", "delta");
+    for kib in [4usize, 16, 64, 256, 1024] {
+        let mut cfg = cfg_base();
+        cfg.cost.eager_threshold = kib * 1024;
+        cfg.variant = Variant::Baseline;
+        let b = run_faces(&cfg).unwrap().time_ns as f64 / 1e6;
+        cfg.variant = Variant::St;
+        let s = run_faces(&cfg).unwrap().time_ns as f64 / 1e6;
+        println!("{:>12} {:>12.3} {:>12.3} {:>+9.1}%", kib, b, s, pct(b, s));
+    }
+    println!();
+}
+
+fn batching_sweep() {
+    // Batching is exercised through the 3-D distribution (7 sends per
+    // rank per iteration through ONE start); compare against the
+    // unbatched upper bound by charging one memop pair per message.
+    println!("== ablation: trigger batching (2x2x2, 7 sends per start) ==");
+    let mut cfg = cfg_base();
+    cfg.dist = (2, 2, 2);
+    cfg.variant = Variant::St;
+    let batched = run_faces(&cfg).unwrap().time_ns as f64 / 1e6;
+    // Unbatched: memop costs scale with the number of messages.
+    let mut cfg2 = cfg.clone();
+    cfg2.cost.memop_hip *= 7;
+    let unbatched = run_faces(&cfg2).unwrap().time_ns as f64 / 1e6;
+    println!("batched   (1 writeValue/iter): {batched:.3} ms");
+    println!("unbatched (7 writeValues/iter ~ modeled): {unbatched:.3} ms");
+    println!("batching saves {:.1}%\n", pct(unbatched, batched).abs());
+}
+
+fn locality_sweep() {
+    // Paper §V-G item 3: for baseline, node-local neighbor placement is
+    // best; for ST the striped order can widen the ST advantage.
+    println!("== ablation: rank-order locality (16 ranks, 1-D chain) ==");
+    println!("{:>22} {:>12} {:>12} {:>10}", "placement", "base (ms)", "st (ms)", "delta");
+    for (name, nodes, rpn) in [("packed (2 nodes x 8)", 2usize, 8usize), ("spread (16 nodes x 1)", 16, 1)] {
+        let mut cfg = cfg_base();
+        cfg.dist = (16, 1, 1);
+        cfg.nodes = nodes;
+        cfg.ranks_per_node = rpn;
+        cfg.variant = Variant::Baseline;
+        let b = run_faces(&cfg).unwrap().time_ns as f64 / 1e6;
+        cfg.variant = Variant::St;
+        let s = run_faces(&cfg).unwrap().time_ns as f64 / 1e6;
+        println!("{name:>22} {b:>12.3} {s:>12.3} {:>+9.1}%", pct(b, s));
+    }
+    println!();
+}
+
+fn main() {
+    progress_cost_sweep();
+    rendezvous_threshold_sweep();
+    batching_sweep();
+    locality_sweep();
+}

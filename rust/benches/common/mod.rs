@@ -1,0 +1,15 @@
+//! Shared bench harness (criterion is unavailable offline): runs a figure
+//! spec and prints the paper-style report.
+
+use stmpi::faces::figures::{run_figure, FigureSpec, Loops, FIGURE_G, SEEDS};
+
+pub fn bench_figure(spec: FigureSpec) {
+    let t0 = std::time::Instant::now();
+    let report = run_figure(&spec, &SEEDS, Loops::default(), FIGURE_G);
+    println!("{}", report.render());
+    println!(
+        "(5 seeds x {} variants, wall {:.1}s)\n",
+        spec.variants.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,124 @@
+//! Microbenchmarks of the simulation substrate itself (the L3 hot path):
+//! raw event throughput, cell-waiter dispatch, host context switches, and
+//! end-to-end Faces simulation rates. Used by the perf pass
+//! (EXPERIMENTS.md §Perf).
+
+use std::time::Instant;
+
+use stmpi::costmodel::presets;
+use stmpi::faces::figures::{fig8, FIGURE_G};
+use stmpi::faces::{run_faces, FacesConfig, Variant};
+use stmpi::sim::{Core, Engine};
+use stmpi::world::ComputeMode;
+
+struct NullWorld;
+
+fn bench_event_throughput() {
+    let n: u64 = 2_000_000;
+    let eng: Engine<NullWorld> = Engine::new(NullWorld, 1);
+    eng.setup(|_, core| {
+        fn chain(core: &mut Core<NullWorld>, left: u64) {
+            if left > 0 {
+                core.schedule(1, Box::new(move |_, c| chain(c, left - 1)));
+            }
+        }
+        chain(core, n);
+    });
+    let t0 = Instant::now();
+    let (_, stats) = eng.run().unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "event chain:        {:>10.0} events/s  ({} events in {:.2}s)",
+        stats.events as f64 / dt,
+        stats.events,
+        dt
+    );
+}
+
+fn bench_cell_waiters() {
+    let rounds: u64 = 200_000;
+    let eng: Engine<NullWorld> = Engine::new(NullWorld, 1);
+    eng.setup(|_, core| {
+        let cell = core.new_cell("c", 0);
+        fn round(core: &mut Core<NullWorld>, cell: stmpi::sim::CellId, i: u64, max: u64) {
+            if i >= max {
+                return;
+            }
+            core.on_ge(
+                cell,
+                i + 1,
+                "bench",
+                Box::new(move |_, c| round(c, cell, i + 1, max)),
+            );
+            core.schedule(1, Box::new(move |_, c| {
+                c.add_cell(cell, 1);
+            }));
+        }
+        round(core, cell, 0, rounds);
+    });
+    let t0 = Instant::now();
+    let (_, stats) = eng.run().unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "cell waiter rounds: {:>10.0} rounds/s  ({} cell writes in {:.2}s)",
+        rounds as f64 / dt,
+        stats.cell_writes,
+        dt
+    );
+}
+
+fn bench_host_switches() {
+    let iters: u64 = 50_000;
+    let mut eng: Engine<NullWorld> = Engine::new(NullWorld, 1);
+    for h in 0..4u64 {
+        eng.spawn_host(format!("h{h}"), move |ctx| {
+            for _ in 0..iters {
+                ctx.advance(1);
+            }
+        });
+    }
+    let t0 = Instant::now();
+    let (_, stats) = eng.run().unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "host switches:      {:>10.0} switches/s ({} in {:.2}s)",
+        stats.host_switches as f64 / dt,
+        stats.host_switches,
+        dt
+    );
+}
+
+fn bench_faces_rate() {
+    let spec = fig8();
+    let cfg = FacesConfig {
+        dist: spec.dist,
+        nodes: spec.nodes,
+        ranks_per_node: spec.ranks_per_node,
+        g: FIGURE_G,
+        outer: 1,
+        middle: 2,
+        inner: 25,
+        variant: Variant::St,
+        compute: ComputeMode::Modeled,
+        check: false,
+        seed: 11,
+        cost: presets::frontier_like(),
+    };
+    let t0 = Instant::now();
+    let r = run_faces(&cfg).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    let iters = (cfg.outer * cfg.middle * cfg.inner * cfg.world_size()) as f64;
+    println!(
+        "faces fig8 ST:      {:>10.0} rank-iters/s (64 ranks, {:.2}s wall, {} msgs)",
+        iters / dt,
+        dt,
+        r.metrics.eager_sends + r.metrics.rendezvous_sends + r.metrics.intra_sends
+    );
+}
+
+fn main() {
+    bench_event_throughput();
+    bench_cell_waiters();
+    bench_host_switches();
+    bench_faces_rate();
+}

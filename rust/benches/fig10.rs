@@ -1,0 +1,6 @@
+//! Regenerates the paper's Figure 10 (see DESIGN.md experiment index).
+mod common;
+
+fn main() {
+    common::bench_figure(stmpi::faces::figures::fig10());
+}

@@ -1,0 +1,208 @@
+//! Minimal configuration system: a TOML-subset `key = value` parser.
+//!
+//! No external parser crates are available offline, so this implements
+//! the subset the launcher needs: sections (`[faces]`), strings, ints,
+//! floats, booleans, and `AxBxC` triples, with `#` comments. Values are
+//! accessed through typed getters with defaults.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parsed configuration: `section.key -> raw string value`.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", i + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", i + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let mut val = v.trim().to_string();
+            if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+                val = val[1..val.len() - 1].to_string();
+            }
+            if values.insert(key.clone(), val).is_some() {
+                bail!("line {}: duplicate key '{key}'", i + 1);
+            }
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+        Self::parse(&text)
+    }
+
+    /// Overlay `key=value` CLI overrides on top of the file values.
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> Result<()> {
+        for o in overrides {
+            let (k, v) = o
+                .split_once('=')
+                .ok_or_else(|| anyhow!("override '{o}': expected key=value"))?;
+            self.values.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("config '{key}': bad integer '{v}'")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.u64_or(key, default as u64)? as usize)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("config '{key}': bad float '{v}'")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("config '{key}': bad bool '{v}'"),
+        }
+    }
+
+    /// Parse an `AxBxC` triple (e.g. a Faces process distribution).
+    pub fn triple_or(&self, key: &str, default: (usize, usize, usize)) -> Result<(usize, usize, usize)> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => parse_triple(v).ok_or_else(|| anyhow!("config '{key}': bad triple '{v}'")),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse `AxBxC` (also accepts `A x B x C` with whitespace).
+pub fn parse_triple(v: &str) -> Option<(usize, usize, usize)> {
+    let parts: Vec<_> = v.split('x').map(|p| p.trim()).collect();
+    if parts.len() != 3 {
+        return None;
+    }
+    Some((
+        parts[0].parse().ok()?,
+        parts[1].parse().ok()?,
+        parts[2].parse().ok()?,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(
+            r#"
+            # top comment
+            seed = 42
+            [faces]
+            dist = 2x2x2   # trailing comment
+            grid = 32
+            variant = "st"
+            jitter = 0.03
+            check = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.u64_or("seed", 0).unwrap(), 42);
+        assert_eq!(c.triple_or("faces.dist", (1, 1, 1)).unwrap(), (2, 2, 2));
+        assert_eq!(c.usize_or("faces.grid", 0).unwrap(), 32);
+        assert_eq!(c.str_or("faces.variant", ""), "st");
+        assert!((c.f64_or("faces.jitter", 0.0).unwrap() - 0.03).abs() < 1e-12);
+        assert!(c.bool_or("faces.check", false).unwrap());
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.u64_or("nope", 7).unwrap(), 7);
+        assert_eq!(c.str_or("nope", "x"), "x");
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(Config::parse("a = 1\na = 2").is_err());
+        assert!(Config::parse("just words").is_err());
+        assert!(Config::parse("[unterminated").is_err());
+    }
+
+    #[test]
+    fn overrides_replace_file_values() {
+        let mut c = Config::parse("a = 1").unwrap();
+        c.apply_overrides(&["a=5".into(), "b.c=7".into()]).unwrap();
+        assert_eq!(c.u64_or("a", 0).unwrap(), 5);
+        assert_eq!(c.u64_or("b.c", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_typed_values_error() {
+        let c = Config::parse("a = xyz").unwrap();
+        assert!(c.u64_or("a", 0).is_err());
+        assert!(c.f64_or("a", 0.0).is_err());
+        assert!(c.bool_or("a", false).is_err());
+    }
+
+    #[test]
+    fn triple_parsing() {
+        assert_eq!(parse_triple("8x1x1"), Some((8, 1, 1)));
+        assert_eq!(parse_triple("2 x 2 x 2"), Some((2, 2, 2)));
+        assert_eq!(parse_triple("2x2"), None);
+        assert_eq!(parse_triple("axbxc"), None);
+    }
+}

@@ -1,0 +1,114 @@
+//! Coordinator: builds the simulated cluster and orchestrates runs.
+//!
+//! This is the L3 "launcher" layer: it wires nodes, GPUs, NICs, and MPI
+//! processes according to a [`Topology`], spawns one host actor per MPI
+//! rank, runs the workload, and collects metrics/timings.
+
+pub mod config;
+pub mod report;
+
+use crate::costmodel::CostModel;
+use crate::gpu::Gpu;
+use crate::mpi::Proc;
+use crate::nic::Nic;
+use crate::sim::{Engine, HostCtx, SimError, SimStats};
+use crate::world::{ComputeMode, Topology, World};
+
+/// Build a fully-wired world: one NIC per node, one GPU + one MPI process
+/// per rank (the paper's one-rank-per-GPU mapping, §V-C).
+pub fn build_world(cost: CostModel, topo: Topology) -> World {
+    let mut w = World::new(cost, topo.clone());
+    for n in 0..topo.nodes {
+        w.nics.push(Nic::new(n));
+    }
+    for r in 0..topo.world_size() {
+        let node = topo.node_of(r);
+        w.gpus.push(Gpu::new(node));
+        w.procs.push(Proc::new(r, node, r));
+    }
+    w
+}
+
+/// Result of a cluster run.
+pub struct RunOutcome {
+    pub world: World,
+    pub stats: SimStats,
+    /// Wall-clock (virtual ns) at which each rank's program finished.
+    pub rank_finish: Vec<u64>,
+    /// max over ranks of finish time == the job's makespan.
+    pub makespan: u64,
+}
+
+/// Launch `world_size` host actors (one per rank) running `program(rank,
+/// ctx)`, drive the simulation to completion, and return the outcome.
+pub fn run_cluster<F>(
+    world: World,
+    seed: u64,
+    program: F,
+) -> Result<RunOutcome, SimError>
+where
+    F: Fn(usize, &mut HostCtx<World>) + Send + Sync + Clone + 'static,
+{
+    let world_size = world.topo.world_size();
+    let mut eng = Engine::new(world, seed);
+    eng.setup(|w, _| w.rank_finish = vec![0; world_size]);
+    for rank in 0..world_size {
+        let program = program.clone();
+        eng.spawn_host(format!("rank{rank}"), move |ctx| {
+            program(rank, ctx);
+            let t = ctx.now();
+            ctx.with(move |w, _| w.rank_finish[rank] = t);
+        });
+    }
+    let (world, stats) = eng.run()?;
+    let rank_finish = world.rank_finish.clone();
+    let makespan = rank_finish.iter().copied().max().unwrap_or(0);
+    Ok(RunOutcome { world, stats, rank_finish, makespan })
+}
+
+/// Convenience: build + run in one call.
+pub fn run(
+    cost: CostModel,
+    topo: Topology,
+    compute: ComputeMode,
+    seed: u64,
+    program: impl Fn(usize, &mut HostCtx<World>) + Send + Sync + Clone + 'static,
+) -> Result<RunOutcome, SimError> {
+    let mut w = build_world(cost, topo);
+    w.compute = compute;
+    run_cluster(w, seed, program)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::presets;
+
+    #[test]
+    fn build_world_wires_everything() {
+        let w = build_world(presets::frontier_like(), Topology::new(4, 2));
+        assert_eq!(w.nics.len(), 4);
+        assert_eq!(w.gpus.len(), 8);
+        assert_eq!(w.procs.len(), 8);
+        assert_eq!(w.procs[5].node, 2);
+        assert_eq!(w.gpus[5].node, 2);
+    }
+
+    #[test]
+    fn run_cluster_records_finish_times() {
+        let out = run(
+            presets::frontier_like(),
+            Topology::new(2, 1),
+            ComputeMode::Modeled,
+            1,
+            |rank, ctx| {
+                ctx.advance(100 * (rank as u64 + 1));
+            },
+        )
+        .unwrap();
+        assert_eq!(out.rank_finish.len(), 2);
+        assert_eq!(out.rank_finish[0], 100);
+        assert_eq!(out.rank_finish[1], 200);
+        assert_eq!(out.makespan, 200);
+    }
+}

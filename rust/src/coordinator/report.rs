@@ -1,0 +1,97 @@
+//! Run reporting: paper-style avg/min/max summaries and tables.
+
+/// Summary statistics over a set of measured runs (the paper reports
+/// average, minimum, and maximum over 5 runs; §V-B).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub avg: f64,
+    pub min: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "summary of zero samples");
+        let n = samples.len();
+        let avg = samples.iter().sum::<f64>() / n as f64;
+        let min = samples.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = samples.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        Self { avg, min, max, n }
+    }
+}
+
+/// Percentage difference of `b` relative to `a` (positive = b slower).
+pub fn pct_delta(a: f64, b: f64) -> f64 {
+    (b - a) / a * 100.0
+}
+
+/// Format a virtual-ns quantity as seconds with 4 significant decimals.
+pub fn ns_to_s(ns: u64) -> f64 {
+    ns as f64 / 1e9
+}
+
+/// Render a fixed-width table (first row is the header).
+pub fn render_table(rows: &[Vec<String>]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let cols = rows.iter().map(|r| r.len()).max().unwrap();
+    let mut widths = vec![0usize; cols];
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    for (ri, row) in rows.iter().enumerate() {
+        for (i, cell) in row.iter().enumerate() {
+            if i > 0 {
+                out.push_str("  ");
+            }
+            out.push_str(&format!("{:<width$}", cell, width = widths[i]));
+        }
+        out.push('\n');
+        if ri == 0 {
+            for (i, w) in widths.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&"-".repeat(*w));
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_stats() {
+        let s = Summary::of(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.avg, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn pct_delta_signs() {
+        assert!((pct_delta(100.0, 110.0) - 10.0).abs() < 1e-12);
+        assert!((pct_delta(100.0, 96.0) + 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(&[
+            vec!["variant".into(), "avg".into()],
+            vec!["baseline".into(), "1.00".into()],
+            vec!["st".into(), "1.10".into()],
+        ]);
+        assert!(t.contains("variant"));
+        assert!(t.lines().count() == 4);
+    }
+}

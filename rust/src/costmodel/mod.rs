@@ -1,0 +1,228 @@
+//! Calibrated cost model for the simulated Frontier-like testbed.
+//!
+//! Every latency/bandwidth the simulation charges comes from this struct,
+//! so experiments can sweep parameters (and the ablation benches do). The
+//! defaults are calibrated from public numbers for the paper's hardware —
+//! HPE Slingshot-11 (~2 µs end-to-end latency, 200 Gb/s), AMD MI250X-class
+//! GPUs (HIP kernel launch ~6 µs, stream memory ops ~1-2 µs), AMD EPYC
+//! hosts — plus the paper's own measured *deltas* which bound the
+//! progress-thread emulation overheads (§V-D) and the HIP-vs-shader
+//! stream-memop gap (§V-F).
+//!
+//! All times are in nanoseconds of virtual time; bandwidths in bytes/ns
+//! (== GB/s · 10⁻⁹ · 10⁹, i.e. numerically GB/s ÷ 1).
+
+pub mod presets;
+
+use crate::sim::rng::SplitMix64;
+use crate::sim::Time;
+
+/// Which stream-memory-operation implementation the GPU control processor
+/// uses (paper §V-F): the stock HIP `hipStreamWriteValue64` /
+/// `hipStreamWaitValue64`, or the hand-coded shader kernels that the paper
+/// shows are ~4 pp faster end-to-end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemOpFlavor {
+    Hip,
+    Shader,
+}
+
+/// All tunable costs of the simulated testbed.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    // ---- host (application process on the CPU) ----
+    /// Cost of posting a standard MPI operation (MPI_Isend/MPI_Irecv).
+    pub host_mpi_call: Time,
+    /// Cost of an MPIX enqueue operation (returns immediately; just
+    /// descriptor creation + queueing).
+    pub host_enqueue_call: Time,
+    /// Host-side completion check / request bookkeeping (MPI_Wait fast path).
+    pub host_wait_overhead: Time,
+
+    // ---- GPU / streams ----
+    /// Host-side cost of enqueueing a kernel or stream op onto a stream.
+    pub kernel_enqueue: Time,
+    /// GPU control-processor dispatch cost per stream operation
+    /// (launch + teardown of a kernel, or starting a memop).
+    pub cp_dispatch: Time,
+    /// Latency of a host<->device synchronization (hipStreamSynchronize):
+    /// the expensive kernel-boundary sync the paper's Fig. 1 shows.
+    pub stream_sync: Time,
+    /// Execution cost of hipStreamWriteValue64 / hipStreamWaitValue64 on
+    /// the control processor (the untuned HIP path, paper §V-F).
+    pub memop_hip: Time,
+    /// Execution cost of the hand-coded shader replacement.
+    pub memop_shader: Time,
+    /// GPU compute throughput, f32 FLOPs per ns (MI250X GCD ~ 24 TF/s f32).
+    pub gpu_flops_per_ns: f64,
+    /// GPU memory bandwidth, bytes per ns (MI250X GCD ~ 1.6 TB/s).
+    pub gpu_mem_bw: f64,
+    /// Fixed per-kernel execution overhead (pipeline drain, etc.).
+    pub kernel_fixed: Time,
+
+    // ---- NIC (simulated Slingshot-11) ----
+    /// Host cost of appending one command descriptor to the NIC command
+    /// queue (libfabric DWQ post).
+    pub nic_cmd_post: Time,
+    /// NIC-side processing per command (doorbell to DMA start).
+    pub nic_proc: Time,
+    /// Hardware latency from a trigger-counter write reaching threshold to
+    /// the deferred operation starting (triggered-op dispatch).
+    pub nic_trigger_latency: Time,
+    /// NIC hardware tag-matching cost per arriving message.
+    pub nic_match: Time,
+    /// NIC completion-counter update cost.
+    pub nic_completion: Time,
+    /// One-way wire latency between any two nodes (Slingshot ~1.8 µs MPI).
+    pub wire_latency: Time,
+    /// Wire bandwidth in bytes/ns (200 Gb/s = 25 GB/s = 25 B/ns).
+    pub wire_bw: f64,
+    /// Eager/rendezvous protocol switch threshold in bytes.
+    pub eager_threshold: usize,
+    /// Extra control-message round-trip charged to a rendezvous transfer
+    /// (RTS + CTS/Get issue), on top of the data movement.
+    pub rendezvous_ctrl: Time,
+    /// Host CPU time the *standard* (non-triggered) path spends
+    /// progressing each rendezvous send (RTS/CTS handling inside
+    /// MPI_Isend/MPI_Waitall). The ST path does not pay this: "the NIC
+    /// handles the entire progression of the rendezvous protocol" (§V-E).
+    pub host_rendezvous_progression: Time,
+
+    // ---- intra-node (ROCr IPC / P2P DMA) ----
+    /// Startup latency of an intra-node GPU peer-to-peer DMA (ROCr IPC).
+    pub ipc_latency: Time,
+    /// Intra-node P2P bandwidth, bytes/ns (xGMI ~ 50 GB/s).
+    pub ipc_bw: f64,
+    /// Latency of the non-temporal memcpy path used for small intra-node
+    /// payloads (paper §V-D).
+    pub memcpy_small: Time,
+    /// Payload size below which the memcpy path is used intra-node.
+    pub memcpy_threshold: usize,
+
+    // ---- progress thread (emulation of missing triggered features) ----
+    /// Latency for the async progress thread to observe a trigger-counter
+    /// update and wake (the key intra-node ST penalty, paper §V-D).
+    pub progress_wakeup: Time,
+    /// Progress-thread software handling cost per emulated operation
+    /// (message matching + descriptor post).
+    pub progress_per_op: Time,
+    /// Progress-thread cost to update a completion counter.
+    pub progress_completion: Time,
+    /// Extra progress-thread involvement per *inter-node rendezvous* ST
+    /// send (completion-counter handling the NIC can't do alone, §V-E).
+    pub progress_rendezvous_assist: Time,
+
+    // ---- stochastics ----
+    /// Multiplicative lognormal jitter applied to charged costs (sigma).
+    /// 0 disables jitter entirely.
+    pub jitter_sigma: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        presets::frontier_like()
+    }
+}
+
+impl CostModel {
+    /// Kernel execution time from its roofline characteristics.
+    pub fn kernel_time(&self, flops: u64, bytes: u64) -> Time {
+        let compute = flops as f64 / self.gpu_flops_per_ns;
+        let memory = bytes as f64 / self.gpu_mem_bw;
+        self.kernel_fixed + compute.max(memory).round() as Time
+    }
+
+    /// Wire transfer time for an eager message of `bytes`.
+    pub fn wire_time(&self, bytes: usize) -> Time {
+        self.wire_latency + (bytes as f64 / self.wire_bw).round() as Time
+    }
+
+    /// Serialization time on one NIC port for `bytes`.
+    pub fn wire_serialize(&self, bytes: usize) -> Time {
+        (bytes as f64 / self.wire_bw).round() as Time
+    }
+
+    /// Intra-node data movement time for `bytes`.
+    pub fn ipc_time(&self, bytes: usize) -> Time {
+        if bytes <= self.memcpy_threshold {
+            self.memcpy_small + (bytes as f64 / self.gpu_mem_bw).round() as Time
+        } else {
+            self.ipc_latency + (bytes as f64 / self.ipc_bw).round() as Time
+        }
+    }
+
+    /// Stream memory op cost for a flavor.
+    pub fn memop(&self, flavor: MemOpFlavor) -> Time {
+        match flavor {
+            MemOpFlavor::Hip => self.memop_hip,
+            MemOpFlavor::Shader => self.memop_shader,
+        }
+    }
+
+    /// Apply configured jitter to a mean cost.
+    pub fn jittered(&self, mean: Time, rng: &mut SplitMix64) -> Time {
+        rng.jitter(mean, self.jitter_sigma)
+    }
+
+    /// True if a message of `bytes` uses the rendezvous protocol.
+    pub fn is_rendezvous(&self, bytes: usize) -> bool {
+        bytes > self.eager_threshold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_time_is_roofline_max() {
+        let mut cm = presets::frontier_like();
+        cm.kernel_fixed = 0;
+        cm.gpu_flops_per_ns = 10.0;
+        cm.gpu_mem_bw = 1000.0;
+        // compute-bound: 1e6 flops / 10 = 1e5 ns vs 1e3 bytes -> 1 ns
+        assert_eq!(cm.kernel_time(1_000_000, 1_000), 100_000);
+        // memory-bound
+        assert_eq!(cm.kernel_time(1_000, 1_000_000), 1_000);
+    }
+
+    #[test]
+    fn wire_time_includes_latency_and_bw() {
+        let mut cm = presets::frontier_like();
+        cm.wire_latency = 2000;
+        cm.wire_bw = 25.0;
+        assert_eq!(cm.wire_time(25_000), 2000 + 1000);
+    }
+
+    #[test]
+    fn small_messages_use_memcpy_path() {
+        let cm = presets::frontier_like();
+        let small = cm.ipc_time(64);
+        let large = cm.ipc_time(4 << 20);
+        assert!(small < large);
+    }
+
+    #[test]
+    fn memop_flavors_differ() {
+        let cm = presets::frontier_like();
+        assert!(
+            cm.memop(MemOpFlavor::Shader) < cm.memop(MemOpFlavor::Hip),
+            "tuned shader memops must be cheaper (paper §V-F)"
+        );
+    }
+
+    #[test]
+    fn rendezvous_threshold() {
+        let cm = presets::frontier_like();
+        assert!(!cm.is_rendezvous(cm.eager_threshold));
+        assert!(cm.is_rendezvous(cm.eager_threshold + 1));
+    }
+
+    #[test]
+    fn zero_jitter_is_exact() {
+        let mut cm = presets::frontier_like();
+        cm.jitter_sigma = 0.0;
+        let mut rng = SplitMix64::new(5);
+        assert_eq!(cm.jittered(12345, &mut rng), 12345);
+    }
+}

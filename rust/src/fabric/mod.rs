@@ -1,0 +1,121 @@
+//! Network fabric: inter-node links with latency + bandwidth serialization.
+//!
+//! Models the Slingshot fabric at the level the paper's experiments need:
+//! a full bisection network (8 nodes, one NIC port each) where each
+//! message pays a one-way latency plus store-and-forward serialization on
+//! the source egress port and destination ingress port. Port busy-until
+//! times give first-order congestion behaviour when many messages leave
+//! or arrive at one node simultaneously (the 64-rank Fig 8 case).
+
+use crate::sim::Time;
+use crate::world::{Callback, Ctx, World};
+
+/// Per-node port state (one NIC port per node, as on the testbed).
+#[derive(Debug, Default, Clone)]
+pub struct Port {
+    pub egress_busy_until: Time,
+    pub ingress_busy_until: Time,
+}
+
+/// Schedule delivery of `bytes` from `src_node` to `dst_node`; runs `cb`
+/// at the arrival instant. Returns the virtual time at which the payload
+/// has fully left the source port (local send completion for eager sends).
+pub fn transfer(
+    w: &mut World,
+    core: &mut Ctx,
+    src_node: usize,
+    dst_node: usize,
+    bytes: usize,
+    cb: Callback,
+) -> Time {
+    debug_assert_ne!(src_node, dst_node, "fabric::transfer is inter-node only");
+    w.metrics.bytes_wire += bytes as u64;
+    let now = core.now();
+    let ser = w.cost.wire_serialize(bytes);
+
+    // Source egress port serialization.
+    let egress = &mut w.nics[src_node].port.egress_busy_until;
+    let start = now.max(*egress);
+    let left_src = start + ser;
+    *egress = left_src;
+
+    // Wire latency.
+    let at_dst = left_src + w.cost.wire_latency;
+
+    // Destination ingress port serialization (store-and-forward model:
+    // the message occupies the ingress port for its serialization time).
+    let ingress = &mut w.nics[dst_node].port.ingress_busy_until;
+    let arrive = at_dst.max(*ingress) + ser;
+    *ingress = arrive;
+
+    core.schedule_at(arrive, cb);
+    left_src
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::presets;
+    use crate::nic::Nic;
+    use crate::sim::Engine;
+    use crate::world::Topology;
+
+    fn world2() -> World {
+        let mut w = World::new(presets::frontier_like(), Topology::new(2, 1));
+        w.nics.push(Nic::new(0));
+        w.nics.push(Nic::new(1));
+        w
+    }
+
+    /// Run a closure in a 2-node world, recording arrival times via a
+    /// shared readout.
+    fn arrivals_of(n_msgs: usize, bytes: usize) -> Vec<Time> {
+        use std::sync::{Arc, Mutex};
+        let readout: Arc<Mutex<Vec<Time>>> = Arc::new(Mutex::new(Vec::new()));
+        let eng = Engine::new(world2(), 1);
+        for _ in 0..n_msgs {
+            let ro = readout.clone();
+            eng.setup(move |w, core| {
+                transfer(
+                    w,
+                    core,
+                    0,
+                    1,
+                    bytes,
+                    Box::new(move |_, c| ro.lock().unwrap().push(c.now())),
+                );
+            });
+        }
+        eng.run().unwrap();
+        let v = readout.lock().unwrap().clone();
+        v
+    }
+
+    #[test]
+    fn single_transfer_arrival_time() {
+        let t = arrivals_of(1, 25_000);
+        // ser = 25_000/25 = 1000 ns on each port; latency 1800 ns.
+        assert_eq!(t, vec![1000 + 1800 + 1000]);
+    }
+
+    #[test]
+    fn transfers_serialize_on_ports() {
+        let t = arrivals_of(3, 25_000);
+        assert_eq!(t.len(), 3);
+        // Back-to-back messages pipeline across ports: steady-state spacing
+        // is one serialization quantum (1000 ns at 25 B/ns).
+        assert_eq!(t[1] - t[0], 1000);
+        assert_eq!(t[2] - t[1], 1000);
+    }
+
+    #[test]
+    fn wire_byte_metric_accumulates() {
+        let eng = Engine::new(world2(), 1);
+        eng.setup(|w, core| {
+            transfer(w, core, 0, 1, 100, Box::new(|_, _| {}));
+            transfer(w, core, 1, 0, 200, Box::new(|_, _| {}));
+        });
+        let (w, _) = eng.run().unwrap();
+        assert_eq!(w.metrics.bytes_wire, 300);
+    }
+}

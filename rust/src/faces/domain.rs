@@ -1,0 +1,256 @@
+//! Faces domain decomposition: the 3-D process grid and its 26-neighbor
+//! halo-exchange schedule (CORAL-2 Nekbone nearest-neighbor pattern).
+
+/// A neighbor direction: each component in {-1, 0, 1}, not all zero.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Dir(pub i32, pub i32, pub i32);
+
+impl Dir {
+    pub fn opposite(self) -> Dir {
+        Dir(-self.0, -self.1, -self.2)
+    }
+
+    /// 1 = face, 2 = edge, 3 = corner.
+    pub fn order(self) -> u32 {
+        (self.0.abs() + self.1.abs() + self.2.abs()) as u32
+    }
+
+    /// Dense encoding 0..26 (skipping 13 == the zero direction) used as
+    /// the MPI tag for this direction.
+    pub fn tag(self) -> i32 {
+        (self.0 + 1) * 9 + (self.1 + 1) * 3 + (self.2 + 1)
+    }
+
+    /// All 26 directions, in deterministic order.
+    pub fn all() -> Vec<Dir> {
+        let mut v = Vec::with_capacity(26);
+        for dx in -1..=1 {
+            for dy in -1..=1 {
+                for dz in -1..=1 {
+                    if dx != 0 || dy != 0 || dz != 0 {
+                        v.push(Dir(dx, dy, dz));
+                    }
+                }
+            }
+        }
+        v
+    }
+}
+
+/// Region of the packed surface buffers a direction maps to.
+///
+/// Pack layout (matches python kernels/ref.py `pack_ref` and the rust
+/// reference): faces `[6, G, G]`, edges `[12, G]`, corners `[8]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Region {
+    /// Index into the 6-face table; payload G*G.
+    Face(usize),
+    /// Index into the 12-edge table; payload G.
+    Edge(usize),
+    /// Index into the 8-corner table; payload 1.
+    Corner(usize),
+}
+
+impl Region {
+    pub fn elems(self, g: usize) -> usize {
+        match self {
+            Region::Face(_) => g * g,
+            Region::Edge(_) => g,
+            Region::Corner(_) => 1,
+        }
+    }
+
+    /// Flat offset of this region within its packed buffer.
+    pub fn offset(self, g: usize) -> usize {
+        match self {
+            Region::Face(i) => i * g * g,
+            Region::Edge(i) => i * g,
+            Region::Corner(i) => i,
+        }
+    }
+}
+
+/// Map a direction to its surface region (the block's side facing that
+/// direction).
+///
+/// Face order: -x, +x, -y, +y, -z, +z.
+/// Edge order: xy-plane (dx,dy) in (-,-),(-,+),(+,-),(+,+); then xz; then yz.
+/// Corner order: lexicographic over (dx,dy,dz) with - before +.
+pub fn region_of(d: Dir) -> Region {
+    match d.order() {
+        1 => Region::Face(match d {
+            Dir(-1, 0, 0) => 0,
+            Dir(1, 0, 0) => 1,
+            Dir(0, -1, 0) => 2,
+            Dir(0, 1, 0) => 3,
+            Dir(0, 0, -1) => 4,
+            Dir(0, 0, 1) => 5,
+            _ => unreachable!(),
+        }),
+        2 => Region::Edge(if d.2 == 0 {
+            // xy edges 0..4
+            (2 * ((d.0 + 1) / 2) + (d.1 + 1) / 2) as usize
+        } else if d.1 == 0 {
+            // xz edges 4..8
+            4 + (2 * ((d.0 + 1) / 2) + (d.2 + 1) / 2) as usize
+        } else {
+            // yz edges 8..12
+            8 + (2 * ((d.1 + 1) / 2) + (d.2 + 1) / 2) as usize
+        }),
+        3 => Region::Corner(
+            (4 * ((d.0 + 1) / 2) + 2 * ((d.1 + 1) / 2) + (d.2 + 1) / 2) as usize,
+        ),
+        _ => unreachable!("zero direction has no region"),
+    }
+}
+
+/// The 3-D process grid (px × py × pz ranks, non-periodic).
+#[derive(Debug, Clone, Copy)]
+pub struct ProcGrid {
+    pub px: usize,
+    pub py: usize,
+    pub pz: usize,
+}
+
+impl ProcGrid {
+    pub fn new(px: usize, py: usize, pz: usize) -> Self {
+        Self { px, py, pz }
+    }
+
+    pub fn size(&self) -> usize {
+        self.px * self.py * self.pz
+    }
+
+    /// Rank -> grid coordinates (x fastest, matching the paper's
+    /// `64x1x1` 1-D layouts where consecutive ranks are x-neighbors).
+    pub fn coords(&self, rank: usize) -> (usize, usize, usize) {
+        let x = rank % self.px;
+        let y = (rank / self.px) % self.py;
+        let z = rank / (self.px * self.py);
+        (x, y, z)
+    }
+
+    pub fn rank_of(&self, x: usize, y: usize, z: usize) -> usize {
+        (z * self.py + y) * self.px + x
+    }
+
+    /// The neighbor rank in direction `d`, if inside the grid.
+    pub fn neighbor(&self, rank: usize, d: Dir) -> Option<usize> {
+        let (x, y, z) = self.coords(rank);
+        let nx = x as i64 + d.0 as i64;
+        let ny = y as i64 + d.1 as i64;
+        let nz = z as i64 + d.2 as i64;
+        if nx < 0 || ny < 0 || nz < 0 {
+            return None;
+        }
+        let (nx, ny, nz) = (nx as usize, ny as usize, nz as usize);
+        if nx >= self.px || ny >= self.py || nz >= self.pz {
+            return None;
+        }
+        Some(self.rank_of(nx, ny, nz))
+    }
+
+    /// All (direction, neighbor-rank) pairs for `rank`.
+    pub fn neighbors(&self, rank: usize) -> Vec<(Dir, usize)> {
+        Dir::all()
+            .into_iter()
+            .filter_map(|d| self.neighbor(rank, d).map(|n| (d, n)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dir_tags_are_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for d in Dir::all() {
+            assert!(seen.insert(d.tag()), "duplicate tag for {d:?}");
+            assert!((0..27).contains(&d.tag()));
+            assert_ne!(d.tag(), 13, "13 is the zero direction");
+        }
+        assert_eq!(seen.len(), 26);
+    }
+
+    #[test]
+    fn regions_cover_exactly() {
+        let mut faces = std::collections::HashSet::new();
+        let mut edges = std::collections::HashSet::new();
+        let mut corners = std::collections::HashSet::new();
+        for d in Dir::all() {
+            match region_of(d) {
+                Region::Face(i) => {
+                    assert!(faces.insert(i));
+                }
+                Region::Edge(i) => {
+                    assert!(edges.insert(i));
+                }
+                Region::Corner(i) => {
+                    assert!(corners.insert(i));
+                }
+            }
+        }
+        assert_eq!(faces.len(), 6);
+        assert_eq!(edges.len(), 12);
+        assert_eq!(corners.len(), 8);
+    }
+
+    #[test]
+    fn region_matches_python_ordering() {
+        // Spot-checks against ref.py's documented layout.
+        assert_eq!(region_of(Dir(-1, 0, 0)), Region::Face(0));
+        assert_eq!(region_of(Dir(0, 0, 1)), Region::Face(5));
+        assert_eq!(region_of(Dir(-1, -1, 0)), Region::Edge(0));
+        assert_eq!(region_of(Dir(1, 1, 0)), Region::Edge(3));
+        assert_eq!(region_of(Dir(-1, 0, -1)), Region::Edge(4));
+        assert_eq!(region_of(Dir(0, 1, 1)), Region::Edge(11));
+        assert_eq!(region_of(Dir(-1, -1, -1)), Region::Corner(0));
+        assert_eq!(region_of(Dir(1, 1, 1)), Region::Corner(7));
+    }
+
+    #[test]
+    fn grid_1d_neighbors() {
+        let g = ProcGrid::new(8, 1, 1);
+        assert_eq!(g.neighbors(0).len(), 1);
+        assert_eq!(g.neighbors(3).len(), 2);
+        assert_eq!(g.neighbor(3, Dir(1, 0, 0)), Some(4));
+        assert_eq!(g.neighbor(0, Dir(-1, 0, 0)), None);
+    }
+
+    #[test]
+    fn grid_2x2x2_all_seven_neighbors() {
+        let g = ProcGrid::new(2, 2, 2);
+        for r in 0..8 {
+            assert_eq!(g.neighbors(r).len(), 7, "rank {r}");
+        }
+        // rank 0 = (0,0,0); its (+,+,+) corner neighbor is rank 7.
+        assert_eq!(g.neighbor(0, Dir(1, 1, 1)), Some(7));
+    }
+
+    #[test]
+    fn grid_interior_rank_has_26_neighbors() {
+        let g = ProcGrid::new(3, 3, 3);
+        assert_eq!(g.neighbors(13).len(), 26); // center of 3x3x3
+    }
+
+    #[test]
+    fn neighbor_relation_is_symmetric() {
+        let g = ProcGrid::new(4, 3, 2);
+        for r in 0..g.size() {
+            for (d, n) in g.neighbors(r) {
+                assert_eq!(g.neighbor(n, d.opposite()), Some(r));
+            }
+        }
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let g = ProcGrid::new(4, 3, 2);
+        for r in 0..g.size() {
+            let (x, y, z) = g.coords(r);
+            assert_eq!(g.rank_of(x, y, z), r);
+        }
+    }
+}

@@ -1,0 +1,518 @@
+//! The Faces microbenchmark (paper §V): nearest-neighbor halo exchange
+//! from CORAL-2 Nekbone, in baseline (GPU-aware MPI) and stream-triggered
+//! variants.
+//!
+//! Per inner iteration each rank (paper §V-A):
+//!  1. pre-posts non-blocking receives from up to 26 neighbors
+//!     (double-buffered, so iteration k+1's receives never race the
+//!     in-flight unpack of iteration k);
+//!  2. launches the pack kernel (surface -> contiguous MPI buffers);
+//!  3. initiates sends to all neighbors
+//!     — **baseline**: `hipStreamSynchronize` then `MPI_Isend` per
+//!       neighbor + `MPI_Waitall` on the sends (host drives the control
+//!       path; Fig 1);
+//!     — **ST**: `MPIX_Enqueue_send` per neighbor + one
+//!       `MPIX_Enqueue_start`; the GPU CP triggers the NIC after pack
+//!       completes in stream order, and `MPIX_Enqueue_wait` replaces the
+//!       host-side send waitall (Fig 2);
+//!  4. launches the interior spectral-element kernel (overlapped with
+//!     communication);
+//!  5. waits for the receives;
+//!  6. launches the unpack-add kernel.
+//!
+//! Loop nest: outer (buffer alloc) x middle (field re-init) x inner
+//! (timed communication steps). Correctness is checked against the
+//! sequential CPU reference ([`reference::exchange_reference`]), exactly
+//! as the paper's Faces does.
+
+pub mod domain;
+pub mod figures;
+pub mod reference;
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{build_world, run_cluster};
+use crate::costmodel::{CostModel, MemOpFlavor};
+use crate::gpu::{self, host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
+use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
+use crate::nic::BufSlice;
+use crate::runtime::Runtime;
+use crate::sim::HostCtx;
+use crate::stx;
+use crate::world::{BufId, ComputeMode, Metrics, Topology, World};
+
+use domain::{region_of, ProcGrid, Region};
+use reference::Q;
+
+/// Which Faces implementation to run (paper §V-B, §V-F).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// GPU-aware MPI: host synchronizes at kernel boundaries.
+    Baseline,
+    /// Stream-triggered sends with HIP stream memory operations.
+    St,
+    /// ST with hand-coded shader stream memory operations (§V-F).
+    StShader,
+}
+
+impl Variant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Baseline => "baseline",
+            Variant::St => "st",
+            Variant::StShader => "st-shader",
+        }
+    }
+
+    fn flavor(self) -> MemOpFlavor {
+        match self {
+            Variant::StShader => MemOpFlavor::Shader,
+            _ => MemOpFlavor::Hip,
+        }
+    }
+}
+
+/// Full configuration of one Faces run.
+#[derive(Debug, Clone)]
+pub struct FacesConfig {
+    /// Process distribution (px, py, pz); px*py*pz == nodes*rpn.
+    pub dist: (usize, usize, usize),
+    pub nodes: usize,
+    pub ranks_per_node: usize,
+    /// Local block edge in grid points (multiple of Q=8 for Real compute).
+    pub g: usize,
+    pub outer: usize,
+    pub middle: usize,
+    pub inner: usize,
+    pub variant: Variant,
+    pub compute: ComputeMode,
+    /// Verify final fields against the CPU reference (Real compute only).
+    pub check: bool,
+    pub seed: u64,
+    pub cost: CostModel,
+}
+
+impl FacesConfig {
+    /// Small smoke configuration used by tests.
+    pub fn smoke(nodes: usize, rpn: usize, dist: (usize, usize, usize)) -> Self {
+        Self {
+            dist,
+            nodes,
+            ranks_per_node: rpn,
+            g: 16,
+            outer: 1,
+            middle: 1,
+            inner: 3,
+            variant: Variant::Baseline,
+            compute: ComputeMode::Modeled,
+            check: false,
+            seed: 1,
+            cost: crate::costmodel::presets::frontier_like(),
+        }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.nodes * self.ranks_per_node
+    }
+}
+
+/// Outcome of one Faces run.
+#[derive(Debug)]
+pub struct FacesResult {
+    /// Accumulated inner-loop wall time per rank (virtual ns).
+    pub rank_time: Vec<u64>,
+    /// The reported figure-of-merit: max over ranks (the paper's overall
+    /// execution time of the timed region).
+    pub time_ns: u64,
+    pub metrics: Metrics,
+    /// Max relative error vs the CPU reference when checking was enabled
+    /// (max |field - reference| / max |reference| over ranks).
+    pub max_err: Option<f32>,
+}
+
+impl FacesResult {
+    pub fn time_s(&self) -> f64 {
+        self.time_ns as f64 / 1e9
+    }
+}
+
+/// One neighbor's message schedule for a rank.
+#[derive(Debug, Clone)]
+struct MsgPlan {
+    nbr: usize,
+    tag_send: i32,
+    tag_recv: i32,
+    /// Where the outgoing payload lives in the packed buffers.
+    send: BufSlice,
+    /// Where the incoming payload lands, per receive-buffer parity.
+    recv: [BufSlice; 2],
+}
+
+/// Per-rank execution plan: buffers + message schedule.
+#[derive(Debug, Clone)]
+struct RankPlan {
+    /// The shared QxQ derivative matrix (runtime argument to faces_ax —
+    /// xla_extension 0.5.1 miscompiles it if baked as a constant).
+    d: BufId,
+    u: BufId,
+    w: BufId,
+    pf: BufId,
+    pe: BufId,
+    pc: BufId,
+    rf: [BufId; 2],
+    re: [BufId; 2],
+    rc: [BufId; 2],
+    msgs: Vec<MsgPlan>,
+}
+
+fn build_plans(w: &mut World, grid: &ProcGrid, g: usize) -> Vec<RankPlan> {
+    let g3 = g * g * g;
+    let d = w.bufs.alloc_init(reference::deriv_matrix(Q));
+    (0..grid.size())
+        .map(|rank| {
+            let u = w.alloc_device(g3);
+            let ww = w.alloc_device(g3);
+            let pf = w.alloc_device(6 * g * g);
+            let pe = w.alloc_device(12 * g);
+            let pc = w.alloc_device(8);
+            let rf = [w.alloc_device(6 * g * g), w.alloc_device(6 * g * g)];
+            let re = [w.alloc_device(12 * g), w.alloc_device(12 * g)];
+            let rc = [w.alloc_device(8), w.alloc_device(8)];
+            let msgs = grid
+                .neighbors(rank)
+                .into_iter()
+                .map(|(d, nbr)| {
+                    let mine = region_of(d);
+                    let send_buf = match mine {
+                        Region::Face(_) => pf,
+                        Region::Edge(_) => pe,
+                        Region::Corner(_) => pc,
+                    };
+                    let recv_bufs = match mine {
+                        Region::Face(_) => rf,
+                        Region::Edge(_) => re,
+                        Region::Corner(_) => rc,
+                    };
+                    MsgPlan {
+                        nbr,
+                        // We send toward d; the receiver matches on the
+                        // direction as computed from *its* side (-d).
+                        tag_send: d.tag(),
+                        tag_recv: d.opposite().tag(),
+                        send: BufSlice::new(send_buf, mine.offset(g), mine.elems(g)),
+                        recv: [
+                            BufSlice::new(recv_bufs[0], mine.offset(g), mine.elems(g)),
+                            BufSlice::new(recv_bufs[1], mine.offset(g), mine.elems(g)),
+                        ],
+                    }
+                })
+                .collect();
+            RankPlan { d, u, w: ww, pf, pe, pc, rf, re, rc, msgs }
+        })
+        .collect()
+}
+
+// --------------------------------------------------------------------
+// Kernel construction
+// --------------------------------------------------------------------
+
+fn ax_flops(g: usize) -> u64 {
+    let e = (g / Q).pow(3) as u64;
+    e * 12 * (Q as u64).pow(4)
+}
+
+/// The pack phase launches ONE KERNEL PER NEIGHBOR REGION, like the real
+/// Faces ("launch kernels to copy into contiguous MPI buffers from faces,
+/// edges, and corners", §V-A — plural). For Real compute the first kernel
+/// carries the fused HLO payload (numerics of all regions at once); the
+/// rest model the per-region launch + copy cost.
+fn pack_kernels(plan: &RankPlan, g: usize, real: bool) -> Vec<StreamOp> {
+    plan.msgs
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            StreamOp::Kernel(KernelSpec {
+                name: format!("faces_pack[{i}]"),
+                flops: 0,
+                bytes: 2 * 4 * m.send.elems as u64,
+                payload: if real && i == 0 {
+                    KernelPayload::Hlo {
+                        entry: format!("faces_pack_g{g}"),
+                        inputs: vec![plan.u],
+                        outputs: vec![plan.pf, plan.pe, plan.pc],
+                    }
+                } else {
+                    KernelPayload::None
+                },
+            })
+        })
+        .collect()
+}
+
+fn ax_kernel(plan: &RankPlan, g: usize, real: bool) -> StreamOp {
+    StreamOp::Kernel(KernelSpec {
+        name: "faces_ax".into(),
+        flops: ax_flops(g),
+        bytes: 2 * 4 * (g * g * g) as u64,
+        payload: if real {
+            KernelPayload::Hlo {
+                entry: format!("faces_ax_g{g}"),
+                inputs: vec![plan.u, plan.d],
+                outputs: vec![plan.w],
+            }
+        } else {
+            KernelPayload::None
+        },
+    })
+}
+
+/// Unpack likewise launches one add-kernel per received region ("launch
+/// kernels to add the received messages", §V-A); the first carries the
+/// fused HLO payload.
+fn unpack_kernels(plan: &RankPlan, g: usize, parity: usize, real: bool) -> Vec<StreamOp> {
+    plan.msgs
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            StreamOp::Kernel(KernelSpec {
+                name: format!("faces_unpack[{i}]"),
+                flops: m.recv[parity].elems as u64,
+                bytes: 3 * 4 * m.recv[parity].elems as u64,
+                payload: if real && i == 0 {
+                    KernelPayload::Hlo {
+                        entry: format!("faces_unpack_g{g}"),
+                        inputs: vec![plan.w, plan.rf[parity], plan.re[parity], plan.rc[parity]],
+                        outputs: vec![plan.u],
+                    }
+                } else {
+                    KernelPayload::None
+                },
+            })
+        })
+        .collect()
+}
+
+// --------------------------------------------------------------------
+// The benchmark driver
+// --------------------------------------------------------------------
+
+/// Run one Faces configuration to completion.
+pub fn run_faces(cfg: &FacesConfig) -> Result<FacesResult> {
+    let (px, py, pz) = cfg.dist;
+    let grid = ProcGrid::new(px, py, pz);
+    if grid.size() != cfg.world_size() {
+        bail!(
+            "distribution {px}x{py}x{pz} ({} ranks) != nodes*rpn ({})",
+            grid.size(),
+            cfg.world_size()
+        );
+    }
+    let real = cfg.compute == ComputeMode::Real;
+    if real && cfg.g % Q != 0 {
+        bail!("grid edge {} must be a multiple of Q={Q} for Real compute", cfg.g);
+    }
+
+    let topo = Topology::new(cfg.nodes, cfg.ranks_per_node);
+    let mut world = build_world(cfg.cost.clone(), topo);
+    world.compute = cfg.compute;
+    if real {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let rt = Runtime::load(&dir).context("loading AOT artifacts for Real compute")?;
+        for entry in ["faces_pack", "faces_ax", "faces_unpack"] {
+            let name = format!("{entry}_g{}", cfg.g);
+            if !rt.has_entry(&name) {
+                bail!("artifact '{name}' not found; add G={} to aot.py FACES_GRIDS", cfg.g);
+            }
+        }
+        world.runtime = Some(Arc::new(rt));
+    }
+
+    let plans = Arc::new(build_plans(&mut world, &grid, cfg.g));
+    let times: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(vec![0; grid.size()]));
+
+    let cfg2 = cfg.clone();
+    let plans2 = plans.clone();
+    let times2 = times.clone();
+    let out = run_cluster(world, cfg.seed, move |rank, ctx| {
+        rank_program(&cfg2, &plans2[rank], rank, ctx, &times2);
+    })
+    .map_err(|e| anyhow::anyhow!("faces run failed: {e}"))?;
+
+    let rank_time = times.lock().unwrap().clone();
+    let time_ns = rank_time.iter().copied().max().unwrap_or(0);
+
+    let max_err = if cfg.check && real {
+        // Relative error: the ax+add iteration grows field magnitudes
+        // geometrically, so absolute tolerances are meaningless after a
+        // few steps.
+        let reference = reference::exchange_reference(&grid, cfg.g, cfg.inner);
+        let mut err = 0.0f32;
+        for r in 0..grid.size() {
+            let got = out.world.bufs.get(plans[r].u);
+            let scale = reference[r]
+                .iter()
+                .fold(0.0f32, |m, x| m.max(x.abs()))
+                .max(1e-12);
+            err = err.max(reference::max_abs_diff(got, &reference[r]) / scale);
+        }
+        Some(err)
+    } else {
+        None
+    };
+
+    Ok(FacesResult { rank_time, time_ns, metrics: out.world.metrics.clone(), max_err })
+}
+
+/// The per-rank host program (what the application process runs).
+fn rank_program(
+    cfg: &FacesConfig,
+    plan: &RankPlan,
+    rank: usize,
+    ctx: &mut HostCtx<World>,
+    times: &Arc<Mutex<Vec<u64>>>,
+) {
+    let real = cfg.compute == ComputeMode::Real;
+    let g = cfg.g;
+    // Stream + (for ST) queue setup — outside the timed region.
+    let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+    let queue = match cfg.variant {
+        Variant::Baseline => None,
+        v => Some(stx::create_queue(ctx, rank, sid, v.flavor())),
+    };
+
+    let mut acc: u64 = 0;
+    for _outer in 0..cfg.outer {
+        // Outer loop: "allocate MPI buffers" — modeled as a fixed host
+        // cost (allocation is not on the timed path).
+        ctx.advance(20_000);
+        for _middle in 0..cfg.middle {
+            // Field (re-)initialization.
+            let (u, w_, rf, re, rc) = (plan.u, plan.w, plan.rf, plan.re, plan.rc);
+            ctx.with(move |w, _| {
+                if w.is_real() {
+                    *w.bufs.get_mut(u) = reference::init_field(rank, g);
+                    w.bufs.get_mut(w_).fill(0.0);
+                    for p in 0..2 {
+                        w.bufs.get_mut(rf[p]).fill(0.0);
+                        w.bufs.get_mut(re[p]).fill(0.0);
+                        w.bufs.get_mut(rc[p]).fill(0.0);
+                    }
+                }
+            });
+            ctx.advance(30_000); // init kernel cost (untimed region)
+
+            let t0 = ctx.now();
+            for inner in 0..cfg.inner {
+                let parity = inner % 2;
+                match cfg.variant {
+                    Variant::Baseline => baseline_iteration(cfg, plan, rank, ctx, sid, parity, real),
+                    _ => st_iteration(cfg, plan, rank, ctx, sid, queue.unwrap(), parity, real),
+                }
+            }
+            // Drain the device before stopping the clock (both variants
+            // end the timed region fully synchronized).
+            stream_synchronize(ctx, sid);
+            acc += ctx.now() - t0;
+        }
+    }
+    if let Some(q) = queue {
+        stx::free_queue(ctx, q).expect("ST queue must be idle at teardown");
+    }
+    times.lock().unwrap()[rank] = acc;
+}
+
+fn baseline_iteration(
+    cfg: &FacesConfig,
+    plan: &RankPlan,
+    rank: usize,
+    ctx: &mut HostCtx<World>,
+    sid: gpu::StreamId,
+    parity: usize,
+    real: bool,
+) {
+    // 1. Pre-post receives.
+    let mut rreqs = Vec::with_capacity(plan.msgs.len());
+    for m in &plan.msgs {
+        rreqs.push(mpi::irecv(
+            ctx,
+            rank,
+            SrcSel::Rank(m.nbr),
+            TagSel::Tag(m.tag_recv),
+            COMM_WORLD,
+            m.recv[parity],
+        ));
+    }
+    // 2. Pack kernels (one per region), then the host must wait for them
+    //    before sending (the expensive kernel-boundary sync of Fig 1).
+    for k in pack_kernels(plan, cfg.g, real) {
+        host_enqueue(ctx, sid, k);
+    }
+    stream_synchronize(ctx, sid);
+    // 3. Sends.
+    let mut sreqs = Vec::with_capacity(plan.msgs.len());
+    for m in &plan.msgs {
+        sreqs.push(mpi::isend(ctx, rank, m.nbr, m.send, m.tag_send, COMM_WORLD));
+    }
+    // 4. Interior compute (overlaps communication).
+    host_enqueue(ctx, sid, ax_kernel(plan, cfg.g, real));
+    // 5. Wait for communication.
+    mpi::waitall(ctx, &rreqs);
+    mpi::waitall(ctx, &sreqs);
+    // 6. Unpack-add of received contributions (one kernel per region).
+    for k in unpack_kernels(plan, cfg.g, parity, real) {
+        host_enqueue(ctx, sid, k);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn st_iteration(
+    cfg: &FacesConfig,
+    plan: &RankPlan,
+    rank: usize,
+    ctx: &mut HostCtx<World>,
+    sid: gpu::StreamId,
+    queue: usize,
+    parity: usize,
+    real: bool,
+) {
+    // 1. Pre-post receives (standard MPI_Irecv + double buffering — the
+    //    paper's deliberate choice while the NIC lacks triggered
+    //    receives, §V-B).
+    let mut rreqs = Vec::with_capacity(plan.msgs.len());
+    for m in &plan.msgs {
+        rreqs.push(mpi::irecv(
+            ctx,
+            rank,
+            SrcSel::Rank(m.nbr),
+            TagSel::Tag(m.tag_recv),
+            COMM_WORLD,
+            m.recv[parity],
+        ));
+    }
+    // 2. Pack kernels — no host-device synchronization afterwards.
+    for k in pack_kernels(plan, cfg.g, real) {
+        host_enqueue(ctx, sid, k);
+    }
+    // 3. Deferred sends, triggered in stream order after pack.
+    for m in &plan.msgs {
+        stx::enqueue_send(ctx, queue, m.nbr, m.send, m.tag_send, COMM_WORLD)
+            .expect("ST enqueue_send");
+    }
+    stx::enqueue_start(ctx, queue).expect("ST enqueue_start");
+    // 4. Interior compute overlaps the triggered sends.
+    host_enqueue(ctx, sid, ax_kernel(plan, cfg.g, real));
+    // The stream (not the host!) waits for send completion; this also
+    // protects the packed buffers from next iteration's pack.
+    stx::enqueue_wait(ctx, queue).expect("ST enqueue_wait");
+    // 5. Wait for receives on the host, then
+    mpi::waitall(ctx, &rreqs);
+    // 6. unpack.
+    for k in unpack_kernels(plan, cfg.g, parity, real) {
+        host_enqueue(ctx, sid, k);
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,335 @@
+//! CPU reference for Faces — the same math as python's `ref.py`, in rust.
+//!
+//! The Faces benchmark "confirms correct results by comparing against a
+//! reference CPU-only implementation" (paper §V-A); this module is that
+//! reference. It is also used by the runtime integration tests to check
+//! the AOT artifacts' numerics end-to-end.
+
+use super::domain::{region_of, ProcGrid, Region};
+
+pub const Q: usize = 8;
+
+/// The fixed QxQ 'derivative' matrix; must match ref.py::deriv_matrix.
+pub fn deriv_matrix(q: usize) -> Vec<f32> {
+    let mut d = vec![0.0f32; q * q];
+    for a in 0..q {
+        for m in 0..q {
+            let modv = ((a as i64 - m as i64).rem_euclid(q as i64)) as f32;
+            d[a * q + m] = (modv - (q as f32 - 1.0) / 2.0) / q as f32;
+        }
+    }
+    d
+}
+
+#[inline]
+fn idx(g: usize, x: usize, y: usize, z: usize) -> usize {
+    (x * g + y) * g + z
+}
+
+/// Extract faces/edges/corners of a [G,G,G] block (layout as in ref.py).
+pub fn pack_ref(u: &[f32], g: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(u.len(), g * g * g);
+    let m = g - 1;
+    let mut faces = vec![0.0f32; 6 * g * g];
+    let mut edges = vec![0.0f32; 12 * g];
+    let mut corners = vec![0.0f32; 8];
+    for a in 0..g {
+        for b in 0..g {
+            faces[0 * g * g + a * g + b] = u[idx(g, 0, a, b)];
+            faces[1 * g * g + a * g + b] = u[idx(g, m, a, b)];
+            faces[2 * g * g + a * g + b] = u[idx(g, a, 0, b)];
+            faces[3 * g * g + a * g + b] = u[idx(g, a, m, b)];
+            faces[4 * g * g + a * g + b] = u[idx(g, a, b, 0)];
+            faces[5 * g * g + a * g + b] = u[idx(g, a, b, m)];
+        }
+    }
+    for a in 0..g {
+        edges[0 * g + a] = u[idx(g, 0, 0, a)];
+        edges[1 * g + a] = u[idx(g, 0, m, a)];
+        edges[2 * g + a] = u[idx(g, m, 0, a)];
+        edges[3 * g + a] = u[idx(g, m, m, a)];
+        edges[4 * g + a] = u[idx(g, 0, a, 0)];
+        edges[5 * g + a] = u[idx(g, 0, a, m)];
+        edges[6 * g + a] = u[idx(g, m, a, 0)];
+        edges[7 * g + a] = u[idx(g, m, a, m)];
+        edges[8 * g + a] = u[idx(g, a, 0, 0)];
+        edges[9 * g + a] = u[idx(g, a, 0, m)];
+        edges[10 * g + a] = u[idx(g, a, m, 0)];
+        edges[11 * g + a] = u[idx(g, a, m, m)];
+    }
+    corners[0] = u[idx(g, 0, 0, 0)];
+    corners[1] = u[idx(g, 0, 0, m)];
+    corners[2] = u[idx(g, 0, m, 0)];
+    corners[3] = u[idx(g, 0, m, m)];
+    corners[4] = u[idx(g, m, 0, 0)];
+    corners[5] = u[idx(g, m, 0, m)];
+    corners[6] = u[idx(g, m, m, 0)];
+    corners[7] = u[idx(g, m, m, m)];
+    (faces, edges, corners)
+}
+
+/// Add boundary contributions into the block surface (mirror of pack).
+pub fn unpack_add_ref(u: &[f32], g: usize, faces: &[f32], edges: &[f32], corners: &[f32]) -> Vec<f32> {
+    let mut out = u.to_vec();
+    let m = g - 1;
+    for a in 0..g {
+        for b in 0..g {
+            out[idx(g, 0, a, b)] += faces[0 * g * g + a * g + b];
+            out[idx(g, m, a, b)] += faces[1 * g * g + a * g + b];
+            out[idx(g, a, 0, b)] += faces[2 * g * g + a * g + b];
+            out[idx(g, a, m, b)] += faces[3 * g * g + a * g + b];
+            out[idx(g, a, b, 0)] += faces[4 * g * g + a * g + b];
+            out[idx(g, a, b, m)] += faces[5 * g * g + a * g + b];
+        }
+    }
+    for a in 0..g {
+        out[idx(g, 0, 0, a)] += edges[0 * g + a];
+        out[idx(g, 0, m, a)] += edges[1 * g + a];
+        out[idx(g, m, 0, a)] += edges[2 * g + a];
+        out[idx(g, m, m, a)] += edges[3 * g + a];
+        out[idx(g, 0, a, 0)] += edges[4 * g + a];
+        out[idx(g, 0, a, m)] += edges[5 * g + a];
+        out[idx(g, m, a, 0)] += edges[6 * g + a];
+        out[idx(g, m, a, m)] += edges[7 * g + a];
+        out[idx(g, a, 0, 0)] += edges[8 * g + a];
+        out[idx(g, a, 0, m)] += edges[9 * g + a];
+        out[idx(g, a, m, 0)] += edges[10 * g + a];
+        out[idx(g, a, m, m)] += edges[11 * g + a];
+    }
+    out[idx(g, 0, 0, 0)] += corners[0];
+    out[idx(g, 0, 0, m)] += corners[1];
+    out[idx(g, 0, m, 0)] += corners[2];
+    out[idx(g, 0, m, m)] += corners[3];
+    out[idx(g, m, 0, 0)] += corners[4];
+    out[idx(g, m, 0, m)] += corners[5];
+    out[idx(g, m, m, 0)] += corners[6];
+    out[idx(g, m, m, m)] += corners[7];
+    out
+}
+
+/// Spectral operator on the element view [E,Q,Q,Q].
+pub fn ax_elements_ref(u: &[f32], e: usize, q: usize) -> Vec<f32> {
+    let d = deriv_matrix(q);
+    let q3 = q * q * q;
+    let at = |el: usize, a: usize, b: usize, c: usize| el * q3 + (a * q + b) * q + c;
+    let mut ur = vec![0.0f32; u.len()];
+    let mut us = vec![0.0f32; u.len()];
+    let mut ut = vec![0.0f32; u.len()];
+    for el in 0..e {
+        for a in 0..q {
+            for b in 0..q {
+                for c in 0..q {
+                    let (mut sr, mut ss, mut st) = (0.0f32, 0.0, 0.0);
+                    for m in 0..q {
+                        sr += d[a * q + m] * u[at(el, m, b, c)];
+                        ss += d[b * q + m] * u[at(el, a, m, c)];
+                        st += d[c * q + m] * u[at(el, a, b, m)];
+                    }
+                    ur[at(el, a, b, c)] = sr;
+                    us[at(el, a, b, c)] = ss;
+                    ut[at(el, a, b, c)] = st;
+                }
+            }
+        }
+    }
+    let mut w = vec![0.0f32; u.len()];
+    for el in 0..e {
+        for a in 0..q {
+            for b in 0..q {
+                for c in 0..q {
+                    let mut s = 0.0f32;
+                    for m in 0..q {
+                        s += d[m * q + a] * ur[at(el, m, b, c)];
+                        s += d[m * q + b] * us[at(el, a, m, c)];
+                        s += d[m * q + c] * ut[at(el, a, b, m)];
+                    }
+                    w[at(el, a, b, c)] = s;
+                }
+            }
+        }
+    }
+    w
+}
+
+/// Spectral operator on the grid view [G,G,G] (reshape to elements and
+/// back exactly as model.py::faces_ax does).
+pub fn ax_grid_ref(u: &[f32], g: usize) -> Vec<f32> {
+    assert_eq!(u.len(), g * g * g);
+    assert_eq!(g % Q, 0, "grid must be a multiple of Q={Q}");
+    let n = g / Q;
+    let e = n * n * n;
+    // grid -> elements
+    let mut ue = vec![0.0f32; u.len()];
+    for ex in 0..n {
+        for ey in 0..n {
+            for ez in 0..n {
+                let el = (ex * n + ey) * n + ez;
+                for a in 0..Q {
+                    for b in 0..Q {
+                        for c in 0..Q {
+                            ue[el * Q * Q * Q + (a * Q + b) * Q + c] =
+                                u[idx(g, ex * Q + a, ey * Q + b, ez * Q + c)];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let we = ax_elements_ref(&ue, e, Q);
+    // elements -> grid
+    let mut w = vec![0.0f32; u.len()];
+    for ex in 0..n {
+        for ey in 0..n {
+            for ez in 0..n {
+                let el = (ex * n + ey) * n + ez;
+                for a in 0..Q {
+                    for b in 0..Q {
+                        for c in 0..Q {
+                            w[idx(g, ex * Q + a, ey * Q + b, ez * Q + c)] =
+                                we[el * Q * Q * Q + (a * Q + b) * Q + c];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    w
+}
+
+/// Deterministic per-rank initial field, shared with the benchmark.
+pub fn init_field(rank: usize, g: usize) -> Vec<f32> {
+    let n = g * g * g;
+    (0..n)
+        .map(|i| {
+            let v = ((i as u64).wrapping_mul(2654435761).wrapping_add(rank as u64 * 97)) % 1024;
+            (v as f32) / 1024.0 - 0.5
+        })
+        .collect()
+}
+
+/// Sequential whole-cluster reference: run `iters` Faces iterations over
+/// every rank's block and return the final fields.
+///
+/// One iteration (identical to the distributed benchmark):
+///   p_r = pack(u_r); w_r = ax(u_r);
+///   u'_r = unpack_add(w_r, sum of neighbor contributions into the
+///          facing regions; absent neighbors contribute zero).
+pub fn exchange_reference(grid: &ProcGrid, g: usize, iters: usize) -> Vec<Vec<f32>> {
+    let nranks = grid.size();
+    let mut u: Vec<Vec<f32>> = (0..nranks).map(|r| init_field(r, g)).collect();
+    for _ in 0..iters {
+        let packs: Vec<_> = u.iter().map(|f| pack_ref(f, g)).collect();
+        let axs: Vec<_> = u.iter().map(|f| ax_grid_ref(f, g)).collect();
+        let mut next = Vec::with_capacity(nranks);
+        for r in 0..nranks {
+            // Assemble this rank's incoming boundary buffers.
+            let mut rf = vec![0.0f32; 6 * g * g];
+            let mut re = vec![0.0f32; 12 * g];
+            let mut rc = vec![0.0f32; 8];
+            for (d, nb) in grid.neighbors(r) {
+                // Neighbor nb sends its region facing us: region_of(-d).
+                let their = region_of(d.opposite());
+                let mine = region_of(d);
+                let elems = mine.elems(g);
+                let (pf, pe, pc) = &packs[nb];
+                let src: &[f32] = match their {
+                    Region::Face(_) => pf,
+                    Region::Edge(_) => pe,
+                    Region::Corner(_) => pc,
+                };
+                let dst: &mut [f32] = match mine {
+                    Region::Face(_) => &mut rf,
+                    Region::Edge(_) => &mut re,
+                    Region::Corner(_) => &mut rc,
+                };
+                let so = their.offset(g);
+                let do_ = mine.offset(g);
+                dst[do_..do_ + elems].copy_from_slice(&src[so..so + elems]);
+            }
+            next.push(unpack_add_ref(&axs[r], g, &rf, &re, &rc));
+        }
+        u = next;
+    }
+    u
+}
+
+/// Max |a-b| over two fields.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deriv_matrix_matches_python_formula() {
+        let d = deriv_matrix(8);
+        // d[a,m] = ((a - m) mod q - (q-1)/2) / q
+        assert_eq!(d[0], (0.0 - 3.5) / 8.0);
+        assert_eq!(d[1], (7.0 - 3.5) / 8.0); // a=0, m=1 -> (-1) mod 8 = 7
+        assert_eq!(d[8], (1.0 - 3.5) / 8.0); // a=1, m=0
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_multiplicities() {
+        let g = 16;
+        let u = vec![1.0f32; g * g * g];
+        let (f, e, c) = pack_ref(&u, g);
+        let out = unpack_add_ref(&u, g, &f, &e, &c);
+        let mid = g / 2;
+        assert_eq!(out[idx(g, mid, mid, mid)], 1.0); // interior untouched
+        assert_eq!(out[idx(g, 0, mid, mid)], 2.0); // face
+        assert_eq!(out[idx(g, 0, 0, mid)], 4.0); // edge: 2 faces + edge
+        assert_eq!(out[idx(g, 0, 0, 0)], 8.0); // corner: 3f + 3e + c
+    }
+
+    #[test]
+    fn ax_zero_is_zero() {
+        let w = ax_elements_ref(&vec![0.0; 512], 1, 8);
+        assert!(w.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn ax_linearity() {
+        let g = 8; // one element
+        let u: Vec<f32> = (0..512).map(|i| (i % 13) as f32 / 13.0).collect();
+        let two_u: Vec<f32> = u.iter().map(|x| 2.0 * x).collect();
+        let w1 = ax_grid_ref(&u, g);
+        let w2 = ax_grid_ref(&two_u, g);
+        for (a, b) in w1.iter().zip(&w2) {
+            assert!((2.0 * a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn exchange_reference_isolated_rank_is_pure_ax() {
+        let grid = ProcGrid::new(1, 1, 1);
+        let g = 8;
+        let u0 = init_field(0, g);
+        let want = ax_grid_ref(&u0, g);
+        let got = exchange_reference(&grid, g, 1);
+        assert_eq!(got[0], want, "no neighbors => unpack adds zeros");
+    }
+
+    #[test]
+    fn exchange_reference_two_ranks_share_faces() {
+        let grid = ProcGrid::new(2, 1, 1);
+        let g = 8;
+        let got = exchange_reference(&grid, g, 1);
+        // Rank 0's +x face must include rank 1's -x pack contribution.
+        let u1 = init_field(1, g);
+        let w0 = ax_grid_ref(&init_field(0, g), g);
+        let m = g - 1;
+        let expect = w0[idx(g, m, 3, 4)] + u1[idx(g, 0, 3, 4)];
+        assert!((got[0][idx(g, m, 3, 4)] - expect).abs() < 1e-5);
+        // And its -x face has no neighbor: pure ax result.
+        assert_eq!(got[0][idx(g, 0, 3, 4)], w0[idx(g, 0, 3, 4)]);
+    }
+
+    #[test]
+    fn init_field_is_deterministic_and_rank_dependent() {
+        assert_eq!(init_field(3, 8), init_field(3, 8));
+        assert_ne!(init_field(3, 8), init_field(4, 8));
+    }
+}

@@ -1,0 +1,315 @@
+//! Simulated GPU: streams, control processor, stream memory operations.
+//!
+//! Models the GPU contract the paper builds on (§II-B, §II-D):
+//!
+//! * a **stream** is a FIFO queue of device operations; operations on one
+//!   stream execute in order, streams are asynchronous w.r.t. each other;
+//! * the **GPU control processor (CP)** pops stream operations and
+//!   executes them: compute kernels, `writeValue64` (write a 64-bit word
+//!   visible to the NIC — the ST *trigger*), `waitValue64` (stall the
+//!   stream until a 64-bit word reaches a value — the ST *completion
+//!   wait*);
+//! * stream memory ops come in two flavors ([`MemOpFlavor`]): the stock
+//!   HIP implementation and the hand-coded shader variant of §V-F.
+//!
+//! Kernel *numerics* are real: a kernel's payload either runs an
+//! AOT-compiled XLA executable (via [`crate::runtime`]) or a built-in
+//! closure over simulated device buffers. Kernel *timing* always comes
+//! from the cost model's roofline (`flops`, `bytes`).
+
+use std::collections::VecDeque;
+
+use crate::costmodel::MemOpFlavor;
+use crate::sim::{CellId, Time};
+use crate::world::{BufId, Callback, ComputeMode, Ctx, World};
+
+/// Identifies one stream on one GPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StreamId {
+    pub gpu: usize,
+    pub stream: usize,
+}
+
+/// How a `writeValue64` mutates the target word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WriteMode {
+    Set,
+    Add,
+}
+
+/// A kernel's executable payload.
+pub enum KernelPayload {
+    /// Timing-only kernel (used in sweeps after numerics are validated).
+    None,
+    /// Built-in device function over simulated buffers.
+    Fn(Box<dyn FnOnce(&mut World, &mut Ctx) + Send>),
+    /// AOT-compiled XLA executable from `artifacts/`, by manifest name.
+    Hlo { entry: String, inputs: Vec<BufId>, outputs: Vec<BufId> },
+}
+
+impl std::fmt::Debug for KernelPayload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KernelPayload::None => write!(f, "None"),
+            KernelPayload::Fn(_) => write!(f, "Fn(..)"),
+            KernelPayload::Hlo { entry, .. } => write!(f, "Hlo({entry})"),
+        }
+    }
+}
+
+/// A compute kernel enqueued on a stream.
+#[derive(Debug)]
+pub struct KernelSpec {
+    pub name: String,
+    /// Roofline characteristics used for the modeled execution time.
+    pub flops: u64,
+    pub bytes: u64,
+    pub payload: KernelPayload,
+}
+
+/// One device operation in a stream.
+pub enum StreamOp {
+    Kernel(KernelSpec),
+    /// `hipStreamWriteValue64`-style: write `value` to a GPU-visible word
+    /// (here: an engine cell — NIC counters are mapped to these).
+    WriteValue64 { cell: CellId, value: u64, mode: WriteMode, flavor: MemOpFlavor },
+    /// `hipStreamWaitValue64`-style: stall the stream until `cell >=
+    /// threshold`.
+    WaitValue64 { cell: CellId, threshold: u64, flavor: MemOpFlavor },
+    /// Internal device-side action with an explicit cost (used by the
+    /// intra-node data path to model DMA engine work bound to a stream).
+    Run { cost: Time, f: Callback },
+}
+
+impl std::fmt::Debug for StreamOp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StreamOp::Kernel(k) => write!(f, "Kernel({})", k.name),
+            StreamOp::WriteValue64 { value, .. } => write!(f, "WriteValue64({value})"),
+            StreamOp::WaitValue64 { threshold, .. } => write!(f, "WaitValue64(>={threshold})"),
+            StreamOp::Run { .. } => write!(f, "Run(..)"),
+        }
+    }
+}
+
+/// A GPU stream: FIFO of pending ops + CP execution state.
+pub struct Stream {
+    pub ops: VecDeque<StreamOp>,
+    /// True while the CP is executing (or blocked on) the current op.
+    pub busy: bool,
+    /// Total operations ever enqueued.
+    pub enqueued: u64,
+    /// Cell counting completed operations (target of stream synchronize).
+    pub completed_cell: CellId,
+}
+
+/// A simulated GPU device.
+pub struct Gpu {
+    pub node: usize,
+    pub streams: Vec<Stream>,
+}
+
+impl Gpu {
+    pub fn new(node: usize) -> Self {
+        Self { node, streams: Vec::new() }
+    }
+}
+
+/// Create a stream on `gpu`; returns its id.
+pub fn create_stream(w: &mut World, core: &mut Ctx, gpu: usize) -> StreamId {
+    let idx = w.gpus[gpu].streams.len();
+    let completed_cell = core.new_cell(format!("gpu{gpu}.s{idx}.completed"), 0);
+    w.gpus[gpu].streams.push(Stream {
+        ops: VecDeque::new(),
+        busy: false,
+        enqueued: 0,
+        completed_cell,
+    });
+    StreamId { gpu, stream: idx }
+}
+
+/// Enqueue a device op. The *host-side* cost of enqueueing is charged by
+/// the caller (host actors use `ctx.advance(cost.kernel_enqueue)`); this
+/// function only mutates device state and kicks the CP if idle.
+pub fn enqueue(w: &mut World, core: &mut Ctx, sid: StreamId, op: StreamOp) {
+    let s = &mut w.gpus[sid.gpu].streams[sid.stream];
+    s.ops.push_back(op);
+    s.enqueued += 1;
+    if !s.busy {
+        core.schedule(0, Box::new(move |w, c| cp_step(w, c, sid)));
+    }
+}
+
+/// Total ops enqueued so far (snapshot for a later synchronize).
+pub fn enqueued_count(w: &World, sid: StreamId) -> u64 {
+    w.gpus[sid.gpu].streams[sid.stream].enqueued
+}
+
+/// The completion-counter cell of a stream.
+pub fn completed_cell(w: &World, sid: StreamId) -> CellId {
+    w.gpus[sid.gpu].streams[sid.stream].completed_cell
+}
+
+/// CP state machine: start executing the head-of-queue op if idle.
+pub fn cp_step(w: &mut World, core: &mut Ctx, sid: StreamId) {
+    let s = &mut w.gpus[sid.gpu].streams[sid.stream];
+    if s.busy {
+        return;
+    }
+    let Some(op) = s.ops.pop_front() else { return };
+    s.busy = true;
+    match op {
+        StreamOp::Kernel(spec) => {
+            w.metrics.kernels_launched += 1;
+            let dur = w.cost.cp_dispatch + w.cost.kernel_time(spec.flops, spec.bytes);
+            let dur = w.cost.jittered(dur, core.rng());
+            core.schedule(
+                dur,
+                Box::new(move |w, c| {
+                    run_kernel_payload(w, c, spec.payload);
+                    complete_op(w, c, sid);
+                }),
+            );
+        }
+        StreamOp::WriteValue64 { cell, value, mode, flavor } => {
+            w.metrics.memops_executed += 1;
+            let dur = w.cost.jittered(w.cost.memop(flavor), core.rng());
+            core.schedule(
+                dur,
+                Box::new(move |w, c| {
+                    match mode {
+                        WriteMode::Set => c.write_cell(cell, value),
+                        WriteMode::Add => {
+                            c.add_cell(cell, value);
+                        }
+                    }
+                    complete_op(w, c, sid);
+                }),
+            );
+        }
+        StreamOp::WaitValue64 { cell, threshold, flavor } => {
+            w.metrics.memops_executed += 1;
+            let dur = w.cost.jittered(w.cost.memop(flavor), core.rng());
+            // Charge the memop issue cost, then wait on the cell.
+            core.schedule(
+                dur,
+                Box::new(move |_, c| {
+                    c.on_ge(
+                        cell,
+                        threshold,
+                        format!("gpu{}.s{} waitValue64", sid.gpu, sid.stream),
+                        Box::new(move |w, c| complete_op(w, c, sid)),
+                    );
+                }),
+            );
+        }
+        StreamOp::Run { cost, f } => {
+            core.schedule(
+                cost,
+                Box::new(move |w, c| {
+                    f(w, c);
+                    complete_op(w, c, sid);
+                }),
+            );
+        }
+    }
+}
+
+/// Execute a kernel's payload (numerics) according to the compute mode.
+fn run_kernel_payload(w: &mut World, core: &mut Ctx, payload: KernelPayload) {
+    match payload {
+        KernelPayload::None => {}
+        KernelPayload::Fn(f) => {
+            if w.compute == ComputeMode::Real {
+                f(w, core);
+            }
+        }
+        KernelPayload::Hlo { entry, inputs, outputs } => {
+            if w.compute == ComputeMode::Real {
+                let rt = w
+                    .runtime
+                    .clone()
+                    .expect("ComputeMode::Real with Hlo payload requires a loaded runtime");
+                let in_data: Vec<Vec<f32>> =
+                    inputs.iter().map(|b| w.bufs.get(*b).to_vec()).collect();
+                let results = rt
+                    .execute_f32(&entry, &in_data)
+                    .unwrap_or_else(|e| panic!("HLO kernel '{entry}' failed: {e}"));
+                assert_eq!(
+                    results.len(),
+                    outputs.len(),
+                    "HLO '{entry}' returned {} outputs, expected {}",
+                    results.len(),
+                    outputs.len()
+                );
+                for (out_buf, data) in outputs.iter().zip(results) {
+                    let dst = w.bufs.get_mut(*out_buf);
+                    assert_eq!(dst.len(), data.len(), "HLO '{entry}' output size mismatch");
+                    dst.copy_from_slice(&data);
+                }
+            }
+        }
+    }
+}
+
+/// Mark the in-flight op of `sid` complete and continue with the next.
+fn complete_op(w: &mut World, core: &mut Ctx, sid: StreamId) {
+    let s = &mut w.gpus[sid.gpu].streams[sid.stream];
+    debug_assert!(s.busy);
+    s.busy = false;
+    let cell = s.completed_cell;
+    core.add_cell(cell, 1);
+    cp_step(w, core, sid);
+}
+
+// ---------------------------------------------------------------------
+// Host-facing helpers (called from host actors, charging host-side costs)
+// ---------------------------------------------------------------------
+
+/// Host-side enqueue of a device op (charges the HIP enqueue cost).
+pub fn host_enqueue(hctx: &mut crate::sim::HostCtx<World>, sid: StreamId, op: StreamOp) {
+    let cost = hctx.with(|w, _| w.cost.kernel_enqueue);
+    hctx.advance(cost);
+    hctx.with(move |w, core| enqueue(w, core, sid, op));
+}
+
+/// `hipStreamSynchronize`: block the host until every op enqueued on the
+/// stream so far has completed. This is the expensive kernel-boundary
+/// synchronization point the ST design removes (paper Fig. 1 vs Fig. 2).
+pub fn stream_synchronize(hctx: &mut crate::sim::HostCtx<World>, sid: StreamId) {
+    let (cell, target, sync_cost) = hctx.with(|w, _| {
+        w.metrics.stream_syncs += 1;
+        (completed_cell(w, sid), enqueued_count(w, sid), w.cost.stream_sync)
+    });
+    hctx.advance(sync_cost);
+    hctx.wait_ge(cell, target, "hipStreamSynchronize");
+}
+
+/// Intra-node DMA copy between device buffers (ROCr-IPC/xGMI path): moves
+/// the payload after the modeled transfer time, then runs `done`.
+pub fn dma_copy(
+    w: &mut World,
+    core: &mut Ctx,
+    src: BufId,
+    src_off: usize,
+    dst: BufId,
+    dst_off: usize,
+    elems: usize,
+    done: Callback,
+) {
+    let bytes = elems * 4;
+    w.metrics.bytes_ipc += bytes as u64;
+    let dur = w.cost.jittered(w.cost.ipc_time(bytes), core.rng());
+    core.schedule(
+        dur,
+        Box::new(move |w, c| {
+            if w.is_real() {
+                w.bufs.copy(src, src_off, dst, dst_off, elems);
+            }
+            done(w, c);
+        }),
+    );
+}
+
+#[cfg(test)]
+mod tests;

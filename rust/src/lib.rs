@@ -1,0 +1,29 @@
+//! # stmpi — GPU Stream-Aware Message Passing using Triggered Operations
+//!
+//! A from-scratch reproduction of the HPE paper *"Exploring GPU
+//! Stream-Aware Message Passing using Triggered Operations"* (CS.DC 2022):
+//! the **stream-triggered (ST)** MPI communication strategy, implemented
+//! over a deterministic virtual-time simulation of a Frontier-like
+//! cluster — simulated Slingshot-11 NICs with triggered operations
+//! (deferred work queues, hardware counters), simulated GPUs with streams
+//! and a control processor, a two-sided MPI matching layer with progress
+//! threads — while the *numerics* of every GPU kernel flow through real
+//! AOT-compiled XLA programs (JAX + Pallas, lowered at build time, loaded
+//! via PJRT on the rust side).
+//!
+//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
+//! reproduced figures.
+
+pub mod collectives;
+pub mod coordinator;
+pub mod costmodel;
+pub mod faces;
+pub mod fabric;
+pub mod gpu;
+pub mod mpi;
+pub mod nic;
+pub mod runtime;
+pub mod sim;
+pub mod stx;
+pub mod train;
+pub mod world;

@@ -1,0 +1,152 @@
+//! stmpi launcher: run Faces experiments, the figure sweep, or the
+//! ST-allreduce trainer on the simulated cluster from the command line.
+//!
+//! ```text
+//! stmpi faces [--config faces.toml] [key=value ...]
+//! stmpi sweep                      # regenerate Figs 8-12
+//! stmpi train [key=value ...]
+//! stmpi figures fig9 fig11         # selected figures
+//! ```
+//!
+//! `faces` keys (TOML-subset config file and/or CLI overrides):
+//!   faces.dist=2x2x2  faces.nodes=8  faces.rpn=1  faces.g=128
+//!   faces.outer=1 faces.middle=2 faces.inner=25
+//!   faces.variant=baseline|st|st-shader  faces.real=true  faces.check=true
+//!   seed=11  jitter=0.03
+//! `train` keys: train.nodes, train.rpn, train.steps, seed.
+
+use anyhow::{bail, Result};
+
+use stmpi::coordinator::config::Config;
+use stmpi::costmodel::{presets, MemOpFlavor};
+use stmpi::faces::figures::{all_figures, run_figure, Loops, FIGURE_G, SEEDS};
+use stmpi::faces::{run_faces, FacesConfig, Variant};
+use stmpi::train::{train, TrainConfig};
+use stmpi::world::ComputeMode;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("faces") => cmd_faces(&args[1..]),
+        Some("sweep") => cmd_sweep(),
+        Some("figures") => cmd_figures(&args[1..]),
+        Some("train") => cmd_train(&args[1..]),
+        Some("--help") | Some("-h") | None => {
+            println!("usage: stmpi <faces|sweep|figures|train> [--config FILE] [key=value ...]");
+            println!("see module docs in rust/src/main.rs for the key list");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand '{other}'"),
+    }
+}
+
+fn load_config(args: &[String]) -> Result<Config> {
+    let mut cfg = Config::default();
+    let mut overrides = Vec::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--config" {
+            let path = it.next().ok_or_else(|| anyhow::anyhow!("--config needs a path"))?;
+            cfg = Config::load(path)?;
+        } else if a.contains('=') {
+            overrides.push(a.clone());
+        } else {
+            bail!("unexpected argument '{a}' (expected key=value)");
+        }
+    }
+    cfg.apply_overrides(&overrides)?;
+    Ok(cfg)
+}
+
+fn parse_variant(s: &str) -> Result<Variant> {
+    Ok(match s {
+        "baseline" => Variant::Baseline,
+        "st" => Variant::St,
+        "st-shader" | "shader" => Variant::StShader,
+        other => bail!("unknown variant '{other}'"),
+    })
+}
+
+fn cmd_faces(args: &[String]) -> Result<()> {
+    let c = load_config(args)?;
+    let mut cost = presets::frontier_like();
+    cost.jitter_sigma = c.f64_or("jitter", 0.0)?;
+    let real = c.bool_or("faces.real", false)?;
+    let cfg = FacesConfig {
+        dist: c.triple_or("faces.dist", (8, 1, 1))?,
+        nodes: c.usize_or("faces.nodes", 8)?,
+        ranks_per_node: c.usize_or("faces.rpn", 1)?,
+        g: c.usize_or("faces.g", if real { 32 } else { FIGURE_G })?,
+        outer: c.usize_or("faces.outer", 1)?,
+        middle: c.usize_or("faces.middle", 2)?,
+        inner: c.usize_or("faces.inner", 25)?,
+        variant: parse_variant(c.str_or("faces.variant", "st"))?,
+        compute: if real { ComputeMode::Real } else { ComputeMode::Modeled },
+        check: c.bool_or("faces.check", real)?,
+        seed: c.u64_or("seed", 11)?,
+        cost,
+    };
+    println!(
+        "faces: {:?} dist={:?} nodes={} rpn={} G={} loops={}x{}x{} compute={:?}",
+        cfg.variant, cfg.dist, cfg.nodes, cfg.ranks_per_node, cfg.g, cfg.outer, cfg.middle,
+        cfg.inner, cfg.compute
+    );
+    let r = run_faces(&cfg)?;
+    println!("time: {:.3} ms (virtual)", r.time_ns as f64 / 1e6);
+    if let Some(err) = r.max_err {
+        println!("max |field - reference| = {err:.3e} ({})", if err < 1e-3 { "OK" } else { "FAIL" });
+    }
+    println!("{:#?}", r.metrics);
+    Ok(())
+}
+
+fn cmd_sweep() -> Result<()> {
+    for spec in all_figures() {
+        let report = run_figure(&spec, &SEEDS, Loops::default(), FIGURE_G);
+        println!("{}", report.render());
+    }
+    Ok(())
+}
+
+fn cmd_figures(names: &[String]) -> Result<()> {
+    if names.is_empty() {
+        bail!("figures: name at least one of fig8..fig12");
+    }
+    for name in names {
+        let spec = all_figures()
+            .into_iter()
+            .find(|s| s.id == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown figure '{name}'"))?;
+        let report = run_figure(&spec, &SEEDS, Loops::default(), FIGURE_G);
+        println!("{}", report.render());
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let c = load_config(args)?;
+    let cfg = TrainConfig {
+        nodes: c.usize_or("train.nodes", 4)?,
+        ranks_per_node: c.usize_or("train.rpn", 1)?,
+        steps: c.usize_or("train.steps", 50)?,
+        seed: c.u64_or("seed", 3)?,
+        cost: presets::frontier_like(),
+        flavor: MemOpFlavor::Hip,
+    };
+    println!("train: {} ranks x {} steps", cfg.nodes * cfg.ranks_per_node, cfg.steps);
+    let r = train(&cfg)?;
+    for (i, l) in r.losses.iter().enumerate() {
+        if i % 10 == 0 || i + 1 == r.losses.len() {
+            println!("step {i:>4}  loss {l:.4}");
+        }
+    }
+    println!("virtual time: {:.3} ms", r.time_ns as f64 / 1e6);
+    Ok(())
+}

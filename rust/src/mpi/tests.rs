@@ -1,0 +1,333 @@
+//! MPI layer tests: matching semantics, intra/inter paths, host API.
+
+use super::*;
+use crate::coordinator::{build_world, run_cluster};
+use crate::costmodel::presets;
+use crate::sim::Engine;
+use crate::world::{BufId, Topology};
+
+fn cost() -> crate::costmodel::CostModel {
+    let mut c = presets::frontier_like();
+    c.jitter_sigma = 0.0;
+    c
+}
+
+/// Two ranks on different nodes exchange one message via the host API.
+#[test]
+fn host_send_recv_inter_node() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let src = w.bufs.alloc_init((0..64).map(|x| x as f32).collect());
+    let dst = w.bufs.alloc(64);
+    let out = run_cluster(w, 1, move |rank, ctx| {
+        if rank == 0 {
+            let req = isend(ctx, 0, 1, BufSlice::whole(src, 64), 7, COMM_WORLD);
+            wait(ctx, req);
+        } else {
+            let req = irecv(ctx, 1, SrcSel::Rank(0), TagSel::Tag(7), COMM_WORLD, BufSlice::whole(dst, 64));
+            wait(ctx, req);
+            ctx.with(move |w, _| {
+                assert_eq!(w.bufs.get(dst)[10], 10.0);
+            });
+        }
+    })
+    .unwrap();
+    assert_eq!(out.world.metrics.eager_sends, 1);
+    assert!(out.makespan > 0);
+}
+
+#[test]
+fn host_send_recv_intra_node_small_uses_memcpy_path() {
+    let mut w = build_world(cost(), Topology::new(1, 2));
+    let src = w.bufs.alloc_init(vec![5.0; 16]);
+    let dst = w.bufs.alloc(16);
+    let out = run_cluster(w, 1, move |rank, ctx| {
+        if rank == 0 {
+            let req = isend(ctx, 0, 1, BufSlice::whole(src, 16), 3, COMM_WORLD);
+            wait(ctx, req);
+        } else {
+            let req = irecv(ctx, 1, SrcSel::Rank(0), TagSel::Tag(3), COMM_WORLD, BufSlice::whole(dst, 16));
+            wait(ctx, req);
+            ctx.with(move |w, _| assert_eq!(w.bufs.get(dst), &[5.0; 16]));
+        }
+    })
+    .unwrap();
+    assert_eq!(out.world.metrics.intra_sends, 1);
+    assert_eq!(out.world.metrics.eager_sends, 0, "no wire traffic intra-node");
+    assert_eq!(out.world.metrics.bytes_wire, 0);
+}
+
+#[test]
+fn host_send_recv_intra_node_large_zero_copy() {
+    let elems = 64 * 1024;
+    let mut w = build_world(cost(), Topology::new(1, 2));
+    let src = w.bufs.alloc_init(vec![2.0; elems]);
+    let dst = w.bufs.alloc(elems);
+    let out = run_cluster(w, 1, move |rank, ctx| {
+        if rank == 0 {
+            let req = isend(ctx, 0, 1, BufSlice::whole(src, elems), 3, COMM_WORLD);
+            wait(ctx, req);
+        } else {
+            let req = irecv(ctx, 1, SrcSel::Rank(0), TagSel::Tag(3), COMM_WORLD, BufSlice::whole(dst, elems));
+            wait(ctx, req);
+            ctx.with(move |w, _| assert_eq!(w.bufs.get(dst)[elems - 1], 2.0));
+        }
+    })
+    .unwrap();
+    assert!(out.world.metrics.bytes_ipc >= (elems * 4) as u64);
+}
+
+/// Tag matching: messages with different tags go to the right receives
+/// even when posted out of order.
+#[test]
+fn tag_matching_out_of_order() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let a = w.bufs.alloc_init(vec![1.0; 8]);
+    let b = w.bufs.alloc_init(vec![2.0; 8]);
+    let da = w.bufs.alloc(8);
+    let db = w.bufs.alloc(8);
+    run_cluster(w, 1, move |rank, ctx| {
+        if rank == 0 {
+            let r1 = isend(ctx, 0, 1, BufSlice::whole(a, 8), 100, COMM_WORLD);
+            let r2 = isend(ctx, 0, 1, BufSlice::whole(b, 8), 200, COMM_WORLD);
+            waitall(ctx, &[r1, r2]);
+        } else {
+            // Post tag 200 first, then tag 100 — must still match by tag.
+            let r2 = irecv(ctx, 1, SrcSel::Rank(0), TagSel::Tag(200), COMM_WORLD, BufSlice::whole(db, 8));
+            let r1 = irecv(ctx, 1, SrcSel::Rank(0), TagSel::Tag(100), COMM_WORLD, BufSlice::whole(da, 8));
+            waitall(ctx, &[r1, r2]);
+            ctx.with(move |w, _| {
+                assert_eq!(w.bufs.get(da), &[1.0; 8]);
+                assert_eq!(w.bufs.get(db), &[2.0; 8]);
+            });
+        }
+    })
+    .unwrap();
+}
+
+/// Same (src, tag): FIFO pairwise ordering must hold.
+#[test]
+fn same_tag_fifo_order() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let bufs: Vec<BufId> = (0..4).map(|i| w.bufs.alloc_init(vec![i as f32; 4])).collect();
+    let dsts: Vec<BufId> = (0..4).map(|_| w.bufs.alloc(4)).collect();
+    let bufs2 = bufs.clone();
+    let dsts2 = dsts.clone();
+    run_cluster(w, 1, move |rank, ctx| {
+        if rank == 0 {
+            let reqs: Vec<usize> = bufs2
+                .iter()
+                .map(|&b| isend(ctx, 0, 1, BufSlice::whole(b, 4), 9, COMM_WORLD))
+                .collect();
+            waitall(ctx, &reqs);
+        } else {
+            let reqs: Vec<usize> = dsts2
+                .iter()
+                .map(|&d| irecv(ctx, 1, SrcSel::Rank(0), TagSel::Tag(9), COMM_WORLD, BufSlice::whole(d, 4)))
+                .collect();
+            waitall(ctx, &reqs);
+            let d = dsts2.clone();
+            ctx.with(move |w, _| {
+                for (i, dst) in d.iter().enumerate() {
+                    assert_eq!(w.bufs.get(*dst), &[i as f32; 4], "message {i} out of order");
+                }
+            });
+        }
+    })
+    .unwrap();
+}
+
+#[test]
+fn wildcard_any_source_matches() {
+    let mut w = build_world(cost(), Topology::new(3, 1));
+    let s = w.bufs.alloc_init(vec![4.0; 8]);
+    let d = w.bufs.alloc(8);
+    run_cluster(w, 1, move |rank, ctx| match rank {
+        2 => {
+            let req = irecv(ctx, 2, SrcSel::Any, TagSel::Any, COMM_WORLD, BufSlice::whole(d, 8));
+            wait(ctx, req);
+            ctx.with(move |w, _| assert_eq!(w.bufs.get(d), &[4.0; 8]));
+        }
+        1 => {
+            ctx.advance(5_000);
+            let req = isend(ctx, 1, 2, BufSlice::whole(s, 8), 77, COMM_WORLD);
+            wait(ctx, req);
+        }
+        _ => {}
+    })
+    .unwrap();
+}
+
+#[test]
+fn unexpected_messages_buffer_until_posted() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let s = w.bufs.alloc_init(vec![8.0; 8]);
+    let d = w.bufs.alloc(8);
+    let out = run_cluster(w, 1, move |rank, ctx| {
+        if rank == 0 {
+            let req = isend(ctx, 0, 1, BufSlice::whole(s, 8), 1, COMM_WORLD);
+            wait(ctx, req);
+        } else {
+            // Deliberately late post.
+            ctx.advance(500_000);
+            let req = irecv(ctx, 1, SrcSel::Rank(0), TagSel::Tag(1), COMM_WORLD, BufSlice::whole(d, 8));
+            wait(ctx, req);
+            ctx.with(move |w, _| assert_eq!(w.bufs.get(d), &[8.0; 8]));
+        }
+    })
+    .unwrap();
+    assert_eq!(out.world.metrics.unexpected_msgs, 1);
+}
+
+#[test]
+fn comm_isolation() {
+    // A message on comm A must not match a receive on comm B.
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let s1 = w.bufs.alloc_init(vec![1.0; 4]);
+    let s2 = w.bufs.alloc_init(vec![2.0; 4]);
+    let d1 = w.bufs.alloc(4);
+    let d2 = w.bufs.alloc(4);
+    run_cluster(w, 1, move |rank, ctx| {
+        if rank == 0 {
+            let r1 = isend(ctx, 0, 1, BufSlice::whole(s1, 4), 5, COMM_WORLD);
+            let r2 = isend(ctx, 0, 1, BufSlice::whole(s2, 4), 5, COMM_WORLD_DUP);
+            waitall(ctx, &[r1, r2]);
+        } else {
+            let r2 = irecv(ctx, 1, SrcSel::Rank(0), TagSel::Tag(5), COMM_WORLD_DUP, BufSlice::whole(d2, 4));
+            let r1 = irecv(ctx, 1, SrcSel::Rank(0), TagSel::Tag(5), COMM_WORLD, BufSlice::whole(d1, 4));
+            waitall(ctx, &[r1, r2]);
+            ctx.with(move |w, _| {
+                assert_eq!(w.bufs.get(d1), &[1.0; 4]);
+                assert_eq!(w.bufs.get(d2), &[2.0; 4]);
+            });
+        }
+    })
+    .unwrap();
+}
+
+#[test]
+fn progress_thread_serializes_work() {
+    let eng = Engine::new(build_world(cost(), Topology::new(1, 1)), 1);
+    let times = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+    eng.setup(|w, core| {
+        for _ in 0..3 {
+            let t = progress_charge(w, core, 0, 1000);
+            times.lock().unwrap().push(t);
+        }
+    });
+    let (w, _) = eng.run().unwrap();
+    let t = times.lock().unwrap().clone();
+    assert_eq!(t, vec![1000, 2000, 3000], "progress ops must serialize");
+    assert_eq!(w.procs[0].progress.ops_handled, 3);
+}
+
+#[test]
+fn deadlock_in_mpi_program_is_reported() {
+    let w = build_world(cost(), Topology::new(2, 1));
+    let result = run_cluster(w, 1, move |rank, ctx| {
+        if rank == 1 {
+            // Receive that never gets a send.
+            let dst = ctx.with(|w, _| w.bufs.alloc(4));
+            let req = irecv(ctx, 1, SrcSel::Rank(0), TagSel::Tag(1), COMM_WORLD, BufSlice::whole(dst, 4));
+            wait(ctx, req);
+        }
+    });
+    let err = match result {
+        Err(e) => e,
+        Ok(_) => panic!("expected deadlock"),
+    };
+    let msg = format!("{err}");
+    assert!(msg.contains("deadlock"), "got: {msg}");
+}
+
+#[test]
+fn test_probe_nonblocking() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let s = w.bufs.alloc_init(vec![1.0; 4]);
+    let d = w.bufs.alloc(4);
+    run_cluster(w, 1, move |rank, ctx| {
+        if rank == 0 {
+            ctx.advance(100_000);
+            let req = isend(ctx, 0, 1, BufSlice::whole(s, 4), 1, COMM_WORLD);
+            wait(ctx, req);
+        } else {
+            let req = irecv(ctx, 1, SrcSel::Rank(0), TagSel::Tag(1), COMM_WORLD, BufSlice::whole(d, 4));
+            assert!(!test(ctx, req), "request cannot be done yet");
+            wait(ctx, req);
+            assert!(test(ctx, req));
+        }
+    })
+    .unwrap();
+}
+
+#[test]
+fn many_to_one_fan_in() {
+    let n = 8;
+    let mut w = build_world(cost(), Topology::new(n, 1));
+    let srcs: Vec<BufId> = (0..n).map(|r| w.bufs.alloc_init(vec![r as f32; 16])).collect();
+    let dsts: Vec<BufId> = (0..n).map(|_| w.bufs.alloc(16)).collect();
+    let srcs2 = srcs.clone();
+    let dsts2 = dsts.clone();
+    let out = run_cluster(w, 1, move |rank, ctx| {
+        if rank == 0 {
+            let reqs: Vec<usize> = (1..n)
+                .map(|r| {
+                    irecv(ctx, 0, SrcSel::Rank(r), TagSel::Tag(0), COMM_WORLD, BufSlice::whole(dsts2[r], 16))
+                })
+                .collect();
+            waitall(ctx, &reqs);
+            let d = dsts2.clone();
+            ctx.with(move |w, _| {
+                for r in 1..n {
+                    assert_eq!(w.bufs.get(d[r]), &[r as f32; 16]);
+                }
+            });
+        } else {
+            let req = isend(ctx, rank, 0, BufSlice::whole(srcs2[rank], 16), 0, COMM_WORLD);
+            wait(ctx, req);
+        }
+    })
+    .unwrap();
+    assert_eq!(out.world.metrics.eager_sends as usize, n - 1);
+}
+
+#[test]
+fn barrier_synchronizes_skewed_ranks() {
+    use std::sync::{Arc, Mutex};
+    let n = 6;
+    let w = build_world(cost(), Topology::new(3, 2));
+    let exits: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(vec![0; n]));
+    let entries: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(vec![0; n]));
+    let (ex, en) = (exits.clone(), entries.clone());
+    run_cluster(w, 1, move |rank, ctx| {
+        // Heavily skewed arrival times.
+        ctx.advance(10_000 * rank as u64);
+        en.lock().unwrap()[rank] = ctx.now();
+        barrier(ctx, rank, n, COMM_WORLD, 0);
+        ex.lock().unwrap()[rank] = ctx.now();
+    })
+    .unwrap();
+    let exits = exits.lock().unwrap().clone();
+    let entries = entries.lock().unwrap().clone();
+    let latest_entry = *entries.iter().max().unwrap();
+    for r in 0..n {
+        assert!(
+            exits[r] >= latest_entry,
+            "rank {r} left the barrier at {} before rank {} arrived at {latest_entry}",
+            exits[r],
+            n - 1
+        );
+    }
+}
+
+#[test]
+fn back_to_back_barriers_do_not_cross_match() {
+    let n = 4;
+    let w = build_world(cost(), Topology::new(2, 2));
+    run_cluster(w, 1, move |rank, ctx| {
+        for generation in 0..3u32 {
+            ctx.advance(1_000 * ((rank as u64 * 7 + generation as u64) % 5));
+            barrier(ctx, rank, n, COMM_WORLD, generation);
+        }
+    })
+    .unwrap();
+}

@@ -1,0 +1,224 @@
+//! NIC unit tests: DWQ triggered operations, eager/rendezvous protocols.
+
+use super::*;
+use crate::coordinator::build_world;
+use crate::costmodel::presets;
+use crate::mpi::{self, SrcSel, TagSel};
+use crate::sim::Engine;
+use crate::world::Topology;
+
+fn engine(nodes: usize, rpn: usize) -> Engine<World> {
+    let mut cost = presets::frontier_like();
+    cost.jitter_sigma = 0.0;
+    Engine::new(build_world(cost, Topology::new(nodes, rpn)), 1)
+}
+
+#[test]
+fn triggered_send_defers_until_threshold() {
+    let eng = engine(2, 1);
+    let delivered_at = std::sync::Arc::new(std::sync::Mutex::new(0u64));
+    let da = delivered_at.clone();
+    eng.setup(|w, core| {
+        let src = w.bufs.alloc_init(vec![7.0; 16]);
+        let dst = w.bufs.alloc(16);
+        let trig = alloc_counter(w, core, 0, "t");
+        let env = Envelope { src_rank: 0, dst_rank: 1, tag: 5, comm: 0, elems: 16 };
+        // Receiver posts first.
+        mpi::post_recv(
+            w,
+            core,
+            1,
+            SrcSel::Rank(0),
+            TagSel::Tag(5),
+            0,
+            BufSlice::whole(dst, 16),
+            Done::call(Box::new(move |w, core| {
+                assert_eq!(w.bufs.get(crate::world::BufId(1))[0], 7.0);
+                *da.lock().unwrap() = core.now();
+            })),
+        );
+        post_triggered_send(w, core, trig, 1, env, BufSlice::whole(src, 16), Done::none());
+        // Trigger fires only at t = 50_000.
+        core.schedule(50_000, Box::new(move |_, c| c.write_cell(trig, 1)));
+    });
+    let (w, _) = eng.run().unwrap();
+    let t = *delivered_at.lock().unwrap();
+    assert!(t > 50_000, "delivered at {t}, before the trigger");
+    assert_eq!(w.metrics.dwq_triggered, 1);
+    assert_eq!(w.metrics.eager_sends, 1);
+}
+
+#[test]
+fn triggered_send_reads_buffer_at_trigger_time() {
+    // §III-B2 item 2: kernels may mutate the buffer until the trigger
+    // write executes in stream order — the DMA must snapshot late.
+    let eng = engine(2, 1);
+    let value_seen = std::sync::Arc::new(std::sync::Mutex::new(0.0f32));
+    let vs = value_seen.clone();
+    eng.setup(|w, core| {
+        let src = w.bufs.alloc_init(vec![1.0; 8]);
+        let dst = w.bufs.alloc(8);
+        let trig = alloc_counter(w, core, 0, "t");
+        let env = Envelope { src_rank: 0, dst_rank: 1, tag: 1, comm: 0, elems: 8 };
+        mpi::post_recv(
+            w,
+            core,
+            1,
+            SrcSel::Rank(0),
+            TagSel::Tag(1),
+            0,
+            BufSlice::whole(dst, 8),
+            Done::call(Box::new(move |w, _| {
+                *vs.lock().unwrap() = w.bufs.get(crate::world::BufId(1))[0];
+            })),
+        );
+        post_triggered_send(w, core, trig, 1, env, BufSlice::whole(src, 8), Done::none());
+        // Buffer is overwritten BEFORE the trigger fires.
+        core.schedule(1_000, Box::new(move |w: &mut World, _c: &mut Ctx| {
+            w.bufs.get_mut(crate::world::BufId(0)).fill(42.0);
+        }));
+        core.schedule(2_000, Box::new(move |_, c| c.write_cell(trig, 1)));
+    });
+    eng.run().unwrap();
+    assert_eq!(*value_seen.lock().unwrap(), 42.0, "DMA must read at trigger time");
+}
+
+#[test]
+fn large_messages_use_rendezvous() {
+    let eng = engine(2, 1);
+    let got = std::sync::Arc::new(std::sync::Mutex::new(0.0f32));
+    let gc = got.clone();
+    eng.setup(|w, core| {
+        let elems = 32 * 1024; // 128 KiB > eager threshold
+        let src = w.bufs.alloc_init(vec![3.5; elems]);
+        let dst = w.bufs.alloc(elems);
+        let env = Envelope { src_rank: 0, dst_rank: 1, tag: 9, comm: 0, elems };
+        mpi::post_recv(
+            w,
+            core,
+            1,
+            SrcSel::Rank(0),
+            TagSel::Tag(9),
+            0,
+            BufSlice::whole(dst, elems),
+            Done::call(Box::new(move |w, _| {
+                *gc.lock().unwrap() = w.bufs.get(crate::world::BufId(1))[elems - 1];
+            })),
+        );
+        execute_send(w, core, env, BufSlice::whole(src, elems), Done::none());
+    });
+    let (w, _) = eng.run().unwrap();
+    assert_eq!(*got.lock().unwrap(), 3.5);
+    assert_eq!(w.metrics.rendezvous_sends, 1);
+    assert_eq!(w.metrics.eager_sends, 0);
+}
+
+#[test]
+fn rendezvous_waits_for_late_receiver() {
+    let eng = engine(2, 1);
+    let done_at = std::sync::Arc::new(std::sync::Mutex::new((0u64, 0u64)));
+    let dc = done_at.clone();
+    let dc2 = done_at.clone();
+    eng.setup(|w, core| {
+        let elems = 32 * 1024;
+        let src = w.bufs.alloc_init(vec![1.25; elems]);
+        let dst = w.bufs.alloc(elems);
+        let env = Envelope { src_rank: 0, dst_rank: 1, tag: 2, comm: 0, elems };
+        execute_send(
+            w,
+            core,
+            env,
+            BufSlice::whole(src, elems),
+            Done::call(Box::new(move |_, core| dc.lock().unwrap().0 = core.now())),
+        );
+        // Receiver posts much later.
+        core.schedule(
+            200_000,
+            Box::new(move |w, core| {
+                mpi::post_recv(
+                    w,
+                    core,
+                    1,
+                    SrcSel::Rank(0),
+                    TagSel::Tag(2),
+                    0,
+                    BufSlice::whole(dst, elems),
+                    Done::call(Box::new(move |w, core| {
+                        assert_eq!(w.bufs.get(dst)[0], 1.25);
+                        dc2.lock().unwrap().1 = core.now();
+                    })),
+                );
+            }),
+        );
+    });
+    let (w, _) = eng.run().unwrap();
+    let (send_done, recv_done) = *done_at.lock().unwrap();
+    assert!(send_done > 200_000, "sender completes only after match (got {send_done})");
+    assert!(recv_done >= send_done || recv_done > 200_000);
+    assert_eq!(w.metrics.unexpected_msgs, 1, "RTS must land unexpected");
+}
+
+#[test]
+fn triggered_put_moves_data_on_trigger() {
+    let eng = engine(2, 1);
+    let ok = std::sync::Arc::new(std::sync::Mutex::new(false));
+    let okc = ok.clone();
+    eng.setup(|w, core| {
+        let src = w.bufs.alloc_init(vec![9.0; 64]);
+        let dst = w.bufs.alloc(64);
+        let trig = alloc_counter(w, core, 0, "t");
+        post_triggered_put(
+            w,
+            core,
+            trig,
+            2,
+            0,
+            1,
+            BufSlice::whole(src, 64),
+            BufSlice::whole(dst, 64),
+            Done::none(),
+            Done::call(Box::new(move |w, _| {
+                *okc.lock().unwrap() = w.bufs.get(dst).iter().all(|&x| x == 9.0);
+            })),
+        );
+        // Two increments needed.
+        core.schedule(10, Box::new(move |_, c| { c.add_cell(trig, 1); }));
+        core.schedule(20, Box::new(move |_, c| { c.add_cell(trig, 1); }));
+    });
+    eng.run().unwrap();
+    assert!(*ok.lock().unwrap());
+}
+
+#[test]
+fn triggered_atomic_add_bumps_target() {
+    let eng = engine(1, 1);
+    let v = std::sync::Arc::new(std::sync::Mutex::new(0u64));
+    let vc = v.clone();
+    eng.setup(|w, core| {
+        let trig = alloc_counter(w, core, 0, "t");
+        let target = alloc_counter(w, core, 0, "tgt");
+        post_triggered_atomic_add(w, core, trig, 1, target, 5);
+        core.schedule(10, Box::new(move |_, c| c.write_cell(trig, 1)));
+        core.schedule(
+            100_000,
+            Box::new(move |_, c| {
+                *vc.lock().unwrap() = c.cell(target);
+            }),
+        );
+    });
+    eng.run().unwrap();
+    assert_eq!(*v.lock().unwrap(), 5);
+}
+
+#[test]
+fn counter_alloc_tracks_count() {
+    let eng = engine(2, 1);
+    eng.setup(|w, core| {
+        alloc_counter(w, core, 0, "a");
+        alloc_counter(w, core, 0, "b");
+        alloc_counter(w, core, 1, "c");
+    });
+    let (w, _) = eng.run().unwrap();
+    assert_eq!(w.nics[0].counters_allocated, 2);
+    assert_eq!(w.nics[1].counters_allocated, 1);
+}

@@ -1,0 +1,258 @@
+//! PJRT runtime: loads AOT-compiled HLO artifacts and executes them.
+//!
+//! This is the only place the rust side touches XLA. At build time,
+//! `python/compile/aot.py` lowers the L2 JAX entry points (which call the
+//! L1 Pallas kernels) to **HLO text** (see `/opt/xla-example/README.md`
+//! for why text, not serialized protos) and writes a `manifest.txt`
+//! describing every entry point's input/output shapes. At startup the
+//! coordinator loads and compiles each entry once; the simulated GPUs then
+//! execute them whenever the control processor reaches a kernel in stream
+//! order. Python never runs on this path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Shape of one argument/result: dimensions of an f32 array.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgShape(pub Vec<i64>);
+
+impl ArgShape {
+    pub fn elems(&self) -> usize {
+        self.0.iter().product::<i64>() as usize
+    }
+}
+
+/// One AOT entry point from the manifest.
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<ArgShape>,
+    pub outputs: Vec<ArgShape>,
+}
+
+struct LoadedEntry {
+    meta: EntryMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Registry of compiled executables over a PJRT CPU client.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    entries: HashMap<String, LoadedEntry>,
+}
+
+// SAFETY: `Runtime` lives inside the simulation `World`, which sits behind
+// the engine's single `Mutex`; at most one thread touches it at a time
+// (the strict driver/host token alternation). The PJRT CPU client has no
+// thread affinity — this wrapper only moves *which* thread calls it, never
+// introduces concurrent access.
+unsafe impl Send for Runtime {}
+// SAFETY: same argument — `&Runtime` is only ever dereferenced by the one
+// thread holding the engine lock, so shared references never race.
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Load every entry listed in `<dir>/manifest.txt` and compile it.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", manifest.display()))?;
+        let metas = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut entries = HashMap::new();
+        for meta in metas {
+            let path: PathBuf = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", meta.name))?;
+            entries.insert(meta.name.clone(), LoadedEntry { meta, exe });
+        }
+        Ok(Self { client, entries })
+    }
+
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    pub fn entry_meta(&self, name: &str) -> Option<&EntryMeta> {
+        self.entries.get(name).map(|e| &e.meta)
+    }
+
+    pub fn entry_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Execute an entry with flat f32 inputs (reshaped per the manifest);
+    /// returns flat f32 outputs.
+    pub fn execute_f32(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let entry = self
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown AOT entry '{name}' (have: {:?})", self.entry_names()))?;
+        if inputs.len() != entry.meta.inputs.len() {
+            bail!(
+                "entry '{name}': {} inputs given, manifest declares {}",
+                inputs.len(),
+                entry.meta.inputs.len()
+            );
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&entry.meta.inputs) {
+            if data.len() != shape.elems() {
+                bail!(
+                    "entry '{name}': input has {} elems, manifest shape {:?} needs {}",
+                    data.len(),
+                    shape.0,
+                    shape.elems()
+                );
+            }
+            let lit = xla::Literal::vec1(data)
+                .reshape(&shape.0)
+                .map_err(|e| anyhow!("reshape input for '{name}': {e:?}"))?;
+            lits.push(lit);
+        }
+        let result = entry
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute '{name}': {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of '{name}': {e:?}"))?;
+        // aot.py always lowers with return_tuple=True.
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple result of '{name}': {e:?}"))?;
+        if parts.len() != entry.meta.outputs.len() {
+            bail!(
+                "entry '{name}': runtime produced {} outputs, manifest declares {}",
+                parts.len(),
+                entry.meta.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (part, shape) in parts.into_iter().zip(&entry.meta.outputs) {
+            let v = part
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("read output of '{name}': {e:?}"))?;
+            if v.len() != shape.elems() {
+                bail!(
+                    "entry '{name}': output has {} elems, manifest shape {:?} needs {}",
+                    v.len(),
+                    shape.0,
+                    shape.elems()
+                );
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+/// Parse the artifact manifest. Line format (one entry per line):
+///
+/// ```text
+/// name=faces_pack file=faces_pack.hlo.txt in=32x32x32 out=6144,736,8
+/// ```
+///
+/// Shapes are `x`-separated dims; multiple args are comma-separated;
+/// blank lines and `#` comments are ignored. `in=-` means no inputs.
+pub fn parse_manifest(text: &str) -> Result<Vec<EntryMeta>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut name = None;
+        let mut file = None;
+        let mut inputs = Vec::new();
+        let mut outputs = Vec::new();
+        for field in line.split_whitespace() {
+            let (k, v) = field
+                .split_once('=')
+                .ok_or_else(|| anyhow!("manifest line {}: bad field '{field}'", lineno + 1))?;
+            match k {
+                "name" => name = Some(v.to_string()),
+                "file" => file = Some(v.to_string()),
+                "in" => inputs = parse_shapes(v, lineno)?,
+                "out" => outputs = parse_shapes(v, lineno)?,
+                other => bail!("manifest line {}: unknown key '{other}'", lineno + 1),
+            }
+        }
+        out.push(EntryMeta {
+            name: name.ok_or_else(|| anyhow!("manifest line {}: missing name", lineno + 1))?,
+            file: file.ok_or_else(|| anyhow!("manifest line {}: missing file", lineno + 1))?,
+            inputs,
+            outputs,
+        });
+    }
+    Ok(out)
+}
+
+fn parse_shapes(v: &str, lineno: usize) -> Result<Vec<ArgShape>> {
+    if v.is_empty() || v == "-" {
+        return Ok(Vec::new());
+    }
+    v.split(',')
+        .map(|s| {
+            s.split('x')
+                .map(|d| {
+                    d.parse::<i64>()
+                        .map_err(|_| anyhow!("manifest line {}: bad dim '{d}'", lineno + 1))
+                })
+                .collect::<Result<Vec<i64>>>()
+                .map(ArgShape)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_basic_line() {
+        let m = parse_manifest(
+            "# comment\nname=ax file=ax.hlo.txt in=64x8x8x8,8x8 out=64x8x8x8\n\n",
+        )
+        .unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].name, "ax");
+        assert_eq!(m[0].file, "ax.hlo.txt");
+        assert_eq!(m[0].inputs.len(), 2);
+        assert_eq!(m[0].inputs[0].0, vec![64, 8, 8, 8]);
+        assert_eq!(m[0].inputs[0].elems(), 64 * 512);
+        assert_eq!(m[0].inputs[1].0, vec![8, 8]);
+        assert_eq!(m[0].outputs[0].elems(), 64 * 512);
+    }
+
+    #[test]
+    fn manifest_scalar_shape() {
+        let m = parse_manifest("name=s file=s.hlo.txt in=1 out=1").unwrap();
+        assert_eq!(m[0].inputs[0].elems(), 1);
+    }
+
+    #[test]
+    fn manifest_empty_inputs() {
+        let m = parse_manifest("name=init file=init.hlo.txt in=- out=16").unwrap();
+        assert!(m[0].inputs.is_empty());
+        assert_eq!(m[0].outputs[0].elems(), 16);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(parse_manifest("name=x garbage").is_err());
+        assert!(parse_manifest("file=x.hlo.txt in=4 out=4").is_err());
+        assert!(parse_manifest("name=x file=f in=4xq out=4").is_err());
+    }
+}

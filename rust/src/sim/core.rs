@@ -1,0 +1,250 @@
+//! The engine core: virtual clock, event heap, counter cells, statistics.
+//!
+//! `Core<W>` is handed (by `&mut`) to every event callback alongside the
+//! user world `W`, so callbacks can schedule further events, create and
+//! update cells, and draw deterministic randomness.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::rng::SplitMix64;
+
+/// Virtual time in nanoseconds.
+pub type Time = u64;
+
+/// Handle to a 64-bit counter cell managed by the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CellId(pub(crate) u32);
+
+/// Identifier of a host actor (an OS thread running simulated process code).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct HostId(pub(crate) u32);
+
+/// An event callback: runs on the driver thread with exclusive access to
+/// both the user world and the engine core.
+pub type Cb<W> = Box<dyn FnOnce(&mut W, &mut Core<W>) + Send>;
+
+pub(crate) enum EvKind<W> {
+    Call(Cb<W>),
+    ResumeHost(HostId),
+}
+
+pub(crate) struct Ev<W> {
+    pub time: Time,
+    pub seq: u64,
+    pub kind: EvKind<W>,
+}
+
+impl<W> PartialEq for Ev<W> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<W> Eq for Ev<W> {}
+impl<W> PartialOrd for Ev<W> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<W> Ord for Ev<W> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first, seq-stable.
+        (other.time, other.seq).cmp(&(self.time, self.seq))
+    }
+}
+
+/// What a waiter does when its threshold is reached.
+pub(crate) enum WaiterAction<W> {
+    WakeHost(HostId),
+    Call(Cb<W>),
+}
+
+pub(crate) struct Waiter<W> {
+    pub threshold: u64,
+    pub action: WaiterAction<W>,
+    /// Human-readable description, used by the deadlock report.
+    pub desc: String,
+}
+
+pub(crate) struct Cell<W> {
+    pub value: u64,
+    pub waiters: Vec<Waiter<W>>,
+    pub name: String,
+}
+
+/// Engine statistics, useful for perf work on the simulator itself.
+#[derive(Debug, Default, Clone)]
+pub struct SimStats {
+    pub events: u64,
+    pub host_switches: u64,
+    pub cell_writes: u64,
+    pub max_heap: usize,
+}
+
+pub struct Core<W> {
+    pub(crate) now: Time,
+    pub(crate) seq: u64,
+    pub(crate) heap: BinaryHeap<Ev<W>>,
+    pub(crate) cells: Vec<Cell<W>>,
+    pub(crate) rng: SplitMix64,
+    pub(crate) stats: SimStats,
+    /// Names of host actors, indexed by HostId (for diagnostics only).
+    pub(crate) host_names: Vec<String>,
+}
+
+impl<W> Core<W> {
+    pub(crate) fn new(seed: u64) -> Self {
+        Self {
+            now: 0,
+            seq: 0,
+            heap: BinaryHeap::new(),
+            cells: Vec::new(),
+            rng: SplitMix64::new(seed),
+            stats: SimStats::default(),
+            host_names: Vec::new(),
+        }
+    }
+
+    /// Current virtual time (ns).
+    #[inline]
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Deterministic RNG shared by the whole simulation.
+    #[inline]
+    pub fn rng(&mut self) -> &mut SplitMix64 {
+        &mut self.rng
+    }
+
+    pub fn stats(&self) -> &SimStats {
+        &self.stats
+    }
+
+    // ---- events ------------------------------------------------------
+
+    /// Schedule `cb` to run `dt` ns from now.
+    pub fn schedule(&mut self, dt: Time, cb: Cb<W>) {
+        self.schedule_at(self.now + dt, cb);
+    }
+
+    /// Schedule `cb` at an absolute virtual time (must be >= now).
+    pub fn schedule_at(&mut self, t: Time, cb: Cb<W>) {
+        debug_assert!(t >= self.now, "scheduling into the past");
+        self.seq += 1;
+        self.heap.push(Ev { time: t, seq: self.seq, kind: EvKind::Call(cb) });
+        self.stats.max_heap = self.stats.max_heap.max(self.heap.len());
+    }
+
+    pub(crate) fn schedule_resume(&mut self, t: Time, host: HostId) {
+        debug_assert!(t >= self.now);
+        self.seq += 1;
+        self.heap.push(Ev { time: t, seq: self.seq, kind: EvKind::ResumeHost(host) });
+        self.stats.max_heap = self.stats.max_heap.max(self.heap.len());
+    }
+
+    // ---- cells -------------------------------------------------------
+
+    /// Create a new counter cell with an initial value.
+    pub fn new_cell(&mut self, name: impl Into<String>, init: u64) -> CellId {
+        let id = CellId(self.cells.len() as u32);
+        self.cells.push(Cell { value: init, waiters: Vec::new(), name: name.into() });
+        id
+    }
+
+    /// Read a cell's current value.
+    #[inline]
+    pub fn cell(&self, id: CellId) -> u64 {
+        self.cells[id.0 as usize].value
+    }
+
+    pub fn cell_name(&self, id: CellId) -> &str {
+        &self.cells[id.0 as usize].name
+    }
+
+    /// Set a cell to `v`, firing any waiters whose threshold is reached.
+    pub fn write_cell(&mut self, id: CellId, v: u64) {
+        self.stats.cell_writes += 1;
+        let c = &mut self.cells[id.0 as usize];
+        c.value = v;
+        self.fire_waiters(id);
+    }
+
+    /// Add `dv` to a cell, firing satisfied waiters; returns the new value.
+    pub fn add_cell(&mut self, id: CellId, dv: u64) -> u64 {
+        self.stats.cell_writes += 1;
+        let c = &mut self.cells[id.0 as usize];
+        c.value = c.value.wrapping_add(dv);
+        let v = c.value;
+        self.fire_waiters(id);
+        v
+    }
+
+    /// One-shot watch: when the cell's value first reaches (>=) `threshold`,
+    /// run `cb` (immediately if already satisfied). The callback runs as a
+    /// zero-delay scheduled event, preserving global event ordering.
+    pub fn on_ge(&mut self, id: CellId, threshold: u64, desc: impl Into<String>, cb: Cb<W>) {
+        if self.cells[id.0 as usize].value >= threshold {
+            self.schedule(0, cb);
+        } else {
+            self.cells[id.0 as usize].waiters.push(Waiter {
+                threshold,
+                action: WaiterAction::Call(cb),
+                desc: desc.into(),
+            });
+        }
+    }
+
+    pub(crate) fn wait_host_ge(&mut self, id: CellId, threshold: u64, host: HostId, desc: String) -> bool {
+        if self.cells[id.0 as usize].value >= threshold {
+            return true; // already satisfied, no blocking needed
+        }
+        self.cells[id.0 as usize].waiters.push(Waiter {
+            threshold,
+            action: WaiterAction::WakeHost(host),
+            desc,
+        });
+        false
+    }
+
+    fn fire_waiters(&mut self, id: CellId) {
+        let v = self.cells[id.0 as usize].value;
+        // Drain satisfied waiters preserving registration order.
+        let waiters = &mut self.cells[id.0 as usize].waiters;
+        if waiters.iter().all(|w| w.threshold > v) {
+            return;
+        }
+        let mut fired = Vec::new();
+        waiters.retain_mut(|w| {
+            if w.threshold <= v {
+                // Move the action out; placeholder is never observed because
+                // the entry is removed.
+                let action = std::mem::replace(&mut w.action, WaiterAction::WakeHost(HostId(u32::MAX)));
+                fired.push(action);
+                false
+            } else {
+                true
+            }
+        });
+        for action in fired {
+            match action {
+                WaiterAction::WakeHost(h) => self.schedule_resume(self.now, h),
+                WaiterAction::Call(cb) => self.schedule(0, cb),
+            }
+        }
+    }
+
+    /// Diagnostic: blocked waiter descriptions for the deadlock report.
+    pub(crate) fn blocked_waiters(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for c in &self.cells {
+            for w in &c.waiters {
+                out.push(format!(
+                    "cell '{}' = {} awaiting >= {} by {}",
+                    c.name, c.value, w.threshold, w.desc
+                ));
+            }
+        }
+        out
+    }
+}

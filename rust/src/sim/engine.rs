@@ -1,0 +1,316 @@
+//! Driver loop and host-actor token handshake.
+//!
+//! At most one thread executes at any moment: either the driver (popping
+//! events, running callbacks) or exactly one host actor that the driver
+//! resumed. This strict alternation is what makes the simulation
+//! deterministic while still letting benchmark code be written as plain
+//! sequential Rust (MPI-style: post, compute, wait).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+use super::core::{CellId, Core, EvKind, HostId, SimStats, Time};
+use super::gate::Gate;
+
+/// Marker payload used to unwind host threads when the sim aborts.
+struct SimAbort;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum HostState {
+    /// Created; will run when its initial resume event fires.
+    Pending,
+    /// Currently holds the execution token.
+    Running,
+    /// Parked, waiting for a scheduled resume (advance) — resume is in heap.
+    Sleeping,
+    /// Parked, waiting on a cell threshold — resume comes from a waiter.
+    BlockedOnCell,
+    Done,
+}
+
+struct HostSlot {
+    gate: Arc<Gate>,
+    state: HostState,
+    name: String,
+    wait_desc: String,
+}
+
+struct Inner<W> {
+    core: Core<W>,
+    world: W,
+    hosts: Vec<HostSlot>,
+    aborted: bool,
+    host_panic: Option<String>,
+}
+
+struct Shared<W> {
+    inner: Mutex<Inner<W>>,
+    driver_gate: Gate,
+}
+
+/// Simulation failure modes.
+#[derive(Debug)]
+pub enum SimError {
+    /// The event heap drained while actors were still blocked.
+    Deadlock { report: String },
+    /// A host actor panicked (application bug).
+    HostPanic { message: String },
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Deadlock { report } => write!(f, "simulation deadlock:\n{report}"),
+            SimError::HostPanic { message } => write!(f, "host actor panicked: {message}"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// The simulation engine. Construct, register setup + host actors, `run()`.
+pub struct Engine<W: Send + 'static> {
+    shared: Arc<Shared<W>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl<W: Send + 'static> Engine<W> {
+    pub fn new(world: W, seed: u64) -> Self {
+        Self {
+            shared: Arc::new(Shared {
+                inner: Mutex::new(Inner {
+                    core: Core::new(seed),
+                    world,
+                    hosts: Vec::new(),
+                    aborted: false,
+                    host_panic: None,
+                }),
+                driver_gate: Gate::new(),
+            }),
+            handles: Vec::new(),
+        }
+    }
+
+    /// Run setup code with access to the world and core (cell creation,
+    /// entity wiring) before the clock starts.
+    pub fn setup<R>(&self, f: impl FnOnce(&mut W, &mut Core<W>) -> R) -> R {
+        let mut g = self.shared.inner.lock().unwrap();
+        let inner = &mut *g;
+        f(&mut inner.world, &mut inner.core)
+    }
+
+    /// Spawn a host actor: an OS thread running `f` in virtual time.
+    /// Must be called before [`Engine::run`]. The actor starts at t=0.
+    pub fn spawn_host(
+        &mut self,
+        name: impl Into<String>,
+        f: impl FnOnce(&mut HostCtx<W>) + Send + 'static,
+    ) -> HostId {
+        let name = name.into();
+        let gate = Arc::new(Gate::new());
+        let id = {
+            let mut g = self.shared.inner.lock().unwrap();
+            let id = HostId(g.hosts.len() as u32);
+            g.hosts.push(HostSlot {
+                gate: gate.clone(),
+                state: HostState::Pending,
+                name: name.clone(),
+                wait_desc: String::new(),
+            });
+            g.core.host_names.push(name.clone());
+            // Initial resume at t=0 in spawn order.
+            g.core.schedule_resume(0, id);
+            id
+        };
+        let shared = self.shared.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("sim-host-{name}"))
+            .spawn(move || {
+                // Wait for the driver to hand us the token for the first time.
+                gate.wait();
+                {
+                    let g = shared.inner.lock().unwrap();
+                    if g.aborted {
+                        // Finish silently; driver is tearing down.
+                        drop(g);
+                        shared.driver_gate.open();
+                        return;
+                    }
+                }
+                let mut ctx = HostCtx { shared: shared.clone(), id, now: 0 };
+                {
+                    let g = shared.inner.lock().unwrap();
+                    ctx.now = g.core.now();
+                }
+                let result = catch_unwind(AssertUnwindSafe(|| f(&mut ctx)));
+                let mut g = shared.inner.lock().unwrap();
+                g.hosts[id.0 as usize].state = HostState::Done;
+                if let Err(payload) = result {
+                    if payload.downcast_ref::<SimAbort>().is_none() {
+                        let msg = payload
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "<non-string panic>".into());
+                        g.host_panic = Some(format!("host '{}': {}", g.hosts[id.0 as usize].name, msg));
+                    }
+                }
+                drop(g);
+                shared.driver_gate.open();
+            })
+            .expect("failed to spawn sim host thread");
+        self.handles.push(handle);
+        id
+    }
+
+    /// Drive the simulation to completion. Returns the final world and
+    /// engine statistics, or a deadlock/panic report.
+    pub fn run(mut self) -> Result<(W, SimStats), SimError> {
+        let result = self.drive();
+        // Ensure all host threads have exited before returning the world.
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        let shared = Arc::try_unwrap(self.shared)
+            .unwrap_or_else(|_| panic!("host threads still hold engine references"));
+        let inner = shared.inner.into_inner().unwrap();
+        match result {
+            Ok(()) => Ok((inner.world, inner.core.stats().clone())),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn drive(&mut self) -> Result<(), SimError> {
+        loop {
+            let mut g = self.shared.inner.lock().unwrap();
+            if let Some(msg) = g.host_panic.take() {
+                Self::abort(&mut g);
+                return Err(SimError::HostPanic { message: msg });
+            }
+            let ev = match g.core.heap.pop() {
+                Some(ev) => ev,
+                None => {
+                    if g.hosts.iter().all(|h| h.state == HostState::Done) {
+                        return Ok(());
+                    }
+                    let report = Self::deadlock_report(&g);
+                    Self::abort(&mut g);
+                    return Err(SimError::Deadlock { report });
+                }
+            };
+            debug_assert!(ev.time >= g.core.now, "time went backwards");
+            g.core.now = ev.time;
+            g.core.stats.events += 1;
+            match ev.kind {
+                EvKind::Call(cb) => {
+                    let inner = &mut *g;
+                    cb(&mut inner.world, &mut inner.core);
+                }
+                EvKind::ResumeHost(h) => {
+                    if g.hosts[h.0 as usize].state == HostState::Done {
+                        continue; // stale resume; ignore
+                    }
+                    g.core.stats.host_switches += 1;
+                    let slot = &mut g.hosts[h.0 as usize];
+                    slot.state = HostState::Running;
+                    slot.wait_desc.clear();
+                    let gate = slot.gate.clone();
+                    drop(g);
+                    gate.open();
+                    self.shared.driver_gate.wait();
+                }
+            }
+        }
+    }
+
+    fn abort(g: &mut MutexGuard<'_, Inner<W>>) {
+        g.aborted = true;
+        // Release every parked/pending host so its thread can unwind.
+        for h in g.hosts.iter() {
+            if h.state != HostState::Done && h.state != HostState::Running {
+                h.gate.open();
+            }
+        }
+    }
+
+    fn deadlock_report(g: &Inner<W>) -> String {
+        let mut lines = vec![format!("virtual time {} ns", g.core.now())];
+        for h in &g.hosts {
+            if h.state != HostState::Done {
+                lines.push(format!(
+                    "  host '{}' state {:?} waiting on: {}",
+                    h.name,
+                    h.state,
+                    if h.wait_desc.is_empty() { "<unknown>" } else { &h.wait_desc }
+                ));
+            }
+        }
+        for w in g.core.blocked_waiters() {
+            lines.push(format!("  waiter: {w}"));
+        }
+        lines.join("\n")
+    }
+}
+
+/// Handle through which host-actor code interacts with virtual time.
+pub struct HostCtx<W: Send + 'static> {
+    shared: Arc<Shared<W>>,
+    id: HostId,
+    now: Time,
+}
+
+impl<W: Send + 'static> HostCtx<W> {
+    /// Current virtual time as last observed by this host.
+    #[inline]
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Charge `dt` ns of host CPU time (e.g. the cost of an MPI call).
+    pub fn advance(&mut self, dt: Time) {
+        let mut g = self.shared.inner.lock().unwrap();
+        let t = g.core.now() + dt;
+        g.core.schedule_resume(t, self.id);
+        g.hosts[self.id.0 as usize].state = HostState::Sleeping;
+        g.hosts[self.id.0 as usize].wait_desc = format!("advance({dt})");
+        self.now = Self::park(&self.shared, self.id, g);
+    }
+
+    /// Block until `cell >= threshold`. If already satisfied, returns
+    /// immediately without yielding the token (zero virtual time).
+    pub fn wait_ge(&mut self, cell: CellId, threshold: u64, desc: &str) {
+        let mut g = self.shared.inner.lock().unwrap();
+        let satisfied = g.core.wait_host_ge(cell, threshold, self.id, desc.to_string());
+        if satisfied {
+            return;
+        }
+        g.hosts[self.id.0 as usize].state = HostState::BlockedOnCell;
+        g.hosts[self.id.0 as usize].wait_desc = desc.to_string();
+        self.now = Self::park(&self.shared, self.id, g);
+    }
+
+    /// Run `f` atomically (at the current instant) against the world and
+    /// engine core. This is how host code posts work to simulated devices.
+    pub fn with<R>(&mut self, f: impl FnOnce(&mut W, &mut Core<W>) -> R) -> R {
+        let mut g = self.shared.inner.lock().unwrap();
+        debug_assert_eq!(g.hosts[self.id.0 as usize].state, HostState::Running);
+        let inner = &mut *g;
+        f(&mut inner.world, &mut inner.core)
+    }
+
+    /// Park this host and hand the token back to the driver; returns the
+    /// virtual time at which the driver resumed us.
+    fn park(shared: &Shared<W>, id: HostId, guard: MutexGuard<'_, Inner<W>>) -> Time {
+        let gate = guard.hosts[id.0 as usize].gate.clone();
+        drop(guard);
+        shared.driver_gate.open();
+        gate.wait();
+        let g = shared.inner.lock().unwrap();
+        if g.aborted {
+            drop(g);
+            std::panic::panic_any(SimAbort);
+        }
+        g.core.now()
+    }
+}

@@ -1,0 +1,111 @@
+//! One-shot reusable gate used for the driver <-> host token handshake.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// How long `wait()` spins on the flag before sleeping on the condvar.
+/// The driver/host ping-pong usually hands the token back within a few
+/// hundred ns, so a short spin avoids the ~10-20 µs futex round-trip that
+/// otherwise dominates simulation throughput (see EXPERIMENTS.md §Perf).
+const SPIN_ITERS: u32 = 2_000;
+
+/// A binary gate: `open()` releases exactly one pending (or future) `wait()`.
+///
+/// Unlike a bare condvar, the flag makes the pair race-free when `open`
+/// happens before the other side reaches `wait`.
+#[derive(Default)]
+pub struct Gate {
+    open: AtomicBool,
+    m: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Gate {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Open the gate, releasing one waiter (now or in the future).
+    pub fn open(&self) {
+        debug_assert!(!self.open.load(Ordering::Relaxed), "gate double-open");
+        // Publish the token, then (lock-protected) notify so a waiter that
+        // checked the flag before sleeping cannot miss the wakeup.
+        self.open.store(true, Ordering::Release);
+        let _g = self.m.lock().unwrap();
+        self.cv.notify_one();
+    }
+
+    /// Block until the gate is opened, then consume the token.
+    pub fn wait(&self) {
+        // Fast path: spin briefly — the handshake is usually immediate.
+        for _ in 0..SPIN_ITERS {
+            if self
+                .open
+                .compare_exchange_weak(true, false, Ordering::Acquire, Ordering::Relaxed)
+                .is_ok()
+            {
+                return;
+            }
+            std::hint::spin_loop();
+        }
+        // Slow path: sleep on the condvar.
+        let mut g = self.m.lock().unwrap();
+        loop {
+            if self
+                .open
+                .compare_exchange(true, false, Ordering::Acquire, Ordering::Relaxed)
+                .is_ok()
+            {
+                return;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn open_before_wait_is_not_lost() {
+        let g = Gate::new();
+        g.open();
+        g.wait(); // must not block
+    }
+
+    #[test]
+    fn handoff_across_threads() {
+        // A gate is a one-directional token: each side waits only on its
+        // own gate (as the driver/host handshake does).
+        let to_child = Arc::new(Gate::new());
+        let to_main = Arc::new(Gate::new());
+        let (tc, tm) = (to_child.clone(), to_main.clone());
+        let t = std::thread::spawn(move || {
+            tc.wait();
+            tm.open();
+        });
+        to_child.open();
+        to_main.wait();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn ping_pong_many_rounds() {
+        let to_child = Arc::new(Gate::new());
+        let to_main = Arc::new(Gate::new());
+        let (tc, tm) = (to_child.clone(), to_main.clone());
+        let t = std::thread::spawn(move || {
+            for _ in 0..1000 {
+                tc.wait();
+                tm.open();
+            }
+        });
+        for _ in 0..1000 {
+            to_child.open();
+            to_main.wait();
+        }
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,38 @@
+//! Virtual-time discrete-event simulation engine.
+//!
+//! This is the substrate on which the simulated cluster (GPUs, NICs, MPI
+//! ranks, progress threads) runs. It is a *hybrid process/event* engine:
+//!
+//! * **Events** are `(time, seq, callback)` entries in a binary heap,
+//!   executed on the driver thread. Reactive entities (the GPU control
+//!   processor, the NIC DWQ engine, MPI progress threads) are state
+//!   machines advanced entirely by callbacks — they cost no thread
+//!   switches.
+//! * **Cells** are 64-bit counters with threshold waiters. They model NIC
+//!   hardware counters, GPU-stream-visible memory words (the targets of
+//!   `writeValue64`/`waitValue64`), and request-completion flags.
+//! * **Host actors** are real OS threads — one per simulated application
+//!   process — running arbitrary Rust. They advance virtual time through
+//!   a token handshake with the driver: at any instant at most one thread
+//!   (driver *or* one host) is executing, which makes the simulation
+//!   deterministic.
+//!
+//! Determinism: ties in the heap are broken by insertion sequence; all
+//! randomness comes from a seeded [`rng::SplitMix64`]. The same seed and
+//! workload always produce the identical virtual timeline.
+//!
+//! Deadlock detection: if the event heap drains while host actors or
+//! waiters remain blocked, [`Engine::run`] returns a [`SimError::Deadlock`]
+//! naming every blocked entity and the cell value it awaits — which doubles
+//! as an MPI deadlock debugger for code built on top.
+
+pub mod core;
+pub mod engine;
+pub mod gate;
+pub mod rng;
+
+pub use self::core::{CellId, Core, SimStats, Time};
+pub use self::engine::{Engine, HostCtx, SimError};
+
+#[cfg(test)]
+mod tests;

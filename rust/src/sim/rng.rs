@@ -1,0 +1,120 @@
+//! Deterministic pseudo-randomness for the simulation.
+//!
+//! No external RNG crates are used; SplitMix64 is small, fast, and has
+//! more than enough quality for cost-model jitter and property tests.
+
+/// SplitMix64 PRNG (public-domain algorithm by Sebastiano Vigna).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)`; `n` must be non-zero.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Multiply-shift; bias is negligible for simulation purposes.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Multiplicative jitter: `mean * exp(sigma * N(0,1))`, clamped to
+    /// `[mean/4, mean*4]` so a single tail sample cannot distort a run.
+    /// With `sigma == 0` this is exactly `mean`.
+    pub fn jitter(&mut self, mean: u64, sigma: f64) -> u64 {
+        if sigma == 0.0 || mean == 0 {
+            return mean;
+        }
+        let f = (sigma * self.normal()).exp();
+        let f = f.clamp(0.25, 4.0);
+        ((mean as f64) * f).round() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..1000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = SplitMix64::new(9);
+        for _ in 0..1000 {
+            assert!(r.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn jitter_zero_sigma_is_identity() {
+        let mut r = SplitMix64::new(3);
+        assert_eq!(r.jitter(1000, 0.0), 1000);
+    }
+
+    #[test]
+    fn jitter_is_bounded() {
+        let mut r = SplitMix64::new(3);
+        for _ in 0..1000 {
+            let j = r.jitter(1000, 0.3);
+            assert!((250..=4000).contains(&j), "jitter {j} out of clamp range");
+        }
+    }
+
+    #[test]
+    fn normal_mean_roughly_zero() {
+        let mut r = SplitMix64::new(11);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.normal()).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+    }
+}

@@ -1,0 +1,256 @@
+//! Engine unit tests: scheduling order, cells, host handshake, deadlock.
+
+use super::*;
+
+#[derive(Default)]
+struct TestWorld {
+    log: Vec<(Time, String)>,
+}
+
+fn log_ev(w: &mut TestWorld, core: &Core<TestWorld>, msg: &str) {
+    w.log.push((core.now(), msg.to_string()));
+}
+
+#[test]
+fn events_run_in_time_order() {
+    let eng = Engine::new(TestWorld::default(), 1);
+    eng.setup(|_, core| {
+        core.schedule(30, Box::new(|w, c| log_ev(w, c, "c")));
+        core.schedule(10, Box::new(|w, c| log_ev(w, c, "a")));
+        core.schedule(20, Box::new(|w, c| log_ev(w, c, "b")));
+    });
+    let (w, stats) = eng.run().unwrap();
+    assert_eq!(
+        w.log,
+        vec![(10, "a".into()), (20, "b".into()), (30, "c".into())]
+    );
+    assert_eq!(stats.events, 3);
+}
+
+#[test]
+fn same_time_events_run_in_insertion_order() {
+    let eng = Engine::new(TestWorld::default(), 1);
+    eng.setup(|_, core| {
+        for i in 0..10 {
+            core.schedule(5, Box::new(move |w, c| log_ev(w, c, &format!("e{i}"))));
+        }
+    });
+    let (w, _) = eng.run().unwrap();
+    let msgs: Vec<_> = w.log.iter().map(|(_, m)| m.clone()).collect();
+    assert_eq!(msgs, (0..10).map(|i| format!("e{i}")).collect::<Vec<_>>());
+}
+
+#[test]
+fn nested_scheduling_works() {
+    let eng = Engine::new(TestWorld::default(), 1);
+    eng.setup(|_, core| {
+        core.schedule(
+            10,
+            Box::new(|w, c| {
+                log_ev(w, c, "outer");
+                c.schedule(5, Box::new(|w, c| log_ev(w, c, "inner")));
+            }),
+        );
+    });
+    let (w, _) = eng.run().unwrap();
+    assert_eq!(w.log, vec![(10, "outer".into()), (15, "inner".into())]);
+}
+
+#[test]
+fn cell_write_fires_waiter() {
+    let eng = Engine::new(TestWorld::default(), 1);
+    eng.setup(|_, core| {
+        let c = core.new_cell("ctr", 0);
+        core.on_ge(c, 3, "test-waiter", Box::new(|w, core| log_ev(w, core, "fired")));
+        core.schedule(100, Box::new(move |_, core| {
+            core.write_cell(c, 2); // below threshold: no fire
+        }));
+        core.schedule(200, Box::new(move |_, core| {
+            core.add_cell(c, 1); // reaches 3
+        }));
+    });
+    let (w, _) = eng.run().unwrap();
+    assert_eq!(w.log, vec![(200, "fired".into())]);
+}
+
+#[test]
+fn on_ge_already_satisfied_fires_immediately() {
+    let eng = Engine::new(TestWorld::default(), 1);
+    eng.setup(|_, core| {
+        let c = core.new_cell("ctr", 5);
+        core.on_ge(c, 3, "sat", Box::new(|w, core| log_ev(w, core, "sat")));
+    });
+    let (w, _) = eng.run().unwrap();
+    assert_eq!(w.log, vec![(0, "sat".into())]);
+}
+
+#[test]
+fn multiple_waiters_fire_in_registration_order() {
+    let eng = Engine::new(TestWorld::default(), 1);
+    eng.setup(|_, core| {
+        let c = core.new_cell("ctr", 0);
+        for i in 0..5 {
+            core.on_ge(c, 1, "w", Box::new(move |w, core| log_ev(w, core, &format!("w{i}"))));
+        }
+        core.schedule(7, Box::new(move |_, core| core.write_cell(c, 1)));
+    });
+    let (w, _) = eng.run().unwrap();
+    let msgs: Vec<_> = w.log.iter().map(|(_, m)| m.clone()).collect();
+    assert_eq!(msgs, vec!["w0", "w1", "w2", "w3", "w4"]);
+}
+
+#[test]
+fn host_advance_accumulates_time() {
+    let mut eng = Engine::new(TestWorld::default(), 1);
+    eng.spawn_host("h", |ctx| {
+        assert_eq!(ctx.now(), 0);
+        ctx.advance(100);
+        assert_eq!(ctx.now(), 100);
+        ctx.advance(50);
+        assert_eq!(ctx.now(), 150);
+        ctx.with(|w, c| w.log.push((c.now(), "done".into())));
+    });
+    let (w, stats) = eng.run().unwrap();
+    assert_eq!(w.log, vec![(150, "done".into())]);
+    assert!(stats.host_switches >= 3);
+}
+
+#[test]
+fn host_wait_ge_blocks_until_write() {
+    let mut eng = Engine::new(TestWorld::default(), 1);
+    let cell = eng.setup(|_, core| {
+        let c = core.new_cell("flag", 0);
+        core.schedule(500, Box::new(move |_, core| core.write_cell(c, 1)));
+        c
+    });
+    eng.spawn_host("waiter", move |ctx| {
+        ctx.wait_ge(cell, 1, "flag>=1");
+        assert_eq!(ctx.now(), 500);
+        ctx.with(|w, c| w.log.push((c.now(), "woke".into())));
+    });
+    let (w, _) = eng.run().unwrap();
+    assert_eq!(w.log, vec![(500, "woke".into())]);
+}
+
+#[test]
+fn host_wait_ge_satisfied_is_instant() {
+    let mut eng = Engine::new(TestWorld::default(), 1);
+    let cell = eng.setup(|_, core| core.new_cell("flag", 9));
+    eng.spawn_host("h", move |ctx| {
+        ctx.advance(10);
+        ctx.wait_ge(cell, 5, "flag>=5");
+        assert_eq!(ctx.now(), 10); // no time passed
+    });
+    eng.run().unwrap();
+}
+
+#[test]
+fn two_hosts_ping_pong() {
+    let mut eng = Engine::new(TestWorld::default(), 1);
+    let (a2b, b2a) = eng.setup(|_, core| (core.new_cell("a2b", 0), core.new_cell("b2a", 0)));
+    eng.spawn_host("a", move |ctx| {
+        for i in 1..=3u64 {
+            ctx.advance(10);
+            ctx.with(|_, core| core.write_cell(a2b, i));
+            ctx.wait_ge(b2a, i, "b2a");
+        }
+        ctx.with(|w, c| w.log.push((c.now(), "a-done".into())));
+    });
+    eng.spawn_host("b", move |ctx| {
+        for i in 1..=3u64 {
+            ctx.wait_ge(a2b, i, "a2b");
+            ctx.advance(5);
+            ctx.with(|_, core| core.write_cell(b2a, i));
+        }
+    });
+    let (w, _) = eng.run().unwrap();
+    // Each round: a advances 10, writes; b wakes, advances 5, writes; so
+    // rounds complete at 15, 30, 45.
+    assert_eq!(w.log, vec![(45, "a-done".into())]);
+}
+
+#[test]
+fn deadlock_detected_and_reported() {
+    let mut eng = Engine::new(TestWorld::default(), 1);
+    let cell = eng.setup(|_, core| core.new_cell("never", 0));
+    eng.spawn_host("stuck", move |ctx| {
+        ctx.wait_ge(cell, 1, "never>=1");
+    });
+    match eng.run() {
+        Err(SimError::Deadlock { report }) => {
+            assert!(report.contains("stuck"), "report: {report}");
+            assert!(report.contains("never"), "report: {report}");
+        }
+        other => panic!("expected deadlock, got {other:?}", other = other.map(|_| ())),
+    }
+}
+
+#[test]
+fn host_panic_is_reported() {
+    let mut eng = Engine::new(TestWorld::default(), 1);
+    eng.spawn_host("bad", |ctx| {
+        ctx.advance(1);
+        panic!("boom-{}", 42);
+    });
+    match eng.run() {
+        Err(SimError::HostPanic { message }) => {
+            assert!(message.contains("boom-42"), "message: {message}");
+            assert!(message.contains("bad"), "message: {message}");
+        }
+        other => panic!("expected host panic, got {other:?}", other = other.map(|_| ())),
+    }
+}
+
+#[test]
+fn determinism_same_seed_same_timeline() {
+    fn run_once(seed: u64) -> Vec<(Time, String)> {
+        let mut eng = Engine::new(TestWorld::default(), seed);
+        let cell = eng.setup(|_, core| core.new_cell("c", 0));
+        for h in 0..4u64 {
+            eng.spawn_host(format!("h{h}"), move |ctx| {
+                for i in 0..5u64 {
+                    let dt = ctx.with(|_, core| core.rng().jitter(100, 0.2));
+                    ctx.advance(dt);
+                    ctx.with(|w, core| {
+                        let v = core.add_cell(cell, 1);
+                        w.log.push((core.now(), format!("h{h}.{i}={v}")));
+                    });
+                }
+            });
+        }
+        eng.run().unwrap().0.log
+    }
+    let a = run_once(77);
+    let b = run_once(77);
+    let c = run_once(78);
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+}
+
+#[test]
+fn many_hosts_scale() {
+    let mut eng = Engine::new(TestWorld::default(), 1);
+    let cell = eng.setup(|_, core| core.new_cell("sum", 0));
+    let n = 64u64;
+    for h in 0..n {
+        eng.spawn_host(format!("h{h}"), move |ctx| {
+            for _ in 0..10 {
+                ctx.advance(7);
+                ctx.with(|_, core| {
+                    core.add_cell(cell, 1);
+                });
+            }
+        });
+    }
+    let mut eng2_cell = None;
+    eng.setup(|_, core| eng2_cell = Some(core.cell(cell)));
+    let (_, stats) = eng.run().unwrap();
+    assert!(stats.host_switches >= n * 10);
+}
+
+#[test]
+fn world_returned_after_run() {
+    let eng = Engine::new(TestWorld { log: vec![(0, "pre".into())] }, 1);
+    let (w, _) = eng.run().unwrap();
+    assert_eq!(w.log, vec![(0, "pre".into())]);
+}

@@ -1,0 +1,329 @@
+//! The paper's proposed interface: stream-triggered (ST) MPI operations.
+//!
+//! Implements §III's `MPIX_*` API over the simulated substrate:
+//!
+//! * [`create_queue`] / [`free_queue`] — `MPIX_Create_queue` /
+//!   `MPIX_Free_queue`: bind a GPU stream to an MPI queue object and open
+//!   two NIC hardware counters (one trigger, one completion), mapped into
+//!   GPU-CP-visible memory (§IV-A);
+//! * [`enqueue_send`] / [`enqueue_recv`] — `MPIX_Enqueue_send/recv`:
+//!   create deferred communication descriptors, FIFO per queue,
+//!   asynchronous w.r.t. the host;
+//! * [`enqueue_start`] — `MPIX_Enqueue_start`: appends a stream-memory
+//!   `writeValue64` to the GPU stream; when the GPU CP executes it, the
+//!   write to the trigger counter fires **all** operations enqueued since
+//!   the previous start (batching, §III-A footnote);
+//! * [`enqueue_wait`] — `MPIX_Enqueue_wait`: appends a `waitValue64` on
+//!   the completion counter, stalling the *stream* (never the host) until
+//!   every started operation has completed.
+//!
+//! Routing mirrors §IV faithfully:
+//! * inter-node sends → NIC DWQ triggered sends (full hardware offload);
+//! * receives (any locality) and all intra-node traffic → emulated by the
+//!   per-process progress thread, charged on its serial timeline;
+//! * inter-node rendezvous sends get a small progress-thread assist for
+//!   completion handling (§V-E).
+//!
+//! Wildcards are rejected (§III-D): ST operations require a concrete
+//! source rank and tag.
+
+use crate::costmodel::MemOpFlavor;
+use crate::gpu::{self, StreamId, StreamOp, WriteMode};
+use crate::mpi::{self, SrcSel, TagSel};
+use crate::nic::{self, BufSlice, Done, Envelope};
+use crate::sim::{CellId, HostCtx};
+use crate::world::World;
+
+/// Errors surfaced to the application (mirrors MPI error classes).
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum StError {
+    #[error("ST operations do not support MPI_ANY_SOURCE/MPI_ANY_TAG (paper §III-D)")]
+    WildcardUnsupported,
+    #[error("MPIX_Queue {0} was freed")]
+    QueueFreed(usize),
+    #[error("MPIX_Free_queue while {0} enqueued operations are incomplete")]
+    QueueBusy(u64),
+}
+
+/// `MPIX_Queue`: maps a GPU stream to the MPI runtime and batches ST ops.
+pub struct MpixQueue {
+    pub rank: usize,
+    pub stream: StreamId,
+    /// NIC hardware trigger counter (GPU-CP visible).
+    pub trig_ctr: CellId,
+    /// NIC hardware completion counter (GPU-CP visible).
+    pub comp_ctr: CellId,
+    /// Stream memory op implementation used for this queue's
+    /// start/wait operations (Hip or hand-coded Shader, §V-F).
+    pub flavor: MemOpFlavor,
+    /// Number of `enqueue_start` calls so far == the value the next
+    /// trigger write stores.
+    pub epoch: u64,
+    /// Ops enqueued since the last start (they trigger at `epoch + 1`).
+    pub pending_since_start: u64,
+    /// Total ops covered by issued starts (the wait threshold).
+    pub started_total: u64,
+    pub freed: bool,
+}
+
+/// Create an `MPIX_Queue` bound to `stream` (local operation, §III-A).
+pub fn create_queue(
+    hctx: &mut HostCtx<World>,
+    rank: usize,
+    stream: StreamId,
+    flavor: MemOpFlavor,
+) -> usize {
+    let call = hctx.with(|w, _| w.cost.host_enqueue_call);
+    hctx.advance(call);
+    hctx.with(|w, core| {
+        let node = w.topo.node_of(rank);
+        let qid = w.queues.len();
+        let trig_ctr = nic::alloc_counter(w, core, node, &format!("q{qid}.trig"));
+        let comp_ctr = nic::alloc_counter(w, core, node, &format!("q{qid}.comp"));
+        w.queues.push(MpixQueue {
+            rank,
+            stream,
+            trig_ctr,
+            comp_ctr,
+            flavor,
+            epoch: 0,
+            pending_since_start: 0,
+            started_total: 0,
+            freed: false,
+        });
+        qid
+    })
+}
+
+/// Release an `MPIX_Queue`'s internal resources. It is the caller's
+/// responsibility to have waited for all associated ST operations
+/// (§III-A); violating that is reported as an error.
+pub fn free_queue(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
+    let call = hctx.with(|w, _| w.cost.host_enqueue_call);
+    hctx.advance(call);
+    hctx.with(|w, core| {
+        let q = &w.queues[queue];
+        if q.freed {
+            return Err(StError::QueueFreed(queue));
+        }
+        let completed = core.cell(q.comp_ctr);
+        let outstanding = q.started_total.saturating_sub(completed);
+        if outstanding > 0 {
+            return Err(StError::QueueBusy(outstanding));
+        }
+        w.queues[queue].freed = true;
+        Ok(())
+    })
+}
+
+/// `MPIX_Enqueue_send`: deferred tagged send on `queue`. Returns a
+/// request id usable with host-side `mpi::wait` (§III-B2 item 4).
+pub fn enqueue_send(
+    hctx: &mut HostCtx<World>,
+    queue: usize,
+    dst: usize,
+    src: BufSlice,
+    tag: i32,
+    comm: u16,
+) -> Result<usize, StError> {
+    let call = hctx.with(|w, _| w.cost.host_enqueue_call);
+    hctx.advance(call);
+    hctx.with(|w, core| {
+        if w.queues[queue].freed {
+            return Err(StError::QueueFreed(queue));
+        }
+        let rank = w.queues[queue].rank;
+        let req = w.new_request(core, "st_send");
+        let req_cell = w.request_done_cell(req);
+        let q = &mut w.queues[queue];
+        let threshold = q.epoch + 1;
+        q.pending_since_start += 1;
+        let trig = q.trig_ctr;
+        let comp = q.comp_ctr;
+        let env = Envelope { src_rank: rank, dst_rank: dst, tag, comm, elems: src.elems };
+
+        if w.topo.same_node(rank, dst) {
+            // No intra-node deferred-work hardware exists (§IV-B): the
+            // progress thread watches the trigger counter and performs the
+            // send itself.
+            core.on_ge(
+                trig,
+                threshold,
+                format!("progress r{rank} ST intra send"),
+                Box::new(move |w, core| {
+                    let cost = w.cost.progress_wakeup + w.cost.progress_per_op;
+                    let at = mpi::progress_charge(w, core, rank, cost);
+                    core.schedule_at(
+                        at,
+                        Box::new(move |w, core| {
+                            // Completion counter updates also flow through
+                            // the progress thread.
+                            let done = Done {
+                                cells: vec![req_cell],
+                                cb: Some(Box::new(move |w, core| {
+                                    let c = w.cost.progress_completion;
+                                    let at = mpi::progress_charge(w, core, rank, c);
+                                    core.schedule_at(
+                                        at,
+                                        Box::new(move |_, core| {
+                                            core.add_cell(comp, 1);
+                                        }),
+                                    );
+                                })),
+                            };
+                            mpi::do_send(w, core, env, src, done);
+                        }),
+                    );
+                }),
+            );
+        } else {
+            // Full NIC offload via a DWQ triggered send (§IV-A1). The NIC
+            // bumps the completion counter in hardware; rendezvous sends
+            // need a small progress-thread assist (§V-E).
+            let rendezvous = w.cost.is_rendezvous(src.bytes());
+            let done = Done {
+                cells: vec![req_cell, comp],
+                cb: if rendezvous {
+                    Some(Box::new(move |w, core| {
+                        let c = w.cost.progress_rendezvous_assist;
+                        let _ = mpi::progress_charge(w, core, rank, c);
+                    }))
+                } else {
+                    None
+                },
+            };
+            nic::post_triggered_send(w, core, trig, threshold, env, src, done);
+        }
+        Ok(req)
+    })
+}
+
+/// `MPIX_Enqueue_recv`: deferred tagged receive on `queue`. The NIC has
+/// no triggered receives (§IV-A2), so the progress thread emulates the
+/// deferred semantics regardless of locality: it observes the trigger,
+/// posts the receive into the matching engine, and mediates the
+/// completion-counter update.
+pub fn enqueue_recv(
+    hctx: &mut HostCtx<World>,
+    queue: usize,
+    src_rank: usize,
+    dst: BufSlice,
+    tag: i32,
+    comm: u16,
+) -> Result<usize, StError> {
+    let call = hctx.with(|w, _| w.cost.host_enqueue_call);
+    hctx.advance(call);
+    hctx.with(|w, core| {
+        if w.queues[queue].freed {
+            return Err(StError::QueueFreed(queue));
+        }
+        let rank = w.queues[queue].rank;
+        let req = w.new_request(core, "st_recv");
+        let req_cell = w.request_done_cell(req);
+        let q = &mut w.queues[queue];
+        let threshold = q.epoch + 1;
+        q.pending_since_start += 1;
+        let trig = q.trig_ctr;
+        let comp = q.comp_ctr;
+
+        core.on_ge(
+            trig,
+            threshold,
+            format!("progress r{rank} ST recv"),
+            Box::new(move |w, core| {
+                let cost = w.cost.progress_wakeup + w.cost.progress_per_op;
+                let at = mpi::progress_charge(w, core, rank, cost);
+                core.schedule_at(
+                    at,
+                    Box::new(move |w, core| {
+                        let done = Done {
+                            cells: vec![req_cell],
+                            cb: Some(Box::new(move |w, core| {
+                                let c = w.cost.progress_completion;
+                                let at = mpi::progress_charge(w, core, rank, c);
+                                core.schedule_at(
+                                    at,
+                                    Box::new(move |_, core| {
+                                        core.add_cell(comp, 1);
+                                    }),
+                                );
+                            })),
+                        };
+                        mpi::post_recv(
+                            w,
+                            core,
+                            rank,
+                            SrcSel::Rank(src_rank),
+                            TagSel::Tag(tag),
+                            comm,
+                            dst,
+                            done,
+                        );
+                    }),
+                );
+            }),
+        );
+        Ok(req)
+    })
+}
+
+/// Convenience guard: ST does not allow wildcards (§III-D). Callers that
+/// accept user-provided selectors should validate through this.
+pub fn validate_selectors(src: SrcSel, tag: TagSel) -> Result<(), StError> {
+    if src == SrcSel::Any || tag == TagSel::Any {
+        return Err(StError::WildcardUnsupported);
+    }
+    Ok(())
+}
+
+/// `MPIX_Enqueue_start`: appends a `writeValue64` to the queue's GPU
+/// stream. When the CP executes it (in stream order), the trigger counter
+/// advances to the new epoch and every operation enqueued since the last
+/// start executes (batched trigger, §III-B item 3).
+pub fn enqueue_start(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
+    let (call, enq) = hctx.with(|w, _| (w.cost.host_enqueue_call, w.cost.kernel_enqueue));
+    hctx.advance(call + enq);
+    hctx.with(|w, core| {
+        if w.queues[queue].freed {
+            return Err(StError::QueueFreed(queue));
+        }
+        let q = &mut w.queues[queue];
+        q.epoch += 1;
+        q.started_total += q.pending_since_start;
+        q.pending_since_start = 0;
+        let op = StreamOp::WriteValue64 {
+            cell: q.trig_ctr,
+            value: q.epoch,
+            mode: WriteMode::Set,
+            flavor: q.flavor,
+        };
+        let sid = q.stream;
+        gpu::enqueue(w, core, sid, op);
+        Ok(())
+    })
+}
+
+/// `MPIX_Enqueue_wait`: appends a `waitValue64` on the completion counter
+/// to the queue's GPU stream; the *stream* stalls until all started
+/// operations complete. Host-asynchronous (§III-B2 item 3).
+pub fn enqueue_wait(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
+    let (call, enq) = hctx.with(|w, _| (w.cost.host_enqueue_call, w.cost.kernel_enqueue));
+    hctx.advance(call + enq);
+    hctx.with(|w, core| {
+        if w.queues[queue].freed {
+            return Err(StError::QueueFreed(queue));
+        }
+        let q = &w.queues[queue];
+        let op = StreamOp::WaitValue64 {
+            cell: q.comp_ctr,
+            threshold: q.started_total,
+            flavor: q.flavor,
+        };
+        let sid = q.stream;
+        gpu::enqueue(w, core, sid, op);
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,384 @@
+//! ST extension tests: the paper's §III semantics.
+
+use super::*;
+use crate::coordinator::{build_world, run_cluster};
+use crate::costmodel::presets;
+use crate::gpu::{host_enqueue, stream_synchronize, KernelPayload, KernelSpec};
+use crate::world::{BufId, Topology, World};
+
+fn cost() -> crate::costmodel::CostModel {
+    let mut c = presets::frontier_like();
+    c.jitter_sigma = 0.0;
+    c
+}
+
+fn fill_kernel(buf: BufId, val: f32) -> StreamOp {
+    StreamOp::Kernel(KernelSpec {
+        name: format!("fill{val}"),
+        flops: 1000,
+        bytes: 1000,
+        payload: KernelPayload::Fn(Box::new(move |w, _| w.bufs.get_mut(buf).fill(val))),
+    })
+}
+
+/// Create a stream + queue for `rank` from inside a host actor.
+fn make_queue(ctx: &mut crate::sim::HostCtx<World>, rank: usize, flavor: MemOpFlavor) -> (StreamId, usize) {
+    let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+    let q = create_queue(ctx, rank, sid, flavor);
+    (sid, q)
+}
+
+/// The paper's core scenario (Fig. 2): kernel K1, triggered send, wait,
+/// kernel K2 — all driven by the GPU CP, host never blocks on comm.
+#[test]
+fn st_send_recv_inter_node_end_to_end() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let src = w.bufs.alloc(64);
+    let dst = w.bufs.alloc(64);
+    let out = run_cluster(w, 1, move |rank, ctx| {
+        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        if rank == 0 {
+            // K1 writes the data that the ST send must pick up.
+            host_enqueue(ctx, sid, fill_kernel(src, 3.25));
+            enqueue_send(ctx, q, 1, BufSlice::whole(src, 64), 11, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap();
+            enqueue_wait(ctx, q).unwrap();
+            stream_synchronize(ctx, sid);
+        } else {
+            enqueue_recv(ctx, q, 0, BufSlice::whole(dst, 64), 11, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap();
+            enqueue_wait(ctx, q).unwrap();
+            // K2 consumes the received data, in stream order after the wait.
+            host_enqueue(
+                ctx,
+                sid,
+                StreamOp::Kernel(KernelSpec {
+                    name: "consume".into(),
+                    flops: 0,
+                    bytes: 0,
+                    payload: KernelPayload::Fn(Box::new(move |w, _| {
+                        assert_eq!(w.bufs.get(dst), &[3.25; 64], "K2 must see received data");
+                    })),
+                }),
+            );
+            stream_synchronize(ctx, sid);
+        }
+        free_queue(ctx, q).unwrap();
+    })
+    .unwrap();
+    assert_eq!(out.world.metrics.dwq_triggered, 1, "send offloaded to NIC DWQ");
+    assert!(out.world.metrics.progress_ops > 0, "recv emulated by progress thread");
+}
+
+/// Fig. 7: one start triggers a batch of four sends.
+#[test]
+fn batched_start_triggers_all_enqueued_ops() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let srcs: Vec<BufId> = (0..4).map(|i| w.bufs.alloc_init(vec![i as f32; 32])).collect();
+    let dsts: Vec<BufId> = (0..4).map(|_| w.bufs.alloc(32)).collect();
+    let srcs2 = srcs.clone();
+    let dsts2 = dsts.clone();
+    let tags = [123, 126, 125, 124];
+    let out = run_cluster(w, 1, move |rank, ctx| {
+        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        if rank == 0 {
+            for (i, &b) in srcs2.iter().enumerate() {
+                enqueue_send(ctx, q, 1, BufSlice::whole(b, 32), tags[i], crate::mpi::COMM_WORLD_DUP)
+                    .unwrap();
+            }
+            enqueue_start(ctx, q).unwrap(); // single start for all four
+            enqueue_wait(ctx, q).unwrap();
+        } else {
+            for (i, &b) in dsts2.iter().enumerate() {
+                enqueue_recv(ctx, q, 0, BufSlice::whole(b, 32), tags[i], crate::mpi::COMM_WORLD_DUP)
+                    .unwrap();
+            }
+            enqueue_start(ctx, q).unwrap();
+            enqueue_wait(ctx, q).unwrap();
+        }
+        stream_synchronize(ctx, sid);
+        if rank == 1 {
+            let d = dsts2.clone();
+            ctx.with(move |w, _| {
+                for (i, &b) in d.iter().enumerate() {
+                    assert_eq!(w.bufs.get(b), &[i as f32; 32], "batched msg {i}");
+                }
+            });
+        }
+        free_queue(ctx, q).unwrap();
+    })
+    .unwrap();
+    assert_eq!(out.world.metrics.dwq_triggered, 4);
+    // Exactly one trigger write + one completion wait per rank => 4 memops
+    // total (2 ranks x (start + wait)).
+    assert_eq!(out.world.metrics.memops_executed, 4);
+}
+
+/// §III-B2 item 2: buffers may be mutated by kernels enqueued before the
+/// start; the send must transmit the post-kernel contents.
+#[test]
+fn deferred_send_sees_kernel_writes() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let src = w.bufs.alloc_init(vec![-1.0; 16]);
+    let dst = w.bufs.alloc(16);
+    run_cluster(w, 1, move |rank, ctx| {
+        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        if rank == 0 {
+            // Enqueue the send FIRST, kernel writes after host-enqueue but
+            // before the start in stream order.
+            enqueue_send(ctx, q, 1, BufSlice::whole(src, 16), 1, crate::mpi::COMM_WORLD).unwrap();
+            host_enqueue(ctx, sid, fill_kernel(src, 9.5));
+            enqueue_start(ctx, q).unwrap();
+            enqueue_wait(ctx, q).unwrap();
+        } else {
+            enqueue_recv(ctx, q, 0, BufSlice::whole(dst, 16), 1, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap();
+            enqueue_wait(ctx, q).unwrap();
+        }
+        stream_synchronize(ctx, sid);
+        if rank == 1 {
+            ctx.with(move |w, _| assert_eq!(w.bufs.get(dst), &[9.5; 16]));
+        }
+        free_queue(ctx, q).unwrap();
+    })
+    .unwrap();
+}
+
+/// Intra-node ST traffic must flow through the progress thread (§IV-B).
+#[test]
+fn intra_node_st_uses_progress_thread() {
+    let mut w = build_world(cost(), Topology::new(1, 2));
+    let src = w.bufs.alloc_init(vec![6.0; 32]);
+    let dst = w.bufs.alloc(32);
+    let out = run_cluster(w, 1, move |rank, ctx| {
+        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        if rank == 0 {
+            enqueue_send(ctx, q, 1, BufSlice::whole(src, 32), 2, crate::mpi::COMM_WORLD).unwrap();
+        } else {
+            enqueue_recv(ctx, q, 0, BufSlice::whole(dst, 32), 2, crate::mpi::COMM_WORLD).unwrap();
+        }
+        enqueue_start(ctx, q).unwrap();
+        enqueue_wait(ctx, q).unwrap();
+        stream_synchronize(ctx, sid);
+        if rank == 1 {
+            ctx.with(move |w, _| assert_eq!(w.bufs.get(dst), &[6.0; 32]));
+        }
+        free_queue(ctx, q).unwrap();
+    })
+    .unwrap();
+    assert_eq!(out.world.metrics.dwq_triggered, 0, "no NIC offload intra-node");
+    assert!(
+        out.world.metrics.progress_ops >= 2,
+        "both the emulated send and recv go through the progress thread"
+    );
+    assert_eq!(out.world.metrics.intra_sends, 1);
+}
+
+/// The wait op stalls the *stream*: a kernel enqueued after
+/// `enqueue_wait` must not run before the data has landed, but the host
+/// returns immediately (non-blocking semantics, §III-B2).
+#[test]
+fn enqueue_wait_is_host_asynchronous() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let src = w.bufs.alloc_init(vec![1.0; 8]);
+    let dst = w.bufs.alloc(8);
+    let host_return_time = std::sync::Arc::new(std::sync::Mutex::new(0u64));
+    let hrt = host_return_time.clone();
+    let out = run_cluster(w, 1, move |rank, ctx| {
+        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        if rank == 0 {
+            // Rank 0 delays its send by doing host work first.
+            ctx.advance(300_000);
+            enqueue_send(ctx, q, 1, BufSlice::whole(src, 8), 3, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap();
+            enqueue_wait(ctx, q).unwrap();
+            stream_synchronize(ctx, sid);
+        } else {
+            enqueue_recv(ctx, q, 0, BufSlice::whole(dst, 8), 3, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap();
+            enqueue_wait(ctx, q).unwrap();
+            // All four calls return without blocking on the (still
+            // far-away) sender:
+            *hrt.lock().unwrap() = ctx.now();
+            stream_synchronize(ctx, sid); // ... this one blocks.
+            free_queue(ctx, q).unwrap();
+            return;
+        }
+        free_queue(ctx, q).unwrap();
+    })
+    .unwrap();
+    let t = *host_return_time.lock().unwrap();
+    assert!(
+        t < 300_000,
+        "enqueue calls must return immediately (host returned at {t})"
+    );
+    assert!(out.rank_finish[1] > 300_000, "but the stream finished after the send");
+}
+
+#[test]
+fn free_busy_queue_is_an_error() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let src = w.bufs.alloc_init(vec![1.0; 8]);
+    let dst = w.bufs.alloc(8);
+    run_cluster(w, 1, move |rank, ctx| {
+        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        if rank == 0 {
+            enqueue_send(ctx, q, 1, BufSlice::whole(src, 8), 1, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap();
+            // Freeing before completion must fail with QueueBusy.
+            match free_queue(ctx, q) {
+                Err(StError::QueueBusy(n)) => assert_eq!(n, 1),
+                other => panic!("expected QueueBusy, got {other:?}"),
+            }
+            enqueue_wait(ctx, q).unwrap();
+            stream_synchronize(ctx, sid);
+            free_queue(ctx, q).unwrap();
+            // Double-free reports QueueFreed.
+            assert_eq!(free_queue(ctx, q), Err(StError::QueueFreed(q)));
+        } else {
+            enqueue_recv(ctx, q, 0, BufSlice::whole(dst, 8), 1, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap();
+            enqueue_wait(ctx, q).unwrap();
+            stream_synchronize(ctx, sid);
+            free_queue(ctx, q).unwrap();
+        }
+    })
+    .unwrap();
+}
+
+#[test]
+fn wildcards_rejected() {
+    assert_eq!(
+        validate_selectors(SrcSel::Any, TagSel::Tag(1)),
+        Err(StError::WildcardUnsupported)
+    );
+    assert_eq!(
+        validate_selectors(SrcSel::Rank(0), TagSel::Any),
+        Err(StError::WildcardUnsupported)
+    );
+    assert!(validate_selectors(SrcSel::Rank(0), TagSel::Tag(1)).is_ok());
+}
+
+/// §III-D: MPIX_Enqueue_send interoperates with standard MPI_Irecv.
+#[test]
+fn st_send_matches_standard_irecv() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let src = w.bufs.alloc_init(vec![4.5; 16]);
+    let dst = w.bufs.alloc(16);
+    run_cluster(w, 1, move |rank, ctx| {
+        if rank == 0 {
+            let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+            enqueue_send(ctx, q, 1, BufSlice::whole(src, 16), 8, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap();
+            enqueue_wait(ctx, q).unwrap();
+            stream_synchronize(ctx, sid);
+            free_queue(ctx, q).unwrap();
+        } else {
+            // Plain MPI_Irecv + MPI_Wait on the receiving side.
+            let req = crate::mpi::irecv(
+                ctx,
+                1,
+                SrcSel::Rank(0),
+                TagSel::Tag(8),
+                crate::mpi::COMM_WORLD,
+                BufSlice::whole(dst, 16),
+            );
+            crate::mpi::wait(ctx, req);
+            ctx.with(move |w, _| assert_eq!(w.bufs.get(dst), &[4.5; 16]));
+        }
+    })
+    .unwrap();
+}
+
+/// Host-side MPI_Wait on an ST request (§III-B2 item 4).
+#[test]
+fn host_wait_on_st_request() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let src = w.bufs.alloc_init(vec![2.0; 8]);
+    let dst = w.bufs.alloc(8);
+    run_cluster(w, 1, move |rank, ctx| {
+        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        if rank == 0 {
+            let req =
+                enqueue_send(ctx, q, 1, BufSlice::whole(src, 8), 4, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap();
+            crate::mpi::wait(ctx, req); // host blocks until the ST send completes
+        } else {
+            let req =
+                enqueue_recv(ctx, q, 0, BufSlice::whole(dst, 8), 4, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap();
+            crate::mpi::wait(ctx, req);
+            ctx.with(move |w, _| assert_eq!(w.bufs.get(dst), &[2.0; 8]));
+        }
+        let _ = sid;
+    })
+    .unwrap();
+}
+
+/// Two epochs: ops after a start belong to the next trigger epoch (Fig 6:
+/// T1 triggers S1/R1, T2 triggers S2/R2).
+#[test]
+fn multiple_start_epochs() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let s1 = w.bufs.alloc_init(vec![1.0; 8]);
+    let s2 = w.bufs.alloc_init(vec![2.0; 8]);
+    let d1 = w.bufs.alloc(8);
+    let d2 = w.bufs.alloc(8);
+    run_cluster(w, 1, move |rank, ctx| {
+        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        if rank == 0 {
+            enqueue_send(ctx, q, 1, BufSlice::whole(s1, 8), 1, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap(); // T1
+            enqueue_send(ctx, q, 1, BufSlice::whole(s2, 8), 2, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap(); // T2
+            enqueue_wait(ctx, q).unwrap(); // W: waits for both epochs
+        } else {
+            enqueue_recv(ctx, q, 0, BufSlice::whole(d1, 8), 1, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap();
+            enqueue_recv(ctx, q, 0, BufSlice::whole(d2, 8), 2, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap();
+            enqueue_wait(ctx, q).unwrap();
+        }
+        stream_synchronize(ctx, sid);
+        if rank == 1 {
+            ctx.with(move |w, _| {
+                assert_eq!(w.bufs.get(d1), &[1.0; 8]);
+                assert_eq!(w.bufs.get(d2), &[2.0; 8]);
+            });
+        }
+        free_queue(ctx, q).unwrap();
+    })
+    .unwrap();
+}
+
+/// The shader-flavored queue completes faster than the HIP one on an
+/// identical workload (the Fig 12 mechanism).
+#[test]
+fn shader_flavor_is_faster() {
+    fn run_flavor(flavor: MemOpFlavor) -> u64 {
+        let mut w = build_world(cost(), Topology::new(2, 1));
+        let src = w.bufs.alloc_init(vec![1.0; 64]);
+        let dst = w.bufs.alloc(64);
+        let out = run_cluster(w, 1, move |rank, ctx| {
+            let (sid, q) = make_queue(ctx, rank, flavor);
+            for e in 0..4 {
+                if rank == 0 {
+                    enqueue_send(ctx, q, 1, BufSlice::whole(src, 64), e, crate::mpi::COMM_WORLD)
+                        .unwrap();
+                } else {
+                    enqueue_recv(ctx, q, 0, BufSlice::whole(dst, 64), e, crate::mpi::COMM_WORLD)
+                        .unwrap();
+                }
+                enqueue_start(ctx, q).unwrap();
+                enqueue_wait(ctx, q).unwrap();
+            }
+            stream_synchronize(ctx, sid);
+            free_queue(ctx, q).unwrap();
+        })
+        .unwrap();
+        out.makespan
+    }
+    let hip = run_flavor(MemOpFlavor::Hip);
+    let shader = run_flavor(MemOpFlavor::Shader);
+    assert!(shader < hip, "shader {shader} must beat hip {hip}");
+}

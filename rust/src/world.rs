@@ -1,0 +1,253 @@
+//! The simulation world: all device, NIC, and MPI state, plus topology.
+//!
+//! `World` is the `W` type threaded through the [`crate::sim`] engine;
+//! every event callback and host primitive operates on `(&mut World,
+//! &mut Core<World>)`.
+
+use std::sync::Arc;
+
+use crate::costmodel::CostModel;
+use crate::gpu::Gpu;
+use crate::mpi::{Proc, Req};
+use crate::nic::Nic;
+use crate::runtime::Runtime;
+use crate::sim::{CellId, Core};
+use crate::stx::MpixQueue;
+
+/// Shorthand for the engine core specialized to our world.
+pub type Ctx = Core<World>;
+/// Shorthand for a scheduled callback.
+pub type Callback = Box<dyn FnOnce(&mut World, &mut Ctx) + Send>;
+
+/// Whether GPU kernels execute real numerics (via AOT-compiled XLA
+/// programs) or only charge modeled time (buffers untouched).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeMode {
+    /// Kernels run their real payload function (HLO via PJRT, or a
+    /// built-in rust closure) — used by correctness runs and examples.
+    Real,
+    /// Kernels only charge time — used by large timing sweeps where the
+    /// numerics are already validated elsewhere.
+    Modeled,
+}
+
+/// Device buffer handle (index into the global pool).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BufId(pub usize);
+
+/// Pool of simulated device buffers (f32 payloads).
+#[derive(Default)]
+pub struct BufPool {
+    bufs: Vec<Vec<f32>>,
+}
+
+impl BufPool {
+    pub fn alloc(&mut self, len: usize) -> BufId {
+        let id = BufId(self.bufs.len());
+        self.bufs.push(vec![0.0; len]);
+        id
+    }
+
+    pub fn alloc_init(&mut self, data: Vec<f32>) -> BufId {
+        let id = BufId(self.bufs.len());
+        self.bufs.push(data);
+        id
+    }
+
+    #[inline]
+    pub fn get(&self, id: BufId) -> &[f32] {
+        &self.bufs[id.0]
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, id: BufId) -> &mut Vec<f32> {
+        &mut self.bufs[id.0]
+    }
+
+    /// Copy `len` elements between buffers (simulated DMA payload move).
+    pub fn copy(&mut self, src: BufId, src_off: usize, dst: BufId, dst_off: usize, len: usize) {
+        if src.0 == dst.0 {
+            let b = &mut self.bufs[src.0];
+            b.copy_within(src_off..src_off + len, dst_off);
+            return;
+        }
+        // Split-borrow the two buffers.
+        let (a, b) = if src.0 < dst.0 {
+            let (lo, hi) = self.bufs.split_at_mut(dst.0);
+            (&lo[src.0], &mut hi[0])
+        } else {
+            let (lo, hi) = self.bufs.split_at_mut(src.0);
+            (&hi[0] as &Vec<f32>, &mut lo[dst.0])
+        };
+        b[dst_off..dst_off + len].copy_from_slice(&a[src_off..src_off + len]);
+    }
+
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+}
+
+/// Static cluster topology: which node/GPU/NIC each MPI rank uses.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub nodes: usize,
+    pub ranks_per_node: usize,
+}
+
+impl Topology {
+    pub fn new(nodes: usize, ranks_per_node: usize) -> Self {
+        Self { nodes, ranks_per_node }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.nodes * self.ranks_per_node
+    }
+
+    /// Block rank placement, as the paper's runs use (ranks 0..rpn on
+    /// node 0, etc.).
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.ranks_per_node
+    }
+
+    /// One-to-one rank->GPU mapping within the node (paper §V-C).
+    pub fn gpu_of(&self, rank: usize) -> usize {
+        rank // global GPU index == rank (one GPU per rank)
+    }
+
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+}
+
+/// Aggregate counters for reporting and assertions.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub eager_sends: u64,
+    pub rendezvous_sends: u64,
+    pub intra_sends: u64,
+    pub bytes_wire: u64,
+    pub bytes_ipc: u64,
+    pub kernels_launched: u64,
+    pub stream_syncs: u64,
+    pub memops_executed: u64,
+    pub dwq_triggered: u64,
+    pub progress_ops: u64,
+    pub unexpected_msgs: u64,
+    pub matched_posted: u64,
+}
+
+/// The complete simulated cluster.
+pub struct World {
+    pub cost: CostModel,
+    pub topo: Topology,
+    pub bufs: BufPool,
+    pub gpus: Vec<Gpu>,
+    pub nics: Vec<Nic>,
+    pub procs: Vec<Proc>,
+    pub queues: Vec<MpixQueue>,
+    pub requests: Vec<Req>,
+    pub compute: ComputeMode,
+    pub runtime: Option<Arc<Runtime>>,
+    pub metrics: Metrics,
+    /// Virtual finish time of each rank's program (filled by the
+    /// coordinator's run loop).
+    pub rank_finish: Vec<u64>,
+}
+
+impl World {
+    /// True when kernels and data paths move real payloads (vs charging
+    /// modeled time only — Modeled worlds allocate zero-length buffers).
+    pub fn is_real(&self) -> bool {
+        self.compute == ComputeMode::Real
+    }
+
+    /// Allocate a device buffer: real backing store in Real mode, a
+    /// zero-length placeholder in Modeled mode (timing sweeps at
+    /// production block sizes would otherwise need tens of GB).
+    pub fn alloc_device(&mut self, len: usize) -> BufId {
+        if self.is_real() {
+            self.bufs.alloc(len)
+        } else {
+            self.bufs.alloc(0)
+        }
+    }
+
+    /// Build an empty world; devices/procs are wired by the coordinator.
+    pub fn new(cost: CostModel, topo: Topology) -> Self {
+        Self {
+            cost,
+            topo,
+            bufs: BufPool::default(),
+            gpus: Vec::new(),
+            nics: Vec::new(),
+            procs: Vec::new(),
+            queues: Vec::new(),
+            requests: Vec::new(),
+            compute: ComputeMode::Real,
+            runtime: None,
+            metrics: Metrics::default(),
+            rank_finish: Vec::new(),
+        }
+    }
+
+    /// Allocate a fresh MPI request; returns its id.
+    pub fn new_request(&mut self, core: &mut Ctx, what: &str) -> usize {
+        let done = core.new_cell(format!("req.{}.{}", self.requests.len(), what), 0);
+        self.requests.push(Req { done, cancelled: false });
+        self.requests.len() - 1
+    }
+
+    pub fn request_done_cell(&self, req: usize) -> CellId {
+        self.requests[req].done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bufpool_copy_between_buffers() {
+        let mut p = BufPool::default();
+        let a = p.alloc_init(vec![1.0, 2.0, 3.0, 4.0]);
+        let b = p.alloc(4);
+        p.copy(a, 1, b, 0, 2);
+        assert_eq!(p.get(b), &[2.0, 3.0, 0.0, 0.0]);
+        // reverse direction (src index > dst index)
+        p.copy(b, 0, a, 2, 2);
+        assert_eq!(p.get(a), &[1.0, 2.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn bufpool_copy_within_same_buffer() {
+        let mut p = BufPool::default();
+        let a = p.alloc_init(vec![1.0, 2.0, 3.0, 4.0]);
+        p.copy(a, 0, a, 2, 2);
+        assert_eq!(p.get(a), &[1.0, 2.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn topology_block_placement() {
+        let t = Topology::new(8, 8);
+        assert_eq!(t.world_size(), 64);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(7), 0);
+        assert_eq!(t.node_of(8), 1);
+        assert_eq!(t.node_of(63), 7);
+        assert!(t.same_node(0, 7));
+        assert!(!t.same_node(7, 8));
+    }
+
+    #[test]
+    fn topology_one_rank_per_node() {
+        let t = Topology::new(8, 1);
+        assert_eq!(t.world_size(), 8);
+        for r in 0..8 {
+            assert_eq!(t.node_of(r), r);
+        }
+    }
+}

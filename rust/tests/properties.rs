@@ -1,0 +1,234 @@
+//! Property-based tests (hand-rolled, seeded — proptest is unavailable
+//! offline): randomized workloads asserting system invariants.
+
+use stmpi::coordinator::{build_world, run_cluster};
+use stmpi::costmodel::{presets, MemOpFlavor};
+use stmpi::faces::domain::ProcGrid;
+use stmpi::faces::{run_faces, FacesConfig, Variant};
+use stmpi::gpu::{self, stream_synchronize};
+use stmpi::mpi::{irecv, isend, waitall, SrcSel, TagSel, COMM_WORLD};
+use stmpi::nic::BufSlice;
+use stmpi::sim::rng::SplitMix64;
+use stmpi::stx;
+use stmpi::world::{BufId, ComputeMode, Topology};
+
+fn cost() -> stmpi::costmodel::CostModel {
+    let mut c = presets::frontier_like();
+    c.jitter_sigma = 0.0;
+    c
+}
+
+/// Random all-to-all message storms: every payload must arrive intact and
+/// per-(src,dst,tag) streams must preserve FIFO order.
+#[test]
+fn prop_random_message_storm_no_loss_no_reorder() {
+    for case in 0..8u64 {
+        let mut rng = SplitMix64::new(1000 + case);
+        let nodes = 1 + (rng.below(3) as usize);
+        let rpn = 1 + (rng.below(3) as usize);
+        let n = nodes * rpn;
+        if n < 2 {
+            continue;
+        }
+        // Message plan: for each (src,dst) pair, a random count 0..4 of
+        // messages on a shared tag; payload encodes (src, seq).
+        let mut counts = vec![vec![0usize; n]; n];
+        for s in 0..n {
+            for d in 0..n {
+                if s != d {
+                    counts[s][d] = rng.below(4) as usize;
+                }
+            }
+        }
+        let mut w = build_world(cost(), Topology::new(nodes, rpn));
+        let elems = 8;
+        // Pre-allocate send/recv buffers.
+        let mut sendbufs = vec![vec![Vec::new(); n]; n];
+        let mut recvbufs = vec![vec![Vec::new(); n]; n];
+        for s in 0..n {
+            for d in 0..n {
+                for k in 0..counts[s][d] {
+                    let val = (s * 1000 + k) as f32;
+                    sendbufs[s][d].push(w.bufs.alloc_init(vec![val; elems]));
+                    recvbufs[s][d].push(w.bufs.alloc(elems));
+                }
+            }
+        }
+        let counts2 = counts.clone();
+        let sb = sendbufs.clone();
+        let rb = recvbufs.clone();
+        let out = run_cluster(w, case, move |rank, ctx| {
+            let mut reqs = Vec::new();
+            // Post all receives first (FIFO per (src,tag) is the invariant).
+            for s in 0..n {
+                for k in 0..counts2[s][rank] {
+                    reqs.push(irecv(
+                        ctx,
+                        rank,
+                        SrcSel::Rank(s),
+                        TagSel::Tag(7),
+                        COMM_WORLD,
+                        BufSlice::whole(rb[s][rank][k], elems),
+                    ));
+                }
+            }
+            for d in 0..n {
+                for k in 0..counts2[rank][d] {
+                    reqs.push(isend(ctx, rank, d, BufSlice::whole(sb[rank][d][k], elems), 7, COMM_WORLD));
+                }
+            }
+            waitall(ctx, &reqs);
+        })
+        .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        // Verify FIFO-per-pair delivery: k-th recv from s holds k-th send.
+        for s in 0..n {
+            for d in 0..n {
+                for k in 0..counts[s][d] {
+                    let got = out.world.bufs.get(recvbufs[s][d][k]);
+                    let want = (s * 1000 + k) as f32;
+                    assert!(
+                        got.iter().all(|&x| x == want),
+                        "case {case}: msg {s}->{d}#{k}: got {got:?}, want {want}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// ST queues: completion counters always converge to the started totals,
+/// regardless of how ops are batched into epochs.
+#[test]
+fn prop_st_completion_accounting() {
+    for case in 0..6u64 {
+        let mut rng = SplitMix64::new(500 + case);
+        let nodes = 2;
+        let n = 2;
+        let n_epochs = 1 + rng.below(4) as usize;
+        let per_epoch: Vec<usize> = (0..n_epochs).map(|_| 1 + rng.below(3) as usize).collect();
+        let total: usize = per_epoch.iter().sum();
+        let mut w = build_world(cost(), Topology::new(nodes, 1));
+        let elems = 16;
+        let srcs: Vec<BufId> = (0..total).map(|i| w.bufs.alloc_init(vec![i as f32; elems])).collect();
+        let dsts: Vec<BufId> = (0..total).map(|_| w.bufs.alloc(elems)).collect();
+        let pe = per_epoch.clone();
+        let (s2, d2) = (srcs.clone(), dsts.clone());
+        let out = run_cluster(w, case, move |rank, ctx| {
+            let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+            let q = stx::create_queue(ctx, rank, sid, MemOpFlavor::Hip);
+            let mut idx = 0;
+            for &cnt in &pe {
+                for _ in 0..cnt {
+                    if rank == 0 {
+                        stx::enqueue_send(ctx, q, 1, BufSlice::whole(s2[idx], elems), idx as i32, COMM_WORLD)
+                            .unwrap();
+                    } else {
+                        stx::enqueue_recv(ctx, q, 0, BufSlice::whole(d2[idx], elems), idx as i32, COMM_WORLD)
+                            .unwrap();
+                    }
+                    idx += 1;
+                }
+                stx::enqueue_start(ctx, q).unwrap();
+            }
+            stx::enqueue_wait(ctx, q).unwrap();
+            stream_synchronize(ctx, sid);
+            // free_queue succeeding proves comp_ctr == started_total.
+            stx::free_queue(ctx, q).unwrap();
+        })
+        .unwrap_or_else(|e| panic!("case {case} ({per_epoch:?}): {e}"));
+        for i in 0..total {
+            assert_eq!(
+                out.world.bufs.get(dsts[i]),
+                &vec![i as f32; elems][..],
+                "case {case}: ST payload {i}"
+            );
+        }
+    }
+}
+
+/// Engine determinism: identical seeds yield identical virtual makespans
+/// for a randomized faces topology; different seeds with jitter differ.
+#[test]
+fn prop_determinism_across_topologies() {
+    for case in 0..5u64 {
+        let mut rng = SplitMix64::new(42 + case);
+        let px = 1 + rng.below(3) as usize;
+        let py = 1 + rng.below(2) as usize;
+        let pz = 1 + rng.below(2) as usize;
+        let ranks = px * py * pz;
+        // Pick nodes/rpn splitting ranks.
+        let rpn = if ranks % 2 == 0 { 2 } else { 1 };
+        let nodes = ranks / rpn;
+        let mut cfg = FacesConfig::smoke(nodes, rpn, (px, py, pz));
+        cfg.cost = cost();
+        cfg.variant = if rng.below(2) == 0 { Variant::Baseline } else { Variant::St };
+        let a = run_faces(&cfg).unwrap();
+        let b = run_faces(&cfg).unwrap();
+        assert_eq!(a.time_ns, b.time_ns, "case {case} not deterministic");
+        assert_eq!(a.rank_time, b.rank_time);
+    }
+}
+
+/// Message conservation: every neighbor pair exchanges exactly
+/// outer*middle*inner messages in each direction, for both variants.
+#[test]
+fn prop_faces_message_conservation() {
+    for case in 0..4u64 {
+        let mut rng = SplitMix64::new(7 + case);
+        let dims = [(4, 1, 1), (2, 2, 1), (2, 2, 2), (3, 2, 1)][case as usize % 4];
+        let ranks = dims.0 * dims.1 * dims.2;
+        let rpn = if ranks % 2 == 0 { 2 } else { 1 };
+        let nodes = ranks / rpn;
+        let grid = ProcGrid::new(dims.0, dims.1, dims.2);
+        let degree_sum: usize = (0..ranks).map(|r| grid.neighbors(r).len()).sum();
+        for variant in [Variant::Baseline, Variant::St] {
+            let mut cfg = FacesConfig::smoke(nodes, rpn, dims);
+            cfg.cost = cost();
+            cfg.variant = variant;
+            cfg.inner = 1 + rng.below(3) as usize;
+            let r = run_faces(&cfg).unwrap();
+            let iters = (cfg.outer * cfg.middle * cfg.inner) as u64;
+            let total = r.metrics.eager_sends + r.metrics.rendezvous_sends + r.metrics.intra_sends;
+            assert_eq!(
+                total,
+                degree_sum as u64 * iters,
+                "case {case} {variant:?}: message count"
+            );
+            assert_eq!(r.metrics.matched_posted + r.metrics.unexpected_msgs >= total, true);
+        }
+    }
+}
+
+/// Baseline and ST must produce bit-identical per-message traffic volume
+/// (the strategy changes WHO drives the control path, not WHAT moves).
+#[test]
+fn prop_variants_move_identical_bytes() {
+    let mk = |variant| {
+        let mut cfg = FacesConfig::smoke(2, 2, (4, 1, 1));
+        cfg.cost = cost();
+        cfg.variant = variant;
+        run_faces(&cfg).unwrap().metrics
+    };
+    let b = mk(Variant::Baseline);
+    let s = mk(Variant::St);
+    assert_eq!(b.bytes_wire, s.bytes_wire);
+    assert_eq!(
+        b.eager_sends + b.rendezvous_sends + b.intra_sends,
+        s.eager_sends + s.rendezvous_sends + s.intra_sends
+    );
+}
+
+/// Modeled and Real compute modes must charge identical virtual time
+/// (numerics cannot affect the clock).
+#[test]
+fn prop_compute_mode_does_not_change_timing() {
+    let mut cfg = FacesConfig::smoke(2, 1, (2, 1, 1));
+    cfg.cost = cost();
+    cfg.g = 16;
+    cfg.variant = Variant::St;
+    cfg.compute = ComputeMode::Modeled;
+    let modeled = run_faces(&cfg).unwrap();
+    cfg.compute = ComputeMode::Real;
+    let real = run_faces(&cfg).unwrap();
+    assert_eq!(modeled.time_ns, real.time_ns, "virtual time must not depend on numerics");
+}

@@ -1,0 +1,119 @@
+//! Integration: AOT artifacts load through PJRT and produce numerics that
+//! match the rust CPU reference (the same math as python's ref.py).
+
+use stmpi::runtime::Runtime;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Runtime {
+    Runtime::load(artifacts_dir()).expect("run `make artifacts` before cargo test")
+}
+
+/// Deterministic pseudo-random field (same for every test).
+fn field(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed.wrapping_add(0x9E3779B97F4A7C15);
+    (0..n)
+        .map(|_| {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            let v = (s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f64;
+            (v / (1u64 << 24) as f64 - 0.5) as f32
+        })
+        .collect()
+}
+
+#[test]
+fn manifest_lists_all_entries() {
+    let rt = runtime();
+    for e in [
+        "faces_pack_g16",
+        "faces_ax_g16",
+        "faces_unpack_g16",
+        "faces_pack_g32",
+        "faces_ax_g32",
+        "faces_unpack_g32",
+        "train_init",
+        "train_grad",
+        "sgd_apply",
+    ] {
+        assert!(rt.has_entry(e), "missing artifact entry '{e}'");
+    }
+}
+
+#[test]
+fn pack_matches_rust_reference() {
+    let rt = runtime();
+    let g = 16usize;
+    let u = field(g * g * g, 1);
+    let out = rt.execute_f32("faces_pack_g16", &[u.clone()]).unwrap();
+    assert_eq!(out.len(), 3);
+    let (faces, edges, corners) = (&out[0], &out[1], &out[2]);
+    let refpack = stmpi::faces::reference::pack_ref(&u, g);
+    assert_eq!(faces, &refpack.0, "faces mismatch");
+    assert_eq!(edges, &refpack.1, "edges mismatch");
+    assert_eq!(corners, &refpack.2, "corners mismatch");
+}
+
+#[test]
+fn ax_matches_rust_reference() {
+    let rt = runtime();
+    let g = 16usize;
+    let u = field(g * g * g, 2);
+    let d = stmpi::faces::reference::deriv_matrix(8);
+    let out = rt.execute_f32("faces_ax_g16", &[u.clone(), d]).unwrap();
+    let want = stmpi::faces::reference::ax_grid_ref(&u, g);
+    let max_err = out[0]
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-4, "ax mismatch: max err {max_err}");
+}
+
+#[test]
+fn unpack_matches_rust_reference() {
+    let rt = runtime();
+    let g = 16usize;
+    let u = field(g * g * g, 3);
+    let f = field(6 * g * g, 4);
+    let e = field(12 * g, 5);
+    let c = field(8, 6);
+    let out = rt
+        .execute_f32("faces_unpack_g16", &[u.clone(), f.clone(), e.clone(), c.clone()])
+        .unwrap();
+    let want = stmpi::faces::reference::unpack_add_ref(&u, g, &f, &e, &c);
+    assert_eq!(out[0], want);
+}
+
+#[test]
+fn trainer_entries_execute() {
+    let rt = runtime();
+    let params = rt.execute_f32("train_init", &[]).unwrap();
+    let n = params[0].len();
+    assert!(n > 10_000, "param vector too small: {n}");
+    // One gradient step on a fixed batch reduces loss on that batch.
+    let meta = rt.entry_meta("train_grad").unwrap().clone();
+    let toks_elems = meta.inputs[1].elems();
+    let tokens: Vec<f32> = (0..toks_elems).map(|i| ((i * 7 + 3) % 32) as f32).collect();
+    let out1 = rt.execute_f32("train_grad", &[params[0].clone(), tokens.clone()]).unwrap();
+    let loss1 = out1[0][0];
+    let updated = rt
+        .execute_f32("sgd_apply", &[params[0].clone(), out1[1].clone()])
+        .unwrap();
+    let out2 = rt.execute_f32("train_grad", &[updated[0].clone(), tokens]).unwrap();
+    let loss2 = out2[0][0];
+    assert!(loss1.is_finite() && loss2.is_finite());
+    assert!(loss2 < loss1, "SGD step must reduce loss: {loss1} -> {loss2}");
+}
+
+#[test]
+fn wrong_arity_is_rejected() {
+    let rt = runtime();
+    assert!(rt.execute_f32("faces_ax_g16", &[]).is_err());
+    assert!(rt.execute_f32("nonexistent", &[]).is_err());
+    let bad = vec![vec![0.0f32; 7], vec![0.0f32; 64]];
+    assert!(rt.execute_f32("faces_ax_g16", &bad).is_err());
+}
