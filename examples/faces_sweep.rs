@@ -2,16 +2,27 @@
 //! (Figs 8-12; see DESIGN.md §Experiment index and EXPERIMENTS.md for
 //! the paper-vs-measured record).
 //!
+//! Each figure's (variant x seed) grid runs in parallel on the
+//! `sim::sweep` executor; per-run seeds keep the report byte-identical
+//! regardless of thread count. Set `STMPI_SWEEP_THREADS` to override the
+//! worker count.
+//!
 //! Run: `cargo run --release --example faces_sweep`
 
 use stmpi::faces::figures::{all_figures, run_figure, Loops, FIGURE_G, SEEDS};
+use stmpi::sim::sweep;
 
 fn main() {
-    println!("Faces figure sweep: 5 seeds per variant, G={FIGURE_G}, Modeled compute\n");
+    println!(
+        "Faces figure sweep: 5 seeds per variant, G={FIGURE_G}, Modeled compute, {} sweep threads\n",
+        sweep::default_threads()
+    );
+    let t_all = std::time::Instant::now();
     for spec in all_figures() {
         let t0 = std::time::Instant::now();
         let report = run_figure(&spec, &SEEDS, Loops::default(), FIGURE_G);
         println!("{}", report.render());
         println!("(wall {:.1}s)\n", t0.elapsed().as_secs_f64());
     }
+    println!("total wall {:.1}s", t_all.elapsed().as_secs_f64());
 }

@@ -7,10 +7,14 @@
 //!    batching feature) vs a start per send;
 //! 4. rank-order locality (paper §V-G item 3): neighbors packed on the
 //!    same node vs striped across nodes.
+//!
+//! Every sweep's simulations are independent; they run in parallel on the
+//! `sim::sweep` executor (per-config seeds keep results deterministic).
 
 use stmpi::costmodel::presets;
 use stmpi::faces::figures::FIGURE_G;
 use stmpi::faces::{run_faces, FacesConfig, Variant};
+use stmpi::sim::sweep;
 use stmpi::world::ComputeMode;
 
 fn cfg_base() -> FacesConfig {
@@ -34,21 +38,39 @@ fn pct(b: f64, v: f64) -> f64 {
     (v - b) / b * 100.0
 }
 
+/// Run every config in parallel; returns virtual times in ms, in order.
+fn run_all_ms(cfgs: &[FacesConfig]) -> Vec<f64> {
+    sweep::map_default(cfgs, |_, cfg| run_faces(cfg).unwrap().time_ns as f64 / 1e6)
+}
+
+/// Build the (baseline, st) config pair for one sweep point.
+fn pair(mut cfg: FacesConfig) -> [FacesConfig; 2] {
+    cfg.variant = Variant::Baseline;
+    let base = cfg.clone();
+    cfg.variant = Variant::St;
+    [base, cfg]
+}
+
 fn progress_cost_sweep() {
     println!("== ablation: progress-thread per-op cost (fig9 topology) ==");
     println!("{:>12} {:>12} {:>12} {:>10}", "per_op (us)", "base (ms)", "st (ms)", "delta");
-    for per_op in [500u64, 1_650, 3_300, 6_600, 13_200] {
-        let mut cfg = cfg_base();
-        cfg.nodes = 1;
-        cfg.ranks_per_node = 8;
-        cfg.cost.progress_per_op = per_op;
-        cfg.variant = Variant::Baseline;
-        let b = run_faces(&cfg).unwrap().time_ns as f64 / 1e6;
-        cfg.variant = Variant::St;
-        let s = run_faces(&cfg).unwrap().time_ns as f64 / 1e6;
+    let points: Vec<u64> = vec![500, 1_650, 3_300, 6_600, 13_200];
+    let cfgs: Vec<FacesConfig> = points
+        .iter()
+        .flat_map(|&per_op| {
+            let mut cfg = cfg_base();
+            cfg.nodes = 1;
+            cfg.ranks_per_node = 8;
+            cfg.cost.progress_per_op = per_op;
+            pair(cfg)
+        })
+        .collect();
+    let ms = run_all_ms(&cfgs);
+    for (i, per_op) in points.iter().enumerate() {
+        let (b, s) = (ms[2 * i], ms[2 * i + 1]);
         println!(
             "{:>12.1} {:>12.3} {:>12.3} {:>+9.1}%",
-            per_op as f64 / 1000.0,
+            *per_op as f64 / 1000.0,
             b,
             s,
             pct(b, s)
@@ -60,14 +82,19 @@ fn progress_cost_sweep() {
 fn rendezvous_threshold_sweep() {
     println!("== ablation: eager/rendezvous threshold (fig10 topology) ==");
     println!("{:>12} {:>12} {:>12} {:>10}", "thresh (KiB)", "base (ms)", "st (ms)", "delta");
-    for kib in [4usize, 16, 64, 256, 1024] {
-        let mut cfg = cfg_base();
-        cfg.cost.eager_threshold = kib * 1024;
-        cfg.variant = Variant::Baseline;
-        let b = run_faces(&cfg).unwrap().time_ns as f64 / 1e6;
-        cfg.variant = Variant::St;
-        let s = run_faces(&cfg).unwrap().time_ns as f64 / 1e6;
-        println!("{:>12} {:>12.3} {:>12.3} {:>+9.1}%", kib, b, s, pct(b, s));
+    let points: Vec<usize> = vec![4, 16, 64, 256, 1024];
+    let cfgs: Vec<FacesConfig> = points
+        .iter()
+        .flat_map(|&kib| {
+            let mut cfg = cfg_base();
+            cfg.cost.eager_threshold = kib * 1024;
+            pair(cfg)
+        })
+        .collect();
+    let ms = run_all_ms(&cfgs);
+    for (i, kib) in points.iter().enumerate() {
+        let (b, s) = (ms[2 * i], ms[2 * i + 1]);
+        println!("{kib:>12} {b:>12.3} {s:>12.3} {:>+9.1}%", pct(b, s));
     }
     println!();
 }
@@ -80,11 +107,11 @@ fn batching_sweep() {
     let mut cfg = cfg_base();
     cfg.dist = (2, 2, 2);
     cfg.variant = Variant::St;
-    let batched = run_faces(&cfg).unwrap().time_ns as f64 / 1e6;
     // Unbatched: memop costs scale with the number of messages.
     let mut cfg2 = cfg.clone();
     cfg2.cost.memop_hip *= 7;
-    let unbatched = run_faces(&cfg2).unwrap().time_ns as f64 / 1e6;
+    let ms = run_all_ms(&[cfg, cfg2]);
+    let (batched, unbatched) = (ms[0], ms[1]);
     println!("batched   (1 writeValue/iter): {batched:.3} ms");
     println!("unbatched (7 writeValues/iter ~ modeled): {unbatched:.3} ms");
     println!("batching saves {:.1}%\n", pct(unbatched, batched).abs());
@@ -95,21 +122,28 @@ fn locality_sweep() {
     // best; for ST the striped order can widen the ST advantage.
     println!("== ablation: rank-order locality (16 ranks, 1-D chain) ==");
     println!("{:>22} {:>12} {:>12} {:>10}", "placement", "base (ms)", "st (ms)", "delta");
-    for (name, nodes, rpn) in [("packed (2 nodes x 8)", 2usize, 8usize), ("spread (16 nodes x 1)", 16, 1)] {
-        let mut cfg = cfg_base();
-        cfg.dist = (16, 1, 1);
-        cfg.nodes = nodes;
-        cfg.ranks_per_node = rpn;
-        cfg.variant = Variant::Baseline;
-        let b = run_faces(&cfg).unwrap().time_ns as f64 / 1e6;
-        cfg.variant = Variant::St;
-        let s = run_faces(&cfg).unwrap().time_ns as f64 / 1e6;
+    let points: [(&str, usize, usize); 2] =
+        [("packed (2 nodes x 8)", 2, 8), ("spread (16 nodes x 1)", 16, 1)];
+    let cfgs: Vec<FacesConfig> = points
+        .iter()
+        .flat_map(|&(_, nodes, rpn)| {
+            let mut cfg = cfg_base();
+            cfg.dist = (16, 1, 1);
+            cfg.nodes = nodes;
+            cfg.ranks_per_node = rpn;
+            pair(cfg)
+        })
+        .collect();
+    let ms = run_all_ms(&cfgs);
+    for (i, (name, _, _)) in points.iter().enumerate() {
+        let (b, s) = (ms[2 * i], ms[2 * i + 1]);
         println!("{name:>22} {b:>12.3} {s:>12.3} {:>+9.1}%", pct(b, s));
     }
     println!();
 }
 
 fn main() {
+    println!("(sweeps run on {} threads)\n", sweep::default_threads());
     progress_cost_sweep();
     rendezvous_threshold_sweep();
     batching_sweep();

@@ -1,20 +1,182 @@
 //! Microbenchmarks of the simulation substrate itself (the L3 hot path):
-//! raw event throughput, cell-waiter dispatch, host context switches, and
-//! end-to-end Faces simulation rates. Used by the perf pass
-//! (EXPERIMENTS.md §Perf).
+//! raw event throughput, typed completion throughput, cell-waiter
+//! dispatch, host context switches, end-to-end Faces simulation rates,
+//! and parallel-sweep scaling. Used by the perf pass (EXPERIMENTS.md
+//! §Perf).
+//!
+//! # Before/after measurement
+//!
+//! The `legacy` module is a faithful replica of the PRE-refactor event
+//! core (PR 1): a `BinaryHeap` of boxed `FnOnce` events, zero-delay
+//! waiter firings through the heap, and an unordered waiter list scanned
+//! with `retain_mut` on every cell write. Benchmarking it in the same
+//! binary gives an honest before/after comparison on the same machine and
+//! toolchain; the acceptance bar for PR 1 is >= 3x on the event-chain and
+//! cell-waiter microbenchmarks.
+//!
+//! Results are printed and written to `BENCH_engine.json` at the repo
+//! root so the perf trajectory is tracked across PRs.
 
 use std::time::Instant;
 
 use stmpi::costmodel::presets;
-use stmpi::faces::figures::{fig8, FIGURE_G};
+use stmpi::faces::figures::{fig8, fig10, FIGURE_G};
 use stmpi::faces::{run_faces, FacesConfig, Variant};
-use stmpi::sim::{Core, Engine};
+use stmpi::sim::{sweep, CellId, Core, Engine};
 use stmpi::world::ComputeMode;
 
 struct NullWorld;
 
-fn bench_event_throughput() {
-    let n: u64 = 2_000_000;
+// ---------------------------------------------------------------------
+// Legacy core replica (the pre-refactor design), for before/after numbers
+// ---------------------------------------------------------------------
+
+mod legacy {
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+
+    pub type Cb = Box<dyn FnOnce(&mut Core)>;
+
+    struct Ev {
+        time: u64,
+        seq: u64,
+        cb: Cb,
+    }
+
+    impl PartialEq for Ev {
+        fn eq(&self, other: &Self) -> bool {
+            self.time == other.time && self.seq == other.seq
+        }
+    }
+    impl Eq for Ev {}
+    impl PartialOrd for Ev {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Ev {
+        fn cmp(&self, other: &Self) -> Ordering {
+            (other.time, other.seq).cmp(&(self.time, self.seq))
+        }
+    }
+
+    struct Waiter {
+        threshold: u64,
+        cb: Option<Cb>,
+        // The old core stored a per-waiter description string.
+        _desc: String,
+    }
+
+    struct Cell {
+        value: u64,
+        waiters: Vec<Waiter>,
+    }
+
+    /// Replica of the pre-refactor `sim::Core` hot path: every event is a
+    /// boxed closure in the heap; satisfied waiters are re-scheduled as
+    /// zero-delay heap events; every write scans all waiters.
+    pub struct Core {
+        now: u64,
+        seq: u64,
+        heap: BinaryHeap<Ev>,
+        cells: Vec<Cell>,
+        pub events: u64,
+    }
+
+    impl Core {
+        pub fn new() -> Self {
+            Self { now: 0, seq: 0, heap: BinaryHeap::new(), cells: Vec::new(), events: 0 }
+        }
+
+        pub fn schedule(&mut self, dt: u64, cb: Cb) {
+            self.seq += 1;
+            self.heap.push(Ev { time: self.now + dt, seq: self.seq, cb });
+        }
+
+        pub fn new_cell(&mut self, init: u64) -> usize {
+            self.cells.push(Cell { value: init, waiters: Vec::new() });
+            self.cells.len() - 1
+        }
+
+        pub fn add_cell(&mut self, id: usize, dv: u64) {
+            self.cells[id].value = self.cells[id].value.wrapping_add(dv);
+            self.fire_waiters(id);
+        }
+
+        pub fn on_ge(&mut self, id: usize, threshold: u64, desc: String, cb: Cb) {
+            if self.cells[id].value >= threshold {
+                self.schedule(0, cb);
+            } else {
+                self.cells[id].waiters.push(Waiter { threshold, cb: Some(cb), _desc: desc });
+            }
+        }
+
+        fn fire_waiters(&mut self, id: usize) {
+            let v = self.cells[id].value;
+            let waiters = &mut self.cells[id].waiters;
+            // The pre-refactor guard: a FULL scan on every write.
+            if waiters.iter().all(|w| w.threshold > v) {
+                return;
+            }
+            let mut fired = Vec::new();
+            waiters.retain_mut(|w| {
+                if w.threshold <= v {
+                    fired.push(w.cb.take().expect("waiter already fired"));
+                    false
+                } else {
+                    true
+                }
+            });
+            for cb in fired {
+                self.schedule(0, cb);
+            }
+        }
+
+        pub fn run(&mut self) {
+            while let Some(ev) = self.heap.pop() {
+                self.now = ev.time;
+                self.events += 1;
+                (ev.cb)(self);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Benchmarks
+// ---------------------------------------------------------------------
+
+const CHAIN_N: u64 = 1_000_000;
+const COMPLETION_ITERS: u64 = 40_000;
+const COMPLETION_FANOUT: u64 = 32;
+const SCAN_WAITERS: u64 = 64;
+const SCAN_WRITES: u64 = 400_000;
+const ROUNDS: u64 = 200_000;
+
+fn rate(count: u64, secs: f64) -> f64 {
+    if secs > 0.0 {
+        count as f64 / secs
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// Pre-refactor baseline: boxed-closure event chain through the heap.
+fn legacy_event_chain() -> f64 {
+    let mut core = legacy::Core::new();
+    fn chain(core: &mut legacy::Core, left: u64) {
+        if left > 0 {
+            core.schedule(1, Box::new(move |c| chain(c, left - 1)));
+        }
+    }
+    chain(&mut core, CHAIN_N);
+    let t0 = Instant::now();
+    core.run();
+    rate(core.events, t0.elapsed().as_secs_f64())
+}
+
+/// New core: identical boxed-closure chain (arena-backed callbacks).
+fn new_event_chain() -> f64 {
     let eng: Engine<NullWorld> = Engine::new(NullWorld, 1);
     eng.setup(|_, core| {
         fn chain(core: &mut Core<NullWorld>, left: u64) {
@@ -22,52 +184,125 @@ fn bench_event_throughput() {
                 core.schedule(1, Box::new(move |_, c| chain(c, left - 1)));
             }
         }
-        chain(core, n);
+        chain(core, CHAIN_N);
     });
     let t0 = Instant::now();
     let (_, stats) = eng.run().unwrap();
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "event chain:        {:>10.0} events/s  ({} events in {:.2}s)",
-        stats.events as f64 / dt,
-        stats.events,
-        dt
-    );
+    rate(stats.events, t0.elapsed().as_secs_f64())
 }
 
-fn bench_cell_waiters() {
-    let rounds: u64 = 200_000;
+/// Pre-refactor baseline: completion events ("bump a counter") were
+/// necessarily boxed closures.
+fn legacy_completions() -> f64 {
+    let mut core = legacy::Core::new();
+    let cell = core.new_cell(0);
+    fn step(core: &mut legacy::Core, cell: usize, left: u64) {
+        if left == 0 {
+            return;
+        }
+        for i in 1..=COMPLETION_FANOUT {
+            core.schedule(i, Box::new(move |c| c.add_cell(cell, 1)));
+        }
+        core.schedule(COMPLETION_FANOUT, Box::new(move |c| step(c, cell, left - 1)));
+    }
+    step(&mut core, cell, COMPLETION_ITERS);
+    let t0 = Instant::now();
+    core.run();
+    rate(core.events, t0.elapsed().as_secs_f64())
+}
+
+/// New core: the same completion stream through TYPED events (no boxing).
+fn new_completions() -> f64 {
     let eng: Engine<NullWorld> = Engine::new(NullWorld, 1);
     eng.setup(|_, core| {
         let cell = core.new_cell("c", 0);
-        fn round(core: &mut Core<NullWorld>, cell: stmpi::sim::CellId, i: u64, max: u64) {
-            if i >= max {
+        fn step(core: &mut Core<NullWorld>, cell: CellId, left: u64) {
+            if left == 0 {
                 return;
             }
-            core.on_ge(
-                cell,
-                i + 1,
-                "bench",
-                Box::new(move |_, c| round(c, cell, i + 1, max)),
-            );
-            core.schedule(1, Box::new(move |_, c| {
-                c.add_cell(cell, 1);
-            }));
+            for i in 1..=COMPLETION_FANOUT {
+                core.schedule_cell_add(i, cell, 1);
+            }
+            core.schedule(COMPLETION_FANOUT, Box::new(move |_, c| step(c, cell, left - 1)));
         }
-        round(core, cell, 0, rounds);
+        step(core, cell, COMPLETION_ITERS);
     });
     let t0 = Instant::now();
     let (_, stats) = eng.run().unwrap();
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "cell waiter rounds: {:>10.0} rounds/s  ({} cell writes in {:.2}s)",
-        rounds as f64 / dt,
-        stats.cell_writes,
-        dt
-    );
+    rate(stats.events, t0.elapsed().as_secs_f64())
 }
 
-fn bench_host_switches() {
+/// Pre-refactor baseline: every cell write scanned ALL waiters.
+fn legacy_waiter_scan() -> f64 {
+    let mut core = legacy::Core::new();
+    let cell = core.new_cell(0);
+    for i in 0..SCAN_WAITERS {
+        core.on_ge(cell, 1 << 40, format!("w{i}"), Box::new(|_| {}));
+    }
+    let t0 = Instant::now();
+    for _ in 0..SCAN_WRITES {
+        core.add_cell(cell, 1);
+    }
+    rate(SCAN_WRITES, t0.elapsed().as_secs_f64())
+}
+
+/// New core: threshold-ordered waiters make the no-fire write O(1).
+fn new_waiter_scan() -> f64 {
+    let eng: Engine<NullWorld> = Engine::new(NullWorld, 1);
+    eng.setup(|_, core| {
+        let cell = core.new_cell("c", 0);
+        for _ in 0..SCAN_WAITERS {
+            core.on_ge(cell, 1 << 40, "w", Box::new(|_, _| {}));
+        }
+        let t0 = Instant::now();
+        for _ in 0..SCAN_WRITES {
+            core.add_cell(cell, 1);
+        }
+        rate(SCAN_WRITES, t0.elapsed().as_secs_f64())
+    })
+    // Note: waiters are intentionally left unfired; the engine is dropped
+    // without running (we only measure the write path).
+}
+
+/// Pre-refactor baseline: waiter round trip (register, satisfy, fire via
+/// a zero-delay heap event).
+fn legacy_waiter_rounds() -> f64 {
+    let mut core = legacy::Core::new();
+    let cell = core.new_cell(0);
+    fn round(core: &mut legacy::Core, cell: usize, i: u64, max: u64) {
+        if i >= max {
+            return;
+        }
+        core.on_ge(cell, i + 1, "bench".to_string(), Box::new(move |c| round(c, cell, i + 1, max)));
+        core.schedule(1, Box::new(move |c| c.add_cell(cell, 1)));
+    }
+    round(&mut core, cell, 0, ROUNDS);
+    let t0 = Instant::now();
+    core.run();
+    rate(ROUNDS, t0.elapsed().as_secs_f64())
+}
+
+/// New core: the firing rides the microtask queue (no heap round trip)
+/// and the counter bump is a typed event.
+fn new_waiter_rounds() -> f64 {
+    let eng: Engine<NullWorld> = Engine::new(NullWorld, 1);
+    eng.setup(|_, core| {
+        let cell = core.new_cell("c", 0);
+        fn round(core: &mut Core<NullWorld>, cell: CellId, i: u64, max: u64) {
+            if i >= max {
+                return;
+            }
+            core.on_ge(cell, i + 1, "bench", Box::new(move |_, c| round(c, cell, i + 1, max)));
+            core.schedule_cell_add(1, cell, 1);
+        }
+        round(core, cell, 0, ROUNDS);
+    });
+    let t0 = Instant::now();
+    eng.run().unwrap();
+    rate(ROUNDS, t0.elapsed().as_secs_f64())
+}
+
+fn bench_host_switches() -> f64 {
     let iters: u64 = 50_000;
     let mut eng: Engine<NullWorld> = Engine::new(NullWorld, 1);
     for h in 0..4u64 {
@@ -79,18 +314,12 @@ fn bench_host_switches() {
     }
     let t0 = Instant::now();
     let (_, stats) = eng.run().unwrap();
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "host switches:      {:>10.0} switches/s ({} in {:.2}s)",
-        stats.host_switches as f64 / dt,
-        stats.host_switches,
-        dt
-    );
+    rate(stats.host_switches, t0.elapsed().as_secs_f64())
 }
 
-fn bench_faces_rate() {
+fn fig8_config() -> FacesConfig {
     let spec = fig8();
-    let cfg = FacesConfig {
+    FacesConfig {
         dist: spec.dist,
         nodes: spec.nodes,
         ranks_per_node: spec.ranks_per_node,
@@ -103,22 +332,153 @@ fn bench_faces_rate() {
         check: false,
         seed: 11,
         cost: presets::frontier_like(),
-    };
+    }
+}
+
+/// End-to-end Faces rate: rank-iterations per wall second.
+fn bench_faces_rate() -> (f64, f64) {
+    let cfg = fig8_config();
     let t0 = Instant::now();
-    let r = run_faces(&cfg).unwrap();
+    run_faces(&cfg).unwrap();
     let dt = t0.elapsed().as_secs_f64();
-    let iters = (cfg.outer * cfg.middle * cfg.inner * cfg.world_size()) as f64;
-    println!(
-        "faces fig8 ST:      {:>10.0} rank-iters/s (64 ranks, {:.2}s wall, {} msgs)",
-        iters / dt,
-        dt,
-        r.metrics.eager_sends + r.metrics.rendezvous_sends + r.metrics.intra_sends
+    let iters = (cfg.outer * cfg.middle * cfg.inner * cfg.world_size()) as u64;
+    (rate(iters, dt), rate(1, dt))
+}
+
+/// Parallel sweep scaling: N independent sims, 1 thread vs N threads.
+fn bench_sweep_scaling() -> (usize, f64) {
+    let spec = fig10();
+    let jobs: Vec<FacesConfig> = (0..4)
+        .map(|i| {
+            let mut cfg = fig8_config();
+            cfg.dist = spec.dist;
+            cfg.nodes = spec.nodes;
+            cfg.ranks_per_node = spec.ranks_per_node;
+            cfg.inner = 10;
+            cfg.seed = 11 + i;
+            cfg
+        })
+        .collect();
+    let threads = sweep::default_threads().min(jobs.len());
+    let t0 = Instant::now();
+    let serial = sweep::map(&jobs, 1, |_, cfg| run_faces(cfg).unwrap().time_ns);
+    let dt1 = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let parallel = sweep::map(&jobs, threads, |_, cfg| run_faces(cfg).unwrap().time_ns);
+    let dtn = t0.elapsed().as_secs_f64();
+    assert_eq!(serial, parallel, "sweep executor must be deterministic");
+    (threads, if dtn > 0.0 { dt1 / dtn } else { 1.0 })
+}
+
+// ---------------------------------------------------------------------
+// Reporting
+// ---------------------------------------------------------------------
+
+fn json_f(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.1}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn write_json(
+    path: &std::path::Path,
+    pairs: &[(&str, f64)],
+    sweep_threads: usize,
+    sweep_speedup: f64,
+) {
+    let generated = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut body = String::new();
+    body.push_str("{\n");
+    body.push_str("  \"schema\": \"stmpi-bench-engine/1\",\n");
+    body.push_str(&format!("  \"generated_unix\": {generated},\n"));
+    body.push_str(
+        "  \"note\": \"legacy_* entries are measured from an in-binary replica of the pre-PR1 \
+         event core (heap of boxed closures, unordered waiter scan); speedup_* = new/legacy on \
+         the same machine. Regenerate with: cargo bench --bench engine\",\n",
     );
+    for (k, v) in pairs {
+        body.push_str(&format!("  \"{k}\": {},\n", json_f(*v)));
+    }
+    body.push_str(&format!("  \"sweep_parallel_threads\": {sweep_threads},\n"));
+    body.push_str(&format!("  \"sweep_parallel_speedup\": {}\n", json_f(sweep_speedup)));
+    body.push_str("}\n");
+    if let Err(e) = std::fs::write(path, body) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    }
 }
 
 fn main() {
-    bench_event_throughput();
-    bench_cell_waiters();
-    bench_host_switches();
-    bench_faces_rate();
+    println!("== stmpi engine microbenchmarks (PR1 perf pass) ==\n");
+
+    let legacy_chain = legacy_event_chain();
+    let chain = new_event_chain();
+    println!("event chain (boxed):   legacy {legacy_chain:>12.0} ev/s   new {chain:>12.0} ev/s   ({:.2}x)", chain / legacy_chain);
+
+    let legacy_comp = legacy_completions();
+    let comp = new_completions();
+    println!("completion stream:     legacy {legacy_comp:>12.0} ev/s   new {comp:>12.0} ev/s   ({:.2}x)", comp / legacy_comp);
+
+    let legacy_scan = legacy_waiter_scan();
+    let scan = new_waiter_scan();
+    println!("cell-waiter dispatch:  legacy {legacy_scan:>12.0} wr/s   new {scan:>12.0} wr/s   ({:.2}x)", scan / legacy_scan);
+
+    let legacy_rounds = legacy_waiter_rounds();
+    let rounds = new_waiter_rounds();
+    println!("waiter rounds:         legacy {legacy_rounds:>12.0} rd/s   new {rounds:>12.0} rd/s   ({:.2}x)", rounds / legacy_rounds);
+
+    let switches = bench_host_switches();
+    println!("host switches:         {switches:>12.0} sw/s");
+
+    let (rank_iters, sims) = bench_faces_rate();
+    println!("faces fig8 ST:         {rank_iters:>12.0} rank-iters/s ({sims:.3} sims/s)");
+
+    let (threads, scaling) = bench_sweep_scaling();
+    println!("sweep scaling:         {scaling:.2}x on {threads} threads (4 sims)");
+
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .join("BENCH_engine.json");
+    // PR 1 acceptance bar: the typed completion stream and the
+    // threshold-ordered waiter dispatch must be >= 3x the legacy core.
+    // Enforced (process exits nonzero) when STMPI_BENCH_ENFORCE=1, as CI
+    // sets it.
+    let bar_ok = comp / legacy_comp >= 3.0 && scan / legacy_scan >= 3.0;
+    println!(
+        "\nPR1 acceptance bar (completions & waiter dispatch >= 3x legacy): {}",
+        if bar_ok { "PASS" } else { "FAIL" }
+    );
+
+    write_json(
+        &root,
+        &[
+            ("legacy_event_chain_events_per_s", legacy_chain),
+            ("event_chain_events_per_s", chain),
+            ("speedup_event_chain", chain / legacy_chain),
+            ("legacy_completion_events_per_s", legacy_comp),
+            ("completion_events_per_s", comp),
+            ("speedup_completions", comp / legacy_comp),
+            ("legacy_cell_waiter_writes_per_s", legacy_scan),
+            ("cell_waiter_writes_per_s", scan),
+            ("speedup_cell_waiter_dispatch", scan / legacy_scan),
+            ("legacy_waiter_rounds_per_s", legacy_rounds),
+            ("waiter_rounds_per_s", rounds),
+            ("speedup_waiter_rounds", rounds / legacy_rounds),
+            ("host_switches_per_s", switches),
+            ("faces_fig8_rank_iters_per_s", rank_iters),
+            ("faces_fig8_sims_per_s", sims),
+        ],
+        threads,
+        scaling,
+    );
+    println!("\nresults written to {}", root.display());
+    if !bar_ok && std::env::var("STMPI_BENCH_ENFORCE").as_deref() == Ok("1") {
+        std::process::exit(1);
+    }
 }

@@ -9,6 +9,7 @@
 
 use crate::coordinator::report::{pct_delta, render_table, Summary};
 use crate::costmodel::presets;
+use crate::sim::sweep;
 use crate::world::ComputeMode;
 
 use super::{run_faces, FacesConfig, Variant};
@@ -166,13 +167,16 @@ impl FigureReport {
 pub const FIGURE_G: usize = 128;
 
 /// Run one figure: every variant x `seeds`, Modeled compute (numerics are
-/// validated separately by the Real-compute e2e tests).
+/// validated separately by the Real-compute e2e tests). The (variant x
+/// seed) grid runs in parallel on the [`sweep`] executor; every job draws
+/// randomness only from its own seed, so the report is byte-identical
+/// regardless of the worker-thread count (see `rust/tests/determinism.rs`).
 pub fn run_figure(spec: &FigureSpec, seeds: &[u64], loops: Loops, g: usize) -> FigureReport {
-    let mut rows = Vec::new();
-    for &variant in spec.variants {
-        let mut samples = Vec::with_capacity(seeds.len());
-        for &seed in seeds {
-            let cfg = FacesConfig {
+    let jobs: Vec<FacesConfig> = spec
+        .variants
+        .iter()
+        .flat_map(|&variant| {
+            seeds.iter().map(move |&seed| FacesConfig {
                 dist: spec.dist,
                 nodes: spec.nodes,
                 ranks_per_node: spec.ranks_per_node,
@@ -185,12 +189,21 @@ pub fn run_figure(spec: &FigureSpec, seeds: &[u64], loops: Loops, g: usize) -> F
                 check: false,
                 seed,
                 cost: presets::frontier_like_jittered(),
-            };
-            let r = run_faces(&cfg).expect("figure run failed");
-            samples.push(r.time_ns as f64 / 1e6); // ms
-        }
-        rows.push((variant, Summary::of(&samples)));
-    }
+            })
+        })
+        .collect();
+    let samples_ms = sweep::map_default(&jobs, |_, cfg| {
+        run_faces(cfg).expect("figure run failed").time_ns as f64 / 1e6
+    });
+    let rows = spec
+        .variants
+        .iter()
+        .enumerate()
+        .map(|(vi, &variant)| {
+            let s = &samples_ms[vi * seeds.len()..(vi + 1) * seeds.len()];
+            (variant, Summary::of(s))
+        })
+        .collect();
     FigureReport { spec: spec.clone(), rows }
 }
 

@@ -39,7 +39,7 @@ use crate::gpu::{self, host_enqueue, stream_synchronize, KernelPayload, KernelSp
 use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
 use crate::nic::BufSlice;
 use crate::runtime::Runtime;
-use crate::sim::HostCtx;
+use crate::sim::{HostCtx, SimStats};
 use crate::stx;
 use crate::world::{BufId, ComputeMode, Metrics, Topology, World};
 
@@ -127,6 +127,10 @@ pub struct FacesResult {
     /// execution time of the timed region).
     pub time_ns: u64,
     pub metrics: Metrics,
+    /// Engine statistics of the run (event/microtask/host-switch counts);
+    /// byte-identical across runs with the same config+seed — the
+    /// determinism tests assert on this.
+    pub stats: SimStats,
     /// Max relative error vs the CPU reference when checking was enabled
     /// (max |field - reference| / max |reference| over ranks).
     pub max_err: Option<f32>,
@@ -362,7 +366,13 @@ pub fn run_faces(cfg: &FacesConfig) -> Result<FacesResult> {
         None
     };
 
-    Ok(FacesResult { rank_time, time_ns, metrics: out.world.metrics.clone(), max_err })
+    Ok(FacesResult {
+        rank_time,
+        time_ns,
+        metrics: out.world.metrics.clone(),
+        stats: out.stats,
+        max_err,
+    })
 }
 
 /// The per-rank host program (what the application process runs).

@@ -130,13 +130,16 @@ pub fn create_stream(w: &mut World, core: &mut Ctx, gpu: usize) -> StreamId {
 
 /// Enqueue a device op. The *host-side* cost of enqueueing is charged by
 /// the caller (host actors use `ctx.advance(cost.kernel_enqueue)`); this
-/// function only mutates device state and kicks the CP if idle.
+/// function only mutates device state and kicks the CP if idle. The CP
+/// step runs inline (same instant, same lock scope) instead of through a
+/// scheduled zero-delay event — one less event per enqueue on the hot
+/// path, with identical virtual timing.
 pub fn enqueue(w: &mut World, core: &mut Ctx, sid: StreamId, op: StreamOp) {
     let s = &mut w.gpus[sid.gpu].streams[sid.stream];
     s.ops.push_back(op);
     s.enqueued += 1;
     if !s.busy {
-        core.schedule(0, Box::new(move |w, c| cp_step(w, c, sid)));
+        cp_step(w, core, sid);
     }
 }
 

@@ -11,6 +11,12 @@
 //! Data paths (§II-A): inter-node transfers go through the simulated NIC
 //! and fabric; intra-node transfers use ROCr-IPC-style P2P DMA for large
 //! payloads and a non-temporal memcpy path for small ones (§V-D).
+//!
+//! Request completion is a counter cell reaching 1; single-cell
+//! completions ride the engine's *typed* event path
+//! ([`crate::nic::Done::schedule_fire_at`]) so the per-message completion
+//! costs no closure allocation, and hosts blocked in [`wait`] are woken
+//! through the engine's zero-delay microtask queue.
 
 use std::collections::VecDeque;
 

@@ -88,6 +88,23 @@ impl Done {
             cb(w, core);
         }
     }
+
+    /// Schedule this completion at absolute virtual time `t`. Single-cell
+    /// completions (the dominant shape: request "done" counters) go
+    /// through the engine's typed event path — no closure allocation;
+    /// multi-cell or callback-carrying completions keep the boxed path so
+    /// all their effects stay atomic within one event.
+    pub fn schedule_fire_at(self, core: &mut Ctx, t: crate::sim::Time) {
+        if self.cb.is_none() {
+            match self.cells.len() {
+                0 => {} // nothing to do — skip the event entirely
+                1 => core.schedule_cell_add_at(t, self.cells[0], 1),
+                _ => core.schedule_at(t, Box::new(move |w, core| self.fire(w, core))),
+            }
+        } else {
+            core.schedule_at(t, Box::new(move |w, core| self.fire(w, core)));
+        }
+    }
 }
 
 impl std::fmt::Debug for Done {
@@ -229,7 +246,7 @@ pub fn execute_send(w: &mut World, core: &mut Ctx, env: Envelope, src: BufSlice,
                 );
                 // Local send completion: payload has left the NIC.
                 let comp = left_src + w.cost.nic_completion;
-                core.schedule_at(comp, Box::new(move |w, core| send_done.fire(w, core)));
+                send_done.schedule_fire_at(core, comp);
             }),
         );
     }
@@ -284,7 +301,7 @@ pub fn rendezvous_get(
                     );
                     // Source-side completion when the data has left.
                     let comp = left_src + w.cost.nic_completion;
-                    core.schedule_at(comp, Box::new(move |w, core| src_done.fire(w, core)));
+                    src_done.schedule_fire_at(core, comp);
                 }),
             );
         }),
@@ -354,7 +371,7 @@ pub fn post_triggered_put(
                             }),
                         );
                         let comp = left + w.cost.nic_completion;
-                        core.schedule_at(comp, Box::new(move |w, core| src_done.fire(w, core)));
+                        src_done.schedule_fire_at(core, comp);
                     }
                 }),
             );
@@ -380,12 +397,8 @@ pub fn post_triggered_atomic_add(
         Box::new(move |w, core| {
             w.metrics.dwq_triggered += 1;
             let lat = w.cost.nic_trigger_latency + w.cost.nic_proc;
-            core.schedule(
-                lat,
-                Box::new(move |_, core| {
-                    core.add_cell(target, value);
-                }),
-            );
+            // Typed event: the deferred atomic is exactly a cell add.
+            core.schedule_cell_add(lat, target, value);
         }),
     );
 }

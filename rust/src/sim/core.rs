@@ -1,11 +1,46 @@
-//! The engine core: virtual clock, event heap, counter cells, statistics.
+//! The engine core: virtual clock, typed event arena, microtask queue,
+//! counter cells, statistics.
 //!
 //! `Core<W>` is handed (by `&mut`) to every event callback alongside the
 //! user world `W`, so callbacks can schedule further events, create and
 //! update cells, and draw deterministic randomness.
+//!
+//! # Hot-path design (see DESIGN.md §Event core)
+//!
+//! The original core kept a `BinaryHeap<Ev<W>>` of boxed `FnOnce`
+//! closures; every event — including trivial "bump a completion counter"
+//! completions and zero-delay waiter firings — paid a heap allocation,
+//! `log n` heap sift with `Drop`-glued elements, and a virtual call. The
+//! reworked core splits events into three tiers:
+//!
+//! * **Typed events** ([`SmallEv`]): the dominant event kinds
+//!   (`ResumeHost`, `CellAdd`) are plain `Copy` data. Heap elements are
+//!   small, `Drop`-free, and non-generic, so the binary heap sifts raw
+//!   bytes.
+//! * **Arena-backed callbacks**: the remaining boxed closures live in a
+//!   slot arena ([`CbSlab`]); the heap stores only a `u32` slot index.
+//!   Slots are recycled through a free list, so steady-state scheduling
+//!   does not grow memory.
+//! * **Microtask queue**: zero-delay events (satisfied waiters, same
+//!   instant continuations) go into a FIFO that bypasses the heap
+//!   entirely — a satisfied waiter costs a queue push instead of a heap
+//!   push + pop.
+//!
+//! # Ordering contract
+//!
+//! * Heap events run in `(time, seq)` order: earliest first, insertion
+//!   order within the same instant.
+//! * Microtasks run at the *current* instant, FIFO, **before** any
+//!   not-yet-executed heap event (including heap events that share the
+//!   current timestamp). A microtask spawned by a microtask goes to the
+//!   back of the queue.
+//! * When a cell write satisfies several waiters at once they fire in
+//!   ascending `(threshold, registration)` order; waiters with equal
+//!   thresholds fire in registration order (pinned by
+//!   `sim::tests::same_threshold_waiters_fire_in_registration_order`).
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 use super::rng::SplitMix64;
 
@@ -24,32 +59,73 @@ pub struct HostId(pub(crate) u32);
 /// both the user world and the engine core.
 pub type Cb<W> = Box<dyn FnOnce(&mut W, &mut Core<W>) + Send>;
 
-pub(crate) enum EvKind<W> {
-    Call(Cb<W>),
+/// Typed event payload. `Copy`, non-generic, `Drop`-free — both the event
+/// heap and the microtask queue store these directly.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum SmallEv {
+    /// Hand the execution token to a host actor.
     ResumeHost(HostId),
+    /// Add `dv` to a cell (the dominant completion shape: NIC/DMA/request
+    /// "done" counters), firing satisfied waiters.
+    CellAdd(CellId, u64),
+    /// Run the boxed callback stored at this arena slot.
+    Call(u32),
 }
 
-pub(crate) struct Ev<W> {
-    pub time: Time,
-    pub seq: u64,
-    pub kind: EvKind<W>,
+/// Heap entry: `(time, seq)` ordering key plus a typed payload.
+struct Ev {
+    time: Time,
+    seq: u64,
+    kind: SmallEv,
 }
 
-impl<W> PartialEq for Ev<W> {
+impl PartialEq for Ev {
     fn eq(&self, other: &Self) -> bool {
         self.time == other.time && self.seq == other.seq
     }
 }
-impl<W> Eq for Ev<W> {}
-impl<W> PartialOrd for Ev<W> {
+impl Eq for Ev {}
+impl PartialOrd for Ev {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
-impl<W> Ord for Ev<W> {
+impl Ord for Ev {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap is a max-heap; invert for earliest-first, seq-stable.
         (other.time, other.seq).cmp(&(self.time, self.seq))
+    }
+}
+
+/// Slot arena for boxed event callbacks. The heap/microtask queue store a
+/// `u32` index instead of the fat pointer; freed slots are recycled.
+struct CbSlab<W> {
+    slots: Vec<Option<Cb<W>>>,
+    free: Vec<u32>,
+}
+
+impl<W> CbSlab<W> {
+    fn new() -> Self {
+        Self { slots: Vec::new(), free: Vec::new() }
+    }
+
+    fn insert(&mut self, cb: Cb<W>) -> u32 {
+        match self.free.pop() {
+            Some(i) => {
+                self.slots[i as usize] = Some(cb);
+                i
+            }
+            None => {
+                self.slots.push(Some(cb));
+                (self.slots.len() - 1) as u32
+            }
+        }
+    }
+
+    fn take(&mut self, i: u32) -> Cb<W> {
+        let cb = self.slots[i as usize].take().expect("callback slot already taken");
+        self.free.push(i);
+        cb
     }
 }
 
@@ -68,14 +144,22 @@ pub(crate) struct Waiter<W> {
 
 pub(crate) struct Cell<W> {
     pub value: u64,
+    /// Kept sorted ascending by `(threshold, registration order)`; the
+    /// head is the minimum threshold, so the no-fire case of
+    /// [`Core::write_cell`]/[`Core::add_cell`] is a single comparison
+    /// instead of an all-waiters scan.
     pub waiters: Vec<Waiter<W>>,
     pub name: String,
 }
 
 /// Engine statistics, useful for perf work on the simulator itself.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct SimStats {
+    /// Events executed (heap events + microtasks).
     pub events: u64,
+    /// Zero-delay events dispatched through the microtask queue (subset
+    /// of `events`).
+    pub microtasks: u64,
     pub host_switches: u64,
     pub cell_writes: u64,
     pub max_heap: usize,
@@ -84,11 +168,14 @@ pub struct SimStats {
 pub struct Core<W> {
     pub(crate) now: Time,
     pub(crate) seq: u64,
-    pub(crate) heap: BinaryHeap<Ev<W>>,
+    heap: BinaryHeap<Ev>,
+    micro: VecDeque<SmallEv>,
+    cbs: CbSlab<W>,
     pub(crate) cells: Vec<Cell<W>>,
     pub(crate) rng: SplitMix64,
     pub(crate) stats: SimStats,
     /// Names of host actors, indexed by HostId (for diagnostics only).
+    #[allow(dead_code)]
     pub(crate) host_names: Vec<String>,
 }
 
@@ -98,6 +185,8 @@ impl<W> Core<W> {
             now: 0,
             seq: 0,
             heap: BinaryHeap::new(),
+            micro: VecDeque::new(),
+            cbs: CbSlab::new(),
             cells: Vec::new(),
             rng: SplitMix64::new(seed),
             stats: SimStats::default(),
@@ -123,6 +212,13 @@ impl<W> Core<W> {
 
     // ---- events ------------------------------------------------------
 
+    #[inline]
+    fn push_heap(&mut self, t: Time, kind: SmallEv) {
+        self.seq += 1;
+        self.heap.push(Ev { time: t, seq: self.seq, kind });
+        self.stats.max_heap = self.stats.max_heap.max(self.heap.len());
+    }
+
     /// Schedule `cb` to run `dt` ns from now.
     pub fn schedule(&mut self, dt: Time, cb: Cb<W>) {
         self.schedule_at(self.now + dt, cb);
@@ -131,16 +227,54 @@ impl<W> Core<W> {
     /// Schedule `cb` at an absolute virtual time (must be >= now).
     pub fn schedule_at(&mut self, t: Time, cb: Cb<W>) {
         debug_assert!(t >= self.now, "scheduling into the past");
-        self.seq += 1;
-        self.heap.push(Ev { time: t, seq: self.seq, kind: EvKind::Call(cb) });
-        self.stats.max_heap = self.stats.max_heap.max(self.heap.len());
+        let slot = self.cbs.insert(cb);
+        self.push_heap(t, SmallEv::Call(slot));
+    }
+
+    /// Typed event: add `dv` to `cell` after `dt` ns (no boxing — this is
+    /// the fast path for "bump a completion counter" completions).
+    pub fn schedule_cell_add(&mut self, dt: Time, cell: CellId, dv: u64) {
+        self.schedule_cell_add_at(self.now + dt, cell, dv);
+    }
+
+    /// Typed event: add `dv` to `cell` at an absolute virtual time.
+    pub fn schedule_cell_add_at(&mut self, t: Time, cell: CellId, dv: u64) {
+        debug_assert!(t >= self.now, "scheduling into the past");
+        self.push_heap(t, SmallEv::CellAdd(cell, dv));
+    }
+
+    /// Run `cb` at the *current* instant through the microtask queue:
+    /// FIFO among microtasks, before any pending heap event. Zero-delay
+    /// continuations should use this instead of `schedule(0, ..)` — it
+    /// skips the heap entirely.
+    pub fn defer(&mut self, cb: Cb<W>) {
+        let slot = self.cbs.insert(cb);
+        self.micro.push_back(SmallEv::Call(slot));
     }
 
     pub(crate) fn schedule_resume(&mut self, t: Time, host: HostId) {
         debug_assert!(t >= self.now);
-        self.seq += 1;
-        self.heap.push(Ev { time: t, seq: self.seq, kind: EvKind::ResumeHost(host) });
-        self.stats.max_heap = self.stats.max_heap.max(self.heap.len());
+        self.push_heap(t, SmallEv::ResumeHost(host));
+    }
+
+    pub(crate) fn defer_resume(&mut self, host: HostId) {
+        self.micro.push_back(SmallEv::ResumeHost(host));
+    }
+
+    /// Pop the next event: microtasks first (at the current instant),
+    /// then the earliest heap event. Used by the engine driver loop.
+    pub(crate) fn next_event(&mut self) -> Option<(Time, SmallEv)> {
+        if let Some(kind) = self.micro.pop_front() {
+            self.stats.microtasks += 1;
+            return Some((self.now, kind));
+        }
+        let ev = self.heap.pop()?;
+        Some((ev.time, ev.kind))
+    }
+
+    /// Move a boxed callback out of the arena (engine driver loop).
+    pub(crate) fn take_cb(&mut self, slot: u32) -> Cb<W> {
+        self.cbs.take(slot)
     }
 
     // ---- cells -------------------------------------------------------
@@ -165,8 +299,7 @@ impl<W> Core<W> {
     /// Set a cell to `v`, firing any waiters whose threshold is reached.
     pub fn write_cell(&mut self, id: CellId, v: u64) {
         self.stats.cell_writes += 1;
-        let c = &mut self.cells[id.0 as usize];
-        c.value = v;
+        self.cells[id.0 as usize].value = v;
         self.fire_waiters(id);
     }
 
@@ -180,56 +313,58 @@ impl<W> Core<W> {
         v
     }
 
+    /// Insert a waiter keeping the list sorted by `(threshold,
+    /// registration order)` — `partition_point` lands *after* all equal
+    /// thresholds, which is what preserves registration order.
+    fn push_waiter(&mut self, id: CellId, w: Waiter<W>) {
+        let ws = &mut self.cells[id.0 as usize].waiters;
+        let idx = ws.partition_point(|x| x.threshold <= w.threshold);
+        ws.insert(idx, w);
+    }
+
     /// One-shot watch: when the cell's value first reaches (>=) `threshold`,
     /// run `cb` (immediately if already satisfied). The callback runs as a
-    /// zero-delay scheduled event, preserving global event ordering.
+    /// zero-delay microtask, preserving the global ordering contract.
     pub fn on_ge(&mut self, id: CellId, threshold: u64, desc: impl Into<String>, cb: Cb<W>) {
         if self.cells[id.0 as usize].value >= threshold {
-            self.schedule(0, cb);
+            self.defer(cb);
         } else {
-            self.cells[id.0 as usize].waiters.push(Waiter {
-                threshold,
-                action: WaiterAction::Call(cb),
-                desc: desc.into(),
-            });
+            self.push_waiter(
+                id,
+                Waiter { threshold, action: WaiterAction::Call(cb), desc: desc.into() },
+            );
         }
     }
 
-    pub(crate) fn wait_host_ge(&mut self, id: CellId, threshold: u64, host: HostId, desc: String) -> bool {
+    pub(crate) fn wait_host_ge(
+        &mut self,
+        id: CellId,
+        threshold: u64,
+        host: HostId,
+        desc: String,
+    ) -> bool {
         if self.cells[id.0 as usize].value >= threshold {
             return true; // already satisfied, no blocking needed
         }
-        self.cells[id.0 as usize].waiters.push(Waiter {
-            threshold,
-            action: WaiterAction::WakeHost(host),
-            desc,
-        });
+        self.push_waiter(id, Waiter { threshold, action: WaiterAction::WakeHost(host), desc });
         false
     }
 
     fn fire_waiters(&mut self, id: CellId) {
-        let v = self.cells[id.0 as usize].value;
-        // Drain satisfied waiters preserving registration order.
-        let waiters = &mut self.cells[id.0 as usize].waiters;
-        if waiters.iter().all(|w| w.threshold > v) {
-            return;
+        let idx = id.0 as usize;
+        let v = self.cells[idx].value;
+        // O(1) no-fire check: the head of the sorted list is the minimum
+        // threshold over all waiters.
+        match self.cells[idx].waiters.first() {
+            Some(w) if w.threshold <= v => {}
+            _ => return,
         }
-        let mut fired = Vec::new();
-        waiters.retain_mut(|w| {
-            if w.threshold <= v {
-                // Move the action out; placeholder is never observed because
-                // the entry is removed.
-                let action = std::mem::replace(&mut w.action, WaiterAction::WakeHost(HostId(u32::MAX)));
-                fired.push(action);
-                false
-            } else {
-                true
-            }
-        });
-        for action in fired {
-            match action {
-                WaiterAction::WakeHost(h) => self.schedule_resume(self.now, h),
-                WaiterAction::Call(cb) => self.schedule(0, cb),
+        let n = self.cells[idx].waiters.partition_point(|w| w.threshold <= v);
+        let fired: Vec<Waiter<W>> = self.cells[idx].waiters.drain(..n).collect();
+        for w in fired {
+            match w.action {
+                WaiterAction::WakeHost(h) => self.defer_resume(h),
+                WaiterAction::Call(cb) => self.defer(cb),
             }
         }
     }

@@ -5,16 +5,27 @@
 //! resumed. This strict alternation is what makes the simulation
 //! deterministic while still letting benchmark code be written as plain
 //! sequential Rust (MPI-style: post, compute, wait).
+//!
+//! Host-switch cost: the driver passes the resume timestamp *through the
+//! gate* ([`Gate::open_with`]/[`Gate::wait_value`]), so a woken host never
+//! reacquires the engine lock just to read the clock — the park/resume
+//! round trip is one lock acquisition (to schedule the resume) plus the
+//! gate handoff. `advance(0)` is a no-op fast path: zero virtual time
+//! means there is nothing to wait for, so the token is kept.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
-use super::core::{CellId, Core, EvKind, HostId, SimStats, Time};
+use super::core::{CellId, Core, HostId, SimStats, SmallEv, Time};
 use super::gate::Gate;
 
 /// Marker payload used to unwind host threads when the sim aborts.
 struct SimAbort;
+
+/// Sentinel passed through a host gate to request unwinding instead of a
+/// resume (virtual time never reaches `u64::MAX`).
+const ABORT_RESUME: Time = Time::MAX;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum HostState {
@@ -34,6 +45,10 @@ struct HostSlot {
     state: HostState,
     name: String,
     wait_desc: String,
+    /// Duration of the in-flight `advance` (0 when not advancing);
+    /// stored numerically so the hot path never formats strings — the
+    /// deadlock report renders it on demand.
+    advance_dt: Time,
 }
 
 struct Inner<W> {
@@ -117,6 +132,7 @@ impl<W: Send + 'static> Engine<W> {
                 state: HostState::Pending,
                 name: name.clone(),
                 wait_desc: String::new(),
+                advance_dt: 0,
             });
             g.core.host_names.push(name.clone());
             // Initial resume at t=0 in spawn order.
@@ -127,22 +143,14 @@ impl<W: Send + 'static> Engine<W> {
         let handle = std::thread::Builder::new()
             .name(format!("sim-host-{name}"))
             .spawn(move || {
-                // Wait for the driver to hand us the token for the first time.
-                gate.wait();
-                {
-                    let g = shared.inner.lock().unwrap();
-                    if g.aborted {
-                        // Finish silently; driver is tearing down.
-                        drop(g);
-                        shared.driver_gate.open();
-                        return;
-                    }
+                // Wait for the driver to hand us the token for the first
+                // time; the gate carries the start timestamp (or the abort
+                // sentinel if the sim tore down before we ever ran).
+                let t0 = gate.wait_value();
+                if t0 == ABORT_RESUME {
+                    return;
                 }
-                let mut ctx = HostCtx { shared: shared.clone(), id, now: 0 };
-                {
-                    let g = shared.inner.lock().unwrap();
-                    ctx.now = g.core.now();
-                }
+                let mut ctx = HostCtx { shared: shared.clone(), id, now: t0 };
                 let result = catch_unwind(AssertUnwindSafe(|| f(&mut ctx)));
                 let mut g = shared.inner.lock().unwrap();
                 g.hosts[id.0 as usize].state = HostState::Done;
@@ -153,11 +161,17 @@ impl<W: Send + 'static> Engine<W> {
                             .map(|s| s.to_string())
                             .or_else(|| payload.downcast_ref::<String>().cloned())
                             .unwrap_or_else(|| "<non-string panic>".into());
-                        g.host_panic = Some(format!("host '{}': {}", g.hosts[id.0 as usize].name, msg));
+                        g.host_panic =
+                            Some(format!("host '{}': {}", g.hosts[id.0 as usize].name, msg));
                     }
                 }
+                let aborted = g.aborted;
                 drop(g);
-                shared.driver_gate.open();
+                // Hand the token back unless the driver already gave up
+                // (after an abort nobody is waiting on the driver gate).
+                if !aborted {
+                    shared.driver_gate.open();
+                }
             })
             .expect("failed to spawn sim host thread");
         self.handles.push(handle);
@@ -188,7 +202,7 @@ impl<W: Send + 'static> Engine<W> {
                 Self::abort(&mut g);
                 return Err(SimError::HostPanic { message: msg });
             }
-            let ev = match g.core.heap.pop() {
+            let (time, kind) = match g.core.next_event() {
                 Some(ev) => ev,
                 None => {
                     if g.hosts.iter().all(|h| h.state == HostState::Done) {
@@ -199,15 +213,19 @@ impl<W: Send + 'static> Engine<W> {
                     return Err(SimError::Deadlock { report });
                 }
             };
-            debug_assert!(ev.time >= g.core.now, "time went backwards");
-            g.core.now = ev.time;
+            debug_assert!(time >= g.core.now, "time went backwards");
+            g.core.now = time;
             g.core.stats.events += 1;
-            match ev.kind {
-                EvKind::Call(cb) => {
+            match kind {
+                SmallEv::Call(slot) => {
                     let inner = &mut *g;
+                    let cb = inner.core.take_cb(slot);
                     cb(&mut inner.world, &mut inner.core);
                 }
-                EvKind::ResumeHost(h) => {
+                SmallEv::CellAdd(cell, dv) => {
+                    g.core.add_cell(cell, dv);
+                }
+                SmallEv::ResumeHost(h) => {
                     if g.hosts[h.0 as usize].state == HostState::Done {
                         continue; // stale resume; ignore
                     }
@@ -215,9 +233,11 @@ impl<W: Send + 'static> Engine<W> {
                     let slot = &mut g.hosts[h.0 as usize];
                     slot.state = HostState::Running;
                     slot.wait_desc.clear();
+                    slot.advance_dt = 0;
                     let gate = slot.gate.clone();
+                    let now = g.core.now;
                     drop(g);
-                    gate.open();
+                    gate.open_with(now);
                     self.shared.driver_gate.wait();
                 }
             }
@@ -229,7 +249,7 @@ impl<W: Send + 'static> Engine<W> {
         // Release every parked/pending host so its thread can unwind.
         for h in g.hosts.iter() {
             if h.state != HostState::Done && h.state != HostState::Running {
-                h.gate.open();
+                h.gate.open_with(ABORT_RESUME);
             }
         }
     }
@@ -238,12 +258,14 @@ impl<W: Send + 'static> Engine<W> {
         let mut lines = vec![format!("virtual time {} ns", g.core.now())];
         for h in &g.hosts {
             if h.state != HostState::Done {
-                lines.push(format!(
-                    "  host '{}' state {:?} waiting on: {}",
-                    h.name,
-                    h.state,
-                    if h.wait_desc.is_empty() { "<unknown>" } else { &h.wait_desc }
-                ));
+                let desc = if h.state == HostState::Sleeping && h.advance_dt > 0 {
+                    format!("advance({})", h.advance_dt)
+                } else if h.wait_desc.is_empty() {
+                    "<unknown>".to_string()
+                } else {
+                    h.wait_desc.clone()
+                };
+                lines.push(format!("  host '{}' state {:?} waiting on: {desc}", h.name, h.state));
             }
         }
         for w in g.core.blocked_waiters() {
@@ -268,12 +290,22 @@ impl<W: Send + 'static> HostCtx<W> {
     }
 
     /// Charge `dt` ns of host CPU time (e.g. the cost of an MPI call).
+    /// `advance(0)` is free: no virtual time passes and the host keeps
+    /// the execution token (no driver round trip).
     pub fn advance(&mut self, dt: Time) {
+        if dt == 0 {
+            return;
+        }
         let mut g = self.shared.inner.lock().unwrap();
         let t = g.core.now() + dt;
         g.core.schedule_resume(t, self.id);
-        g.hosts[self.id.0 as usize].state = HostState::Sleeping;
-        g.hosts[self.id.0 as usize].wait_desc = format!("advance({dt})");
+        {
+            let slot = &mut g.hosts[self.id.0 as usize];
+            slot.state = HostState::Sleeping;
+            slot.wait_desc.clear();
+            slot.wait_desc.push_str("advance");
+            slot.advance_dt = dt;
+        }
         self.now = Self::park(&self.shared, self.id, g);
     }
 
@@ -285,8 +317,13 @@ impl<W: Send + 'static> HostCtx<W> {
         if satisfied {
             return;
         }
-        g.hosts[self.id.0 as usize].state = HostState::BlockedOnCell;
-        g.hosts[self.id.0 as usize].wait_desc = desc.to_string();
+        {
+            let slot = &mut g.hosts[self.id.0 as usize];
+            slot.state = HostState::BlockedOnCell;
+            slot.wait_desc.clear();
+            slot.wait_desc.push_str(desc);
+            slot.advance_dt = 0;
+        }
         self.now = Self::park(&self.shared, self.id, g);
     }
 
@@ -300,17 +337,17 @@ impl<W: Send + 'static> HostCtx<W> {
     }
 
     /// Park this host and hand the token back to the driver; returns the
-    /// virtual time at which the driver resumed us.
+    /// virtual time at which the driver resumed us. The resume time rides
+    /// on the gate itself, so the woken host does not reacquire the
+    /// engine lock.
     fn park(shared: &Shared<W>, id: HostId, guard: MutexGuard<'_, Inner<W>>) -> Time {
         let gate = guard.hosts[id.0 as usize].gate.clone();
         drop(guard);
         shared.driver_gate.open();
-        gate.wait();
-        let g = shared.inner.lock().unwrap();
-        if g.aborted {
-            drop(g);
+        let t = gate.wait_value();
+        if t == ABORT_RESUME {
             std::panic::panic_any(SimAbort);
         }
-        g.core.now()
+        t
     }
 }

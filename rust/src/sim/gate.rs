@@ -1,6 +1,6 @@
 //! One-shot reusable gate used for the driver <-> host token handshake.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 
 /// How long `wait()` spins on the flag before sleeping on the condvar.
@@ -13,9 +13,15 @@ const SPIN_ITERS: u32 = 2_000;
 ///
 /// Unlike a bare condvar, the flag makes the pair race-free when `open`
 /// happens before the other side reaches `wait`.
+///
+/// The gate can carry a `u64` payload ([`Gate::open_with`] /
+/// [`Gate::wait_value`]); the engine uses this to pass the resume
+/// timestamp to a woken host so it never reacquires the engine lock just
+/// to read the clock.
 #[derive(Default)]
 pub struct Gate {
     open: AtomicBool,
+    value: AtomicU64,
     m: Mutex<()>,
     cv: Condvar,
 }
@@ -27,7 +33,15 @@ impl Gate {
 
     /// Open the gate, releasing one waiter (now or in the future).
     pub fn open(&self) {
+        self.open_with(0);
+    }
+
+    /// Open the gate with a payload readable via [`Gate::wait_value`].
+    pub fn open_with(&self, value: u64) {
         debug_assert!(!self.open.load(Ordering::Relaxed), "gate double-open");
+        // The payload store is ordered before the Release store of the
+        // flag, so the Acquire consumer observes it after winning the CAS.
+        self.value.store(value, Ordering::Relaxed);
         // Publish the token, then (lock-protected) notify so a waiter that
         // checked the flag before sleeping cannot miss the wakeup.
         self.open.store(true, Ordering::Release);
@@ -61,6 +75,13 @@ impl Gate {
             g = self.cv.wait(g).unwrap();
         }
     }
+
+    /// Block until opened, consume the token, and return the payload the
+    /// opener passed to [`Gate::open_with`] (0 for a plain `open`).
+    pub fn wait_value(&self) -> u64 {
+        self.wait();
+        self.value.load(Ordering::Relaxed)
+    }
 }
 
 #[cfg(test)]
@@ -73,6 +94,24 @@ mod tests {
         let g = Gate::new();
         g.open();
         g.wait(); // must not block
+    }
+
+    #[test]
+    fn payload_rides_the_gate() {
+        let g = Gate::new();
+        g.open_with(42);
+        assert_eq!(g.wait_value(), 42);
+        g.open_with(7);
+        assert_eq!(g.wait_value(), 7);
+    }
+
+    #[test]
+    fn payload_crosses_threads() {
+        let g = Arc::new(Gate::new());
+        let g2 = g.clone();
+        let t = std::thread::spawn(move || g2.wait_value());
+        g.open_with(123_456_789);
+        assert_eq!(t.join().unwrap(), 123_456_789);
     }
 
     #[test]
@@ -97,14 +136,14 @@ mod tests {
         let to_main = Arc::new(Gate::new());
         let (tc, tm) = (to_child.clone(), to_main.clone());
         let t = std::thread::spawn(move || {
-            for _ in 0..1000 {
-                tc.wait();
-                tm.open();
+            for i in 0..1000 {
+                assert_eq!(tc.wait_value(), i);
+                tm.open_with(i);
             }
         });
-        for _ in 0..1000 {
-            to_child.open();
-            to_main.wait();
+        for i in 0..1000 {
+            to_child.open_with(i);
+            assert_eq!(to_main.wait_value(), i);
         }
         t.join().unwrap();
     }

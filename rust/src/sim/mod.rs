@@ -3,33 +3,45 @@
 //! This is the substrate on which the simulated cluster (GPUs, NICs, MPI
 //! ranks, progress threads) runs. It is a *hybrid process/event* engine:
 //!
-//! * **Events** are `(time, seq, callback)` entries in a binary heap,
-//!   executed on the driver thread. Reactive entities (the GPU control
-//!   processor, the NIC DWQ engine, MPI progress threads) are state
-//!   machines advanced entirely by callbacks — they cost no thread
-//!   switches.
-//! * **Cells** are 64-bit counters with threshold waiters. They model NIC
-//!   hardware counters, GPU-stream-visible memory words (the targets of
-//!   `writeValue64`/`waitValue64`), and request-completion flags.
+//! * **Events** are typed entries in a binary heap plus a zero-delay
+//!   **microtask queue**, executed on the driver thread. The dominant
+//!   event kinds (host resumes, counter-cell completions) are plain
+//!   `Copy` data; remaining boxed callbacks live in a slot arena so the
+//!   heap itself stays small and `Drop`-free (see `core` and DESIGN.md
+//!   §Event core). Reactive entities (the GPU control processor, the NIC
+//!   DWQ engine, MPI progress threads) are state machines advanced
+//!   entirely by callbacks — they cost no thread switches.
+//! * **Cells** are 64-bit counters with threshold waiters, kept ordered
+//!   by threshold so a write that satisfies nobody costs one comparison.
+//!   They model NIC hardware counters, GPU-stream-visible memory words
+//!   (the targets of `writeValue64`/`waitValue64`), and
+//!   request-completion flags.
 //! * **Host actors** are real OS threads — one per simulated application
 //!   process — running arbitrary Rust. They advance virtual time through
 //!   a token handshake with the driver: at any instant at most one thread
 //!   (driver *or* one host) is executing, which makes the simulation
-//!   deterministic.
+//!   deterministic. The resume timestamp travels through the gate, so a
+//!   woken host does not touch the engine lock.
 //!
-//! Determinism: ties in the heap are broken by insertion sequence; all
-//! randomness comes from a seeded [`rng::SplitMix64`]. The same seed and
-//! workload always produce the identical virtual timeline.
+//! Determinism: ties in the heap are broken by insertion sequence;
+//! microtasks are FIFO; all randomness comes from a seeded
+//! [`rng::SplitMix64`]. The same seed and workload always produce the
+//! identical virtual timeline (pinned by `rust/tests/determinism.rs`).
 //!
-//! Deadlock detection: if the event heap drains while host actors or
-//! waiters remain blocked, [`Engine::run`] returns a [`SimError::Deadlock`]
-//! naming every blocked entity and the cell value it awaits — which doubles
-//! as an MPI deadlock debugger for code built on top.
+//! Deadlock detection: if the event heap and microtask queue drain while
+//! host actors or waiters remain blocked, [`Engine::run`] returns a
+//! [`SimError::Deadlock`] naming every blocked entity and the cell value
+//! it awaits — which doubles as an MPI deadlock debugger for code built
+//! on top.
+//!
+//! Sweeps of many independent simulations run in parallel through
+//! [`sweep`], with deterministic per-run seeds.
 
 pub mod core;
 pub mod engine;
 pub mod gate;
 pub mod rng;
+pub mod sweep;
 
 pub use self::core::{CellId, Core, SimStats, Time};
 pub use self::engine::{Engine, HostCtx, SimError};

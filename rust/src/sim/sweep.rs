@@ -1,0 +1,156 @@
+//! Parallel sweep executor: run many independent simulations across OS
+//! threads with deterministic results.
+//!
+//! Every figure and ablation is a sweep of full cluster simulations —
+//! (variant × seed × parameter) grids of [`crate::faces::run_faces`]
+//! calls. Each simulation is self-contained (its own `Engine`, its own
+//! seeded RNG), so the sweep is embarrassingly parallel; this module
+//! provides the work-stealing-free, deterministic harness the figure and
+//! ablation drivers run on.
+//!
+//! Determinism: job `i` always computes `f(i, &items[i])`, results are
+//! written to slot `i`, and every simulation draws randomness only from
+//! its own config's seed — so the output vector is byte-identical no
+//! matter how many worker threads run or how the OS schedules them
+//! (pinned by `rust/tests/determinism.rs`).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use by default: the `STMPI_SWEEP_THREADS`
+/// environment variable if set (>= 1), else the machine's available
+/// parallelism.
+pub fn default_threads() -> usize {
+    std::env::var("STMPI_SWEEP_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// Map `f` over `items` on up to `threads` OS threads, returning results
+/// in item order. Jobs are claimed through a shared atomic cursor, so
+/// long jobs do not convoy behind short ones. A panicking job poisons
+/// the cursor: other workers stop claiming new jobs and the panic
+/// propagates to the caller once in-flight jobs finish.
+pub fn map<I, T, F>(items: &[I], threads: usize, f: F) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(usize, &I) -> T + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+    let out: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, &items[i]))) {
+                    Ok(r) => *out[i].lock().unwrap() = Some(r),
+                    Err(payload) => {
+                        stop.store(true, Ordering::Relaxed);
+                        std::panic::resume_unwind(payload);
+                    }
+                }
+            });
+        }
+    });
+    out.into_iter()
+        .map(|m| m.into_inner().unwrap().expect("sweep job did not complete"))
+        .collect()
+}
+
+/// Convenience: [`map`] with [`default_threads`].
+pub fn map_default<I, T, F>(items: &[I], f: F) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(usize, &I) -> T + Sync,
+{
+    map(items, default_threads(), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn results_are_in_item_order() {
+        let items: Vec<u64> = (0..97).collect();
+        let out = map(&items, 8, |i, &x| {
+            assert_eq!(i as u64, x);
+            x * 2
+        });
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input_yields_empty_output() {
+        let out: Vec<u64> = map(&[] as &[u64], 4, |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_items_is_fine() {
+        let out = map(&[1u64, 2, 3], 64, |_, &x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn single_thread_matches_multi_thread() {
+        let items: Vec<u64> = (0..40).collect();
+        let job = |_: usize, &x: &u64| {
+            // A deterministic per-item computation with its own "seed".
+            let mut s = x.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+            for _ in 0..100 {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+            }
+            s
+        };
+        let a = map(&items, 1, job);
+        let b = map(&items, 7, job);
+        assert_eq!(a, b, "thread count must not change results");
+    }
+
+    #[test]
+    fn panics_propagate_to_caller() {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            map(&[1u64, 2, 3, 4], 2, |_, &x| {
+                if x == 2 {
+                    panic!("boom");
+                }
+                x
+            })
+        }));
+        assert!(result.is_err(), "a panicking job must fail the sweep");
+    }
+
+    #[test]
+    fn work_actually_spreads_across_threads() {
+        let items: Vec<usize> = (0..64).collect();
+        let ids = map(&items, 4, |_, _| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            format!("{:?}", std::thread::current().id())
+        });
+        let distinct: HashSet<&String> = ids.iter().collect();
+        assert!(distinct.len() > 1, "expected more than one worker thread");
+    }
+}

@@ -254,3 +254,122 @@ fn world_returned_after_run() {
     let (w, _) = eng.run().unwrap();
     assert_eq!(w.log, vec![(0, "pre".into())]);
 }
+
+// ---------------------------------------------------------------------
+// PR 1 (sim hot-path rework): typed events, microtasks, waiter ordering
+// ---------------------------------------------------------------------
+
+/// Pins the waiter fire-order contract: satisfied waiters fire in
+/// ascending threshold order, and REGISTRATION ORDER among waiters with
+/// the same threshold (the ordered-waiter refactor must never silently
+/// change this).
+#[test]
+fn same_threshold_waiters_fire_in_registration_order() {
+    let eng = Engine::new(TestWorld::default(), 1);
+    eng.setup(|_, core| {
+        let c = core.new_cell("ctr", 0);
+        // Registered: a(5), b(3), c(5), d(3), e(4).
+        for (name, th) in [("a", 5u64), ("b", 3), ("c", 5), ("d", 3), ("e", 4)] {
+            core.on_ge(c, th, "w", Box::new(move |w, core| log_ev(w, core, name)));
+        }
+        core.schedule(10, Box::new(move |_, core| core.write_cell(c, 5)));
+    });
+    let (w, _) = eng.run().unwrap();
+    let msgs: Vec<_> = w.log.iter().map(|(_, m)| m.as_str()).collect();
+    // Ascending threshold; b before d (both 3), a before c (both 5).
+    assert_eq!(msgs, vec!["b", "d", "e", "a", "c"]);
+}
+
+/// Partially satisfied cells fire only the satisfied prefix, keeping the
+/// rest ordered.
+#[test]
+fn partial_fire_drains_only_satisfied_thresholds() {
+    let eng = Engine::new(TestWorld::default(), 1);
+    eng.setup(|_, core| {
+        let c = core.new_cell("ctr", 0);
+        for (name, th) in [("t5", 5u64), ("t2", 2), ("t9", 9)] {
+            core.on_ge(c, th, "w", Box::new(move |w, core| log_ev(w, core, name)));
+        }
+        core.schedule(10, Box::new(move |_, core| core.write_cell(c, 4)));
+        core.schedule(20, Box::new(move |_, core| core.write_cell(c, 9)));
+    });
+    let (w, _) = eng.run().unwrap();
+    assert_eq!(
+        w.log,
+        vec![(10, "t2".into()), (20, "t5".into()), (20, "t9".into())]
+    );
+}
+
+/// Microtasks (zero-delay continuations) run at the current instant,
+/// FIFO, before any pending heap event that shares the timestamp.
+#[test]
+fn microtasks_run_before_same_time_heap_events() {
+    let eng = Engine::new(TestWorld::default(), 1);
+    eng.setup(|_, core| {
+        core.schedule(
+            10,
+            Box::new(|w, c| {
+                log_ev(w, c, "e1");
+                c.defer(Box::new(|w, c| {
+                    log_ev(w, c, "m1");
+                    c.defer(Box::new(|w, c| log_ev(w, c, "m2")));
+                }));
+            }),
+        );
+        core.schedule(10, Box::new(|w, c| log_ev(w, c, "e2")));
+    });
+    let (w, stats) = eng.run().unwrap();
+    let msgs: Vec<_> = w.log.iter().map(|(_, m)| m.as_str()).collect();
+    assert_eq!(msgs, vec!["e1", "m1", "m2", "e2"]);
+    assert_eq!(stats.microtasks, 2);
+    assert_eq!(stats.events, 4, "microtasks count as events");
+}
+
+/// Typed cell-add events behave exactly like a scheduled closure that
+/// calls `add_cell`, including waiter firing.
+#[test]
+fn typed_cell_add_fires_waiters() {
+    let eng = Engine::new(TestWorld::default(), 1);
+    eng.setup(|_, core| {
+        let c = core.new_cell("ctr", 0);
+        core.on_ge(c, 3, "w", Box::new(|w, core| log_ev(w, core, "fired")));
+        core.schedule_cell_add(5, c, 2); // below threshold
+        core.schedule_cell_add(9, c, 1); // reaches 3
+    });
+    let (w, stats) = eng.run().unwrap();
+    assert_eq!(w.log, vec![(9, "fired".into())]);
+    assert_eq!(stats.cell_writes, 2);
+}
+
+/// `advance(0)` keeps the token: no host switch, no time passes.
+#[test]
+fn advance_zero_is_free() {
+    let mut eng = Engine::new(TestWorld::default(), 1);
+    eng.spawn_host("h", |ctx| {
+        ctx.advance(0);
+        assert_eq!(ctx.now(), 0);
+        ctx.advance(10);
+        ctx.advance(0);
+        assert_eq!(ctx.now(), 10);
+    });
+    let (_, stats) = eng.run().unwrap();
+    // Initial resume + one real advance — the advance(0)s cost nothing.
+    assert_eq!(stats.host_switches, 2);
+}
+
+/// A waiter-woken host resumes at the exact write instant through the
+/// microtask path.
+#[test]
+fn waiter_wakeup_carries_resume_time() {
+    let mut eng = Engine::new(TestWorld::default(), 1);
+    let cell = eng.setup(|_, core| {
+        let c = core.new_cell("flag", 0);
+        core.schedule_cell_add(777, c, 1);
+        c
+    });
+    eng.spawn_host("h", move |ctx| {
+        ctx.wait_ge(cell, 1, "flag");
+        assert_eq!(ctx.now(), 777);
+    });
+    eng.run().unwrap();
+}

@@ -35,15 +35,28 @@ use crate::sim::{CellId, HostCtx};
 use crate::world::World;
 
 /// Errors surfaced to the application (mirrors MPI error classes).
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StError {
-    #[error("ST operations do not support MPI_ANY_SOURCE/MPI_ANY_TAG (paper §III-D)")]
     WildcardUnsupported,
-    #[error("MPIX_Queue {0} was freed")]
     QueueFreed(usize),
-    #[error("MPIX_Free_queue while {0} enqueued operations are incomplete")]
     QueueBusy(u64),
 }
+
+impl std::fmt::Display for StError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StError::WildcardUnsupported => {
+                write!(f, "ST operations do not support MPI_ANY_SOURCE/MPI_ANY_TAG (paper §III-D)")
+            }
+            StError::QueueFreed(q) => write!(f, "MPIX_Queue {q} was freed"),
+            StError::QueueBusy(n) => {
+                write!(f, "MPIX_Free_queue while {n} enqueued operations are incomplete")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StError {}
 
 /// `MPIX_Queue`: maps a GPU stream to the MPI runtime and batches ST ops.
 pub struct MpixQueue {
@@ -163,12 +176,9 @@ pub fn enqueue_send(
                                 cb: Some(Box::new(move |w, core| {
                                     let c = w.cost.progress_completion;
                                     let at = mpi::progress_charge(w, core, rank, c);
-                                    core.schedule_at(
-                                        at,
-                                        Box::new(move |_, core| {
-                                            core.add_cell(comp, 1);
-                                        }),
-                                    );
+                                    // Typed event: the completion-counter
+                                    // update needs no closure.
+                                    core.schedule_cell_add_at(at, comp, 1);
                                 })),
                             };
                             mpi::do_send(w, core, env, src, done);
@@ -241,12 +251,8 @@ pub fn enqueue_recv(
                             cb: Some(Box::new(move |w, core| {
                                 let c = w.cost.progress_completion;
                                 let at = mpi::progress_charge(w, core, rank, c);
-                                core.schedule_at(
-                                    at,
-                                    Box::new(move |_, core| {
-                                        core.add_cell(comp, 1);
-                                    }),
-                                );
+                                // Typed event path, as in enqueue_send.
+                                core.schedule_cell_add_at(at, comp, 1);
                             })),
                         };
                         mpi::post_recv(

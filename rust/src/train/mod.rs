@@ -165,6 +165,7 @@ fn ctx_world_size(ctx: &mut HostCtx<World>) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    #[cfg(feature = "xla")]
     use crate::costmodel::presets;
 
     #[test]
@@ -176,6 +177,8 @@ mod tests {
         assert_ne!(batch_tokens(136, 32, 0, 0), batch_tokens(136, 32, 1, 0));
     }
 
+    /// Needs the PJRT backend (`--features xla` + AOT artifacts).
+    #[cfg(feature = "xla")]
     #[test]
     fn two_rank_training_reduces_loss() {
         let cfg = TrainConfig {

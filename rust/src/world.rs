@@ -124,7 +124,7 @@ impl Topology {
 }
 
 /// Aggregate counters for reporting and assertions.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct Metrics {
     pub eager_sends: u64,
     pub rendezvous_sends: u64,

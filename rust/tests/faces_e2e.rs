@@ -3,6 +3,10 @@
 //! through the simulated NIC/MPI stack, and the final fields are checked
 //! against the sequential CPU reference — the paper's own validation
 //! methodology (§V-A).
+//!
+//! Requires the PJRT backend: built only with `--features xla` (plus the
+//! AOT artifacts from `make artifacts`).
+#![cfg(feature = "xla")]
 
 use stmpi::faces::{run_faces, FacesConfig, Variant};
 use stmpi::world::ComputeMode;

@@ -1,5 +1,9 @@
 //! Integration: AOT artifacts load through PJRT and produce numerics that
 //! match the rust CPU reference (the same math as python's ref.py).
+//!
+//! Requires the PJRT backend: built only with `--features xla` (plus the
+//! AOT artifacts from `make artifacts`).
+#![cfg(feature = "xla")]
 
 use stmpi::runtime::Runtime;
 

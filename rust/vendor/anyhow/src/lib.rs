@@ -1,0 +1,134 @@
+//! Minimal offline-vendored subset of the `anyhow` API.
+//!
+//! The build image has no crates.io access, so this workspace vendors the
+//! small slice of `anyhow` that stmpi actually uses: the [`Error`] type,
+//! the [`Result`] alias, the [`anyhow!`]/[`bail!`] macros, and the
+//! [`Context`] extension trait. Errors are message chains (each
+//! `context(..)` layer prepends to the display), which is all the crate's
+//! error reporting needs.
+
+use std::fmt;
+
+/// A string-backed error value. Like `anyhow::Error` it deliberately does
+/// **not** implement `std::error::Error`, which is what makes the blanket
+/// `From<E: std::error::Error>` conversion below coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer to the message chain.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Self { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result`: defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result`. A single blanket impl over `E: Display` covers both foreign
+/// errors (io, parse, ...) and [`Error`] itself without overlapping
+/// impls.
+pub trait Context<T, E> {
+    /// Wrap the error with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path/xyz")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let err = io_fail().unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.starts_with("reading config: "), "got: {msg}");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero is bad (got {x})");
+            }
+            Err(anyhow!("always fails: {}", x))
+        }
+        assert_eq!(format!("{}", f(0).unwrap_err()), "zero is bad (got 0)");
+        assert_eq!(format!("{}", f(3).unwrap_err()), "always fails: 3");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn g() -> Result<u64> {
+            let n: u64 = "not-a-number".parse()?;
+            Ok(n)
+        }
+        assert!(g().is_err());
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let err = r.context("outer").unwrap_err();
+        assert_eq!(format!("{err}"), "outer: inner");
+    }
+}
