@@ -1,0 +1,60 @@
+//! Workload-engine campaign: run the scenario cross-product on the
+//! parallel sweep executor and emit the comparative JSON + Markdown
+//! report (written to CAMPAIGN_report.{json,md} in the working dir).
+//!
+//! Two parts:
+//! 1. the CI smoke campaign (2 workloads × 2 variants, tiny sizes) with
+//!    hard assertions: validation passes, the JSON report parses, and a
+//!    rerun is byte-identical;
+//! 2. the full default campaign — all five registered workloads × every
+//!    variant × 2 sizes × 2 topologies × 2 seeds — which produces the
+//!    report artifact CI uploads.
+//!
+//! Deterministic at any `STMPI_SWEEP_THREADS`.
+//!
+//! Run: `cargo run --release --example campaign`
+
+use stmpi::workloads::campaign::{json_parses, run_campaign, CampaignSpec};
+
+fn main() {
+    // Part 1: smoke campaign with report assertions.
+    let t0 = std::time::Instant::now();
+    let smoke = CampaignSpec::smoke();
+    let a = run_campaign(&smoke).expect("smoke campaign");
+    assert!(a.all_ok(), "smoke campaign validation failed:\n{}", a.to_markdown());
+    assert!(json_parses(&a.to_json()), "smoke JSON report must parse");
+    let b = run_campaign(&smoke).expect("smoke campaign rerun");
+    assert_eq!(a.to_json(), b.to_json(), "smoke report must be byte-identical across reruns");
+    assert_eq!(a.to_markdown(), b.to_markdown());
+    println!(
+        "smoke campaign OK: {} cells ran, JSON parses, rerun byte-identical (wall {:.1}s)\n",
+        a.ran_cells(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // Part 2: the full campaign — every registered workload and variant.
+    let t1 = std::time::Instant::now();
+    let spec = CampaignSpec {
+        elems: vec![64, 1024],
+        topos: vec![(2, 1), (4, 1)],
+        seeds: vec![11, 23],
+        iters: 2,
+        ..CampaignSpec::default()
+    };
+    let report = run_campaign(&spec).expect("full campaign");
+    println!("{}", report.to_markdown());
+    assert!(report.all_ok(), "campaign validation failed (see report above)");
+    assert!(
+        report.workloads_covered() >= 5,
+        "expected >= 5 workloads, got {}",
+        report.workloads_covered()
+    );
+    assert!(json_parses(&report.to_json()), "full JSON report must parse");
+    std::fs::write("CAMPAIGN_report.json", report.to_json()).expect("write CAMPAIGN_report.json");
+    std::fs::write("CAMPAIGN_report.md", report.to_markdown()).expect("write CAMPAIGN_report.md");
+    println!(
+        "wrote CAMPAIGN_report.json and CAMPAIGN_report.md ({} cells, wall {:.1}s)",
+        report.cells.len(),
+        t1.elapsed().as_secs_f64()
+    );
+}

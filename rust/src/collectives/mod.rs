@@ -1,11 +1,13 @@
-//! Collectives built on the ST primitives: a ring allreduce whose every
-//! communication step is stream-triggered.
+//! Collectives built on the ST primitives: a ring allreduce and a
+//! recursive-doubling allreduce whose every communication step is
+//! stream-triggered.
 //!
 //! This demonstrates the paper's API composing into higher-level
-//! operations: each ring step enqueues a deferred send + receive, one
+//! operations: each step enqueues a deferred send + receive, one
 //! `MPIX_Enqueue_start` triggers them from the GPU stream, and the
-//! reduction kernel that consumes the received chunk is ordered after the
-//! `MPIX_Enqueue_wait` — the host never synchronizes inside the ring.
+//! reduction kernel that consumes the received data is ordered after the
+//! `MPIX_Enqueue_wait` — the host never synchronizes inside the
+//! collective.
 
 use crate::gpu::{self, host_enqueue, KernelPayload, KernelSpec, StreamOp};
 use crate::nic::BufSlice;
@@ -13,8 +15,29 @@ use crate::sim::HostCtx;
 use crate::stx;
 use crate::world::{BufId, World};
 
+/// Precondition violation of [`recursive_doubling_allreduce_st`]: the
+/// rank count is not a power of two (zero included).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NotPowerOfTwo(pub usize);
+
+impl std::fmt::Display for NotPowerOfTwo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "recursive-doubling allreduce needs a power-of-two rank count, got {}", self.0)
+    }
+}
+
+impl std::error::Error for NotPowerOfTwo {}
+
 /// Chunk boundaries for an `n`-way ring over a buffer of `len` elements.
+///
+/// Every chunk is `len/n` or `len/n + 1` elements; the first `len % n`
+/// chunks carry the extra element, offsets are contiguous, and the sizes
+/// always sum to `len` — including the `len < n` (some chunks empty) and
+/// `len == 0` (all chunks empty) edge cases. `n == 0` yields no chunks.
 pub fn chunks(len: usize, n: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
     let base = len / n;
     let rem = len % n;
     let mut out = Vec::with_capacity(n);
@@ -27,12 +50,28 @@ pub fn chunks(len: usize, n: usize) -> Vec<(usize, usize)> {
     out
 }
 
+/// Schedule of reduce-scatter step `s` of the two-phase ring: (chunk to
+/// send, chunk to receive+accumulate, step tag). Shared by the ST ring
+/// and the workload engine's host-driven baseline ring so the two
+/// variants can never drift apart in schedule or tag layout.
+pub fn ring_rs_step(rank: usize, n: usize, s: usize) -> (usize, usize, i32) {
+    ((rank + n - s) % n, (rank + n - s - 1) % n, 1000 + s as i32)
+}
+
+/// Schedule of allgather step `s` of the two-phase ring: (chunk to send,
+/// chunk to receive verbatim, step tag).
+pub fn ring_ag_step(rank: usize, n: usize, s: usize) -> (usize, usize, i32) {
+    ((rank + 1 + n - s) % n, (rank + n - s) % n, 2000 + s as i32)
+}
+
 /// Stream-triggered ring allreduce (sum) of `data` (length `len`) across
 /// all `n` ranks, using `queue` (bound to `sid`) for communication and
 /// `tmp` (at least ceil(len/n) elements) as the receive staging buffer.
 ///
 /// Standard two-phase ring: (n-1) reduce-scatter steps, then (n-1)
 /// allgather steps. Tags encode the step so matching is unambiguous.
+/// `n <= 1` (including the degenerate `n == 0`) is the identity: the
+/// call returns without touching the queue or the buffers.
 #[allow(clippy::too_many_arguments)]
 pub fn ring_allreduce_st(
     ctx: &mut HostCtx<World>,
@@ -45,7 +84,7 @@ pub fn ring_allreduce_st(
     tmp: BufId,
     comm: u16,
 ) {
-    if n == 1 {
+    if n <= 1 {
         return;
     }
     let next = (rank + 1) % n;
@@ -55,11 +94,9 @@ pub fn ring_allreduce_st(
     // Phase 1: reduce-scatter. In step s, send chunk (rank - s) and
     // receive + accumulate chunk (rank - s - 1).
     for s in 0..n - 1 {
-        let send_c = (rank + n - s) % n;
-        let recv_c = (rank + n - s - 1) % n;
+        let (send_c, recv_c, tag) = ring_rs_step(rank, n, s);
         let (soff, slen) = ch[send_c];
         let (roff, rlen) = ch[recv_c];
-        let tag = 1000 + s as i32;
         stx::enqueue_send(ctx, queue, next, BufSlice::new(data, soff, slen), tag, comm)
             .expect("ring send");
         stx::enqueue_recv(ctx, queue, prev, BufSlice::new(tmp, 0, rlen), tag, comm)
@@ -88,11 +125,9 @@ pub fn ring_allreduce_st(
     // Phase 2: allgather. In step s, send chunk (rank + 1 - s) and
     // receive chunk (rank - s) verbatim.
     for s in 0..n - 1 {
-        let send_c = (rank + 1 + n - s) % n;
-        let recv_c = (rank + n - s) % n;
+        let (send_c, recv_c, tag) = ring_ag_step(rank, n, s);
         let (soff, slen) = ch[send_c];
         let (roff, rlen) = ch[recv_c];
-        let tag = 2000 + s as i32;
         stx::enqueue_send(ctx, queue, next, BufSlice::new(data, soff, slen), tag, comm)
             .expect("ring send");
         stx::enqueue_recv(ctx, queue, prev, BufSlice::new(data, roff, rlen), tag, comm)
@@ -100,6 +135,68 @@ pub fn ring_allreduce_st(
         stx::enqueue_start(ctx, queue).expect("ring start");
         stx::enqueue_wait(ctx, queue).expect("ring wait");
     }
+}
+
+/// Stream-triggered recursive-doubling allreduce (sum) of `data` (length
+/// `len`) across all `n` ranks; `n` must be a power of two.
+///
+/// log2(n) rounds; in round k each rank exchanges its *entire* current
+/// vector with partner `rank ^ 2^k` and accumulates — latency-optimal
+/// for small messages where the ring's 2(n-1) serialized steps dominate.
+/// `tmp` must hold at least `len` elements (the full received vector),
+/// unlike the ring's ceil(len/n) staging chunk.
+///
+/// `n == 1` is the identity. `n == 0` or non-power-of-two is rejected
+/// before any operation is enqueued.
+#[allow(clippy::too_many_arguments)]
+pub fn recursive_doubling_allreduce_st(
+    ctx: &mut HostCtx<World>,
+    rank: usize,
+    n: usize,
+    queue: usize,
+    sid: gpu::StreamId,
+    data: BufId,
+    len: usize,
+    tmp: BufId,
+    comm: u16,
+) -> Result<(), NotPowerOfTwo> {
+    if n == 0 || !n.is_power_of_two() {
+        return Err(NotPowerOfTwo(n));
+    }
+    if n == 1 {
+        return Ok(());
+    }
+    let rounds = n.trailing_zeros();
+    for k in 0..rounds {
+        let partner = rank ^ (1usize << k);
+        let tag = 3000 + k as i32;
+        stx::enqueue_send(ctx, queue, partner, BufSlice::whole(data, len), tag, comm)
+            .expect("rd send");
+        stx::enqueue_recv(ctx, queue, partner, BufSlice::whole(tmp, len), tag, comm)
+            .expect("rd recv");
+        stx::enqueue_start(ctx, queue).expect("rd start");
+        stx::enqueue_wait(ctx, queue).expect("rd wait");
+        // Accumulate the partner's vector, ordered after the wait (and
+        // before the next round's trigger, which protects `data` from
+        // being read mid-update).
+        host_enqueue(
+            ctx,
+            sid,
+            StreamOp::Kernel(KernelSpec {
+                name: format!("rd_acc[{k}]"),
+                flops: len as u64,
+                bytes: 3 * 4 * len as u64,
+                payload: KernelPayload::Fn(Box::new(move |w, _| {
+                    let t = w.bufs.get(tmp)[..len].to_vec();
+                    let d = w.bufs.get_mut(data);
+                    for (dst, src) in d[..len].iter_mut().zip(&t) {
+                        *dst += src;
+                    }
+                })),
+            }),
+        );
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -123,6 +220,46 @@ mod tests {
                 off += s;
             }
         }
+    }
+
+    /// Property test (hand-rolled, seeded): for random (len, n) including
+    /// the len < n, len == 0, and n == 0 edge cases, chunks() must yield
+    /// n contiguous chunks whose sizes sum to len, differ by at most one,
+    /// and give the first len % n chunks the extra element.
+    #[test]
+    fn prop_chunks_edge_cases() {
+        let mut rng = crate::sim::rng::SplitMix64::new(0xC0FFEE);
+        for case in 0..500 {
+            // Bias toward the edges: small n and len, frequent zeros.
+            let n = (rng.below(12)) as usize;
+            let len = match case % 4 {
+                0 => 0,
+                1 => (rng.below(n.max(1) as u64)) as usize, // len < n
+                _ => (rng.below(200)) as usize,
+            };
+            let ch = chunks(len, n);
+            assert_eq!(ch.len(), n, "len={len} n={n}");
+            if n == 0 {
+                // No chunks to cover anything: documented degenerate case.
+                continue;
+            }
+            assert_eq!(ch.iter().map(|c| c.1).sum::<usize>(), len, "len={len} n={n}");
+            let (base, rem) = (len / n, len % n);
+            let mut off = 0;
+            for (i, (o, s)) in ch.iter().enumerate() {
+                assert_eq!(*o, off, "offsets must be contiguous (len={len} n={n})");
+                let expect = base + usize::from(i < rem);
+                assert_eq!(*s, expect, "rem distribution (len={len} n={n} i={i})");
+                off += s;
+            }
+            assert_eq!(off, len);
+        }
+    }
+
+    #[test]
+    fn chunks_zero_ways_is_empty() {
+        assert!(chunks(0, 0).is_empty());
+        assert!(chunks(17, 0).is_empty());
     }
 
     fn run_allreduce(nodes: usize, rpn: usize, len: usize) {
@@ -178,5 +315,107 @@ mod tests {
     #[test]
     fn allreduce_single_rank_noop() {
         run_allreduce(1, 1, 8);
+    }
+
+    /// `n == 0` and `n == 1` are the identity: no panic, no traffic, data
+    /// untouched.
+    #[test]
+    fn ring_degenerate_rank_counts_are_noops() {
+        let mut cost = presets::frontier_like();
+        cost.jitter_sigma = 0.0;
+        let mut w = build_world(cost, Topology::new(1, 1));
+        let data = w.bufs.alloc_init(vec![1.0, 2.0, 3.0]);
+        let tmp = w.bufs.alloc(4);
+        let out = run_cluster(w, 1, move |rank, ctx| {
+            let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+            let q = stx::create_queue(ctx, rank, sid, MemOpFlavor::Hip);
+            ring_allreduce_st(ctx, rank, 0, q, sid, data, 3, tmp, COMM_WORLD);
+            ring_allreduce_st(ctx, rank, 1, q, sid, data, 3, tmp, COMM_WORLD);
+            stream_synchronize(ctx, sid);
+            stx::free_queue(ctx, q).expect("queue idle");
+        })
+        .unwrap();
+        assert_eq!(out.world.bufs.get(data), &[1.0, 2.0, 3.0]);
+        assert_eq!(out.world.metrics.bytes_wire, 0);
+        assert_eq!(out.world.metrics.bytes_ipc, 0);
+    }
+
+    fn run_rd_allreduce(nodes: usize, rpn: usize, len: usize) {
+        let n = nodes * rpn;
+        assert!(n.is_power_of_two());
+        let mut cost = presets::frontier_like();
+        cost.jitter_sigma = 0.0;
+        let mut w = build_world(cost, Topology::new(nodes, rpn));
+        let data: Vec<BufId> = (0..n)
+            .map(|r| w.bufs.alloc_init((0..len).map(|i| (r * len + i) as f32).collect()))
+            .collect();
+        let tmp: Vec<BufId> = (0..n).map(|_| w.bufs.alloc(len)).collect();
+        let expect: Vec<f32> = (0..len)
+            .map(|i| (0..n).map(|r| (r * len + i) as f32).sum())
+            .collect();
+        let data2 = data.clone();
+        let out = run_cluster(w, 1, move |rank, ctx| {
+            let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+            let q = stx::create_queue(ctx, rank, sid, MemOpFlavor::Hip);
+            recursive_doubling_allreduce_st(
+                ctx, rank, n, q, sid, data2[rank], len, tmp[rank], COMM_WORLD,
+            )
+            .expect("power-of-two world");
+            stream_synchronize(ctx, sid);
+            stx::free_queue(ctx, q).expect("queue idle");
+        })
+        .unwrap();
+        for r in 0..n {
+            assert_eq!(
+                out.world.bufs.get(data[r]),
+                &expect[..],
+                "rank {r} rd-allreduce result wrong"
+            );
+        }
+    }
+
+    #[test]
+    fn rd_allreduce_two_ranks_inter_node() {
+        run_rd_allreduce(2, 1, 16);
+    }
+
+    #[test]
+    fn rd_allreduce_four_ranks_intra_node() {
+        run_rd_allreduce(1, 4, 33); // odd length
+    }
+
+    #[test]
+    fn rd_allreduce_eight_ranks_mixed() {
+        run_rd_allreduce(4, 2, 64);
+    }
+
+    #[test]
+    fn rd_allreduce_single_rank_noop() {
+        run_rd_allreduce(1, 1, 5);
+    }
+
+    /// Non-power-of-two (and zero) rank counts are rejected before any
+    /// operation is enqueued.
+    #[test]
+    fn rd_allreduce_rejects_bad_rank_counts() {
+        let mut cost = presets::frontier_like();
+        cost.jitter_sigma = 0.0;
+        let w = build_world(cost, Topology::new(3, 1));
+        let out = run_cluster(w, 1, move |rank, ctx| {
+            let (data, tmp) = ctx.with(|w, _| (w.bufs.alloc(4), w.bufs.alloc(4)));
+            let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+            let q = stx::create_queue(ctx, rank, sid, MemOpFlavor::Hip);
+            assert_eq!(
+                recursive_doubling_allreduce_st(ctx, rank, 3, q, sid, data, 4, tmp, COMM_WORLD),
+                Err(NotPowerOfTwo(3))
+            );
+            assert_eq!(
+                recursive_doubling_allreduce_st(ctx, rank, 0, q, sid, data, 4, tmp, COMM_WORLD),
+                Err(NotPowerOfTwo(0))
+            );
+            stx::free_queue(ctx, q).expect("nothing was enqueued");
+        })
+        .unwrap();
+        assert_eq!(out.world.metrics.bytes_wire, 0);
     }
 }

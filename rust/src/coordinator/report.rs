@@ -65,6 +65,49 @@ pub fn render_table(rows: &[Vec<String>]) -> String {
     out
 }
 
+/// Render a Markdown pipe table (first row is the header).
+pub fn markdown_table(rows: &[Vec<String>]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let cols = rows.iter().map(|r| r.len()).max().unwrap();
+    let mut out = String::new();
+    for (ri, row) in rows.iter().enumerate() {
+        out.push('|');
+        for i in 0..cols {
+            out.push(' ');
+            out.push_str(row.get(i).map(|c| c.as_str()).unwrap_or(""));
+            out.push_str(" |");
+        }
+        out.push('\n');
+        if ri == 0 {
+            out.push('|');
+            for _ in 0..cols {
+                out.push_str(" --- |");
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Escape a string for embedding in a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,6 +125,22 @@ mod tests {
     fn pct_delta_signs() {
         assert!((pct_delta(100.0, 110.0) - 10.0).abs() < 1e-12);
         assert!((pct_delta(100.0, 96.0) + 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn markdown_table_renders_header_rule_and_rows() {
+        let t = markdown_table(&[
+            vec!["workload".into(), "avg".into()],
+            vec!["halo3d".into(), "1.00".into()],
+        ]);
+        assert_eq!(t, "| workload | avg |\n| --- | --- |\n| halo3d | 1.00 |\n");
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
     }
 
     #[test]

@@ -30,23 +30,27 @@ pub fn transfer(
 ) -> Time {
     debug_assert_ne!(src_node, dst_node, "fabric::transfer is inter-node only");
     w.metrics.bytes_wire += bytes as u64;
+    w.metrics.wire_msgs += 1;
     let now = core.now();
     let ser = w.cost.wire_serialize(bytes);
 
     // Source egress port serialization.
-    let egress = &mut w.nics[src_node].port.egress_busy_until;
-    let start = now.max(*egress);
+    let start = now.max(w.nics[src_node].port.egress_busy_until);
     let left_src = start + ser;
-    *egress = left_src;
+    w.nics[src_node].port.egress_busy_until = left_src;
+    // Congestion visibility for workload reports: how long this message
+    // queued behind earlier traffic on each port.
+    w.metrics.max_egress_wait_ns = w.metrics.max_egress_wait_ns.max(start - now);
 
     // Wire latency.
     let at_dst = left_src + w.cost.wire_latency;
 
     // Destination ingress port serialization (store-and-forward model:
     // the message occupies the ingress port for its serialization time).
-    let ingress = &mut w.nics[dst_node].port.ingress_busy_until;
-    let arrive = at_dst.max(*ingress) + ser;
-    *ingress = arrive;
+    let in_start = at_dst.max(w.nics[dst_node].port.ingress_busy_until);
+    let arrive = in_start + ser;
+    w.nics[dst_node].port.ingress_busy_until = arrive;
+    w.metrics.max_ingress_wait_ns = w.metrics.max_ingress_wait_ns.max(in_start - at_dst);
 
     core.schedule_at(arrive, cb);
     left_src
@@ -106,6 +110,69 @@ mod tests {
         // is one serialization quantum (1000 ns at 25 B/ns).
         assert_eq!(t[1] - t[0], 1000);
         assert_eq!(t[2] - t[1], 1000);
+    }
+
+    /// Pins the egress/ingress busy-until serialization order for
+    /// simultaneous transfers — the Fig-8-style congestion behaviour the
+    /// incast workload depends on.
+    ///
+    /// Numbers below use the frontier_like preset: ser(25_000 B) =
+    /// 25_000 / 25 B/ns = 1000 ns per port, wire latency 1800 ns.
+    #[test]
+    fn simultaneous_transfers_pin_port_serialization_order() {
+        use std::sync::{Arc, Mutex};
+        let mut w = World::new(presets::frontier_like(), Topology::new(3, 1));
+        for n in 0..3 {
+            w.nics.push(Nic::new(n));
+        }
+        let readout: Arc<Mutex<Vec<(usize, Time)>>> = Arc::new(Mutex::new(Vec::new()));
+        let eng = Engine::new(w, 1);
+        let ro1 = readout.clone();
+        let ro2 = readout.clone();
+        let ro3 = readout.clone();
+        eng.setup(move |w, core| {
+            // Two different sources into one destination at t = 0: the
+            // second message pays the full ingress serialization of the
+            // first on top of its own.
+            transfer(w, core, 1, 0, 25_000, Box::new(move |_, c| ro1.lock().unwrap().push((1, c.now()))));
+            transfer(w, core, 2, 0, 25_000, Box::new(move |_, c| ro2.lock().unwrap().push((2, c.now()))));
+            // A second message out of source 1 at t = 0: it queues on the
+            // *egress* port first, then behind both earlier arrivals on
+            // the shared ingress port.
+            transfer(w, core, 1, 0, 25_000, Box::new(move |_, c| ro3.lock().unwrap().push((3, c.now()))));
+        });
+        let (w, _) = eng.run().unwrap();
+        let arrivals = readout.lock().unwrap().clone();
+        // msg1: egress [0,1000], +1800 wire, ingress [2800,3800].
+        // msg2: egress [0,1000] on its own port, at dst 2800 but ingress
+        //       busy until 3800 -> [3800,4800].
+        // msg3: egress [1000,2000] (behind msg1), at dst 3800, ingress
+        //       busy until 4800 -> [4800,5800].
+        assert_eq!(arrivals, vec![(1, 3800), (2, 4800), (3, 5800)]);
+        // Port busy-until state reflects the serialization order.
+        assert_eq!(w.nics[0].port.ingress_busy_until, 5800);
+        assert_eq!(w.nics[1].port.egress_busy_until, 2000);
+        assert_eq!(w.nics[2].port.egress_busy_until, 1000);
+        assert_eq!(w.nics[0].port.egress_busy_until, 0);
+        // Congestion metrics: msg3 queued 1000 ns on egress (behind msg1)
+        // and 1000 ns on ingress (it reached the port at 3800 with the
+        // port busy until 4800); msg2 also waited 1000 ns on ingress.
+        assert_eq!(w.metrics.wire_msgs, 3);
+        assert_eq!(w.metrics.max_egress_wait_ns, 1000);
+        assert_eq!(w.metrics.max_ingress_wait_ns, 1000);
+    }
+
+    /// An uncontended transfer records zero queueing on both ports.
+    #[test]
+    fn uncontended_transfer_has_zero_port_wait() {
+        let eng = Engine::new(world2(), 1);
+        eng.setup(|w, core| {
+            transfer(w, core, 0, 1, 25_000, Box::new(|_, _| {}));
+        });
+        let (w, _) = eng.run().unwrap();
+        assert_eq!(w.metrics.wire_msgs, 1);
+        assert_eq!(w.metrics.max_egress_wait_ns, 0);
+        assert_eq!(w.metrics.max_ingress_wait_ns, 0);
     }
 
     #[test]

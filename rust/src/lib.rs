@@ -26,4 +26,5 @@ pub mod runtime;
 pub mod sim;
 pub mod stx;
 pub mod train;
+pub mod workloads;
 pub mod world;

@@ -1,9 +1,11 @@
-//! stmpi launcher: run Faces experiments, the figure sweep, or the
-//! ST-allreduce trainer on the simulated cluster from the command line.
+//! stmpi launcher: run Faces experiments, the figure sweep, a workload
+//! campaign, or the ST-allreduce trainer on the simulated cluster from
+//! the command line.
 //!
 //! ```text
 //! stmpi faces [--config faces.toml] [key=value ...]
 //! stmpi sweep                      # regenerate Figs 8-12
+//! stmpi campaign [key=value ...]   # workload-engine comparative report
 //! stmpi train [key=value ...]
 //! stmpi figures fig9 fig11         # selected figures
 //! ```
@@ -13,15 +15,21 @@
 //!   faces.outer=1 faces.middle=2 faces.inner=25
 //!   faces.variant=baseline|st|st-shader  faces.real=true  faces.check=true
 //!   seed=11  jitter=0.03
+//! `campaign` keys (comma lists; empty = defaults):
+//!   campaign.workloads=faces,halo3d,allreduce,alltoall,incast
+//!   campaign.variants=baseline,st,ring-st,rdbl-st  campaign.sizes=256,4096
+//!   campaign.topos=2x1,4x1  campaign.seeds=11,23
+//!   campaign.iters=3  campaign.jitter=0.01  campaign.out=CAMPAIGN_report
 //! `train` keys: train.nodes, train.rpn, train.steps, seed.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use stmpi::coordinator::config::Config;
 use stmpi::costmodel::{presets, MemOpFlavor};
 use stmpi::faces::figures::{all_figures, run_figure, Loops, FIGURE_G, SEEDS};
 use stmpi::faces::{run_faces, FacesConfig, Variant};
 use stmpi::train::{train, TrainConfig};
+use stmpi::workloads::{run_campaign, CampaignSpec};
 use stmpi::world::ComputeMode;
 
 fn main() {
@@ -36,10 +44,13 @@ fn run() -> Result<()> {
     match args.first().map(|s| s.as_str()) {
         Some("faces") => cmd_faces(&args[1..]),
         Some("sweep") => cmd_sweep(),
+        Some("campaign") => cmd_campaign(&args[1..]),
         Some("figures") => cmd_figures(&args[1..]),
         Some("train") => cmd_train(&args[1..]),
         Some("--help") | Some("-h") | None => {
-            println!("usage: stmpi <faces|sweep|figures|train> [--config FILE] [key=value ...]");
+            println!(
+                "usage: stmpi <faces|sweep|campaign|figures|train> [--config FILE] [key=value ...]"
+            );
             println!("see module docs in rust/src/main.rs for the key list");
             Ok(())
         }
@@ -111,6 +122,66 @@ fn cmd_sweep() -> Result<()> {
     for spec in all_figures() {
         let report = run_figure(&spec, &SEEDS, Loops::default(), FIGURE_G);
         println!("{}", report.render());
+    }
+    Ok(())
+}
+
+fn comma_list(c: &Config, key: &str) -> Vec<String> {
+    c.get(key)
+        .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+        .unwrap_or_default()
+}
+
+fn cmd_campaign(args: &[String]) -> Result<()> {
+    let c = load_config(args)?;
+    let defaults = CampaignSpec::default();
+    let elems = comma_list(&c, "campaign.sizes")
+        .iter()
+        .map(|s| s.parse::<usize>().with_context(|| format!("campaign.sizes entry '{s}'")))
+        .collect::<Result<Vec<_>>>()?;
+    let topo_list = comma_list(&c, "campaign.topos");
+    let topos = if topo_list.is_empty() {
+        defaults.topos.clone()
+    } else {
+        topo_list
+            .iter()
+            .map(|t| -> Result<(usize, usize)> {
+                let (a, b) = t
+                    .split_once('x')
+                    .ok_or_else(|| anyhow::anyhow!("campaign.topos entry '{t}' (want NxR)"))?;
+                Ok((a.trim().parse::<usize>()?, b.trim().parse::<usize>()?))
+            })
+            .collect::<Result<Vec<_>>>()?
+    };
+    let seed_list = comma_list(&c, "campaign.seeds");
+    let seeds = if seed_list.is_empty() {
+        defaults.seeds.clone()
+    } else {
+        seed_list
+            .iter()
+            .map(|s| s.parse::<u64>().with_context(|| format!("campaign.seeds entry '{s}'")))
+            .collect::<Result<Vec<_>>>()?
+    };
+    let spec = CampaignSpec {
+        workloads: comma_list(&c, "campaign.workloads"),
+        variants: comma_list(&c, "campaign.variants"),
+        elems,
+        topos,
+        seeds,
+        iters: c.usize_or("campaign.iters", defaults.iters)?,
+        jitter: c.f64_or("campaign.jitter", defaults.jitter)?,
+        threads: None,
+    };
+    let report = run_campaign(&spec)?;
+    println!("{}", report.to_markdown());
+    let out = c.str_or("campaign.out", "CAMPAIGN_report");
+    std::fs::write(format!("{out}.json"), report.to_json())
+        .with_context(|| format!("writing {out}.json"))?;
+    std::fs::write(format!("{out}.md"), report.to_markdown())
+        .with_context(|| format!("writing {out}.md"))?;
+    println!("wrote {out}.json and {out}.md");
+    if !report.all_ok() {
+        bail!("campaign validation failed (see report above)");
     }
     Ok(())
 }

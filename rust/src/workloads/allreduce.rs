@@ -1,0 +1,253 @@
+//! `allreduce` workload: the ST ring collective wrapped as a sweepable
+//! scenario, plus the recursive-doubling ST variant and a host-driven
+//! baseline ring for contrast.
+//!
+//! Variants:
+//! * `baseline` — host-driven ring: `MPI_Irecv`/`MPI_Isend`/`MPI_Waitall`
+//!   per step with a `hipStreamSynchronize` at every kernel boundary
+//!   (the Fig-1 control path).
+//! * `ring-st` — [`crate::collectives::ring_allreduce_st`]: every step's
+//!   send/recv is stream-triggered, the host never synchronizes inside
+//!   the ring.
+//! * `rdbl-st` — [`crate::collectives::recursive_doubling_allreduce_st`]:
+//!   log2(n) full-vector exchanges; requires a power-of-two world (the
+//!   campaign skips infeasible cells via `configure`).
+//!
+//! Each of the `iters` repetitions re-initializes the vector (untimed),
+//! barriers so repetitions never overlap across ranks, and times one
+//! allreduce + drain. Validation is exact: element j of every rank must
+//! equal `sum over ranks of payload(rank, 0, j)`.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::collectives::{
+    chunks, recursive_doubling_allreduce_st, ring_ag_step, ring_allreduce_st, ring_rs_step,
+};
+use crate::coordinator::{build_world, run_cluster};
+use crate::costmodel::MemOpFlavor;
+use crate::gpu::{self, host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
+use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
+use crate::nic::BufSlice;
+use crate::sim::HostCtx;
+use crate::stx;
+use crate::world::{BufId, ComputeMode, World};
+
+use super::{payload, ScenarioCfg, ScenarioRun, Validation, Workload};
+
+pub struct Allreduce;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    HostRing,
+    RingSt,
+    RdblSt,
+}
+
+fn mode_of(variant: &str) -> Result<Mode> {
+    Ok(match variant {
+        "baseline" => Mode::HostRing,
+        "ring-st" => Mode::RingSt,
+        "rdbl-st" => Mode::RdblSt,
+        other => bail!("allreduce: unknown variant '{other}'"),
+    })
+}
+
+/// Host-driven baseline ring: the same schedule as the ST ring, but the
+/// host drives every step and synchronizes at every kernel boundary.
+#[allow(clippy::too_many_arguments)]
+fn ring_allreduce_host(
+    ctx: &mut HostCtx<World>,
+    rank: usize,
+    n: usize,
+    sid: gpu::StreamId,
+    data: BufId,
+    len: usize,
+    tmp: BufId,
+    comm: u16,
+) {
+    if n <= 1 {
+        return;
+    }
+    let next = (rank + 1) % n;
+    let prev = (rank + n - 1) % n;
+    let ch = chunks(len, n);
+
+    // Phase 1: reduce-scatter (same schedule as the ST ring, by
+    // construction: both call collectives::ring_rs_step).
+    for s in 0..n - 1 {
+        let (send_c, recv_c, tag) = ring_rs_step(rank, n, s);
+        let (soff, slen) = ch[send_c];
+        let (roff, rlen) = ch[recv_c];
+        let rr = mpi::irecv(
+            ctx,
+            rank,
+            SrcSel::Rank(prev),
+            TagSel::Tag(tag),
+            comm,
+            BufSlice::new(tmp, 0, rlen),
+        );
+        let sr = mpi::isend(ctx, rank, next, BufSlice::new(data, soff, slen), tag, comm);
+        mpi::waitall(ctx, &[rr, sr]);
+        host_enqueue(
+            ctx,
+            sid,
+            StreamOp::Kernel(KernelSpec {
+                name: format!("host_ring_acc[{s}]"),
+                flops: rlen as u64,
+                bytes: 3 * 4 * rlen as u64,
+                payload: KernelPayload::Fn(Box::new(move |w, _| {
+                    let t = w.bufs.get(tmp)[..rlen].to_vec();
+                    let d = w.bufs.get_mut(data);
+                    for (dst, src) in d[roff..roff + rlen].iter_mut().zip(&t) {
+                        *dst += src;
+                    }
+                })),
+            }),
+        );
+        // Kernel-boundary sync before the next step may send this chunk.
+        stream_synchronize(ctx, sid);
+    }
+
+    // Phase 2: allgather (received chunks land in place).
+    for s in 0..n - 1 {
+        let (send_c, recv_c, tag) = ring_ag_step(rank, n, s);
+        let (soff, slen) = ch[send_c];
+        let (roff, rlen) = ch[recv_c];
+        let rr = mpi::irecv(
+            ctx,
+            rank,
+            SrcSel::Rank(prev),
+            TagSel::Tag(tag),
+            comm,
+            BufSlice::new(data, roff, rlen),
+        );
+        let sr = mpi::isend(ctx, rank, next, BufSlice::new(data, soff, slen), tag, comm);
+        mpi::waitall(ctx, &[rr, sr]);
+    }
+}
+
+impl Workload for Allreduce {
+    fn name(&self) -> &'static str {
+        "allreduce"
+    }
+
+    fn description(&self) -> &'static str {
+        "allreduce(sum): host ring vs ST ring vs ST recursive doubling, exact-validated"
+    }
+
+    fn variants(&self) -> &'static [&'static str] {
+        &["baseline", "ring-st", "rdbl-st"]
+    }
+
+    fn default_elems(&self) -> &'static [usize] {
+        &[256, 4096, 65536]
+    }
+
+    fn configure(&self, cfg: &ScenarioCfg) -> Result<()> {
+        let mode = mode_of(&cfg.variant)?;
+        let n = cfg.world_size();
+        if n == 0 {
+            bail!("allreduce: empty world");
+        }
+        if cfg.elems == 0 {
+            bail!("allreduce: vector must carry at least one element");
+        }
+        if mode == Mode::RdblSt && !n.is_power_of_two() {
+            bail!("allreduce/rdbl-st: world size {n} is not a power of two");
+        }
+        Ok(())
+    }
+
+    fn run(&self, cfg: &ScenarioCfg) -> Result<ScenarioRun> {
+        self.configure(cfg)?;
+        let mode = mode_of(&cfg.variant)?;
+        let n = cfg.world_size();
+        let len = cfg.elems;
+
+        let mut world = build_world(cfg.cost.clone(), cfg.topology());
+        world.compute = ComputeMode::Real;
+        let data: Vec<BufId> = (0..n).map(|_| world.bufs.alloc(len)).collect();
+        // `tmp` sized for the recursive-doubling full-vector exchange; the
+        // ring only stages ceil(len/n) elements in it.
+        let tmp: Vec<BufId> = (0..n).map(|_| world.bufs.alloc(len)).collect();
+        let images: Arc<Vec<Vec<f32>>> =
+            Arc::new((0..n).map(|r| (0..len).map(|j| payload(r, 0, j)).collect()).collect());
+        let expect: Vec<f32> =
+            (0..len).map(|j| (0..n).map(|r| payload(r, 0, j)).sum()).collect();
+
+        let times: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(vec![0; n]));
+        let iters = cfg.iters;
+        let (data2, tmp2, images2, times2) =
+            (data.clone(), tmp.clone(), images.clone(), times.clone());
+        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
+            let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+            let queue = match mode {
+                Mode::HostRing => None,
+                _ => Some(stx::create_queue(ctx, rank, sid, MemOpFlavor::Hip)),
+            };
+            let (d, t) = (data2[rank], tmp2[rank]);
+            let mut acc = 0u64;
+            for rep in 0..iters {
+                // (Re)initialize the vector — untimed, then barrier so
+                // repetitions never overlap across ranks. The image
+                // travels by Arc, not by per-repetition clone.
+                let images_k = images2.clone();
+                ctx.with(move |w, _| {
+                    w.bufs.get_mut(d)[..len].copy_from_slice(&images_k[rank]);
+                });
+                mpi::barrier(ctx, rank, n, COMM_WORLD, rep as u32);
+                let t0 = ctx.now();
+                match mode {
+                    Mode::HostRing => {
+                        ring_allreduce_host(ctx, rank, n, sid, d, len, t, COMM_WORLD)
+                    }
+                    Mode::RingSt => {
+                        ring_allreduce_st(ctx, rank, n, queue.unwrap(), sid, d, len, t, COMM_WORLD)
+                    }
+                    Mode::RdblSt => recursive_doubling_allreduce_st(
+                        ctx,
+                        rank,
+                        n,
+                        queue.unwrap(),
+                        sid,
+                        d,
+                        len,
+                        t,
+                        COMM_WORLD,
+                    )
+                    .expect("configure() gates on power-of-two worlds"),
+                }
+                stream_synchronize(ctx, sid);
+                acc += ctx.now() - t0;
+            }
+            if let Some(q) = queue {
+                stx::free_queue(ctx, q).expect("allreduce queue idle at teardown");
+            }
+            times2.lock().unwrap()[rank] = acc;
+        })
+        .map_err(|e| anyhow!("allreduce run failed: {e}"))?;
+
+        let mut validation = Validation::Passed { checked: n * len };
+        'outer: for (r, d) in data.iter().enumerate() {
+            let got = out.world.bufs.get(*d);
+            for (j, (&g, &e)) in got.iter().zip(&expect).enumerate() {
+                if g != e {
+                    validation = Validation::Failed {
+                        detail: format!("rank {r} elem {j}: {g} != {e}"),
+                    };
+                    break 'outer;
+                }
+            }
+        }
+
+        let rank_time = times.lock().unwrap().clone();
+        Ok(ScenarioRun {
+            time_ns: rank_time.iter().copied().max().unwrap_or(0),
+            metrics: out.world.metrics.clone(),
+            stats: out.stats,
+            validation,
+        })
+    }
+}

@@ -1,0 +1,215 @@
+//! `alltoall` workload: transpose-style personalized exchange — every
+//! rank sends a distinct `elems`-sized block to every other rank each
+//! iteration, stressing fabric port serialization (n-1 messages leave
+//! and enter every NIC port back-to-back).
+//!
+//! Per iteration: pre-post n-1 receives → pack kernel (writes all
+//! outgoing blocks) → sends (host-synchronized baseline vs
+//! stream-triggered) → local self-block copy kernel → wait receives →
+//! drain. Validation is exact: the block received from rank `s` must be
+//! `payload(s, my_rank, j)`.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{build_world, run_cluster};
+use crate::gpu::{self, host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
+use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
+use crate::nic::BufSlice;
+use crate::stx;
+use crate::world::ComputeMode;
+
+use super::{payload, st_flavor_of, ScenarioCfg, ScenarioRun, Validation, Workload};
+
+pub struct AllToAll;
+
+const A2A_TAG: i32 = 500;
+
+impl Workload for AllToAll {
+    fn name(&self) -> &'static str {
+        "alltoall"
+    }
+
+    fn description(&self) -> &'static str {
+        "personalized all-to-all (transpose) stressing fabric port serialization"
+    }
+
+    fn variants(&self) -> &'static [&'static str] {
+        &["baseline", "st", "st-shader"]
+    }
+
+    fn default_elems(&self) -> &'static [usize] {
+        &[64, 1024, 16384]
+    }
+
+    fn configure(&self, cfg: &ScenarioCfg) -> Result<()> {
+        st_flavor_of("alltoall", &cfg.variant)?;
+        if cfg.world_size() == 0 {
+            bail!("alltoall: empty world");
+        }
+        if cfg.elems == 0 {
+            bail!("alltoall: blocks must carry at least one element");
+        }
+        Ok(())
+    }
+
+    fn run(&self, cfg: &ScenarioCfg) -> Result<ScenarioRun> {
+        self.configure(cfg)?;
+        let st = st_flavor_of("alltoall", &cfg.variant)?;
+        let n = cfg.world_size();
+        let elems = cfg.elems;
+
+        let mut world = build_world(cfg.cost.clone(), cfg.topology());
+        world.compute = ComputeMode::Real;
+        // Per rank: a send matrix and a recv matrix of n blocks each.
+        let send: Vec<_> = (0..n).map(|_| world.bufs.alloc(n * elems)).collect();
+        let recv: Vec<_> = (0..n).map(|_| world.bufs.alloc(n * elems)).collect();
+        // What rank r's pack kernel writes: block p = payload(r, p, j).
+        let images: Arc<Vec<Vec<f32>>> = Arc::new(
+            (0..n)
+                .map(|r| {
+                    (0..n)
+                        .flat_map(|p| (0..elems).map(move |j| payload(r, p, j)))
+                        .collect()
+                })
+                .collect(),
+        );
+
+        let times: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(vec![0; n]));
+        let iters = cfg.iters;
+        let (send2, recv2, images2, times2) =
+            (send.clone(), recv.clone(), images.clone(), times.clone());
+        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
+            let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+            let queue = st.map(|flavor| stx::create_queue(ctx, rank, sid, flavor));
+            let (sb, rb) = (send2[rank], recv2[rank]);
+
+            let t0 = ctx.now();
+            for _iter in 0..iters {
+                // 1. Pre-post receives: block s of the recv matrix takes
+                //    rank s's message (src-disambiguated, shared tag).
+                let mut rreqs = Vec::with_capacity(n - 1);
+                for s in 0..n {
+                    if s == rank {
+                        continue;
+                    }
+                    rreqs.push(mpi::irecv(
+                        ctx,
+                        rank,
+                        SrcSel::Rank(s),
+                        TagSel::Tag(A2A_TAG),
+                        COMM_WORLD,
+                        BufSlice::new(rb, s * elems, elems),
+                    ));
+                }
+                // 2. Pack kernel: write all n outgoing blocks (the image
+                //    travels by Arc, not by per-iteration clone).
+                let images_k = images2.clone();
+                let total = n * elems;
+                host_enqueue(
+                    ctx,
+                    sid,
+                    StreamOp::Kernel(KernelSpec {
+                        name: "a2a_pack".into(),
+                        flops: 0,
+                        bytes: 2 * 4 * total as u64,
+                        payload: KernelPayload::Fn(Box::new(move |w, _| {
+                            w.bufs.get_mut(sb)[..total].copy_from_slice(&images_k[rank]);
+                        })),
+                    }),
+                );
+                // 3. Sends to all peers.
+                match queue {
+                    None => {
+                        stream_synchronize(ctx, sid);
+                        let mut sreqs = Vec::with_capacity(n - 1);
+                        for p in 0..n {
+                            if p == rank {
+                                continue;
+                            }
+                            sreqs.push(mpi::isend(
+                                ctx,
+                                rank,
+                                p,
+                                BufSlice::new(sb, p * elems, elems),
+                                A2A_TAG,
+                                COMM_WORLD,
+                            ));
+                        }
+                        mpi::waitall(ctx, &sreqs);
+                    }
+                    Some(q) => {
+                        for p in 0..n {
+                            if p == rank {
+                                continue;
+                            }
+                            stx::enqueue_send(
+                                ctx,
+                                q,
+                                p,
+                                BufSlice::new(sb, p * elems, elems),
+                                A2A_TAG,
+                                COMM_WORLD,
+                            )
+                            .expect("alltoall enqueue_send");
+                        }
+                        stx::enqueue_start(ctx, q).expect("alltoall enqueue_start");
+                        stx::enqueue_wait(ctx, q).expect("alltoall enqueue_wait");
+                    }
+                }
+                // 4. Self block: device-local copy (stream-ordered after
+                //    pack in both variants).
+                host_enqueue(
+                    ctx,
+                    sid,
+                    StreamOp::Kernel(KernelSpec {
+                        name: "a2a_self".into(),
+                        flops: 0,
+                        bytes: 2 * 4 * elems as u64,
+                        payload: KernelPayload::Fn(Box::new(move |w, _| {
+                            w.bufs.copy(sb, rank * elems, rb, rank * elems, elems);
+                        })),
+                    }),
+                );
+                // 5. Wait receives, then drain before buffers are reused.
+                mpi::waitall(ctx, &rreqs);
+                stream_synchronize(ctx, sid);
+            }
+            let dt = ctx.now() - t0;
+            if let Some(q) = queue {
+                stx::free_queue(ctx, q).expect("alltoall queue idle at teardown");
+            }
+            times2.lock().unwrap()[rank] = dt;
+        })
+        .map_err(|e| anyhow!("alltoall run failed: {e}"))?;
+
+        // Reference: recv block s on rank r == payload(s, r, j).
+        let mut validation = Validation::Passed { checked: n * n * elems };
+        'outer: for (r, rb) in recv.iter().enumerate() {
+            let got = out.world.bufs.get(*rb);
+            for s in 0..n {
+                for j in 0..elems {
+                    let expect = payload(s, r, j);
+                    if got[s * elems + j] != expect {
+                        validation = Validation::Failed {
+                            detail: format!(
+                                "rank {r} block {s} elem {j}: {} != {expect}",
+                                got[s * elems + j]
+                            ),
+                        };
+                        break 'outer;
+                    }
+                }
+            }
+        }
+
+        let rank_time = times.lock().unwrap().clone();
+        Ok(ScenarioRun {
+            time_ns: rank_time.iter().copied().max().unwrap_or(0),
+            metrics: out.world.metrics.clone(),
+            stats: out.stats,
+            validation,
+        })
+    }
+}

@@ -1,0 +1,589 @@
+//! Campaign driver: run a cross-product of {workload × variant × message
+//! size × topology × seed} on the parallel sweep executor and emit one
+//! comparative report as JSON + Markdown.
+//!
+//! Determinism contract: cells are enumerated in a fixed order (workload
+//! registry order → variant order → size order → topology order), every
+//! job draws randomness only from its own `(cell, seed)` config, and the
+//! sweep executor writes results by job index — so the rendered report
+//! is byte-identical across reruns at any `STMPI_SWEEP_THREADS`
+//! (pinned by `rust/tests/determinism.rs`).
+//!
+//! Infeasible cells (a workload's `configure` rejects the grid point,
+//! e.g. recursive doubling on a non-power-of-two world) are reported as
+//! `skipped` rows instead of failing the campaign.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::report::{json_escape, markdown_table, Summary};
+use crate::costmodel::presets;
+use crate::sim::sweep;
+use crate::world::Topology;
+
+use super::{registry, ScenarioCfg, ScenarioRun, Validation, Workload};
+
+/// What to run: empty vectors mean "use the defaults" (all workloads,
+/// each workload's own variants and default sizes).
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    /// Workload names from the registry; empty = all.
+    pub workloads: Vec<String>,
+    /// Variant-name filter applied to each workload; empty = all.
+    pub variants: Vec<String>,
+    /// Message sizes (f32 elems); empty = each workload's defaults.
+    pub elems: Vec<usize>,
+    /// (nodes, ranks_per_node) grid points.
+    pub topos: Vec<(usize, usize)>,
+    pub seeds: Vec<u64>,
+    /// Timed iterations per run.
+    pub iters: usize,
+    /// Cost-model jitter sigma (timing only; validation is unaffected).
+    pub jitter: f64,
+    /// Sweep worker threads; None = `sweep::default_threads()`.
+    pub threads: Option<usize>,
+}
+
+impl Default for CampaignSpec {
+    fn default() -> Self {
+        Self {
+            workloads: Vec::new(),
+            variants: Vec::new(),
+            elems: Vec::new(),
+            topos: vec![(2, 1), (4, 1)],
+            seeds: vec![11, 23],
+            iters: 3,
+            jitter: 0.01,
+            threads: None,
+        }
+    }
+}
+
+impl CampaignSpec {
+    /// Tiny smoke campaign (2 workloads × 2 variants × 1 size × 1 topo):
+    /// fast enough for CI and the `campaign` example's assertions.
+    pub fn smoke() -> Self {
+        Self {
+            workloads: vec!["halo3d".into(), "allreduce".into()],
+            variants: vec!["baseline".into(), "st".into(), "ring-st".into()],
+            elems: vec![48],
+            topos: vec![(2, 1)],
+            seeds: vec![5, 9],
+            iters: 2,
+            jitter: 0.0,
+            threads: None,
+        }
+    }
+}
+
+/// One rendered grid cell of the campaign report.
+#[derive(Debug, Clone)]
+pub struct CampaignCell {
+    pub workload: String,
+    pub variant: String,
+    pub elems: usize,
+    pub nodes: usize,
+    pub ranks_per_node: usize,
+    /// avg/min/max over seeds in virtual ms; None when the cell was
+    /// skipped as infeasible.
+    pub summary: Option<Summary>,
+    /// Validation label ("passed(n)" / "not-checked" / "FAILED: ..." /
+    /// "skipped: ...").
+    pub validation: String,
+    pub ok: bool,
+    /// Wire metrics of the first seed's run (deterministic).
+    pub bytes_wire: u64,
+    pub wire_msgs: u64,
+    pub max_ingress_wait_ns: u64,
+    pub max_egress_wait_ns: u64,
+    /// Engine events of the first seed's run.
+    pub events: u64,
+}
+
+impl CampaignCell {
+    fn topo_label(&self) -> String {
+        Topology::new(self.nodes, self.ranks_per_node).label()
+    }
+}
+
+/// The assembled campaign report.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    pub seeds: Vec<u64>,
+    pub iters: usize,
+    pub cells: Vec<CampaignCell>,
+}
+
+impl CampaignReport {
+    /// True when no cell failed validation (skipped cells are ok).
+    pub fn all_ok(&self) -> bool {
+        self.cells.iter().all(|c| c.ok)
+    }
+
+    /// Cells that actually ran (not skipped).
+    pub fn ran_cells(&self) -> usize {
+        self.cells.iter().filter(|c| c.summary.is_some()).count()
+    }
+
+    /// Distinct workloads with at least one ran cell.
+    pub fn workloads_covered(&self) -> usize {
+        let mut names: Vec<&str> = self
+            .cells
+            .iter()
+            .filter(|c| c.summary.is_some())
+            .map(|c| c.workload.as_str())
+            .collect();
+        names.sort_unstable();
+        names.dedup();
+        names.len()
+    }
+
+    /// Deterministic JSON rendering (schema in EXPERIMENTS.md).
+    pub fn to_json(&self) -> String {
+        let seeds =
+            self.seeds.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(", ");
+        let mut s = String::new();
+        s.push_str("{\n  \"campaign\": {\n");
+        s.push_str(&format!("    \"seeds\": [{seeds}],\n"));
+        s.push_str(&format!("    \"iters\": {},\n", self.iters));
+        s.push_str("    \"cells\": [\n");
+        for (i, c) in self.cells.iter().enumerate() {
+            s.push_str("      { ");
+            s.push_str(&format!(
+                "\"workload\": \"{}\", \"variant\": \"{}\", \"elems\": {}, \
+                 \"nodes\": {}, \"ranks_per_node\": {}, ",
+                json_escape(&c.workload),
+                json_escape(&c.variant),
+                c.elems,
+                c.nodes,
+                c.ranks_per_node
+            ));
+            match &c.summary {
+                Some(sm) => s.push_str(&format!(
+                    "\"status\": \"ok\", \"avg_ms\": {:.6}, \"min_ms\": {:.6}, \
+                     \"max_ms\": {:.6}, ",
+                    sm.avg, sm.min, sm.max
+                )),
+                None => s.push_str("\"status\": \"skipped\", "),
+            }
+            s.push_str(&format!(
+                "\"validation\": \"{}\", \"bytes_wire\": {}, \"wire_msgs\": {}, \
+                 \"max_ingress_wait_ns\": {}, \"max_egress_wait_ns\": {}, \
+                 \"events\": {} }}",
+                json_escape(&c.validation),
+                c.bytes_wire,
+                c.wire_msgs,
+                c.max_ingress_wait_ns,
+                c.max_egress_wait_ns,
+                c.events
+            ));
+            s.push_str(if i + 1 == self.cells.len() { "\n" } else { ",\n" });
+        }
+        s.push_str("    ]\n  }\n}\n");
+        s
+    }
+
+    /// Deterministic Markdown rendering.
+    pub fn to_markdown(&self) -> String {
+        let mut rows = vec![vec![
+            "workload".to_string(),
+            "variant".to_string(),
+            "elems".to_string(),
+            "topo".to_string(),
+            "avg ms".to_string(),
+            "min ms".to_string(),
+            "max ms".to_string(),
+            "validation".to_string(),
+            "wire B".to_string(),
+            "wire msgs".to_string(),
+            "max ingress wait ns".to_string(),
+            "max egress wait ns".to_string(),
+        ]];
+        for c in &self.cells {
+            let (avg, min, max) = match &c.summary {
+                Some(sm) => (
+                    format!("{:.3}", sm.avg),
+                    format!("{:.3}", sm.min),
+                    format!("{:.3}", sm.max),
+                ),
+                None => ("--".to_string(), "--".to_string(), "--".to_string()),
+            };
+            rows.push(vec![
+                c.workload.clone(),
+                c.variant.clone(),
+                c.elems.to_string(),
+                c.topo_label(),
+                avg,
+                min,
+                max,
+                c.validation.clone(),
+                c.bytes_wire.to_string(),
+                c.wire_msgs.to_string(),
+                c.max_ingress_wait_ns.to_string(),
+                c.max_egress_wait_ns.to_string(),
+            ]);
+        }
+        format!(
+            "# stmpi campaign report\n\n\
+             {} workloads covered, {} cells ran ({} total), seeds {:?}, \
+             {} iters/run, all_ok: {}\n\n{}",
+            self.workloads_covered(),
+            self.ran_cells(),
+            self.cells.len(),
+            self.seeds,
+            self.iters,
+            self.all_ok(),
+            markdown_table(&rows)
+        )
+    }
+}
+
+/// Run a campaign: enumerate the grid, fan the (cell × seed) jobs out on
+/// the sweep executor, aggregate per-cell summaries.
+pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
+    if spec.seeds.is_empty() {
+        bail!("campaign needs at least one seed");
+    }
+    if spec.topos.is_empty() {
+        bail!("campaign needs at least one topology");
+    }
+    if spec.iters == 0 {
+        bail!("campaign needs at least one iteration");
+    }
+    let catalogue = registry();
+    let selected: Vec<&dyn Workload> = if spec.workloads.is_empty() {
+        catalogue.iter().map(|w| w.as_ref()).collect()
+    } else {
+        spec.workloads
+            .iter()
+            .map(|name| {
+                catalogue
+                    .iter()
+                    .find(|w| w.name() == name.as_str())
+                    .map(|w| w.as_ref())
+                    .ok_or_else(|| {
+                        anyhow!("unknown workload '{name}' (known: {:?})", super::names())
+                    })
+            })
+            .collect::<Result<Vec<_>>>()?
+    };
+
+    let mut cost = presets::frontier_like();
+    cost.jitter_sigma = spec.jitter;
+
+    struct CellPlan<'a> {
+        w: &'a dyn Workload,
+        variant: String,
+        elems: usize,
+        nodes: usize,
+        rpn: usize,
+        /// Why the cell was skipped (configure rejection), if it was.
+        skip: Option<String>,
+    }
+
+    let mut plans: Vec<CellPlan<'_>> = Vec::new();
+    for w in &selected {
+        let variants: Vec<&str> = w
+            .variants()
+            .iter()
+            .copied()
+            .filter(|v| spec.variants.is_empty() || spec.variants.iter().any(|f| f == v))
+            .collect();
+        if variants.is_empty() {
+            // Make the exclusion visible in the report instead of
+            // silently dropping the workload from the grid.
+            plans.push(CellPlan {
+                w: *w,
+                variant: "(none)".to_string(),
+                elems: 0,
+                nodes: 0,
+                rpn: 0,
+                skip: Some(format!(
+                    "variant filter {:?} matches none of {:?}",
+                    spec.variants,
+                    w.variants()
+                )),
+            });
+            continue;
+        }
+        let sizes: Vec<usize> =
+            if spec.elems.is_empty() { w.default_elems().to_vec() } else { spec.elems.clone() };
+        for variant in variants {
+            for &elems in &sizes {
+                for &(nodes, rpn) in &spec.topos {
+                    let cfg = ScenarioCfg {
+                        variant: variant.to_string(),
+                        elems,
+                        nodes,
+                        ranks_per_node: rpn,
+                        iters: spec.iters,
+                        seed: spec.seeds[0],
+                        cost: cost.clone(),
+                    };
+                    let skip = w.configure(&cfg).err().map(|e| format!("{e}"));
+                    plans.push(CellPlan {
+                        w: *w,
+                        variant: variant.to_string(),
+                        elems,
+                        nodes,
+                        rpn,
+                        skip,
+                    });
+                }
+            }
+        }
+    }
+
+    if plans.is_empty() {
+        bail!(
+            "campaign planned zero cells: the variant filter {:?} matches no \
+             variant of the selected workloads",
+            spec.variants
+        );
+    }
+
+    // Fan the feasible (cell × seed) grid out on the sweep executor.
+    let jobs: Vec<(usize, u64)> = plans
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.skip.is_none())
+        .flat_map(|(i, _)| spec.seeds.iter().map(move |&s| (i, s)))
+        .collect();
+    if jobs.is_empty() {
+        let reason = plans.iter().find_map(|p| p.skip.clone()).unwrap_or_default();
+        bail!("campaign: every planned cell was skipped as infeasible (e.g. {reason})");
+    }
+    let threads = spec.threads.unwrap_or_else(sweep::default_threads);
+    let results: Vec<Result<ScenarioRun>> = sweep::map(&jobs, threads, |_, &(i, seed)| {
+        let p = &plans[i];
+        let cfg = ScenarioCfg {
+            variant: p.variant.clone(),
+            elems: p.elems,
+            nodes: p.nodes,
+            ranks_per_node: p.rpn,
+            iters: spec.iters,
+            seed,
+            cost: cost.clone(),
+        };
+        p.w.run(&cfg)
+    });
+
+    // Group the results back per cell (job order is cell-major).
+    let mut by_cell: Vec<Vec<ScenarioRun>> = plans.iter().map(|_| Vec::new()).collect();
+    for (&(i, seed), res) in jobs.iter().zip(results) {
+        let p = &plans[i];
+        let run = res.map_err(|e| {
+            anyhow!(
+                "campaign cell {}/{} elems={} {}x{} seed={seed} failed: {e}",
+                p.w.name(),
+                p.variant,
+                p.elems,
+                p.nodes,
+                p.rpn
+            )
+        })?;
+        by_cell[i].push(run);
+    }
+
+    let mut cells = Vec::with_capacity(plans.len());
+    for (i, p) in plans.iter().enumerate() {
+        if let Some(reason) = &p.skip {
+            cells.push(CampaignCell {
+                workload: p.w.name().to_string(),
+                variant: p.variant.clone(),
+                elems: p.elems,
+                nodes: p.nodes,
+                ranks_per_node: p.rpn,
+                summary: None,
+                validation: format!("skipped: {reason}"),
+                ok: true,
+                bytes_wire: 0,
+                wire_msgs: 0,
+                max_ingress_wait_ns: 0,
+                max_egress_wait_ns: 0,
+                events: 0,
+            });
+            continue;
+        }
+        let runs = &by_cell[i];
+        let ms: Vec<f64> = runs.iter().map(|r| r.time_ns as f64 / 1e6).collect();
+        let mut validation = runs[0].validation.clone();
+        for r in runs {
+            if let Validation::Failed { .. } = &r.validation {
+                validation = r.validation.clone();
+            }
+        }
+        let first = &runs[0];
+        cells.push(CampaignCell {
+            workload: p.w.name().to_string(),
+            variant: p.variant.clone(),
+            elems: p.elems,
+            nodes: p.nodes,
+            ranks_per_node: p.rpn,
+            summary: Some(Summary::of(&ms)),
+            validation: validation.label(),
+            ok: validation.ok(),
+            bytes_wire: first.metrics.bytes_wire,
+            wire_msgs: first.metrics.wire_msgs,
+            max_ingress_wait_ns: first.metrics.max_ingress_wait_ns,
+            max_egress_wait_ns: first.metrics.max_egress_wait_ns,
+            events: first.stats.events,
+        });
+    }
+
+    Ok(CampaignReport { seeds: spec.seeds.clone(), iters: spec.iters, cells })
+}
+
+// ---------------------------------------------------------------------
+// Minimal JSON syntax validator
+// ---------------------------------------------------------------------
+
+/// Validate that `s` is one syntactically well-formed JSON value (no
+/// external parser crates are available offline). Escape sequences inside
+/// strings are skipped, not decoded — this is a syntax check, not a
+/// decoder.
+pub fn json_parses(s: &str) -> bool {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    if !parse_value(b, &mut i) {
+        return false;
+    }
+    skip_ws(b, &mut i);
+    i == b.len()
+}
+
+fn skip_ws(b: &[u8], i: &mut usize) {
+    while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+        *i += 1;
+    }
+}
+
+fn parse_value(b: &[u8], i: &mut usize) -> bool {
+    skip_ws(b, i);
+    match b.get(*i).copied() {
+        Some(b'{') => parse_object(b, i),
+        Some(b'[') => parse_array(b, i),
+        Some(b'"') => parse_string(b, i),
+        Some(b't') => parse_lit(b, i, b"true"),
+        Some(b'f') => parse_lit(b, i, b"false"),
+        Some(b'n') => parse_lit(b, i, b"null"),
+        Some(c) if c == b'-' || c.is_ascii_digit() => parse_number(b, i),
+        _ => false,
+    }
+}
+
+fn parse_lit(b: &[u8], i: &mut usize, lit: &[u8]) -> bool {
+    if b[*i..].starts_with(lit) {
+        *i += lit.len();
+        true
+    } else {
+        false
+    }
+}
+
+fn parse_string(b: &[u8], i: &mut usize) -> bool {
+    debug_assert_eq!(b[*i], b'"');
+    *i += 1;
+    while *i < b.len() {
+        match b[*i] {
+            b'"' => {
+                *i += 1;
+                return true;
+            }
+            b'\\' => *i += 2,
+            _ => *i += 1,
+        }
+    }
+    false
+}
+
+fn parse_number(b: &[u8], i: &mut usize) -> bool {
+    if b.get(*i).copied() == Some(b'-') {
+        *i += 1;
+    }
+    let d0 = *i;
+    while *i < b.len() && b[*i].is_ascii_digit() {
+        *i += 1;
+    }
+    if *i == d0 {
+        return false;
+    }
+    if b.get(*i).copied() == Some(b'.') {
+        *i += 1;
+        let f0 = *i;
+        while *i < b.len() && b[*i].is_ascii_digit() {
+            *i += 1;
+        }
+        if *i == f0 {
+            return false;
+        }
+    }
+    if matches!(b.get(*i).copied(), Some(b'e') | Some(b'E')) {
+        *i += 1;
+        if matches!(b.get(*i).copied(), Some(b'+') | Some(b'-')) {
+            *i += 1;
+        }
+        let e0 = *i;
+        while *i < b.len() && b[*i].is_ascii_digit() {
+            *i += 1;
+        }
+        if *i == e0 {
+            return false;
+        }
+    }
+    true
+}
+
+fn parse_object(b: &[u8], i: &mut usize) -> bool {
+    *i += 1; // consume '{'
+    skip_ws(b, i);
+    if b.get(*i).copied() == Some(b'}') {
+        *i += 1;
+        return true;
+    }
+    loop {
+        skip_ws(b, i);
+        if b.get(*i).copied() != Some(b'"') || !parse_string(b, i) {
+            return false;
+        }
+        skip_ws(b, i);
+        if b.get(*i).copied() != Some(b':') {
+            return false;
+        }
+        *i += 1;
+        if !parse_value(b, i) {
+            return false;
+        }
+        skip_ws(b, i);
+        match b.get(*i).copied() {
+            Some(b',') => *i += 1,
+            Some(b'}') => {
+                *i += 1;
+                return true;
+            }
+            _ => return false,
+        }
+    }
+}
+
+fn parse_array(b: &[u8], i: &mut usize) -> bool {
+    *i += 1; // consume '['
+    skip_ws(b, i);
+    if b.get(*i).copied() == Some(b']') {
+        *i += 1;
+        return true;
+    }
+    loop {
+        if !parse_value(b, i) {
+            return false;
+        }
+        skip_ws(b, i);
+        match b.get(*i).copied() {
+            Some(b',') => *i += 1,
+            Some(b']') => {
+                *i += 1;
+                return true;
+            }
+            _ => return false,
+        }
+    }
+}

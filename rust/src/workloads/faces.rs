@@ -1,0 +1,84 @@
+//! `faces` workload: adapter over the existing Faces benchmark
+//! ([`crate::faces::run_faces`]), exposing the paper's nearest-neighbor
+//! halo exchange to the campaign driver.
+//!
+//! The size axis maps to the Faces block edge: `elems` approximates the
+//! face-message payload, so `g = max(4, round(sqrt(elems)))`. Runs use
+//! Modeled compute (the Faces numerics are validated by their own
+//! Real-compute e2e tests), hence [`Validation::NotChecked`].
+
+use anyhow::{bail, Result};
+
+use crate::faces::{run_faces, FacesConfig, Variant};
+use crate::world::ComputeMode;
+
+use super::{grid_for, ScenarioCfg, ScenarioRun, Validation, Workload};
+
+pub struct FacesAdapter;
+
+fn parse_variant(name: &str) -> Result<Variant> {
+    Ok(match name {
+        "baseline" => Variant::Baseline,
+        "st" => Variant::St,
+        "st-shader" => Variant::StShader,
+        other => bail!("faces: unknown variant '{other}'"),
+    })
+}
+
+/// Block edge approximating a face payload of `elems` f32s.
+fn edge_for(elems: usize) -> usize {
+    ((elems as f64).sqrt().round() as usize).max(4)
+}
+
+impl Workload for FacesAdapter {
+    fn name(&self) -> &'static str {
+        "faces"
+    }
+
+    fn description(&self) -> &'static str {
+        "Nekbone nearest-neighbor halo exchange (paper §V), via run_faces"
+    }
+
+    fn variants(&self) -> &'static [&'static str] {
+        &["baseline", "st", "st-shader"]
+    }
+
+    fn default_elems(&self) -> &'static [usize] {
+        // Face payloads of 1 KiB / 16 KiB / 64 KiB (elems * 4 bytes).
+        &[256, 4096, 16384]
+    }
+
+    fn configure(&self, cfg: &ScenarioCfg) -> Result<()> {
+        parse_variant(&cfg.variant)?;
+        if cfg.world_size() == 0 {
+            bail!("faces: empty world");
+        }
+        Ok(())
+    }
+
+    fn run(&self, cfg: &ScenarioCfg) -> Result<ScenarioRun> {
+        self.configure(cfg)?;
+        let variant = parse_variant(&cfg.variant)?;
+        let fc = FacesConfig {
+            dist: grid_for(cfg.world_size()),
+            nodes: cfg.nodes,
+            ranks_per_node: cfg.ranks_per_node,
+            g: edge_for(cfg.elems),
+            outer: 1,
+            middle: 1,
+            inner: cfg.iters,
+            variant,
+            compute: ComputeMode::Modeled,
+            check: false,
+            seed: cfg.seed,
+            cost: cfg.cost.clone(),
+        };
+        let r = run_faces(&fc)?;
+        Ok(ScenarioRun {
+            time_ns: r.time_ns,
+            metrics: r.metrics,
+            stats: r.stats,
+            validation: Validation::NotChecked,
+        })
+    }
+}

@@ -1,0 +1,296 @@
+//! `halo3d` workload: 27-point stencil halo exchange — the Faces pattern
+//! generalized into a standalone, self-validating scenario.
+//!
+//! Every rank of a near-cubic process grid exchanges with all of its up
+//! to 26 neighbors each iteration: face messages carry `elems` f32s, edge
+//! messages `max(elems/16, 1)`, corner messages 1 (the Nekbone surface
+//! ratio, coarsened). Per iteration: pre-post receives → pack kernel →
+//! sends (host-synchronized baseline vs stream-triggered) → wait receives
+//! → unpack-accumulate kernel → drain.
+//!
+//! Validation is exact: send payloads are deterministic small integers
+//! ([`super::payload`]), the unpack kernel accumulates them, and the
+//! host-side reference knows precisely what every accumulator slot must
+//! hold after `iters` iterations. An ST trigger firing before its pack
+//! kernel (a stream-ordering bug) would ship zeros and fail the check.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{build_world, run_cluster};
+use crate::costmodel::MemOpFlavor;
+use crate::faces::domain::ProcGrid;
+use crate::gpu::{self, host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
+use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
+use crate::nic::BufSlice;
+use crate::sim::HostCtx;
+use crate::stx;
+use crate::world::{BufId, ComputeMode, World};
+
+use super::{grid_for, payload, st_flavor_of, ScenarioCfg, ScenarioRun, Validation, Workload};
+
+pub struct Halo3d;
+
+/// Message size for a neighbor of the given order (1 = face, 2 = edge,
+/// 3 = corner).
+fn msg_elems(elems: usize, order: u32) -> usize {
+    match order {
+        1 => elems,
+        2 => (elems / 16).max(1),
+        _ => 1,
+    }
+}
+
+/// One neighbor's slot in the packed send/recv buffers.
+struct NbrPlan {
+    nbr: usize,
+    tag_send: i32,
+    tag_recv: i32,
+    /// The lane the *sender* used when packing what we receive.
+    lane_recv: usize,
+    send_off: usize,
+    recv_off: usize,
+    elems: usize,
+}
+
+/// Per-rank buffers + message schedule.
+struct RankPlan {
+    send: BufId,
+    recv: BufId,
+    acc: BufId,
+    total_send: usize,
+    total_recv: usize,
+    /// What the pack kernel writes each iteration (the rank's surface).
+    send_image: Vec<f32>,
+    nbrs: Vec<NbrPlan>,
+}
+
+fn build_plans(w: &mut World, grid: &ProcGrid, elems: usize) -> Vec<RankPlan> {
+    (0..grid.size())
+        .map(|rank| {
+            let mut nbrs = Vec::new();
+            let mut send_image = Vec::new();
+            let (mut soff, mut roff) = (0usize, 0usize);
+            for (d, nbr) in grid.neighbors(rank) {
+                let m = msg_elems(elems, d.order());
+                let lane_send = d.tag() as usize;
+                for j in 0..m {
+                    send_image.push(payload(rank, lane_send, j));
+                }
+                nbrs.push(NbrPlan {
+                    nbr,
+                    tag_send: d.tag(),
+                    tag_recv: d.opposite().tag(),
+                    lane_recv: d.opposite().tag() as usize,
+                    send_off: soff,
+                    recv_off: roff,
+                    elems: m,
+                });
+                soff += m;
+                roff += m;
+            }
+            let send = w.bufs.alloc(soff);
+            let recv = w.bufs.alloc(roff);
+            let acc = w.bufs.alloc(roff);
+            RankPlan { send, recv, acc, total_send: soff, total_recv: roff, send_image, nbrs }
+        })
+        .collect()
+}
+
+fn rank_program(
+    iters: usize,
+    plans: &Arc<Vec<RankPlan>>,
+    rank: usize,
+    ctx: &mut HostCtx<World>,
+    st: Option<MemOpFlavor>,
+    times: &Arc<Mutex<Vec<u64>>>,
+) {
+    let plan = &plans[rank];
+    let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+    let queue = st.map(|flavor| stx::create_queue(ctx, rank, sid, flavor));
+
+    let t0 = ctx.now();
+    for _iter in 0..iters {
+        // 1. Pre-post all receives (every rank posts receives before
+        //    initiating sends, so rendezvous cannot deadlock).
+        let mut rreqs = Vec::with_capacity(plan.nbrs.len());
+        for m in &plan.nbrs {
+            rreqs.push(mpi::irecv(
+                ctx,
+                rank,
+                SrcSel::Rank(m.nbr),
+                TagSel::Tag(m.tag_recv),
+                COMM_WORLD,
+                BufSlice::new(plan.recv, m.recv_off, m.elems),
+            ));
+        }
+        // 2. Pack kernel: surface -> contiguous send buffer (the image
+        //    travels by Arc, not by per-iteration clone).
+        let (send, total, plans_k) = (plan.send, plan.total_send, plans.clone());
+        host_enqueue(
+            ctx,
+            sid,
+            StreamOp::Kernel(KernelSpec {
+                name: "halo3d_pack".into(),
+                flops: 0,
+                bytes: 2 * 4 * total as u64,
+                payload: KernelPayload::Fn(Box::new(move |w, _| {
+                    w.bufs.get_mut(send)[..total].copy_from_slice(&plans_k[rank].send_image);
+                })),
+            }),
+        );
+        // 3. Sends.
+        match queue {
+            None => {
+                // Baseline: the Fig-1 kernel-boundary sync, then host MPI.
+                stream_synchronize(ctx, sid);
+                let mut sreqs = Vec::with_capacity(plan.nbrs.len());
+                for m in &plan.nbrs {
+                    sreqs.push(mpi::isend(
+                        ctx,
+                        rank,
+                        m.nbr,
+                        BufSlice::new(plan.send, m.send_off, m.elems),
+                        m.tag_send,
+                        COMM_WORLD,
+                    ));
+                }
+                mpi::waitall(ctx, &sreqs);
+            }
+            Some(q) => {
+                // ST: deferred sends triggered in stream order after pack;
+                // the stream (not the host) waits for completion.
+                for m in &plan.nbrs {
+                    stx::enqueue_send(
+                        ctx,
+                        q,
+                        m.nbr,
+                        BufSlice::new(plan.send, m.send_off, m.elems),
+                        m.tag_send,
+                        COMM_WORLD,
+                    )
+                    .expect("halo3d enqueue_send");
+                }
+                stx::enqueue_start(ctx, q).expect("halo3d enqueue_start");
+                stx::enqueue_wait(ctx, q).expect("halo3d enqueue_wait");
+            }
+        }
+        // 4. Wait receives on the host, then unpack-accumulate.
+        mpi::waitall(ctx, &rreqs);
+        let (recv, acc, total_r) = (plan.recv, plan.acc, plan.total_recv);
+        host_enqueue(
+            ctx,
+            sid,
+            StreamOp::Kernel(KernelSpec {
+                name: "halo3d_unpack".into(),
+                flops: total_r as u64,
+                bytes: 3 * 4 * total_r as u64,
+                payload: KernelPayload::Fn(Box::new(move |w, _| {
+                    let r = w.bufs.get(recv)[..total_r].to_vec();
+                    let a = w.bufs.get_mut(acc);
+                    for (dst, src) in a[..total_r].iter_mut().zip(&r) {
+                        *dst += src;
+                    }
+                })),
+            }),
+        );
+        // 5. Drain: every iteration's unpack lands strictly before the
+        //    next iteration's receives reuse the buffers.
+        stream_synchronize(ctx, sid);
+    }
+    let dt = ctx.now() - t0;
+    if let Some(q) = queue {
+        stx::free_queue(ctx, q).expect("halo3d queue idle at teardown");
+    }
+    times.lock().unwrap()[rank] = dt;
+}
+
+impl Workload for Halo3d {
+    fn name(&self) -> &'static str {
+        "halo3d"
+    }
+
+    fn description(&self) -> &'static str {
+        "27-point stencil halo exchange (faces+edges+corners), exact-validated"
+    }
+
+    fn variants(&self) -> &'static [&'static str] {
+        &["baseline", "st", "st-shader"]
+    }
+
+    fn default_elems(&self) -> &'static [usize] {
+        &[64, 1024, 8192]
+    }
+
+    fn configure(&self, cfg: &ScenarioCfg) -> Result<()> {
+        st_flavor_of("halo3d", &cfg.variant)?;
+        if cfg.world_size() == 0 {
+            bail!("halo3d: empty world");
+        }
+        if cfg.elems == 0 {
+            bail!("halo3d: face message must carry at least one element");
+        }
+        // Exact-equality validation: accumulator sums stay exactly
+        // representable in f32 only while iters * max_payload < 2^24
+        // (payload values are < 8192, so 2048 iterations).
+        if cfg.iters > 2048 {
+            bail!("halo3d: exact f32 validation bounds iters to 2048, got {}", cfg.iters);
+        }
+        Ok(())
+    }
+
+    fn run(&self, cfg: &ScenarioCfg) -> Result<ScenarioRun> {
+        self.configure(cfg)?;
+        let st = st_flavor_of("halo3d", &cfg.variant)?;
+        let (px, py, pz) = grid_for(cfg.world_size());
+        let grid = ProcGrid::new(px, py, pz);
+        let mut world = build_world(cfg.cost.clone(), cfg.topology());
+        world.compute = ComputeMode::Real; // Fn-payload kernels move real data
+        let plans = Arc::new(build_plans(&mut world, &grid, cfg.elems));
+        let times: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(vec![0; grid.size()]));
+
+        let iters = cfg.iters;
+        let plans2 = plans.clone();
+        let times2 = times.clone();
+        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
+            rank_program(iters, &plans2, rank, ctx, st, &times2);
+        })
+        .map_err(|e| anyhow!("halo3d run failed: {e}"))?;
+
+        // Host-side reference: every accumulator slot holds iters * the
+        // neighbor's packed value for the opposing direction.
+        let mut checked = 0usize;
+        let mut validation = Validation::Passed { checked: 0 };
+        'outer: for plan in plans.iter() {
+            let acc = out.world.bufs.get(plan.acc);
+            for m in &plan.nbrs {
+                for j in 0..m.elems {
+                    let expect = iters as f32 * payload(m.nbr, m.lane_recv, j);
+                    let got = acc[m.recv_off + j];
+                    if got != expect {
+                        validation = Validation::Failed {
+                            detail: format!(
+                                "acc[nbr {} slot {j}] = {got}, expected {expect}",
+                                m.nbr
+                            ),
+                        };
+                        break 'outer;
+                    }
+                    checked += 1;
+                }
+            }
+        }
+        if validation.ok() {
+            validation = Validation::Passed { checked };
+        }
+
+        let rank_time = times.lock().unwrap().clone();
+        Ok(ScenarioRun {
+            time_ns: rank_time.iter().copied().max().unwrap_or(0),
+            metrics: out.world.metrics.clone(),
+            stats: out.stats,
+            validation,
+        })
+    }
+}

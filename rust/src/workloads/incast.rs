@@ -1,0 +1,188 @@
+//! `incast` workload: N→1 hotspot stress — every non-root rank sends an
+//! `elems`-sized message to rank 0 each iteration, hammering the root
+//! node's NIC ingress port (the store-and-forward busy-until
+//! serialization `fabric::transfer` models and the fabric contention
+//! tests pin down).
+//!
+//! The campaign report surfaces the congestion directly through the
+//! per-workload wire metrics: `max_ingress_wait_ns` grows with the
+//! sender count while `max_egress_wait_ns` stays near zero — the
+//! signature of an incast hotspot (vs the alltoall pattern, which loads
+//! both port directions).
+//!
+//! Validation is exact: the root's slot for sender `s` must hold
+//! `payload(s, 0, j)` after the final iteration.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{build_world, run_cluster};
+use crate::gpu::{self, host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
+use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
+use crate::nic::BufSlice;
+use crate::stx;
+use crate::world::ComputeMode;
+
+use super::{payload, st_flavor_of, ScenarioCfg, ScenarioRun, Validation, Workload};
+
+pub struct Incast;
+
+const ROOT: usize = 0;
+const INCAST_TAG: i32 = 900;
+
+impl Workload for Incast {
+    fn name(&self) -> &'static str {
+        "incast"
+    }
+
+    fn description(&self) -> &'static str {
+        "N->1 hotspot stressing the root NIC ingress port's busy-until serialization"
+    }
+
+    fn variants(&self) -> &'static [&'static str] {
+        &["baseline", "st", "st-shader"]
+    }
+
+    fn default_elems(&self) -> &'static [usize] {
+        &[256, 4096, 65536]
+    }
+
+    fn configure(&self, cfg: &ScenarioCfg) -> Result<()> {
+        st_flavor_of("incast", &cfg.variant)?;
+        if cfg.world_size() < 2 {
+            bail!("incast needs at least one sender besides the root");
+        }
+        if cfg.elems == 0 {
+            bail!("incast: messages must carry at least one element");
+        }
+        Ok(())
+    }
+
+    fn run(&self, cfg: &ScenarioCfg) -> Result<ScenarioRun> {
+        self.configure(cfg)?;
+        let st = st_flavor_of("incast", &cfg.variant)?;
+        let n = cfg.world_size();
+        let elems = cfg.elems;
+
+        let mut world = build_world(cfg.cost.clone(), cfg.topology());
+        world.compute = ComputeMode::Real;
+        // Root sink: one slot per sender (senders 1..n land at slot s-1).
+        let sink = world.bufs.alloc((n - 1) * elems);
+        let send: Vec<_> = (0..n).map(|_| world.bufs.alloc(elems)).collect();
+        let images: Arc<Vec<Vec<f32>>> =
+            Arc::new((0..n).map(|r| (0..elems).map(|j| payload(r, 0, j)).collect()).collect());
+
+        let times: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(vec![0; n]));
+        let iters = cfg.iters;
+        let (send2, images2, times2) = (send.clone(), images.clone(), times.clone());
+        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
+            let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+            // Queue setup outside the timed region (matches halo3d and
+            // alltoall, so the baseline-vs-ST contrast is not skewed by
+            // one-time setup cost).
+            let queue = if rank == ROOT {
+                None
+            } else {
+                st.map(|flavor| stx::create_queue(ctx, rank, sid, flavor))
+            };
+            let t0 = ctx.now();
+            if rank == ROOT {
+                for _iter in 0..iters {
+                    let mut rreqs = Vec::with_capacity(n - 1);
+                    for s in 1..n {
+                        rreqs.push(mpi::irecv(
+                            ctx,
+                            rank,
+                            SrcSel::Rank(s),
+                            TagSel::Tag(INCAST_TAG),
+                            COMM_WORLD,
+                            BufSlice::new(sink, (s - 1) * elems, elems),
+                        ));
+                    }
+                    mpi::waitall(ctx, &rreqs);
+                }
+            } else {
+                let sb = send2[rank];
+                for _iter in 0..iters {
+                    // Pack kernel refreshes the outgoing message (image by
+                    // Arc, not by per-iteration clone).
+                    let images_k = images2.clone();
+                    host_enqueue(
+                        ctx,
+                        sid,
+                        StreamOp::Kernel(KernelSpec {
+                            name: "incast_pack".into(),
+                            flops: 0,
+                            bytes: 2 * 4 * elems as u64,
+                            payload: KernelPayload::Fn(Box::new(move |w, _| {
+                                w.bufs.get_mut(sb)[..elems].copy_from_slice(&images_k[rank]);
+                            })),
+                        }),
+                    );
+                    match queue {
+                        None => {
+                            stream_synchronize(ctx, sid);
+                            let sr = mpi::isend(
+                                ctx,
+                                rank,
+                                ROOT,
+                                BufSlice::whole(sb, elems),
+                                INCAST_TAG,
+                                COMM_WORLD,
+                            );
+                            mpi::wait(ctx, sr);
+                        }
+                        Some(q) => {
+                            stx::enqueue_send(
+                                ctx,
+                                q,
+                                ROOT,
+                                BufSlice::whole(sb, elems),
+                                INCAST_TAG,
+                                COMM_WORLD,
+                            )
+                            .expect("incast enqueue_send");
+                            stx::enqueue_start(ctx, q).expect("incast enqueue_start");
+                            stx::enqueue_wait(ctx, q).expect("incast enqueue_wait");
+                            stream_synchronize(ctx, sid);
+                        }
+                    }
+                }
+            }
+            // Stop the clock before queue teardown (outside the timed
+            // region, like halo3d/alltoall).
+            let dt = ctx.now() - t0;
+            if let Some(q) = queue {
+                stx::free_queue(ctx, q).expect("incast queue idle at teardown");
+            }
+            times2.lock().unwrap()[rank] = dt;
+        })
+        .map_err(|e| anyhow!("incast run failed: {e}"))?;
+
+        let mut validation = Validation::Passed { checked: (n - 1) * elems };
+        let got = out.world.bufs.get(sink);
+        'outer: for s in 1..n {
+            for j in 0..elems {
+                let expect = payload(s, 0, j);
+                if got[(s - 1) * elems + j] != expect {
+                    validation = Validation::Failed {
+                        detail: format!(
+                            "root slot for sender {s} elem {j}: {} != {expect}",
+                            got[(s - 1) * elems + j]
+                        ),
+                    };
+                    break 'outer;
+                }
+            }
+        }
+
+        let rank_time = times.lock().unwrap().clone();
+        Ok(ScenarioRun {
+            time_ns: rank_time.iter().copied().max().unwrap_or(0),
+            metrics: out.world.metrics.clone(),
+            stats: out.stats,
+            validation,
+        })
+    }
+}

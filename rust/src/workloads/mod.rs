@@ -1,0 +1,223 @@
+//! Workload engine: a trait-based scenario subsystem.
+//!
+//! The paper evaluates stream-triggered communication on exactly one
+//! pattern (Faces, the Nekbone nearest-neighbor exchange), but the design
+//! questions it raises — triggered-op counts, progress-thread pressure,
+//! fabric contention — only show up across *diverse* patterns: halos,
+//! collectives, all-to-all, incast. This module turns "a scenario" into a
+//! ~100-line plug-in instead of a bespoke `build_world`/`run_cluster`
+//! module:
+//!
+//! * [`Workload`] — the scenario contract: **configure** (feasibility of
+//!   one grid cell) → **run** (per-rank host actor bodies under
+//!   [`crate::coordinator::run_cluster`]) → **validate** (host-side
+//!   reference where the pattern moves real payloads) → **metrics
+//!   summary** ([`ScenarioRun`]).
+//! * [`registry`] — the name-keyed catalogue of shipped workloads.
+//! * [`campaign`] — the cross-product driver: {workload × variant ×
+//!   message size × topology × seed} on the parallel sweep executor,
+//!   emitting one JSON + Markdown comparative report.
+//!
+//! Shipped workloads:
+//!
+//! | name        | pattern                                          |
+//! |-------------|--------------------------------------------------|
+//! | `faces`     | adapter over [`crate::faces::run_faces`]         |
+//! | `halo3d`    | 27-point stencil exchange (faces+edges+corners)  |
+//! | `allreduce` | ST ring / ST recursive-doubling / host baseline  |
+//! | `alltoall`  | transpose-style personalized exchange            |
+//! | `incast`    | N→1 hotspot stress on one NIC ingress port       |
+
+pub mod campaign;
+
+mod allreduce;
+mod alltoall;
+mod faces;
+mod halo3d;
+mod incast;
+
+pub use campaign::{run_campaign, CampaignReport, CampaignSpec};
+
+use anyhow::{bail, Result};
+
+use crate::costmodel::{CostModel, MemOpFlavor};
+use crate::sim::SimStats;
+use crate::world::{Metrics, Topology};
+
+/// One cell of a campaign grid: everything a workload needs for one run.
+#[derive(Debug, Clone)]
+pub struct ScenarioCfg {
+    /// One of the workload's [`Workload::variants`] names.
+    pub variant: String,
+    /// Per-message payload size in f32 elements (each workload documents
+    /// what exactly it scales by this).
+    pub elems: usize,
+    pub nodes: usize,
+    pub ranks_per_node: usize,
+    /// Timed iterations of the pattern.
+    pub iters: usize,
+    pub seed: u64,
+    pub cost: CostModel,
+}
+
+impl ScenarioCfg {
+    /// Small default cell used by tests.
+    pub fn smoke(variant: &str, nodes: usize, rpn: usize, elems: usize) -> Self {
+        let mut cost = crate::costmodel::presets::frontier_like();
+        cost.jitter_sigma = 0.0;
+        Self {
+            variant: variant.to_string(),
+            elems,
+            nodes,
+            ranks_per_node: rpn,
+            iters: 2,
+            seed: 7,
+            cost,
+        }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.nodes * self.ranks_per_node
+    }
+
+    pub fn topology(&self) -> Topology {
+        Topology::new(self.nodes, self.ranks_per_node)
+    }
+}
+
+/// Validation outcome of one scenario run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Validation {
+    /// `checked` values were compared against the host-side reference and
+    /// all matched exactly.
+    Passed { checked: usize },
+    /// Timing-only run; the pattern's numerics are validated elsewhere
+    /// (e.g. the faces adapter defers to the Real-compute e2e tests).
+    NotChecked,
+    Failed { detail: String },
+}
+
+impl Validation {
+    pub fn ok(&self) -> bool {
+        !matches!(self, Validation::Failed { .. })
+    }
+
+    /// Short label used by the campaign report.
+    pub fn label(&self) -> String {
+        match self {
+            Validation::Passed { checked } => format!("passed({checked})"),
+            Validation::NotChecked => "not-checked".to_string(),
+            Validation::Failed { detail } => format!("FAILED: {detail}"),
+        }
+    }
+}
+
+/// Result of one scenario run: the figure of merit plus the counters the
+/// campaign report aggregates.
+#[derive(Debug)]
+pub struct ScenarioRun {
+    /// Max over ranks of accumulated timed-region wall time (virtual ns).
+    pub time_ns: u64,
+    pub metrics: Metrics,
+    pub stats: SimStats,
+    pub validation: Validation,
+}
+
+/// A communication scenario runnable by the campaign driver.
+///
+/// Contract (documented in EXPERIMENTS.md §Workload layer):
+///
+/// 1. `configure` is a cheap feasibility check of one grid cell; the
+///    campaign skips (and reports) infeasible cells instead of failing.
+/// 2. `run` executes one configured cell to completion: it builds the
+///    world, spawns one host actor per rank, times the pattern, validates
+///    against a host-side reference where applicable, and returns the
+///    summary. Runs must be deterministic functions of the config
+///    (randomness only via `cfg.seed`).
+pub trait Workload: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn description(&self) -> &'static str;
+    /// Variant names in deterministic order (first = reference variant).
+    fn variants(&self) -> &'static [&'static str];
+    /// Default message sizes (f32 elems) used when a campaign does not
+    /// override the size axis.
+    fn default_elems(&self) -> &'static [usize];
+    /// Cheap feasibility check of one grid cell.
+    fn configure(&self, cfg: &ScenarioCfg) -> Result<()>;
+    /// Run one configured cell to completion.
+    fn run(&self, cfg: &ScenarioCfg) -> Result<ScenarioRun>;
+}
+
+/// The name-keyed workload catalogue, in report order.
+pub fn registry() -> Vec<Box<dyn Workload>> {
+    vec![
+        Box::new(faces::FacesAdapter),
+        Box::new(halo3d::Halo3d),
+        Box::new(allreduce::Allreduce),
+        Box::new(alltoall::AllToAll),
+        Box::new(incast::Incast),
+    ]
+}
+
+/// Look a workload up by its registry name.
+pub fn by_name(name: &str) -> Option<Box<dyn Workload>> {
+    registry().into_iter().find(|w| w.name() == name)
+}
+
+/// All registered workload names, in report order.
+pub fn names() -> Vec<&'static str> {
+    registry().iter().map(|w| w.name()).collect()
+}
+
+/// Shared variant axis for the point-to-point workloads: `baseline`
+/// (host-synchronized MPI) vs `st`/`st-shader` (stream-triggered with
+/// the HIP or hand-coded-shader memop flavor, paper §V-F). `workload`
+/// names the caller in the rejection message.
+pub(crate) fn st_flavor_of(workload: &str, variant: &str) -> Result<Option<MemOpFlavor>> {
+    Ok(match variant {
+        "baseline" => None,
+        "st" => Some(MemOpFlavor::Hip),
+        "st-shader" => Some(MemOpFlavor::Shader),
+        other => bail!("{workload}: unknown variant '{other}'"),
+    })
+}
+
+/// Deterministic payload element shared by the validated workloads: small
+/// positive integers (< 8192), exactly representable in f32, so host-side
+/// references can compare with `==` even after accumulation (sums stay
+/// far below 2^24).
+pub(crate) fn payload(rank: usize, lane: usize, j: usize) -> f32 {
+    (((rank * 131 + lane * 31 + j) % 8191) + 1) as f32
+}
+
+/// Choose a (px, py, pz) process grid for `n` ranks, as close to cubic as
+/// the factorization of `n` allows (px >= py >= pz, px*py*pz == n).
+pub fn grid_for(n: usize) -> (usize, usize, usize) {
+    assert!(n >= 1, "grid_for needs at least one rank");
+    let mut best = (n, 1, 1);
+    let mut best_score = n + 2;
+    for pz in 1..=n {
+        if n % pz != 0 {
+            continue;
+        }
+        let m = n / pz;
+        for py in pz..=m {
+            if m % py != 0 {
+                continue;
+            }
+            let px = m / py;
+            if px < py {
+                continue;
+            }
+            let score = px + py + pz;
+            if score < best_score {
+                best_score = score;
+                best = (px, py, pz);
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests;

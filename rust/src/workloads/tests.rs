@@ -1,0 +1,199 @@
+//! Workload-subsystem tests: registry integrity, per-workload smoke runs
+//! with exact validation, grid factorization, campaign determinism, and
+//! the JSON validator.
+
+use super::campaign::{json_parses, run_campaign, CampaignSpec};
+use super::{by_name, grid_for, names, registry, ScenarioCfg, Validation};
+
+#[test]
+fn registry_has_five_unique_workloads() {
+    let names = names();
+    assert_eq!(names, vec!["faces", "halo3d", "allreduce", "alltoall", "incast"]);
+    for n in &names {
+        let w = by_name(n).expect("by_name must resolve every registry name");
+        assert_eq!(w.name(), *n);
+        assert!(w.variants().len() >= 2, "{n}: campaigns need at least two variants");
+        assert!(!w.default_elems().is_empty(), "{n}: needs default sizes");
+        assert!(!w.description().is_empty());
+    }
+    assert!(by_name("no-such-workload").is_none());
+}
+
+/// Every workload × variant runs a tiny inter-node cell and validates.
+#[test]
+fn every_workload_variant_smoke_runs_and_validates() {
+    for w in registry() {
+        for v in w.variants() {
+            let cfg = ScenarioCfg::smoke(v, 2, 1, 24);
+            w.configure(&cfg)
+                .unwrap_or_else(|e| panic!("{}::{v} infeasible on 2x1: {e}", w.name()));
+            let r = w
+                .run(&cfg)
+                .unwrap_or_else(|e| panic!("{}::{v} failed: {e}", w.name()));
+            assert!(
+                r.validation.ok(),
+                "{}::{v} validation: {}",
+                w.name(),
+                r.validation.label()
+            );
+            assert!(r.time_ns > 0, "{}::{v} must spend virtual time", w.name());
+        }
+    }
+}
+
+/// The validated workloads really compare against a reference (not
+/// vacuously NotChecked), and mixed intra/inter-node topologies pass.
+#[test]
+fn validated_workloads_check_data_on_mixed_topology() {
+    for (name, variant) in [
+        ("halo3d", "st"),
+        ("allreduce", "ring-st"),
+        ("allreduce", "rdbl-st"),
+        ("alltoall", "st"),
+        ("incast", "st"),
+    ] {
+        let w = by_name(name).unwrap();
+        let cfg = ScenarioCfg::smoke(variant, 2, 2, 40);
+        let r = w.run(&cfg).unwrap_or_else(|e| panic!("{name}::{variant}: {e}"));
+        match r.validation {
+            Validation::Passed { checked } => {
+                assert!(checked > 0, "{name}::{variant} checked nothing")
+            }
+            other => panic!("{name}::{variant}: expected Passed, got {other:?}"),
+        }
+    }
+}
+
+/// ST variants must exercise the triggered path (deferred-work queues or
+/// progress-thread emulation), the baseline must not.
+#[test]
+fn st_variants_use_triggered_ops() {
+    let w = by_name("halo3d").unwrap();
+    let st = w.run(&ScenarioCfg::smoke("st", 2, 1, 24)).unwrap();
+    let base = w.run(&ScenarioCfg::smoke("baseline", 2, 1, 24)).unwrap();
+    assert!(st.metrics.dwq_triggered > 0, "ST must trigger NIC deferred work");
+    assert_eq!(base.metrics.dwq_triggered, 0, "baseline must not touch the DWQ");
+    assert_eq!(st.metrics.bytes_wire, base.metrics.bytes_wire, "same traffic either way");
+}
+
+/// Infeasible cells are rejected by configure (and later skipped by the
+/// campaign), not run to a panic.
+#[test]
+fn configure_gates_infeasible_cells() {
+    let w = by_name("allreduce").unwrap();
+    assert!(w.configure(&ScenarioCfg::smoke("rdbl-st", 3, 1, 16)).is_err());
+    assert!(w.configure(&ScenarioCfg::smoke("rdbl-st", 4, 1, 16)).is_ok());
+    let w = by_name("incast").unwrap();
+    assert!(w.configure(&ScenarioCfg::smoke("st", 1, 1, 16)).is_err());
+    for name in names() {
+        let w = by_name(name).unwrap();
+        assert!(w.configure(&ScenarioCfg::smoke("no-such-variant", 2, 1, 16)).is_err());
+    }
+}
+
+#[test]
+fn grid_factorization_is_exact_and_near_cubic() {
+    for n in 1..=64 {
+        let (px, py, pz) = grid_for(n);
+        assert_eq!(px * py * pz, n, "grid_for({n})");
+        assert!(px >= py && py >= pz, "grid_for({n}) ordering");
+    }
+    assert_eq!(grid_for(8), (2, 2, 2));
+    assert_eq!(grid_for(4), (2, 2, 1));
+    assert_eq!(grid_for(7), (7, 1, 1));
+    assert_eq!(grid_for(12), (3, 2, 2));
+}
+
+#[test]
+fn smoke_campaign_report_is_deterministic_and_parses() {
+    let mut spec = CampaignSpec::smoke();
+    spec.threads = Some(1);
+    let a = run_campaign(&spec).unwrap();
+    assert!(a.all_ok(), "smoke campaign must validate:\n{}", a.to_markdown());
+    assert_eq!(a.workloads_covered(), 2);
+    assert!(a.ran_cells() >= 4, "2 workloads x 2 variants expected");
+    assert!(json_parses(&a.to_json()), "JSON report must parse:\n{}", a.to_json());
+    // Byte-identical across reruns and across worker-thread counts.
+    spec.threads = Some(4);
+    let b = run_campaign(&spec).unwrap();
+    assert_eq!(a.to_json(), b.to_json(), "thread count must not change the report");
+    assert_eq!(a.to_markdown(), b.to_markdown());
+}
+
+/// Campaigns skip infeasible cells (rdbl-st on 3 nodes) instead of
+/// failing, and say so in the report.
+#[test]
+fn campaign_skips_infeasible_cells() {
+    let spec = CampaignSpec {
+        workloads: vec!["allreduce".into()],
+        variants: vec!["rdbl-st".into()],
+        elems: vec![16],
+        topos: vec![(3, 1), (2, 1)],
+        seeds: vec![5],
+        iters: 1,
+        jitter: 0.0,
+        threads: Some(1),
+    };
+    let r = run_campaign(&spec).unwrap();
+    assert_eq!(r.cells.len(), 2);
+    assert!(r.cells[0].validation.starts_with("skipped:"), "{}", r.cells[0].validation);
+    assert!(r.cells[0].summary.is_none());
+    assert!(r.cells[1].summary.is_some());
+    assert!(r.all_ok());
+    assert!(json_parses(&r.to_json()));
+}
+
+#[test]
+fn campaign_rejects_unknown_workloads_and_empty_axes() {
+    let mut spec = CampaignSpec::smoke();
+    spec.workloads = vec!["bogus".into()];
+    assert!(run_campaign(&spec).is_err());
+    let mut spec = CampaignSpec::smoke();
+    spec.seeds.clear();
+    assert!(run_campaign(&spec).is_err());
+    let mut spec = CampaignSpec::smoke();
+    spec.iters = 0;
+    assert!(run_campaign(&spec).is_err());
+}
+
+#[test]
+fn json_validator_accepts_and_rejects() {
+    for good in [
+        "{}",
+        "[]",
+        "null",
+        "-12.5e-3",
+        "\"a \\\"quoted\\\" string\"",
+        "{\"a\": [1, 2.5, {\"b\": null}], \"c\": \"x\"}",
+        "  { \"k\" : true }  ",
+    ] {
+        assert!(json_parses(good), "should parse: {good}");
+    }
+    for bad in [
+        "",
+        "{",
+        "{\"a\": }",
+        "[1, ]",
+        "{\"a\" 1}",
+        "tru",
+        "1.2.3",
+        "\"unterminated",
+        "{} extra",
+        "{'a': 1}",
+    ] {
+        assert!(!json_parses(bad), "should NOT parse: {bad}");
+    }
+}
+
+#[test]
+fn payload_values_are_small_exact_integers() {
+    for r in 0..8 {
+        for lane in 0..30 {
+            for j in 0..100 {
+                let p = super::payload(r, lane, j);
+                assert!((1.0..=8191.0).contains(&p));
+                assert_eq!(p, p.trunc(), "payload must be integral");
+            }
+        }
+    }
+}

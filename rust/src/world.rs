@@ -121,6 +121,11 @@ impl Topology {
     pub fn same_node(&self, a: usize, b: usize) -> bool {
         self.node_of(a) == self.node_of(b)
     }
+
+    /// Compact human label ("4nx2r"), used by campaign reports.
+    pub fn label(&self) -> String {
+        format!("{}nx{}r", self.nodes, self.ranks_per_node)
+    }
 }
 
 /// Aggregate counters for reporting and assertions.
@@ -130,6 +135,14 @@ pub struct Metrics {
     pub rendezvous_sends: u64,
     pub intra_sends: u64,
     pub bytes_wire: u64,
+    /// Inter-node messages put on the wire.
+    pub wire_msgs: u64,
+    /// Worst queueing delay any message saw on a source egress port
+    /// (first-order fabric congestion signal; see `fabric::transfer`).
+    pub max_egress_wait_ns: u64,
+    /// Worst queueing delay any message saw on a destination ingress
+    /// port (the incast hotspot signal).
+    pub max_ingress_wait_ns: u64,
     pub bytes_ipc: u64,
     pub kernels_launched: u64,
     pub stream_syncs: u64,

@@ -7,6 +7,7 @@ use stmpi::costmodel::presets;
 use stmpi::faces::figures::{fig9, run_figure, Loops, FIGURE_G};
 use stmpi::faces::{run_faces, FacesConfig, Variant};
 use stmpi::sim::{sweep, SimStats};
+use stmpi::workloads::campaign::{run_campaign, CampaignSpec};
 use stmpi::world::ComputeMode;
 
 fn jittered_cfg(variant: Variant, seed: u64) -> FacesConfig {
@@ -84,4 +85,23 @@ fn figure_sweep_is_reproducible() {
 #[test]
 fn helper_configs_are_modeled() {
     assert_eq!(jittered_cfg(Variant::St, 1).compute, ComputeMode::Modeled);
+}
+
+/// The campaign report (the workload engine's end product) is
+/// byte-identical across reruns and across sweep worker-thread counts —
+/// with cost-model jitter live, so determinism must come from the
+/// per-job seeds, not from the absence of randomness.
+#[test]
+fn campaign_report_is_thread_count_invariant() {
+    let mut spec = CampaignSpec::smoke();
+    spec.jitter = 0.01;
+    spec.threads = Some(1);
+    let serial = run_campaign(&spec).unwrap();
+    spec.threads = Some(3);
+    let parallel = run_campaign(&spec).unwrap();
+    let parallel_again = run_campaign(&spec).unwrap();
+    assert_eq!(serial.to_json(), parallel.to_json(), "1 thread vs 3 threads");
+    assert_eq!(parallel.to_json(), parallel_again.to_json(), "repeated parallel runs");
+    assert_eq!(serial.to_markdown(), parallel.to_markdown());
+    assert!(serial.all_ok(), "jitter must not affect validation:\n{}", serial.to_markdown());
 }

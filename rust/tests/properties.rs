@@ -1,6 +1,7 @@
 //! Property-based tests (hand-rolled, seeded — proptest is unavailable
 //! offline): randomized workloads asserting system invariants.
 
+use stmpi::collectives::{recursive_doubling_allreduce_st, ring_allreduce_st};
 use stmpi::coordinator::{build_world, run_cluster};
 use stmpi::costmodel::{presets, MemOpFlavor};
 use stmpi::faces::domain::ProcGrid;
@@ -141,6 +142,61 @@ fn prop_st_completion_accounting() {
                 out.world.bufs.get(dsts[i]),
                 &vec![i as f32; elems][..],
                 "case {case}: ST payload {i}"
+            );
+        }
+    }
+}
+
+/// Both allreduce algorithms agree with the host reference on randomized
+/// power-of-two worlds and vector lengths (including len < n). Values are
+/// small integers, so every accumulation order is exact in f32 and the
+/// comparison is `==`.
+#[test]
+fn prop_ring_and_rd_allreduce_agree_with_reference() {
+    for case in 0..6u64 {
+        let mut rng = SplitMix64::new(900 + case);
+        let nodes = 1usize << rng.below(3); // 1, 2, or 4 nodes
+        let rpn = 1usize << rng.below(2); // 1 or 2 ranks/node
+        let n = nodes * rpn;
+        let len = 1 + rng.below(40) as usize;
+        let mut w = build_world(cost(), Topology::new(nodes, rpn));
+        let init = |r: usize, j: usize| ((r * 37 + j * 11 + case as usize) % 97) as f32;
+        let data_ring: Vec<BufId> = (0..n)
+            .map(|r| w.bufs.alloc_init((0..len).map(|j| init(r, j)).collect()))
+            .collect();
+        let data_rd: Vec<BufId> = (0..n)
+            .map(|r| w.bufs.alloc_init((0..len).map(|j| init(r, j)).collect()))
+            .collect();
+        let tmp: Vec<BufId> = (0..n).map(|_| w.bufs.alloc(len)).collect();
+        let expect: Vec<f32> =
+            (0..len).map(|j| (0..n).map(|r| init(r, j)).sum()).collect();
+        let (dr, dd, tp) = (data_ring.clone(), data_rd.clone(), tmp.clone());
+        let out = run_cluster(w, case, move |rank, ctx| {
+            let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+            let q = stx::create_queue(ctx, rank, sid, MemOpFlavor::Hip);
+            // Ring (tags 1000/2000) then recursive doubling (tags 3000):
+            // disjoint tag spaces, so the phases cannot cross-match even
+            // when ranks skew.
+            ring_allreduce_st(ctx, rank, n, q, sid, dr[rank], len, tp[rank], COMM_WORLD);
+            stream_synchronize(ctx, sid);
+            recursive_doubling_allreduce_st(
+                ctx, rank, n, q, sid, dd[rank], len, tp[rank], COMM_WORLD,
+            )
+            .expect("power-of-two world");
+            stream_synchronize(ctx, sid);
+            stx::free_queue(ctx, q).expect("queue idle");
+        })
+        .unwrap_or_else(|e| panic!("case {case} (n={n} len={len}): {e}"));
+        for r in 0..n {
+            assert_eq!(
+                out.world.bufs.get(data_ring[r]),
+                &expect[..],
+                "case {case}: ring result, rank {r}"
+            );
+            assert_eq!(
+                out.world.bufs.get(data_rd[r]),
+                &expect[..],
+                "case {case}: rd result, rank {r}"
             );
         }
     }
