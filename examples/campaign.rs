@@ -3,9 +3,9 @@
 //! report (written to CAMPAIGN_report.{json,md} in the working dir).
 //!
 //! Two parts:
-//! 1. the CI smoke campaign (2 workloads × 2 variants, tiny sizes) with
-//!    hard assertions: validation passes, the JSON report parses, and a
-//!    rerun is byte-identical;
+//! 1. the CI smoke campaign (2 workloads × 3 variants each — host, ST,
+//!    KT — tiny sizes) with hard assertions: validation passes, the
+//!    JSON report parses, and a rerun is byte-identical;
 //! 2. the full default campaign — all five registered workloads × every
 //!    variant × 2 sizes × 2 topologies × 2 seeds — which produces the
 //!    report artifact CI uploads.

@@ -24,7 +24,7 @@ fn main() {
         outer: 1,
         middle: 2,
         inner: 10,
-        variant: Variant::Baseline,
+        variant: Variant::Host,
         compute: ComputeMode::Real,
         check: true,
         seed: 11,
@@ -36,7 +36,7 @@ fn main() {
     );
 
     let mut rows = Vec::new();
-    for variant in [Variant::Baseline, Variant::St, Variant::StShader] {
+    for variant in [Variant::Host, Variant::StreamTriggered, Variant::StreamTriggeredShader] {
         let cfg = FacesConfig { variant, ..base.clone() };
         let t0 = std::time::Instant::now();
         let r = run_faces(&cfg).expect("faces run failed");

@@ -1,6 +1,7 @@
 //! Regenerate every evaluation figure of the paper in one run
-//! (Figs 8-12; see DESIGN.md §Experiment index and EXPERIMENTS.md for
-//! the paper-vs-measured record).
+//! (Figs 8-12 plus the ST-vs-KT figure and message-size sweep; see
+//! DESIGN.md §Experiment index and EXPERIMENTS.md for the
+//! paper-vs-measured record).
 //!
 //! Each figure's (variant x seed) grid runs in parallel on the
 //! `sim::sweep` executor; per-run seeds keep the report byte-identical
@@ -9,7 +10,10 @@
 //!
 //! Run: `cargo run --release --example faces_sweep`
 
-use stmpi::faces::figures::{all_figures, run_figure, Loops, FIGURE_G, SEEDS};
+use stmpi::faces::figures::{
+    all_figures, render_kt_compare, run_figure, run_kt_compare, Loops, FIGURE_G, KT_COMPARE_GS,
+    SEEDS,
+};
 use stmpi::sim::sweep;
 
 fn main() {
@@ -23,6 +27,20 @@ fn main() {
         let report = run_figure(&spec, &SEEDS, Loops::default(), FIGURE_G);
         println!("{}", report.render());
         println!("(wall {:.1}s)\n", t0.elapsed().as_secs_f64());
+    }
+    // The ST-vs-KT message-size sweep (arXiv 2306.15773 Fig-6-style gap).
+    let t0 = std::time::Instant::now();
+    let rows = run_kt_compare(&KT_COMPARE_GS, &SEEDS, Loops::default());
+    println!("{}", render_kt_compare(&rows));
+    println!("(wall {:.1}s)\n", t0.elapsed().as_secs_f64());
+    for r in &rows {
+        assert!(
+            r.kt.avg <= r.st.avg,
+            "KT must be <= ST at G={}: {:.3} vs {:.3} ms",
+            r.g,
+            r.kt.avg,
+            r.st.avg
+        );
     }
     println!("total wall {:.1}s", t_all.elapsed().as_secs_f64());
 }

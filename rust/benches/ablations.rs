@@ -26,7 +26,7 @@ fn cfg_base() -> FacesConfig {
         outer: 1,
         middle: 2,
         inner: 20,
-        variant: Variant::St,
+        variant: Variant::StreamTriggered,
         compute: ComputeMode::Modeled,
         check: false,
         seed: 11,
@@ -45,9 +45,9 @@ fn run_all_ms(cfgs: &[FacesConfig]) -> Vec<f64> {
 
 /// Build the (baseline, st) config pair for one sweep point.
 fn pair(mut cfg: FacesConfig) -> [FacesConfig; 2] {
-    cfg.variant = Variant::Baseline;
+    cfg.variant = Variant::Host;
     let base = cfg.clone();
-    cfg.variant = Variant::St;
+    cfg.variant = Variant::StreamTriggered;
     [base, cfg]
 }
 
@@ -106,7 +106,7 @@ fn batching_sweep() {
     println!("== ablation: trigger batching (2x2x2, 7 sends per start) ==");
     let mut cfg = cfg_base();
     cfg.dist = (2, 2, 2);
-    cfg.variant = Variant::St;
+    cfg.variant = Variant::StreamTriggered;
     // Unbatched: memop costs scale with the number of messages.
     let mut cfg2 = cfg.clone();
     cfg2.cost.memop_hip *= 7;

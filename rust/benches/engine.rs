@@ -327,7 +327,7 @@ fn fig8_config() -> FacesConfig {
         outer: 1,
         middle: 2,
         inner: 25,
-        variant: Variant::St,
+        variant: Variant::StreamTriggered,
         compute: ComputeMode::Modeled,
         check: false,
         seed: 11,

@@ -1,13 +1,16 @@
-//! Collectives built on the ST primitives: a ring allreduce and a
-//! recursive-doubling allreduce whose every communication step is
-//! stream-triggered.
+//! Collectives built on the triggered-op primitives: a ring allreduce
+//! and a recursive-doubling allreduce whose every communication step is
+//! stream-triggered, plus a kernel-triggered ring
+//! ([`ring_allreduce_kt`]) where the per-step trigger/wait pair rides
+//! the reduction kernels themselves.
 //!
 //! This demonstrates the paper's API composing into higher-level
-//! operations: each step enqueues a deferred send + receive, one
+//! operations: each ST step enqueues a deferred send + receive, one
 //! `MPIX_Enqueue_start` triggers them from the GPU stream, and the
 //! reduction kernel that consumes the received data is ordered after the
 //! `MPIX_Enqueue_wait` — the host never synchronizes inside the
-//! collective.
+//! collective. The KT ring goes further: no per-step stream memory ops
+//! at all (arXiv 2306.15773).
 
 use crate::gpu::{self, host_enqueue, KernelPayload, KernelSpec, StreamOp};
 use crate::nic::BufSlice;
@@ -134,6 +137,100 @@ pub fn ring_allreduce_st(
             .expect("ring recv");
         stx::enqueue_start(ctx, queue).expect("ring start");
         stx::enqueue_wait(ctx, queue).expect("ring wait");
+    }
+}
+
+/// Kernel-triggered ring allreduce (sum): the same two-phase schedule
+/// as [`ring_allreduce_st`] — guaranteed, both call [`ring_rs_step`] /
+/// [`ring_ag_step`] — but with no per-step stream memory ops. Step `s`'s
+/// completion wait rides the prologue of the kernel that consumes its
+/// data, and step `s+1`'s trigger fires from inside that same kernel
+/// once the chunk it sends is globally visible. The allgather phase,
+/// which has no reduction work, is driven by tiny device-side progress
+/// kernels (the fully offloaded pattern of arXiv 2306.15773). Only step
+/// 0 is kicked by a host-enqueued `MPIX_Enqueue_start`: there is no
+/// earlier kernel to ride. The final progress kernel's prologue drains
+/// the last step, so a trailing `stream_synchronize` leaves the queue
+/// idle.
+#[allow(clippy::too_many_arguments)]
+pub fn ring_allreduce_kt(
+    ctx: &mut HostCtx<World>,
+    rank: usize,
+    n: usize,
+    queue: usize,
+    sid: gpu::StreamId,
+    data: BufId,
+    len: usize,
+    tmp: BufId,
+    comm: u16,
+) {
+    if n <= 1 {
+        return;
+    }
+    let next = (rank + 1) % n;
+    let prev = (rank + n - 1) % n;
+    let ch = chunks(len, n);
+    let rs_steps = n - 1;
+    let total_steps = 2 * (n - 1);
+
+    // Post one step's deferred send + receive (reduce-scatter steps
+    // stage the incoming chunk in `tmp`; allgather steps land in place).
+    let post_step = |ctx: &mut HostCtx<World>, i: usize| {
+        let (send_c, recv_c, tag, stage) = if i < rs_steps {
+            let (s, r, t) = ring_rs_step(rank, n, i);
+            (s, r, t, true)
+        } else {
+            let (s, r, t) = ring_ag_step(rank, n, i - rs_steps);
+            (s, r, t, false)
+        };
+        let (soff, slen) = ch[send_c];
+        let (roff, rlen) = ch[recv_c];
+        stx::enqueue_send(ctx, queue, next, BufSlice::new(data, soff, slen), tag, comm)
+            .expect("kt ring send");
+        let dst = if stage { BufSlice::new(tmp, 0, rlen) } else { BufSlice::new(data, roff, rlen) };
+        stx::enqueue_recv(ctx, queue, prev, dst, tag, comm).expect("kt ring recv");
+    };
+
+    // Step 0 is kicked by the one stream memop (data is ready at entry).
+    post_step(ctx, 0);
+    stx::enqueue_start(ctx, queue).expect("kt ring kick");
+
+    for i in 0..total_steps {
+        let mut kt = gpu::KernelCtx::new();
+        // This step's send+recv completion rides the kernel prologue.
+        stx::kt_wait(ctx, queue, &mut kt).expect("kt ring wait");
+        if i + 1 < total_steps {
+            post_step(ctx, i + 1);
+            // The next step's trigger fires at this kernel's tail, once
+            // the chunk it sends is globally visible.
+            stx::kt_start(ctx, queue, &mut kt, 1.0).expect("kt ring start");
+        }
+        let spec = if i < rs_steps {
+            let (_, recv_c, _) = ring_rs_step(rank, n, i);
+            let (roff, rlen) = ch[recv_c];
+            KernelSpec {
+                name: format!("kt_ring_acc[{i}]"),
+                flops: rlen as u64,
+                bytes: 3 * 4 * rlen as u64,
+                payload: KernelPayload::Fn(Box::new(move |w, _| {
+                    let t = w.bufs.get(tmp)[..rlen].to_vec();
+                    let d = w.bufs.get_mut(data);
+                    for (dst, src) in d[roff..roff + rlen].iter_mut().zip(&t) {
+                        *dst += src;
+                    }
+                })),
+            }
+        } else {
+            // Device-side progress kernel: carries the wait/trigger pair
+            // for an allgather step that has no reduction work.
+            KernelSpec {
+                name: format!("kt_ring_step[{i}]"),
+                flops: 0,
+                bytes: 0,
+                payload: KernelPayload::None,
+            }
+        };
+        host_enqueue(ctx, sid, StreamOp::KtKernel(spec, kt));
     }
 }
 
@@ -338,6 +435,78 @@ mod tests {
         assert_eq!(out.world.bufs.get(data), &[1.0, 2.0, 3.0]);
         assert_eq!(out.world.metrics.bytes_wire, 0);
         assert_eq!(out.world.metrics.bytes_ipc, 0);
+    }
+
+    fn run_kt_allreduce(nodes: usize, rpn: usize, len: usize) {
+        let n = nodes * rpn;
+        let mut cost = presets::frontier_like();
+        cost.jitter_sigma = 0.0;
+        let mut w = build_world(cost, Topology::new(nodes, rpn));
+        let data: Vec<BufId> = (0..n)
+            .map(|r| w.bufs.alloc_init((0..len).map(|i| (r * len + i) as f32).collect()))
+            .collect();
+        let tmp: Vec<BufId> = (0..n).map(|_| w.bufs.alloc(len / n + 1)).collect();
+        let expect: Vec<f32> = (0..len)
+            .map(|i| (0..n).map(|r| (r * len + i) as f32).sum())
+            .collect();
+        let data2 = data.clone();
+        let out = run_cluster(w, 1, move |rank, ctx| {
+            let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+            let q = stx::create_queue(ctx, rank, sid, MemOpFlavor::Hip);
+            ring_allreduce_kt(ctx, rank, n, q, sid, data2[rank], len, tmp[rank], COMM_WORLD);
+            stream_synchronize(ctx, sid);
+            stx::free_queue(ctx, q).expect("queue idle after KT ring");
+        })
+        .unwrap();
+        for r in 0..n {
+            assert_eq!(
+                out.world.bufs.get(data[r]),
+                &expect[..],
+                "rank {r} kt-allreduce result wrong"
+            );
+        }
+    }
+
+    #[test]
+    fn kt_allreduce_two_ranks_inter_node() {
+        run_kt_allreduce(2, 1, 16);
+    }
+
+    #[test]
+    fn kt_allreduce_four_ranks_intra_node() {
+        run_kt_allreduce(1, 4, 32);
+    }
+
+    #[test]
+    fn kt_allreduce_mixed_topology_odd_len() {
+        run_kt_allreduce(2, 2, 37);
+    }
+
+    /// KT fires its per-step triggers from inside the reduction kernels:
+    /// the run must record mid-kernel trigger actions and fewer stream
+    /// memops than the ST ring (one kick vs 2(n-1) start/wait pairs).
+    #[test]
+    fn kt_allreduce_uses_kernel_triggers_not_memops() {
+        let n = 4;
+        let len = 32;
+        let mut cost = presets::frontier_like();
+        cost.jitter_sigma = 0.0;
+        let mut w = build_world(cost, Topology::new(n, 1));
+        let data: Vec<BufId> = (0..n).map(|_| w.bufs.alloc(len)).collect();
+        let tmp: Vec<BufId> = (0..n).map(|_| w.bufs.alloc(len)).collect();
+        let out = run_cluster(w, 1, move |rank, ctx| {
+            let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+            let q = stx::create_queue(ctx, rank, sid, MemOpFlavor::Hip);
+            ring_allreduce_kt(ctx, rank, n, q, sid, data[rank], len, tmp[rank], COMM_WORLD);
+            stream_synchronize(ctx, sid);
+            stx::free_queue(ctx, q).expect("queue idle after KT ring");
+        })
+        .unwrap();
+        let m = &out.world.metrics;
+        // 2(n-1) - 1 triggers ride kernels on each of the n ranks.
+        assert_eq!(m.kt_triggers, (n as u64) * (2 * (n as u64 - 1) - 1));
+        // The only memop per rank is the step-0 kick.
+        assert_eq!(m.memops_executed, n as u64);
     }
 
     fn run_rd_allreduce(nodes: usize, rpn: usize, len: usize) {

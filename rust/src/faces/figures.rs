@@ -5,7 +5,8 @@
 //! (the paper averages 5 runs, §V-B) with the jittered cost preset and
 //! produces the paper-style avg/min/max rows plus the baseline-relative
 //! deltas. The benches under `benches/` are thin wrappers that print
-//! these reports; `examples/faces_sweep.rs` runs all five.
+//! these reports; `examples/faces_sweep.rs` runs them all, plus the
+//! ST-vs-KT message-size sweep ([`run_kt_compare`]).
 
 use crate::coordinator::report::{pct_delta, render_table, Summary};
 use crate::costmodel::presets;
@@ -51,7 +52,7 @@ pub fn fig8() -> FigureSpec {
         nodes: 8,
         ranks_per_node: 8,
         dist: (64, 1, 1),
-        variants: &[Variant::Baseline, Variant::St],
+        variants: &[Variant::Host, Variant::StreamTriggered],
         paper_result: "ST ~10% slower (progress-thread emulation dominates intra-node)",
     }
 }
@@ -63,7 +64,7 @@ pub fn fig9() -> FigureSpec {
         nodes: 1,
         ranks_per_node: 8,
         dist: (8, 1, 1),
-        variants: &[Variant::Baseline, Variant::St],
+        variants: &[Variant::Host, Variant::StreamTriggered],
         paper_result: "ST ~4% slower (pure intra-node, progress-thread emulation)",
     }
 }
@@ -75,7 +76,7 @@ pub fn fig10() -> FigureSpec {
         nodes: 8,
         ranks_per_node: 1,
         dist: (8, 1, 1),
-        variants: &[Variant::Baseline, Variant::St],
+        variants: &[Variant::Host, Variant::StreamTriggered],
         paper_result: "ST ~parity with baseline (pure inter-node, NIC offload)",
     }
 }
@@ -87,7 +88,7 @@ pub fn fig11() -> FigureSpec {
         nodes: 8,
         ranks_per_node: 1,
         dist: (2, 2, 2),
-        variants: &[Variant::Baseline, Variant::St],
+        variants: &[Variant::Host, Variant::StreamTriggered],
         paper_result: "ST ~4% faster (NIC offload wins at higher message fan-out)",
     }
 }
@@ -99,13 +100,30 @@ pub fn fig12() -> FigureSpec {
         nodes: 8,
         ranks_per_node: 1,
         dist: (2, 2, 2),
-        variants: &[Variant::Baseline, Variant::St, Variant::StShader],
+        variants: &[Variant::Host, Variant::StreamTriggered, Variant::StreamTriggeredShader],
         paper_result: "ST-shader ~8% faster than baseline (tuned stream memops)",
     }
 }
 
+/// ST-vs-KT on the paper's best inter-node topology (the qualitative
+/// Fig-6 relation of the follow-on paper, arXiv 2306.15773): KT removes
+/// the per-iteration CP/stream handshake ST still pays — one
+/// `writeValue64` plus one `waitValue64`, each with its host-side
+/// enqueue — and releases the NIC from inside the pack kernel.
+pub fn figkt() -> FigureSpec {
+    FigureSpec {
+        id: "figkt",
+        title: "Faces 2x2x2, 8 nodes x 1 rank/node, ST vs KT",
+        nodes: 8,
+        ranks_per_node: 1,
+        dist: (2, 2, 2),
+        variants: &[Variant::Host, Variant::StreamTriggered, Variant::KernelTriggered],
+        paper_result: "KT <= ST: no per-iteration CP memop handshake (arXiv 2306.15773 Fig 6)",
+    }
+}
+
 pub fn all_figures() -> Vec<FigureSpec> {
-    vec![fig8(), fig9(), fig10(), fig11(), fig12()]
+    vec![fig8(), fig9(), fig10(), fig11(), fig12(), figkt()]
 }
 
 /// Result rows of one figure.
@@ -125,7 +143,7 @@ impl FigureReport {
     /// Delta of `v` vs the baseline variant, in percent (positive =
     /// slower than baseline).
     pub fn delta_vs_baseline(&self, v: Variant) -> f64 {
-        pct_delta(self.avg(Variant::Baseline), self.avg(v))
+        pct_delta(self.avg(Variant::Host), self.avg(v))
     }
 
     pub fn render(&self) -> String {
@@ -137,7 +155,7 @@ impl FigureReport {
             "vs baseline".to_string(),
         ]];
         for (v, s) in &self.rows {
-            let delta = if *v == Variant::Baseline {
+            let delta = if *v == Variant::Host {
                 "--".to_string()
             } else {
                 format!("{:+.1}%", self.delta_vs_baseline(*v))
@@ -210,6 +228,103 @@ pub fn run_figure(spec: &FigureSpec, seeds: &[u64], loops: Loops, g: usize) -> F
 /// The standard seeds (5 runs, like the paper).
 pub const SEEDS: [u64; 5] = [11, 23, 37, 53, 71];
 
+// ---------------------------------------------------------------------
+// ST-vs-KT message-size sweep
+// ---------------------------------------------------------------------
+
+/// One row of the ST-vs-KT message-size sweep.
+#[derive(Debug)]
+pub struct KtCompareRow {
+    /// Faces block edge; the face payload is `4 * g * g` bytes.
+    pub g: usize,
+    pub st: Summary,
+    pub kt: Summary,
+}
+
+impl KtCompareRow {
+    /// KT delta vs ST in percent (negative = KT faster).
+    pub fn delta_pct(&self) -> f64 {
+        pct_delta(self.st.avg, self.kt.avg)
+    }
+}
+
+/// Block edges swept by the ST-vs-KT comparison: face payloads from
+/// 4 KiB (eager) to 144 KiB (rendezvous).
+pub const KT_COMPARE_GS: [usize; 4] = [32, 64, 128, 192];
+
+/// The ST-vs-KT latency/overlap comparison figure (the qualitative
+/// Fig-6 gap of arXiv 2306.15773): for every block edge in `gs`, run
+/// Faces on the inter-node 2x2x2 topology under ST and KT. KT removes
+/// the per-iteration CPU/stream handshake ST still pays (the
+/// `writeValue64` + `waitValue64` memop pair and their host enqueues)
+/// and releases the NIC from *inside* the pack kernel, so its latency
+/// is expected at or below ST at every message size (pinned by this
+/// module's tests).
+pub fn run_kt_compare(gs: &[usize], seeds: &[u64], loops: Loops) -> Vec<KtCompareRow> {
+    let variants = [Variant::StreamTriggered, Variant::KernelTriggered];
+    let jobs: Vec<FacesConfig> = gs
+        .iter()
+        .flat_map(|&g| {
+            variants.iter().flat_map(move |&variant| {
+                seeds.iter().map(move |&seed| FacesConfig {
+                    dist: (2, 2, 2),
+                    nodes: 8,
+                    ranks_per_node: 1,
+                    g,
+                    outer: loops.outer,
+                    middle: loops.middle,
+                    inner: loops.inner,
+                    variant,
+                    compute: ComputeMode::Modeled,
+                    check: false,
+                    seed,
+                    cost: presets::frontier_like_jittered(),
+                })
+            })
+        })
+        .collect();
+    let ms = sweep::map_default(&jobs, |_, cfg| {
+        run_faces(cfg).expect("kt-compare run failed").time_ns as f64 / 1e6
+    });
+    let per_g = variants.len() * seeds.len();
+    gs.iter()
+        .enumerate()
+        .map(|(gi, &g)| {
+            let base = gi * per_g;
+            KtCompareRow {
+                g,
+                st: Summary::of(&ms[base..base + seeds.len()]),
+                kt: Summary::of(&ms[base + seeds.len()..base + per_g]),
+            }
+        })
+        .collect()
+}
+
+/// Render the ST-vs-KT sweep as a paper-style table.
+pub fn render_kt_compare(rows: &[KtCompareRow]) -> String {
+    let mut t = vec![vec![
+        "G".to_string(),
+        "face KiB".to_string(),
+        "st avg (ms)".to_string(),
+        "kt avg (ms)".to_string(),
+        "kt vs st".to_string(),
+    ]];
+    for r in rows {
+        t.push(vec![
+            r.g.to_string(),
+            format!("{:.0}", (4 * r.g * r.g) as f64 / 1024.0),
+            format!("{:.3}", r.st.avg),
+            format!("{:.3}", r.kt.avg),
+            format!("{:+.1}%", r.delta_pct()),
+        ]);
+    }
+    format!(
+        "== figkt-sweep — ST vs KT across message sizes ==\n\
+         expectation: KT <= ST at every size (arXiv 2306.15773 Fig 6)\n{}",
+        render_table(&t)
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,24 +336,54 @@ mod tests {
     #[test]
     fn fig9_st_slower_intra_node() {
         let r = quick(&fig9());
-        let d = r.delta_vs_baseline(Variant::St);
+        let d = r.delta_vs_baseline(Variant::StreamTriggered);
         assert!(d > 0.0, "ST must be slower intra-node (paper fig 9), got {d:+.1}%");
     }
 
     #[test]
     fn fig11_st_faster_inter_node_3d() {
         let r = quick(&fig11());
-        let d = r.delta_vs_baseline(Variant::St);
+        let d = r.delta_vs_baseline(Variant::StreamTriggered);
         assert!(d < 0.0, "ST must win the 3-D inter-node case (paper fig 11), got {d:+.1}%");
     }
 
     #[test]
     fn fig12_shader_beats_st_and_baseline() {
         let r = quick(&fig12());
-        let st = r.delta_vs_baseline(Variant::St);
-        let sh = r.delta_vs_baseline(Variant::StShader);
+        let st = r.delta_vs_baseline(Variant::StreamTriggered);
+        let sh = r.delta_vs_baseline(Variant::StreamTriggeredShader);
         assert!(sh < st, "shader must beat plain ST: {sh:+.1}% vs {st:+.1}%");
         assert!(sh < 0.0, "shader must beat baseline (paper fig 12), got {sh:+.1}%");
+    }
+
+    #[test]
+    fn figkt_kt_at_most_st() {
+        let r = quick(&figkt());
+        let st = r.avg(Variant::StreamTriggered);
+        let kt = r.avg(Variant::KernelTriggered);
+        assert!(kt <= st, "KT must not be slower than ST: {kt:.3} vs {st:.3} ms");
+        assert!(
+            r.delta_vs_baseline(Variant::KernelTriggered) < 0.0,
+            "KT must beat the host baseline on the inter-node 3-D case"
+        );
+    }
+
+    #[test]
+    fn kt_compare_kt_never_slower_across_sizes() {
+        let loops = Loops { outer: 1, middle: 1, inner: 8 };
+        let rows = run_kt_compare(&[32, 128], &[11, 23], loops);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(
+                r.kt.avg <= r.st.avg,
+                "KT must be <= ST at G={}: {:.3} vs {:.3} ms",
+                r.g,
+                r.kt.avg,
+                r.st.avg
+            );
+        }
+        let text = render_kt_compare(&rows);
+        assert!(text.contains("kt vs st"));
     }
 
     #[test]

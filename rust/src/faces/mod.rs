@@ -15,6 +15,10 @@
 //!       `MPIX_Enqueue_start`; the GPU CP triggers the NIC after pack
 //!       completes in stream order, and `MPIX_Enqueue_wait` replaces the
 //!       host-side send waitall (Fig 2);
+//!     — **KT**: the trigger fires from *inside* the last pack kernel
+//!       and the completion wait rides the next iteration's pack
+//!       prologue — no stream memory ops at all (the follow-on design
+//!       of arXiv 2306.15773, `kt_iteration` in this module);
 //!  4. launches the interior spectral-element kernel (overlapped with
 //!     communication);
 //!  5. waits for the receives;
@@ -34,7 +38,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{build_world, run_cluster};
-use crate::costmodel::{CostModel, MemOpFlavor};
+use crate::costmodel::CostModel;
 use crate::gpu::{self, host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
 use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
 use crate::nic::BufSlice;
@@ -46,33 +50,10 @@ use crate::world::{BufId, ComputeMode, Metrics, Topology, World};
 use domain::{region_of, ProcGrid, Region};
 use reference::Q;
 
-/// Which Faces implementation to run (paper §V-B, §V-F).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Variant {
-    /// GPU-aware MPI: host synchronizes at kernel boundaries.
-    Baseline,
-    /// Stream-triggered sends with HIP stream memory operations.
-    St,
-    /// ST with hand-coded shader stream memory operations (§V-F).
-    StShader,
-}
-
-impl Variant {
-    pub fn name(self) -> &'static str {
-        match self {
-            Variant::Baseline => "baseline",
-            Variant::St => "st",
-            Variant::StShader => "st-shader",
-        }
-    }
-
-    fn flavor(self) -> MemOpFlavor {
-        match self {
-            Variant::StShader => MemOpFlavor::Shader,
-            _ => MemOpFlavor::Hip,
-        }
-    }
-}
+/// Which Faces implementation to run (paper §V-B, §V-F, plus the KT
+/// follow-on): the crate-wide communication-variant axis, defined in
+/// [`crate::stx`].
+pub use crate::stx::Variant;
 
 /// Full configuration of one Faces run.
 #[derive(Debug, Clone)]
@@ -105,7 +86,7 @@ impl FacesConfig {
             outer: 1,
             middle: 1,
             inner: 3,
-            variant: Variant::Baseline,
+            variant: Variant::Host,
             compute: ComputeMode::Modeled,
             check: false,
             seed: 1,
@@ -232,31 +213,29 @@ fn ax_flops(g: usize) -> u64 {
 /// edges, and corners", §V-A — plural). For Real compute the first kernel
 /// carries the fused HLO payload (numerics of all regions at once); the
 /// rest model the per-region launch + copy cost.
-fn pack_kernels(plan: &RankPlan, g: usize, real: bool) -> Vec<StreamOp> {
+fn pack_kernels(plan: &RankPlan, g: usize, real: bool) -> Vec<KernelSpec> {
     plan.msgs
         .iter()
         .enumerate()
-        .map(|(i, m)| {
-            StreamOp::Kernel(KernelSpec {
-                name: format!("faces_pack[{i}]"),
-                flops: 0,
-                bytes: 2 * 4 * m.send.elems as u64,
-                payload: if real && i == 0 {
-                    KernelPayload::Hlo {
-                        entry: format!("faces_pack_g{g}"),
-                        inputs: vec![plan.u],
-                        outputs: vec![plan.pf, plan.pe, plan.pc],
-                    }
-                } else {
-                    KernelPayload::None
-                },
-            })
+        .map(|(i, m)| KernelSpec {
+            name: format!("faces_pack[{i}]"),
+            flops: 0,
+            bytes: 2 * 4 * m.send.elems as u64,
+            payload: if real && i == 0 {
+                KernelPayload::Hlo {
+                    entry: format!("faces_pack_g{g}"),
+                    inputs: vec![plan.u],
+                    outputs: vec![plan.pf, plan.pe, plan.pc],
+                }
+            } else {
+                KernelPayload::None
+            },
         })
         .collect()
 }
 
-fn ax_kernel(plan: &RankPlan, g: usize, real: bool) -> StreamOp {
-    StreamOp::Kernel(KernelSpec {
+fn ax_kernel(plan: &RankPlan, g: usize, real: bool) -> KernelSpec {
+    KernelSpec {
         name: "faces_ax".into(),
         flops: ax_flops(g),
         bytes: 2 * 4 * (g * g * g) as u64,
@@ -269,31 +248,29 @@ fn ax_kernel(plan: &RankPlan, g: usize, real: bool) -> StreamOp {
         } else {
             KernelPayload::None
         },
-    })
+    }
 }
 
 /// Unpack likewise launches one add-kernel per received region ("launch
 /// kernels to add the received messages", §V-A); the first carries the
 /// fused HLO payload.
-fn unpack_kernels(plan: &RankPlan, g: usize, parity: usize, real: bool) -> Vec<StreamOp> {
+fn unpack_kernels(plan: &RankPlan, g: usize, parity: usize, real: bool) -> Vec<KernelSpec> {
     plan.msgs
         .iter()
         .enumerate()
-        .map(|(i, m)| {
-            StreamOp::Kernel(KernelSpec {
-                name: format!("faces_unpack[{i}]"),
-                flops: m.recv[parity].elems as u64,
-                bytes: 3 * 4 * m.recv[parity].elems as u64,
-                payload: if real && i == 0 {
-                    KernelPayload::Hlo {
-                        entry: format!("faces_unpack_g{g}"),
-                        inputs: vec![plan.w, plan.rf[parity], plan.re[parity], plan.rc[parity]],
-                        outputs: vec![plan.u],
-                    }
-                } else {
-                    KernelPayload::None
-                },
-            })
+        .map(|(i, m)| KernelSpec {
+            name: format!("faces_unpack[{i}]"),
+            flops: m.recv[parity].elems as u64,
+            bytes: 3 * 4 * m.recv[parity].elems as u64,
+            payload: if real && i == 0 {
+                KernelPayload::Hlo {
+                    entry: format!("faces_unpack_g{g}"),
+                    inputs: vec![plan.w, plan.rf[parity], plan.re[parity], plan.rc[parity]],
+                    outputs: vec![plan.u],
+                }
+            } else {
+                KernelPayload::None
+            },
         })
         .collect()
 }
@@ -388,7 +365,7 @@ fn rank_program(
     // Stream + (for ST) queue setup — outside the timed region.
     let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
     let queue = match cfg.variant {
-        Variant::Baseline => None,
+        Variant::Host => None,
         v => Some(stx::create_queue(ctx, rank, sid, v.flavor())),
     };
 
@@ -417,12 +394,21 @@ fn rank_program(
             for inner in 0..cfg.inner {
                 let parity = inner % 2;
                 match cfg.variant {
-                    Variant::Baseline => baseline_iteration(cfg, plan, rank, ctx, sid, parity, real),
+                    Variant::Host => baseline_iteration(cfg, plan, rank, ctx, sid, parity, real),
+                    Variant::KernelTriggered => {
+                        kt_iteration(cfg, plan, rank, ctx, sid, queue.unwrap(), parity, real)
+                    }
                     _ => st_iteration(cfg, plan, rank, ctx, sid, queue.unwrap(), parity, real),
                 }
             }
-            // Drain the device before stopping the clock (both variants
-            // end the timed region fully synchronized).
+            // Drain the device before stopping the clock (every variant
+            // ends the timed region fully synchronized). KT additionally
+            // drains its send completions here — ST already waited for
+            // them via enqueue_wait — so the figures of merit compare
+            // like for like.
+            if cfg.variant == Variant::KernelTriggered {
+                stx::queue_drain(ctx, queue.unwrap()).expect("KT queue drain");
+            }
             stream_synchronize(ctx, sid);
             acc += ctx.now() - t0;
         }
@@ -457,7 +443,7 @@ fn baseline_iteration(
     // 2. Pack kernels (one per region), then the host must wait for them
     //    before sending (the expensive kernel-boundary sync of Fig 1).
     for k in pack_kernels(plan, cfg.g, real) {
-        host_enqueue(ctx, sid, k);
+        host_enqueue(ctx, sid, StreamOp::Kernel(k));
     }
     stream_synchronize(ctx, sid);
     // 3. Sends.
@@ -466,13 +452,13 @@ fn baseline_iteration(
         sreqs.push(mpi::isend(ctx, rank, m.nbr, m.send, m.tag_send, COMM_WORLD));
     }
     // 4. Interior compute (overlaps communication).
-    host_enqueue(ctx, sid, ax_kernel(plan, cfg.g, real));
+    host_enqueue(ctx, sid, StreamOp::Kernel(ax_kernel(plan, cfg.g, real)));
     // 5. Wait for communication.
     mpi::waitall(ctx, &rreqs);
     mpi::waitall(ctx, &sreqs);
     // 6. Unpack-add of received contributions (one kernel per region).
     for k in unpack_kernels(plan, cfg.g, parity, real) {
-        host_enqueue(ctx, sid, k);
+        host_enqueue(ctx, sid, StreamOp::Kernel(k));
     }
 }
 
@@ -503,7 +489,7 @@ fn st_iteration(
     }
     // 2. Pack kernels — no host-device synchronization afterwards.
     for k in pack_kernels(plan, cfg.g, real) {
-        host_enqueue(ctx, sid, k);
+        host_enqueue(ctx, sid, StreamOp::Kernel(k));
     }
     // 3. Deferred sends, triggered in stream order after pack.
     for m in &plan.msgs {
@@ -512,7 +498,7 @@ fn st_iteration(
     }
     stx::enqueue_start(ctx, queue).expect("ST enqueue_start");
     // 4. Interior compute overlaps the triggered sends.
-    host_enqueue(ctx, sid, ax_kernel(plan, cfg.g, real));
+    host_enqueue(ctx, sid, StreamOp::Kernel(ax_kernel(plan, cfg.g, real)));
     // The stream (not the host!) waits for send completion; this also
     // protects the packed buffers from next iteration's pack.
     stx::enqueue_wait(ctx, queue).expect("ST enqueue_wait");
@@ -520,7 +506,70 @@ fn st_iteration(
     mpi::waitall(ctx, &rreqs);
     // 6. unpack.
     for k in unpack_kernels(plan, cfg.g, parity, real) {
-        host_enqueue(ctx, sid, k);
+        host_enqueue(ctx, sid, StreamOp::Kernel(k));
+    }
+}
+
+/// One kernel-triggered iteration (arXiv 2306.15773): receives are
+/// posted as in ST, but the trigger for this iteration's sends fires
+/// from *inside* the last pack kernel ([`stx::KT_TRIGGER_FRAC`] of its
+/// execution window) and the completion wait for the previous
+/// iteration's sends rides the first pack kernel's prologue. No
+/// `writeValue64`, no `waitValue64`, no stream stall between operations
+/// — the per-iteration CP/stream handshake ST still pays disappears.
+#[allow(clippy::too_many_arguments)]
+fn kt_iteration(
+    cfg: &FacesConfig,
+    plan: &RankPlan,
+    rank: usize,
+    ctx: &mut HostCtx<World>,
+    sid: gpu::StreamId,
+    queue: usize,
+    parity: usize,
+    real: bool,
+) {
+    // 1. Pre-post receives (standard MPI_Irecv + double buffering, as in
+    //    the ST variant, §V-B).
+    let mut rreqs = Vec::with_capacity(plan.msgs.len());
+    for m in &plan.msgs {
+        rreqs.push(mpi::irecv(
+            ctx,
+            rank,
+            SrcSel::Rank(m.nbr),
+            TagSel::Tag(m.tag_recv),
+            COMM_WORLD,
+            m.recv[parity],
+        ));
+    }
+    // 2+3. Deferred sends + pack kernels carrying the KT plan: the first
+    //      pack kernel's prologue waits out the previous iteration's
+    //      sends (buffer-reuse safety), the last one fires the trigger
+    //      mid-execution.
+    let packs = pack_kernels(plan, cfg.g, real);
+    let mut kts: Vec<gpu::KernelCtx> = packs.iter().map(|_| gpu::KernelCtx::new()).collect();
+    if let Some(first) = kts.first_mut() {
+        stx::kt_wait(ctx, queue, first).expect("KT kt_wait");
+    }
+    for m in &plan.msgs {
+        stx::enqueue_send(ctx, queue, m.nbr, m.send, m.tag_send, COMM_WORLD)
+            .expect("KT enqueue_send");
+    }
+    if let Some(last) = kts.last_mut() {
+        stx::kt_start(ctx, queue, last, stx::KT_TRIGGER_FRAC).expect("KT kt_start");
+    }
+    for (k, kt) in packs.into_iter().zip(kts) {
+        let op = if kt.is_empty() { StreamOp::Kernel(k) } else { StreamOp::KtKernel(k, kt) };
+        host_enqueue(ctx, sid, op);
+    }
+    // 4. Interior compute overlaps the triggered sends. No enqueue_wait:
+    //    completion rides the next iteration's pack prologue (and the
+    //    final queue drain at the end of the timed region).
+    host_enqueue(ctx, sid, StreamOp::Kernel(ax_kernel(plan, cfg.g, real)));
+    // 5. Wait for receives on the host, then
+    mpi::waitall(ctx, &rreqs);
+    // 6. unpack.
+    for k in unpack_kernels(plan, cfg.g, parity, real) {
+        host_enqueue(ctx, sid, StreamOp::Kernel(k));
     }
 }
 

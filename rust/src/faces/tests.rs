@@ -23,7 +23,7 @@ fn baseline_1d_runs_and_exchanges() {
 #[test]
 fn st_1d_uses_dwq_offload() {
     let mut cfg = zero_jitter(FacesConfig::smoke(2, 1, (2, 1, 1)));
-    cfg.variant = Variant::St;
+    cfg.variant = Variant::StreamTriggered;
     let r = run_faces(&cfg).unwrap();
     assert_eq!(r.metrics.dwq_triggered, 6, "every inter-node ST send via DWQ");
     // Baseline syncs after pack each iteration; ST only drains at middle
@@ -42,7 +42,7 @@ fn baseline_syncs_every_iteration() {
 #[test]
 fn intra_node_st_runs_through_progress_thread() {
     let mut cfg = zero_jitter(FacesConfig::smoke(1, 2, (2, 1, 1)));
-    cfg.variant = Variant::St;
+    cfg.variant = Variant::StreamTriggered;
     let r = run_faces(&cfg).unwrap();
     assert_eq!(r.metrics.dwq_triggered, 0);
     assert!(r.metrics.progress_ops >= 6, "intra ST sends emulated in software");
@@ -97,9 +97,9 @@ fn loop_counts_scale_messages() {
 fn shader_variant_beats_hip_variant_inter_node() {
     let mut cfg = zero_jitter(FacesConfig::smoke(8, 1, (2, 2, 2)));
     cfg.inner = 6;
-    cfg.variant = Variant::St;
+    cfg.variant = Variant::StreamTriggered;
     let hip = run_faces(&cfg).unwrap();
-    cfg.variant = Variant::StShader;
+    cfg.variant = Variant::StreamTriggeredShader;
     let shader = run_faces(&cfg).unwrap();
     assert!(
         shader.time_ns < hip.time_ns,
@@ -116,4 +116,42 @@ fn rank_time_is_positive_for_all_ranks() {
     assert_eq!(r.rank_time.len(), 8);
     assert!(r.rank_time.iter().all(|&t| t > 0));
     assert_eq!(r.time_ns, *r.rank_time.iter().max().unwrap());
+}
+
+#[test]
+fn kt_1d_uses_dwq_offload_without_memops() {
+    let mut cfg = zero_jitter(FacesConfig::smoke(2, 1, (2, 1, 1)));
+    cfg.variant = Variant::KernelTriggered;
+    let r = run_faces(&cfg).unwrap();
+    assert_eq!(r.metrics.dwq_triggered, 6, "every inter-node KT send via DWQ");
+    assert_eq!(r.metrics.kt_triggers, 6, "one mid-kernel trigger per iteration per rank");
+    assert_eq!(r.metrics.memops_executed, 0, "KT executes no stream memops at all");
+    // Like ST, KT only drains at middle end: 2 ranks x 1 sync.
+    assert_eq!(r.metrics.stream_syncs, 2);
+}
+
+#[test]
+fn kt_beats_st_inter_node() {
+    let mut cfg = zero_jitter(FacesConfig::smoke(8, 1, (2, 2, 2)));
+    cfg.inner = 6;
+    cfg.variant = Variant::StreamTriggered;
+    let st = run_faces(&cfg).unwrap();
+    cfg.variant = Variant::KernelTriggered;
+    let kt = run_faces(&cfg).unwrap();
+    assert!(
+        kt.time_ns <= st.time_ns,
+        "KT must not be slower than ST: {} vs {}",
+        kt.time_ns,
+        st.time_ns
+    );
+}
+
+#[test]
+fn kt_intra_node_runs_through_progress_thread() {
+    let mut cfg = zero_jitter(FacesConfig::smoke(1, 2, (2, 1, 1)));
+    cfg.variant = Variant::KernelTriggered;
+    let r = run_faces(&cfg).unwrap();
+    assert_eq!(r.metrics.dwq_triggered, 0);
+    assert_eq!(r.metrics.intra_sends, 6, "intra KT sends emulated in software");
+    assert_eq!(r.metrics.kt_triggers, 6, "triggers still fire from inside kernels");
 }

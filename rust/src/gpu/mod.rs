@@ -12,6 +12,16 @@
 //! * stream memory ops come in two flavors ([`MemOpFlavor`]): the stock
 //!   HIP implementation and the hand-coded shader variant of §V-F.
 //!
+//! Beyond the paper's stream-op model, this module also implements the
+//! **kernel-triggered (KT)** contract of the follow-on work (arXiv
+//! 2306.15773): a [`StreamOp::KtKernel`] carries a [`KernelCtx`] whose
+//! hooks fire NIC deferred-work entries from *inside* the kernel's
+//! execution window ([`KernelCtx::kt_counter_inc`] /
+//! [`KernelCtx::kt_put`]) and fold completion waits into the kernel
+//! prologue ([`KernelCtx::wait_ge`]) — no `writeValue64`/`waitValue64`
+//! stream ops at all. See `stx` for the MPIX-level wrappers and
+//! DESIGN.md §Kernel-triggered communication for the timeline.
+//!
 //! Kernel *numerics* are real: a kernel's payload either runs an
 //! AOT-compiled XLA executable (via [`crate::runtime`]) or a built-in
 //! closure over simulated device buffers. Kernel *timing* always comes
@@ -20,6 +30,7 @@
 use std::collections::VecDeque;
 
 use crate::costmodel::MemOpFlavor;
+use crate::nic::{BufSlice, Done};
 use crate::sim::{CellId, Time};
 use crate::world::{BufId, Callback, ComputeMode, Ctx, World};
 
@@ -67,9 +78,124 @@ pub struct KernelSpec {
     pub payload: KernelPayload,
 }
 
+// ---------------------------------------------------------------------
+// Kernel-triggered (KT) communication: triggers fired from inside kernels
+// ---------------------------------------------------------------------
+
+/// Completion wait folded into a kernel's prologue (the KT path): the
+/// kernel's first wavefront spins on a GPU-visible word until it reaches
+/// `threshold`, and only then does the kernel body — and its modeled
+/// duration — begin. Unlike a `waitValue64` stream op, this costs no CP
+/// memory operation and occupies no extra stream slot: completion rides
+/// the kernel itself.
+#[derive(Debug, Clone, Copy)]
+pub struct KtWait {
+    pub cell: CellId,
+    pub threshold: u64,
+}
+
+/// One device-side trigger fired from inside a running kernel at `frac`
+/// of the kernel's modeled duration (0.0 = body start, 1.0 = kernel
+/// tail; out-of-range values are clamped).
+pub struct KtTrigger {
+    pub frac: f64,
+    pub action: KtAction,
+}
+
+/// What a mid-kernel trigger does when it retires.
+pub enum KtAction {
+    /// Device-scope release write: bump a GPU-visible word by `value`.
+    /// In practice the word is a NIC hardware counter, so the write
+    /// releases every deferred-work entry queued against it — the KT
+    /// equivalent of `MPIX_Enqueue_start`'s `writeValue64`.
+    CounterInc { cell: CellId, value: u64 },
+    /// Device-initiated one-sided put: the kernel writes the NIC
+    /// doorbell directly (the fully offloaded path of arXiv
+    /// 2306.15773); the NIC executes the descriptor like any
+    /// host-posted command.
+    Put(KtPut),
+}
+
+impl std::fmt::Debug for KtAction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KtAction::CounterInc { cell, value } => write!(f, "CounterInc({cell:?}, +{value})"),
+            KtAction::Put(p) => write!(f, "Put({}->{})", p.src_rank, p.dst_rank),
+        }
+    }
+}
+
+/// Descriptor of a device-initiated put (see [`KtAction::Put`]).
+pub struct KtPut {
+    pub src_rank: usize,
+    pub dst_rank: usize,
+    pub src: BufSlice,
+    pub dst: BufSlice,
+    /// Fired at the source when the payload has left its NIC.
+    pub src_done: Done,
+    /// Fired at the destination when the payload has landed.
+    pub dst_done: Done,
+}
+
+/// The kernel-side trigger plan attached to a [`StreamOp::KtKernel`]:
+/// the hooks through which a simulated kernel drives communication from
+/// *inside* its execution window instead of at stream-op boundaries.
+///
+/// A KT kernel's numerics commit when its body starts (after the
+/// prologue wait, before any trigger retires): the engine models timing
+/// independently of data movement, and a kernel's stores must be
+/// globally visible before its earliest mid-kernel trigger reaches the
+/// NIC.
+#[derive(Default)]
+pub struct KernelCtx {
+    pub wait: Option<KtWait>,
+    pub triggers: Vec<KtTrigger>,
+}
+
+impl KernelCtx {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True when the kernel carries no KT behavior at all.
+    pub fn is_empty(&self) -> bool {
+        self.wait.is_none() && self.triggers.is_empty()
+    }
+
+    /// Fold a completion wait into the kernel prologue (one spin per
+    /// kernel; the last call wins).
+    pub fn wait_ge(&mut self, cell: CellId, threshold: u64) {
+        self.wait = Some(KtWait { cell, threshold });
+    }
+
+    /// Bump a GPU-visible counter by `value` at `frac` of the kernel's
+    /// duration (device-scope release write).
+    pub fn kt_counter_inc(&mut self, frac: f64, cell: CellId, value: u64) {
+        self.triggers.push(KtTrigger { frac, action: KtAction::CounterInc { cell, value } });
+    }
+
+    /// Issue a device-initiated one-sided put at `frac` of the kernel's
+    /// duration.
+    pub fn kt_put(&mut self, frac: f64, put: KtPut) {
+        self.triggers.push(KtTrigger { frac, action: KtAction::Put(put) });
+    }
+}
+
+impl std::fmt::Debug for KernelCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KernelCtx(wait={}, triggers={})", self.wait.is_some(), self.triggers.len())
+    }
+}
+
 /// One device operation in a stream.
 pub enum StreamOp {
     Kernel(KernelSpec),
+    /// A compute kernel participating in kernel-triggered communication:
+    /// its [`KernelCtx`] folds an optional completion wait into the
+    /// kernel prologue and fires trigger actions from inside the
+    /// execution window — no separate stream memory ops (the KT variant
+    /// axis).
+    KtKernel(KernelSpec, KernelCtx),
     /// `hipStreamWriteValue64`-style: write `value` to a GPU-visible word
     /// (here: an engine cell — NIC counters are mapped to these).
     WriteValue64 { cell: CellId, value: u64, mode: WriteMode, flavor: MemOpFlavor },
@@ -85,6 +211,7 @@ impl std::fmt::Debug for StreamOp {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             StreamOp::Kernel(k) => write!(f, "Kernel({})", k.name),
+            StreamOp::KtKernel(k, kt) => write!(f, "KtKernel({}, {kt:?})", k.name),
             StreamOp::WriteValue64 { value, .. } => write!(f, "WriteValue64({value})"),
             StreamOp::WaitValue64 { threshold, .. } => write!(f, "WaitValue64(>={threshold})"),
             StreamOp::Run { .. } => write!(f, "Run(..)"),
@@ -174,6 +301,34 @@ pub fn cp_step(w: &mut World, core: &mut Ctx, sid: StreamId) {
                 }),
             );
         }
+        StreamOp::KtKernel(spec, kt) => {
+            w.metrics.kernels_launched += 1;
+            let dur = w.cost.cp_dispatch + w.cost.kernel_time(spec.flops, spec.bytes);
+            let dur = w.cost.jittered(dur, core.rng());
+            let desc = format!("gpu{}.s{} {} kt-prologue", sid.gpu, sid.stream, spec.name);
+            let KernelCtx { wait, triggers } = kt;
+            let payload = spec.payload;
+            let body: Callback = Box::new(move |w, c| {
+                // A KT kernel's numerics commit at body start: its stores
+                // must be globally visible before the earliest mid-kernel
+                // trigger reaches the NIC (timing is modeled separately).
+                run_kernel_payload(w, c, payload);
+                for t in triggers {
+                    let off = ((dur as f64) * t.frac.clamp(0.0, 1.0)).round() as Time;
+                    c.schedule(
+                        off.min(dur),
+                        Box::new(move |w, c| fire_kt_action(w, c, t.action)),
+                    );
+                }
+                c.schedule(dur, Box::new(move |w, c| complete_op(w, c, sid)));
+            });
+            match wait {
+                // The prologue spin keeps the stream busy (the kernel
+                // occupies it), but costs no CP memory operation.
+                Some(KtWait { cell, threshold }) => core.on_ge(cell, threshold, desc, body),
+                None => body(w, core),
+            }
+        }
         StreamOp::WriteValue64 { cell, value, mode, flavor } => {
             w.metrics.memops_executed += 1;
             let dur = w.cost.jittered(w.cost.memop(flavor), core.rng());
@@ -212,6 +367,32 @@ pub fn cp_step(w: &mut World, core: &mut Ctx, sid: StreamId) {
                 Box::new(move |w, c| {
                     f(w, c);
                     complete_op(w, c, sid);
+                }),
+            );
+        }
+    }
+}
+
+/// Retire one mid-kernel trigger action (the KT data path).
+fn fire_kt_action(w: &mut World, core: &mut Ctx, action: KtAction) {
+    w.metrics.kt_triggers += 1;
+    match action {
+        KtAction::CounterInc { cell, value } => {
+            // Device-scope release write: lands on the same engine cell
+            // the NIC's deferred-work waiters watch, so it releases them
+            // exactly like a CP `writeValue64` or a NIC DWQ atomic.
+            core.add_cell(cell, value);
+        }
+        KtAction::Put(p) => {
+            // The kernel rings the NIC doorbell; command validation and
+            // descriptor fetch are charged like a host-posted command.
+            let lat = w.cost.nic_cmd_post + w.cost.nic_proc;
+            core.schedule(
+                lat,
+                Box::new(move |w, c| {
+                    crate::nic::execute_put(
+                        w, c, p.src_rank, p.dst_rank, p.src, p.dst, p.src_done, p.dst_done,
+                    );
                 }),
             );
         }

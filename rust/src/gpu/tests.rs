@@ -228,3 +228,190 @@ fn run_op_executes_with_cost() {
     eng.run().unwrap();
     assert_eq!(*t.lock().unwrap(), 777);
 }
+
+// ---------------------------------------------------------------------
+// Kernel-triggered (KT) path
+// ---------------------------------------------------------------------
+
+/// KT trigger fire time is pinned strictly *inside* the kernel's
+/// execution window (start < fire < end), and fires earlier than the ST
+/// counterpart, which only writes the trigger via a memop executed
+/// *after* the kernel completes.
+#[test]
+fn kt_trigger_fires_inside_kernel_window_and_before_st() {
+    let eng = engine1();
+    let times = std::sync::Arc::new(std::sync::Mutex::new((0u64, 0u64, 0u64, 0u64)));
+    // (kt_fire, kt_end, st_fire, payload_at)
+    let tm = times.clone();
+    let tm2 = times.clone();
+    let tm3 = times.clone();
+    eng.setup(|w, core| {
+        // KT stream: one kernel with a mid-execution trigger at 0.5.
+        let s_kt = create_stream(w, core, 0);
+        let kt_cell = core.new_cell("kt_trig", 0);
+        core.on_ge(kt_cell, 1, "watch kt", Box::new(move |_, c| {
+            tm.lock().unwrap().0 = c.now();
+        }));
+        let mut kt = KernelCtx::new();
+        kt.kt_counter_inc(0.5, kt_cell, 1);
+        let tp = tm3.clone();
+        enqueue(
+            w,
+            core,
+            s_kt,
+            StreamOp::KtKernel(
+                KernelSpec {
+                    name: "kt_k".into(),
+                    flops: 24_000_000, // 1000 ns compute
+                    bytes: 0,
+                    payload: KernelPayload::Fn(Box::new(move |_, c| {
+                        tp.lock().unwrap().3 = c.now();
+                    })),
+                },
+                kt,
+            ),
+        );
+        let done = completed_cell(w, s_kt);
+        let tme = tm2.clone();
+        core.on_ge(done, 1, "kt end", Box::new(move |_, c| {
+            tme.lock().unwrap().1 = c.now();
+        }));
+        // ST stream (same GPU, independent): same kernel, then the
+        // trigger write as a memop.
+        let s_st = create_stream(w, core, 0);
+        let st_cell = core.new_cell("st_trig", 0);
+        let tms = times.clone();
+        core.on_ge(st_cell, 1, "watch st", Box::new(move |_, c| {
+            tms.lock().unwrap().2 = c.now();
+        }));
+        enqueue(
+            w,
+            core,
+            s_st,
+            StreamOp::Kernel(KernelSpec {
+                name: "st_k".into(),
+                flops: 24_000_000,
+                bytes: 0,
+                payload: KernelPayload::None,
+            }),
+        );
+        enqueue(
+            w,
+            core,
+            s_st,
+            StreamOp::WriteValue64 {
+                cell: st_cell,
+                value: 1,
+                mode: WriteMode::Set,
+                flavor: MemOpFlavor::Hip,
+            },
+        );
+    });
+    let (w, _) = eng.run().unwrap();
+    let (kt_fire, kt_end, st_fire, payload_at) = *times.lock().unwrap();
+    let dur = w.cost.cp_dispatch + w.cost.kernel_fixed + 1000;
+    assert_eq!(kt_end, dur, "kernel window end");
+    assert_eq!(kt_fire, dur / 2, "trigger at frac 0.5 of the window");
+    assert!(kt_fire > 0 && kt_fire < kt_end, "fire strictly inside the kernel");
+    // Numerics commit at body start, before the trigger retires.
+    assert_eq!(payload_at, 0, "KT payload commits at body start");
+    assert!(payload_at < kt_fire);
+    // ST pays the kernel, then the memop: strictly later than KT.
+    assert_eq!(st_fire, dur + w.cost.memop_hip);
+    assert!(kt_fire < st_fire, "KT trigger must beat the ST memop ({kt_fire} vs {st_fire})");
+    assert_eq!(w.metrics.kt_triggers, 1);
+}
+
+/// A KT prologue wait stalls the kernel body (and its whole duration)
+/// until the watched cell reaches the threshold, with no memop charged.
+#[test]
+fn kt_prologue_wait_blocks_body_until_threshold() {
+    let eng = engine1();
+    let t = std::sync::Arc::new(std::sync::Mutex::new((0u64, 0u64)));
+    let tb = t.clone();
+    let te = t.clone();
+    eng.setup(|w, core| {
+        let sid = create_stream(w, core, 0);
+        let gate = core.new_cell("gate", 0);
+        let mut kt = KernelCtx::new();
+        kt.wait_ge(gate, 1);
+        enqueue(
+            w,
+            core,
+            sid,
+            StreamOp::KtKernel(
+                KernelSpec {
+                    name: "gated".into(),
+                    flops: 24_000_000,
+                    bytes: 0,
+                    payload: KernelPayload::Fn(Box::new(move |_, c| {
+                        tb.lock().unwrap().0 = c.now();
+                    })),
+                },
+                kt,
+            ),
+        );
+        let done = completed_cell(w, sid);
+        core.on_ge(done, 1, "gated end", Box::new(move |_, c| {
+            te.lock().unwrap().1 = c.now();
+        }));
+        core.schedule(5_000, Box::new(move |_, c| c.write_cell(gate, 1)));
+    });
+    let (w, _) = eng.run().unwrap();
+    let (body_at, end_at) = *t.lock().unwrap();
+    assert_eq!(body_at, 5_000, "body starts when the prologue wait is satisfied");
+    let dur = w.cost.cp_dispatch + w.cost.kernel_fixed + 1000;
+    assert_eq!(end_at, 5_000 + dur, "duration charged after the wait");
+    assert_eq!(w.metrics.memops_executed, 0, "no memop on the KT path");
+}
+
+/// `kt_put` issues a device-initiated one-sided put mid-kernel: the
+/// payload lands at the destination and both completion actions fire.
+#[test]
+fn kt_put_moves_data_mid_kernel() {
+    let mut cost = presets::frontier_like();
+    cost.jitter_sigma = 0.0;
+    let eng = Engine::new(build_world(cost, Topology::new(2, 1)), 1);
+    let done_at = std::sync::Arc::new(std::sync::Mutex::new((0u64, 0u64)));
+    let da = done_at.clone();
+    let db = done_at.clone();
+    eng.setup(|w, core| {
+        let src = w.bufs.alloc_init(vec![7.5; 16]);
+        let dst = w.bufs.alloc(16);
+        let sid = create_stream(w, core, 0);
+        let mut kt = KernelCtx::new();
+        kt.kt_put(
+            0.25,
+            KtPut {
+                src_rank: 0,
+                dst_rank: 1,
+                src: BufSlice::whole(src, 16),
+                dst: BufSlice::whole(dst, 16),
+                src_done: Done::call(Box::new(move |_, c| da.lock().unwrap().0 = c.now())),
+                dst_done: Done::call(Box::new(move |w, c| {
+                    assert_eq!(w.bufs.get(crate::world::BufId(1)), &[7.5; 16]);
+                    db.lock().unwrap().1 = c.now();
+                })),
+            },
+        );
+        enqueue(
+            w,
+            core,
+            sid,
+            StreamOp::KtKernel(
+                KernelSpec {
+                    name: "putter".into(),
+                    flops: 24_000_000,
+                    bytes: 0,
+                    payload: KernelPayload::None,
+                },
+                kt,
+            ),
+        );
+    });
+    let (w, _) = eng.run().unwrap();
+    let (src_done, dst_done) = *done_at.lock().unwrap();
+    assert!(src_done > 0 && dst_done > 0, "both completions must fire");
+    assert_eq!(w.metrics.kt_triggers, 1);
+    assert!(w.metrics.bytes_wire >= 64, "the put crossed the fabric");
+}

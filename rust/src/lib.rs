@@ -9,10 +9,32 @@
 //! and a control processor, a two-sided MPI matching layer with progress
 //! threads — while the *numerics* of every GPU kernel flow through real
 //! AOT-compiled XLA programs (JAX + Pallas, lowered at build time, loaded
-//! via PJRT on the rust side).
+//! via PJRT on the rust side). The **kernel-triggered (KT)** follow-on
+//! design (arXiv 2306.15773) is modeled as a third variant beside the
+//! host baseline and ST: see [`stx::Variant`] and [`gpu::KernelCtx`].
 //!
-//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
-//! reproduced figures.
+//! ## Architecture map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`sim`] | virtual-time discrete-event engine, host actors, parallel sweep executor |
+//! | [`world`] | the simulated cluster state threaded through the engine |
+//! | [`costmodel`] | calibrated latencies/bandwidths of the Frontier-like testbed |
+//! | [`gpu`] | streams + control processor, stream memory ops, KT kernel hooks |
+//! | [`nic`] | Slingshot-11 counters, deferred work queues, eager/rendezvous |
+//! | [`fabric`] | inter-node wire with per-port serialization + congestion metrics |
+//! | [`mpi`] | two-sided matching engine, requests, progress threads |
+//! | [`stx`] | the paper's `MPIX_*` ST API, KT wrappers, the [`stx::Variant`] axis |
+//! | [`collectives`] | ST ring / ST recursive-doubling / KT ring allreduce |
+//! | [`faces`] | the Faces halo-exchange benchmark + figure harness |
+//! | [`workloads`] | `Workload` trait, five scenarios, campaign driver |
+//! | [`coordinator`] | world building, cluster run loop, config, reporting |
+//! | [`runtime`] | PJRT loader for AOT HLO artifacts (feature `xla`) |
+//! | [`train`] | ST-allreduce data-parallel trainer |
+//!
+//! See `README.md` for the quickstart, `DESIGN.md` for the architecture
+//! and trigger timelines, and `EXPERIMENTS.md` for the reproduced
+//! figures and the campaign report schema.
 
 pub mod collectives;
 pub mod coordinator;

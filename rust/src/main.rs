@@ -13,20 +13,26 @@
 //! `faces` keys (TOML-subset config file and/or CLI overrides):
 //!   faces.dist=2x2x2  faces.nodes=8  faces.rpn=1  faces.g=128
 //!   faces.outer=1 faces.middle=2 faces.inner=25
-//!   faces.variant=baseline|st|st-shader  faces.real=true  faces.check=true
+//!   faces.variant=baseline|st|st-shader|kt  faces.real=true  faces.check=true
 //!   seed=11  jitter=0.03
 //! `campaign` keys (comma lists; empty = defaults):
 //!   campaign.workloads=faces,halo3d,allreduce,alltoall,incast
-//!   campaign.variants=baseline,st,ring-st,rdbl-st  campaign.sizes=256,4096
-//!   campaign.topos=2x1,4x1  campaign.seeds=11,23
+//!   campaign.variants=baseline,st,kt,ring-st,rdbl-st,ring-kt
+//!   campaign.sizes=256,4096  campaign.topos=2x1,4x1  campaign.seeds=11,23
 //!   campaign.iters=3  campaign.jitter=0.01  campaign.out=CAMPAIGN_report
 //! `train` keys: train.nodes, train.rpn, train.steps, seed.
+//!
+//! `sweep` regenerates Figs 8-12, the ST-vs-KT figure (figkt), and the
+//! ST-vs-KT message-size sweep; `figures` takes fig8..fig12 or figkt.
 
 use anyhow::{bail, Context, Result};
 
 use stmpi::coordinator::config::Config;
 use stmpi::costmodel::{presets, MemOpFlavor};
-use stmpi::faces::figures::{all_figures, run_figure, Loops, FIGURE_G, SEEDS};
+use stmpi::faces::figures::{
+    all_figures, render_kt_compare, run_figure, run_kt_compare, Loops, FIGURE_G, KT_COMPARE_GS,
+    SEEDS,
+};
 use stmpi::faces::{run_faces, FacesConfig, Variant};
 use stmpi::train::{train, TrainConfig};
 use stmpi::workloads::{run_campaign, CampaignSpec};
@@ -77,12 +83,8 @@ fn load_config(args: &[String]) -> Result<Config> {
 }
 
 fn parse_variant(s: &str) -> Result<Variant> {
-    Ok(match s {
-        "baseline" => Variant::Baseline,
-        "st" => Variant::St,
-        "st-shader" | "shader" => Variant::StShader,
-        other => bail!("unknown variant '{other}'"),
-    })
+    Variant::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("unknown variant '{s}' (baseline|st|st-shader|kt)"))
 }
 
 fn cmd_faces(args: &[String]) -> Result<()> {
@@ -123,6 +125,8 @@ fn cmd_sweep() -> Result<()> {
         let report = run_figure(&spec, &SEEDS, Loops::default(), FIGURE_G);
         println!("{}", report.render());
     }
+    let rows = run_kt_compare(&KT_COMPARE_GS, &SEEDS, Loops::default());
+    println!("{}", render_kt_compare(&rows));
     Ok(())
 }
 

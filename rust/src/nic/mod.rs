@@ -5,8 +5,10 @@
 //!
 //! * **hardware counters** — allocated per `MPIX_Queue`, mapped into
 //!   GPU-CP-visible memory (here: engine cells, so a GPU stream
-//!   `writeValue64` and the NIC watch the *same* word, exactly like the
-//!   real counter mapping);
+//!   `writeValue64`, a device-scope store from inside a running kernel
+//!   (the KT path, [`crate::gpu::KernelCtx`]), a NIC DWQ atomic, and the
+//!   NIC's own deferred-work waiters all alias the *same* word, exactly
+//!   like the real counter mapping);
 //! * **deferred work queue (DWQ)** — a command descriptor (`DMA desc +
 //!   trigger counter + threshold + completion counter`) appended to the
 //!   NIC command queue but *not executed* until the trigger counter
@@ -312,6 +314,7 @@ pub fn rendezvous_get(
 /// collectives layer. Writes `src` (read at execution time) into
 /// `dst` on `dst_rank`'s buffer space, then fires `done` at the target
 /// and `src_done` locally.
+#[allow(clippy::too_many_arguments)]
 pub fn post_triggered_put(
     w: &mut World,
     core: &mut Ctx,
@@ -325,7 +328,6 @@ pub fn post_triggered_put(
     dst_done: Done,
 ) {
     let src_node = w.topo.node_of(src_rank);
-    let dst_node = w.topo.node_of(dst_rank);
     core.on_ge(
         trigger,
         threshold,
@@ -336,47 +338,69 @@ pub fn post_triggered_put(
             core.schedule(
                 lat,
                 Box::new(move |w, core| {
-                    let payload = if w.is_real() {
-                        w.bufs.get(src.buf)[src.off..src.off + src.elems].to_vec()
-                    } else {
-                        Vec::new()
-                    };
-                    if src_node == dst_node {
-                        // Loopback put through the local DMA engine.
-                        let dur = w.cost.ipc_time(src.bytes());
-                        core.schedule(
-                            dur,
-                            Box::new(move |w, core| {
-                                if w.is_real() {
-                                    let d = w.bufs.get_mut(dst.buf);
-                                    d[dst.off..dst.off + dst.elems].copy_from_slice(&payload);
-                                }
-                                dst_done.fire(w, core);
-                                src_done.fire(w, core);
-                            }),
-                        );
-                    } else {
-                        let left = fabric::transfer(
-                            w,
-                            core,
-                            src_node,
-                            dst_node,
-                            src.bytes(),
-                            Box::new(move |w, core| {
-                                if w.is_real() {
-                                    let d = w.bufs.get_mut(dst.buf);
-                                    d[dst.off..dst.off + dst.elems].copy_from_slice(&payload);
-                                }
-                                dst_done.fire(w, core);
-                            }),
-                        );
-                        let comp = left + w.cost.nic_completion;
-                        src_done.schedule_fire_at(core, comp);
-                    }
+                    execute_put(w, core, src_rank, dst_rank, src, dst, src_done, dst_done);
                 }),
             );
         }),
     );
+}
+
+/// Immediately execute a one-sided put whose descriptor has already been
+/// validated: snapshot `src` now (DMA-time read), move it to `dst_rank`'s
+/// node over the loopback DMA engine or the fabric, then fire `dst_done`
+/// at the target and `src_done` at the source. Shared by the deferred
+/// DWQ path ([`post_triggered_put`]) and the kernel-triggered doorbell
+/// path ([`crate::gpu::KtAction::Put`]).
+#[allow(clippy::too_many_arguments)]
+pub fn execute_put(
+    w: &mut World,
+    core: &mut Ctx,
+    src_rank: usize,
+    dst_rank: usize,
+    src: BufSlice,
+    dst: BufSlice,
+    src_done: Done,
+    dst_done: Done,
+) {
+    let src_node = w.topo.node_of(src_rank);
+    let dst_node = w.topo.node_of(dst_rank);
+    let payload = if w.is_real() {
+        w.bufs.get(src.buf)[src.off..src.off + src.elems].to_vec()
+    } else {
+        Vec::new()
+    };
+    if src_node == dst_node {
+        // Loopback put through the local DMA engine.
+        let dur = w.cost.ipc_time(src.bytes());
+        core.schedule(
+            dur,
+            Box::new(move |w, core| {
+                if w.is_real() {
+                    let d = w.bufs.get_mut(dst.buf);
+                    d[dst.off..dst.off + dst.elems].copy_from_slice(&payload);
+                }
+                dst_done.fire(w, core);
+                src_done.fire(w, core);
+            }),
+        );
+    } else {
+        let left = fabric::transfer(
+            w,
+            core,
+            src_node,
+            dst_node,
+            src.bytes(),
+            Box::new(move |w, core| {
+                if w.is_real() {
+                    let d = w.bufs.get_mut(dst.buf);
+                    d[dst.off..dst.off + dst.elems].copy_from_slice(&payload);
+                }
+                dst_done.fire(w, core);
+            }),
+        );
+        let comp = left + w.cost.nic_completion;
+        src_done.schedule_fire_at(core, comp);
+    }
 }
 
 /// Triggered non-fetching atomic add into a counter cell on reaching the

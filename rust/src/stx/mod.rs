@@ -26,6 +26,18 @@
 //!
 //! Wildcards are rejected (§III-D): ST operations require a concrete
 //! source rank and tag.
+//!
+//! Beyond the paper's ST API this module also hosts the **kernel-
+//! triggered (KT)** wrappers of the follow-on work (arXiv 2306.15773):
+//! [`kt_start`] folds the trigger write into a kernel's execution window
+//! instead of appending a `writeValue64`, [`kt_wait`] folds the
+//! completion wait into a kernel's prologue instead of appending a
+//! `waitValue64`, and [`queue_drain`] is the one host-side wait a KT
+//! timed region performs (at its very end). The deferred operations
+//! themselves ([`enqueue_send`] / [`enqueue_recv`]) are shared verbatim:
+//! the NIC's deferred-work entries do not care *what* advances the
+//! trigger counter. [`Variant`] names the resulting axis every
+//! experiment sweeps.
 
 use crate::costmodel::MemOpFlavor;
 use crate::gpu::{self, StreamId, StreamOp, WriteMode};
@@ -33,6 +45,90 @@ use crate::mpi::{self, SrcSel, TagSel};
 use crate::nic::{self, BufSlice, Done, Envelope};
 use crate::sim::{CellId, HostCtx};
 use crate::world::World;
+
+/// The communication-variant axis every experiment and workload sweeps:
+/// *who drives the control path* of each communication step.
+///
+/// * [`Variant::Host`] — GPU-aware MPI baseline: the host synchronizes
+///   at every kernel boundary and posts sends itself (paper Fig. 1).
+/// * [`Variant::StreamTriggered`] / [`Variant::StreamTriggeredShader`]
+///   — the paper's ST path: `MPIX_Enqueue_*` deferred operations whose
+///   trigger and completion ride `writeValue64`/`waitValue64` stream
+///   memory ops executed by the GPU CP between kernels (Fig. 2), with
+///   the stock HIP or the hand-coded shader memop flavor (§V-F).
+/// * [`Variant::KernelTriggered`] — the follow-on KT path (arXiv
+///   2306.15773): triggers fire from *inside* running kernels
+///   ([`crate::gpu::KernelCtx`]) and completion waits fold into the
+///   next kernel's prologue, so an iteration pays no `enqueue_start`
+///   memop and no `MPIX_Enqueue_waitall`-style stream stall at all —
+///   completion rides the kernel's own tail.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// GPU-aware MPI: host synchronizes at kernel boundaries.
+    Host,
+    /// Stream-triggered with HIP stream memory operations.
+    StreamTriggered,
+    /// ST with hand-coded shader stream memory operations (§V-F).
+    StreamTriggeredShader,
+    /// Kernel-triggered: triggers fire from inside running kernels.
+    KernelTriggered,
+}
+
+impl Variant {
+    /// Stable short name used by reports, campaign grids, and the CLI.
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Host => "baseline",
+            Variant::StreamTriggered => "st",
+            Variant::StreamTriggeredShader => "st-shader",
+            Variant::KernelTriggered => "kt",
+        }
+    }
+
+    /// Parse a report/CLI name — the inverse of [`Variant::name`]
+    /// (accepts the legacy `shader` alias).
+    pub fn parse(s: &str) -> Option<Variant> {
+        Some(match s {
+            "baseline" => Variant::Host,
+            "st" => Variant::StreamTriggered,
+            "st-shader" | "shader" => Variant::StreamTriggeredShader,
+            "kt" => Variant::KernelTriggered,
+            _ => return None,
+        })
+    }
+
+    /// Stream-memop flavor this variant binds its queue with (KT queues
+    /// keep the HIP flavor: their hot path never executes a memop).
+    pub fn flavor(self) -> MemOpFlavor {
+        match self {
+            Variant::StreamTriggeredShader => MemOpFlavor::Shader,
+            _ => MemOpFlavor::Hip,
+        }
+    }
+
+    /// True for every variant that needs an `MPIX_Queue` (all but
+    /// [`Variant::Host`]).
+    pub fn uses_queue(self) -> bool {
+        self != Variant::Host
+    }
+
+    /// All variants, in report order.
+    pub fn all() -> [Variant; 4] {
+        [
+            Variant::Host,
+            Variant::StreamTriggered,
+            Variant::StreamTriggeredShader,
+            Variant::KernelTriggered,
+        ]
+    }
+}
+
+/// Default fraction of a kernel's execution window at which KT triggers
+/// fire: late enough that the data the released sends cover has been
+/// written (numerics commit at body start; 0.9 models firing from the
+/// kernel's last wavefront), early enough to overlap the NIC trigger
+/// handshake with the kernel tail.
+pub const KT_TRIGGER_FRAC: f64 = 0.9;
 
 /// Errors surfaced to the application (mirrors MPI error classes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -329,6 +425,78 @@ pub fn enqueue_wait(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StErr
         gpu::enqueue(w, core, sid, op);
         Ok(())
     })
+}
+
+/// Kernel-triggered start — the KT counterpart of [`enqueue_start`].
+/// Instead of appending a `writeValue64` stream op, the trigger-counter
+/// bump is folded into `kernel` (a [`gpu::KernelCtx`] later attached to
+/// a [`gpu::StreamOp::KtKernel`]) and fires at `frac` of the kernel's
+/// execution window: the NIC releases every operation enqueued since the
+/// previous start while the kernel is still running, removing the
+/// per-iteration CP memop handshake the ST path pays.
+///
+/// The write is a device-scope atomic increment; CP `enqueue_start`
+/// writes the absolute epoch. Both advance the counter to the same
+/// value, so ST and KT starts may be mixed on one queue.
+pub fn kt_start(
+    hctx: &mut HostCtx<World>,
+    queue: usize,
+    kernel: &mut gpu::KernelCtx,
+    frac: f64,
+) -> Result<(), StError> {
+    let call = hctx.with(|w, _| w.cost.host_enqueue_call);
+    hctx.advance(call);
+    hctx.with(|w, _| {
+        if w.queues[queue].freed {
+            return Err(StError::QueueFreed(queue));
+        }
+        let q = &mut w.queues[queue];
+        q.epoch += 1;
+        q.started_total += q.pending_since_start;
+        q.pending_since_start = 0;
+        kernel.kt_counter_inc(frac, q.trig_ctr, 1);
+        Ok(())
+    })
+}
+
+/// Kernel-triggered wait — the KT counterpart of [`enqueue_wait`]. The
+/// completion wait folds into `kernel`'s prologue (its first wavefront
+/// spins on the completion counter before the body runs), so the stream
+/// never stalls on a separate `waitValue64` op and no CP memop is
+/// executed: completion rides the kernel itself.
+pub fn kt_wait(
+    hctx: &mut HostCtx<World>,
+    queue: usize,
+    kernel: &mut gpu::KernelCtx,
+) -> Result<(), StError> {
+    let call = hctx.with(|w, _| w.cost.host_enqueue_call);
+    hctx.advance(call);
+    hctx.with(|w, _| {
+        if w.queues[queue].freed {
+            return Err(StError::QueueFreed(queue));
+        }
+        let q = &w.queues[queue];
+        kernel.wait_ge(q.comp_ctr, q.started_total);
+        Ok(())
+    })
+}
+
+/// Host-side completion drain: block the host until every started
+/// operation on `queue` has completed. KT timed regions call this once
+/// at the very end (per-iteration completion rides kernel prologues);
+/// it returns immediately on an already-quiet queue, so ST callers may
+/// use it as a cheap teardown guard too.
+pub fn queue_drain(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
+    let (cell, threshold, cost) = hctx.with(|w, _| {
+        if w.queues[queue].freed {
+            return Err(StError::QueueFreed(queue));
+        }
+        let q = &w.queues[queue];
+        Ok((q.comp_ctr, q.started_total, w.cost.host_wait_overhead))
+    })?;
+    hctx.advance(cost);
+    hctx.wait_ge(cell, threshold, "MPIX queue drain");
+    Ok(())
 }
 
 #[cfg(test)]

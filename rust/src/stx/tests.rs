@@ -382,3 +382,168 @@ fn shader_flavor_is_faster() {
     let shader = run_flavor(MemOpFlavor::Shader);
     assert!(shader < hip, "shader {shader} must beat hip {hip}");
 }
+
+// ---------------------------------------------------------------------
+// Kernel-triggered (KT) wrappers
+// ---------------------------------------------------------------------
+
+/// The KT core scenario: the pack kernel itself fires the trigger
+/// mid-execution and a later kernel's prologue carries the completion
+/// wait — end to end with zero stream memory ops on the sender.
+#[test]
+fn kt_send_recv_inter_node_end_to_end() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let src = w.bufs.alloc(64);
+    let dst = w.bufs.alloc(64);
+    let out = run_cluster(w, 1, move |rank, ctx| {
+        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        if rank == 0 {
+            // The deferred send is enqueued first; the pack kernel that
+            // produces the data also releases it (stream-ordering: data
+            // commits at body start, trigger fires later in the window).
+            enqueue_send(ctx, q, 1, BufSlice::whole(src, 64), 11, crate::mpi::COMM_WORLD).unwrap();
+            let mut kt = gpu::KernelCtx::new();
+            kt_start(ctx, q, &mut kt, KT_TRIGGER_FRAC).unwrap();
+            host_enqueue(
+                ctx,
+                sid,
+                StreamOp::KtKernel(
+                    KernelSpec {
+                        name: "kt_pack".into(),
+                        flops: 1000,
+                        bytes: 1000,
+                        payload: KernelPayload::Fn(Box::new(move |w, _| {
+                            w.bufs.get_mut(src).fill(3.25)
+                        })),
+                    },
+                    kt,
+                ),
+            );
+            // A trailing kernel's prologue waits out the completion.
+            let mut tail = gpu::KernelCtx::new();
+            kt_wait(ctx, q, &mut tail).unwrap();
+            host_enqueue(
+                ctx,
+                sid,
+                StreamOp::KtKernel(
+                    KernelSpec {
+                        name: "kt_tail".into(),
+                        flops: 0,
+                        bytes: 0,
+                        payload: KernelPayload::None,
+                    },
+                    tail,
+                ),
+            );
+            stream_synchronize(ctx, sid);
+        } else {
+            enqueue_recv(ctx, q, 0, BufSlice::whole(dst, 64), 11, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap();
+            enqueue_wait(ctx, q).unwrap();
+            stream_synchronize(ctx, sid);
+            ctx.with(move |w, _| assert_eq!(w.bufs.get(dst), &[3.25; 64], "KT payload"));
+        }
+        free_queue(ctx, q).unwrap();
+    })
+    .unwrap();
+    assert_eq!(out.world.metrics.dwq_triggered, 1, "send offloaded to NIC DWQ");
+    assert_eq!(out.world.metrics.kt_triggers, 1, "trigger fired from inside the kernel");
+    // Only the *receiver* executed memops (its ST start+wait): the KT
+    // sender paid none.
+    assert_eq!(out.world.metrics.memops_executed, 2);
+}
+
+/// ST and KT starts may be mixed on one queue: the absolute-epoch
+/// `writeValue64` and the device-scope increment advance the trigger
+/// counter to the same values.
+#[test]
+fn st_and_kt_starts_interoperate_on_one_queue() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let s1 = w.bufs.alloc_init(vec![1.5; 8]);
+    let s2 = w.bufs.alloc_init(vec![2.5; 8]);
+    let d1 = w.bufs.alloc(8);
+    let d2 = w.bufs.alloc(8);
+    run_cluster(w, 1, move |rank, ctx| {
+        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        if rank == 0 {
+            // Epoch 1: classic ST start.
+            enqueue_send(ctx, q, 1, BufSlice::whole(s1, 8), 1, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap();
+            // Epoch 2: KT start riding a kernel.
+            enqueue_send(ctx, q, 1, BufSlice::whole(s2, 8), 2, crate::mpi::COMM_WORLD).unwrap();
+            let mut kt = gpu::KernelCtx::new();
+            kt_start(ctx, q, &mut kt, 1.0).unwrap();
+            host_enqueue(
+                ctx,
+                sid,
+                StreamOp::KtKernel(
+                    KernelSpec {
+                        name: "epoch2".into(),
+                        flops: 0,
+                        bytes: 0,
+                        payload: KernelPayload::None,
+                    },
+                    kt,
+                ),
+            );
+            enqueue_wait(ctx, q).unwrap();
+            stream_synchronize(ctx, sid);
+        } else {
+            enqueue_recv(ctx, q, 0, BufSlice::whole(d1, 8), 1, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_recv(ctx, q, 0, BufSlice::whole(d2, 8), 2, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap();
+            enqueue_wait(ctx, q).unwrap();
+            stream_synchronize(ctx, sid);
+            ctx.with(move |w, _| {
+                assert_eq!(w.bufs.get(d1), &[1.5; 8], "ST epoch");
+                assert_eq!(w.bufs.get(d2), &[2.5; 8], "KT epoch");
+            });
+        }
+        free_queue(ctx, q).unwrap();
+    })
+    .unwrap();
+}
+
+/// `queue_drain` blocks the host until every started op completed, and
+/// returns immediately on a quiet queue; freed queues are an error.
+#[test]
+fn queue_drain_waits_out_kt_sends() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let src = w.bufs.alloc_init(vec![8.0; 16]);
+    let dst = w.bufs.alloc(16);
+    run_cluster(w, 1, move |rank, ctx| {
+        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        if rank == 0 {
+            enqueue_send(ctx, q, 1, BufSlice::whole(src, 16), 5, crate::mpi::COMM_WORLD).unwrap();
+            let mut kt = gpu::KernelCtx::new();
+            kt_start(ctx, q, &mut kt, KT_TRIGGER_FRAC).unwrap();
+            host_enqueue(
+                ctx,
+                sid,
+                StreamOp::KtKernel(
+                    KernelSpec {
+                        name: "kt_send".into(),
+                        flops: 0,
+                        bytes: 0,
+                        payload: KernelPayload::None,
+                    },
+                    kt,
+                ),
+            );
+            // No enqueue_wait, no tail kernel: the host drain is the only
+            // completion wait — free_queue must then succeed.
+            queue_drain(ctx, q).unwrap();
+            queue_drain(ctx, q).unwrap(); // idempotent on a quiet queue
+            stream_synchronize(ctx, sid);
+        } else {
+            enqueue_recv(ctx, q, 0, BufSlice::whole(dst, 16), 5, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap();
+            enqueue_wait(ctx, q).unwrap();
+            stream_synchronize(ctx, sid);
+            ctx.with(move |w, _| assert_eq!(w.bufs.get(dst), &[8.0; 16]));
+        }
+        free_queue(ctx, q).unwrap();
+        assert_eq!(queue_drain(ctx, q), Err(StError::QueueFreed(q)));
+    })
+    .unwrap();
+}

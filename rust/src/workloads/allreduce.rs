@@ -12,6 +12,10 @@
 //! * `rdbl-st` — [`crate::collectives::recursive_doubling_allreduce_st`]:
 //!   log2(n) full-vector exchanges; requires a power-of-two world (the
 //!   campaign skips infeasible cells via `configure`).
+//! * `ring-kt` — [`crate::collectives::ring_allreduce_kt`]: the same
+//!   ring schedule, kernel-triggered — each step's trigger/wait pair
+//!   rides the reduction kernels themselves, with no per-step stream
+//!   memory ops (arXiv 2306.15773).
 //!
 //! Each of the `iters` repetitions re-initializes the vector (untimed),
 //! barriers so repetitions never overlap across ranks, and times one
@@ -23,7 +27,8 @@ use std::sync::{Arc, Mutex};
 use anyhow::{anyhow, bail, Result};
 
 use crate::collectives::{
-    chunks, recursive_doubling_allreduce_st, ring_ag_step, ring_allreduce_st, ring_rs_step,
+    chunks, recursive_doubling_allreduce_st, ring_ag_step, ring_allreduce_kt, ring_allreduce_st,
+    ring_rs_step,
 };
 use crate::coordinator::{build_world, run_cluster};
 use crate::costmodel::MemOpFlavor;
@@ -43,6 +48,7 @@ enum Mode {
     HostRing,
     RingSt,
     RdblSt,
+    RingKt,
 }
 
 fn mode_of(variant: &str) -> Result<Mode> {
@@ -50,6 +56,7 @@ fn mode_of(variant: &str) -> Result<Mode> {
         "baseline" => Mode::HostRing,
         "ring-st" => Mode::RingSt,
         "rdbl-st" => Mode::RdblSt,
+        "ring-kt" => Mode::RingKt,
         other => bail!("allreduce: unknown variant '{other}'"),
     })
 }
@@ -134,11 +141,11 @@ impl Workload for Allreduce {
     }
 
     fn description(&self) -> &'static str {
-        "allreduce(sum): host ring vs ST ring vs ST recursive doubling, exact-validated"
+        "allreduce(sum): host ring vs ST ring vs ST recursive doubling vs KT ring"
     }
 
     fn variants(&self) -> &'static [&'static str] {
-        &["baseline", "ring-st", "rdbl-st"]
+        &["baseline", "ring-st", "rdbl-st", "ring-kt"]
     }
 
     fn default_elems(&self) -> &'static [usize] {
@@ -205,6 +212,9 @@ impl Workload for Allreduce {
                     }
                     Mode::RingSt => {
                         ring_allreduce_st(ctx, rank, n, queue.unwrap(), sid, d, len, t, COMM_WORLD)
+                    }
+                    Mode::RingKt => {
+                        ring_allreduce_kt(ctx, rank, n, queue.unwrap(), sid, d, len, t, COMM_WORLD)
                     }
                     Mode::RdblSt => recursive_doubling_allreduce_st(
                         ctx,

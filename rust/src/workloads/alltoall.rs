@@ -5,9 +5,9 @@
 //!
 //! Per iteration: pre-post n-1 receives → pack kernel (writes all
 //! outgoing blocks) → sends (host-synchronized baseline vs
-//! stream-triggered) → local self-block copy kernel → wait receives →
-//! drain. Validation is exact: the block received from rank `s` must be
-//! `payload(s, my_rank, j)`.
+//! stream-triggered vs kernel-triggered) → local self-block copy kernel
+//! → wait receives → drain. Validation is exact: the block received
+//! from rank `s` must be `payload(s, my_rank, j)`.
 
 use std::sync::{Arc, Mutex};
 
@@ -17,10 +17,10 @@ use crate::coordinator::{build_world, run_cluster};
 use crate::gpu::{self, host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
 use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
 use crate::nic::BufSlice;
-use crate::stx;
+use crate::stx::{self, Variant};
 use crate::world::ComputeMode;
 
-use super::{payload, st_flavor_of, ScenarioCfg, ScenarioRun, Validation, Workload};
+use super::{comm_variant, payload, ScenarioCfg, ScenarioRun, Validation, Workload};
 
 pub struct AllToAll;
 
@@ -36,7 +36,7 @@ impl Workload for AllToAll {
     }
 
     fn variants(&self) -> &'static [&'static str] {
-        &["baseline", "st", "st-shader"]
+        &["baseline", "st", "st-shader", "kt"]
     }
 
     fn default_elems(&self) -> &'static [usize] {
@@ -44,7 +44,7 @@ impl Workload for AllToAll {
     }
 
     fn configure(&self, cfg: &ScenarioCfg) -> Result<()> {
-        st_flavor_of("alltoall", &cfg.variant)?;
+        comm_variant("alltoall", &cfg.variant)?;
         if cfg.world_size() == 0 {
             bail!("alltoall: empty world");
         }
@@ -56,7 +56,7 @@ impl Workload for AllToAll {
 
     fn run(&self, cfg: &ScenarioCfg) -> Result<ScenarioRun> {
         self.configure(cfg)?;
-        let st = st_flavor_of("alltoall", &cfg.variant)?;
+        let variant = comm_variant("alltoall", &cfg.variant)?;
         let n = cfg.world_size();
         let elems = cfg.elems;
 
@@ -82,7 +82,9 @@ impl Workload for AllToAll {
             (send.clone(), recv.clone(), images.clone(), times.clone());
         let out = run_cluster(world, cfg.seed, move |rank, ctx| {
             let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
-            let queue = st.map(|flavor| stx::create_queue(ctx, rank, sid, flavor));
+            let queue = variant
+                .uses_queue()
+                .then(|| stx::create_queue(ctx, rank, sid, variant.flavor()));
             let (sb, rb) = (send2[rank], recv2[rank]);
 
             let t0 = ctx.now();
@@ -107,21 +109,18 @@ impl Workload for AllToAll {
                 //    travels by Arc, not by per-iteration clone).
                 let images_k = images2.clone();
                 let total = n * elems;
-                host_enqueue(
-                    ctx,
-                    sid,
-                    StreamOp::Kernel(KernelSpec {
-                        name: "a2a_pack".into(),
-                        flops: 0,
-                        bytes: 2 * 4 * total as u64,
-                        payload: KernelPayload::Fn(Box::new(move |w, _| {
-                            w.bufs.get_mut(sb)[..total].copy_from_slice(&images_k[rank]);
-                        })),
-                    }),
-                );
+                let pack = KernelSpec {
+                    name: "a2a_pack".into(),
+                    flops: 0,
+                    bytes: 2 * 4 * total as u64,
+                    payload: KernelPayload::Fn(Box::new(move |w, _| {
+                        w.bufs.get_mut(sb)[..total].copy_from_slice(&images_k[rank]);
+                    })),
+                };
                 // 3. Sends to all peers.
-                match queue {
-                    None => {
+                match variant {
+                    Variant::Host => {
+                        host_enqueue(ctx, sid, StreamOp::Kernel(pack));
                         stream_synchronize(ctx, sid);
                         let mut sreqs = Vec::with_capacity(n - 1);
                         for p in 0..n {
@@ -139,7 +138,34 @@ impl Workload for AllToAll {
                         }
                         mpi::waitall(ctx, &sreqs);
                     }
-                    Some(q) => {
+                    Variant::KernelTriggered => {
+                        // KT: the previous iteration's send completions
+                        // ride the pack prologue; this iteration's
+                        // trigger fires from inside the pack kernel.
+                        let q = queue.unwrap();
+                        let mut kt = gpu::KernelCtx::new();
+                        stx::kt_wait(ctx, q, &mut kt).expect("alltoall kt_wait");
+                        for p in 0..n {
+                            if p == rank {
+                                continue;
+                            }
+                            stx::enqueue_send(
+                                ctx,
+                                q,
+                                p,
+                                BufSlice::new(sb, p * elems, elems),
+                                A2A_TAG,
+                                COMM_WORLD,
+                            )
+                            .expect("alltoall enqueue_send");
+                        }
+                        stx::kt_start(ctx, q, &mut kt, stx::KT_TRIGGER_FRAC)
+                            .expect("alltoall kt_start");
+                        host_enqueue(ctx, sid, StreamOp::KtKernel(pack, kt));
+                    }
+                    _ => {
+                        host_enqueue(ctx, sid, StreamOp::Kernel(pack));
+                        let q = queue.unwrap();
                         for p in 0..n {
                             if p == rank {
                                 continue;
@@ -175,6 +201,11 @@ impl Workload for AllToAll {
                 // 5. Wait receives, then drain before buffers are reused.
                 mpi::waitall(ctx, &rreqs);
                 stream_synchronize(ctx, sid);
+            }
+            // KT drains its outstanding send completions inside the
+            // timed region (ST already waited via enqueue_wait).
+            if variant == Variant::KernelTriggered {
+                stx::queue_drain(ctx, queue.unwrap()).expect("alltoall queue drain");
             }
             let dt = ctx.now() - t0;
             if let Some(q) = queue {

@@ -12,10 +12,15 @@
 //! Infeasible cells (a workload's `configure` rejects the grid point,
 //! e.g. recursive doubling on a non-power-of-two world) are reported as
 //! `skipped` rows instead of failing the campaign.
+//!
+//! Every ran cell also carries a baseline-relative delta (`vs ref` /
+//! `delta_vs_ref_pct`): its figure of merit against the workload's
+//! reference variant at the same size and topology, so ST and KT
+//! speedups are readable directly from the report.
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::report::{json_escape, markdown_table, Summary};
+use crate::coordinator::report::{json_escape, markdown_table, pct_delta, Summary};
 use crate::costmodel::presets;
 use crate::sim::sweep;
 use crate::world::Topology;
@@ -59,12 +64,19 @@ impl Default for CampaignSpec {
 }
 
 impl CampaignSpec {
-    /// Tiny smoke campaign (2 workloads × 2 variants × 1 size × 1 topo):
-    /// fast enough for CI and the `campaign` example's assertions.
+    /// Tiny smoke campaign (2 workloads × 3 variants each — host, ST,
+    /// and KT — × 1 size × 1 topo): fast enough for CI and the
+    /// `campaign` example's assertions.
     pub fn smoke() -> Self {
         Self {
             workloads: vec!["halo3d".into(), "allreduce".into()],
-            variants: vec!["baseline".into(), "st".into(), "ring-st".into()],
+            variants: vec![
+                "baseline".into(),
+                "st".into(),
+                "kt".into(),
+                "ring-st".into(),
+                "ring-kt".into(),
+            ],
             elems: vec![48],
             topos: vec![(2, 1)],
             seeds: vec![5, 9],
@@ -86,6 +98,12 @@ pub struct CampaignCell {
     /// avg/min/max over seeds in virtual ms; None when the cell was
     /// skipped as infeasible.
     pub summary: Option<Summary>,
+    /// Figure-of-merit delta vs the workload's *reference* variant
+    /// (`variants()[0]`) at the same size and topology, in percent
+    /// (positive = slower than the reference). None for the reference
+    /// cell itself, for skipped cells, and when the reference cell is
+    /// missing from the grid.
+    pub delta_vs_ref_pct: Option<f64>,
     /// Validation label ("passed(n)" / "not-checked" / "FAILED: ..." /
     /// "skipped: ...").
     pub validation: String,
@@ -165,6 +183,10 @@ impl CampaignReport {
                 )),
                 None => s.push_str("\"status\": \"skipped\", "),
             }
+            match c.delta_vs_ref_pct {
+                Some(d) => s.push_str(&format!("\"delta_vs_ref_pct\": {d:.3}, ")),
+                None => s.push_str("\"delta_vs_ref_pct\": null, "),
+            }
             s.push_str(&format!(
                 "\"validation\": \"{}\", \"bytes_wire\": {}, \"wire_msgs\": {}, \
                  \"max_ingress_wait_ns\": {}, \"max_egress_wait_ns\": {}, \
@@ -192,6 +214,7 @@ impl CampaignReport {
             "avg ms".to_string(),
             "min ms".to_string(),
             "max ms".to_string(),
+            "vs ref".to_string(),
             "validation".to_string(),
             "wire B".to_string(),
             "wire msgs".to_string(),
@@ -207,6 +230,10 @@ impl CampaignReport {
                 ),
                 None => ("--".to_string(), "--".to_string(), "--".to_string()),
             };
+            let vs_ref = match c.delta_vs_ref_pct {
+                Some(d) => format!("{d:+.1}%"),
+                None => "--".to_string(),
+            };
             rows.push(vec![
                 c.workload.clone(),
                 c.variant.clone(),
@@ -215,6 +242,7 @@ impl CampaignReport {
                 avg,
                 min,
                 max,
+                vs_ref,
                 c.validation.clone(),
                 c.bytes_wire.to_string(),
                 c.wire_msgs.to_string(),
@@ -394,6 +422,7 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
                 nodes: p.nodes,
                 ranks_per_node: p.rpn,
                 summary: None,
+                delta_vs_ref_pct: None,
                 validation: format!("skipped: {reason}"),
                 ok: true,
                 bytes_wire: 0,
@@ -420,6 +449,7 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
             nodes: p.nodes,
             ranks_per_node: p.rpn,
             summary: Some(Summary::of(&ms)),
+            delta_vs_ref_pct: None,
             validation: validation.label(),
             ok: validation.ok(),
             bytes_wire: first.metrics.bytes_wire,
@@ -428,6 +458,39 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
             max_egress_wait_ns: first.metrics.max_egress_wait_ns,
             events: first.stats.events,
         });
+    }
+
+    // Baseline-relative delta column (the figure harness's "vs baseline"
+    // generalized, per the ROADMAP): every ran cell vs its workload's
+    // reference variant — variants()[0] — at the same size and topology.
+    // The reference cell itself, and cells whose reference is missing or
+    // skipped, carry no delta.
+    let mut deltas: Vec<Option<f64>> = vec![None; cells.len()];
+    for (i, c) in cells.iter().enumerate() {
+        let Some(sm) = &c.summary else { continue };
+        let Some(rv) = selected
+            .iter()
+            .find(|w| w.name() == c.workload)
+            .map(|w| w.variants()[0])
+        else {
+            continue;
+        };
+        if c.variant == rv {
+            continue;
+        }
+        let reference = cells.iter().find(|r| {
+            r.workload == c.workload
+                && r.variant == rv
+                && r.elems == c.elems
+                && r.nodes == c.nodes
+                && r.ranks_per_node == c.ranks_per_node
+        });
+        if let Some(rs) = reference.and_then(|r| r.summary.as_ref()) {
+            deltas[i] = Some(pct_delta(rs.avg, sm.avg));
+        }
+    }
+    for (c, d) in cells.iter_mut().zip(deltas) {
+        c.delta_vs_ref_pct = d;
     }
 
     Ok(CampaignReport { seeds: spec.seeds.clone(), iters: spec.iters, cells })

@@ -7,7 +7,7 @@
 //! Modeled compute (the Faces numerics are validated by their own
 //! Real-compute e2e tests), hence [`Validation::NotChecked`].
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::faces::{run_faces, FacesConfig, Variant};
 use crate::world::ComputeMode;
@@ -17,12 +17,7 @@ use super::{grid_for, ScenarioCfg, ScenarioRun, Validation, Workload};
 pub struct FacesAdapter;
 
 fn parse_variant(name: &str) -> Result<Variant> {
-    Ok(match name {
-        "baseline" => Variant::Baseline,
-        "st" => Variant::St,
-        "st-shader" => Variant::StShader,
-        other => bail!("faces: unknown variant '{other}'"),
-    })
+    Variant::parse(name).ok_or_else(|| anyhow!("faces: unknown variant '{name}'"))
 }
 
 /// Block edge approximating a face payload of `elems` f32s.
@@ -40,7 +35,7 @@ impl Workload for FacesAdapter {
     }
 
     fn variants(&self) -> &'static [&'static str] {
-        &["baseline", "st", "st-shader"]
+        &["baseline", "st", "st-shader", "kt"]
     }
 
     fn default_elems(&self) -> &'static [usize] {

@@ -5,8 +5,9 @@
 //! to 26 neighbors each iteration: face messages carry `elems` f32s, edge
 //! messages `max(elems/16, 1)`, corner messages 1 (the Nekbone surface
 //! ratio, coarsened). Per iteration: pre-post receives → pack kernel →
-//! sends (host-synchronized baseline vs stream-triggered) → wait receives
-//! → unpack-accumulate kernel → drain.
+//! sends (host-synchronized baseline vs stream-triggered vs
+//! kernel-triggered, where the trigger fires from inside the pack
+//! kernel) → wait receives → unpack-accumulate kernel → drain.
 //!
 //! Validation is exact: send payloads are deterministic small integers
 //! ([`super::payload`]), the unpack kernel accumulates them, and the
@@ -19,16 +20,15 @@ use std::sync::{Arc, Mutex};
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::{build_world, run_cluster};
-use crate::costmodel::MemOpFlavor;
 use crate::faces::domain::ProcGrid;
 use crate::gpu::{self, host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
 use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
 use crate::nic::BufSlice;
 use crate::sim::HostCtx;
-use crate::stx;
+use crate::stx::{self, Variant};
 use crate::world::{BufId, ComputeMode, World};
 
-use super::{grid_for, payload, st_flavor_of, ScenarioCfg, ScenarioRun, Validation, Workload};
+use super::{comm_variant, grid_for, payload, ScenarioCfg, ScenarioRun, Validation, Workload};
 
 pub struct Halo3d;
 
@@ -103,12 +103,14 @@ fn rank_program(
     plans: &Arc<Vec<RankPlan>>,
     rank: usize,
     ctx: &mut HostCtx<World>,
-    st: Option<MemOpFlavor>,
+    variant: Variant,
     times: &Arc<Mutex<Vec<u64>>>,
 ) {
     let plan = &plans[rank];
     let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
-    let queue = st.map(|flavor| stx::create_queue(ctx, rank, sid, flavor));
+    let queue = variant
+        .uses_queue()
+        .then(|| stx::create_queue(ctx, rank, sid, variant.flavor()));
 
     let t0 = ctx.now();
     for _iter in 0..iters {
@@ -128,21 +130,18 @@ fn rank_program(
         // 2. Pack kernel: surface -> contiguous send buffer (the image
         //    travels by Arc, not by per-iteration clone).
         let (send, total, plans_k) = (plan.send, plan.total_send, plans.clone());
-        host_enqueue(
-            ctx,
-            sid,
-            StreamOp::Kernel(KernelSpec {
-                name: "halo3d_pack".into(),
-                flops: 0,
-                bytes: 2 * 4 * total as u64,
-                payload: KernelPayload::Fn(Box::new(move |w, _| {
-                    w.bufs.get_mut(send)[..total].copy_from_slice(&plans_k[rank].send_image);
-                })),
-            }),
-        );
+        let pack = KernelSpec {
+            name: "halo3d_pack".into(),
+            flops: 0,
+            bytes: 2 * 4 * total as u64,
+            payload: KernelPayload::Fn(Box::new(move |w, _| {
+                w.bufs.get_mut(send)[..total].copy_from_slice(&plans_k[rank].send_image);
+            })),
+        };
         // 3. Sends.
-        match queue {
-            None => {
+        match variant {
+            Variant::Host => {
+                host_enqueue(ctx, sid, StreamOp::Kernel(pack));
                 // Baseline: the Fig-1 kernel-boundary sync, then host MPI.
                 stream_synchronize(ctx, sid);
                 let mut sreqs = Vec::with_capacity(plan.nbrs.len());
@@ -158,9 +157,33 @@ fn rank_program(
                 }
                 mpi::waitall(ctx, &sreqs);
             }
-            Some(q) => {
+            Variant::KernelTriggered => {
+                // KT: the previous iteration's send completions ride
+                // this pack kernel's prologue, and this iteration's
+                // trigger fires from inside the kernel — no stream
+                // memory ops.
+                let q = queue.unwrap();
+                let mut kt = gpu::KernelCtx::new();
+                stx::kt_wait(ctx, q, &mut kt).expect("halo3d kt_wait");
+                for m in &plan.nbrs {
+                    stx::enqueue_send(
+                        ctx,
+                        q,
+                        m.nbr,
+                        BufSlice::new(plan.send, m.send_off, m.elems),
+                        m.tag_send,
+                        COMM_WORLD,
+                    )
+                    .expect("halo3d enqueue_send");
+                }
+                stx::kt_start(ctx, q, &mut kt, stx::KT_TRIGGER_FRAC).expect("halo3d kt_start");
+                host_enqueue(ctx, sid, StreamOp::KtKernel(pack, kt));
+            }
+            _ => {
+                host_enqueue(ctx, sid, StreamOp::Kernel(pack));
                 // ST: deferred sends triggered in stream order after pack;
                 // the stream (not the host) waits for completion.
+                let q = queue.unwrap();
                 for m in &plan.nbrs {
                     stx::enqueue_send(
                         ctx,
@@ -199,6 +222,12 @@ fn rank_program(
         //    next iteration's receives reuse the buffers.
         stream_synchronize(ctx, sid);
     }
+    // KT drains its outstanding send completions inside the timed region
+    // (ST already waited via enqueue_wait), keeping the variants' figures
+    // of merit comparable.
+    if variant == Variant::KernelTriggered {
+        stx::queue_drain(ctx, queue.unwrap()).expect("halo3d queue drain");
+    }
     let dt = ctx.now() - t0;
     if let Some(q) = queue {
         stx::free_queue(ctx, q).expect("halo3d queue idle at teardown");
@@ -216,7 +245,7 @@ impl Workload for Halo3d {
     }
 
     fn variants(&self) -> &'static [&'static str] {
-        &["baseline", "st", "st-shader"]
+        &["baseline", "st", "st-shader", "kt"]
     }
 
     fn default_elems(&self) -> &'static [usize] {
@@ -224,7 +253,7 @@ impl Workload for Halo3d {
     }
 
     fn configure(&self, cfg: &ScenarioCfg) -> Result<()> {
-        st_flavor_of("halo3d", &cfg.variant)?;
+        comm_variant("halo3d", &cfg.variant)?;
         if cfg.world_size() == 0 {
             bail!("halo3d: empty world");
         }
@@ -242,7 +271,7 @@ impl Workload for Halo3d {
 
     fn run(&self, cfg: &ScenarioCfg) -> Result<ScenarioRun> {
         self.configure(cfg)?;
-        let st = st_flavor_of("halo3d", &cfg.variant)?;
+        let variant = comm_variant("halo3d", &cfg.variant)?;
         let (px, py, pz) = grid_for(cfg.world_size());
         let grid = ProcGrid::new(px, py, pz);
         let mut world = build_world(cfg.cost.clone(), cfg.topology());
@@ -254,7 +283,7 @@ impl Workload for Halo3d {
         let plans2 = plans.clone();
         let times2 = times.clone();
         let out = run_cluster(world, cfg.seed, move |rank, ctx| {
-            rank_program(iters, &plans2, rank, ctx, st, &times2);
+            rank_program(iters, &plans2, rank, ctx, variant, &times2);
         })
         .map_err(|e| anyhow!("halo3d run failed: {e}"))?;
 

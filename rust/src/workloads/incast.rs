@@ -21,10 +21,10 @@ use crate::coordinator::{build_world, run_cluster};
 use crate::gpu::{self, host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
 use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
 use crate::nic::BufSlice;
-use crate::stx;
+use crate::stx::{self, Variant};
 use crate::world::ComputeMode;
 
-use super::{payload, st_flavor_of, ScenarioCfg, ScenarioRun, Validation, Workload};
+use super::{comm_variant, payload, ScenarioCfg, ScenarioRun, Validation, Workload};
 
 pub struct Incast;
 
@@ -41,7 +41,7 @@ impl Workload for Incast {
     }
 
     fn variants(&self) -> &'static [&'static str] {
-        &["baseline", "st", "st-shader"]
+        &["baseline", "st", "st-shader", "kt"]
     }
 
     fn default_elems(&self) -> &'static [usize] {
@@ -49,7 +49,7 @@ impl Workload for Incast {
     }
 
     fn configure(&self, cfg: &ScenarioCfg) -> Result<()> {
-        st_flavor_of("incast", &cfg.variant)?;
+        comm_variant("incast", &cfg.variant)?;
         if cfg.world_size() < 2 {
             bail!("incast needs at least one sender besides the root");
         }
@@ -61,7 +61,7 @@ impl Workload for Incast {
 
     fn run(&self, cfg: &ScenarioCfg) -> Result<ScenarioRun> {
         self.configure(cfg)?;
-        let st = st_flavor_of("incast", &cfg.variant)?;
+        let variant = comm_variant("incast", &cfg.variant)?;
         let n = cfg.world_size();
         let elems = cfg.elems;
 
@@ -84,7 +84,9 @@ impl Workload for Incast {
             let queue = if rank == ROOT {
                 None
             } else {
-                st.map(|flavor| stx::create_queue(ctx, rank, sid, flavor))
+                variant
+                    .uses_queue()
+                    .then(|| stx::create_queue(ctx, rank, sid, variant.flavor()))
             };
             let t0 = ctx.now();
             if rank == ROOT {
@@ -108,20 +110,17 @@ impl Workload for Incast {
                     // Pack kernel refreshes the outgoing message (image by
                     // Arc, not by per-iteration clone).
                     let images_k = images2.clone();
-                    host_enqueue(
-                        ctx,
-                        sid,
-                        StreamOp::Kernel(KernelSpec {
-                            name: "incast_pack".into(),
-                            flops: 0,
-                            bytes: 2 * 4 * elems as u64,
-                            payload: KernelPayload::Fn(Box::new(move |w, _| {
-                                w.bufs.get_mut(sb)[..elems].copy_from_slice(&images_k[rank]);
-                            })),
-                        }),
-                    );
-                    match queue {
-                        None => {
+                    let pack = KernelSpec {
+                        name: "incast_pack".into(),
+                        flops: 0,
+                        bytes: 2 * 4 * elems as u64,
+                        payload: KernelPayload::Fn(Box::new(move |w, _| {
+                            w.bufs.get_mut(sb)[..elems].copy_from_slice(&images_k[rank]);
+                        })),
+                    };
+                    match variant {
+                        Variant::Host => {
+                            host_enqueue(ctx, sid, StreamOp::Kernel(pack));
                             stream_synchronize(ctx, sid);
                             let sr = mpi::isend(
                                 ctx,
@@ -133,7 +132,30 @@ impl Workload for Incast {
                             );
                             mpi::wait(ctx, sr);
                         }
-                        Some(q) => {
+                        Variant::KernelTriggered => {
+                            // KT: the previous iteration's send completion
+                            // rides the pack prologue; the trigger fires
+                            // from inside the pack kernel.
+                            let q = queue.unwrap();
+                            let mut kt = gpu::KernelCtx::new();
+                            stx::kt_wait(ctx, q, &mut kt).expect("incast kt_wait");
+                            stx::enqueue_send(
+                                ctx,
+                                q,
+                                ROOT,
+                                BufSlice::whole(sb, elems),
+                                INCAST_TAG,
+                                COMM_WORLD,
+                            )
+                            .expect("incast enqueue_send");
+                            stx::kt_start(ctx, q, &mut kt, stx::KT_TRIGGER_FRAC)
+                                .expect("incast kt_start");
+                            host_enqueue(ctx, sid, StreamOp::KtKernel(pack, kt));
+                            stream_synchronize(ctx, sid);
+                        }
+                        _ => {
+                            host_enqueue(ctx, sid, StreamOp::Kernel(pack));
+                            let q = queue.unwrap();
                             stx::enqueue_send(
                                 ctx,
                                 q,
@@ -148,6 +170,11 @@ impl Workload for Incast {
                             stream_synchronize(ctx, sid);
                         }
                     }
+                }
+                // KT drains the final send completion inside the timed
+                // region (ST already waited via enqueue_wait).
+                if variant == Variant::KernelTriggered {
+                    stx::queue_drain(ctx, queue.unwrap()).expect("incast queue drain");
                 }
             }
             // Stop the clock before queue teardown (outside the timed

@@ -24,9 +24,15 @@
 //! |-------------|--------------------------------------------------|
 //! | `faces`     | adapter over [`crate::faces::run_faces`]         |
 //! | `halo3d`    | 27-point stencil exchange (faces+edges+corners)  |
-//! | `allreduce` | ST ring / ST recursive-doubling / host baseline  |
+//! | `allreduce` | host / ST / KT ring + ST recursive-doubling      |
 //! | `alltoall`  | transpose-style personalized exchange            |
 //! | `incast`    | N→1 hotspot stress on one NIC ingress port       |
+//!
+//! Every workload sweeps the [`crate::stx::Variant`] axis: the host
+//! baseline, the paper's stream-triggered path (`st` / `st-shader`),
+//! and the kernel-triggered path (`kt`, arXiv 2306.15773) in which
+//! triggers fire from inside kernels and completion waits ride kernel
+//! prologues — no per-iteration stream memory ops at all.
 
 pub mod campaign;
 
@@ -38,10 +44,11 @@ mod incast;
 
 pub use campaign::{run_campaign, CampaignReport, CampaignSpec};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, Result};
 
-use crate::costmodel::{CostModel, MemOpFlavor};
+use crate::costmodel::CostModel;
 use crate::sim::SimStats;
+use crate::stx::Variant;
 use crate::world::{Metrics, Topology};
 
 /// One cell of a campaign grid: everything a workload needs for one run.
@@ -134,10 +141,19 @@ pub struct ScenarioRun {
 ///    against a host-side reference where applicable, and returns the
 ///    summary. Runs must be deterministic functions of the config
 ///    (randomness only via `cfg.seed`).
+/// 3. Variants must keep their timed regions comparable: every variant
+///    of a workload ends its region fully drained (kernels complete,
+///    triggered sends completed), so figures of merit differ only by
+///    the control path under study.
 pub trait Workload: Send + Sync {
+    /// Registry key, stable across releases (used by CLI filters and
+    /// report rows).
     fn name(&self) -> &'static str;
+    /// One-line human description shown by reports.
     fn description(&self) -> &'static str;
-    /// Variant names in deterministic order (first = reference variant).
+    /// Variant names in deterministic order. The first entry is the
+    /// workload's *reference* variant: campaign reports compute every
+    /// other cell's baseline-relative delta against it.
     fn variants(&self) -> &'static [&'static str];
     /// Default message sizes (f32 elems) used when a campaign does not
     /// override the size axis.
@@ -169,16 +185,14 @@ pub fn names() -> Vec<&'static str> {
     registry().iter().map(|w| w.name()).collect()
 }
 
-/// Shared variant axis for the point-to-point workloads: `baseline`
-/// (host-synchronized MPI) vs `st`/`st-shader` (stream-triggered with
-/// the HIP or hand-coded-shader memop flavor, paper §V-F). `workload`
-/// names the caller in the rejection message.
-pub(crate) fn st_flavor_of(workload: &str, variant: &str) -> Result<Option<MemOpFlavor>> {
-    Ok(match variant {
-        "baseline" => None,
-        "st" => Some(MemOpFlavor::Hip),
-        "st-shader" => Some(MemOpFlavor::Shader),
-        other => bail!("{workload}: unknown variant '{other}'"),
+/// Shared variant axis for the point-to-point workloads — the
+/// [`crate::stx::Variant`] names: `baseline` (host-synchronized MPI),
+/// `st`/`st-shader` (stream-triggered with the HIP or hand-coded-shader
+/// memop flavor, paper §V-F), and `kt` (kernel-triggered, arXiv
+/// 2306.15773). `workload` names the caller in the rejection message.
+pub(crate) fn comm_variant(workload: &str, variant: &str) -> Result<Variant> {
+    Variant::parse(variant).ok_or_else(|| {
+        anyhow!("{workload}: unknown variant '{variant}' (known: baseline, st, st-shader, kt)")
     })
 }
 

@@ -47,10 +47,14 @@ fn every_workload_variant_smoke_runs_and_validates() {
 fn validated_workloads_check_data_on_mixed_topology() {
     for (name, variant) in [
         ("halo3d", "st"),
+        ("halo3d", "kt"),
         ("allreduce", "ring-st"),
         ("allreduce", "rdbl-st"),
+        ("allreduce", "ring-kt"),
         ("alltoall", "st"),
+        ("alltoall", "kt"),
         ("incast", "st"),
+        ("incast", "kt"),
     ] {
         let w = by_name(name).unwrap();
         let cfg = ScenarioCfg::smoke(variant, 2, 2, 40);
@@ -74,6 +78,60 @@ fn st_variants_use_triggered_ops() {
     assert!(st.metrics.dwq_triggered > 0, "ST must trigger NIC deferred work");
     assert_eq!(base.metrics.dwq_triggered, 0, "baseline must not touch the DWQ");
     assert_eq!(st.metrics.bytes_wire, base.metrics.bytes_wire, "same traffic either way");
+}
+
+/// KT variants fire their triggers from inside kernels: no extra wire
+/// traffic, mid-kernel trigger actions recorded, and a cheaper control
+/// path than ST (same DWQ offload, fewer stream memops).
+#[test]
+fn kt_variants_use_kernel_triggers() {
+    let w = by_name("halo3d").unwrap();
+    let kt = w.run(&ScenarioCfg::smoke("kt", 2, 1, 24)).unwrap();
+    let st = w.run(&ScenarioCfg::smoke("st", 2, 1, 24)).unwrap();
+    assert!(kt.metrics.kt_triggers > 0, "KT must fire mid-kernel triggers");
+    assert_eq!(st.metrics.kt_triggers, 0, "ST must not");
+    assert_eq!(kt.metrics.dwq_triggered, st.metrics.dwq_triggered, "same NIC offload");
+    assert_eq!(kt.metrics.bytes_wire, st.metrics.bytes_wire, "same traffic either way");
+    assert!(
+        kt.metrics.memops_executed < st.metrics.memops_executed,
+        "KT must execute fewer stream memops than ST ({} vs {})",
+        kt.metrics.memops_executed,
+        st.metrics.memops_executed
+    );
+    assert!(
+        kt.time_ns <= st.time_ns,
+        "KT must not be slower than ST ({} vs {} ns)",
+        kt.time_ns,
+        st.time_ns
+    );
+}
+
+/// Every ran campaign cell except the reference variant carries the
+/// baseline-relative delta, readable from both report renderings.
+#[test]
+fn campaign_report_has_baseline_relative_deltas() {
+    let mut spec = CampaignSpec::smoke();
+    spec.threads = Some(1);
+    let report = run_campaign(&spec).unwrap();
+    for c in report.cells.iter().filter(|c| c.summary.is_some()) {
+        if c.variant == "baseline" {
+            assert!(
+                c.delta_vs_ref_pct.is_none(),
+                "{}: reference cell must carry no delta",
+                c.workload
+            );
+        } else {
+            assert!(
+                c.delta_vs_ref_pct.is_some(),
+                "{}/{}: missing baseline-relative delta",
+                c.workload,
+                c.variant
+            );
+        }
+    }
+    assert!(report.to_markdown().contains("vs ref"));
+    assert!(report.to_json().contains("\"delta_vs_ref_pct\""));
+    assert!(json_parses(&report.to_json()));
 }
 
 /// Infeasible cells are rejected by configure (and later skipped by the

@@ -148,6 +148,8 @@ pub struct Metrics {
     pub stream_syncs: u64,
     pub memops_executed: u64,
     pub dwq_triggered: u64,
+    /// Mid-kernel trigger actions fired (the kernel-triggered path).
+    pub kt_triggers: u64,
     pub progress_ops: u64,
     pub unexpected_msgs: u64,
     pub matched_posted: u64,

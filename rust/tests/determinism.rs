@@ -25,7 +25,13 @@ fn jittered_cfg(variant: Variant, seed: u64) -> FacesConfig {
 /// `SimStats` and `time_ns` (and per-rank times and metrics).
 #[test]
 fn same_config_same_seed_is_byte_identical() {
-    for variant in [Variant::Baseline, Variant::St, Variant::StShader] {
+    let all = [
+        Variant::Host,
+        Variant::StreamTriggered,
+        Variant::StreamTriggeredShader,
+        Variant::KernelTriggered,
+    ];
+    for variant in all {
         let cfg = jittered_cfg(variant, 42);
         let a = run_faces(&cfg).unwrap();
         let b = run_faces(&cfg).unwrap();
@@ -40,8 +46,8 @@ fn same_config_same_seed_is_byte_identical() {
 /// above is not vacuously comparing constant outputs.
 #[test]
 fn different_seeds_differ_under_jitter() {
-    let a = run_faces(&jittered_cfg(Variant::St, 1)).unwrap();
-    let b = run_faces(&jittered_cfg(Variant::St, 2)).unwrap();
+    let a = run_faces(&jittered_cfg(Variant::StreamTriggered, 1)).unwrap();
+    let b = run_faces(&jittered_cfg(Variant::StreamTriggered, 2)).unwrap();
     assert_ne!(a.time_ns, b.time_ns);
 }
 
@@ -49,7 +55,7 @@ fn different_seeds_differ_under_jitter() {
 /// of the worker-thread count (per-run seeds are deterministic).
 #[test]
 fn sweep_executor_thread_count_does_not_change_results() {
-    let jobs: Vec<FacesConfig> = [Variant::Baseline, Variant::St]
+    let jobs: Vec<FacesConfig> = [Variant::Host, Variant::StreamTriggered]
         .into_iter()
         .flat_map(|v| [11u64, 23, 37].into_iter().map(move |s| jittered_cfg(v, s)))
         .collect();
@@ -84,7 +90,7 @@ fn figure_sweep_is_reproducible() {
 /// Modeled-compute config sanity for this file's helpers.
 #[test]
 fn helper_configs_are_modeled() {
-    assert_eq!(jittered_cfg(Variant::St, 1).compute, ComputeMode::Modeled);
+    assert_eq!(jittered_cfg(Variant::StreamTriggered, 1).compute, ComputeMode::Modeled);
 }
 
 /// The campaign report (the workload engine's end product) is
@@ -104,4 +110,29 @@ fn campaign_report_is_thread_count_invariant() {
     assert_eq!(parallel.to_json(), parallel_again.to_json(), "repeated parallel runs");
     assert_eq!(serial.to_markdown(), parallel.to_markdown());
     assert!(serial.all_ok(), "jitter must not affect validation:\n{}", serial.to_markdown());
+}
+
+/// The kernel-triggered axis upholds the same contract: a KT-only
+/// campaign (every workload's kt/ring-kt cells) renders byte-identical
+/// reports across reruns and across sweep worker-thread counts, with
+/// cost-model jitter live.
+#[test]
+fn kt_campaign_report_is_thread_count_invariant() {
+    let mut spec = CampaignSpec {
+        workloads: vec!["halo3d".into(), "allreduce".into(), "incast".into()],
+        variants: vec!["kt".into(), "ring-kt".into()],
+        elems: vec![32],
+        topos: vec![(2, 1), (2, 2)],
+        seeds: vec![5, 9],
+        iters: 2,
+        jitter: 0.01,
+        threads: Some(1),
+    };
+    let serial = run_campaign(&spec).unwrap();
+    assert!(serial.all_ok(), "KT cells must validate:\n{}", serial.to_markdown());
+    assert!(serial.ran_cells() >= 4, "KT cells must actually run");
+    spec.threads = Some(3);
+    let parallel = run_campaign(&spec).unwrap();
+    assert_eq!(serial.to_json(), parallel.to_json(), "1 thread vs 3 threads");
+    assert_eq!(serial.to_markdown(), parallel.to_markdown());
 }

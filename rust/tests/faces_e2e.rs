@@ -39,14 +39,14 @@ fn baseline_inter_node_matches_reference() {
 #[test]
 fn st_inter_node_matches_reference() {
     let mut cfg = real_cfg(2, 1, (2, 1, 1));
-    cfg.variant = Variant::St;
+    cfg.variant = Variant::StreamTriggered;
     assert_correct(&cfg);
 }
 
 #[test]
 fn st_intra_node_matches_reference() {
     let mut cfg = real_cfg(1, 2, (2, 1, 1));
-    cfg.variant = Variant::St;
+    cfg.variant = Variant::StreamTriggered;
     assert_correct(&cfg);
 }
 
@@ -58,14 +58,14 @@ fn baseline_3d_matches_reference() {
 #[test]
 fn st_3d_matches_reference() {
     let mut cfg = real_cfg(8, 1, (2, 2, 2));
-    cfg.variant = Variant::St;
+    cfg.variant = Variant::StreamTriggered;
     assert_correct(&cfg);
 }
 
 #[test]
 fn st_shader_3d_matches_reference() {
     let mut cfg = real_cfg(8, 1, (2, 2, 2));
-    cfg.variant = Variant::StShader;
+    cfg.variant = Variant::StreamTriggeredShader;
     assert_correct(&cfg);
 }
 
@@ -73,7 +73,7 @@ fn st_shader_3d_matches_reference() {
 fn mixed_placement_matches_reference() {
     // 2 nodes x 2 ranks: both intra- and inter-node messages in one run.
     let mut cfg = real_cfg(2, 2, (4, 1, 1));
-    cfg.variant = Variant::St;
+    cfg.variant = Variant::StreamTriggered;
     assert_correct(&cfg);
 }
 
@@ -83,9 +83,34 @@ fn baseline_and_st_produce_identical_fields() {
     // both variants run the same kernels on the same schedule.
     let base = real_cfg(2, 1, (2, 1, 1));
     let mut st = base.clone();
-    st.variant = Variant::St;
+    st.variant = Variant::StreamTriggered;
     let rb = run_faces(&base).unwrap();
     let rs = run_faces(&st).unwrap();
     assert!(rb.max_err.unwrap() < 1e-3);
     assert!(rs.max_err.unwrap() < 1e-3);
+}
+
+#[test]
+fn kt_inter_node_matches_reference() {
+    let mut cfg = real_cfg(2, 1, (2, 1, 1));
+    cfg.variant = Variant::KernelTriggered;
+    assert_correct(&cfg);
+}
+
+#[test]
+fn kt_3d_matches_reference() {
+    // The KT data path has novel numerics-commit semantics (a KtKernel's
+    // payload commits at body start so mid-kernel triggers see its
+    // stores); this pins it against the CPU reference with real XLA
+    // kernels, like the ST cases above.
+    let mut cfg = real_cfg(8, 1, (2, 2, 2));
+    cfg.variant = Variant::KernelTriggered;
+    assert_correct(&cfg);
+}
+
+#[test]
+fn kt_mixed_placement_matches_reference() {
+    let mut cfg = real_cfg(2, 2, (4, 1, 1));
+    cfg.variant = Variant::KernelTriggered;
+    assert_correct(&cfg);
 }

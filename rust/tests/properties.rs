@@ -217,7 +217,7 @@ fn prop_determinism_across_topologies() {
         let nodes = ranks / rpn;
         let mut cfg = FacesConfig::smoke(nodes, rpn, (px, py, pz));
         cfg.cost = cost();
-        cfg.variant = if rng.below(2) == 0 { Variant::Baseline } else { Variant::St };
+        cfg.variant = if rng.below(2) == 0 { Variant::Host } else { Variant::StreamTriggered };
         let a = run_faces(&cfg).unwrap();
         let b = run_faces(&cfg).unwrap();
         assert_eq!(a.time_ns, b.time_ns, "case {case} not deterministic");
@@ -237,7 +237,7 @@ fn prop_faces_message_conservation() {
         let nodes = ranks / rpn;
         let grid = ProcGrid::new(dims.0, dims.1, dims.2);
         let degree_sum: usize = (0..ranks).map(|r| grid.neighbors(r).len()).sum();
-        for variant in [Variant::Baseline, Variant::St] {
+        for variant in [Variant::Host, Variant::StreamTriggered] {
             let mut cfg = FacesConfig::smoke(nodes, rpn, dims);
             cfg.cost = cost();
             cfg.variant = variant;
@@ -265,8 +265,8 @@ fn prop_variants_move_identical_bytes() {
         cfg.variant = variant;
         run_faces(&cfg).unwrap().metrics
     };
-    let b = mk(Variant::Baseline);
-    let s = mk(Variant::St);
+    let b = mk(Variant::Host);
+    let s = mk(Variant::StreamTriggered);
     assert_eq!(b.bytes_wire, s.bytes_wire);
     assert_eq!(
         b.eager_sends + b.rendezvous_sends + b.intra_sends,
@@ -284,7 +284,7 @@ fn prop_compute_mode_does_not_change_timing() {
     let mut cfg = FacesConfig::smoke(2, 1, (2, 1, 1));
     cfg.cost = cost();
     cfg.g = 16;
-    cfg.variant = Variant::St;
+    cfg.variant = Variant::StreamTriggered;
     cfg.compute = ComputeMode::Modeled;
     let modeled = run_faces(&cfg).unwrap();
     cfg.compute = ComputeMode::Real;
