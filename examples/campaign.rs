@@ -6,9 +6,10 @@
 //! 1. the CI smoke campaign (2 workloads × 3 variants each — host, ST,
 //!    KT — tiny sizes) with hard assertions: validation passes, the
 //!    JSON report parses, and a rerun is byte-identical;
-//! 2. the full default campaign — all five registered workloads × every
-//!    variant × 2 sizes × 2 topologies × 2 seeds — which produces the
-//!    report artifact CI uploads.
+//! 2. the full default campaign — all six registered workloads × every
+//!    variant × 2 sizes × 2 topologies × {1, 2} queues per rank × 2
+//!    seeds — which produces the report artifact CI uploads (including
+//!    the multi-queue cells).
 //!
 //! Deterministic at any `STMPI_SWEEP_THREADS`.
 //!
@@ -32,11 +33,14 @@ fn main() {
         t0.elapsed().as_secs_f64()
     );
 
-    // Part 2: the full campaign — every registered workload and variant.
+    // Part 2: the full campaign — every registered workload and variant,
+    // including the multi-queue axis (q=2 cells; workloads that drive a
+    // single queue appear as skipped rows there).
     let t1 = std::time::Instant::now();
     let spec = CampaignSpec {
         elems: vec![64, 1024],
         topos: vec![(2, 1), (4, 1)],
+        queues: vec![1, 2],
         seeds: vec![11, 23],
         iters: 2,
         ..CampaignSpec::default()
@@ -45,9 +49,13 @@ fn main() {
     println!("{}", report.to_markdown());
     assert!(report.all_ok(), "campaign validation failed (see report above)");
     assert!(
-        report.workloads_covered() >= 5,
-        "expected >= 5 workloads, got {}",
+        report.workloads_covered() >= 6,
+        "expected >= 6 workloads, got {}",
         report.workloads_covered()
+    );
+    assert!(
+        report.cells.iter().any(|c| c.queues_per_rank == 2 && c.summary.is_some()),
+        "the multi-queue axis must contribute ran cells"
     );
     assert!(json_parses(&report.to_json()), "full JSON report must parse");
     std::fs::write("CAMPAIGN_report.json", report.to_json()).expect("write CAMPAIGN_report.json");

@@ -8,11 +8,11 @@
 //! Run: `cargo run --release --example quickstart`
 
 use stmpi::coordinator::{build_world, run_cluster};
-use stmpi::costmodel::{presets, MemOpFlavor};
+use stmpi::costmodel::presets;
 use stmpi::gpu::{self, host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
 use stmpi::mpi::COMM_WORLD_DUP;
 use stmpi::nic::BufSlice;
-use stmpi::stx;
+use stmpi::stx::{Queue, Variant};
 use stmpi::world::{BufId, Topology};
 
 const SIZE: usize = 256;
@@ -27,9 +27,11 @@ fn main() {
     let src2 = src.clone();
     let dst2 = dst.clone();
     let out = run_cluster(world, 7, move |my_rank, ctx| {
-        // hipStreamCreateWithFlags + MPIX_Create_queue
+        // hipStreamCreateWithFlags + MPIX_Create_queue (stx v2: a typed
+        // Queue handle owning the NIC counters it maps).
         let stream = ctx.with(move |w, core| gpu::create_stream(w, core, my_rank));
-        let queue = stx::create_queue(ctx, my_rank, stream, MemOpFlavor::Hip);
+        let queue = Queue::create(ctx, my_rank, stream, Variant::StreamTriggered)
+            .expect("NIC counter pool exhausted");
 
         if my_rank == 0 {
             // launch_device_compute_kernel(src_buf1..4, stream)
@@ -49,24 +51,22 @@ fn main() {
                 }),
             );
             for (i, b) in src2.iter().enumerate() {
-                stx::enqueue_send(ctx, queue, 1, BufSlice::whole(*b, SIZE), tags[i], COMM_WORLD_DUP)
-                    .unwrap();
+                queue.send(ctx, 1, BufSlice::whole(*b, SIZE), tags[i], COMM_WORLD_DUP).unwrap();
             }
             // Enqueue_start enables triggering of all prior send ops.
-            stx::enqueue_start(ctx, queue).unwrap();
+            queue.start(ctx).unwrap();
             // wait blocks only the current GPU stream.
-            stx::enqueue_wait(ctx, queue).unwrap();
+            queue.wait(ctx).unwrap();
             println!(
                 "[rank 0] four sends enqueued + started at t={} ns (host not blocked)",
                 ctx.now()
             );
         } else {
             for (i, b) in dst2.iter().enumerate() {
-                stx::enqueue_recv(ctx, queue, 0, BufSlice::whole(*b, SIZE), tags[i], COMM_WORLD_DUP)
-                    .unwrap();
+                queue.recv(ctx, 0, BufSlice::whole(*b, SIZE), tags[i], COMM_WORLD_DUP).unwrap();
             }
-            stx::enqueue_start(ctx, queue).unwrap();
-            stx::enqueue_wait(ctx, queue).unwrap();
+            queue.start(ctx).unwrap();
+            queue.wait(ctx).unwrap();
             // launch_device_compute_kernel(dst_buf1..4, stream): ordered
             // after the waitValue64, so it sees the received data.
             let bufs = dst2.clone();
@@ -95,8 +95,8 @@ fn main() {
         }
         // hipStreamSynchronize(stream)
         stream_synchronize(ctx, stream);
-        // MPIX_Free_queue(queue)
-        stx::free_queue(ctx, queue).unwrap();
+        // MPIX_Free_queue(queue): returns its counters to the NIC pool.
+        queue.free(ctx).unwrap();
     })
     .expect("quickstart run failed");
 

@@ -15,7 +15,7 @@
 use crate::gpu::{self, host_enqueue, KernelPayload, KernelSpec, StreamOp};
 use crate::nic::BufSlice;
 use crate::sim::HostCtx;
-use crate::stx;
+use crate::stx::Queue;
 use crate::world::{BufId, World};
 
 /// Precondition violation of [`recursive_doubling_allreduce_st`]: the
@@ -68,7 +68,7 @@ pub fn ring_ag_step(rank: usize, n: usize, s: usize) -> (usize, usize, i32) {
 }
 
 /// Stream-triggered ring allreduce (sum) of `data` (length `len`) across
-/// all `n` ranks, using `queue` (bound to `sid`) for communication and
+/// all `n` ranks, using the typed queue handle `q` (bound to `sid`) and
 /// `tmp` (at least ceil(len/n) elements) as the receive staging buffer.
 ///
 /// Standard two-phase ring: (n-1) reduce-scatter steps, then (n-1)
@@ -80,7 +80,7 @@ pub fn ring_allreduce_st(
     ctx: &mut HostCtx<World>,
     rank: usize,
     n: usize,
-    queue: usize,
+    q: &Queue,
     sid: gpu::StreamId,
     data: BufId,
     len: usize,
@@ -100,12 +100,10 @@ pub fn ring_allreduce_st(
         let (send_c, recv_c, tag) = ring_rs_step(rank, n, s);
         let (soff, slen) = ch[send_c];
         let (roff, rlen) = ch[recv_c];
-        stx::enqueue_send(ctx, queue, next, BufSlice::new(data, soff, slen), tag, comm)
-            .expect("ring send");
-        stx::enqueue_recv(ctx, queue, prev, BufSlice::new(tmp, 0, rlen), tag, comm)
-            .expect("ring recv");
-        stx::enqueue_start(ctx, queue).expect("ring start");
-        stx::enqueue_wait(ctx, queue).expect("ring wait");
+        q.send(ctx, next, BufSlice::new(data, soff, slen), tag, comm).expect("ring send");
+        q.recv(ctx, prev, BufSlice::new(tmp, 0, rlen), tag, comm).expect("ring recv");
+        q.start(ctx).expect("ring start");
+        q.wait(ctx).expect("ring wait");
         // Accumulate the received chunk, ordered after the wait.
         host_enqueue(
             ctx,
@@ -131,12 +129,10 @@ pub fn ring_allreduce_st(
         let (send_c, recv_c, tag) = ring_ag_step(rank, n, s);
         let (soff, slen) = ch[send_c];
         let (roff, rlen) = ch[recv_c];
-        stx::enqueue_send(ctx, queue, next, BufSlice::new(data, soff, slen), tag, comm)
-            .expect("ring send");
-        stx::enqueue_recv(ctx, queue, prev, BufSlice::new(data, roff, rlen), tag, comm)
-            .expect("ring recv");
-        stx::enqueue_start(ctx, queue).expect("ring start");
-        stx::enqueue_wait(ctx, queue).expect("ring wait");
+        q.send(ctx, next, BufSlice::new(data, soff, slen), tag, comm).expect("ring send");
+        q.recv(ctx, prev, BufSlice::new(data, roff, rlen), tag, comm).expect("ring recv");
+        q.start(ctx).expect("ring start");
+        q.wait(ctx).expect("ring wait");
     }
 }
 
@@ -157,7 +153,7 @@ pub fn ring_allreduce_kt(
     ctx: &mut HostCtx<World>,
     rank: usize,
     n: usize,
-    queue: usize,
+    q: &Queue,
     sid: gpu::StreamId,
     data: BufId,
     len: usize,
@@ -185,25 +181,24 @@ pub fn ring_allreduce_kt(
         };
         let (soff, slen) = ch[send_c];
         let (roff, rlen) = ch[recv_c];
-        stx::enqueue_send(ctx, queue, next, BufSlice::new(data, soff, slen), tag, comm)
-            .expect("kt ring send");
+        q.send(ctx, next, BufSlice::new(data, soff, slen), tag, comm).expect("kt ring send");
         let dst = if stage { BufSlice::new(tmp, 0, rlen) } else { BufSlice::new(data, roff, rlen) };
-        stx::enqueue_recv(ctx, queue, prev, dst, tag, comm).expect("kt ring recv");
+        q.recv(ctx, prev, dst, tag, comm).expect("kt ring recv");
     };
 
     // Step 0 is kicked by the one stream memop (data is ready at entry).
     post_step(ctx, 0);
-    stx::enqueue_start(ctx, queue).expect("kt ring kick");
+    q.start(ctx).expect("kt ring kick");
 
     for i in 0..total_steps {
         let mut kt = gpu::KernelCtx::new();
         // This step's send+recv completion rides the kernel prologue.
-        stx::kt_wait(ctx, queue, &mut kt).expect("kt ring wait");
+        q.kt_wait(ctx, &mut kt).expect("kt ring wait");
         if i + 1 < total_steps {
             post_step(ctx, i + 1);
             // The next step's trigger fires at this kernel's tail, once
             // the chunk it sends is globally visible.
-            stx::kt_start(ctx, queue, &mut kt, 1.0).expect("kt ring start");
+            q.kt_start(ctx, &mut kt, 1.0).expect("kt ring start");
         }
         let spec = if i < rs_steps {
             let (_, recv_c, _) = ring_rs_step(rank, n, i);
@@ -250,7 +245,7 @@ pub fn recursive_doubling_allreduce_st(
     ctx: &mut HostCtx<World>,
     rank: usize,
     n: usize,
-    queue: usize,
+    q: &Queue,
     sid: gpu::StreamId,
     data: BufId,
     len: usize,
@@ -267,12 +262,10 @@ pub fn recursive_doubling_allreduce_st(
     for k in 0..rounds {
         let partner = rank ^ (1usize << k);
         let tag = 3000 + k as i32;
-        stx::enqueue_send(ctx, queue, partner, BufSlice::whole(data, len), tag, comm)
-            .expect("rd send");
-        stx::enqueue_recv(ctx, queue, partner, BufSlice::whole(tmp, len), tag, comm)
-            .expect("rd recv");
-        stx::enqueue_start(ctx, queue).expect("rd start");
-        stx::enqueue_wait(ctx, queue).expect("rd wait");
+        q.send(ctx, partner, BufSlice::whole(data, len), tag, comm).expect("rd send");
+        q.recv(ctx, partner, BufSlice::whole(tmp, len), tag, comm).expect("rd recv");
+        q.start(ctx).expect("rd start");
+        q.wait(ctx).expect("rd wait");
         // Accumulate the partner's vector, ordered after the wait (and
         // before the next round's trigger, which protects `data` from
         // being read mid-update).
@@ -300,7 +293,8 @@ pub fn recursive_doubling_allreduce_st(
 mod tests {
     use super::*;
     use crate::coordinator::{build_world, run_cluster};
-    use crate::costmodel::{presets, MemOpFlavor};
+    use crate::costmodel::presets;
+    use crate::stx::Variant;
     use crate::gpu::stream_synchronize;
     use crate::mpi::COMM_WORLD;
     use crate::world::Topology;
@@ -375,8 +369,8 @@ mod tests {
         let data2 = data.clone();
         let out = run_cluster(w, 1, move |rank, ctx| {
             let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
-            let q = stx::create_queue(ctx, rank, sid, MemOpFlavor::Hip);
-            ring_allreduce_st(ctx, rank, n, q, sid, data2[rank], len, tmp[rank], COMM_WORLD);
+            let q = Queue::create(ctx, rank, sid, Variant::StreamTriggered).unwrap();
+            ring_allreduce_st(ctx, rank, n, &q, sid, data2[rank], len, tmp[rank], COMM_WORLD);
             stream_synchronize(ctx, sid);
         })
         .unwrap();
@@ -425,11 +419,11 @@ mod tests {
         let tmp = w.bufs.alloc(4);
         let out = run_cluster(w, 1, move |rank, ctx| {
             let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
-            let q = stx::create_queue(ctx, rank, sid, MemOpFlavor::Hip);
-            ring_allreduce_st(ctx, rank, 0, q, sid, data, 3, tmp, COMM_WORLD);
-            ring_allreduce_st(ctx, rank, 1, q, sid, data, 3, tmp, COMM_WORLD);
+            let q = Queue::create(ctx, rank, sid, Variant::StreamTriggered).unwrap();
+            ring_allreduce_st(ctx, rank, 0, &q, sid, data, 3, tmp, COMM_WORLD);
+            ring_allreduce_st(ctx, rank, 1, &q, sid, data, 3, tmp, COMM_WORLD);
             stream_synchronize(ctx, sid);
-            stx::free_queue(ctx, q).expect("queue idle");
+            q.free(ctx).expect("queue idle");
         })
         .unwrap();
         assert_eq!(out.world.bufs.get(data), &[1.0, 2.0, 3.0]);
@@ -452,10 +446,10 @@ mod tests {
         let data2 = data.clone();
         let out = run_cluster(w, 1, move |rank, ctx| {
             let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
-            let q = stx::create_queue(ctx, rank, sid, MemOpFlavor::Hip);
-            ring_allreduce_kt(ctx, rank, n, q, sid, data2[rank], len, tmp[rank], COMM_WORLD);
+            let q = Queue::create(ctx, rank, sid, Variant::StreamTriggered).unwrap();
+            ring_allreduce_kt(ctx, rank, n, &q, sid, data2[rank], len, tmp[rank], COMM_WORLD);
             stream_synchronize(ctx, sid);
-            stx::free_queue(ctx, q).expect("queue idle after KT ring");
+            q.free(ctx).expect("queue idle after KT ring");
         })
         .unwrap();
         for r in 0..n {
@@ -496,10 +490,10 @@ mod tests {
         let tmp: Vec<BufId> = (0..n).map(|_| w.bufs.alloc(len)).collect();
         let out = run_cluster(w, 1, move |rank, ctx| {
             let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
-            let q = stx::create_queue(ctx, rank, sid, MemOpFlavor::Hip);
-            ring_allreduce_kt(ctx, rank, n, q, sid, data[rank], len, tmp[rank], COMM_WORLD);
+            let q = Queue::create(ctx, rank, sid, Variant::StreamTriggered).unwrap();
+            ring_allreduce_kt(ctx, rank, n, &q, sid, data[rank], len, tmp[rank], COMM_WORLD);
             stream_synchronize(ctx, sid);
-            stx::free_queue(ctx, q).expect("queue idle after KT ring");
+            q.free(ctx).expect("queue idle after KT ring");
         })
         .unwrap();
         let m = &out.world.metrics;
@@ -525,13 +519,13 @@ mod tests {
         let data2 = data.clone();
         let out = run_cluster(w, 1, move |rank, ctx| {
             let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
-            let q = stx::create_queue(ctx, rank, sid, MemOpFlavor::Hip);
+            let q = Queue::create(ctx, rank, sid, Variant::StreamTriggered).unwrap();
             recursive_doubling_allreduce_st(
-                ctx, rank, n, q, sid, data2[rank], len, tmp[rank], COMM_WORLD,
+                ctx, rank, n, &q, sid, data2[rank], len, tmp[rank], COMM_WORLD,
             )
             .expect("power-of-two world");
             stream_synchronize(ctx, sid);
-            stx::free_queue(ctx, q).expect("queue idle");
+            q.free(ctx).expect("queue idle");
         })
         .unwrap();
         for r in 0..n {
@@ -573,16 +567,16 @@ mod tests {
         let out = run_cluster(w, 1, move |rank, ctx| {
             let (data, tmp) = ctx.with(|w, _| (w.bufs.alloc(4), w.bufs.alloc(4)));
             let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
-            let q = stx::create_queue(ctx, rank, sid, MemOpFlavor::Hip);
+            let q = Queue::create(ctx, rank, sid, Variant::StreamTriggered).unwrap();
             assert_eq!(
-                recursive_doubling_allreduce_st(ctx, rank, 3, q, sid, data, 4, tmp, COMM_WORLD),
+                recursive_doubling_allreduce_st(ctx, rank, 3, &q, sid, data, 4, tmp, COMM_WORLD),
                 Err(NotPowerOfTwo(3))
             );
             assert_eq!(
-                recursive_doubling_allreduce_st(ctx, rank, 0, q, sid, data, 4, tmp, COMM_WORLD),
+                recursive_doubling_allreduce_st(ctx, rank, 0, &q, sid, data, 4, tmp, COMM_WORLD),
                 Err(NotPowerOfTwo(0))
             );
-            stx::free_queue(ctx, q).expect("nothing was enqueued");
+            q.free(ctx).expect("nothing was enqueued");
         })
         .unwrap();
         assert_eq!(out.world.metrics.bytes_wire, 0);

@@ -112,6 +112,15 @@ pub struct CostModel {
     /// send (completion-counter handling the NIC can't do alone, §V-E).
     pub progress_rendezvous_assist: Time,
 
+    // ---- NIC resource pools (finite hardware, §II-C) ----
+    /// Hardware trigger/completion counters per NIC. Every `MPIX_Queue`
+    /// holds two for its lifetime; exhaustion fails queue creation.
+    pub nic_counter_limit: usize,
+    /// Deferred-work-queue descriptor slots per NIC. A triggered send
+    /// occupies one from enqueue until its trigger fires; multiple queues
+    /// on one rank (or node) contend for this pool.
+    pub dwq_slots_per_nic: usize,
+
     // ---- stochastics ----
     /// Multiplicative lognormal jitter applied to charged costs (sigma).
     /// 0 disables jitter entirely.

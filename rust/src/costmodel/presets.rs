@@ -56,6 +56,12 @@ pub fn frontier_like() -> CostModel {
         progress_completion: 600,
         progress_rendezvous_assist: 500,
 
+        // NIC resource pools: Cassini exposes counters/DWQ slots in the
+        // low thousands; defaults are ample so contention only appears
+        // when an experiment dials them down.
+        nic_counter_limit: 2_048,
+        dwq_slots_per_nic: 1_024,
+
         jitter_sigma: 0.0,
     }
 }

@@ -18,7 +18,11 @@
 //!     — **KT**: the trigger fires from *inside* the last pack kernel
 //!       and the completion wait rides the next iteration's pack
 //!       prologue — no stream memory ops at all (the follow-on design
-//!       of arXiv 2306.15773, `kt_iteration` in this module);
+//!       of arXiv 2306.15773);
+//!
+//! All three send protocols run through one per-rank
+//! [`stx::CommPlan`] built once before the timed region (`iteration` in
+//! this module) — the loop body contains no enqueue calls.
 //!  4. launches the interior spectral-element kernel (overlapped with
 //!     communication);
 //!  5. waits for the receives;
@@ -362,12 +366,22 @@ fn rank_program(
 ) {
     let real = cfg.compute == ComputeMode::Real;
     let g = cfg.g;
-    // Stream + (for ST) queue setup — outside the timed region.
+    // Stream + (for queue-using variants) queue setup, then the
+    // build-once communication plan — all outside the timed region. The
+    // plan records every neighbor send plus the double-buffered posted
+    // receives; iterations only re-arm it.
     let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
-    let queue = match cfg.variant {
-        Variant::Host => None,
-        v => Some(stx::create_queue(ctx, rank, sid, v.flavor())),
+    let queues: Vec<stx::Queue> = if cfg.variant.uses_queue() {
+        vec![stx::Queue::create(ctx, rank, sid, cfg.variant).expect("NIC counter pool exhausted")]
+    } else {
+        Vec::new()
     };
+    let mut b = stx::CommPlan::builder(rank, sid, cfg.variant, &queues);
+    for m in &plan.msgs {
+        b.send(m.nbr, m.send, m.tag_send, COMM_WORLD);
+        b.recv_db(SrcSel::Rank(m.nbr), TagSel::Tag(m.tag_recv), COMM_WORLD, m.recv);
+    }
+    let cplan = b.build(ctx).expect("faces plan build");
 
     let mut acc: u64 = 0;
     for _outer in 0..cfg.outer {
@@ -392,182 +406,75 @@ fn rank_program(
 
             let t0 = ctx.now();
             for inner in 0..cfg.inner {
-                let parity = inner % 2;
-                match cfg.variant {
-                    Variant::Host => baseline_iteration(cfg, plan, rank, ctx, sid, parity, real),
-                    Variant::KernelTriggered => {
-                        kt_iteration(cfg, plan, rank, ctx, sid, queue.unwrap(), parity, real)
-                    }
-                    _ => st_iteration(cfg, plan, rank, ctx, sid, queue.unwrap(), parity, real),
-                }
+                iteration(cfg, plan, ctx, sid, &cplan, inner % 2, real);
             }
             // Drain the device before stopping the clock (every variant
             // ends the timed region fully synchronized). KT additionally
             // drains its send completions here — ST already waited for
-            // them via enqueue_wait — so the figures of merit compare
+            // them via the stream wait — so the figures of merit compare
             // like for like.
             if cfg.variant == Variant::KernelTriggered {
-                stx::queue_drain(ctx, queue.unwrap()).expect("KT queue drain");
+                cplan.drain(ctx).expect("KT queue drain");
             }
             stream_synchronize(ctx, sid);
             acc += ctx.now() - t0;
         }
     }
-    if let Some(q) = queue {
-        stx::free_queue(ctx, q).expect("ST queue must be idle at teardown");
+    for q in queues {
+        q.free(ctx).expect("ST queue must be idle at teardown");
     }
     times.lock().unwrap()[rank] = acc;
 }
 
-fn baseline_iteration(
+/// One Faces iteration, all variants: the plan's round carries the
+/// per-variant send protocol —
+///
+/// * **baseline**: pack kernels, `hipStreamSynchronize`, `MPI_Isend` per
+///   neighbor (Fig 1); the send waitall runs after the receive waitall.
+/// * **ST**: pack kernels, deferred sends + one CP trigger; the *stream*
+///   waits for completion after the interior compute is enqueued
+///   (Fig 2).
+/// * **KT** (arXiv 2306.15773): the trigger fires from *inside* the last
+///   pack kernel ([`stx::KT_TRIGGER_FRAC`] of its window) and the
+///   completion wait for the previous iteration's sends rides the first
+///   pack kernel's prologue — no `writeValue64`, no `waitValue64`, no
+///   stream stall between operations.
+fn iteration(
     cfg: &FacesConfig,
     plan: &RankPlan,
-    rank: usize,
     ctx: &mut HostCtx<World>,
     sid: gpu::StreamId,
-    parity: usize,
-    real: bool,
-) {
-    // 1. Pre-post receives.
-    let mut rreqs = Vec::with_capacity(plan.msgs.len());
-    for m in &plan.msgs {
-        rreqs.push(mpi::irecv(
-            ctx,
-            rank,
-            SrcSel::Rank(m.nbr),
-            TagSel::Tag(m.tag_recv),
-            COMM_WORLD,
-            m.recv[parity],
-        ));
-    }
-    // 2. Pack kernels (one per region), then the host must wait for them
-    //    before sending (the expensive kernel-boundary sync of Fig 1).
-    for k in pack_kernels(plan, cfg.g, real) {
-        host_enqueue(ctx, sid, StreamOp::Kernel(k));
-    }
-    stream_synchronize(ctx, sid);
-    // 3. Sends.
-    let mut sreqs = Vec::with_capacity(plan.msgs.len());
-    for m in &plan.msgs {
-        sreqs.push(mpi::isend(ctx, rank, m.nbr, m.send, m.tag_send, COMM_WORLD));
-    }
-    // 4. Interior compute (overlaps communication).
-    host_enqueue(ctx, sid, StreamOp::Kernel(ax_kernel(plan, cfg.g, real)));
-    // 5. Wait for communication.
-    mpi::waitall(ctx, &rreqs);
-    mpi::waitall(ctx, &sreqs);
-    // 6. Unpack-add of received contributions (one kernel per region).
-    for k in unpack_kernels(plan, cfg.g, parity, real) {
-        host_enqueue(ctx, sid, StreamOp::Kernel(k));
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn st_iteration(
-    cfg: &FacesConfig,
-    plan: &RankPlan,
-    rank: usize,
-    ctx: &mut HostCtx<World>,
-    sid: gpu::StreamId,
-    queue: usize,
+    cplan: &stx::CommPlan,
     parity: usize,
     real: bool,
 ) {
     // 1. Pre-post receives (standard MPI_Irecv + double buffering — the
     //    paper's deliberate choice while the NIC lacks triggered
     //    receives, §V-B).
-    let mut rreqs = Vec::with_capacity(plan.msgs.len());
-    for m in &plan.msgs {
-        rreqs.push(mpi::irecv(
-            ctx,
-            rank,
-            SrcSel::Rank(m.nbr),
-            TagSel::Tag(m.tag_recv),
-            COMM_WORLD,
-            m.recv[parity],
-        ));
-    }
-    // 2. Pack kernels — no host-device synchronization afterwards.
-    for k in pack_kernels(plan, cfg.g, real) {
-        host_enqueue(ctx, sid, StreamOp::Kernel(k));
-    }
-    // 3. Deferred sends, triggered in stream order after pack.
-    for m in &plan.msgs {
-        stx::enqueue_send(ctx, queue, m.nbr, m.send, m.tag_send, COMM_WORLD)
-            .expect("ST enqueue_send");
-    }
-    stx::enqueue_start(ctx, queue).expect("ST enqueue_start");
-    // 4. Interior compute overlaps the triggered sends.
+    let rreqs = cplan.post_recvs(ctx, parity);
+    // 2+3. Pack kernels (one per region) + this iteration's sends, under
+    //      the plan's variant protocol.
+    let round = cplan.round(ctx, pack_kernels(plan, cfg.g, real)).expect("faces round");
+    // 4. Interior compute (overlaps communication in every variant).
     host_enqueue(ctx, sid, StreamOp::Kernel(ax_kernel(plan, cfg.g, real)));
-    // The stream (not the host!) waits for send completion; this also
-    // protects the packed buffers from next iteration's pack.
-    stx::enqueue_wait(ctx, queue).expect("ST enqueue_wait");
-    // 5. Wait for receives on the host, then
+    // ST's completion wait is enqueued here — after the ax kernel, so
+    // the stream overlaps compute with the triggered sends, and the
+    // packed buffers are protected from the next iteration's pack. KT's
+    // complete is a no-op (completion rides the next pack prologue).
+    let round = match cfg.variant {
+        Variant::Host => Some(round),
+        _ => {
+            cplan.complete(ctx, round).expect("faces send completion");
+            None
+        }
+    };
+    // 5. Wait for receives on the host; the baseline then performs its
+    //    host-side send waitall (Fig 1's control path).
     mpi::waitall(ctx, &rreqs);
-    // 6. unpack.
-    for k in unpack_kernels(plan, cfg.g, parity, real) {
-        host_enqueue(ctx, sid, StreamOp::Kernel(k));
+    if let Some(r) = round {
+        cplan.complete(ctx, r).expect("faces host send waitall");
     }
-}
-
-/// One kernel-triggered iteration (arXiv 2306.15773): receives are
-/// posted as in ST, but the trigger for this iteration's sends fires
-/// from *inside* the last pack kernel ([`stx::KT_TRIGGER_FRAC`] of its
-/// execution window) and the completion wait for the previous
-/// iteration's sends rides the first pack kernel's prologue. No
-/// `writeValue64`, no `waitValue64`, no stream stall between operations
-/// — the per-iteration CP/stream handshake ST still pays disappears.
-#[allow(clippy::too_many_arguments)]
-fn kt_iteration(
-    cfg: &FacesConfig,
-    plan: &RankPlan,
-    rank: usize,
-    ctx: &mut HostCtx<World>,
-    sid: gpu::StreamId,
-    queue: usize,
-    parity: usize,
-    real: bool,
-) {
-    // 1. Pre-post receives (standard MPI_Irecv + double buffering, as in
-    //    the ST variant, §V-B).
-    let mut rreqs = Vec::with_capacity(plan.msgs.len());
-    for m in &plan.msgs {
-        rreqs.push(mpi::irecv(
-            ctx,
-            rank,
-            SrcSel::Rank(m.nbr),
-            TagSel::Tag(m.tag_recv),
-            COMM_WORLD,
-            m.recv[parity],
-        ));
-    }
-    // 2+3. Deferred sends + pack kernels carrying the KT plan: the first
-    //      pack kernel's prologue waits out the previous iteration's
-    //      sends (buffer-reuse safety), the last one fires the trigger
-    //      mid-execution.
-    let packs = pack_kernels(plan, cfg.g, real);
-    let mut kts: Vec<gpu::KernelCtx> = packs.iter().map(|_| gpu::KernelCtx::new()).collect();
-    if let Some(first) = kts.first_mut() {
-        stx::kt_wait(ctx, queue, first).expect("KT kt_wait");
-    }
-    for m in &plan.msgs {
-        stx::enqueue_send(ctx, queue, m.nbr, m.send, m.tag_send, COMM_WORLD)
-            .expect("KT enqueue_send");
-    }
-    if let Some(last) = kts.last_mut() {
-        stx::kt_start(ctx, queue, last, stx::KT_TRIGGER_FRAC).expect("KT kt_start");
-    }
-    for (k, kt) in packs.into_iter().zip(kts) {
-        let op = if kt.is_empty() { StreamOp::Kernel(k) } else { StreamOp::KtKernel(k, kt) };
-        host_enqueue(ctx, sid, op);
-    }
-    // 4. Interior compute overlaps the triggered sends. No enqueue_wait:
-    //    completion rides the next iteration's pack prologue (and the
-    //    final queue drain at the end of the timed region).
-    host_enqueue(ctx, sid, StreamOp::Kernel(ax_kernel(plan, cfg.g, real)));
-    // 5. Wait for receives on the host, then
-    mpi::waitall(ctx, &rreqs);
-    // 6. unpack.
+    // 6. Unpack-add of received contributions (one kernel per region).
     for k in unpack_kernels(plan, cfg.g, parity, real) {
         host_enqueue(ctx, sid, StreamOp::Kernel(k));
     }

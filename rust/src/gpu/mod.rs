@@ -148,7 +148,10 @@ pub struct KtPut {
 /// NIC.
 #[derive(Default)]
 pub struct KernelCtx {
-    pub wait: Option<KtWait>,
+    /// Completion waits folded into the kernel prologue. All must be
+    /// satisfied — in registration order — before the body runs; multiple
+    /// waits let one kernel drain several queues (multi-queue ranks).
+    pub waits: Vec<KtWait>,
     pub triggers: Vec<KtTrigger>,
 }
 
@@ -159,13 +162,14 @@ impl KernelCtx {
 
     /// True when the kernel carries no KT behavior at all.
     pub fn is_empty(&self) -> bool {
-        self.wait.is_none() && self.triggers.is_empty()
+        self.waits.is_empty() && self.triggers.is_empty()
     }
 
-    /// Fold a completion wait into the kernel prologue (one spin per
-    /// kernel; the last call wins).
+    /// Fold a completion wait into the kernel prologue. May be called
+    /// more than once (e.g. one wait per queue of a multi-queue plan);
+    /// the prologue satisfies the waits in registration order.
     pub fn wait_ge(&mut self, cell: CellId, threshold: u64) {
-        self.wait = Some(KtWait { cell, threshold });
+        self.waits.push(KtWait { cell, threshold });
     }
 
     /// Bump a GPU-visible counter by `value` at `frac` of the kernel's
@@ -183,7 +187,7 @@ impl KernelCtx {
 
 impl std::fmt::Debug for KernelCtx {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "KernelCtx(wait={}, triggers={})", self.wait.is_some(), self.triggers.len())
+        write!(f, "KernelCtx(waits={}, triggers={})", self.waits.len(), self.triggers.len())
     }
 }
 
@@ -306,7 +310,7 @@ pub fn cp_step(w: &mut World, core: &mut Ctx, sid: StreamId) {
             let dur = w.cost.cp_dispatch + w.cost.kernel_time(spec.flops, spec.bytes);
             let dur = w.cost.jittered(dur, core.rng());
             let desc = format!("gpu{}.s{} {} kt-prologue", sid.gpu, sid.stream, spec.name);
-            let KernelCtx { wait, triggers } = kt;
+            let KernelCtx { waits, triggers } = kt;
             let payload = spec.payload;
             let body: Callback = Box::new(move |w, c| {
                 // A KT kernel's numerics commit at body start: its stores
@@ -322,12 +326,17 @@ pub fn cp_step(w: &mut World, core: &mut Ctx, sid: StreamId) {
                 }
                 c.schedule(dur, Box::new(move |w, c| complete_op(w, c, sid)));
             });
-            match wait {
-                // The prologue spin keeps the stream busy (the kernel
-                // occupies it), but costs no CP memory operation.
-                Some(KtWait { cell, threshold }) => core.on_ge(cell, threshold, desc, body),
-                None => body(w, core),
+            // Fold the prologue waits around the body, innermost last:
+            // the first wavefront satisfies them in registration order.
+            // The spins keep the stream busy (the kernel occupies it) but
+            // cost no CP memory operations.
+            let mut entry = body;
+            for kw in waits.into_iter().rev() {
+                let d = desc.clone();
+                let inner = entry;
+                entry = Box::new(move |_w, c| c.on_ge(kw.cell, kw.threshold, d, inner));
             }
+            entry(w, core);
         }
         StreamOp::WriteValue64 { cell, value, mode, flavor } => {
             w.metrics.memops_executed += 1;

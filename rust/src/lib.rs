@@ -24,10 +24,10 @@
 //! | [`nic`] | Slingshot-11 counters, deferred work queues, eager/rendezvous |
 //! | [`fabric`] | inter-node wire with per-port serialization + congestion metrics |
 //! | [`mpi`] | two-sided matching engine, requests, progress threads |
-//! | [`stx`] | the paper's `MPIX_*` ST API, KT wrappers, the [`stx::Variant`] axis |
+//! | [`stx`] | stx v2: typed [`stx::Queue`] handles, persistent [`stx::CommPlan`]s, KT hooks, the [`stx::Variant`] axis |
 //! | [`collectives`] | ST ring / ST recursive-doubling / KT ring allreduce |
 //! | [`faces`] | the Faces halo-exchange benchmark + figure harness |
-//! | [`workloads`] | `Workload` trait, five scenarios, campaign driver |
+//! | [`workloads`] | `Workload` trait, six scenarios, run scaffold, campaign driver |
 //! | [`coordinator`] | world building, cluster run loop, config, reporting |
 //! | [`runtime`] | PJRT loader for AOT HLO artifacts (feature `xla`) |
 //! | [`train`] | ST-allreduce data-parallel trainer |

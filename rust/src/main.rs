@@ -16,9 +16,10 @@
 //!   faces.variant=baseline|st|st-shader|kt  faces.real=true  faces.check=true
 //!   seed=11  jitter=0.03
 //! `campaign` keys (comma lists; empty = defaults):
-//!   campaign.workloads=faces,halo3d,allreduce,alltoall,incast
+//!   campaign.workloads=faces,halo3d,allreduce,alltoall,incast,allgather
 //!   campaign.variants=baseline,st,kt,ring-st,rdbl-st,ring-kt
 //!   campaign.sizes=256,4096  campaign.topos=2x1,4x1  campaign.seeds=11,23
+//!   campaign.queues=1,2 (queues per rank)  campaign.dwq_slots=4
 //!   campaign.iters=3  campaign.jitter=0.01  campaign.out=CAMPAIGN_report
 //! `train` keys: train.nodes, train.rpn, train.steps, seed.
 //!
@@ -166,14 +167,29 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
             .map(|s| s.parse::<u64>().with_context(|| format!("campaign.seeds entry '{s}'")))
             .collect::<Result<Vec<_>>>()?
     };
+    let queue_list = comma_list(&c, "campaign.queues");
+    let queues = if queue_list.is_empty() {
+        defaults.queues.clone()
+    } else {
+        queue_list
+            .iter()
+            .map(|s| s.parse::<usize>().with_context(|| format!("campaign.queues entry '{s}'")))
+            .collect::<Result<Vec<_>>>()?
+    };
+    let dwq_slots = match c.get("campaign.dwq_slots") {
+        Some(v) => Some(v.parse::<usize>().context("campaign.dwq_slots")?),
+        None => None,
+    };
     let spec = CampaignSpec {
         workloads: comma_list(&c, "campaign.workloads"),
         variants: comma_list(&c, "campaign.variants"),
         elems,
         topos,
+        queues,
         seeds,
         iters: c.usize_or("campaign.iters", defaults.iters)?,
         jitter: c.f64_or("campaign.jitter", defaults.jitter)?,
+        dwq_slots,
         threads: None,
     };
     let report = run_campaign(&spec)?;

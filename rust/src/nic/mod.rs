@@ -136,21 +136,98 @@ impl WireMsg {
 pub struct Nic {
     pub node: usize,
     pub port: Port,
-    /// Number of hardware counters handed out (diagnostics only; the
+    /// Total hardware counters ever handed out (diagnostics; the
     /// counters themselves are engine cells).
     pub counters_allocated: usize,
+    /// Counters currently held by live queues — bounded by
+    /// `cost.nic_counter_limit` (finite hardware pool, §II-C).
+    pub counters_in_use: usize,
+    /// Deferred-work-queue descriptors ever posted to this NIC. Together
+    /// with [`Nic::dwq_released`] this tracks DWQ occupancy:
+    /// `in_use = dwq_posted - cell(dwq_released)`.
+    pub dwq_posted: u64,
+    /// Cell counting DWQ descriptors released (trigger fired, descriptor
+    /// left the queue). A cell — not a plain counter — so hosts blocked
+    /// on a full DWQ can wait for the next release. Lazily allocated.
+    pub dwq_released: Option<CellId>,
 }
 
 impl Nic {
     pub fn new(node: usize) -> Self {
-        Self { node, port: Port::default(), counters_allocated: 0 }
+        Self {
+            node,
+            port: Port::default(),
+            counters_allocated: 0,
+            counters_in_use: 0,
+            dwq_posted: 0,
+            dwq_released: None,
+        }
     }
 }
 
 /// Allocate a NIC hardware counter, mapped GPU-visible (an engine cell).
-pub fn alloc_counter(w: &mut World, core: &mut Ctx, node: usize, name: &str) -> CellId {
+/// Returns `None` when the node's finite counter pool
+/// (`cost.nic_counter_limit`) is exhausted; [`release_counter`] returns
+/// capacity to the pool.
+pub fn alloc_counter(w: &mut World, core: &mut Ctx, node: usize, name: &str) -> Option<CellId> {
+    if w.nics[node].counters_in_use >= w.cost.nic_counter_limit {
+        return None;
+    }
+    w.nics[node].counters_in_use += 1;
     w.nics[node].counters_allocated += 1;
-    core.new_cell(format!("nic{node}.ctr.{name}"), 0)
+    Some(core.new_cell(format!("nic{node}.ctr.{name}"), 0))
+}
+
+/// Return one hardware counter to `node`'s pool. The engine cell itself
+/// is not recycled (cells are cheap); only the modeled hardware capacity
+/// is.
+pub fn release_counter(w: &mut World, node: usize) {
+    let n = &mut w.nics[node].counters_in_use;
+    debug_assert!(*n > 0, "release_counter without a matching alloc");
+    *n = n.saturating_sub(1);
+}
+
+/// A DWQ slot reservation failed: `node`'s deferred-work queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DwqFull {
+    pub node: usize,
+}
+
+/// The cell counting DWQ descriptors released on `node` (lazily
+/// allocated). Blocked producers wait on this to observe the next free
+/// slot.
+pub fn dwq_released_cell(w: &mut World, core: &mut Ctx, node: usize) -> CellId {
+    if let Some(c) = w.nics[node].dwq_released {
+        return c;
+    }
+    let c = core.new_cell(format!("nic{node}.dwq.released"), 0);
+    w.nics[node].dwq_released = Some(c);
+    c
+}
+
+/// Reserve one DWQ descriptor slot on `node` for a deferred operation.
+/// Fails when occupancy has reached `cost.dwq_slots_per_nic`; the caller
+/// owns the slot until the descriptor's trigger fires
+/// ([`post_triggered_send`] releases it). Also maintains the
+/// `Metrics::dwq_peak` high-water mark (HTQ pressure).
+pub fn dwq_reserve(w: &mut World, core: &mut Ctx, node: usize) -> Result<(), DwqFull> {
+    let released = match w.nics[node].dwq_released {
+        Some(c) => core.cell(c),
+        None => 0,
+    };
+    let in_use = w.nics[node].dwq_posted.saturating_sub(released);
+    if in_use >= w.cost.dwq_slots_per_nic as u64 {
+        return Err(DwqFull { node });
+    }
+    // Allocate the release cell eagerly so a later full-DWQ producer has
+    // something to wait on, and the descriptor's own release is a plain
+    // cell add.
+    dwq_released_cell(w, core, node);
+    w.nics[node].dwq_posted += 1;
+    if in_use + 1 > w.metrics.dwq_peak {
+        w.metrics.dwq_peak = in_use + 1;
+    }
+    Ok(())
 }
 
 /// Post a *triggered* tagged send to the NIC command queue: it executes
@@ -178,6 +255,11 @@ pub fn post_triggered_send(
         format!("nic{src_node} DWQ send {}->{} tag {}", env.src_rank, env.dst_rank, env.tag),
         Box::new(move |w, core| {
             w.metrics.dwq_triggered += 1;
+            // The descriptor leaves the deferred-work queue: return its
+            // slot (see `dwq_reserve`; callers that never reserved are
+            // tolerated — occupancy saturates at zero).
+            let rel = dwq_released_cell(w, core, src_node);
+            core.add_cell(rel, 1);
             let lat = w.cost.nic_trigger_latency;
             core.schedule(
                 lat,

@@ -21,7 +21,7 @@ fn triggered_send_defers_until_threshold() {
     eng.setup(|w, core| {
         let src = w.bufs.alloc_init(vec![7.0; 16]);
         let dst = w.bufs.alloc(16);
-        let trig = alloc_counter(w, core, 0, "t");
+        let trig = alloc_counter(w, core, 0, "t").unwrap();
         let env = Envelope { src_rank: 0, dst_rank: 1, tag: 5, comm: 0, elems: 16 };
         // Receiver posts first.
         mpi::post_recv(
@@ -58,7 +58,7 @@ fn triggered_send_reads_buffer_at_trigger_time() {
     eng.setup(|w, core| {
         let src = w.bufs.alloc_init(vec![1.0; 8]);
         let dst = w.bufs.alloc(8);
-        let trig = alloc_counter(w, core, 0, "t");
+        let trig = alloc_counter(w, core, 0, "t").unwrap();
         let env = Envelope { src_rank: 0, dst_rank: 1, tag: 1, comm: 0, elems: 8 };
         mpi::post_recv(
             w,
@@ -166,7 +166,7 @@ fn triggered_put_moves_data_on_trigger() {
     eng.setup(|w, core| {
         let src = w.bufs.alloc_init(vec![9.0; 64]);
         let dst = w.bufs.alloc(64);
-        let trig = alloc_counter(w, core, 0, "t");
+        let trig = alloc_counter(w, core, 0, "t").unwrap();
         post_triggered_put(
             w,
             core,
@@ -195,8 +195,8 @@ fn triggered_atomic_add_bumps_target() {
     let v = std::sync::Arc::new(std::sync::Mutex::new(0u64));
     let vc = v.clone();
     eng.setup(|w, core| {
-        let trig = alloc_counter(w, core, 0, "t");
-        let target = alloc_counter(w, core, 0, "tgt");
+        let trig = alloc_counter(w, core, 0, "t").unwrap();
+        let target = alloc_counter(w, core, 0, "tgt").unwrap();
         post_triggered_atomic_add(w, core, trig, 1, target, 5);
         core.schedule(10, Box::new(move |_, c| c.write_cell(trig, 1)));
         core.schedule(
@@ -214,11 +214,56 @@ fn triggered_atomic_add_bumps_target() {
 fn counter_alloc_tracks_count() {
     let eng = engine(2, 1);
     eng.setup(|w, core| {
-        alloc_counter(w, core, 0, "a");
-        alloc_counter(w, core, 0, "b");
-        alloc_counter(w, core, 1, "c");
+        alloc_counter(w, core, 0, "a").unwrap();
+        alloc_counter(w, core, 0, "b").unwrap();
+        alloc_counter(w, core, 1, "c").unwrap();
     });
     let (w, _) = eng.run().unwrap();
     assert_eq!(w.nics[0].counters_allocated, 2);
     assert_eq!(w.nics[1].counters_allocated, 1);
+}
+
+/// The counter pool is finite per NIC and `release_counter` returns
+/// capacity, so a freed queue's counters can be reused.
+#[test]
+fn counter_pool_exhausts_and_recovers() {
+    let eng = engine(1, 1);
+    eng.setup(|w, core| {
+        w.cost.nic_counter_limit = 2;
+        assert!(alloc_counter(w, core, 0, "a").is_some());
+        assert!(alloc_counter(w, core, 0, "b").is_some());
+        assert!(alloc_counter(w, core, 0, "c").is_none(), "pool of 2 must refuse a third");
+        release_counter(w, 0);
+        assert!(alloc_counter(w, core, 0, "d").is_some(), "released capacity is reusable");
+        assert_eq!(w.nics[0].counters_in_use, 2);
+        assert_eq!(w.nics[0].counters_allocated, 3, "total-ever keeps counting");
+    });
+    eng.run().unwrap();
+}
+
+/// DWQ slots: reservations fail at capacity, and the slot returns to the
+/// pool when the descriptor's trigger fires.
+#[test]
+fn dwq_slots_exhaust_and_release_on_trigger() {
+    let eng = engine(2, 1);
+    eng.setup(|w, core| {
+        w.cost.dwq_slots_per_nic = 1;
+        let src = w.bufs.alloc_init(vec![1.0; 8]);
+        let trig = alloc_counter(w, core, 0, "t").unwrap();
+        let env = Envelope { src_rank: 0, dst_rank: 1, tag: 3, comm: 0, elems: 8 };
+        assert!(dwq_reserve(w, core, 0).is_ok());
+        assert_eq!(dwq_reserve(w, core, 0), Err(DwqFull { node: 0 }), "one slot only");
+        assert_eq!(w.metrics.dwq_peak, 1);
+        post_triggered_send(w, core, trig, 1, env, BufSlice::whole(src, 8), Done::none());
+        core.schedule(1_000, Box::new(move |_, c| c.write_cell(trig, 1)));
+        // Once the trigger has fired the descriptor has left the DWQ.
+        core.schedule(
+            100_000,
+            Box::new(|w, core| {
+                assert!(dwq_reserve(w, core, 0).is_ok(), "slot must be free after the trigger");
+            }),
+        );
+    });
+    let (w, _) = eng.run().unwrap();
+    assert_eq!(w.metrics.dwq_triggered, 1);
 }

@@ -1,21 +1,33 @@
 //! The paper's proposed interface: stream-triggered (ST) MPI operations.
 //!
-//! Implements §III's `MPIX_*` API over the simulated substrate:
+//! Implements §III's `MPIX_*` API over the simulated substrate, as the
+//! **stx v2** typed surface:
 //!
-//! * [`create_queue`] / [`free_queue`] — `MPIX_Create_queue` /
-//!   `MPIX_Free_queue`: bind a GPU stream to an MPI queue object and open
-//!   two NIC hardware counters (one trigger, one completion), mapped into
-//!   GPU-CP-visible memory (§IV-A);
-//! * [`enqueue_send`] / [`enqueue_recv`] — `MPIX_Enqueue_send/recv`:
-//!   create deferred communication descriptors, FIFO per queue,
-//!   asynchronous w.r.t. the host;
-//! * [`enqueue_start`] — `MPIX_Enqueue_start`: appends a stream-memory
-//!   `writeValue64` to the GPU stream; when the GPU CP executes it, the
-//!   write to the trigger counter fires **all** operations enqueued since
-//!   the previous start (batching, §III-A footnote);
-//! * [`enqueue_wait`] — `MPIX_Enqueue_wait`: appends a `waitValue64` on
-//!   the completion counter, stalling the *stream* (never the host) until
-//!   every started operation has completed.
+//! * [`Queue`] — a typed, owned handle to an `MPIX_Queue`
+//!   (`MPIX_Create_queue` / `MPIX_Free_queue`): binds a GPU stream to an
+//!   MPI queue object and holds two NIC hardware counters (one trigger,
+//!   one completion) from the node's finite counter pool, mapped into
+//!   GPU-CP-visible memory (§IV-A). Multiple queues per rank are legal
+//!   and contend for NIC counters and DWQ descriptor slots.
+//! * [`Queue::send`] / [`Queue::recv`] — `MPIX_Enqueue_send/recv`:
+//!   deferred communication descriptors, FIFO per queue, asynchronous
+//!   w.r.t. the host. Each inter-node send reserves a DWQ slot until its
+//!   trigger fires; a full DWQ fails the call ([`StError::DwqFull`])
+//!   without leaking any resource.
+//! * [`Queue::start`] — `MPIX_Enqueue_start`: appends a stream-memory
+//!   `writeValue64`; when the GPU CP executes it, the trigger-counter
+//!   write fires **all** operations enqueued since the previous start
+//!   (batching, §III-A footnote).
+//! * [`Queue::wait`] — `MPIX_Enqueue_wait`: appends a `waitValue64` on
+//!   the completion counter, stalling the *stream* (never the host).
+//! * [`CommPlan`] — the persistent, build-once / start-many layer the
+//!   MPI+X triggering-API surveys converge on: a [`CommPlanBuilder`]
+//!   records a pattern of sends/receives (and KT hooks) once, validates
+//!   selectors eagerly, allocates persistent requests, and then every
+//!   iteration is [`CommPlan::round`] / [`CommPlan::complete`] /
+//!   [`CommPlan::drain`] — no per-iteration descriptor allocation, and
+//!   the host baseline, ST, ST-shader, and KT variants all run through
+//!   the same plan object.
 //!
 //! Routing mirrors §IV faithfully:
 //! * inter-node sends → NIC DWQ triggered sends (full hardware offload);
@@ -24,23 +36,28 @@
 //! * inter-node rendezvous sends get a small progress-thread assist for
 //!   completion handling (§V-E).
 //!
-//! Wildcards are rejected (§III-D): ST operations require a concrete
-//! source rank and tag.
+//! Wildcards are rejected (§III-D): deferred operations require a
+//! concrete source rank and tag, checked eagerly at plan-build time.
 //!
 //! Beyond the paper's ST API this module also hosts the **kernel-
-//! triggered (KT)** wrappers of the follow-on work (arXiv 2306.15773):
-//! [`kt_start`] folds the trigger write into a kernel's execution window
-//! instead of appending a `writeValue64`, [`kt_wait`] folds the
-//! completion wait into a kernel's prologue instead of appending a
-//! `waitValue64`, and [`queue_drain`] is the one host-side wait a KT
-//! timed region performs (at its very end). The deferred operations
-//! themselves ([`enqueue_send`] / [`enqueue_recv`]) are shared verbatim:
-//! the NIC's deferred-work entries do not care *what* advances the
-//! trigger counter. [`Variant`] names the resulting axis every
-//! experiment sweeps.
+//! triggered (KT)** hooks of the follow-on work (arXiv 2306.15773):
+//! [`Queue::kt_start`] folds the trigger write into a kernel's execution
+//! window instead of appending a `writeValue64`, [`Queue::kt_wait`] folds
+//! the completion wait into a kernel's prologue, and [`Queue::drain`] is
+//! the one host-side wait a KT timed region performs (at its very end).
+//! [`Variant`] names the resulting axis every experiment sweeps.
+//!
+//! The v1 free functions (`create_queue`, `enqueue_send`, …, keyed by a
+//! raw `usize` queue id) remain as `#[deprecated]` shims delegating to
+//! the same internals for one release; see DESIGN.md §stx v2 for the
+//! migration table.
+#![deny(missing_docs)]
 
 use crate::costmodel::MemOpFlavor;
-use crate::gpu::{self, StreamId, StreamOp, WriteMode};
+use crate::gpu::{
+    self, host_enqueue, stream_synchronize, KernelCtx, KernelPayload, KernelSpec, StreamId,
+    StreamOp, WriteMode,
+};
 use crate::mpi::{self, SrcSel, TagSel};
 use crate::nic::{self, BufSlice, Done, Envelope};
 use crate::sim::{CellId, HostCtx};
@@ -133,9 +150,25 @@ pub const KT_TRIGGER_FRAC: f64 = 0.9;
 /// Errors surfaced to the application (mirrors MPI error classes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StError {
+    /// Deferred operations do not support `MPI_ANY_SOURCE`/`MPI_ANY_TAG`
+    /// (paper §III-D).
     WildcardUnsupported,
+    /// The `MPIX_Queue` with this id was already freed.
     QueueFreed(usize),
+    /// `MPIX_Free_queue` while this many operations are incomplete.
     QueueBusy(u64),
+    /// This node's NIC hardware-counter pool is exhausted
+    /// (`cost.nic_counter_limit`); free a queue to reclaim capacity.
+    CountersExhausted(usize),
+    /// This node's deferred-work queue has no free descriptor slot
+    /// (`cost.dwq_slots_per_nic`); the failed call released everything it
+    /// had allocated. Plans absorb this by waiting for the next release.
+    DwqFull(usize),
+    /// A [`CommPlan`] recorded deferred operations but was built without
+    /// any [`Queue`].
+    PlanWithoutQueue,
+    /// A [`CommPlan`] was built over a queue belonging to another rank.
+    ForeignQueue(usize),
 }
 
 impl std::fmt::Display for StError {
@@ -148,6 +181,18 @@ impl std::fmt::Display for StError {
             StError::QueueBusy(n) => {
                 write!(f, "MPIX_Free_queue while {n} enqueued operations are incomplete")
             }
+            StError::CountersExhausted(node) => {
+                write!(f, "NIC {node}: hardware counter pool exhausted (free a queue first)")
+            }
+            StError::DwqFull(node) => {
+                write!(f, "NIC {node}: deferred-work queue has no free descriptor slot")
+            }
+            StError::PlanWithoutQueue => {
+                write!(f, "CommPlan records deferred operations but was built without a queue")
+            }
+            StError::ForeignQueue(q) => {
+                write!(f, "CommPlan built over queue {q}, which belongs to another rank")
+            }
         }
     }
 }
@@ -155,8 +200,12 @@ impl std::fmt::Display for StError {
 impl std::error::Error for StError {}
 
 /// `MPIX_Queue`: maps a GPU stream to the MPI runtime and batches ST ops.
+/// This is the world-side record; applications hold a typed [`Queue`]
+/// handle over it.
 pub struct MpixQueue {
+    /// Owning MPI rank.
     pub rank: usize,
+    /// The GPU stream this queue is bound to.
     pub stream: StreamId,
     /// NIC hardware trigger counter (GPU-CP visible).
     pub trig_ctr: CellId,
@@ -172,23 +221,41 @@ pub struct MpixQueue {
     pub pending_since_start: u64,
     /// Total ops covered by issued starts (the wait threshold).
     pub started_total: u64,
+    /// Deferred descriptors this queue posted to its NIC's DWQ.
+    pub dwq_posts: u64,
+    /// Times an op on this queue had to wait for a free DWQ slot
+    /// (multi-queue contention signal, surfaced by campaign reports).
+    pub dwq_slot_waits: u64,
+    /// Set once the queue is freed; every later use is an error.
     pub freed: bool,
 }
 
-/// Create an `MPIX_Queue` bound to `stream` (local operation, §III-A).
-pub fn create_queue(
+// ---------------------------------------------------------------------
+// Internals shared by the typed API, the plan layer, and the v1 shims
+// ---------------------------------------------------------------------
+
+fn create_queue_impl(
     hctx: &mut HostCtx<World>,
     rank: usize,
     stream: StreamId,
     flavor: MemOpFlavor,
-) -> usize {
+) -> Result<usize, StError> {
     let call = hctx.with(|w, _| w.cost.host_enqueue_call);
     hctx.advance(call);
     hctx.with(|w, core| {
         let node = w.topo.node_of(rank);
         let qid = w.queues.len();
-        let trig_ctr = nic::alloc_counter(w, core, node, &format!("q{qid}.trig"));
-        let comp_ctr = nic::alloc_counter(w, core, node, &format!("q{qid}.comp"));
+        let trig_ctr = nic::alloc_counter(w, core, node, &format!("q{qid}.trig"))
+            .ok_or(StError::CountersExhausted(node))?;
+        let comp_ctr = match nic::alloc_counter(w, core, node, &format!("q{qid}.comp")) {
+            Some(c) => c,
+            None => {
+                // Leak-free error path: return the trigger counter the
+                // half-built queue already held.
+                nic::release_counter(w, node);
+                return Err(StError::CountersExhausted(node));
+            }
+        };
         w.queues.push(MpixQueue {
             rank,
             stream,
@@ -198,16 +265,15 @@ pub fn create_queue(
             epoch: 0,
             pending_since_start: 0,
             started_total: 0,
+            dwq_posts: 0,
+            dwq_slot_waits: 0,
             freed: false,
         });
-        qid
+        Ok(qid)
     })
 }
 
-/// Release an `MPIX_Queue`'s internal resources. It is the caller's
-/// responsibility to have waited for all associated ST operations
-/// (§III-A); violating that is reported as an error.
-pub fn free_queue(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
+fn free_queue_impl(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
     let call = hctx.with(|w, _| w.cost.host_enqueue_call);
     hctx.advance(call);
     hctx.with(|w, core| {
@@ -216,18 +282,174 @@ pub fn free_queue(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError
             return Err(StError::QueueFreed(queue));
         }
         let completed = core.cell(q.comp_ctr);
-        let outstanding = q.started_total.saturating_sub(completed);
+        // Enqueued-but-unstarted ops count as incomplete too: they hold
+        // armed waiters and (inter-node sends) DWQ descriptor slots that
+        // only a fired trigger releases — freeing now would leak them.
+        let outstanding = q.started_total.saturating_sub(completed) + q.pending_since_start;
         if outstanding > 0 {
             return Err(StError::QueueBusy(outstanding));
         }
+        let node = w.topo.node_of(q.rank);
         w.queues[queue].freed = true;
+        // Both hardware counters go back to the NIC's finite pool.
+        nic::release_counter(w, node);
+        nic::release_counter(w, node);
         Ok(())
     })
 }
 
-/// `MPIX_Enqueue_send`: deferred tagged send on `queue`. Returns a
-/// request id usable with host-side `mpi::wait` (§III-B2 item 4).
-pub fn enqueue_send(
+/// Freed-queue check plus DWQ slot reservation for one deferred send.
+/// Once this returns `Ok`, arming the operation cannot fail — so error
+/// paths never leave a request, counter bump, or slot behind.
+fn reserve_send_slot(
+    w: &mut World,
+    core: &mut crate::world::Ctx,
+    queue: usize,
+    dst: usize,
+) -> Result<(), StError> {
+    if w.queues[queue].freed {
+        return Err(StError::QueueFreed(queue));
+    }
+    let rank = w.queues[queue].rank;
+    if !w.topo.same_node(rank, dst) {
+        let node = w.topo.node_of(rank);
+        nic::dwq_reserve(w, core, node).map_err(|f| StError::DwqFull(f.node))?;
+        w.queues[queue].dwq_posts += 1;
+    }
+    Ok(())
+}
+
+/// Arm one deferred send on `queue` for the next trigger epoch. The
+/// caller has already passed [`reserve_send_slot`]; this cannot fail.
+#[allow(clippy::too_many_arguments)]
+fn arm_send(
+    w: &mut World,
+    core: &mut crate::world::Ctx,
+    queue: usize,
+    dst: usize,
+    src: BufSlice,
+    tag: i32,
+    comm: u16,
+    req_cell: CellId,
+) {
+    let rank = w.queues[queue].rank;
+    let q = &mut w.queues[queue];
+    let threshold = q.epoch + 1;
+    q.pending_since_start += 1;
+    let trig = q.trig_ctr;
+    let comp = q.comp_ctr;
+    let env = Envelope { src_rank: rank, dst_rank: dst, tag, comm, elems: src.elems };
+
+    if w.topo.same_node(rank, dst) {
+        // No intra-node deferred-work hardware exists (§IV-B): the
+        // progress thread watches the trigger counter and performs the
+        // send itself.
+        core.on_ge(
+            trig,
+            threshold,
+            format!("progress r{rank} ST intra send"),
+            Box::new(move |w, core| {
+                let cost = w.cost.progress_wakeup + w.cost.progress_per_op;
+                let at = mpi::progress_charge(w, core, rank, cost);
+                core.schedule_at(
+                    at,
+                    Box::new(move |w, core| {
+                        // Completion counter updates also flow through
+                        // the progress thread.
+                        let done = Done {
+                            cells: vec![req_cell],
+                            cb: Some(Box::new(move |w, core| {
+                                let c = w.cost.progress_completion;
+                                let at = mpi::progress_charge(w, core, rank, c);
+                                // Typed event: the completion-counter
+                                // update needs no closure.
+                                core.schedule_cell_add_at(at, comp, 1);
+                            })),
+                        };
+                        mpi::do_send(w, core, env, src, done);
+                    }),
+                );
+            }),
+        );
+    } else {
+        // Full NIC offload via a DWQ triggered send (§IV-A1). The NIC
+        // bumps the completion counter in hardware; rendezvous sends
+        // need a small progress-thread assist (§V-E).
+        let rendezvous = w.cost.is_rendezvous(src.bytes());
+        let done = Done {
+            cells: vec![req_cell, comp],
+            cb: if rendezvous {
+                Some(Box::new(move |w, core| {
+                    let c = w.cost.progress_rendezvous_assist;
+                    let _ = mpi::progress_charge(w, core, rank, c);
+                }))
+            } else {
+                None
+            },
+        };
+        nic::post_triggered_send(w, core, trig, threshold, env, src, done);
+    }
+}
+
+/// Arm one deferred receive on `queue` for the next trigger epoch. The
+/// NIC has no triggered receives (§IV-A2), so the progress thread
+/// emulates the deferred semantics regardless of locality: it observes
+/// the trigger, posts the receive into the matching engine, and mediates
+/// the completion-counter update.
+#[allow(clippy::too_many_arguments)]
+fn arm_recv(
+    w: &mut World,
+    core: &mut crate::world::Ctx,
+    queue: usize,
+    src_rank: usize,
+    dst: BufSlice,
+    tag: i32,
+    comm: u16,
+    req_cell: CellId,
+) {
+    let rank = w.queues[queue].rank;
+    let q = &mut w.queues[queue];
+    let threshold = q.epoch + 1;
+    q.pending_since_start += 1;
+    let trig = q.trig_ctr;
+    let comp = q.comp_ctr;
+
+    core.on_ge(
+        trig,
+        threshold,
+        format!("progress r{rank} ST recv"),
+        Box::new(move |w, core| {
+            let cost = w.cost.progress_wakeup + w.cost.progress_per_op;
+            let at = mpi::progress_charge(w, core, rank, cost);
+            core.schedule_at(
+                at,
+                Box::new(move |w, core| {
+                    let done = Done {
+                        cells: vec![req_cell],
+                        cb: Some(Box::new(move |w, core| {
+                            let c = w.cost.progress_completion;
+                            let at = mpi::progress_charge(w, core, rank, c);
+                            // Typed event path, as in arm_send.
+                            core.schedule_cell_add_at(at, comp, 1);
+                        })),
+                    };
+                    mpi::post_recv(
+                        w,
+                        core,
+                        rank,
+                        SrcSel::Rank(src_rank),
+                        TagSel::Tag(tag),
+                        comm,
+                        dst,
+                        done,
+                    );
+                }),
+            );
+        }),
+    );
+}
+
+fn send_impl(
     hctx: &mut HostCtx<World>,
     queue: usize,
     dst: usize,
@@ -238,78 +460,15 @@ pub fn enqueue_send(
     let call = hctx.with(|w, _| w.cost.host_enqueue_call);
     hctx.advance(call);
     hctx.with(|w, core| {
-        if w.queues[queue].freed {
-            return Err(StError::QueueFreed(queue));
-        }
-        let rank = w.queues[queue].rank;
+        reserve_send_slot(w, core, queue, dst)?;
         let req = w.new_request(core, "st_send");
         let req_cell = w.request_done_cell(req);
-        let q = &mut w.queues[queue];
-        let threshold = q.epoch + 1;
-        q.pending_since_start += 1;
-        let trig = q.trig_ctr;
-        let comp = q.comp_ctr;
-        let env = Envelope { src_rank: rank, dst_rank: dst, tag, comm, elems: src.elems };
-
-        if w.topo.same_node(rank, dst) {
-            // No intra-node deferred-work hardware exists (§IV-B): the
-            // progress thread watches the trigger counter and performs the
-            // send itself.
-            core.on_ge(
-                trig,
-                threshold,
-                format!("progress r{rank} ST intra send"),
-                Box::new(move |w, core| {
-                    let cost = w.cost.progress_wakeup + w.cost.progress_per_op;
-                    let at = mpi::progress_charge(w, core, rank, cost);
-                    core.schedule_at(
-                        at,
-                        Box::new(move |w, core| {
-                            // Completion counter updates also flow through
-                            // the progress thread.
-                            let done = Done {
-                                cells: vec![req_cell],
-                                cb: Some(Box::new(move |w, core| {
-                                    let c = w.cost.progress_completion;
-                                    let at = mpi::progress_charge(w, core, rank, c);
-                                    // Typed event: the completion-counter
-                                    // update needs no closure.
-                                    core.schedule_cell_add_at(at, comp, 1);
-                                })),
-                            };
-                            mpi::do_send(w, core, env, src, done);
-                        }),
-                    );
-                }),
-            );
-        } else {
-            // Full NIC offload via a DWQ triggered send (§IV-A1). The NIC
-            // bumps the completion counter in hardware; rendezvous sends
-            // need a small progress-thread assist (§V-E).
-            let rendezvous = w.cost.is_rendezvous(src.bytes());
-            let done = Done {
-                cells: vec![req_cell, comp],
-                cb: if rendezvous {
-                    Some(Box::new(move |w, core| {
-                        let c = w.cost.progress_rendezvous_assist;
-                        let _ = mpi::progress_charge(w, core, rank, c);
-                    }))
-                } else {
-                    None
-                },
-            };
-            nic::post_triggered_send(w, core, trig, threshold, env, src, done);
-        }
+        arm_send(w, core, queue, dst, src, tag, comm, req_cell);
         Ok(req)
     })
 }
 
-/// `MPIX_Enqueue_recv`: deferred tagged receive on `queue`. The NIC has
-/// no triggered receives (§IV-A2), so the progress thread emulates the
-/// deferred semantics regardless of locality: it observes the trigger,
-/// posts the receive into the matching engine, and mediates the
-/// completion-counter update.
-pub fn enqueue_recv(
+fn recv_impl(
     hctx: &mut HostCtx<World>,
     queue: usize,
     src_rank: usize,
@@ -323,66 +482,14 @@ pub fn enqueue_recv(
         if w.queues[queue].freed {
             return Err(StError::QueueFreed(queue));
         }
-        let rank = w.queues[queue].rank;
         let req = w.new_request(core, "st_recv");
         let req_cell = w.request_done_cell(req);
-        let q = &mut w.queues[queue];
-        let threshold = q.epoch + 1;
-        q.pending_since_start += 1;
-        let trig = q.trig_ctr;
-        let comp = q.comp_ctr;
-
-        core.on_ge(
-            trig,
-            threshold,
-            format!("progress r{rank} ST recv"),
-            Box::new(move |w, core| {
-                let cost = w.cost.progress_wakeup + w.cost.progress_per_op;
-                let at = mpi::progress_charge(w, core, rank, cost);
-                core.schedule_at(
-                    at,
-                    Box::new(move |w, core| {
-                        let done = Done {
-                            cells: vec![req_cell],
-                            cb: Some(Box::new(move |w, core| {
-                                let c = w.cost.progress_completion;
-                                let at = mpi::progress_charge(w, core, rank, c);
-                                // Typed event path, as in enqueue_send.
-                                core.schedule_cell_add_at(at, comp, 1);
-                            })),
-                        };
-                        mpi::post_recv(
-                            w,
-                            core,
-                            rank,
-                            SrcSel::Rank(src_rank),
-                            TagSel::Tag(tag),
-                            comm,
-                            dst,
-                            done,
-                        );
-                    }),
-                );
-            }),
-        );
+        arm_recv(w, core, queue, src_rank, dst, tag, comm, req_cell);
         Ok(req)
     })
 }
 
-/// Convenience guard: ST does not allow wildcards (§III-D). Callers that
-/// accept user-provided selectors should validate through this.
-pub fn validate_selectors(src: SrcSel, tag: TagSel) -> Result<(), StError> {
-    if src == SrcSel::Any || tag == TagSel::Any {
-        return Err(StError::WildcardUnsupported);
-    }
-    Ok(())
-}
-
-/// `MPIX_Enqueue_start`: appends a `writeValue64` to the queue's GPU
-/// stream. When the CP executes it (in stream order), the trigger counter
-/// advances to the new epoch and every operation enqueued since the last
-/// start executes (batched trigger, §III-B item 3).
-pub fn enqueue_start(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
+fn start_impl(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
     let (call, enq) = hctx.with(|w, _| (w.cost.host_enqueue_call, w.cost.kernel_enqueue));
     hctx.advance(call + enq);
     hctx.with(|w, core| {
@@ -405,10 +512,7 @@ pub fn enqueue_start(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StEr
     })
 }
 
-/// `MPIX_Enqueue_wait`: appends a `waitValue64` on the completion counter
-/// to the queue's GPU stream; the *stream* stalls until all started
-/// operations complete. Host-asynchronous (§III-B2 item 3).
-pub fn enqueue_wait(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
+fn wait_impl(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
     let (call, enq) = hctx.with(|w, _| (w.cost.host_enqueue_call, w.cost.kernel_enqueue));
     hctx.advance(call + enq);
     hctx.with(|w, core| {
@@ -427,21 +531,10 @@ pub fn enqueue_wait(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StErr
     })
 }
 
-/// Kernel-triggered start — the KT counterpart of [`enqueue_start`].
-/// Instead of appending a `writeValue64` stream op, the trigger-counter
-/// bump is folded into `kernel` (a [`gpu::KernelCtx`] later attached to
-/// a [`gpu::StreamOp::KtKernel`]) and fires at `frac` of the kernel's
-/// execution window: the NIC releases every operation enqueued since the
-/// previous start while the kernel is still running, removing the
-/// per-iteration CP memop handshake the ST path pays.
-///
-/// The write is a device-scope atomic increment; CP `enqueue_start`
-/// writes the absolute epoch. Both advance the counter to the same
-/// value, so ST and KT starts may be mixed on one queue.
-pub fn kt_start(
+fn kt_start_impl(
     hctx: &mut HostCtx<World>,
     queue: usize,
-    kernel: &mut gpu::KernelCtx,
+    kernel: &mut KernelCtx,
     frac: f64,
 ) -> Result<(), StError> {
     let call = hctx.with(|w, _| w.cost.host_enqueue_call);
@@ -459,15 +552,10 @@ pub fn kt_start(
     })
 }
 
-/// Kernel-triggered wait — the KT counterpart of [`enqueue_wait`]. The
-/// completion wait folds into `kernel`'s prologue (its first wavefront
-/// spins on the completion counter before the body runs), so the stream
-/// never stalls on a separate `waitValue64` op and no CP memop is
-/// executed: completion rides the kernel itself.
-pub fn kt_wait(
+fn kt_wait_impl(
     hctx: &mut HostCtx<World>,
     queue: usize,
-    kernel: &mut gpu::KernelCtx,
+    kernel: &mut KernelCtx,
 ) -> Result<(), StError> {
     let call = hctx.with(|w, _| w.cost.host_enqueue_call);
     hctx.advance(call);
@@ -481,12 +569,7 @@ pub fn kt_wait(
     })
 }
 
-/// Host-side completion drain: block the host until every started
-/// operation on `queue` has completed. KT timed regions call this once
-/// at the very end (per-iteration completion rides kernel prologues);
-/// it returns immediately on an already-quiet queue, so ST callers may
-/// use it as a cheap teardown guard too.
-pub fn queue_drain(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
+fn drain_impl(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
     let (cell, threshold, cost) = hctx.with(|w, _| {
         if w.queues[queue].freed {
             return Err(StError::QueueFreed(queue));
@@ -497,6 +580,749 @@ pub fn queue_drain(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StErro
     hctx.advance(cost);
     hctx.wait_ge(cell, threshold, "MPIX queue drain");
     Ok(())
+}
+
+/// Block the host until `node`'s deferred-work queue releases a
+/// descriptor. The *caller* records the stall (once per logical wait,
+/// even if a released slot is lost to a concurrent producer and the
+/// wait repeats).
+fn wait_for_dwq_slot(hctx: &mut HostCtx<World>, node: usize) {
+    let (cell, threshold) = hctx.with(|w, core| {
+        let cell = nic::dwq_released_cell(w, core, node);
+        let cap = w.cost.dwq_slots_per_nic as u64;
+        // A slot frees once released >= posted - capacity + 1 (the DWQ
+        // was full when we got here, so posted >= capacity).
+        (cell, w.nics[node].dwq_posted + 1 - cap)
+    });
+    hctx.wait_ge(cell, threshold, "stx DWQ slot");
+}
+
+// ---------------------------------------------------------------------
+// Queue: the typed, owned handle (stx v2)
+// ---------------------------------------------------------------------
+
+/// Typed, owned handle to an `MPIX_Queue` (stx v2). Carries its variant,
+/// rank, and stream; the NIC resources it holds (two hardware counters)
+/// return to the node's pool when the handle is [`Queue::free`]d. Raw
+/// `usize` ids remain available through [`Queue::id`] for the deprecated
+/// v1 shims.
+#[derive(Debug)]
+pub struct Queue {
+    id: usize,
+    rank: usize,
+    stream: StreamId,
+    variant: Variant,
+}
+
+/// Point-in-time per-queue statistics ([`Queue::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueStats {
+    /// Deferred descriptors this queue posted to its NIC's DWQ.
+    pub dwq_posts: u64,
+    /// Times ops on this queue waited for a free DWQ descriptor slot.
+    pub dwq_slot_waits: u64,
+    /// Started-but-incomplete operations right now.
+    pub outstanding: u64,
+}
+
+impl Queue {
+    /// `MPIX_Create_queue`: bind `stream` to a new queue for `rank`,
+    /// taking two hardware counters from the node's finite pool (the
+    /// stream-memop flavor follows `variant`, §V-F). Fails with
+    /// [`StError::CountersExhausted`] — leak-free — when the pool is dry.
+    pub fn create(
+        hctx: &mut HostCtx<World>,
+        rank: usize,
+        stream: StreamId,
+        variant: Variant,
+    ) -> Result<Queue, StError> {
+        let id = create_queue_impl(hctx, rank, stream, variant.flavor())?;
+        Ok(Queue { id, rank, stream, variant })
+    }
+
+    /// The raw world-side queue id (interop with the deprecated v1 API).
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// The owning MPI rank.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// The GPU stream this queue is bound to.
+    pub fn stream(&self) -> StreamId {
+        self.stream
+    }
+
+    /// The communication variant this queue was created for.
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    /// `MPIX_Enqueue_send`: deferred tagged send. Returns a request id
+    /// usable with host-side `mpi::wait` (§III-B2 item 4). Inter-node
+    /// sends reserve a DWQ descriptor slot; a full DWQ fails with
+    /// [`StError::DwqFull`] having released everything it allocated.
+    pub fn send(
+        &self,
+        hctx: &mut HostCtx<World>,
+        dst: usize,
+        src: BufSlice,
+        tag: i32,
+        comm: u16,
+    ) -> Result<usize, StError> {
+        send_impl(hctx, self.id, dst, src, tag, comm)
+    }
+
+    /// `MPIX_Enqueue_recv`: deferred tagged receive (progress-thread
+    /// emulated at any locality, §IV-A2). Returns a request id.
+    pub fn recv(
+        &self,
+        hctx: &mut HostCtx<World>,
+        src_rank: usize,
+        dst: BufSlice,
+        tag: i32,
+        comm: u16,
+    ) -> Result<usize, StError> {
+        recv_impl(hctx, self.id, src_rank, dst, tag, comm)
+    }
+
+    /// `MPIX_Enqueue_start`: append the `writeValue64` trigger for every
+    /// operation enqueued since the previous start (§III-B item 3).
+    pub fn start(&self, hctx: &mut HostCtx<World>) -> Result<(), StError> {
+        start_impl(hctx, self.id)
+    }
+
+    /// `MPIX_Enqueue_wait`: append a `waitValue64` on the completion
+    /// counter; the *stream* stalls, never the host (§III-B2 item 3).
+    pub fn wait(&self, hctx: &mut HostCtx<World>) -> Result<(), StError> {
+        wait_impl(hctx, self.id)
+    }
+
+    /// Kernel-triggered start — the KT counterpart of [`Queue::start`]:
+    /// the trigger-counter bump is folded into `kernel` and fires at
+    /// `frac` of its execution window, so the NIC releases every
+    /// operation enqueued since the previous start while the kernel is
+    /// still running.
+    ///
+    /// The write is a device-scope atomic increment; CP starts write the
+    /// absolute epoch. Both advance the counter to the same value, so ST
+    /// and KT starts may be mixed on one queue.
+    pub fn kt_start(
+        &self,
+        hctx: &mut HostCtx<World>,
+        kernel: &mut KernelCtx,
+        frac: f64,
+    ) -> Result<(), StError> {
+        kt_start_impl(hctx, self.id, kernel, frac)
+    }
+
+    /// Kernel-triggered wait — the KT counterpart of [`Queue::wait`]:
+    /// the completion wait folds into `kernel`'s prologue (its first
+    /// wavefront spins before the body runs), costing no CP memop.
+    pub fn kt_wait(
+        &self,
+        hctx: &mut HostCtx<World>,
+        kernel: &mut KernelCtx,
+    ) -> Result<(), StError> {
+        kt_wait_impl(hctx, self.id, kernel)
+    }
+
+    /// Host-side completion drain: block the host until every started
+    /// operation has completed. KT timed regions call this once at their
+    /// very end; it returns immediately on a quiet queue.
+    pub fn drain(&self, hctx: &mut HostCtx<World>) -> Result<(), StError> {
+        drain_impl(hctx, self.id)
+    }
+
+    /// Snapshot this queue's resource/contention counters.
+    pub fn stats(&self, hctx: &mut HostCtx<World>) -> QueueStats {
+        let id = self.id;
+        hctx.with(|w, core| {
+            let q = &w.queues[id];
+            QueueStats {
+                dwq_posts: q.dwq_posts,
+                dwq_slot_waits: q.dwq_slot_waits,
+                outstanding: q.started_total.saturating_sub(core.cell(q.comp_ctr)),
+            }
+        })
+    }
+
+    /// `MPIX_Free_queue`: release the queue and return its hardware
+    /// counters to the NIC pool. It is the caller's responsibility to
+    /// have waited for all associated operations — enqueued-but-unstarted
+    /// ones included (§III-A); violating that reports
+    /// [`StError::QueueBusy`] and hands the still-live handle back so
+    /// the caller can [`Queue::drain`] and retry.
+    pub fn free(self, hctx: &mut HostCtx<World>) -> Result<(), (Queue, StError)> {
+        match free_queue_impl(hctx, self.id) {
+            Ok(()) => Ok(()),
+            Err(e) => Err((self, e)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// CommPlan: build-once / start-many persistent patterns (stx v2)
+// ---------------------------------------------------------------------
+
+struct SendRec {
+    dst: usize,
+    src: BufSlice,
+    tag: i32,
+    comm: u16,
+    qslot: usize,
+}
+
+struct RecvRec {
+    src: SrcSel,
+    tag: TagSel,
+    comm: u16,
+    /// Parity-indexed destination buffers (equal unless double-buffered).
+    bufs: [BufSlice; 2],
+    deferred: bool,
+    qslot: usize,
+}
+
+struct PlanSend {
+    rec: SendRec,
+    req_cell: CellId,
+}
+
+struct PlanRecv {
+    rec: RecvRec,
+    /// Persistent request cell (deferred receives only).
+    req_cell: Option<CellId>,
+}
+
+/// Records a communication pattern for a [`CommPlan`]: sends, posted
+/// (standard `MPI_Irecv`) receives, and queue-deferred receives.
+/// Selector validation is eager — wildcards on deferred operations fail
+/// at record time, not at start time (§III-D).
+pub struct CommPlanBuilder {
+    rank: usize,
+    stream: StreamId,
+    variant: Variant,
+    queues: Vec<usize>,
+    slot0: usize,
+    sends: Vec<SendRec>,
+    recvs: Vec<RecvRec>,
+    kt_frac: f64,
+}
+
+impl CommPlanBuilder {
+    fn next_send_slot(&self) -> usize {
+        if self.queues.is_empty() {
+            0
+        } else {
+            (self.slot0 + self.sends.len()) % self.queues.len()
+        }
+    }
+
+    fn next_recv_slot(&self) -> usize {
+        if self.queues.is_empty() {
+            0
+        } else {
+            (self.slot0 + self.recvs.iter().filter(|r| r.deferred).count()) % self.queues.len()
+        }
+    }
+
+    /// Start the round-robin striping at queue slot `slot` instead of 0.
+    /// Lets a *sequence* of small plans (e.g. one per ring step) spread
+    /// over the queue set even when each plan records a single send —
+    /// otherwise every one-op plan would land on queue 0.
+    pub fn stripe_from(&mut self, slot: usize) {
+        self.slot0 = if self.queues.is_empty() { 0 } else { slot % self.queues.len() };
+    }
+
+    /// Record a deferred tagged send to `dst`. Sends stripe round-robin
+    /// over the plan's queues.
+    pub fn send(&mut self, dst: usize, src: BufSlice, tag: i32, comm: u16) {
+        let qslot = self.next_send_slot();
+        self.sends.push(SendRec { dst, src, tag, comm, qslot });
+    }
+
+    /// Record a *posted* receive: re-posted as a standard `MPI_Irecv` by
+    /// [`CommPlan::post_recvs`] each iteration (the paper's deliberate
+    /// receive-side choice while the NIC lacks triggered receives,
+    /// §V-B). Wildcards are allowed here, as on any standard receive.
+    pub fn recv(&mut self, src: SrcSel, tag: TagSel, comm: u16, dst: BufSlice) {
+        self.recvs.push(RecvRec { src, tag, comm, bufs: [dst, dst], deferred: false, qslot: 0 });
+    }
+
+    /// Record a double-buffered posted receive: iteration parity selects
+    /// which of the two destination slices the re-post lands in.
+    pub fn recv_db(&mut self, src: SrcSel, tag: TagSel, comm: u16, dst: [BufSlice; 2]) {
+        self.recvs.push(RecvRec { src, tag, comm, bufs: dst, deferred: false, qslot: 0 });
+    }
+
+    /// Record a *deferred* receive on the plan's queues (collective-style
+    /// patterns): armed and triggered with the sends each round.
+    /// Wildcards are rejected eagerly (§III-D).
+    pub fn recv_deferred(
+        &mut self,
+        src: SrcSel,
+        tag: TagSel,
+        comm: u16,
+        dst: BufSlice,
+    ) -> Result<(), StError> {
+        validate_selectors(src, tag)?;
+        let qslot = self.next_recv_slot();
+        self.recvs.push(RecvRec { src, tag, comm, bufs: [dst, dst], deferred: true, qslot });
+        Ok(())
+    }
+
+    /// Override the kernel-window fraction at which KT triggers fire
+    /// (default [`KT_TRIGGER_FRAC`]).
+    pub fn kt_frac(&mut self, frac: f64) {
+        self.kt_frac = frac;
+    }
+
+    /// Finalize the plan: validate the queue set, allocate one persistent
+    /// request per deferred operation (the build-once half of the
+    /// build-once / start-many contract), and freeze the pattern.
+    pub fn build(self, hctx: &mut HostCtx<World>) -> Result<CommPlan, StError> {
+        let n_deferred = self.sends.len() + self.recvs.iter().filter(|r| r.deferred).count();
+        if self.variant.uses_queue() && n_deferred > 0 && self.queues.is_empty() {
+            return Err(StError::PlanWithoutQueue);
+        }
+        let call = hctx.with(|w, _| w.cost.host_enqueue_call);
+        hctx.advance(call * n_deferred as u64);
+        let rank = self.rank;
+        let queues = self.queues;
+        let (sends, recvs) = hctx.with(|w, core| {
+            for &qid in &queues {
+                if w.queues[qid].freed {
+                    return Err(StError::QueueFreed(qid));
+                }
+                if w.queues[qid].rank != rank {
+                    return Err(StError::ForeignQueue(qid));
+                }
+            }
+            let sends: Vec<PlanSend> = self
+                .sends
+                .into_iter()
+                .map(|rec| {
+                    let req = w.new_request(core, "plan_send");
+                    PlanSend { rec, req_cell: w.request_done_cell(req) }
+                })
+                .collect();
+            let recvs: Vec<PlanRecv> = self
+                .recvs
+                .into_iter()
+                .map(|rec| {
+                    let req_cell = rec.deferred.then(|| {
+                        let req = w.new_request(core, "plan_recv");
+                        w.request_done_cell(req)
+                    });
+                    PlanRecv { rec, req_cell }
+                })
+                .collect();
+            Ok((sends, recvs))
+        })?;
+        let mut active: Vec<usize> = sends
+            .iter()
+            .map(|s| s.rec.qslot)
+            .chain(recvs.iter().filter(|r| r.rec.deferred).map(|r| r.rec.qslot))
+            .collect();
+        active.sort_unstable();
+        active.dedup();
+        if queues.is_empty() {
+            active.clear();
+        }
+        Ok(CommPlan {
+            rank,
+            stream: self.stream,
+            variant: self.variant,
+            queues,
+            active,
+            sends,
+            recvs,
+            kt_frac: self.kt_frac,
+        })
+    }
+}
+
+/// A persistent communication pattern (stx v2): descriptors, selectors,
+/// and requests are allocated **once** at build; every iteration re-arms
+/// them with [`CommPlan::round`] / [`CommPlan::complete`] — the host
+/// baseline, ST, ST-shader, and KT variants all run through the same
+/// plan object, so workload code contains no per-variant communication
+/// branches and no per-iteration enqueue calls.
+///
+/// One iteration ("round") of a plan:
+///
+/// 1. [`CommPlan::post_recvs`] — re-post the plan's posted receives
+///    (standard `MPI_Irecv`, double-buffered by `parity`);
+/// 2. [`CommPlan::round`] — launch the producer kernels and run the
+///    deferred set under the variant's protocol (see below);
+/// 3. …overlap kernels, host work…;
+/// 4. [`CommPlan::complete`] — the variant's send-completion wait;
+/// 5. `mpi::waitall` on the posted-receive requests.
+///
+/// Per-variant `round`/`complete` behavior:
+///
+/// * **Host** — kernels, `hipStreamSynchronize`, `MPI_Isend` per send
+///   (Fig. 1); `complete` = host `MPI_Waitall`.
+/// * **ST / ST-shader** — kernels, then per queue: arm ops + one
+///   `writeValue64` start; `complete` = one `waitValue64` per queue
+///   (Fig. 2) — the stream stalls, never the host.
+/// * **KT** — the completion wait for the *previous* round rides the
+///   first kernel's prologue, ops are armed, and the trigger fires from
+///   inside the last kernel at the plan's KT fraction; `complete` is a
+///   no-op (the next round's prologue — or [`CommPlan::drain`] — covers
+///   completion).
+///
+/// Multi-queue plans stripe operations round-robin over their queues;
+/// each queue arms and triggers independently, contending for the NIC's
+/// DWQ slots (stalls surface as `dwq_slot_waits`). A round's per-queue
+/// slot demand must fit `cost.dwq_slots_per_nic`; the engine's deadlock
+/// reporter names the blocked arm otherwise.
+pub struct CommPlan {
+    rank: usize,
+    stream: StreamId,
+    variant: Variant,
+    queues: Vec<usize>,
+    /// Indices into `queues` that own at least one deferred op.
+    active: Vec<usize>,
+    sends: Vec<PlanSend>,
+    recvs: Vec<PlanRecv>,
+    kt_frac: f64,
+}
+
+/// Token tying one [`CommPlan::round`] to its [`CommPlan::complete`]:
+/// carries the host-variant request ids that `complete` waits on.
+#[must_use = "a round must be completed (CommPlan::complete)"]
+pub struct Round {
+    host_reqs: Vec<usize>,
+}
+
+impl CommPlan {
+    /// Start recording a plan for `rank` on `stream`, driven by `queues`
+    /// (empty for [`Variant::Host`]; ops stripe round-robin otherwise).
+    pub fn builder(
+        rank: usize,
+        stream: StreamId,
+        variant: Variant,
+        queues: &[Queue],
+    ) -> CommPlanBuilder {
+        CommPlanBuilder {
+            rank,
+            stream,
+            variant,
+            queues: queues.iter().map(|q| q.id).collect(),
+            slot0: 0,
+            sends: Vec::new(),
+            recvs: Vec::new(),
+            kt_frac: KT_TRIGGER_FRAC,
+        }
+    }
+
+    /// The variant this plan runs under.
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    /// Re-post the plan's posted receives for this iteration (standard
+    /// `MPI_Irecv`; `parity` selects the double-buffer half). Returns
+    /// the request ids for the end-of-iteration `mpi::waitall`.
+    pub fn post_recvs(&self, hctx: &mut HostCtx<World>, parity: usize) -> Vec<usize> {
+        self.recvs
+            .iter()
+            .filter(|r| !r.rec.deferred)
+            .map(|r| {
+                let d = &r.rec;
+                mpi::irecv(hctx, self.rank, d.src, d.tag, d.comm, d.bufs[parity % 2])
+            })
+            .collect()
+    }
+
+    /// Arm one plan send, absorbing DWQ backpressure: a full deferred-
+    /// work queue stalls the host until the NIC releases a descriptor
+    /// (recorded as a `dwq_slot_waits` event) instead of failing.
+    fn arm_plan_send(&self, hctx: &mut HostCtx<World>, s: &PlanSend) -> Result<(), StError> {
+        let qid = self.queues[s.rec.qslot];
+        let (dst, src, tag, comm) = (s.rec.dst, s.rec.src, s.rec.tag, s.rec.comm);
+        let req_cell = s.req_cell;
+        let call = hctx.with(|w, _| w.cost.host_enqueue_call);
+        hctx.advance(call);
+        let mut stalled = false;
+        loop {
+            let r = hctx.with(|w, core| {
+                reserve_send_slot(w, core, qid, dst)?;
+                arm_send(w, core, qid, dst, src, tag, comm, req_cell);
+                Ok(())
+            });
+            match r {
+                Err(StError::DwqFull(node)) => {
+                    // One logical stall per op, even if a freed slot is
+                    // snatched by a concurrent producer and we re-wait.
+                    if !stalled {
+                        stalled = true;
+                        hctx.with(|w, _| {
+                            w.metrics.dwq_slot_waits += 1;
+                            w.queues[qid].dwq_slot_waits += 1;
+                        });
+                    }
+                    wait_for_dwq_slot(hctx, node);
+                }
+                other => return other,
+            }
+        }
+    }
+
+    fn arm_plan_recv(&self, hctx: &mut HostCtx<World>, r: &PlanRecv) -> Result<(), StError> {
+        let qid = self.queues[r.rec.qslot];
+        let (src, tag) = match (r.rec.src, r.rec.tag) {
+            (SrcSel::Rank(s), TagSel::Tag(t)) => (s, t),
+            // Unreachable: recv_deferred validated the selectors.
+            _ => return Err(StError::WildcardUnsupported),
+        };
+        let (dst, comm) = (r.rec.bufs[0], r.rec.comm);
+        let req_cell = r.req_cell.expect("deferred recv carries a persistent request");
+        let call = hctx.with(|w, _| w.cost.host_enqueue_call);
+        hctx.advance(call);
+        hctx.with(|w, core| {
+            if w.queues[qid].freed {
+                return Err(StError::QueueFreed(qid));
+            }
+            arm_recv(w, core, qid, src, dst, tag, comm, req_cell);
+            Ok(())
+        })
+    }
+
+    /// Arm every deferred op owned by queue slot `slot`, in record order
+    /// (sends, then deferred receives).
+    fn arm_slot(&self, hctx: &mut HostCtx<World>, slot: usize) -> Result<(), StError> {
+        for s in self.sends.iter().filter(|s| s.rec.qslot == slot) {
+            self.arm_plan_send(hctx, s)?;
+        }
+        for r in self.recvs.iter().filter(|r| r.rec.deferred && r.rec.qslot == slot) {
+            self.arm_plan_recv(hctx, r)?;
+        }
+        Ok(())
+    }
+
+    /// Run one round of the plan: launch `kernels` (the producer/pack
+    /// phase) and drive the deferred set under the plan's variant
+    /// protocol (see the type-level docs for the per-variant timeline).
+    /// KT rounds with no kernels get a zero-cost device progress kernel
+    /// to carry their hooks.
+    pub fn round(
+        &self,
+        hctx: &mut HostCtx<World>,
+        kernels: Vec<KernelSpec>,
+    ) -> Result<Round, StError> {
+        match self.variant {
+            Variant::Host => {
+                let had_kernels = !kernels.is_empty();
+                for k in kernels {
+                    host_enqueue(hctx, self.stream, StreamOp::Kernel(k));
+                }
+                if had_kernels {
+                    // The Fig-1 kernel-boundary sync the ST path removes.
+                    stream_synchronize(hctx, self.stream);
+                }
+                let mut reqs = Vec::with_capacity(self.sends.len());
+                // Deferred-recorded receives fall back to standard
+                // irecvs on the host path (pre-posted before the sends).
+                for r in self.recvs.iter().filter(|r| r.rec.deferred) {
+                    let d = &r.rec;
+                    reqs.push(mpi::irecv(hctx, self.rank, d.src, d.tag, d.comm, d.bufs[0]));
+                }
+                for s in &self.sends {
+                    let d = &s.rec;
+                    reqs.push(mpi::isend(hctx, self.rank, d.dst, d.src, d.tag, d.comm));
+                }
+                Ok(Round { host_reqs: reqs })
+            }
+            Variant::KernelTriggered => {
+                let mut kernels = kernels;
+                if kernels.is_empty() {
+                    // Device-side progress kernel carrying the hooks.
+                    kernels.push(KernelSpec {
+                        name: "plan_progress".into(),
+                        flops: 0,
+                        bytes: 0,
+                        payload: KernelPayload::None,
+                    });
+                }
+                let mut kts: Vec<KernelCtx> = kernels.iter().map(|_| KernelCtx::new()).collect();
+                // Previous rounds' completion rides the first kernel's
+                // prologue (thresholds snapshot *before* this round's
+                // ops are armed). The wait covers the plan's WHOLE queue
+                // set, not just the slots this plan arms: chained small
+                // plans (one per collective step) rotate over the
+                // queues, and step s+1's trigger must not fire before
+                // step s's ops — possibly on a different queue — have
+                // completed.
+                for slot in 0..self.queues.len() {
+                    kt_wait_impl(hctx, self.queues[slot], &mut kts[0])?;
+                }
+                for &slot in &self.active {
+                    self.arm_slot(hctx, slot)?;
+                    let last = kts.last_mut().expect("at least one kernel");
+                    kt_start_impl(hctx, self.queues[slot], last, self.kt_frac)?;
+                }
+                for (k, kt) in kernels.into_iter().zip(kts) {
+                    let op = if kt.is_empty() {
+                        StreamOp::Kernel(k)
+                    } else {
+                        StreamOp::KtKernel(k, kt)
+                    };
+                    host_enqueue(hctx, self.stream, op);
+                }
+                Ok(Round { host_reqs: Vec::new() })
+            }
+            _ => {
+                for k in kernels {
+                    host_enqueue(hctx, self.stream, StreamOp::Kernel(k));
+                }
+                // Per queue: arm its ops, then its writeValue64 start —
+                // grouping per queue keeps DWQ backpressure resolvable
+                // (an earlier queue's trigger is already in the stream
+                // when a later queue stalls for a slot).
+                for &slot in &self.active {
+                    self.arm_slot(hctx, slot)?;
+                    start_impl(hctx, self.queues[slot])?;
+                }
+                Ok(Round { host_reqs: Vec::new() })
+            }
+        }
+    }
+
+    /// The variant's send-completion wait for a [`CommPlan::round`]:
+    /// host `MPI_Waitall` (Host), one `waitValue64` per queue (ST —
+    /// stalls the stream, not the host), or nothing (KT — completion
+    /// rides the next round's kernel prologue or [`CommPlan::drain`]).
+    pub fn complete(&self, hctx: &mut HostCtx<World>, round: Round) -> Result<(), StError> {
+        match self.variant {
+            Variant::Host => {
+                mpi::waitall(hctx, &round.host_reqs);
+                Ok(())
+            }
+            Variant::KernelTriggered => Ok(()),
+            _ => {
+                for &slot in &self.active {
+                    wait_impl(hctx, self.queues[slot])?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Host-side drain of every queue the plan drives: blocks until all
+    /// started operations completed. The one host wait a KT timed region
+    /// performs (at its very end); immediate on quiet queues.
+    pub fn drain(&self, hctx: &mut HostCtx<World>) -> Result<(), StError> {
+        for &qid in &self.queues {
+            drain_impl(hctx, qid)?;
+        }
+        Ok(())
+    }
+}
+
+/// Convenience guard: deferred operations do not allow wildcards
+/// (§III-D). [`CommPlanBuilder::recv_deferred`] validates through this
+/// eagerly; callers that accept user-provided selectors should too.
+pub fn validate_selectors(src: SrcSel, tag: TagSel) -> Result<(), StError> {
+    if src == SrcSel::Any || tag == TagSel::Any {
+        return Err(StError::WildcardUnsupported);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Deprecated v1 shims (raw usize queue ids) — one-PR migration window
+// ---------------------------------------------------------------------
+
+/// Create an `MPIX_Queue` bound to `stream` (local operation, §III-A).
+///
+/// # Panics
+///
+/// Panics when the node's NIC counter pool (`cost.nic_counter_limit`)
+/// is exhausted — the v1 signature has no error channel. Use
+/// [`Queue::create`] to handle [`StError::CountersExhausted`] instead.
+#[deprecated(note = "stx v2: use stx::Queue::create (typed handle, leak-free error paths)")]
+pub fn create_queue(
+    hctx: &mut HostCtx<World>,
+    rank: usize,
+    stream: StreamId,
+    flavor: MemOpFlavor,
+) -> usize {
+    create_queue_impl(hctx, rank, stream, flavor).expect("NIC counter pool exhausted")
+}
+
+/// Release an `MPIX_Queue`'s internal resources.
+#[deprecated(note = "stx v2: use stx::Queue::free")]
+pub fn free_queue(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
+    free_queue_impl(hctx, queue)
+}
+
+/// `MPIX_Enqueue_send`: deferred tagged send on `queue`.
+#[deprecated(note = "stx v2: use stx::Queue::send (or record the pattern in a stx::CommPlan)")]
+pub fn enqueue_send(
+    hctx: &mut HostCtx<World>,
+    queue: usize,
+    dst: usize,
+    src: BufSlice,
+    tag: i32,
+    comm: u16,
+) -> Result<usize, StError> {
+    send_impl(hctx, queue, dst, src, tag, comm)
+}
+
+/// `MPIX_Enqueue_recv`: deferred tagged receive on `queue`.
+#[deprecated(note = "stx v2: use stx::Queue::recv (or record the pattern in a stx::CommPlan)")]
+pub fn enqueue_recv(
+    hctx: &mut HostCtx<World>,
+    queue: usize,
+    src_rank: usize,
+    dst: BufSlice,
+    tag: i32,
+    comm: u16,
+) -> Result<usize, StError> {
+    recv_impl(hctx, queue, src_rank, dst, tag, comm)
+}
+
+/// `MPIX_Enqueue_start`: append the batched `writeValue64` trigger.
+#[deprecated(note = "stx v2: use stx::Queue::start (or stx::CommPlan::round)")]
+pub fn enqueue_start(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
+    start_impl(hctx, queue)
+}
+
+/// `MPIX_Enqueue_wait`: append a `waitValue64` on the completion counter.
+#[deprecated(note = "stx v2: use stx::Queue::wait (or stx::CommPlan::complete)")]
+pub fn enqueue_wait(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
+    wait_impl(hctx, queue)
+}
+
+/// Kernel-triggered start riding `kernel` at `frac` of its window.
+#[deprecated(note = "stx v2: use stx::Queue::kt_start (or stx::CommPlan::round)")]
+pub fn kt_start(
+    hctx: &mut HostCtx<World>,
+    queue: usize,
+    kernel: &mut KernelCtx,
+    frac: f64,
+) -> Result<(), StError> {
+    kt_start_impl(hctx, queue, kernel, frac)
+}
+
+/// Kernel-triggered wait riding `kernel`'s prologue.
+#[deprecated(note = "stx v2: use stx::Queue::kt_wait (or stx::CommPlan::round)")]
+pub fn kt_wait(
+    hctx: &mut HostCtx<World>,
+    queue: usize,
+    kernel: &mut KernelCtx,
+) -> Result<(), StError> {
+    kt_wait_impl(hctx, queue, kernel)
+}
+
+/// Host-side completion drain of `queue`.
+#[deprecated(note = "stx v2: use stx::Queue::drain (or stx::CommPlan::drain)")]
+pub fn queue_drain(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
+    drain_impl(hctx, queue)
 }
 
 #[cfg(test)]

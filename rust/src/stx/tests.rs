@@ -1,10 +1,13 @@
-//! ST extension tests: the paper's §III semantics.
+//! ST extension tests: the paper's §III semantics through the stx v2
+//! typed API (`Queue` / `CommPlan`), plus NIC resource-pool regression
+//! tests and the v1 deprecated-shim delegation checks.
 
 use super::*;
 use crate::coordinator::{build_world, run_cluster};
 use crate::costmodel::presets;
 use crate::gpu::{host_enqueue, stream_synchronize, KernelPayload, KernelSpec};
-use crate::world::{BufId, Topology, World};
+use crate::sim::SimStats;
+use crate::world::{BufId, Metrics, Topology, World};
 
 fn cost() -> crate::costmodel::CostModel {
     let mut c = presets::frontier_like();
@@ -21,10 +24,14 @@ fn fill_kernel(buf: BufId, val: f32) -> StreamOp {
     })
 }
 
-/// Create a stream + queue for `rank` from inside a host actor.
-fn make_queue(ctx: &mut crate::sim::HostCtx<World>, rank: usize, flavor: MemOpFlavor) -> (StreamId, usize) {
+/// Create a stream + typed queue for `rank` from inside a host actor.
+fn make_queue(
+    ctx: &mut crate::sim::HostCtx<World>,
+    rank: usize,
+    variant: Variant,
+) -> (StreamId, Queue) {
     let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
-    let q = create_queue(ctx, rank, sid, flavor);
+    let q = Queue::create(ctx, rank, sid, variant).expect("counter pool");
     (sid, q)
 }
 
@@ -36,18 +43,18 @@ fn st_send_recv_inter_node_end_to_end() {
     let src = w.bufs.alloc(64);
     let dst = w.bufs.alloc(64);
     let out = run_cluster(w, 1, move |rank, ctx| {
-        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        let (sid, q) = make_queue(ctx, rank, Variant::StreamTriggered);
         if rank == 0 {
             // K1 writes the data that the ST send must pick up.
             host_enqueue(ctx, sid, fill_kernel(src, 3.25));
-            enqueue_send(ctx, q, 1, BufSlice::whole(src, 64), 11, crate::mpi::COMM_WORLD).unwrap();
-            enqueue_start(ctx, q).unwrap();
-            enqueue_wait(ctx, q).unwrap();
+            q.send(ctx, 1, BufSlice::whole(src, 64), 11, crate::mpi::COMM_WORLD).unwrap();
+            q.start(ctx).unwrap();
+            q.wait(ctx).unwrap();
             stream_synchronize(ctx, sid);
         } else {
-            enqueue_recv(ctx, q, 0, BufSlice::whole(dst, 64), 11, crate::mpi::COMM_WORLD).unwrap();
-            enqueue_start(ctx, q).unwrap();
-            enqueue_wait(ctx, q).unwrap();
+            q.recv(ctx, 0, BufSlice::whole(dst, 64), 11, crate::mpi::COMM_WORLD).unwrap();
+            q.start(ctx).unwrap();
+            q.wait(ctx).unwrap();
             // K2 consumes the received data, in stream order after the wait.
             host_enqueue(
                 ctx,
@@ -63,7 +70,7 @@ fn st_send_recv_inter_node_end_to_end() {
             );
             stream_synchronize(ctx, sid);
         }
-        free_queue(ctx, q).unwrap();
+        q.free(ctx).unwrap();
     })
     .unwrap();
     assert_eq!(out.world.metrics.dwq_triggered, 1, "send offloaded to NIC DWQ");
@@ -80,21 +87,21 @@ fn batched_start_triggers_all_enqueued_ops() {
     let dsts2 = dsts.clone();
     let tags = [123, 126, 125, 124];
     let out = run_cluster(w, 1, move |rank, ctx| {
-        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        let (sid, q) = make_queue(ctx, rank, Variant::StreamTriggered);
         if rank == 0 {
             for (i, &b) in srcs2.iter().enumerate() {
-                enqueue_send(ctx, q, 1, BufSlice::whole(b, 32), tags[i], crate::mpi::COMM_WORLD_DUP)
+                q.send(ctx, 1, BufSlice::whole(b, 32), tags[i], crate::mpi::COMM_WORLD_DUP)
                     .unwrap();
             }
-            enqueue_start(ctx, q).unwrap(); // single start for all four
-            enqueue_wait(ctx, q).unwrap();
+            q.start(ctx).unwrap(); // single start for all four
+            q.wait(ctx).unwrap();
         } else {
             for (i, &b) in dsts2.iter().enumerate() {
-                enqueue_recv(ctx, q, 0, BufSlice::whole(b, 32), tags[i], crate::mpi::COMM_WORLD_DUP)
+                q.recv(ctx, 0, BufSlice::whole(b, 32), tags[i], crate::mpi::COMM_WORLD_DUP)
                     .unwrap();
             }
-            enqueue_start(ctx, q).unwrap();
-            enqueue_wait(ctx, q).unwrap();
+            q.start(ctx).unwrap();
+            q.wait(ctx).unwrap();
         }
         stream_synchronize(ctx, sid);
         if rank == 1 {
@@ -105,7 +112,7 @@ fn batched_start_triggers_all_enqueued_ops() {
                 }
             });
         }
-        free_queue(ctx, q).unwrap();
+        q.free(ctx).unwrap();
     })
     .unwrap();
     assert_eq!(out.world.metrics.dwq_triggered, 4);
@@ -122,24 +129,24 @@ fn deferred_send_sees_kernel_writes() {
     let src = w.bufs.alloc_init(vec![-1.0; 16]);
     let dst = w.bufs.alloc(16);
     run_cluster(w, 1, move |rank, ctx| {
-        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        let (sid, q) = make_queue(ctx, rank, Variant::StreamTriggered);
         if rank == 0 {
             // Enqueue the send FIRST, kernel writes after host-enqueue but
             // before the start in stream order.
-            enqueue_send(ctx, q, 1, BufSlice::whole(src, 16), 1, crate::mpi::COMM_WORLD).unwrap();
+            q.send(ctx, 1, BufSlice::whole(src, 16), 1, crate::mpi::COMM_WORLD).unwrap();
             host_enqueue(ctx, sid, fill_kernel(src, 9.5));
-            enqueue_start(ctx, q).unwrap();
-            enqueue_wait(ctx, q).unwrap();
+            q.start(ctx).unwrap();
+            q.wait(ctx).unwrap();
         } else {
-            enqueue_recv(ctx, q, 0, BufSlice::whole(dst, 16), 1, crate::mpi::COMM_WORLD).unwrap();
-            enqueue_start(ctx, q).unwrap();
-            enqueue_wait(ctx, q).unwrap();
+            q.recv(ctx, 0, BufSlice::whole(dst, 16), 1, crate::mpi::COMM_WORLD).unwrap();
+            q.start(ctx).unwrap();
+            q.wait(ctx).unwrap();
         }
         stream_synchronize(ctx, sid);
         if rank == 1 {
             ctx.with(move |w, _| assert_eq!(w.bufs.get(dst), &[9.5; 16]));
         }
-        free_queue(ctx, q).unwrap();
+        q.free(ctx).unwrap();
     })
     .unwrap();
 }
@@ -151,19 +158,19 @@ fn intra_node_st_uses_progress_thread() {
     let src = w.bufs.alloc_init(vec![6.0; 32]);
     let dst = w.bufs.alloc(32);
     let out = run_cluster(w, 1, move |rank, ctx| {
-        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        let (sid, q) = make_queue(ctx, rank, Variant::StreamTriggered);
         if rank == 0 {
-            enqueue_send(ctx, q, 1, BufSlice::whole(src, 32), 2, crate::mpi::COMM_WORLD).unwrap();
+            q.send(ctx, 1, BufSlice::whole(src, 32), 2, crate::mpi::COMM_WORLD).unwrap();
         } else {
-            enqueue_recv(ctx, q, 0, BufSlice::whole(dst, 32), 2, crate::mpi::COMM_WORLD).unwrap();
+            q.recv(ctx, 0, BufSlice::whole(dst, 32), 2, crate::mpi::COMM_WORLD).unwrap();
         }
-        enqueue_start(ctx, q).unwrap();
-        enqueue_wait(ctx, q).unwrap();
+        q.start(ctx).unwrap();
+        q.wait(ctx).unwrap();
         stream_synchronize(ctx, sid);
         if rank == 1 {
             ctx.with(move |w, _| assert_eq!(w.bufs.get(dst), &[6.0; 32]));
         }
-        free_queue(ctx, q).unwrap();
+        q.free(ctx).unwrap();
     })
     .unwrap();
     assert_eq!(out.world.metrics.dwq_triggered, 0, "no NIC offload intra-node");
@@ -172,10 +179,11 @@ fn intra_node_st_uses_progress_thread() {
         "both the emulated send and recv go through the progress thread"
     );
     assert_eq!(out.world.metrics.intra_sends, 1);
+    assert_eq!(out.world.metrics.dwq_peak, 0, "intra-node ops take no DWQ slot");
 }
 
 /// The wait op stalls the *stream*: a kernel enqueued after
-/// `enqueue_wait` must not run before the data has landed, but the host
+/// `Queue::wait` must not run before the data has landed, but the host
 /// returns immediately (non-blocking semantics, §III-B2).
 #[test]
 fn enqueue_wait_is_host_asynchronous() {
@@ -185,26 +193,24 @@ fn enqueue_wait_is_host_asynchronous() {
     let host_return_time = std::sync::Arc::new(std::sync::Mutex::new(0u64));
     let hrt = host_return_time.clone();
     let out = run_cluster(w, 1, move |rank, ctx| {
-        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        let (sid, q) = make_queue(ctx, rank, Variant::StreamTriggered);
         if rank == 0 {
             // Rank 0 delays its send by doing host work first.
             ctx.advance(300_000);
-            enqueue_send(ctx, q, 1, BufSlice::whole(src, 8), 3, crate::mpi::COMM_WORLD).unwrap();
-            enqueue_start(ctx, q).unwrap();
-            enqueue_wait(ctx, q).unwrap();
+            q.send(ctx, 1, BufSlice::whole(src, 8), 3, crate::mpi::COMM_WORLD).unwrap();
+            q.start(ctx).unwrap();
+            q.wait(ctx).unwrap();
             stream_synchronize(ctx, sid);
         } else {
-            enqueue_recv(ctx, q, 0, BufSlice::whole(dst, 8), 3, crate::mpi::COMM_WORLD).unwrap();
-            enqueue_start(ctx, q).unwrap();
-            enqueue_wait(ctx, q).unwrap();
+            q.recv(ctx, 0, BufSlice::whole(dst, 8), 3, crate::mpi::COMM_WORLD).unwrap();
+            q.start(ctx).unwrap();
+            q.wait(ctx).unwrap();
             // All four calls return without blocking on the (still
             // far-away) sender:
             *hrt.lock().unwrap() = ctx.now();
             stream_synchronize(ctx, sid); // ... this one blocks.
-            free_queue(ctx, q).unwrap();
-            return;
         }
-        free_queue(ctx, q).unwrap();
+        q.free(ctx).unwrap();
     })
     .unwrap();
     let t = *host_return_time.lock().unwrap();
@@ -213,37 +219,6 @@ fn enqueue_wait_is_host_asynchronous() {
         "enqueue calls must return immediately (host returned at {t})"
     );
     assert!(out.rank_finish[1] > 300_000, "but the stream finished after the send");
-}
-
-#[test]
-fn free_busy_queue_is_an_error() {
-    let mut w = build_world(cost(), Topology::new(2, 1));
-    let src = w.bufs.alloc_init(vec![1.0; 8]);
-    let dst = w.bufs.alloc(8);
-    run_cluster(w, 1, move |rank, ctx| {
-        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
-        if rank == 0 {
-            enqueue_send(ctx, q, 1, BufSlice::whole(src, 8), 1, crate::mpi::COMM_WORLD).unwrap();
-            enqueue_start(ctx, q).unwrap();
-            // Freeing before completion must fail with QueueBusy.
-            match free_queue(ctx, q) {
-                Err(StError::QueueBusy(n)) => assert_eq!(n, 1),
-                other => panic!("expected QueueBusy, got {other:?}"),
-            }
-            enqueue_wait(ctx, q).unwrap();
-            stream_synchronize(ctx, sid);
-            free_queue(ctx, q).unwrap();
-            // Double-free reports QueueFreed.
-            assert_eq!(free_queue(ctx, q), Err(StError::QueueFreed(q)));
-        } else {
-            enqueue_recv(ctx, q, 0, BufSlice::whole(dst, 8), 1, crate::mpi::COMM_WORLD).unwrap();
-            enqueue_start(ctx, q).unwrap();
-            enqueue_wait(ctx, q).unwrap();
-            stream_synchronize(ctx, sid);
-            free_queue(ctx, q).unwrap();
-        }
-    })
-    .unwrap();
 }
 
 #[test]
@@ -259,7 +234,7 @@ fn wildcards_rejected() {
     assert!(validate_selectors(SrcSel::Rank(0), TagSel::Tag(1)).is_ok());
 }
 
-/// §III-D: MPIX_Enqueue_send interoperates with standard MPI_Irecv.
+/// §III-D: a deferred send interoperates with standard MPI_Irecv.
 #[test]
 fn st_send_matches_standard_irecv() {
     let mut w = build_world(cost(), Topology::new(2, 1));
@@ -267,12 +242,12 @@ fn st_send_matches_standard_irecv() {
     let dst = w.bufs.alloc(16);
     run_cluster(w, 1, move |rank, ctx| {
         if rank == 0 {
-            let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
-            enqueue_send(ctx, q, 1, BufSlice::whole(src, 16), 8, crate::mpi::COMM_WORLD).unwrap();
-            enqueue_start(ctx, q).unwrap();
-            enqueue_wait(ctx, q).unwrap();
+            let (sid, q) = make_queue(ctx, rank, Variant::StreamTriggered);
+            q.send(ctx, 1, BufSlice::whole(src, 16), 8, crate::mpi::COMM_WORLD).unwrap();
+            q.start(ctx).unwrap();
+            q.wait(ctx).unwrap();
             stream_synchronize(ctx, sid);
-            free_queue(ctx, q).unwrap();
+            q.free(ctx).unwrap();
         } else {
             // Plain MPI_Irecv + MPI_Wait on the receiving side.
             let req = crate::mpi::irecv(
@@ -297,20 +272,18 @@ fn host_wait_on_st_request() {
     let src = w.bufs.alloc_init(vec![2.0; 8]);
     let dst = w.bufs.alloc(8);
     run_cluster(w, 1, move |rank, ctx| {
-        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        let (_sid, q) = make_queue(ctx, rank, Variant::StreamTriggered);
         if rank == 0 {
-            let req =
-                enqueue_send(ctx, q, 1, BufSlice::whole(src, 8), 4, crate::mpi::COMM_WORLD).unwrap();
-            enqueue_start(ctx, q).unwrap();
+            let req = q.send(ctx, 1, BufSlice::whole(src, 8), 4, crate::mpi::COMM_WORLD).unwrap();
+            q.start(ctx).unwrap();
             crate::mpi::wait(ctx, req); // host blocks until the ST send completes
         } else {
-            let req =
-                enqueue_recv(ctx, q, 0, BufSlice::whole(dst, 8), 4, crate::mpi::COMM_WORLD).unwrap();
-            enqueue_start(ctx, q).unwrap();
+            let req = q.recv(ctx, 0, BufSlice::whole(dst, 8), 4, crate::mpi::COMM_WORLD).unwrap();
+            q.start(ctx).unwrap();
             crate::mpi::wait(ctx, req);
             ctx.with(move |w, _| assert_eq!(w.bufs.get(dst), &[2.0; 8]));
         }
-        let _ = sid;
+        q.free(ctx).unwrap();
     })
     .unwrap();
 }
@@ -325,19 +298,19 @@ fn multiple_start_epochs() {
     let d1 = w.bufs.alloc(8);
     let d2 = w.bufs.alloc(8);
     run_cluster(w, 1, move |rank, ctx| {
-        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        let (sid, q) = make_queue(ctx, rank, Variant::StreamTriggered);
         if rank == 0 {
-            enqueue_send(ctx, q, 1, BufSlice::whole(s1, 8), 1, crate::mpi::COMM_WORLD).unwrap();
-            enqueue_start(ctx, q).unwrap(); // T1
-            enqueue_send(ctx, q, 1, BufSlice::whole(s2, 8), 2, crate::mpi::COMM_WORLD).unwrap();
-            enqueue_start(ctx, q).unwrap(); // T2
-            enqueue_wait(ctx, q).unwrap(); // W: waits for both epochs
+            q.send(ctx, 1, BufSlice::whole(s1, 8), 1, crate::mpi::COMM_WORLD).unwrap();
+            q.start(ctx).unwrap(); // T1
+            q.send(ctx, 1, BufSlice::whole(s2, 8), 2, crate::mpi::COMM_WORLD).unwrap();
+            q.start(ctx).unwrap(); // T2
+            q.wait(ctx).unwrap(); // W: waits for both epochs
         } else {
-            enqueue_recv(ctx, q, 0, BufSlice::whole(d1, 8), 1, crate::mpi::COMM_WORLD).unwrap();
-            enqueue_start(ctx, q).unwrap();
-            enqueue_recv(ctx, q, 0, BufSlice::whole(d2, 8), 2, crate::mpi::COMM_WORLD).unwrap();
-            enqueue_start(ctx, q).unwrap();
-            enqueue_wait(ctx, q).unwrap();
+            q.recv(ctx, 0, BufSlice::whole(d1, 8), 1, crate::mpi::COMM_WORLD).unwrap();
+            q.start(ctx).unwrap();
+            q.recv(ctx, 0, BufSlice::whole(d2, 8), 2, crate::mpi::COMM_WORLD).unwrap();
+            q.start(ctx).unwrap();
+            q.wait(ctx).unwrap();
         }
         stream_synchronize(ctx, sid);
         if rank == 1 {
@@ -346,7 +319,7 @@ fn multiple_start_epochs() {
                 assert_eq!(w.bufs.get(d2), &[2.0; 8]);
             });
         }
-        free_queue(ctx, q).unwrap();
+        q.free(ctx).unwrap();
     })
     .unwrap();
 }
@@ -355,36 +328,34 @@ fn multiple_start_epochs() {
 /// identical workload (the Fig 12 mechanism).
 #[test]
 fn shader_flavor_is_faster() {
-    fn run_flavor(flavor: MemOpFlavor) -> u64 {
+    fn run_variant(variant: Variant) -> u64 {
         let mut w = build_world(cost(), Topology::new(2, 1));
         let src = w.bufs.alloc_init(vec![1.0; 64]);
         let dst = w.bufs.alloc(64);
         let out = run_cluster(w, 1, move |rank, ctx| {
-            let (sid, q) = make_queue(ctx, rank, flavor);
+            let (sid, q) = make_queue(ctx, rank, variant);
             for e in 0..4 {
                 if rank == 0 {
-                    enqueue_send(ctx, q, 1, BufSlice::whole(src, 64), e, crate::mpi::COMM_WORLD)
-                        .unwrap();
+                    q.send(ctx, 1, BufSlice::whole(src, 64), e, crate::mpi::COMM_WORLD).unwrap();
                 } else {
-                    enqueue_recv(ctx, q, 0, BufSlice::whole(dst, 64), e, crate::mpi::COMM_WORLD)
-                        .unwrap();
+                    q.recv(ctx, 0, BufSlice::whole(dst, 64), e, crate::mpi::COMM_WORLD).unwrap();
                 }
-                enqueue_start(ctx, q).unwrap();
-                enqueue_wait(ctx, q).unwrap();
+                q.start(ctx).unwrap();
+                q.wait(ctx).unwrap();
             }
             stream_synchronize(ctx, sid);
-            free_queue(ctx, q).unwrap();
+            q.free(ctx).unwrap();
         })
         .unwrap();
         out.makespan
     }
-    let hip = run_flavor(MemOpFlavor::Hip);
-    let shader = run_flavor(MemOpFlavor::Shader);
+    let hip = run_variant(Variant::StreamTriggered);
+    let shader = run_variant(Variant::StreamTriggeredShader);
     assert!(shader < hip, "shader {shader} must beat hip {hip}");
 }
 
 // ---------------------------------------------------------------------
-// Kernel-triggered (KT) wrappers
+// Kernel-triggered (KT) hooks
 // ---------------------------------------------------------------------
 
 /// The KT core scenario: the pack kernel itself fires the trigger
@@ -396,14 +367,14 @@ fn kt_send_recv_inter_node_end_to_end() {
     let src = w.bufs.alloc(64);
     let dst = w.bufs.alloc(64);
     let out = run_cluster(w, 1, move |rank, ctx| {
-        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        let (sid, q) = make_queue(ctx, rank, Variant::StreamTriggered);
         if rank == 0 {
             // The deferred send is enqueued first; the pack kernel that
             // produces the data also releases it (stream-ordering: data
             // commits at body start, trigger fires later in the window).
-            enqueue_send(ctx, q, 1, BufSlice::whole(src, 64), 11, crate::mpi::COMM_WORLD).unwrap();
+            q.send(ctx, 1, BufSlice::whole(src, 64), 11, crate::mpi::COMM_WORLD).unwrap();
             let mut kt = gpu::KernelCtx::new();
-            kt_start(ctx, q, &mut kt, KT_TRIGGER_FRAC).unwrap();
+            q.kt_start(ctx, &mut kt, KT_TRIGGER_FRAC).unwrap();
             host_enqueue(
                 ctx,
                 sid,
@@ -421,7 +392,7 @@ fn kt_send_recv_inter_node_end_to_end() {
             );
             // A trailing kernel's prologue waits out the completion.
             let mut tail = gpu::KernelCtx::new();
-            kt_wait(ctx, q, &mut tail).unwrap();
+            q.kt_wait(ctx, &mut tail).unwrap();
             host_enqueue(
                 ctx,
                 sid,
@@ -437,13 +408,13 @@ fn kt_send_recv_inter_node_end_to_end() {
             );
             stream_synchronize(ctx, sid);
         } else {
-            enqueue_recv(ctx, q, 0, BufSlice::whole(dst, 64), 11, crate::mpi::COMM_WORLD).unwrap();
-            enqueue_start(ctx, q).unwrap();
-            enqueue_wait(ctx, q).unwrap();
+            q.recv(ctx, 0, BufSlice::whole(dst, 64), 11, crate::mpi::COMM_WORLD).unwrap();
+            q.start(ctx).unwrap();
+            q.wait(ctx).unwrap();
             stream_synchronize(ctx, sid);
             ctx.with(move |w, _| assert_eq!(w.bufs.get(dst), &[3.25; 64], "KT payload"));
         }
-        free_queue(ctx, q).unwrap();
+        q.free(ctx).unwrap();
     })
     .unwrap();
     assert_eq!(out.world.metrics.dwq_triggered, 1, "send offloaded to NIC DWQ");
@@ -464,15 +435,15 @@ fn st_and_kt_starts_interoperate_on_one_queue() {
     let d1 = w.bufs.alloc(8);
     let d2 = w.bufs.alloc(8);
     run_cluster(w, 1, move |rank, ctx| {
-        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        let (sid, q) = make_queue(ctx, rank, Variant::StreamTriggered);
         if rank == 0 {
             // Epoch 1: classic ST start.
-            enqueue_send(ctx, q, 1, BufSlice::whole(s1, 8), 1, crate::mpi::COMM_WORLD).unwrap();
-            enqueue_start(ctx, q).unwrap();
+            q.send(ctx, 1, BufSlice::whole(s1, 8), 1, crate::mpi::COMM_WORLD).unwrap();
+            q.start(ctx).unwrap();
             // Epoch 2: KT start riding a kernel.
-            enqueue_send(ctx, q, 1, BufSlice::whole(s2, 8), 2, crate::mpi::COMM_WORLD).unwrap();
+            q.send(ctx, 1, BufSlice::whole(s2, 8), 2, crate::mpi::COMM_WORLD).unwrap();
             let mut kt = gpu::KernelCtx::new();
-            kt_start(ctx, q, &mut kt, 1.0).unwrap();
+            q.kt_start(ctx, &mut kt, 1.0).unwrap();
             host_enqueue(
                 ctx,
                 sid,
@@ -486,37 +457,37 @@ fn st_and_kt_starts_interoperate_on_one_queue() {
                     kt,
                 ),
             );
-            enqueue_wait(ctx, q).unwrap();
+            q.wait(ctx).unwrap();
             stream_synchronize(ctx, sid);
         } else {
-            enqueue_recv(ctx, q, 0, BufSlice::whole(d1, 8), 1, crate::mpi::COMM_WORLD).unwrap();
-            enqueue_recv(ctx, q, 0, BufSlice::whole(d2, 8), 2, crate::mpi::COMM_WORLD).unwrap();
-            enqueue_start(ctx, q).unwrap();
-            enqueue_wait(ctx, q).unwrap();
+            q.recv(ctx, 0, BufSlice::whole(d1, 8), 1, crate::mpi::COMM_WORLD).unwrap();
+            q.recv(ctx, 0, BufSlice::whole(d2, 8), 2, crate::mpi::COMM_WORLD).unwrap();
+            q.start(ctx).unwrap();
+            q.wait(ctx).unwrap();
             stream_synchronize(ctx, sid);
             ctx.with(move |w, _| {
                 assert_eq!(w.bufs.get(d1), &[1.5; 8], "ST epoch");
                 assert_eq!(w.bufs.get(d2), &[2.5; 8], "KT epoch");
             });
         }
-        free_queue(ctx, q).unwrap();
+        q.free(ctx).unwrap();
     })
     .unwrap();
 }
 
-/// `queue_drain` blocks the host until every started op completed, and
-/// returns immediately on a quiet queue; freed queues are an error.
+/// `Queue::drain` blocks the host until every started op completed, and
+/// returns immediately on a quiet queue.
 #[test]
 fn queue_drain_waits_out_kt_sends() {
     let mut w = build_world(cost(), Topology::new(2, 1));
     let src = w.bufs.alloc_init(vec![8.0; 16]);
     let dst = w.bufs.alloc(16);
     run_cluster(w, 1, move |rank, ctx| {
-        let (sid, q) = make_queue(ctx, rank, MemOpFlavor::Hip);
+        let (sid, q) = make_queue(ctx, rank, Variant::StreamTriggered);
         if rank == 0 {
-            enqueue_send(ctx, q, 1, BufSlice::whole(src, 16), 5, crate::mpi::COMM_WORLD).unwrap();
+            q.send(ctx, 1, BufSlice::whole(src, 16), 5, crate::mpi::COMM_WORLD).unwrap();
             let mut kt = gpu::KernelCtx::new();
-            kt_start(ctx, q, &mut kt, KT_TRIGGER_FRAC).unwrap();
+            q.kt_start(ctx, &mut kt, KT_TRIGGER_FRAC).unwrap();
             host_enqueue(
                 ctx,
                 sid,
@@ -530,20 +501,395 @@ fn queue_drain_waits_out_kt_sends() {
                     kt,
                 ),
             );
-            // No enqueue_wait, no tail kernel: the host drain is the only
-            // completion wait — free_queue must then succeed.
-            queue_drain(ctx, q).unwrap();
-            queue_drain(ctx, q).unwrap(); // idempotent on a quiet queue
+            // No stream wait, no tail kernel: the host drain is the only
+            // completion wait — Queue::free must then succeed.
+            q.drain(ctx).unwrap();
+            q.drain(ctx).unwrap(); // idempotent on a quiet queue
             stream_synchronize(ctx, sid);
+            assert_eq!(q.stats(ctx).outstanding, 0);
         } else {
-            enqueue_recv(ctx, q, 0, BufSlice::whole(dst, 16), 5, crate::mpi::COMM_WORLD).unwrap();
-            enqueue_start(ctx, q).unwrap();
-            enqueue_wait(ctx, q).unwrap();
+            q.recv(ctx, 0, BufSlice::whole(dst, 16), 5, crate::mpi::COMM_WORLD).unwrap();
+            q.start(ctx).unwrap();
+            q.wait(ctx).unwrap();
             stream_synchronize(ctx, sid);
             ctx.with(move |w, _| assert_eq!(w.bufs.get(dst), &[8.0; 16]));
         }
-        free_queue(ctx, q).unwrap();
-        assert_eq!(queue_drain(ctx, q), Err(StError::QueueFreed(q)));
+        q.free(ctx).unwrap();
+    })
+    .unwrap();
+}
+
+/// Freeing a busy queue fails — counting enqueued-but-unstarted ops as
+/// busy too (they hold armed waiters and DWQ slots) — and hands the
+/// still-live handle back so the caller can start, drain, and retry.
+#[test]
+fn busy_free_returns_the_handle_for_retry() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let src = w.bufs.alloc_init(vec![3.0; 8]);
+    let dst = w.bufs.alloc(8);
+    run_cluster(w, 1, move |rank, ctx| {
+        let (sid, q) = make_queue(ctx, rank, Variant::StreamTriggered);
+        if rank == 0 {
+            // Enqueued but NOT started: the send holds a DWQ slot that
+            // only its trigger can release — free must refuse.
+            q.send(ctx, 1, BufSlice::whole(src, 8), 7, crate::mpi::COMM_WORLD).unwrap();
+            let q = match q.free(ctx) {
+                Err((q, StError::QueueBusy(n))) => {
+                    assert_eq!(n, 1, "the unstarted send counts as incomplete");
+                    q
+                }
+                other => panic!("expected QueueBusy with the handle back, got {other:?}"),
+            };
+            q.start(ctx).unwrap();
+            q.drain(ctx).unwrap();
+            stream_synchronize(ctx, sid);
+            q.free(ctx).expect("drained queue frees cleanly on retry");
+        } else {
+            q.recv(ctx, 0, BufSlice::whole(dst, 8), 7, crate::mpi::COMM_WORLD).unwrap();
+            q.start(ctx).unwrap();
+            q.wait(ctx).unwrap();
+            stream_synchronize(ctx, sid);
+            ctx.with(move |w, _| assert_eq!(w.bufs.get(dst), &[3.0; 8]));
+            q.free(ctx).unwrap();
+        }
+    })
+    .unwrap();
+}
+
+// ---------------------------------------------------------------------
+// NIC resource pools: leak-free error paths, exhaustion, reuse
+// ---------------------------------------------------------------------
+
+/// Counter-pool exhaustion fails `Queue::create` cleanly: the trigger
+/// counter a half-built queue grabbed is returned (repeated failures do
+/// not leak), and freeing a queue makes creation succeed again.
+#[test]
+fn queue_create_counter_exhaustion_is_leak_free() {
+    let mut c = cost();
+    c.nic_counter_limit = 3;
+    let w = build_world(c, Topology::new(1, 1));
+    run_cluster(w, 1, move |rank, ctx| {
+        let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+        let q1 = Queue::create(ctx, rank, sid, Variant::StreamTriggered).unwrap();
+        // Only one counter left: each attempt grabs it as the trigger
+        // counter, fails on the completion counter, and must roll back.
+        for _ in 0..3 {
+            match Queue::create(ctx, rank, sid, Variant::StreamTriggered) {
+                Err(StError::CountersExhausted(node)) => assert_eq!(node, 0),
+                other => panic!("expected CountersExhausted, got {other:?}"),
+            }
+        }
+        ctx.with(|w, _| {
+            assert_eq!(w.nics[0].counters_in_use, 2, "failed creates must not leak counters");
+        });
+        q1.free(ctx).unwrap();
+        ctx.with(|w, _| assert_eq!(w.nics[0].counters_in_use, 0, "free returns both counters"));
+        let q2 = Queue::create(ctx, rank, sid, Variant::StreamTriggered)
+            .expect("capacity reclaimed after free");
+        q2.free(ctx).unwrap();
+    })
+    .unwrap();
+}
+
+/// A full DWQ fails `Queue::send` with `DwqFull` — leak-free: nothing is
+/// armed, no request or slot is held — and once the queue's started ops
+/// drain, the same queue is reusable and the send succeeds.
+#[test]
+fn full_dwq_fails_send_then_queue_is_reusable() {
+    let mut c = cost();
+    c.dwq_slots_per_nic = 1;
+    let mut w = build_world(c, Topology::new(2, 1));
+    let s1 = w.bufs.alloc_init(vec![1.0; 8]);
+    let s2 = w.bufs.alloc_init(vec![2.0; 8]);
+    let d1 = w.bufs.alloc(8);
+    let d2 = w.bufs.alloc(8);
+    let out = run_cluster(w, 1, move |rank, ctx| {
+        if rank == 0 {
+            let (_sid, q) = make_queue(ctx, rank, Variant::StreamTriggered);
+            q.send(ctx, 1, BufSlice::whole(s1, 8), 1, crate::mpi::COMM_WORLD).unwrap();
+            // The single DWQ slot is held by the deferred send above.
+            match q.send(ctx, 1, BufSlice::whole(s2, 8), 2, crate::mpi::COMM_WORLD) {
+                Err(StError::DwqFull(node)) => assert_eq!(node, 0),
+                other => panic!("expected DwqFull, got {other:?}"),
+            }
+            // Trigger + drain the first send; its descriptor leaves the
+            // DWQ, so the exhausted queue becomes reusable.
+            q.start(ctx).unwrap();
+            q.drain(ctx).unwrap();
+            q.send(ctx, 1, BufSlice::whole(s2, 8), 2, crate::mpi::COMM_WORLD)
+                .expect("slot reclaimed after the trigger fired");
+            q.start(ctx).unwrap();
+            q.drain(ctx).unwrap();
+            assert_eq!(q.stats(ctx).dwq_posts, 2, "only armed sends count");
+            q.free(ctx).unwrap();
+        } else {
+            for (buf, tag) in [(d1, 1), (d2, 2)] {
+                let req = crate::mpi::irecv(
+                    ctx,
+                    rank,
+                    SrcSel::Rank(0),
+                    TagSel::Tag(tag),
+                    crate::mpi::COMM_WORLD,
+                    BufSlice::whole(buf, 8),
+                );
+                crate::mpi::wait(ctx, req);
+            }
+            ctx.with(move |w, _| {
+                assert_eq!(w.bufs.get(d1), &[1.0; 8]);
+                assert_eq!(w.bufs.get(d2), &[2.0; 8]);
+            });
+        }
+    })
+    .unwrap();
+    assert_eq!(out.world.metrics.dwq_peak, 1);
+    assert_eq!(out.world.metrics.dwq_slot_waits, 0, "the raw path fails instead of waiting");
+}
+
+// ---------------------------------------------------------------------
+// CommPlan: build-once / start-many
+// ---------------------------------------------------------------------
+
+/// A plan started N times is event-for-event identical to N hand-driven
+/// iterations over the same queue: byte-identical `SimStats` and
+/// metrics. (Both sides build the plan so setup costs align; the hand
+/// side then ignores it and re-enqueues every descriptor per iteration —
+/// exactly what the plan makes unnecessary.)
+#[test]
+fn plan_rounds_match_hand_enqueued_iterations() {
+    fn run(use_plan: bool) -> (SimStats, Metrics) {
+        let mut w = build_world(cost(), Topology::new(2, 1));
+        let sa = w.bufs.alloc_init(vec![1.0; 16]);
+        let sb = w.bufs.alloc_init(vec![2.0; 16]);
+        let da = w.bufs.alloc(16);
+        let db = w.bufs.alloc(16);
+        let out = run_cluster(w, 1, move |rank, ctx| {
+            let (sid, q) = make_queue(ctx, rank, Variant::StreamTriggered);
+            if rank == 0 {
+                let qs = std::slice::from_ref(&q);
+                let mut b = CommPlan::builder(rank, sid, Variant::StreamTriggered, qs);
+                b.send(1, BufSlice::whole(sa, 16), 1, crate::mpi::COMM_WORLD);
+                b.send(1, BufSlice::whole(sb, 16), 2, crate::mpi::COMM_WORLD);
+                let plan = b.build(ctx).unwrap();
+                crate::mpi::barrier(ctx, rank, 2, crate::mpi::COMM_WORLD, 0);
+                for _iter in 0..4 {
+                    if use_plan {
+                        let r = plan.round(ctx, Vec::new()).unwrap();
+                        plan.complete(ctx, r).unwrap();
+                    } else {
+                        q.send(ctx, 1, BufSlice::whole(sa, 16), 1, crate::mpi::COMM_WORLD)
+                            .unwrap();
+                        q.send(ctx, 1, BufSlice::whole(sb, 16), 2, crate::mpi::COMM_WORLD)
+                            .unwrap();
+                        q.start(ctx).unwrap();
+                        q.wait(ctx).unwrap();
+                    }
+                    stream_synchronize(ctx, sid);
+                }
+            } else {
+                crate::mpi::barrier(ctx, rank, 2, crate::mpi::COMM_WORLD, 0);
+                for _iter in 0..4 {
+                    let mut reqs = Vec::new();
+                    for (buf, tag) in [(da, 1), (db, 2)] {
+                        reqs.push(crate::mpi::irecv(
+                            ctx,
+                            rank,
+                            SrcSel::Rank(0),
+                            TagSel::Tag(tag),
+                            crate::mpi::COMM_WORLD,
+                            BufSlice::whole(buf, 16),
+                        ));
+                    }
+                    crate::mpi::waitall(ctx, &reqs);
+                }
+                ctx.with(move |w, _| {
+                    assert_eq!(w.bufs.get(da), &[1.0; 16]);
+                    assert_eq!(w.bufs.get(db), &[2.0; 16]);
+                });
+            }
+            q.free(ctx).unwrap();
+        })
+        .unwrap();
+        (out.stats, out.world.metrics.clone())
+    }
+    let (hand_stats, hand_metrics) = run(false);
+    let (plan_stats, plan_metrics) = run(true);
+    assert_eq!(hand_stats, plan_stats, "plan rounds must replay the hand event structure");
+    assert_eq!(hand_metrics, plan_metrics, "and move identical traffic");
+}
+
+/// Two queues on one rank: a plan stripes its ops round-robin, both
+/// queues trigger independently, and with a single-slot DWQ the second
+/// queue's arm must wait for the first queue's trigger — the
+/// `dwq_slot_waits` contention signal, with correct payloads throughout.
+#[test]
+fn multi_queue_plan_contends_for_dwq_slots() {
+    let mut c = cost();
+    c.dwq_slots_per_nic = 1;
+    let mut w = build_world(c, Topology::new(2, 1));
+    let sa = w.bufs.alloc_init(vec![7.0; 16]);
+    let sb = w.bufs.alloc_init(vec![8.0; 16]);
+    let da = w.bufs.alloc(16);
+    let db = w.bufs.alloc(16);
+    let out = run_cluster(w, 1, move |rank, ctx| {
+        if rank == 0 {
+            let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+            let queues: Vec<Queue> = (0..2)
+                .map(|_| Queue::create(ctx, rank, sid, Variant::StreamTriggered).unwrap())
+                .collect();
+            let mut b = CommPlan::builder(rank, sid, Variant::StreamTriggered, &queues);
+            b.send(1, BufSlice::whole(sa, 16), 1, crate::mpi::COMM_WORLD);
+            b.send(1, BufSlice::whole(sb, 16), 2, crate::mpi::COMM_WORLD);
+            let plan = b.build(ctx).unwrap();
+            for _iter in 0..2 {
+                let r = plan.round(ctx, Vec::new()).unwrap();
+                plan.complete(ctx, r).unwrap();
+            }
+            plan.drain(ctx).unwrap();
+            stream_synchronize(ctx, sid);
+            let waits: u64 = queues.iter().map(|q| q.stats(ctx).dwq_slot_waits).sum();
+            assert!(waits > 0, "a single-slot DWQ must stall the second queue");
+            for q in queues {
+                q.free(ctx).unwrap();
+            }
+        } else {
+            for _iter in 0..2 {
+                let mut reqs = Vec::new();
+                for (buf, tag) in [(da, 1), (db, 2)] {
+                    reqs.push(crate::mpi::irecv(
+                        ctx,
+                        rank,
+                        SrcSel::Rank(0),
+                        TagSel::Tag(tag),
+                        crate::mpi::COMM_WORLD,
+                        BufSlice::whole(buf, 16),
+                    ));
+                }
+                crate::mpi::waitall(ctx, &reqs);
+            }
+            ctx.with(move |w, _| {
+                assert_eq!(w.bufs.get(da), &[7.0; 16]);
+                assert_eq!(w.bufs.get(db), &[8.0; 16]);
+            });
+        }
+    })
+    .unwrap();
+    assert!(out.world.metrics.dwq_slot_waits > 0);
+    assert_eq!(out.world.metrics.dwq_peak, 1, "occupancy can never exceed the slot count");
+}
+
+/// The same plan object drives the KT protocol: hooks ride a synthesized
+/// progress kernel when a round has no producer kernels, and `drain` is
+/// the region's one host-side wait.
+#[test]
+fn kt_plan_round_end_to_end() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let src = w.bufs.alloc_init(vec![4.0; 16]);
+    let dst = w.bufs.alloc(16);
+    let out = run_cluster(w, 1, move |rank, ctx| {
+        if rank == 0 {
+            let (sid, q) = make_queue(ctx, rank, Variant::KernelTriggered);
+            let qs = std::slice::from_ref(&q);
+            let mut b = CommPlan::builder(rank, sid, Variant::KernelTriggered, qs);
+            b.send(1, BufSlice::whole(src, 16), 3, crate::mpi::COMM_WORLD);
+            let plan = b.build(ctx).unwrap();
+            for _iter in 0..2 {
+                let r = plan.round(ctx, Vec::new()).unwrap();
+                plan.complete(ctx, r).unwrap(); // no-op under KT
+            }
+            plan.drain(ctx).unwrap();
+            stream_synchronize(ctx, sid);
+            q.free(ctx).unwrap();
+        } else {
+            for _iter in 0..2 {
+                let req = crate::mpi::irecv(
+                    ctx,
+                    rank,
+                    SrcSel::Rank(0),
+                    TagSel::Tag(3),
+                    crate::mpi::COMM_WORLD,
+                    BufSlice::whole(dst, 16),
+                );
+                crate::mpi::wait(ctx, req);
+            }
+            ctx.with(move |w, _| assert_eq!(w.bufs.get(dst), &[4.0; 16]));
+        }
+    })
+    .unwrap();
+    assert_eq!(out.world.metrics.kt_triggers, 2, "one mid-kernel trigger per round");
+    assert_eq!(out.world.metrics.memops_executed, 0, "KT plans execute no stream memops");
+}
+
+/// Builder validation is eager: wildcards on deferred receives and
+/// missing queues fail at build/record time, not at start time.
+#[test]
+fn plan_builder_validates_eagerly() {
+    let w = build_world(cost(), Topology::new(2, 1));
+    run_cluster(w, 1, move |rank, ctx| {
+        if rank != 0 {
+            return;
+        }
+        let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+        let buf = ctx.with(|w, _| w.bufs.alloc(8));
+        // Wildcard deferred receive: rejected at record time.
+        let q = Queue::create(ctx, rank, sid, Variant::StreamTriggered).unwrap();
+        let qs = std::slice::from_ref(&q);
+        let mut b = CommPlan::builder(rank, sid, Variant::StreamTriggered, qs);
+        let slice = BufSlice::whole(buf, 8);
+        assert_eq!(
+            b.recv_deferred(SrcSel::Any, TagSel::Tag(1), crate::mpi::COMM_WORLD, slice),
+            Err(StError::WildcardUnsupported)
+        );
+        // Deferred ops without any queue: rejected at build time.
+        let mut b2 = CommPlan::builder(rank, sid, Variant::StreamTriggered, &[]);
+        b2.send(1, BufSlice::whole(buf, 8), 1, crate::mpi::COMM_WORLD);
+        match b2.build(ctx) {
+            Err(StError::PlanWithoutQueue) => {}
+            other => panic!("expected PlanWithoutQueue, got {other:?}"),
+        }
+        q.free(ctx).unwrap();
+    })
+    .unwrap();
+}
+
+// ---------------------------------------------------------------------
+// v1 deprecated shims: one-PR migration window
+// ---------------------------------------------------------------------
+
+/// The deprecated free functions delegate to the same internals as the
+/// typed API — including the v1 error semantics (`QueueBusy` on a
+/// premature free, `QueueFreed` on double-free) the old tests pinned.
+#[allow(deprecated)]
+#[test]
+fn v1_shims_delegate_and_keep_error_semantics() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let src = w.bufs.alloc_init(vec![5.5; 8]);
+    let dst = w.bufs.alloc(8);
+    run_cluster(w, 1, move |rank, ctx| {
+        let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+        let q = create_queue(ctx, rank, sid, MemOpFlavor::Hip);
+        if rank == 0 {
+            enqueue_send(ctx, q, 1, BufSlice::whole(src, 8), 1, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap();
+            // Freeing before completion must fail with QueueBusy.
+            match free_queue(ctx, q) {
+                Err(StError::QueueBusy(n)) => assert_eq!(n, 1),
+                other => panic!("expected QueueBusy, got {other:?}"),
+            }
+            enqueue_wait(ctx, q).unwrap();
+            stream_synchronize(ctx, sid);
+            queue_drain(ctx, q).unwrap();
+            free_queue(ctx, q).unwrap();
+            // Double-free reports QueueFreed.
+            assert_eq!(free_queue(ctx, q), Err(StError::QueueFreed(q)));
+            assert_eq!(queue_drain(ctx, q), Err(StError::QueueFreed(q)));
+        } else {
+            enqueue_recv(ctx, q, 0, BufSlice::whole(dst, 8), 1, crate::mpi::COMM_WORLD).unwrap();
+            enqueue_start(ctx, q).unwrap();
+            enqueue_wait(ctx, q).unwrap();
+            stream_synchronize(ctx, sid);
+            ctx.with(move |w, _| assert_eq!(w.bufs.get(dst), &[5.5; 8]));
+            free_queue(ctx, q).unwrap();
+        }
     })
     .unwrap();
 }

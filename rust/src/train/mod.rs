@@ -83,7 +83,12 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
 
     let out = run_cluster(world, cfg.seed, move |rank, ctx| {
         let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
-        let q = crate::stx::create_queue(ctx, rank, sid, flavor);
+        let variant = match flavor {
+            MemOpFlavor::Shader => crate::stx::Variant::StreamTriggeredShader,
+            MemOpFlavor::Hip => crate::stx::Variant::StreamTriggered,
+        };
+        let q = crate::stx::Queue::create(ctx, rank, sid, variant)
+            .expect("NIC counter pool exhausted");
         let (p, g, t, l, tk) = (params2[rank], grads2[rank], tmp2[rank], loss2[rank], toks2[rank]);
         for step in 0..steps {
             // Load this rank's shard of the synthetic corpus.
@@ -107,7 +112,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
             );
             // Stream-triggered gradient allreduce (sum).
             let ws = ctx_world_size(ctx);
-            ring_allreduce_st(ctx, rank, ws, q, sid, g, p_len, t, COMM_WORLD);
+            ring_allreduce_st(ctx, rank, ws, &q, sid, g, p_len, t, COMM_WORLD);
             // Average + SGD apply.
             let world_n = ws as f32;
             host_enqueue(
@@ -144,7 +149,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
                 lz.lock().unwrap()[rank].push(w.bufs.get(l)[0]);
             });
         }
-        crate::stx::free_queue(ctx, q).expect("queue drained");
+        q.free(ctx).expect("queue drained");
     })
     .map_err(|e| anyhow::anyhow!("training run failed: {e}"))?;
 

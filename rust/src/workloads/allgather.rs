@@ -1,0 +1,158 @@
+//! `allgather` workload: the ring's gather phase as a standalone,
+//! sweepable scenario (ROADMAP backlog) — and the demonstration plug-in
+//! for the stx v2 [`crate::stx::CommPlan`] build-once / start-many
+//! shape: each of the n-1 ring steps is one persistent plan (send block
+//! `rank-s` to `next`, deferred-receive block `rank-s-1` from `prev`,
+//! landing in place) built before the timed region and re-armed every
+//! iteration with zero enqueue calls.
+//!
+//! Per iteration: the pack kernel refreshes the rank's own block and
+//! carries step 0's round; steps 1..n-1 ride device progress kernels
+//! (KT) or bare trigger/wait pairs (ST) or per-step isend/waitall
+//! (host). Validation is exact: slot `s` of every rank must hold
+//! `payload(s, 0, j)` after the final iteration.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{build_world, run_cluster};
+use crate::gpu::{stream_synchronize, KernelPayload, KernelSpec};
+use crate::mpi::{SrcSel, TagSel, COMM_WORLD};
+use crate::nic::BufSlice;
+use crate::world::ComputeMode;
+
+use super::scaffold::{check_exact, scenario_run, RankComm, Timers};
+use super::{comm_variant, payload, ScenarioCfg, ScenarioRun, Workload};
+
+pub struct Allgather;
+
+/// Tag base; disjoint from the ring collective's 1000/2000/3000 spaces.
+const AG_TAG: i32 = 4000;
+
+impl Workload for Allgather {
+    fn name(&self) -> &'static str {
+        "allgather"
+    }
+
+    fn description(&self) -> &'static str {
+        "ring allgather (the ring's gather phase), persistent per-step CommPlans"
+    }
+
+    fn variants(&self) -> &'static [&'static str] {
+        &["baseline", "st", "st-shader", "kt"]
+    }
+
+    fn default_elems(&self) -> &'static [usize] {
+        &[256, 4096, 65536]
+    }
+
+    fn configure(&self, cfg: &ScenarioCfg) -> Result<()> {
+        comm_variant("allgather", &cfg.variant)?;
+        if cfg.world_size() < 2 {
+            bail!("allgather needs at least two ranks");
+        }
+        if cfg.elems == 0 {
+            bail!("allgather: blocks must carry at least one element");
+        }
+        if cfg.queues_per_rank == 0 {
+            bail!("allgather: at least one queue per rank");
+        }
+        // Each ring step is one single-send plan; plans rotate over the
+        // queue set, so multi-queue runs need at least as many steps as
+        // queues or the extra queues would sit idle.
+        if cfg.queues_per_rank > 1 && cfg.world_size() - 1 < cfg.queues_per_rank {
+            bail!(
+                "allgather: {} queues per rank need at least {} ranks (one ring step per queue)",
+                cfg.queues_per_rank,
+                cfg.queues_per_rank + 1
+            );
+        }
+        Ok(())
+    }
+
+    fn run(&self, cfg: &ScenarioCfg) -> Result<ScenarioRun> {
+        self.configure(cfg)?;
+        let variant = comm_variant("allgather", &cfg.variant)?;
+        let n = cfg.world_size();
+        let elems = cfg.elems;
+
+        let mut world = build_world(cfg.cost.clone(), cfg.topology());
+        world.compute = ComputeMode::Real;
+        // Per rank: the gathered vector (n blocks); block `rank` is its
+        // own contribution, written by the pack kernel each iteration.
+        let all: Vec<_> = (0..n).map(|_| world.bufs.alloc(n * elems)).collect();
+
+        let times = Timers::new(n);
+        let (iters, qpr) = (cfg.iters, cfg.queues_per_rank);
+        let (all2, times2) = (all.clone(), times.clone());
+        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
+            let comm = RankComm::new(ctx, rank, variant, qpr);
+            let buf = all2[rank];
+            let next = (rank + 1) % n;
+            let prev = (rank + n - 1) % n;
+            // Build-once: one persistent plan per ring step. Step s
+            // relays block (rank - s) onward and lands block
+            // (rank - s - 1) in place.
+            let steps: Vec<_> = (0..n - 1)
+                .map(|s| {
+                    let send_b = (rank + n - s) % n;
+                    let recv_b = (rank + n - s - 1) % n;
+                    let tag = AG_TAG + s as i32;
+                    let mut b = comm.builder();
+                    b.send(next, BufSlice::new(buf, send_b * elems, elems), tag, COMM_WORLD);
+                    b.recv_deferred(
+                        SrcSel::Rank(prev),
+                        TagSel::Tag(tag),
+                        COMM_WORLD,
+                        BufSlice::new(buf, recv_b * elems, elems),
+                    )
+                    .expect("concrete selectors");
+                    b.build(ctx).expect("allgather plan build")
+                })
+                .collect();
+
+            let t0 = ctx.now();
+            for _iter in 0..iters {
+                for (s, plan) in steps.iter().enumerate() {
+                    // Step 0 rides the pack kernel that refreshes this
+                    // rank's own block; later steps need no producer.
+                    let kernels = if s == 0 {
+                        vec![KernelSpec {
+                            name: "ag_pack".into(),
+                            flops: 0,
+                            bytes: 2 * 4 * elems as u64,
+                            payload: KernelPayload::Fn(Box::new(move |w, _| {
+                                let b = w.bufs.get_mut(buf);
+                                for j in 0..elems {
+                                    b[rank * elems + j] = payload(rank, 0, j);
+                                }
+                            })),
+                        }]
+                    } else {
+                        Vec::new()
+                    };
+                    let round = plan.round(ctx, kernels).expect("allgather round");
+                    plan.complete(ctx, round).expect("allgather complete");
+                }
+                stream_synchronize(ctx, comm.sid);
+            }
+            for plan in &steps {
+                comm.drain_if_kt(ctx, plan, "allgather");
+            }
+            times2.record(rank, ctx.now() - t0);
+            comm.finish(ctx, "allgather");
+        })
+        .map_err(|e| anyhow!("allgather run failed: {e}"))?;
+
+        // Reference: block s of every rank == payload(s, 0, j).
+        let pairs = all.iter().flat_map(|b| {
+            let got = out.world.bufs.get(*b);
+            (0..n)
+                .flat_map(move |s| (0..elems).map(move |j| (got[s * elems + j], payload(s, 0, j))))
+        });
+        let validation = check_exact(pairs, |i| {
+            let (r, s, j) = (i / (n * elems), (i / elems) % n, i % elems);
+            format!("allgather rank {r} block {s} elem {j}")
+        });
+        Ok(scenario_run(&out, &times, validation))
+    }
+}

@@ -17,12 +17,13 @@
 //!   rides the reduction kernels themselves, with no per-step stream
 //!   memory ops (arXiv 2306.15773).
 //!
+//! The collectives drive one typed [`crate::stx::Queue`] per rank.
 //! Each of the `iters` repetitions re-initializes the vector (untimed),
 //! barriers so repetitions never overlap across ranks, and times one
 //! allreduce + drain. Validation is exact: element j of every rank must
 //! equal `sum over ranks of payload(rank, 0, j)`.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -31,15 +32,15 @@ use crate::collectives::{
     ring_rs_step,
 };
 use crate::coordinator::{build_world, run_cluster};
-use crate::costmodel::MemOpFlavor;
 use crate::gpu::{self, host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
 use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
 use crate::nic::BufSlice;
 use crate::sim::HostCtx;
-use crate::stx;
+use crate::stx::{Queue, Variant};
 use crate::world::{BufId, ComputeMode, World};
 
-use super::{payload, ScenarioCfg, ScenarioRun, Validation, Workload};
+use super::scaffold::{check_exact, scenario_run, Timers};
+use super::{payload, ScenarioCfg, ScenarioRun, Workload};
 
 pub struct Allreduce;
 
@@ -164,6 +165,9 @@ impl Workload for Allreduce {
         if mode == Mode::RdblSt && !n.is_power_of_two() {
             bail!("allreduce/rdbl-st: world size {n} is not a power of two");
         }
+        if cfg.queues_per_rank != 1 {
+            bail!("allreduce: the ring collectives drive exactly one queue per rank");
+        }
         Ok(())
     }
 
@@ -184,7 +188,7 @@ impl Workload for Allreduce {
         let expect: Vec<f32> =
             (0..len).map(|j| (0..n).map(|r| payload(r, 0, j)).sum()).collect();
 
-        let times: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(vec![0; n]));
+        let times = Timers::new(n);
         let iters = cfg.iters;
         let (data2, tmp2, images2, times2) =
             (data.clone(), tmp.clone(), images.clone(), times.clone());
@@ -192,7 +196,14 @@ impl Workload for Allreduce {
             let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
             let queue = match mode {
                 Mode::HostRing => None,
-                _ => Some(stx::create_queue(ctx, rank, sid, MemOpFlavor::Hip)),
+                Mode::RingKt => Some(
+                    Queue::create(ctx, rank, sid, Variant::KernelTriggered)
+                        .expect("NIC counter pool exhausted"),
+                ),
+                _ => Some(
+                    Queue::create(ctx, rank, sid, Variant::StreamTriggered)
+                        .expect("NIC counter pool exhausted"),
+                ),
             };
             let (d, t) = (data2[rank], tmp2[rank]);
             let mut acc = 0u64;
@@ -206,58 +217,41 @@ impl Workload for Allreduce {
                 });
                 mpi::barrier(ctx, rank, n, COMM_WORLD, rep as u32);
                 let t0 = ctx.now();
-                match mode {
-                    Mode::HostRing => {
+                match (mode, &queue) {
+                    (Mode::HostRing, _) => {
                         ring_allreduce_host(ctx, rank, n, sid, d, len, t, COMM_WORLD)
                     }
-                    Mode::RingSt => {
-                        ring_allreduce_st(ctx, rank, n, queue.unwrap(), sid, d, len, t, COMM_WORLD)
+                    (Mode::RingSt, Some(q)) => {
+                        ring_allreduce_st(ctx, rank, n, q, sid, d, len, t, COMM_WORLD)
                     }
-                    Mode::RingKt => {
-                        ring_allreduce_kt(ctx, rank, n, queue.unwrap(), sid, d, len, t, COMM_WORLD)
+                    (Mode::RingKt, Some(q)) => {
+                        ring_allreduce_kt(ctx, rank, n, q, sid, d, len, t, COMM_WORLD)
                     }
-                    Mode::RdblSt => recursive_doubling_allreduce_st(
-                        ctx,
-                        rank,
-                        n,
-                        queue.unwrap(),
-                        sid,
-                        d,
-                        len,
-                        t,
-                        COMM_WORLD,
-                    )
-                    .expect("configure() gates on power-of-two worlds"),
+                    (Mode::RdblSt, Some(q)) => {
+                        recursive_doubling_allreduce_st(
+                            ctx, rank, n, q, sid, d, len, t, COMM_WORLD,
+                        )
+                        .expect("configure() gates on power-of-two worlds")
+                    }
+                    _ => unreachable!("queue exists for every queue-using mode"),
                 }
                 stream_synchronize(ctx, sid);
                 acc += ctx.now() - t0;
             }
             if let Some(q) = queue {
-                stx::free_queue(ctx, q).expect("allreduce queue idle at teardown");
+                q.free(ctx).expect("allreduce queue idle at teardown");
             }
-            times2.lock().unwrap()[rank] = acc;
+            times2.record(rank, acc);
         })
         .map_err(|e| anyhow!("allreduce run failed: {e}"))?;
 
-        let mut validation = Validation::Passed { checked: n * len };
-        'outer: for (r, d) in data.iter().enumerate() {
+        let expect_ref = &expect;
+        let pairs = data.iter().flat_map(|d| {
             let got = out.world.bufs.get(*d);
-            for (j, (&g, &e)) in got.iter().zip(&expect).enumerate() {
-                if g != e {
-                    validation = Validation::Failed {
-                        detail: format!("rank {r} elem {j}: {g} != {e}"),
-                    };
-                    break 'outer;
-                }
-            }
-        }
-
-        let rank_time = times.lock().unwrap().clone();
-        Ok(ScenarioRun {
-            time_ns: rank_time.iter().copied().max().unwrap_or(0),
-            metrics: out.world.metrics.clone(),
-            stats: out.stats,
-            validation,
-        })
+            got.iter().zip(expect_ref).map(|(&g, &e)| (g, e))
+        });
+        let validation =
+            check_exact(pairs, |i| format!("allreduce rank {} elem {}", i / len, i % len));
+        Ok(scenario_run(&out, &times, validation))
     }
 }

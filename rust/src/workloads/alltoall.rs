@@ -3,24 +3,26 @@
 //! iteration, stressing fabric port serialization (n-1 messages leave
 //! and enter every NIC port back-to-back).
 //!
-//! Per iteration: pre-post n-1 receives → pack kernel (writes all
-//! outgoing blocks) → sends (host-synchronized baseline vs
+//! Per iteration: pre-post n-1 receives → pack kernel + one
+//! [`crate::stx::CommPlan`] round (host-synchronized baseline vs
 //! stream-triggered vs kernel-triggered) → local self-block copy kernel
-//! → wait receives → drain. Validation is exact: the block received
-//! from rank `s` must be `payload(s, my_rank, j)`.
+//! → wait receives → drain. The n-1-send pattern is recorded once; with
+//! `queues_per_rank > 1` it stripes over multiple queues contending for
+//! DWQ slots. Validation is exact: the block received from rank `s`
+//! must be `payload(s, my_rank, j)`.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::{build_world, run_cluster};
-use crate::gpu::{self, host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
+use crate::gpu::{host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
 use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
 use crate::nic::BufSlice;
-use crate::stx::{self, Variant};
 use crate::world::ComputeMode;
 
-use super::{comm_variant, payload, ScenarioCfg, ScenarioRun, Validation, Workload};
+use super::scaffold::{check_exact, scenario_run, RankComm, Timers};
+use super::{comm_variant, payload, ScenarioCfg, ScenarioRun, Workload};
 
 pub struct AllToAll;
 
@@ -51,6 +53,9 @@ impl Workload for AllToAll {
         if cfg.elems == 0 {
             bail!("alltoall: blocks must carry at least one element");
         }
+        if cfg.queues_per_rank == 0 {
+            bail!("alltoall: at least one queue per rank");
+        }
         Ok(())
     }
 
@@ -76,35 +81,37 @@ impl Workload for AllToAll {
                 .collect(),
         );
 
-        let times: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(vec![0; n]));
-        let iters = cfg.iters;
+        let times = Timers::new(n);
+        let (iters, qpr) = (cfg.iters, cfg.queues_per_rank);
         let (send2, recv2, images2, times2) =
             (send.clone(), recv.clone(), images.clone(), times.clone());
         let out = run_cluster(world, cfg.seed, move |rank, ctx| {
-            let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
-            let queue = variant
-                .uses_queue()
-                .then(|| stx::create_queue(ctx, rank, sid, variant.flavor()));
+            let comm = RankComm::new(ctx, rank, variant, qpr);
             let (sb, rb) = (send2[rank], recv2[rank]);
-
-            let t0 = ctx.now();
-            for _iter in 0..iters {
-                // 1. Pre-post receives: block s of the recv matrix takes
-                //    rank s's message (src-disambiguated, shared tag).
-                let mut rreqs = Vec::with_capacity(n - 1);
-                for s in 0..n {
-                    if s == rank {
-                        continue;
-                    }
-                    rreqs.push(mpi::irecv(
-                        ctx,
-                        rank,
+            // Build-once: n-1 personalized sends + n-1 posted receives
+            // (src-disambiguated, shared tag).
+            let mut b = comm.builder();
+            for p in 0..n {
+                if p != rank {
+                    b.send(p, BufSlice::new(sb, p * elems, elems), A2A_TAG, COMM_WORLD);
+                }
+            }
+            for s in 0..n {
+                if s != rank {
+                    b.recv(
                         SrcSel::Rank(s),
                         TagSel::Tag(A2A_TAG),
                         COMM_WORLD,
                         BufSlice::new(rb, s * elems, elems),
-                    ));
+                    );
                 }
+            }
+            let cplan = b.build(ctx).expect("alltoall plan build");
+
+            let t0 = ctx.now();
+            for _iter in 0..iters {
+                // 1. Pre-post receives into the recv matrix.
+                let rreqs = cplan.post_recvs(ctx, 0);
                 // 2. Pack kernel: write all n outgoing blocks (the image
                 //    travels by Arc, not by per-iteration clone).
                 let images_k = images2.clone();
@@ -117,78 +124,15 @@ impl Workload for AllToAll {
                         w.bufs.get_mut(sb)[..total].copy_from_slice(&images_k[rank]);
                     })),
                 };
-                // 3. Sends to all peers.
-                match variant {
-                    Variant::Host => {
-                        host_enqueue(ctx, sid, StreamOp::Kernel(pack));
-                        stream_synchronize(ctx, sid);
-                        let mut sreqs = Vec::with_capacity(n - 1);
-                        for p in 0..n {
-                            if p == rank {
-                                continue;
-                            }
-                            sreqs.push(mpi::isend(
-                                ctx,
-                                rank,
-                                p,
-                                BufSlice::new(sb, p * elems, elems),
-                                A2A_TAG,
-                                COMM_WORLD,
-                            ));
-                        }
-                        mpi::waitall(ctx, &sreqs);
-                    }
-                    Variant::KernelTriggered => {
-                        // KT: the previous iteration's send completions
-                        // ride the pack prologue; this iteration's
-                        // trigger fires from inside the pack kernel.
-                        let q = queue.unwrap();
-                        let mut kt = gpu::KernelCtx::new();
-                        stx::kt_wait(ctx, q, &mut kt).expect("alltoall kt_wait");
-                        for p in 0..n {
-                            if p == rank {
-                                continue;
-                            }
-                            stx::enqueue_send(
-                                ctx,
-                                q,
-                                p,
-                                BufSlice::new(sb, p * elems, elems),
-                                A2A_TAG,
-                                COMM_WORLD,
-                            )
-                            .expect("alltoall enqueue_send");
-                        }
-                        stx::kt_start(ctx, q, &mut kt, stx::KT_TRIGGER_FRAC)
-                            .expect("alltoall kt_start");
-                        host_enqueue(ctx, sid, StreamOp::KtKernel(pack, kt));
-                    }
-                    _ => {
-                        host_enqueue(ctx, sid, StreamOp::Kernel(pack));
-                        let q = queue.unwrap();
-                        for p in 0..n {
-                            if p == rank {
-                                continue;
-                            }
-                            stx::enqueue_send(
-                                ctx,
-                                q,
-                                p,
-                                BufSlice::new(sb, p * elems, elems),
-                                A2A_TAG,
-                                COMM_WORLD,
-                            )
-                            .expect("alltoall enqueue_send");
-                        }
-                        stx::enqueue_start(ctx, q).expect("alltoall enqueue_start");
-                        stx::enqueue_wait(ctx, q).expect("alltoall enqueue_wait");
-                    }
-                }
+                // 3. One plan round: sends to all peers under the
+                //    variant protocol, then its completion wait.
+                let round = cplan.round(ctx, vec![pack]).expect("alltoall round");
+                cplan.complete(ctx, round).expect("alltoall complete");
                 // 4. Self block: device-local copy (stream-ordered after
-                //    pack in both variants).
+                //    pack in every variant).
                 host_enqueue(
                     ctx,
-                    sid,
+                    comm.sid,
                     StreamOp::Kernel(KernelSpec {
                         name: "a2a_self".into(),
                         flops: 0,
@@ -200,47 +144,24 @@ impl Workload for AllToAll {
                 );
                 // 5. Wait receives, then drain before buffers are reused.
                 mpi::waitall(ctx, &rreqs);
-                stream_synchronize(ctx, sid);
+                stream_synchronize(ctx, comm.sid);
             }
-            // KT drains its outstanding send completions inside the
-            // timed region (ST already waited via enqueue_wait).
-            if variant == Variant::KernelTriggered {
-                stx::queue_drain(ctx, queue.unwrap()).expect("alltoall queue drain");
-            }
-            let dt = ctx.now() - t0;
-            if let Some(q) = queue {
-                stx::free_queue(ctx, q).expect("alltoall queue idle at teardown");
-            }
-            times2.lock().unwrap()[rank] = dt;
+            comm.drain_if_kt(ctx, &cplan, "alltoall");
+            times2.record(rank, ctx.now() - t0);
+            comm.finish(ctx, "alltoall");
         })
         .map_err(|e| anyhow!("alltoall run failed: {e}"))?;
 
         // Reference: recv block s on rank r == payload(s, r, j).
-        let mut validation = Validation::Passed { checked: n * n * elems };
-        'outer: for (r, rb) in recv.iter().enumerate() {
+        let pairs = recv.iter().enumerate().flat_map(|(r, rb)| {
             let got = out.world.bufs.get(*rb);
-            for s in 0..n {
-                for j in 0..elems {
-                    let expect = payload(s, r, j);
-                    if got[s * elems + j] != expect {
-                        validation = Validation::Failed {
-                            detail: format!(
-                                "rank {r} block {s} elem {j}: {} != {expect}",
-                                got[s * elems + j]
-                            ),
-                        };
-                        break 'outer;
-                    }
-                }
-            }
-        }
-
-        let rank_time = times.lock().unwrap().clone();
-        Ok(ScenarioRun {
-            time_ns: rank_time.iter().copied().max().unwrap_or(0),
-            metrics: out.world.metrics.clone(),
-            stats: out.stats,
-            validation,
-        })
+            (0..n)
+                .flat_map(move |s| (0..elems).map(move |j| (got[s * elems + j], payload(s, r, j))))
+        });
+        let validation = check_exact(pairs, |i| {
+            let (r, s, j) = (i / (n * elems), (i / elems) % n, i % elems);
+            format!("alltoall rank {r} block {s} elem {j}")
+        });
+        Ok(scenario_run(&out, &times, validation))
     }
 }

@@ -1,9 +1,10 @@
 //! Campaign driver: run a cross-product of {workload × variant × message
-//! size × topology × seed} on the parallel sweep executor and emit one
-//! comparative report as JSON + Markdown.
+//! size × topology × queues-per-rank × seed} on the parallel sweep
+//! executor and emit one comparative report as JSON + Markdown.
 //!
 //! Determinism contract: cells are enumerated in a fixed order (workload
-//! registry order → variant order → size order → topology order), every
+//! registry order → variant order → size order → topology order →
+//! queue-count order), every
 //! job draws randomness only from its own `(cell, seed)` config, and the
 //! sweep executor writes results by job index — so the rendered report
 //! is byte-identical across reruns at any `STMPI_SWEEP_THREADS`
@@ -39,11 +40,19 @@ pub struct CampaignSpec {
     pub elems: Vec<usize>,
     /// (nodes, ranks_per_node) grid points.
     pub topos: Vec<(usize, usize)>,
+    /// `stx::Queue`s per rank — the multi-queue contention axis.
+    /// Workloads that drive exactly one queue report q>1 cells as
+    /// skipped.
+    pub queues: Vec<usize>,
     pub seeds: Vec<u64>,
     /// Timed iterations per run.
     pub iters: usize,
     /// Cost-model jitter sigma (timing only; validation is unaffected).
     pub jitter: f64,
+    /// Override `cost.dwq_slots_per_nic` (None = the preset's ample
+    /// default); dialing it down makes multi-queue DWQ contention
+    /// visible in the `dwq waits` column.
+    pub dwq_slots: Option<usize>,
     /// Sweep worker threads; None = `sweep::default_threads()`.
     pub threads: Option<usize>,
 }
@@ -55,9 +64,11 @@ impl Default for CampaignSpec {
             variants: Vec::new(),
             elems: Vec::new(),
             topos: vec![(2, 1), (4, 1)],
+            queues: vec![1],
             seeds: vec![11, 23],
             iters: 3,
             jitter: 0.01,
+            dwq_slots: None,
             threads: None,
         }
     }
@@ -79,9 +90,11 @@ impl CampaignSpec {
             ],
             elems: vec![48],
             topos: vec![(2, 1)],
+            queues: vec![1],
             seeds: vec![5, 9],
             iters: 2,
             jitter: 0.0,
+            dwq_slots: None,
             threads: None,
         }
     }
@@ -95,6 +108,8 @@ pub struct CampaignCell {
     pub elems: usize,
     pub nodes: usize,
     pub ranks_per_node: usize,
+    /// `stx::Queue`s per rank this cell ran with (multi-queue axis).
+    pub queues_per_rank: usize,
     /// avg/min/max over seeds in virtual ms; None when the cell was
     /// skipped as infeasible.
     pub summary: Option<Summary>,
@@ -113,6 +128,12 @@ pub struct CampaignCell {
     pub wire_msgs: u64,
     pub max_ingress_wait_ns: u64,
     pub max_egress_wait_ns: u64,
+    /// DWQ-slot stalls of the first seed's run (multi-queue contention;
+    /// see `Metrics::dwq_slot_waits`).
+    pub dwq_slot_waits: u64,
+    /// Peak concurrent DWQ occupancy of the first seed's run (HTQ
+    /// pressure high-water mark).
+    pub dwq_peak: u64,
     /// Engine events of the first seed's run.
     pub events: u64,
 }
@@ -168,12 +189,13 @@ impl CampaignReport {
             s.push_str("      { ");
             s.push_str(&format!(
                 "\"workload\": \"{}\", \"variant\": \"{}\", \"elems\": {}, \
-                 \"nodes\": {}, \"ranks_per_node\": {}, ",
+                 \"nodes\": {}, \"ranks_per_node\": {}, \"queues_per_rank\": {}, ",
                 json_escape(&c.workload),
                 json_escape(&c.variant),
                 c.elems,
                 c.nodes,
-                c.ranks_per_node
+                c.ranks_per_node,
+                c.queues_per_rank
             ));
             match &c.summary {
                 Some(sm) => s.push_str(&format!(
@@ -190,12 +212,14 @@ impl CampaignReport {
             s.push_str(&format!(
                 "\"validation\": \"{}\", \"bytes_wire\": {}, \"wire_msgs\": {}, \
                  \"max_ingress_wait_ns\": {}, \"max_egress_wait_ns\": {}, \
-                 \"events\": {} }}",
+                 \"dwq_slot_waits\": {}, \"dwq_peak\": {}, \"events\": {} }}",
                 json_escape(&c.validation),
                 c.bytes_wire,
                 c.wire_msgs,
                 c.max_ingress_wait_ns,
                 c.max_egress_wait_ns,
+                c.dwq_slot_waits,
+                c.dwq_peak,
                 c.events
             ));
             s.push_str(if i + 1 == self.cells.len() { "\n" } else { ",\n" });
@@ -211,6 +235,7 @@ impl CampaignReport {
             "variant".to_string(),
             "elems".to_string(),
             "topo".to_string(),
+            "q".to_string(),
             "avg ms".to_string(),
             "min ms".to_string(),
             "max ms".to_string(),
@@ -220,6 +245,8 @@ impl CampaignReport {
             "wire msgs".to_string(),
             "max ingress wait ns".to_string(),
             "max egress wait ns".to_string(),
+            "dwq waits".to_string(),
+            "dwq peak".to_string(),
         ]];
         for c in &self.cells {
             let (avg, min, max) = match &c.summary {
@@ -239,6 +266,7 @@ impl CampaignReport {
                 c.variant.clone(),
                 c.elems.to_string(),
                 c.topo_label(),
+                c.queues_per_rank.to_string(),
                 avg,
                 min,
                 max,
@@ -248,6 +276,8 @@ impl CampaignReport {
                 c.wire_msgs.to_string(),
                 c.max_ingress_wait_ns.to_string(),
                 c.max_egress_wait_ns.to_string(),
+                c.dwq_slot_waits.to_string(),
+                c.dwq_peak.to_string(),
             ]);
         }
         format!(
@@ -277,6 +307,9 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
     if spec.iters == 0 {
         bail!("campaign needs at least one iteration");
     }
+    if spec.queues.is_empty() {
+        bail!("campaign needs at least one queues-per-rank grid point");
+    }
     let catalogue = registry();
     let selected: Vec<&dyn Workload> = if spec.workloads.is_empty() {
         catalogue.iter().map(|w| w.as_ref()).collect()
@@ -297,6 +330,9 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
 
     let mut cost = presets::frontier_like();
     cost.jitter_sigma = spec.jitter;
+    if let Some(slots) = spec.dwq_slots {
+        cost.dwq_slots_per_nic = slots;
+    }
 
     struct CellPlan<'a> {
         w: &'a dyn Workload,
@@ -304,6 +340,7 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
         elems: usize,
         nodes: usize,
         rpn: usize,
+        qpr: usize,
         /// Why the cell was skipped (configure rejection), if it was.
         skip: Option<String>,
     }
@@ -325,6 +362,7 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
                 elems: 0,
                 nodes: 0,
                 rpn: 0,
+                qpr: 0,
                 skip: Some(format!(
                     "variant filter {:?} matches none of {:?}",
                     spec.variants,
@@ -338,24 +376,28 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
         for variant in variants {
             for &elems in &sizes {
                 for &(nodes, rpn) in &spec.topos {
-                    let cfg = ScenarioCfg {
-                        variant: variant.to_string(),
-                        elems,
-                        nodes,
-                        ranks_per_node: rpn,
-                        iters: spec.iters,
-                        seed: spec.seeds[0],
-                        cost: cost.clone(),
-                    };
-                    let skip = w.configure(&cfg).err().map(|e| format!("{e}"));
-                    plans.push(CellPlan {
-                        w: *w,
-                        variant: variant.to_string(),
-                        elems,
-                        nodes,
-                        rpn,
-                        skip,
-                    });
+                    for &qpr in &spec.queues {
+                        let cfg = ScenarioCfg {
+                            variant: variant.to_string(),
+                            elems,
+                            nodes,
+                            ranks_per_node: rpn,
+                            iters: spec.iters,
+                            queues_per_rank: qpr,
+                            seed: spec.seeds[0],
+                            cost: cost.clone(),
+                        };
+                        let skip = w.configure(&cfg).err().map(|e| format!("{e}"));
+                        plans.push(CellPlan {
+                            w: *w,
+                            variant: variant.to_string(),
+                            elems,
+                            nodes,
+                            rpn,
+                            qpr,
+                            skip,
+                        });
+                    }
                 }
             }
         }
@@ -389,6 +431,7 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
             nodes: p.nodes,
             ranks_per_node: p.rpn,
             iters: spec.iters,
+            queues_per_rank: p.qpr,
             seed,
             cost: cost.clone(),
         };
@@ -421,6 +464,7 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
                 elems: p.elems,
                 nodes: p.nodes,
                 ranks_per_node: p.rpn,
+                queues_per_rank: p.qpr,
                 summary: None,
                 delta_vs_ref_pct: None,
                 validation: format!("skipped: {reason}"),
@@ -429,6 +473,8 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
                 wire_msgs: 0,
                 max_ingress_wait_ns: 0,
                 max_egress_wait_ns: 0,
+                dwq_slot_waits: 0,
+                dwq_peak: 0,
                 events: 0,
             });
             continue;
@@ -448,6 +494,7 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
             elems: p.elems,
             nodes: p.nodes,
             ranks_per_node: p.rpn,
+            queues_per_rank: p.qpr,
             summary: Some(Summary::of(&ms)),
             delta_vs_ref_pct: None,
             validation: validation.label(),
@@ -456,6 +503,8 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
             wire_msgs: first.metrics.wire_msgs,
             max_ingress_wait_ns: first.metrics.max_ingress_wait_ns,
             max_egress_wait_ns: first.metrics.max_egress_wait_ns,
+            dwq_slot_waits: first.metrics.dwq_slot_waits,
+            dwq_peak: first.metrics.dwq_peak,
             events: first.stats.events,
         });
     }
@@ -484,6 +533,7 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
                 && r.elems == c.elems
                 && r.nodes == c.nodes
                 && r.ranks_per_node == c.ranks_per_node
+                && r.queues_per_rank == c.queues_per_rank
         });
         if let Some(rs) = reference.and_then(|r| r.summary.as_ref()) {
             deltas[i] = Some(pct_delta(rs.avg, sm.avg));

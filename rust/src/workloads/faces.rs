@@ -48,6 +48,9 @@ impl Workload for FacesAdapter {
         if cfg.world_size() == 0 {
             bail!("faces: empty world");
         }
+        if cfg.queues_per_rank != 1 {
+            bail!("faces: the Faces benchmark drives exactly one queue per rank");
+        }
         Ok(())
     }
 

@@ -5,9 +5,11 @@
 //! to 26 neighbors each iteration: face messages carry `elems` f32s, edge
 //! messages `max(elems/16, 1)`, corner messages 1 (the Nekbone surface
 //! ratio, coarsened). Per iteration: pre-post receives → pack kernel →
-//! sends (host-synchronized baseline vs stream-triggered vs
-//! kernel-triggered, where the trigger fires from inside the pack
-//! kernel) → wait receives → unpack-accumulate kernel → drain.
+//! one [`crate::stx::CommPlan`] round (host-synchronized baseline vs
+//! stream-triggered vs kernel-triggered, where the trigger fires from
+//! inside the pack kernel) → wait receives → unpack-accumulate kernel →
+//! drain. The plan is built once per rank; iterations contain no enqueue
+//! calls.
 //!
 //! Validation is exact: send payloads are deterministic small integers
 //! ([`super::payload`]), the unpack kernel accumulates them, and the
@@ -15,20 +17,21 @@
 //! hold after `iters` iterations. An ST trigger firing before its pack
 //! kernel (a stream-ordering bug) would ship zeros and fail the check.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::{build_world, run_cluster};
 use crate::faces::domain::ProcGrid;
-use crate::gpu::{self, host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
+use crate::gpu::{host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
 use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
 use crate::nic::BufSlice;
 use crate::sim::HostCtx;
-use crate::stx::{self, Variant};
+use crate::stx::Variant;
 use crate::world::{BufId, ComputeMode, World};
 
-use super::{comm_variant, grid_for, payload, ScenarioCfg, ScenarioRun, Validation, Workload};
+use super::scaffold::{check_exact, scenario_run, RankComm, Timers};
+use super::{comm_variant, grid_for, payload, ScenarioCfg, ScenarioRun, Workload};
 
 pub struct Halo3d;
 
@@ -104,29 +107,30 @@ fn rank_program(
     rank: usize,
     ctx: &mut HostCtx<World>,
     variant: Variant,
-    times: &Arc<Mutex<Vec<u64>>>,
+    queues_per_rank: usize,
+    times: &Timers,
 ) {
     let plan = &plans[rank];
-    let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
-    let queue = variant
-        .uses_queue()
-        .then(|| stx::create_queue(ctx, rank, sid, variant.flavor()));
+    let comm = RankComm::new(ctx, rank, variant, queues_per_rank);
+    // Build-once: the whole neighbor pattern is recorded in one plan;
+    // iterations only re-arm it.
+    let mut b = comm.builder();
+    for m in &plan.nbrs {
+        b.send(m.nbr, BufSlice::new(plan.send, m.send_off, m.elems), m.tag_send, COMM_WORLD);
+        b.recv(
+            SrcSel::Rank(m.nbr),
+            TagSel::Tag(m.tag_recv),
+            COMM_WORLD,
+            BufSlice::new(plan.recv, m.recv_off, m.elems),
+        );
+    }
+    let cplan = b.build(ctx).expect("halo3d plan build");
 
     let t0 = ctx.now();
     for _iter in 0..iters {
         // 1. Pre-post all receives (every rank posts receives before
         //    initiating sends, so rendezvous cannot deadlock).
-        let mut rreqs = Vec::with_capacity(plan.nbrs.len());
-        for m in &plan.nbrs {
-            rreqs.push(mpi::irecv(
-                ctx,
-                rank,
-                SrcSel::Rank(m.nbr),
-                TagSel::Tag(m.tag_recv),
-                COMM_WORLD,
-                BufSlice::new(plan.recv, m.recv_off, m.elems),
-            ));
-        }
+        let rreqs = cplan.post_recvs(ctx, 0);
         // 2. Pack kernel: surface -> contiguous send buffer (the image
         //    travels by Arc, not by per-iteration clone).
         let (send, total, plans_k) = (plan.send, plan.total_send, plans.clone());
@@ -138,73 +142,17 @@ fn rank_program(
                 w.bufs.get_mut(send)[..total].copy_from_slice(&plans_k[rank].send_image);
             })),
         };
-        // 3. Sends.
-        match variant {
-            Variant::Host => {
-                host_enqueue(ctx, sid, StreamOp::Kernel(pack));
-                // Baseline: the Fig-1 kernel-boundary sync, then host MPI.
-                stream_synchronize(ctx, sid);
-                let mut sreqs = Vec::with_capacity(plan.nbrs.len());
-                for m in &plan.nbrs {
-                    sreqs.push(mpi::isend(
-                        ctx,
-                        rank,
-                        m.nbr,
-                        BufSlice::new(plan.send, m.send_off, m.elems),
-                        m.tag_send,
-                        COMM_WORLD,
-                    ));
-                }
-                mpi::waitall(ctx, &sreqs);
-            }
-            Variant::KernelTriggered => {
-                // KT: the previous iteration's send completions ride
-                // this pack kernel's prologue, and this iteration's
-                // trigger fires from inside the kernel — no stream
-                // memory ops.
-                let q = queue.unwrap();
-                let mut kt = gpu::KernelCtx::new();
-                stx::kt_wait(ctx, q, &mut kt).expect("halo3d kt_wait");
-                for m in &plan.nbrs {
-                    stx::enqueue_send(
-                        ctx,
-                        q,
-                        m.nbr,
-                        BufSlice::new(plan.send, m.send_off, m.elems),
-                        m.tag_send,
-                        COMM_WORLD,
-                    )
-                    .expect("halo3d enqueue_send");
-                }
-                stx::kt_start(ctx, q, &mut kt, stx::KT_TRIGGER_FRAC).expect("halo3d kt_start");
-                host_enqueue(ctx, sid, StreamOp::KtKernel(pack, kt));
-            }
-            _ => {
-                host_enqueue(ctx, sid, StreamOp::Kernel(pack));
-                // ST: deferred sends triggered in stream order after pack;
-                // the stream (not the host) waits for completion.
-                let q = queue.unwrap();
-                for m in &plan.nbrs {
-                    stx::enqueue_send(
-                        ctx,
-                        q,
-                        m.nbr,
-                        BufSlice::new(plan.send, m.send_off, m.elems),
-                        m.tag_send,
-                        COMM_WORLD,
-                    )
-                    .expect("halo3d enqueue_send");
-                }
-                stx::enqueue_start(ctx, q).expect("halo3d enqueue_start");
-                stx::enqueue_wait(ctx, q).expect("halo3d enqueue_wait");
-            }
-        }
+        // 3. One plan round drives the sends under the variant protocol
+        //    (Fig-1 sync + isends / deferred sends + CP trigger / KT
+        //    hooks riding the pack kernel), and its completion wait.
+        let round = cplan.round(ctx, vec![pack]).expect("halo3d round");
+        cplan.complete(ctx, round).expect("halo3d complete");
         // 4. Wait receives on the host, then unpack-accumulate.
         mpi::waitall(ctx, &rreqs);
         let (recv, acc, total_r) = (plan.recv, plan.acc, plan.total_recv);
         host_enqueue(
             ctx,
-            sid,
+            comm.sid,
             StreamOp::Kernel(KernelSpec {
                 name: "halo3d_unpack".into(),
                 flops: total_r as u64,
@@ -220,19 +168,14 @@ fn rank_program(
         );
         // 5. Drain: every iteration's unpack lands strictly before the
         //    next iteration's receives reuse the buffers.
-        stream_synchronize(ctx, sid);
+        stream_synchronize(ctx, comm.sid);
     }
     // KT drains its outstanding send completions inside the timed region
-    // (ST already waited via enqueue_wait), keeping the variants' figures
+    // (ST already waited via the stream), keeping the variants' figures
     // of merit comparable.
-    if variant == Variant::KernelTriggered {
-        stx::queue_drain(ctx, queue.unwrap()).expect("halo3d queue drain");
-    }
-    let dt = ctx.now() - t0;
-    if let Some(q) = queue {
-        stx::free_queue(ctx, q).expect("halo3d queue idle at teardown");
-    }
-    times.lock().unwrap()[rank] = dt;
+    comm.drain_if_kt(ctx, &cplan, "halo3d");
+    times.record(rank, ctx.now() - t0);
+    comm.finish(ctx, "halo3d");
 }
 
 impl Workload for Halo3d {
@@ -260,6 +203,9 @@ impl Workload for Halo3d {
         if cfg.elems == 0 {
             bail!("halo3d: face message must carry at least one element");
         }
+        if cfg.queues_per_rank == 0 {
+            bail!("halo3d: at least one queue per rank");
+        }
         // Exact-equality validation: accumulator sums stay exactly
         // representable in f32 only while iters * max_payload < 2^24
         // (payload values are < 8192, so 2048 iterations).
@@ -277,49 +223,27 @@ impl Workload for Halo3d {
         let mut world = build_world(cfg.cost.clone(), cfg.topology());
         world.compute = ComputeMode::Real; // Fn-payload kernels move real data
         let plans = Arc::new(build_plans(&mut world, &grid, cfg.elems));
-        let times: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(vec![0; grid.size()]));
+        let times = Timers::new(grid.size());
 
-        let iters = cfg.iters;
+        let (iters, qpr) = (cfg.iters, cfg.queues_per_rank);
         let plans2 = plans.clone();
         let times2 = times.clone();
         let out = run_cluster(world, cfg.seed, move |rank, ctx| {
-            rank_program(iters, &plans2, rank, ctx, variant, &times2);
+            rank_program(iters, &plans2, rank, ctx, variant, qpr, &times2);
         })
         .map_err(|e| anyhow!("halo3d run failed: {e}"))?;
 
         // Host-side reference: every accumulator slot holds iters * the
         // neighbor's packed value for the opposing direction.
-        let mut checked = 0usize;
-        let mut validation = Validation::Passed { checked: 0 };
-        'outer: for plan in plans.iter() {
+        let pairs = plans.iter().flat_map(|plan| {
             let acc = out.world.bufs.get(plan.acc);
-            for m in &plan.nbrs {
-                for j in 0..m.elems {
-                    let expect = iters as f32 * payload(m.nbr, m.lane_recv, j);
-                    let got = acc[m.recv_off + j];
-                    if got != expect {
-                        validation = Validation::Failed {
-                            detail: format!(
-                                "acc[nbr {} slot {j}] = {got}, expected {expect}",
-                                m.nbr
-                            ),
-                        };
-                        break 'outer;
-                    }
-                    checked += 1;
-                }
-            }
-        }
-        if validation.ok() {
-            validation = Validation::Passed { checked };
-        }
-
-        let rank_time = times.lock().unwrap().clone();
-        Ok(ScenarioRun {
-            time_ns: rank_time.iter().copied().max().unwrap_or(0),
-            metrics: out.world.metrics.clone(),
-            stats: out.stats,
-            validation,
-        })
+            plan.nbrs.iter().flat_map(move |m| {
+                (0..m.elems).map(move |j| {
+                    (acc[m.recv_off + j], iters as f32 * payload(m.nbr, m.lane_recv, j))
+                })
+            })
+        });
+        let validation = check_exact(pairs, |i| format!("halo3d acc slot {i}"));
+        Ok(scenario_run(&out, &times, validation))
     }
 }

@@ -10,21 +10,23 @@
 //! signature of an incast hotspot (vs the alltoall pattern, which loads
 //! both port directions).
 //!
-//! Validation is exact: the root's slot for sender `s` must hold
+//! Senders record their one-message pattern in a
+//! [`crate::stx::CommPlan`] built once; the root runs a plain receive
+//! loop. Validation is exact: the root's slot for sender `s` must hold
 //! `payload(s, 0, j)` after the final iteration.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::{build_world, run_cluster};
-use crate::gpu::{self, host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
+use crate::gpu::{stream_synchronize, KernelPayload, KernelSpec};
 use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
 use crate::nic::BufSlice;
-use crate::stx::{self, Variant};
 use crate::world::ComputeMode;
 
-use super::{comm_variant, payload, ScenarioCfg, ScenarioRun, Validation, Workload};
+use super::scaffold::{check_exact, scenario_run, RankComm, Timers};
+use super::{comm_variant, payload, ScenarioCfg, ScenarioRun, Workload};
 
 pub struct Incast;
 
@@ -56,6 +58,12 @@ impl Workload for Incast {
         if cfg.elems == 0 {
             bail!("incast: messages must carry at least one element");
         }
+        // One message per sender per iteration: extra queues would sit
+        // idle, so q>1 cells would be misleading — reject them (the
+        // campaign reports the cells as skipped).
+        if cfg.queues_per_rank != 1 {
+            bail!("incast: senders post a single message, which cannot stripe over queues");
+        }
         Ok(())
     }
 
@@ -73,23 +81,13 @@ impl Workload for Incast {
         let images: Arc<Vec<Vec<f32>>> =
             Arc::new((0..n).map(|r| (0..elems).map(|j| payload(r, 0, j)).collect()).collect());
 
-        let times: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(vec![0; n]));
-        let iters = cfg.iters;
+        let times = Timers::new(n);
+        let (iters, qpr) = (cfg.iters, cfg.queues_per_rank);
         let (send2, images2, times2) = (send.clone(), images.clone(), times.clone());
         let out = run_cluster(world, cfg.seed, move |rank, ctx| {
-            let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
-            // Queue setup outside the timed region (matches halo3d and
-            // alltoall, so the baseline-vs-ST contrast is not skewed by
-            // one-time setup cost).
-            let queue = if rank == ROOT {
-                None
-            } else {
-                variant
-                    .uses_queue()
-                    .then(|| stx::create_queue(ctx, rank, sid, variant.flavor()))
-            };
-            let t0 = ctx.now();
             if rank == ROOT {
+                // The root only receives — no stream, no queue, no plan.
+                let t0 = ctx.now();
                 for _iter in 0..iters {
                     let mut rreqs = Vec::with_capacity(n - 1);
                     for s in 1..n {
@@ -104,112 +102,55 @@ impl Workload for Incast {
                     }
                     mpi::waitall(ctx, &rreqs);
                 }
-            } else {
-                let sb = send2[rank];
-                for _iter in 0..iters {
-                    // Pack kernel refreshes the outgoing message (image by
-                    // Arc, not by per-iteration clone).
-                    let images_k = images2.clone();
-                    let pack = KernelSpec {
-                        name: "incast_pack".into(),
-                        flops: 0,
-                        bytes: 2 * 4 * elems as u64,
-                        payload: KernelPayload::Fn(Box::new(move |w, _| {
-                            w.bufs.get_mut(sb)[..elems].copy_from_slice(&images_k[rank]);
-                        })),
-                    };
-                    match variant {
-                        Variant::Host => {
-                            host_enqueue(ctx, sid, StreamOp::Kernel(pack));
-                            stream_synchronize(ctx, sid);
-                            let sr = mpi::isend(
-                                ctx,
-                                rank,
-                                ROOT,
-                                BufSlice::whole(sb, elems),
-                                INCAST_TAG,
-                                COMM_WORLD,
-                            );
-                            mpi::wait(ctx, sr);
-                        }
-                        Variant::KernelTriggered => {
-                            // KT: the previous iteration's send completion
-                            // rides the pack prologue; the trigger fires
-                            // from inside the pack kernel.
-                            let q = queue.unwrap();
-                            let mut kt = gpu::KernelCtx::new();
-                            stx::kt_wait(ctx, q, &mut kt).expect("incast kt_wait");
-                            stx::enqueue_send(
-                                ctx,
-                                q,
-                                ROOT,
-                                BufSlice::whole(sb, elems),
-                                INCAST_TAG,
-                                COMM_WORLD,
-                            )
-                            .expect("incast enqueue_send");
-                            stx::kt_start(ctx, q, &mut kt, stx::KT_TRIGGER_FRAC)
-                                .expect("incast kt_start");
-                            host_enqueue(ctx, sid, StreamOp::KtKernel(pack, kt));
-                            stream_synchronize(ctx, sid);
-                        }
-                        _ => {
-                            host_enqueue(ctx, sid, StreamOp::Kernel(pack));
-                            let q = queue.unwrap();
-                            stx::enqueue_send(
-                                ctx,
-                                q,
-                                ROOT,
-                                BufSlice::whole(sb, elems),
-                                INCAST_TAG,
-                                COMM_WORLD,
-                            )
-                            .expect("incast enqueue_send");
-                            stx::enqueue_start(ctx, q).expect("incast enqueue_start");
-                            stx::enqueue_wait(ctx, q).expect("incast enqueue_wait");
-                            stream_synchronize(ctx, sid);
-                        }
-                    }
-                }
-                // KT drains the final send completion inside the timed
-                // region (ST already waited via enqueue_wait).
-                if variant == Variant::KernelTriggered {
-                    stx::queue_drain(ctx, queue.unwrap()).expect("incast queue drain");
+                times2.record(rank, ctx.now() - t0);
+                return;
+            }
+            // Sender: stream/queue setup and the one-send plan, both
+            // outside the timed region (matches halo3d and alltoall, so
+            // the baseline-vs-ST contrast is not skewed by setup cost).
+            let comm = RankComm::new(ctx, rank, variant, qpr);
+            let sb = send2[rank];
+            let mut b = comm.builder();
+            b.send(ROOT, BufSlice::whole(sb, elems), INCAST_TAG, COMM_WORLD);
+            let cplan = b.build(ctx).expect("incast plan build");
+
+            let t0 = ctx.now();
+            for _iter in 0..iters {
+                // Pack kernel refreshes the outgoing message (image by
+                // Arc, not by per-iteration clone).
+                let images_k = images2.clone();
+                let pack = KernelSpec {
+                    name: "incast_pack".into(),
+                    flops: 0,
+                    bytes: 2 * 4 * elems as u64,
+                    payload: KernelPayload::Fn(Box::new(move |w, _| {
+                        w.bufs.get_mut(sb)[..elems].copy_from_slice(&images_k[rank]);
+                    })),
+                };
+                let round = cplan.round(ctx, vec![pack]).expect("incast round");
+                cplan.complete(ctx, round).expect("incast complete");
+                // The host round already ended synchronized (Fig-1 sync
+                // before its isend); ST/KT drain the stream here.
+                if variant.uses_queue() {
+                    stream_synchronize(ctx, comm.sid);
                 }
             }
+            // KT drains the final send completion inside the timed
+            // region (ST already waited via the stream).
+            comm.drain_if_kt(ctx, &cplan, "incast");
             // Stop the clock before queue teardown (outside the timed
             // region, like halo3d/alltoall).
-            let dt = ctx.now() - t0;
-            if let Some(q) = queue {
-                stx::free_queue(ctx, q).expect("incast queue idle at teardown");
-            }
-            times2.lock().unwrap()[rank] = dt;
+            times2.record(rank, ctx.now() - t0);
+            comm.finish(ctx, "incast");
         })
         .map_err(|e| anyhow!("incast run failed: {e}"))?;
 
-        let mut validation = Validation::Passed { checked: (n - 1) * elems };
         let got = out.world.bufs.get(sink);
-        'outer: for s in 1..n {
-            for j in 0..elems {
-                let expect = payload(s, 0, j);
-                if got[(s - 1) * elems + j] != expect {
-                    validation = Validation::Failed {
-                        detail: format!(
-                            "root slot for sender {s} elem {j}: {} != {expect}",
-                            got[(s - 1) * elems + j]
-                        ),
-                    };
-                    break 'outer;
-                }
-            }
-        }
-
-        let rank_time = times.lock().unwrap().clone();
-        Ok(ScenarioRun {
-            time_ns: rank_time.iter().copied().max().unwrap_or(0),
-            metrics: out.world.metrics.clone(),
-            stats: out.stats,
-            validation,
-        })
+        let pairs = (1..n)
+            .flat_map(|s| (0..elems).map(move |j| (got[(s - 1) * elems + j], payload(s, 0, j))));
+        let validation = check_exact(pairs, |i| {
+            format!("incast root slot for sender {} elem {}", 1 + i / elems, i % elems)
+        });
+        Ok(scenario_run(&out, &times, validation))
     }
 }

@@ -15,8 +15,11 @@
 //!   summary** ([`ScenarioRun`]).
 //! * [`registry`] — the name-keyed catalogue of shipped workloads.
 //! * [`campaign`] — the cross-product driver: {workload × variant ×
-//!   message size × topology × seed} on the parallel sweep executor,
-//!   emitting one JSON + Markdown comparative report.
+//!   message size × topology × queues-per-rank × seed} on the parallel
+//!   sweep executor, emitting one JSON + Markdown comparative report.
+//! * [`scaffold`] — the shared per-rank run scaffold (stream/queue
+//!   setup, timers, exact-compare validation) that shrinks a plug-in to
+//!   pattern + compute.
 //!
 //! Shipped workloads:
 //!
@@ -27,6 +30,7 @@
 //! | `allreduce` | host / ST / KT ring + ST recursive-doubling      |
 //! | `alltoall`  | transpose-style personalized exchange            |
 //! | `incast`    | N→1 hotspot stress on one NIC ingress port       |
+//! | `allgather` | ring gather phase over persistent `CommPlan`s    |
 //!
 //! Every workload sweeps the [`crate::stx::Variant`] axis: the host
 //! baseline, the paper's stream-triggered path (`st` / `st-shader`),
@@ -35,7 +39,9 @@
 //! prologues — no per-iteration stream memory ops at all.
 
 pub mod campaign;
+pub mod scaffold;
 
+mod allgather;
 mod allreduce;
 mod alltoall;
 mod faces;
@@ -63,6 +69,12 @@ pub struct ScenarioCfg {
     pub ranks_per_node: usize,
     /// Timed iterations of the pattern.
     pub iters: usize,
+    /// `stx::Queue`s per rank — the multi-queue contention axis. The
+    /// scaffold-based workloads stripe their plans over this many
+    /// queues; workloads that drive exactly one queue reject other
+    /// values in `configure` (the campaign reports those cells as
+    /// skipped).
+    pub queues_per_rank: usize,
     pub seed: u64,
     pub cost: CostModel,
 }
@@ -78,6 +90,7 @@ impl ScenarioCfg {
             nodes,
             ranks_per_node: rpn,
             iters: 2,
+            queues_per_rank: 1,
             seed: 7,
             cost,
         }
@@ -172,6 +185,7 @@ pub fn registry() -> Vec<Box<dyn Workload>> {
         Box::new(allreduce::Allreduce),
         Box::new(alltoall::AllToAll),
         Box::new(incast::Incast),
+        Box::new(allgather::Allgather),
     ]
 }
 

@@ -1,0 +1,144 @@
+//! Shared per-workload run scaffold: the pieces every scenario plug-in
+//! used to hand-roll — per-rank stream/queue setup (including
+//! multi-queue ranks), the per-rank timer vector with the max-over-ranks
+//! figure of merit, the exact-compare validation loop, and the
+//! [`ScenarioRun`] assembly — folded into helpers so a plug-in shrinks
+//! to *pattern + compute* (see `allgather.rs` for the ~100-line shape).
+//!
+//! The communication protocol itself (the per-variant send block the
+//! ROADMAP flagged as four-way duplication) lives one layer down, in
+//! [`CommPlan::round`] / [`CommPlan::complete`]: workloads record their
+//! pattern once through [`RankComm::builder`] and re-arm it every
+//! iteration with zero per-iteration enqueue calls.
+
+use std::cell::Cell;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::RunOutcome;
+use crate::gpu::{self, StreamId};
+use crate::sim::HostCtx;
+use crate::stx::{CommPlan, CommPlanBuilder, Queue, Variant};
+use crate::world::World;
+
+use super::{ScenarioRun, Validation};
+
+/// One rank's communication context: its GPU stream plus the queue set
+/// its plans stripe over (`queues_per_rank` queues for queue-using
+/// variants, none for the host baseline).
+pub struct RankComm {
+    /// The communication variant this rank runs.
+    pub variant: Variant,
+    /// The rank's GPU stream.
+    pub sid: StreamId,
+    rank: usize,
+    queues: Vec<Queue>,
+    /// Plans built so far — rotates the striping start slot so a
+    /// sequence of small plans (one per collective step) spreads over
+    /// the queue set instead of all landing on queue 0.
+    plans_built: Cell<usize>,
+}
+
+impl RankComm {
+    /// Create the stream and `queues_per_rank` queues for `rank`
+    /// (outside the timed region, like every workload did by hand).
+    pub fn new(
+        ctx: &mut HostCtx<World>,
+        rank: usize,
+        variant: Variant,
+        queues_per_rank: usize,
+    ) -> RankComm {
+        let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+        let queues = if variant.uses_queue() {
+            (0..queues_per_rank.max(1))
+                .map(|_| {
+                    Queue::create(ctx, rank, sid, variant).expect("NIC counter pool exhausted")
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        RankComm { variant, sid, rank, queues, plans_built: Cell::new(0) }
+    }
+
+    /// Start recording this rank's [`CommPlan`] (ops stripe round-robin
+    /// over the rank's queues; successive plans start at successive
+    /// slots).
+    pub fn builder(&self) -> CommPlanBuilder {
+        let mut b = CommPlan::builder(self.rank, self.sid, self.variant, &self.queues);
+        if !self.queues.is_empty() {
+            b.stripe_from(self.plans_built.get());
+        }
+        self.plans_built.set(self.plans_built.get() + 1);
+        b
+    }
+
+    /// KT epilogue inside the timed region: drain the plan's outstanding
+    /// send completions (ST already waited via its stream waits), so the
+    /// variants' figures of merit compare like for like.
+    pub fn drain_if_kt(&self, ctx: &mut HostCtx<World>, plan: &CommPlan, what: &str) {
+        if self.variant == Variant::KernelTriggered {
+            plan.drain(ctx).unwrap_or_else(|e| panic!("{what}: KT queue drain: {e}"));
+        }
+    }
+
+    /// Teardown: free every queue (they must be idle — `what` names the
+    /// workload in the violation message).
+    pub fn finish(self, ctx: &mut HostCtx<World>, what: &str) {
+        for q in self.queues {
+            q.free(ctx)
+                .unwrap_or_else(|(_, e)| panic!("{what}: queue not idle at teardown: {e}"));
+        }
+    }
+}
+
+/// Per-rank timed-region accumulator shared across the host actors; the
+/// figure of merit is the max over ranks ([`Timers::max_ns`]).
+#[derive(Clone)]
+pub struct Timers(Arc<Mutex<Vec<u64>>>);
+
+impl Timers {
+    /// One slot per rank, all zero.
+    pub fn new(ranks: usize) -> Timers {
+        Timers(Arc::new(Mutex::new(vec![0; ranks])))
+    }
+
+    /// Record `rank`'s accumulated timed-region nanoseconds.
+    pub fn record(&self, rank: usize, dt: u64) {
+        self.0.lock().unwrap()[rank] = dt;
+    }
+
+    /// The max-over-ranks figure of merit.
+    pub fn max_ns(&self) -> u64 {
+        self.0.lock().unwrap().iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Exact-compare validation loop: every `(got, expected)` pair must match
+/// bit-for-bit (workload payloads are small integers, exactly
+/// representable in f32). `label(i)` names pair `i` in the failure
+/// detail — only evaluated on mismatch.
+pub fn check_exact(
+    pairs: impl IntoIterator<Item = (f32, f32)>,
+    label: impl Fn(usize) -> String,
+) -> Validation {
+    let mut checked = 0;
+    for (i, (got, expect)) in pairs.into_iter().enumerate() {
+        if got != expect {
+            return Validation::Failed { detail: format!("{}: {got} != {expect}", label(i)) };
+        }
+        checked += 1;
+    }
+    Validation::Passed { checked }
+}
+
+/// Assemble the [`ScenarioRun`] summary every workload returns: the
+/// max-over-ranks figure of merit plus the run's metrics and engine
+/// stats.
+pub fn scenario_run(out: &RunOutcome, times: &Timers, validation: Validation) -> ScenarioRun {
+    ScenarioRun {
+        time_ns: times.max_ns(),
+        metrics: out.world.metrics.clone(),
+        stats: out.stats.clone(),
+        validation,
+    }
+}

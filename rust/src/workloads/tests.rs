@@ -6,9 +6,9 @@ use super::campaign::{json_parses, run_campaign, CampaignSpec};
 use super::{by_name, grid_for, names, registry, ScenarioCfg, Validation};
 
 #[test]
-fn registry_has_five_unique_workloads() {
+fn registry_has_six_unique_workloads() {
     let names = names();
-    assert_eq!(names, vec!["faces", "halo3d", "allreduce", "alltoall", "incast"]);
+    assert_eq!(names, vec!["faces", "halo3d", "allreduce", "alltoall", "incast", "allgather"]);
     for n in &names {
         let w = by_name(n).expect("by_name must resolve every registry name");
         assert_eq!(w.name(), *n);
@@ -55,6 +55,8 @@ fn validated_workloads_check_data_on_mixed_topology() {
         ("alltoall", "kt"),
         ("incast", "st"),
         ("incast", "kt"),
+        ("allgather", "st"),
+        ("allgather", "kt"),
     ] {
         let w = by_name(name).unwrap();
         let cfg = ScenarioCfg::smoke(variant, 2, 2, 40);
@@ -191,6 +193,7 @@ fn campaign_skips_infeasible_cells() {
         iters: 1,
         jitter: 0.0,
         threads: Some(1),
+        ..CampaignSpec::default()
     };
     let r = run_campaign(&spec).unwrap();
     assert_eq!(r.cells.len(), 2);

@@ -148,6 +148,13 @@ pub struct Metrics {
     pub stream_syncs: u64,
     pub memops_executed: u64,
     pub dwq_triggered: u64,
+    /// Times an stx operation had to wait for a free DWQ descriptor slot
+    /// (multi-queue / multi-rank contention for the NIC's finite
+    /// deferred-work queue; per-queue counts live on the queues).
+    pub dwq_slot_waits: u64,
+    /// Peak concurrent DWQ occupancy across NICs (HTQ pressure
+    /// high-water mark).
+    pub dwq_peak: u64,
     /// Mid-kernel trigger actions fired (the kernel-triggered path).
     pub kt_triggers: u64,
     pub progress_ops: u64,

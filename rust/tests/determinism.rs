@@ -3,12 +3,17 @@
 //! the typed event arena, the threshold-ordered waiters, AND the parallel
 //! sweep executor in play.
 
+use stmpi::coordinator::{build_world, run_cluster};
 use stmpi::costmodel::presets;
 use stmpi::faces::figures::{fig9, run_figure, Loops, FIGURE_G};
 use stmpi::faces::{run_faces, FacesConfig, Variant};
+use stmpi::gpu::{self, host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
+use stmpi::mpi::{self, SrcSel, TagSel, COMM_WORLD};
+use stmpi::nic::BufSlice;
 use stmpi::sim::{sweep, SimStats};
+use stmpi::stx::{CommPlan, Queue};
 use stmpi::workloads::campaign::{run_campaign, CampaignSpec};
-use stmpi::world::ComputeMode;
+use stmpi::world::{ComputeMode, Topology};
 
 fn jittered_cfg(variant: Variant, seed: u64) -> FacesConfig {
     let mut cfg = FacesConfig::smoke(2, 2, (4, 1, 1));
@@ -112,6 +117,172 @@ fn campaign_report_is_thread_count_invariant() {
     assert!(serial.all_ok(), "jitter must not affect validation:\n{}", serial.to_markdown());
 }
 
+/// stx v2 build-once / start-many: a `CommPlan` started N times is
+/// byte-identical (SimStats) to N hand-enqueued iterations over the same
+/// queue — and stays so across sweep worker-thread counts.
+#[test]
+fn plan_rounds_match_hand_iterations_across_thread_counts() {
+    fn one(use_plan: bool) -> SimStats {
+        let mut cost = presets::frontier_like();
+        cost.jitter_sigma = 0.0;
+        let mut w = build_world(cost, Topology::new(2, 1));
+        let src = w.bufs.alloc_init(vec![3.0; 32]);
+        let dst = w.bufs.alloc(32);
+        let out = run_cluster(w, 1, move |rank, ctx| {
+            let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+            let q = Queue::create(ctx, rank, sid, stmpi::stx::Variant::StreamTriggered).unwrap();
+            if rank == 0 {
+                let qs = std::slice::from_ref(&q);
+                let mut b = CommPlan::builder(rank, sid, q.variant(), qs);
+                b.send(1, BufSlice::whole(src, 32), 9, COMM_WORLD);
+                let plan = b.build(ctx).unwrap();
+                mpi::barrier(ctx, rank, 2, COMM_WORLD, 0);
+                for _iter in 0..3 {
+                    if use_plan {
+                        let r = plan.round(ctx, Vec::new()).unwrap();
+                        plan.complete(ctx, r).unwrap();
+                    } else {
+                        q.send(ctx, 1, BufSlice::whole(src, 32), 9, COMM_WORLD).unwrap();
+                        q.start(ctx).unwrap();
+                        q.wait(ctx).unwrap();
+                    }
+                    stream_synchronize(ctx, sid);
+                }
+            } else {
+                mpi::barrier(ctx, rank, 2, COMM_WORLD, 0);
+                for _iter in 0..3 {
+                    let req = mpi::irecv(
+                        ctx,
+                        rank,
+                        SrcSel::Rank(0),
+                        TagSel::Tag(9),
+                        COMM_WORLD,
+                        BufSlice::whole(dst, 32),
+                    );
+                    mpi::wait(ctx, req);
+                }
+            }
+            q.free(ctx).unwrap();
+        })
+        .unwrap();
+        out.stats
+    }
+    let jobs = [false, true, false, true];
+    let run = |threads: usize| -> Vec<SimStats> {
+        sweep::map(&jobs, threads, |_, &use_plan| one(use_plan))
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_eq!(serial, parallel, "1 thread vs 4 threads");
+    assert_eq!(serial[0], serial[1], "hand vs plan SimStats");
+    assert_eq!(serial[2], serial[3], "hand vs plan SimStats (repeat)");
+}
+
+/// Multi-queue determinism: KT and ST starts mixed on two queues of one
+/// rank yield byte-identical stats across reruns and sweep thread
+/// counts.
+#[test]
+fn mixed_kt_st_starts_on_two_queues_are_deterministic() {
+    fn one(seed: u64) -> (u64, SimStats) {
+        let mut cost = presets::frontier_like_jittered();
+        cost.jitter_sigma = 0.01;
+        let mut w = build_world(cost, Topology::new(2, 1));
+        let s1 = w.bufs.alloc_init(vec![1.0; 16]);
+        let s2 = w.bufs.alloc_init(vec![2.0; 16]);
+        let d1 = w.bufs.alloc(16);
+        let d2 = w.bufs.alloc(16);
+        let out = run_cluster(w, seed, move |rank, ctx| {
+            if rank == 0 {
+                let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+                let qa = Queue::create(ctx, rank, sid, stmpi::stx::Variant::StreamTriggered)
+                    .unwrap();
+                let qb = Queue::create(ctx, rank, sid, stmpi::stx::Variant::KernelTriggered)
+                    .unwrap();
+                // ST epoch on queue A...
+                qa.send(ctx, 1, BufSlice::whole(s1, 16), 1, COMM_WORLD).unwrap();
+                qa.start(ctx).unwrap();
+                qa.wait(ctx).unwrap();
+                // ...mixed with a KT epoch on queue B of the same rank.
+                qb.send(ctx, 1, BufSlice::whole(s2, 16), 2, COMM_WORLD).unwrap();
+                let mut kt = gpu::KernelCtx::new();
+                qb.kt_start(ctx, &mut kt, 1.0).unwrap();
+                host_enqueue(
+                    ctx,
+                    sid,
+                    StreamOp::KtKernel(
+                        KernelSpec {
+                            name: "mixed".into(),
+                            flops: 500,
+                            bytes: 500,
+                            payload: KernelPayload::None,
+                        },
+                        kt,
+                    ),
+                );
+                qb.drain(ctx).unwrap();
+                stream_synchronize(ctx, sid);
+                qa.free(ctx).unwrap();
+                qb.free(ctx).unwrap();
+            } else {
+                for (buf, tag) in [(d1, 1), (d2, 2)] {
+                    let req = mpi::irecv(
+                        ctx,
+                        rank,
+                        SrcSel::Rank(0),
+                        TagSel::Tag(tag),
+                        COMM_WORLD,
+                        BufSlice::whole(buf, 16),
+                    );
+                    mpi::wait(ctx, req);
+                }
+            }
+        })
+        .unwrap();
+        (out.makespan, out.stats)
+    }
+    let seeds = [11u64, 23, 37];
+    let run = |threads: usize| -> Vec<(u64, SimStats)> {
+        sweep::map(&seeds, threads, |_, &s| one(s))
+    };
+    let serial = run(1);
+    let parallel = run(3);
+    let parallel_again = run(3);
+    assert_eq!(serial, parallel, "1 thread vs 3 threads");
+    assert_eq!(parallel, parallel_again, "repeated parallel runs");
+}
+
+/// The multi-queue campaign axis: two-queue-per-rank cells render
+/// byte-identical reports across sweep thread counts (the acceptance
+/// bar for the queues axis), and the q=2 cells really run.
+#[test]
+fn two_queue_campaign_cells_are_thread_count_invariant() {
+    let mut spec = CampaignSpec {
+        workloads: vec!["halo3d".into(), "alltoall".into()],
+        variants: vec!["st".into(), "kt".into()],
+        elems: vec![32],
+        topos: vec![(2, 2)],
+        queues: vec![1, 2],
+        seeds: vec![5, 9],
+        iters: 2,
+        jitter: 0.01,
+        threads: Some(1),
+        ..CampaignSpec::default()
+    };
+    let serial = run_campaign(&spec).unwrap();
+    assert!(serial.all_ok(), "multi-queue cells must validate:\n{}", serial.to_markdown());
+    let q2_ran = serial
+        .cells
+        .iter()
+        .filter(|c| c.queues_per_rank == 2 && c.summary.is_some())
+        .count();
+    assert!(q2_ran >= 4, "two-queue cells must actually run (got {q2_ran})");
+    assert!(serial.to_json().contains("\"queues_per_rank\": 2"));
+    spec.threads = Some(3);
+    let parallel = run_campaign(&spec).unwrap();
+    assert_eq!(serial.to_json(), parallel.to_json(), "1 thread vs 3 threads");
+    assert_eq!(serial.to_markdown(), parallel.to_markdown());
+}
+
 /// The kernel-triggered axis upholds the same contract: a KT-only
 /// campaign (every workload's kt/ring-kt cells) renders byte-identical
 /// reports across reruns and across sweep worker-thread counts, with
@@ -127,6 +298,7 @@ fn kt_campaign_report_is_thread_count_invariant() {
         iters: 2,
         jitter: 0.01,
         threads: Some(1),
+        ..CampaignSpec::default()
     };
     let serial = run_campaign(&spec).unwrap();
     assert!(serial.all_ok(), "KT cells must validate:\n{}", serial.to_markdown());

@@ -3,14 +3,14 @@
 
 use stmpi::collectives::{recursive_doubling_allreduce_st, ring_allreduce_st};
 use stmpi::coordinator::{build_world, run_cluster};
-use stmpi::costmodel::{presets, MemOpFlavor};
+use stmpi::costmodel::presets;
 use stmpi::faces::domain::ProcGrid;
 use stmpi::faces::{run_faces, FacesConfig, Variant};
 use stmpi::gpu::{self, stream_synchronize};
 use stmpi::mpi::{irecv, isend, waitall, SrcSel, TagSel, COMM_WORLD};
 use stmpi::nic::BufSlice;
 use stmpi::sim::rng::SplitMix64;
-use stmpi::stx;
+use stmpi::stx::Queue;
 use stmpi::world::{BufId, Topology};
 
 fn cost() -> stmpi::costmodel::CostModel {
@@ -116,25 +116,25 @@ fn prop_st_completion_accounting() {
         let (s2, d2) = (srcs.clone(), dsts.clone());
         let out = run_cluster(w, case, move |rank, ctx| {
             let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
-            let q = stx::create_queue(ctx, rank, sid, MemOpFlavor::Hip);
+            let q = Queue::create(ctx, rank, sid, stmpi::stx::Variant::StreamTriggered).unwrap();
             let mut idx = 0;
             for &cnt in &pe {
                 for _ in 0..cnt {
                     if rank == 0 {
-                        stx::enqueue_send(ctx, q, 1, BufSlice::whole(s2[idx], elems), idx as i32, COMM_WORLD)
+                        q.send(ctx, 1, BufSlice::whole(s2[idx], elems), idx as i32, COMM_WORLD)
                             .unwrap();
                     } else {
-                        stx::enqueue_recv(ctx, q, 0, BufSlice::whole(d2[idx], elems), idx as i32, COMM_WORLD)
+                        q.recv(ctx, 0, BufSlice::whole(d2[idx], elems), idx as i32, COMM_WORLD)
                             .unwrap();
                     }
                     idx += 1;
                 }
-                stx::enqueue_start(ctx, q).unwrap();
+                q.start(ctx).unwrap();
             }
-            stx::enqueue_wait(ctx, q).unwrap();
+            q.wait(ctx).unwrap();
             stream_synchronize(ctx, sid);
-            // free_queue succeeding proves comp_ctr == started_total.
-            stx::free_queue(ctx, q).unwrap();
+            // Queue::free succeeding proves comp_ctr == started_total.
+            q.free(ctx).unwrap();
         })
         .unwrap_or_else(|e| panic!("case {case} ({per_epoch:?}): {e}"));
         for i in 0..total {
@@ -173,18 +173,18 @@ fn prop_ring_and_rd_allreduce_agree_with_reference() {
         let (dr, dd, tp) = (data_ring.clone(), data_rd.clone(), tmp.clone());
         let out = run_cluster(w, case, move |rank, ctx| {
             let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
-            let q = stx::create_queue(ctx, rank, sid, MemOpFlavor::Hip);
+            let q = Queue::create(ctx, rank, sid, stmpi::stx::Variant::StreamTriggered).unwrap();
             // Ring (tags 1000/2000) then recursive doubling (tags 3000):
             // disjoint tag spaces, so the phases cannot cross-match even
             // when ranks skew.
-            ring_allreduce_st(ctx, rank, n, q, sid, dr[rank], len, tp[rank], COMM_WORLD);
+            ring_allreduce_st(ctx, rank, n, &q, sid, dr[rank], len, tp[rank], COMM_WORLD);
             stream_synchronize(ctx, sid);
             recursive_doubling_allreduce_st(
-                ctx, rank, n, q, sid, dd[rank], len, tp[rank], COMM_WORLD,
+                ctx, rank, n, &q, sid, dd[rank], len, tp[rank], COMM_WORLD,
             )
             .expect("power-of-two world");
             stream_synchronize(ctx, sid);
-            stx::free_queue(ctx, q).expect("queue idle");
+            q.free(ctx).expect("queue idle");
         })
         .unwrap_or_else(|e| panic!("case {case} (n={n} len={len}): {e}"));
         for r in 0..n {
