@@ -71,6 +71,12 @@ pub struct CostModel {
     pub nic_trigger_latency: Time,
     /// NIC hardware tag-matching cost per arriving message.
     pub nic_match: Time,
+    /// NIC list-processing cost to append a *triggered-receive*
+    /// descriptor to the posted-receive list when its trigger fires (the
+    /// receive-side offload of the follow-on work, arXiv 2306.15773):
+    /// the fired DWQ entry is handed to the matching engine without any
+    /// host or progress-thread involvement.
+    pub nic_recv_post: Time,
     /// NIC completion-counter update cost.
     pub nic_completion: Time,
     /// One-way wire latency between any two nodes (Slingshot ~1.8 µs MPI).

@@ -37,6 +37,7 @@ pub fn frontier_like() -> CostModel {
         nic_proc: 250,
         nic_trigger_latency: 350,
         nic_match: 120,
+        nic_recv_post: 280,
         nic_completion: 200,
         wire_latency: 1_800,
         wire_bw: 25.0, // 25 GB/s

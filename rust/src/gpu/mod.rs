@@ -17,10 +17,13 @@
 //! 2306.15773): a [`StreamOp::KtKernel`] carries a [`KernelCtx`] whose
 //! hooks fire NIC deferred-work entries from *inside* the kernel's
 //! execution window ([`KernelCtx::kt_counter_inc`] /
-//! [`KernelCtx::kt_put`]) and fold completion waits into the kernel
+//! [`KernelCtx::kt_put`] / [`KernelCtx::kt_recv`] — the last rings the
+//! doorbell with a posted-*receive* descriptor, the receive half of the
+//! offload story) and fold completion waits into the kernel
 //! prologue ([`KernelCtx::wait_ge`]) — no `writeValue64`/`waitValue64`
 //! stream ops at all. See `stx` for the MPIX-level wrappers and
-//! DESIGN.md §Kernel-triggered communication for the timeline.
+//! DESIGN.md §Kernel-triggered communication / §Triggered receives for
+//! the timelines.
 //!
 //! Kernel *numerics* are real: a kernel's payload either runs an
 //! AOT-compiled XLA executable (via [`crate::runtime`]) or a built-in
@@ -114,6 +117,13 @@ pub enum KtAction {
     /// 2306.15773); the NIC executes the descriptor like any
     /// host-posted command.
     Put(KtPut),
+    /// Device-initiated posted receive: the kernel rings the NIC
+    /// doorbell with a receive descriptor, and the NIC's list engine
+    /// appends it to the matching engine ([`crate::nic::execute_recv_post`])
+    /// — the receive-side counterpart of [`KtAction::Put`]. Fired at
+    /// `frac == 1.0` this is the kernel-*epilogue* hook: the last
+    /// wavefront posts the receive for the next iteration's inbound data.
+    PostRecv(KtRecv),
 }
 
 impl std::fmt::Debug for KtAction {
@@ -121,6 +131,7 @@ impl std::fmt::Debug for KtAction {
         match self {
             KtAction::CounterInc { cell, value } => write!(f, "CounterInc({cell:?}, +{value})"),
             KtAction::Put(p) => write!(f, "Put({}->{})", p.src_rank, p.dst_rank),
+            KtAction::PostRecv(r) => write!(f, "PostRecv(r{} from {})", r.rank, r.src_rank),
         }
     }
 }
@@ -135,6 +146,20 @@ pub struct KtPut {
     pub src_done: Done,
     /// Fired at the destination when the payload has landed.
     pub dst_done: Done,
+}
+
+/// Descriptor of a device-initiated posted receive (see
+/// [`KtAction::PostRecv`]).
+pub struct KtRecv {
+    /// The receiving MPI rank (owns the matching engine).
+    pub rank: usize,
+    /// Concrete source selector (deferred descriptors reject wildcards).
+    pub src_rank: usize,
+    pub tag: i32,
+    pub comm: u16,
+    pub dst: BufSlice,
+    /// Fired when the matched payload has landed in `dst`.
+    pub done: Done,
 }
 
 /// The kernel-side trigger plan attached to a [`StreamOp::KtKernel`]:
@@ -182,6 +207,13 @@ impl KernelCtx {
     /// duration.
     pub fn kt_put(&mut self, frac: f64, put: KtPut) {
         self.triggers.push(KtTrigger { frac, action: KtAction::Put(put) });
+    }
+
+    /// Ring the NIC doorbell with a posted-receive descriptor at `frac`
+    /// of the kernel's duration (1.0 = the epilogue: the last wavefront
+    /// posts the receive for the next iteration's inbound data).
+    pub fn kt_recv(&mut self, frac: f64, recv: KtRecv) {
+        self.triggers.push(KtTrigger { frac, action: KtAction::PostRecv(recv) });
     }
 }
 
@@ -401,6 +433,19 @@ fn fire_kt_action(w: &mut World, core: &mut Ctx, action: KtAction) {
                 Box::new(move |w, c| {
                     crate::nic::execute_put(
                         w, c, p.src_rank, p.dst_rank, p.src, p.dst, p.src_done, p.dst_done,
+                    );
+                }),
+            );
+        }
+        KtAction::PostRecv(r) => {
+            // Doorbell + list-engine append, charged like a host-posted
+            // command plus the receive-descriptor processing.
+            let lat = w.cost.nic_cmd_post + w.cost.nic_proc + w.cost.nic_recv_post;
+            core.schedule(
+                lat,
+                Box::new(move |w, c| {
+                    crate::nic::execute_recv_post(
+                        w, c, r.rank, r.src_rank, r.tag, r.comm, r.dst, r.done,
                     );
                 }),
             );

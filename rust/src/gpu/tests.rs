@@ -415,3 +415,66 @@ fn kt_put_moves_data_mid_kernel() {
     assert_eq!(w.metrics.kt_triggers, 1);
     assert!(w.metrics.bytes_wire >= 64, "the put crossed the fabric");
 }
+
+/// `kt_recv` rings the NIC doorbell with a posted-receive descriptor at
+/// the chosen fraction of the kernel window (1.0 = epilogue): an
+/// arrival that beat the post resolves through the unexpected queue and
+/// lands once the kernel posts the descriptor.
+#[test]
+fn kt_recv_posts_receive_from_kernel_epilogue() {
+    let mut cost = presets::frontier_like();
+    cost.jitter_sigma = 0.0;
+    let eng = Engine::new(build_world(cost, Topology::new(2, 1)), 1);
+    let landed = std::sync::Arc::new(std::sync::Mutex::new(0u64));
+    let la = landed.clone();
+    eng.setup(|w, core| {
+        let src = w.bufs.alloc_init(vec![4.5; 8]);
+        let dst = w.bufs.alloc(8);
+        // The message arrives long before the kernel posts the receive.
+        let env =
+            crate::nic::Envelope { src_rank: 0, dst_rank: 1, tag: 3, comm: 0, elems: 8 };
+        crate::nic::execute_send(w, core, env, BufSlice::whole(src, 8), Done::none());
+        let sid = create_stream(w, core, 1);
+        let mut kt = KernelCtx::new();
+        kt.kt_recv(
+            1.0,
+            KtRecv {
+                rank: 1,
+                src_rank: 0,
+                tag: 3,
+                comm: 0,
+                dst: BufSlice::whole(dst, 8),
+                done: Done::call(Box::new(move |w, c| {
+                    assert_eq!(w.bufs.get(crate::world::BufId(1)), &[4.5; 8]);
+                    *la.lock().unwrap() = c.now();
+                })),
+            },
+        );
+        core.schedule(
+            50_000,
+            Box::new(move |w, c| {
+                enqueue(
+                    w,
+                    c,
+                    sid,
+                    StreamOp::KtKernel(
+                        KernelSpec {
+                            name: "epilogue_recv".into(),
+                            flops: 24_000_000,
+                            bytes: 0,
+                            payload: KernelPayload::None,
+                        },
+                        kt,
+                    ),
+                );
+            }),
+        );
+    });
+    let (w, _) = eng.run().unwrap();
+    let t = *landed.lock().unwrap();
+    assert!(t > 50_000, "landed at {t}: only after the kernel posted the descriptor");
+    assert_eq!(w.metrics.unexpected_msgs, 1, "the arrival beat the doorbell post");
+    assert_eq!(w.metrics.triggered_recvs, 1);
+    assert_eq!(w.metrics.kt_triggers, 1);
+    assert_eq!(w.metrics.memops_executed, 0, "no CP memop anywhere on the path");
+}

@@ -21,13 +21,13 @@
 //! | [`world`] | the simulated cluster state threaded through the engine |
 //! | [`costmodel`] | calibrated latencies/bandwidths of the Frontier-like testbed |
 //! | [`gpu`] | streams + control processor, stream memory ops, KT kernel hooks |
-//! | [`nic`] | Slingshot-11 counters, deferred work queues, eager/rendezvous |
+//! | [`nic`] | Slingshot-11 counters, deferred work queues (triggered sends/puts/receives), eager/rendezvous |
 //! | [`fabric`] | inter-node wire with per-port serialization + congestion metrics |
 //! | [`mpi`] | two-sided matching engine, requests, progress threads |
 //! | [`stx`] | stx v2: typed [`stx::Queue`] handles, persistent [`stx::CommPlan`]s, KT hooks, the [`stx::Variant`] axis |
 //! | [`collectives`] | ST ring / ST recursive-doubling / KT ring allreduce |
 //! | [`faces`] | the Faces halo-exchange benchmark + figure harness |
-//! | [`workloads`] | `Workload` trait, six scenarios, run scaffold, campaign driver |
+//! | [`workloads`] | `Workload` trait, seven scenarios, run scaffold, campaign driver |
 //! | [`coordinator`] | world building, cluster run loop, config, reporting |
 //! | [`runtime`] | PJRT loader for AOT HLO artifacts (feature `xla`) |
 //! | [`train`] | ST-allreduce data-parallel trainer |

@@ -16,7 +16,7 @@
 //!   faces.variant=baseline|st|st-shader|kt  faces.real=true  faces.check=true
 //!   seed=11  jitter=0.03
 //! `campaign` keys (comma lists; empty = defaults):
-//!   campaign.workloads=faces,halo3d,allreduce,alltoall,incast,allgather
+//!   campaign.workloads=faces,halo3d,allreduce,alltoall,incast,allgather,halograph
 //!   campaign.variants=baseline,st,kt,ring-st,rdbl-st,ring-kt
 //!   campaign.sizes=256,4096  campaign.topos=2x1,4x1  campaign.seeds=11,23
 //!   campaign.queues=1,2 (queues per rank)  campaign.dwq_slots=4

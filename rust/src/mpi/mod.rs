@@ -5,8 +5,11 @@
 //! matching semantics (posted-receive queue + unexpected-message queue,
 //! pairwise FIFO per (source, tag, comm), wildcards on the standard path) —
 //! plus the per-process **asynchronous progress thread** that emulates the
-//! deferred-execution features the NIC lacks (triggered receives, and all
-//! intra-node ST traffic; paper §IV).
+//! deferred-execution features the paper's ST path lacks hardware for
+//! (ST receives, and all intra-node ST traffic; paper §IV). The
+//! kernel-triggered variant's receives bypass the progress thread
+//! entirely: the NIC posts them into this matching engine itself
+//! ([`crate::nic::post_triggered_recv`]).
 //!
 //! Data paths (§II-A): inter-node transfers go through the simulated NIC
 //! and fabric; intra-node transfers use ROCr-IPC-style P2P DMA for large

@@ -331,3 +331,69 @@ fn back_to_back_barriers_do_not_cross_match() {
     })
     .unwrap();
 }
+
+/// Matching-engine accounting invariant: every delivered message bumps
+/// exactly one of `matched_posted` (matched a posted receive on
+/// arrival) or `unexpected_msgs` (buffered), for any interleaving of
+/// posts and arrivals — including wildcard selectors.
+#[test]
+fn matching_conserves_message_accounting_with_wildcards() {
+    use crate::nic::{Envelope, WireMsg};
+    let eng = Engine::new(build_world(cost(), Topology::new(2, 1)), 1);
+    eng.setup(|w, core| {
+        let bufs: Vec<BufId> = (0..4).map(|_| w.bufs.alloc(1)).collect();
+        // Two arrivals before any post, two after a wildcard post.
+        let mk = |src: usize, tag: i32, id: f32| WireMsg::Eager {
+            env: Envelope { src_rank: src, dst_rank: 1, tag, comm: 0, elems: 1 },
+            payload: vec![id],
+        };
+        deliver_from_wire(w, core, mk(0, 7, 1.0));
+        deliver_from_wire(w, core, mk(0, 8, 2.0));
+        post_recv(w, core, 1, SrcSel::Any, TagSel::Any, 0, BufSlice::whole(bufs[0], 1), Done::none());
+        post_recv(w, core, 1, SrcSel::Rank(0), TagSel::Tag(8), 0, BufSlice::whole(bufs[1], 1), Done::none());
+        post_recv(w, core, 1, SrcSel::Any, TagSel::Tag(9), 0, BufSlice::whole(bufs[2], 1), Done::none());
+        deliver_from_wire(w, core, mk(0, 9, 3.0));
+        deliver_from_wire(w, core, mk(0, 5, 4.0));
+    });
+    let (w, _) = eng.run().unwrap();
+    assert_eq!(w.metrics.matched_posted + w.metrics.unexpected_msgs, 4, "each message once");
+    assert_eq!(w.metrics.matched_posted, 1, "only the tag-9 arrival found a posted match");
+    assert_eq!(w.metrics.unexpected_msgs, 3);
+    // FIFO from the unexpected queue: the Any/Any post takes the OLDEST
+    // buffered message (tag 7), the (0, 8) post its exact match.
+    assert_eq!(w.bufs.get(BufId(0)), &[1.0]);
+    assert_eq!(w.bufs.get(BufId(1)), &[2.0]);
+    assert_eq!(w.bufs.get(BufId(2)), &[3.0]);
+    // The tag-5 arrival stays unexpected; nothing matches it.
+    assert_eq!(w.procs[1].unexpected.len(), 1);
+    assert_eq!(w.procs[1].unexpected[0].env.tag, 5);
+    assert!(w.procs[1].posted.is_empty());
+}
+
+/// Wildcard receives drain the unexpected queue in arrival (FIFO)
+/// order, and posted-queue scans run in posting order — the two rules
+/// that make the match set independent of post-vs-arrival interleaving
+/// (the property test in tests/properties.rs shuffles both).
+#[test]
+fn wildcard_matching_is_fifo_on_both_queues() {
+    use crate::nic::{Envelope, WireMsg};
+    let eng = Engine::new(build_world(cost(), Topology::new(3, 1)), 1);
+    eng.setup(|w, core| {
+        let bufs: Vec<BufId> = (0..2).map(|_| w.bufs.alloc(1)).collect();
+        let mk = |src: usize, id: f32| WireMsg::Eager {
+            env: Envelope { src_rank: src, dst_rank: 2, tag: 1, comm: 0, elems: 1 },
+            payload: vec![id],
+        };
+        // Posted order: (src1) before (Any). The src0 arrival must skip
+        // the src1-selector and land in the Any receive.
+        post_recv(w, core, 2, SrcSel::Rank(1), TagSel::Tag(1), 0, BufSlice::whole(bufs[0], 1), Done::none());
+        post_recv(w, core, 2, SrcSel::Any, TagSel::Any, 0, BufSlice::whole(bufs[1], 1), Done::none());
+        deliver_from_wire(w, core, mk(0, 10.0));
+        deliver_from_wire(w, core, mk(1, 20.0));
+    });
+    let (w, _) = eng.run().unwrap();
+    assert_eq!(w.bufs.get(BufId(0)), &[20.0], "src1 selector got the src1 message");
+    assert_eq!(w.bufs.get(BufId(1)), &[10.0], "the Any receive got the src0 message");
+    assert_eq!(w.metrics.matched_posted, 2);
+    assert_eq!(w.metrics.unexpected_msgs, 0);
+}

@@ -15,9 +15,16 @@
 //!   reaches the threshold;
 //! * supported DWQ ops: tagged sends (what ST uses), plus one-sided put
 //!   and fetching/non-fetching atomics (used by the collectives layer);
-//! * **no triggered receives** — faithfully absent, forcing the MPI layer
-//!   to emulate ST receives with a progress thread (§IV-A2), which is the
-//!   effect the paper measures;
+//! * **triggered receives** ([`post_triggered_recv`]) — absent from the
+//!   paper's Slingshot-11 testbed and modeled here after the follow-on
+//!   receive-side offload (arXiv 2306.15773, 2406.05594): a fired
+//!   descriptor is appended to the matching engine by the NIC's
+//!   list-processing engine itself, so matched payloads land without a
+//!   host `ResumeHost`. The paper's ST path deliberately does **not**
+//!   use them — its receives stay progress-thread emulated (§IV-A2),
+//!   which is the penalty the paper measures — while the
+//!   kernel-triggered variant rides the hardware path (see
+//!   `stx`/DESIGN.md §Triggered receives);
 //! * **eager/rendezvous** protocols with hardware tag matching on arrival
 //!   (delivery calls into the per-rank matching engine, the moral
 //!   equivalent of the NIC's list-processing engine).
@@ -334,6 +341,84 @@ pub fn execute_send(w: &mut World, core: &mut Ctx, env: Envelope, src: BufSlice,
             }),
         );
     }
+}
+
+/// Post a *triggered* tagged receive to the NIC command queue: when
+/// `trigger >= threshold`, the NIC's list-processing engine appends the
+/// receive descriptor to `rank`'s matching engine itself — no host
+/// `ResumeHost`, no progress thread. Interleavings with early arrivals
+/// resolve through the standard unexpected-message queue: a payload that
+/// beat the descriptor is consumed at post time, exactly as if a host
+/// had posted the receive. Wildcards are not supported (deferred
+/// descriptors carry concrete selectors, §III-D).
+///
+/// The caller owns a DWQ descriptor slot until the trigger fires (see
+/// [`dwq_reserve`]); like [`post_triggered_send`], the fire releases it.
+/// `done` fires when the matched payload has landed in `dst`.
+#[allow(clippy::too_many_arguments)]
+pub fn post_triggered_recv(
+    w: &mut World,
+    core: &mut Ctx,
+    trigger: CellId,
+    threshold: u64,
+    rank: usize,
+    src_rank: usize,
+    tag: i32,
+    comm: u16,
+    dst: BufSlice,
+    done: Done,
+) {
+    let node = w.topo.node_of(rank);
+    core.on_ge(
+        trigger,
+        threshold,
+        format!("nic{node} DWQ recv r{rank} from {src_rank} tag {tag}"),
+        Box::new(move |w, core| {
+            w.metrics.dwq_triggered += 1;
+            // The descriptor leaves the deferred-work queue: return its
+            // slot (callers that never reserved are tolerated, as with
+            // triggered sends).
+            let rel = dwq_released_cell(w, core, node);
+            core.add_cell(rel, 1);
+            let lat = w.cost.nic_trigger_latency + w.cost.nic_recv_post;
+            core.schedule(
+                lat,
+                Box::new(move |w, core| {
+                    execute_recv_post(w, core, rank, src_rank, tag, comm, dst, done)
+                }),
+            );
+        }),
+    );
+}
+
+/// Immediately append a receive descriptor to `rank`'s matching engine
+/// on the NIC's behalf (the list-engine append both NIC-driven receive
+/// paths share): consumes a matching unexpected message if one already
+/// arrived, lands in the posted-receive queue otherwise. Shared by the
+/// deferred DWQ path ([`post_triggered_recv`]) and the kernel-triggered
+/// doorbell path ([`crate::gpu::KtAction::PostRecv`]).
+#[allow(clippy::too_many_arguments)]
+pub fn execute_recv_post(
+    w: &mut World,
+    core: &mut Ctx,
+    rank: usize,
+    src_rank: usize,
+    tag: i32,
+    comm: u16,
+    dst: BufSlice,
+    done: Done,
+) {
+    w.metrics.triggered_recvs += 1;
+    crate::mpi::post_recv(
+        w,
+        core,
+        rank,
+        crate::mpi::SrcSel::Rank(src_rank),
+        crate::mpi::TagSel::Tag(tag),
+        comm,
+        dst,
+        done,
+    );
 }
 
 /// Issue the rendezvous Get: the destination NIC (having matched an RTS)

@@ -267,3 +267,130 @@ fn dwq_slots_exhaust_and_release_on_trigger() {
     let (w, _) = eng.run().unwrap();
     assert_eq!(w.metrics.dwq_triggered, 1);
 }
+
+/// Triggered receives: the descriptor is armed against the counter, the
+/// NIC posts it into the matching engine only after the threshold, and
+/// a matching posted-path delivery lands with no host involvement.
+#[test]
+fn triggered_recv_defers_until_threshold() {
+    let eng = engine(2, 1);
+    let landed_at = std::sync::Arc::new(std::sync::Mutex::new(0u64));
+    let la = landed_at.clone();
+    eng.setup(|w, core| {
+        let src = w.bufs.alloc_init(vec![3.5; 16]);
+        let dst = w.bufs.alloc(16);
+        let trig = alloc_counter(w, core, 1, "rt").unwrap();
+        let env = Envelope { src_rank: 0, dst_rank: 1, tag: 8, comm: 0, elems: 16 };
+        post_triggered_recv(
+            w,
+            core,
+            trig,
+            1,
+            1,
+            0,
+            8,
+            0,
+            BufSlice::whole(dst, 16),
+            Done::call(Box::new(move |w, core| {
+                assert_eq!(w.bufs.get(crate::world::BufId(1))[0], 3.5);
+                *la.lock().unwrap() = core.now();
+            })),
+        );
+        // The message is sent immediately; the recv descriptor fires
+        // only at t = 80_000, so the arrival buffers as unexpected.
+        execute_send(w, core, env, BufSlice::whole(src, 16), Done::none());
+        core.schedule(80_000, Box::new(move |_, c| c.write_cell(trig, 1)));
+    });
+    let (w, _) = eng.run().unwrap();
+    let t = *landed_at.lock().unwrap();
+    assert!(t > 80_000, "landed at {t}, before the recv trigger");
+    assert_eq!(w.metrics.unexpected_msgs, 1, "the payload beat the descriptor");
+    assert_eq!(w.metrics.triggered_recvs, 1);
+    assert_eq!(w.metrics.dwq_triggered, 1, "the recv descriptor fired from the DWQ");
+}
+
+/// Triggered receive firing BEFORE the arrival: the descriptor waits in
+/// the posted queue and the arrival hardware-matches it directly (no
+/// unexpected buffering).
+#[test]
+fn triggered_recv_before_arrival_matches_posted() {
+    let eng = engine(2, 1);
+    let got = std::sync::Arc::new(std::sync::Mutex::new(0.0f32));
+    let gc = got.clone();
+    eng.setup(|w, core| {
+        let src = w.bufs.alloc_init(vec![5.0; 8]);
+        let dst = w.bufs.alloc(8);
+        let trig = alloc_counter(w, core, 1, "rt").unwrap();
+        let env = Envelope { src_rank: 0, dst_rank: 1, tag: 2, comm: 0, elems: 8 };
+        post_triggered_recv(
+            w,
+            core,
+            trig,
+            1,
+            1,
+            0,
+            2,
+            0,
+            BufSlice::whole(dst, 8),
+            Done::call(Box::new(move |w, _| {
+                *gc.lock().unwrap() = w.bufs.get(crate::world::BufId(1))[0];
+            })),
+        );
+        // Trigger at once; the send only starts at t = 100_000.
+        core.schedule(0, Box::new(move |_, c| c.write_cell(trig, 1)));
+        core.schedule(
+            100_000,
+            Box::new(move |w: &mut World, c: &mut Ctx| {
+                execute_send(w, c, env, BufSlice::whole(src, 8), Done::none());
+            }),
+        );
+    });
+    let (w, _) = eng.run().unwrap();
+    assert_eq!(*got.lock().unwrap(), 5.0);
+    assert_eq!(w.metrics.unexpected_msgs, 0, "the descriptor was already posted");
+    assert_eq!(w.metrics.matched_posted, 1);
+    assert_eq!(w.metrics.triggered_recvs, 1);
+}
+
+/// The recv descriptor occupies a DWQ slot until its trigger fires,
+/// exactly like a triggered send.
+#[test]
+fn triggered_recv_releases_dwq_slot_on_fire() {
+    let eng = engine(2, 1);
+    eng.setup(|w, core| {
+        w.cost.dwq_slots_per_nic = 1;
+        let src = w.bufs.alloc_init(vec![2.0; 8]);
+        let dst = w.bufs.alloc(8);
+        let trig = alloc_counter(w, core, 1, "rt").unwrap();
+        let env = Envelope { src_rank: 0, dst_rank: 1, tag: 9, comm: 0, elems: 8 };
+        assert!(dwq_reserve(w, core, 1).is_ok());
+        assert_eq!(dwq_reserve(w, core, 1), Err(DwqFull { node: 1 }), "one slot only");
+        post_triggered_recv(
+            w,
+            core,
+            trig,
+            1,
+            1,
+            0,
+            9,
+            0,
+            BufSlice::whole(dst, 8),
+            Done::none(),
+        );
+        core.schedule(
+            1_000,
+            Box::new(move |w: &mut World, c: &mut Ctx| {
+                execute_send(w, c, env, BufSlice::whole(src, 8), Done::none());
+            }),
+        );
+        core.schedule(2_000, Box::new(move |_, c| c.write_cell(trig, 1)));
+        core.schedule(
+            200_000,
+            Box::new(|w, core| {
+                assert!(dwq_reserve(w, core, 1).is_ok(), "slot must be free after the fire");
+            }),
+        );
+    });
+    let (w, _) = eng.run().unwrap();
+    assert_eq!(w.metrics.triggered_recvs, 1);
+}

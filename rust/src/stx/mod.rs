@@ -29,12 +29,25 @@
 //!   the host baseline, ST, ST-shader, and KT variants all run through
 //!   the same plan object.
 //!
-//! Routing mirrors §IV faithfully:
+//! Routing mirrors §IV faithfully for the paper's ST variants:
 //! * inter-node sends → NIC DWQ triggered sends (full hardware offload);
-//! * receives (any locality) and all intra-node traffic → emulated by the
-//!   per-process progress thread, charged on its serial timeline;
+//! * ST receives (any locality) and all intra-node traffic → emulated by
+//!   the per-process progress thread, charged on its serial timeline;
 //! * inter-node rendezvous sends get a small progress-thread assist for
 //!   completion handling (§V-E).
+//!
+//! The [`Variant::KernelTriggered`] path additionally completes the
+//! *receive* half of the offload story (the follow-on work, arXiv
+//! 2306.15773 / 2406.05594): receives on a KT queue ride NIC
+//! **triggered-receive descriptors** ([`crate::nic::post_triggered_recv`])
+//! — armed against the queue's trigger counter, posted into the matching
+//! engine by the NIC's list engine when the kernel's mid-window trigger
+//! fires, completion-counted in hardware. No `ResumeHost`, no progress
+//! thread anywhere on a KT receive. [`Queue::kt_recv`] goes one step
+//! further: the kernel itself rings the doorbell with the receive
+//! descriptor at a chosen fraction of its window (1.0 = epilogue), the
+//! device-side dual of the prologue completion wait
+//! ([`Queue::kt_wait`]). See DESIGN.md §Triggered receives.
 //!
 //! Wildcards are rejected (§III-D): deferred operations require a
 //! concrete source rank and tag, checked eagerly at plan-build time.
@@ -47,10 +60,11 @@
 //! the one host-side wait a KT timed region performs (at its very end).
 //! [`Variant`] names the resulting axis every experiment sweeps.
 //!
-//! The v1 free functions (`create_queue`, `enqueue_send`, …, keyed by a
-//! raw `usize` queue id) remain as `#[deprecated]` shims delegating to
-//! the same internals for one release; see DESIGN.md §stx v2 for the
-//! migration table.
+//! The v1 free-function surface (`create_queue`, `enqueue_send`, …,
+//! keyed by raw `usize` queue ids) completed its one-release
+//! `#[deprecated]` migration window and has been removed; the typed
+//! [`Queue`]/[`CommPlan`] API is the only surface (DESIGN.md §stx v2
+//! keeps the migration table for reference).
 #![deny(missing_docs)]
 
 use crate::costmodel::MemOpFlavor;
@@ -207,12 +221,17 @@ pub struct MpixQueue {
     pub rank: usize,
     /// The GPU stream this queue is bound to.
     pub stream: StreamId,
+    /// The communication variant the queue was created for. Receives on
+    /// [`Variant::KernelTriggered`] queues ride NIC triggered-receive
+    /// descriptors; every other variant keeps the paper's
+    /// progress-thread emulation (§IV-A2).
+    pub variant: Variant,
     /// NIC hardware trigger counter (GPU-CP visible).
     pub trig_ctr: CellId,
     /// NIC hardware completion counter (GPU-CP visible).
     pub comp_ctr: CellId,
     /// Stream memory op implementation used for this queue's
-    /// start/wait operations (Hip or hand-coded Shader, §V-F).
+    /// start/wait operations (derived from the variant, §V-F).
     pub flavor: MemOpFlavor,
     /// Number of `enqueue_start` calls so far == the value the next
     /// trigger write stores.
@@ -231,14 +250,14 @@ pub struct MpixQueue {
 }
 
 // ---------------------------------------------------------------------
-// Internals shared by the typed API, the plan layer, and the v1 shims
+// Internals shared by the typed API and the plan layer
 // ---------------------------------------------------------------------
 
 fn create_queue_impl(
     hctx: &mut HostCtx<World>,
     rank: usize,
     stream: StreamId,
-    flavor: MemOpFlavor,
+    variant: Variant,
 ) -> Result<usize, StError> {
     let call = hctx.with(|w, _| w.cost.host_enqueue_call);
     hctx.advance(call);
@@ -259,9 +278,10 @@ fn create_queue_impl(
         w.queues.push(MpixQueue {
             rank,
             stream,
+            variant,
             trig_ctr,
             comp_ctr,
-            flavor,
+            flavor: variant.flavor(),
             epoch: 0,
             pending_since_start: 0,
             started_total: 0,
@@ -313,6 +333,28 @@ fn reserve_send_slot(
     let rank = w.queues[queue].rank;
     if !w.topo.same_node(rank, dst) {
         let node = w.topo.node_of(rank);
+        nic::dwq_reserve(w, core, node).map_err(|f| StError::DwqFull(f.node))?;
+        w.queues[queue].dwq_posts += 1;
+    }
+    Ok(())
+}
+
+/// Freed-queue check plus DWQ slot reservation for one deferred receive.
+/// Hardware triggered-receive descriptors ([`Variant::KernelTriggered`]
+/// queues) sit in the NIC's deferred-work queue exactly like triggered
+/// sends, so they consume a slot until their trigger fires;
+/// progress-emulated receives (every other variant) hold no NIC
+/// resource. As with sends, once this returns `Ok` the arm cannot fail.
+fn reserve_recv_slot(
+    w: &mut World,
+    core: &mut crate::world::Ctx,
+    queue: usize,
+) -> Result<(), StError> {
+    if w.queues[queue].freed {
+        return Err(StError::QueueFreed(queue));
+    }
+    if w.queues[queue].variant == Variant::KernelTriggered {
+        let node = w.topo.node_of(w.queues[queue].rank);
         nic::dwq_reserve(w, core, node).map_err(|f| StError::DwqFull(f.node))?;
         w.queues[queue].dwq_posts += 1;
     }
@@ -391,11 +433,36 @@ fn arm_send(
     }
 }
 
-/// Arm one deferred receive on `queue` for the next trigger epoch. The
-/// NIC has no triggered receives (§IV-A2), so the progress thread
-/// emulates the deferred semantics regardless of locality: it observes
-/// the trigger, posts the receive into the matching engine, and mediates
-/// the completion-counter update.
+/// Completion actions of a hardware-posted receive, shared by the
+/// DWQ-triggered and kernel-doorbell paths: complete the request at
+/// landing, and let the NIC bump the completion counter
+/// `nic_completion` later (a typed event — no closure beyond this hop).
+fn hw_recv_done(req_cell: CellId, comp: CellId) -> Done {
+    Done {
+        cells: vec![req_cell],
+        cb: Some(Box::new(move |w, core| {
+            let c = w.cost.nic_completion;
+            core.schedule_cell_add(c, comp, 1);
+        })),
+    }
+}
+
+/// Arm one deferred receive on `queue` for the next trigger epoch.
+///
+/// Two hardware stories, keyed by the queue's variant:
+///
+/// * [`Variant::KernelTriggered`] — the NIC's triggered-receive path
+///   ([`crate::nic::post_triggered_recv`], the receive half of the
+///   offload story): the descriptor is armed in the deferred-work queue,
+///   the trigger fire hands it to the NIC list engine, matched payloads
+///   land without any host involvement, and the completion counter is
+///   bumped in hardware. The caller has already passed
+///   [`reserve_recv_slot`].
+/// * everything else — the paper's testbed lacks triggered receives
+///   (§IV-A2), so the progress thread emulates the deferred semantics
+///   regardless of locality: it observes the trigger, posts the receive
+///   into the matching engine, and mediates the completion-counter
+///   update.
 #[allow(clippy::too_many_arguments)]
 fn arm_recv(
     w: &mut World,
@@ -413,6 +480,14 @@ fn arm_recv(
     q.pending_since_start += 1;
     let trig = q.trig_ctr;
     let comp = q.comp_ctr;
+
+    if q.variant == Variant::KernelTriggered {
+        // Hardware triggered receive: the NIC bumps the completion
+        // counter itself once the matched payload has landed.
+        let done = hw_recv_done(req_cell, comp);
+        nic::post_triggered_recv(w, core, trig, threshold, rank, src_rank, tag, comm, dst, done);
+        return;
+    }
 
     core.on_ge(
         trig,
@@ -479,12 +554,46 @@ fn recv_impl(
     let call = hctx.with(|w, _| w.cost.host_enqueue_call);
     hctx.advance(call);
     hctx.with(|w, core| {
-        if w.queues[queue].freed {
-            return Err(StError::QueueFreed(queue));
-        }
+        reserve_recv_slot(w, core, queue)?;
         let req = w.new_request(core, "st_recv");
         let req_cell = w.request_done_cell(req);
         arm_recv(w, core, queue, src_rank, dst, tag, comm, req_cell);
+        Ok(req)
+    })
+}
+
+/// Fold a device-initiated posted receive into `kernel`: at `frac` of
+/// its window (1.0 = the epilogue wavefront) the kernel rings the NIC
+/// doorbell with the descriptor, the list engine appends it to the
+/// matching engine, and the completion counter is bumped in hardware
+/// when the matched payload lands. The op joins `started_total`
+/// directly — no trigger covers it — so `kt_wait`/`drain` thresholds
+/// taken after this call include it.
+#[allow(clippy::too_many_arguments)]
+fn kt_recv_impl(
+    hctx: &mut HostCtx<World>,
+    queue: usize,
+    kernel: &mut KernelCtx,
+    frac: f64,
+    src_rank: usize,
+    dst: BufSlice,
+    tag: i32,
+    comm: u16,
+) -> Result<usize, StError> {
+    let call = hctx.with(|w, _| w.cost.host_enqueue_call);
+    hctx.advance(call);
+    hctx.with(|w, core| {
+        if w.queues[queue].freed {
+            return Err(StError::QueueFreed(queue));
+        }
+        let req = w.new_request(core, "kt_recv");
+        let req_cell = w.request_done_cell(req);
+        let q = &mut w.queues[queue];
+        let rank = q.rank;
+        let comp = q.comp_ctr;
+        q.started_total += 1;
+        let done = hw_recv_done(req_cell, comp);
+        kernel.kt_recv(frac, gpu::KtRecv { rank, src_rank, tag, comm, dst, done });
         Ok(req)
     })
 }
@@ -582,6 +691,39 @@ fn drain_impl(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
     Ok(())
 }
 
+/// Charge one enqueue call, then run `attempt` (a reserve-and-arm
+/// closure) until it arms, absorbing DWQ backpressure: a full
+/// deferred-work queue stalls the host until the NIC releases a
+/// descriptor instead of failing. The stall is recorded once per
+/// logical wait — on `qid` and globally — even if a freed slot is
+/// snatched by a concurrent producer and the wait repeats. Shared by
+/// the plan layer's send and receive arms so their stall semantics
+/// cannot diverge.
+fn arm_with_backpressure(
+    hctx: &mut HostCtx<World>,
+    qid: usize,
+    mut attempt: impl FnMut(&mut World, &mut crate::world::Ctx) -> Result<(), StError>,
+) -> Result<(), StError> {
+    let call = hctx.with(|w, _| w.cost.host_enqueue_call);
+    hctx.advance(call);
+    let mut stalled = false;
+    loop {
+        match hctx.with(&mut attempt) {
+            Err(StError::DwqFull(node)) => {
+                if !stalled {
+                    stalled = true;
+                    hctx.with(|w, _| {
+                        w.metrics.dwq_slot_waits += 1;
+                        w.queues[qid].dwq_slot_waits += 1;
+                    });
+                }
+                wait_for_dwq_slot(hctx, node);
+            }
+            other => return other,
+        }
+    }
+}
+
 /// Block the host until `node`'s deferred-work queue releases a
 /// descriptor. The *caller* records the stall (once per logical wait,
 /// even if a released slot is lost to a concurrent producer and the
@@ -603,9 +745,9 @@ fn wait_for_dwq_slot(hctx: &mut HostCtx<World>, node: usize) {
 
 /// Typed, owned handle to an `MPIX_Queue` (stx v2). Carries its variant,
 /// rank, and stream; the NIC resources it holds (two hardware counters)
-/// return to the node's pool when the handle is [`Queue::free`]d. Raw
-/// `usize` ids remain available through [`Queue::id`] for the deprecated
-/// v1 shims.
+/// return to the node's pool when the handle is [`Queue::free`]d. The
+/// raw `usize` id behind the handle remains readable through
+/// [`Queue::id`] for diagnostics.
 #[derive(Debug)]
 pub struct Queue {
     id: usize,
@@ -636,11 +778,12 @@ impl Queue {
         stream: StreamId,
         variant: Variant,
     ) -> Result<Queue, StError> {
-        let id = create_queue_impl(hctx, rank, stream, variant.flavor())?;
+        let id = create_queue_impl(hctx, rank, stream, variant)?;
         Ok(Queue { id, rank, stream, variant })
     }
 
-    /// The raw world-side queue id (interop with the deprecated v1 API).
+    /// The raw world-side queue id (diagnostics and world-state
+    /// inspection; the id indexes `World::queues`).
     pub fn id(&self) -> usize {
         self.id
     }
@@ -675,8 +818,15 @@ impl Queue {
         send_impl(hctx, self.id, dst, src, tag, comm)
     }
 
-    /// `MPIX_Enqueue_recv`: deferred tagged receive (progress-thread
-    /// emulated at any locality, §IV-A2). Returns a request id.
+    /// `MPIX_Enqueue_recv`: deferred tagged receive. On a
+    /// [`Variant::KernelTriggered`] queue this arms a NIC
+    /// triggered-receive descriptor (hardware-posted into the matching
+    /// engine when the trigger fires, hardware completion counting,
+    /// no host or progress-thread involvement) and reserves a DWQ
+    /// descriptor slot — a full DWQ fails with [`StError::DwqFull`],
+    /// leak-free. On every other variant the receive is progress-thread
+    /// emulated at any locality (§IV-A2), as on the paper's testbed.
+    /// Returns a request id.
     pub fn recv(
         &self,
         hctx: &mut HostCtx<World>,
@@ -727,6 +877,29 @@ impl Queue {
         kernel: &mut KernelCtx,
     ) -> Result<(), StError> {
         kt_wait_impl(hctx, self.id, kernel)
+    }
+
+    /// Kernel-triggered receive — the device-side dual of
+    /// [`Queue::kt_wait`]'s prologue hook: at `frac` of `kernel`'s
+    /// window (1.0 = the epilogue wavefront) the kernel itself rings
+    /// the NIC doorbell with a posted-receive descriptor. The NIC's
+    /// list engine appends it to the matching engine — early arrivals
+    /// resolve through the unexpected-message queue — and bumps the
+    /// completion counter in hardware when the payload lands. Counts
+    /// toward `kt_wait`/[`Queue::drain`] thresholds taken after this
+    /// call. Returns a request id usable with host-side `mpi::wait`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn kt_recv(
+        &self,
+        hctx: &mut HostCtx<World>,
+        kernel: &mut KernelCtx,
+        frac: f64,
+        src_rank: usize,
+        dst: BufSlice,
+        tag: i32,
+        comm: u16,
+    ) -> Result<usize, StError> {
+        kt_recv_impl(hctx, self.id, kernel, frac, src_rank, dst, tag, comm)
     }
 
     /// Host-side completion drain: block the host until every started
@@ -845,7 +1018,7 @@ impl CommPlanBuilder {
 
     /// Record a *posted* receive: re-posted as a standard `MPI_Irecv` by
     /// [`CommPlan::post_recvs`] each iteration (the paper's deliberate
-    /// receive-side choice while the NIC lacks triggered receives,
+    /// receive-side choice on a testbed without triggered receives,
     /// §V-B). Wildcards are allowed here, as on any standard receive.
     pub fn recv(&mut self, src: SrcSel, tag: TagSel, comm: u16, dst: BufSlice) {
         self.recvs.push(RecvRec { src, tag, comm, bufs: [dst, dst], deferred: false, qslot: 0 });
@@ -858,7 +1031,10 @@ impl CommPlanBuilder {
     }
 
     /// Record a *deferred* receive on the plan's queues (collective-style
-    /// patterns): armed and triggered with the sends each round.
+    /// patterns): armed and triggered with the sends each round — as a
+    /// NIC triggered-receive descriptor on [`Variant::KernelTriggered`]
+    /// plans, progress-thread emulated otherwise, and a late host
+    /// `MPI_Irecv` fallback in host-variant rounds.
     /// Wildcards are rejected eagerly (§III-D).
     pub fn recv_deferred(
         &mut self,
@@ -1038,40 +1214,26 @@ impl CommPlan {
             .collect()
     }
 
-    /// Arm one plan send, absorbing DWQ backpressure: a full deferred-
-    /// work queue stalls the host until the NIC releases a descriptor
-    /// (recorded as a `dwq_slot_waits` event) instead of failing.
+    /// Arm one plan send through the shared backpressure loop: a full
+    /// deferred-work queue stalls the host until the NIC releases a
+    /// descriptor (recorded as a `dwq_slot_waits` event) instead of
+    /// failing.
     fn arm_plan_send(&self, hctx: &mut HostCtx<World>, s: &PlanSend) -> Result<(), StError> {
         let qid = self.queues[s.rec.qslot];
         let (dst, src, tag, comm) = (s.rec.dst, s.rec.src, s.rec.tag, s.rec.comm);
         let req_cell = s.req_cell;
-        let call = hctx.with(|w, _| w.cost.host_enqueue_call);
-        hctx.advance(call);
-        let mut stalled = false;
-        loop {
-            let r = hctx.with(|w, core| {
-                reserve_send_slot(w, core, qid, dst)?;
-                arm_send(w, core, qid, dst, src, tag, comm, req_cell);
-                Ok(())
-            });
-            match r {
-                Err(StError::DwqFull(node)) => {
-                    // One logical stall per op, even if a freed slot is
-                    // snatched by a concurrent producer and we re-wait.
-                    if !stalled {
-                        stalled = true;
-                        hctx.with(|w, _| {
-                            w.metrics.dwq_slot_waits += 1;
-                            w.queues[qid].dwq_slot_waits += 1;
-                        });
-                    }
-                    wait_for_dwq_slot(hctx, node);
-                }
-                other => return other,
-            }
-        }
+        arm_with_backpressure(hctx, qid, move |w, core| {
+            reserve_send_slot(w, core, qid, dst)?;
+            arm_send(w, core, qid, dst, src, tag, comm, req_cell);
+            Ok(())
+        })
     }
 
+    /// Arm one plan receive through the same backpressure loop as
+    /// `arm_plan_send`: on KT queues the hardware triggered-receive
+    /// descriptor needs a DWQ slot, and a full deferred-work queue
+    /// stalls the host until the NIC releases one (a `dwq_slot_waits`
+    /// event) instead of failing.
     fn arm_plan_recv(&self, hctx: &mut HostCtx<World>, r: &PlanRecv) -> Result<(), StError> {
         let qid = self.queues[r.rec.qslot];
         let (src, tag) = match (r.rec.src, r.rec.tag) {
@@ -1081,12 +1243,8 @@ impl CommPlan {
         };
         let (dst, comm) = (r.rec.bufs[0], r.rec.comm);
         let req_cell = r.req_cell.expect("deferred recv carries a persistent request");
-        let call = hctx.with(|w, _| w.cost.host_enqueue_call);
-        hctx.advance(call);
-        hctx.with(|w, core| {
-            if w.queues[qid].freed {
-                return Err(StError::QueueFreed(qid));
-            }
+        arm_with_backpressure(hctx, qid, move |w, core| {
+            reserve_recv_slot(w, core, qid)?;
             arm_recv(w, core, qid, src, dst, tag, comm, req_cell);
             Ok(())
         })
@@ -1231,98 +1389,6 @@ pub fn validate_selectors(src: SrcSel, tag: TagSel) -> Result<(), StError> {
         return Err(StError::WildcardUnsupported);
     }
     Ok(())
-}
-
-// ---------------------------------------------------------------------
-// Deprecated v1 shims (raw usize queue ids) — one-PR migration window
-// ---------------------------------------------------------------------
-
-/// Create an `MPIX_Queue` bound to `stream` (local operation, §III-A).
-///
-/// # Panics
-///
-/// Panics when the node's NIC counter pool (`cost.nic_counter_limit`)
-/// is exhausted — the v1 signature has no error channel. Use
-/// [`Queue::create`] to handle [`StError::CountersExhausted`] instead.
-#[deprecated(note = "stx v2: use stx::Queue::create (typed handle, leak-free error paths)")]
-pub fn create_queue(
-    hctx: &mut HostCtx<World>,
-    rank: usize,
-    stream: StreamId,
-    flavor: MemOpFlavor,
-) -> usize {
-    create_queue_impl(hctx, rank, stream, flavor).expect("NIC counter pool exhausted")
-}
-
-/// Release an `MPIX_Queue`'s internal resources.
-#[deprecated(note = "stx v2: use stx::Queue::free")]
-pub fn free_queue(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
-    free_queue_impl(hctx, queue)
-}
-
-/// `MPIX_Enqueue_send`: deferred tagged send on `queue`.
-#[deprecated(note = "stx v2: use stx::Queue::send (or record the pattern in a stx::CommPlan)")]
-pub fn enqueue_send(
-    hctx: &mut HostCtx<World>,
-    queue: usize,
-    dst: usize,
-    src: BufSlice,
-    tag: i32,
-    comm: u16,
-) -> Result<usize, StError> {
-    send_impl(hctx, queue, dst, src, tag, comm)
-}
-
-/// `MPIX_Enqueue_recv`: deferred tagged receive on `queue`.
-#[deprecated(note = "stx v2: use stx::Queue::recv (or record the pattern in a stx::CommPlan)")]
-pub fn enqueue_recv(
-    hctx: &mut HostCtx<World>,
-    queue: usize,
-    src_rank: usize,
-    dst: BufSlice,
-    tag: i32,
-    comm: u16,
-) -> Result<usize, StError> {
-    recv_impl(hctx, queue, src_rank, dst, tag, comm)
-}
-
-/// `MPIX_Enqueue_start`: append the batched `writeValue64` trigger.
-#[deprecated(note = "stx v2: use stx::Queue::start (or stx::CommPlan::round)")]
-pub fn enqueue_start(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
-    start_impl(hctx, queue)
-}
-
-/// `MPIX_Enqueue_wait`: append a `waitValue64` on the completion counter.
-#[deprecated(note = "stx v2: use stx::Queue::wait (or stx::CommPlan::complete)")]
-pub fn enqueue_wait(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
-    wait_impl(hctx, queue)
-}
-
-/// Kernel-triggered start riding `kernel` at `frac` of its window.
-#[deprecated(note = "stx v2: use stx::Queue::kt_start (or stx::CommPlan::round)")]
-pub fn kt_start(
-    hctx: &mut HostCtx<World>,
-    queue: usize,
-    kernel: &mut KernelCtx,
-    frac: f64,
-) -> Result<(), StError> {
-    kt_start_impl(hctx, queue, kernel, frac)
-}
-
-/// Kernel-triggered wait riding `kernel`'s prologue.
-#[deprecated(note = "stx v2: use stx::Queue::kt_wait (or stx::CommPlan::round)")]
-pub fn kt_wait(
-    hctx: &mut HostCtx<World>,
-    queue: usize,
-    kernel: &mut KernelCtx,
-) -> Result<(), StError> {
-    kt_wait_impl(hctx, queue, kernel)
-}
-
-/// Host-side completion drain of `queue`.
-#[deprecated(note = "stx v2: use stx::Queue::drain (or stx::CommPlan::drain)")]
-pub fn queue_drain(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
-    drain_impl(hctx, queue)
 }
 
 #[cfg(test)]

@@ -26,7 +26,7 @@ use crate::costmodel::presets;
 use crate::sim::sweep;
 use crate::world::Topology;
 
-use super::{registry, ScenarioCfg, ScenarioRun, Validation, Workload};
+use super::{registry, QueueSlotStats, ScenarioCfg, ScenarioRun, Validation, Workload};
 
 /// What to run: empty vectors mean "use the defaults" (all workloads,
 /// each workload's own variants and default sizes).
@@ -134,6 +134,14 @@ pub struct CampaignCell {
     /// Peak concurrent DWQ occupancy of the first seed's run (HTQ
     /// pressure high-water mark).
     pub dwq_peak: u64,
+    /// The aggregated `dwq waits`/`dwq posts` split per within-rank
+    /// queue slot (first seed's run; empty when the run created no
+    /// queues or the workload cannot observe them).
+    pub per_queue: Vec<QueueSlotStats>,
+    /// Messages that arrived before a matching receive was posted
+    /// (first seed's run) — the matching engine's unexpected-path
+    /// pressure the `halograph` workload is built to drive.
+    pub unexpected_msgs: u64,
     /// Engine events of the first seed's run.
     pub events: u64,
 }
@@ -209,10 +217,22 @@ impl CampaignReport {
                 Some(d) => s.push_str(&format!("\"delta_vs_ref_pct\": {d:.3}, ")),
                 None => s.push_str("\"delta_vs_ref_pct\": null, "),
             }
+            let dwq_queues = c
+                .per_queue
+                .iter()
+                .map(|q| {
+                    format!(
+                        "{{\"slot\": {}, \"dwq_posts\": {}, \"dwq_slot_waits\": {}}}",
+                        q.slot, q.dwq_posts, q.dwq_slot_waits
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join(", ");
             s.push_str(&format!(
                 "\"validation\": \"{}\", \"bytes_wire\": {}, \"wire_msgs\": {}, \
                  \"max_ingress_wait_ns\": {}, \"max_egress_wait_ns\": {}, \
-                 \"dwq_slot_waits\": {}, \"dwq_peak\": {}, \"events\": {} }}",
+                 \"dwq_slot_waits\": {}, \"dwq_peak\": {}, \"dwq_queues\": [{}], \
+                 \"unexpected_msgs\": {}, \"events\": {} }}",
                 json_escape(&c.validation),
                 c.bytes_wire,
                 c.wire_msgs,
@@ -220,6 +240,8 @@ impl CampaignReport {
                 c.max_egress_wait_ns,
                 c.dwq_slot_waits,
                 c.dwq_peak,
+                dwq_queues,
+                c.unexpected_msgs,
                 c.events
             ));
             s.push_str(if i + 1 == self.cells.len() { "\n" } else { ",\n" });
@@ -247,6 +269,8 @@ impl CampaignReport {
             "max egress wait ns".to_string(),
             "dwq waits".to_string(),
             "dwq peak".to_string(),
+            "dwq/q".to_string(),
+            "unexp".to_string(),
         ]];
         for c in &self.cells {
             let (avg, min, max) = match &c.summary {
@@ -260,6 +284,17 @@ impl CampaignReport {
             let vs_ref = match c.delta_vs_ref_pct {
                 Some(d) => format!("{d:+.1}%"),
                 None => "--".to_string(),
+            };
+            // Per-queue split, slot-ordered: "posts:waits/posts:waits"
+            // (slash-separated — a pipe would break the Markdown table).
+            let dwq_q = if c.per_queue.is_empty() {
+                "--".to_string()
+            } else {
+                c.per_queue
+                    .iter()
+                    .map(|q| format!("{}:{}", q.dwq_posts, q.dwq_slot_waits))
+                    .collect::<Vec<_>>()
+                    .join("/")
             };
             rows.push(vec![
                 c.workload.clone(),
@@ -278,6 +313,8 @@ impl CampaignReport {
                 c.max_egress_wait_ns.to_string(),
                 c.dwq_slot_waits.to_string(),
                 c.dwq_peak.to_string(),
+                dwq_q,
+                c.unexpected_msgs.to_string(),
             ]);
         }
         format!(
@@ -475,6 +512,8 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
                 max_egress_wait_ns: 0,
                 dwq_slot_waits: 0,
                 dwq_peak: 0,
+                per_queue: Vec::new(),
+                unexpected_msgs: 0,
                 events: 0,
             });
             continue;
@@ -505,6 +544,8 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
             max_egress_wait_ns: first.metrics.max_egress_wait_ns,
             dwq_slot_waits: first.metrics.dwq_slot_waits,
             dwq_peak: first.metrics.dwq_peak,
+            per_queue: first.per_queue.clone(),
+            unexpected_msgs: first.metrics.unexpected_msgs,
             events: first.stats.events,
         });
     }

@@ -77,6 +77,9 @@ impl Workload for FacesAdapter {
             metrics: r.metrics,
             stats: r.stats,
             validation: Validation::NotChecked,
+            // run_faces returns no world handle, so the adapter cannot
+            // observe per-queue counters (reports render `--`).
+            per_queue: Vec::new(),
         })
     }
 }

@@ -1,0 +1,337 @@
+//! `halograph` workload: sparse irregular-neighborhood halo exchange —
+//! the ROADMAP's "graph neighborhoods instead of grids" scenario, built
+//! to stress the matching engine's **unexpected-message path** that
+//! triggered receives must interoperate with.
+//!
+//! The neighborhood is a seeded random graph (a ring backbone for
+//! connectivity plus random chords targeting an average extra degree of
+//! ~4), with an independently drawn payload size per *directed* edge —
+//! no two neighbors exchange the same amount, unlike the grid
+//! workloads. Each iteration every rank first advances a deliberately
+//! skewed amount of host time (a per-(rank, iteration) ramp of several
+//! µs plus seeded jitter, far larger than the wire latency), then runs
+//! one [`crate::stx::CommPlan`] round: pack kernel → deferred sends +
+//! **deferred receives** under the variant protocol. Because adjacent
+//! ranks are skewed by more than a full kernel-plus-wire round trip,
+//! every iteration some ranks' messages arrive *before* the receiver
+//! has posted its receives — driving traffic through the
+//! unexpected-message queue on every variant:
+//!
+//! * `baseline` — receives are late host `MPI_Irecv`s;
+//! * `st`/`st-shader` — receives are progress-thread-emulated deferred
+//!   receives released by the CP trigger (§IV-A2);
+//! * `kt` — receives are **NIC triggered-receive descriptors**
+//!   ([`crate::nic::post_triggered_recv`]): the unexpected interleaving
+//!   resolves entirely inside the NIC/matching engine, no host in the
+//!   loop.
+//!
+//! Validation is exact: the pack kernel writes `payload(rank, lane, j)
+//! + iter`, so after the final iteration every receive slot must hold
+//! its peer's value for the *last* iteration — a message matched to the
+//! wrong receive, lost to the unexpected queue, or crossed between
+//! iterations (pairwise FIFO violation) fails the check.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{build_world, run_cluster};
+use crate::gpu::{stream_synchronize, KernelPayload, KernelSpec};
+use crate::mpi::{SrcSel, TagSel, COMM_WORLD};
+use crate::nic::BufSlice;
+use crate::sim::rng::SplitMix64;
+use crate::world::{BufId, ComputeMode, World};
+
+use super::scaffold::{check_exact, scenario_run, RankComm, Timers};
+use super::{comm_variant, payload, ScenarioCfg, ScenarioRun, Workload};
+
+pub struct HaloGraph;
+
+/// Tag base; disjoint from halo3d (direction tags), allreduce
+/// (1000/2000/3000), allgather (4000), and incast (900).
+const HG_TAG: i32 = 5000;
+
+/// Skew ramp quantum: adjacent ranks differ by at least one quantum per
+/// iteration, which exceeds a pack-kernel-plus-wire round trip by a wide
+/// margin — the guarantee that unexpected arrivals occur every
+/// iteration.
+const SKEW_QUANTUM: u64 = 8_000;
+
+/// An undirected edge with one payload size per direction.
+struct GraphEdge {
+    u: usize,
+    v: usize,
+    /// f32 elems carried u -> v.
+    elems_uv: usize,
+    /// f32 elems carried v -> u.
+    elems_vu: usize,
+}
+
+/// One directed message of a rank's schedule (both its slot in the
+/// packed send buffer and the matching slot in the receive buffer).
+struct NbrMsg {
+    peer: usize,
+    tag_send: i32,
+    tag_recv: i32,
+    /// The lane the *peer* packs with for what we receive.
+    lane_recv: usize,
+    send_off: usize,
+    send_elems: usize,
+    recv_off: usize,
+    recv_elems: usize,
+}
+
+/// Per-rank buffers + schedule + the pack kernel's base image.
+struct RankPlan {
+    send: BufId,
+    recv: BufId,
+    total_send: usize,
+    send_image: Vec<f32>,
+    nbrs: Vec<NbrMsg>,
+}
+
+/// Seeded sparse graph: ring backbone (connectivity, min degree 2 for
+/// n >= 3) plus random chords at a probability targeting ~4 extra
+/// neighbors per rank, with an independent payload size per direction.
+/// Deterministic in (n, max_elems, seed).
+fn build_edges(n: usize, max_elems: usize, seed: u64) -> Vec<GraphEdge> {
+    let mut rng = SplitMix64::new(seed ^ 0x6861_6c6f); // "halo"
+    let size = |rng: &mut SplitMix64| 1 + rng.below(max_elems as u64) as usize;
+    let mut edges = Vec::new();
+    for u in 0..n - 1 {
+        let (a, b) = (size(&mut rng), size(&mut rng));
+        edges.push(GraphEdge { u, v: u + 1, elems_uv: a, elems_vu: b });
+    }
+    if n > 2 {
+        let (a, b) = (size(&mut rng), size(&mut rng));
+        edges.push(GraphEdge { u: 0, v: n - 1, elems_uv: a, elems_vu: b });
+    }
+    // Random chords: probability ~ 400/(n-1) percent per candidate pair
+    // keeps the expected extra degree near 4 at any world size (the
+    // floor of 1% only guards against rounding to a chord-free ring on
+    // very large worlds — no 5%-style floor that would densify them).
+    let p = (400 / (n - 1).max(1)).clamp(1, 100) as u64;
+    for u in 0..n {
+        for v in (u + 2)..n {
+            if u == 0 && v == n - 1 {
+                continue; // already the ring wrap edge
+            }
+            if rng.below(100) < p {
+                let (a, b) = (size(&mut rng), size(&mut rng));
+                edges.push(GraphEdge { u, v, elems_uv: a, elems_vu: b });
+            }
+        }
+    }
+    edges
+}
+
+/// The deliberate per-(iteration, rank) arrival skew: a ramp that
+/// guarantees adjacent ranks differ by at least [`SKEW_QUANTUM`], plus
+/// seeded jitter small enough never to cancel the ramp.
+fn build_skews(n: usize, iters: usize, rng: &mut SplitMix64) -> Vec<Vec<u64>> {
+    (0..iters)
+        .map(|it| {
+            (0..n)
+                .map(|r| {
+                    let ramp = ((r * 7919 + it * 2531) % 8) as u64 * SKEW_QUANTUM;
+                    ramp + rng.below(2_000)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn build_plans(w: &mut World, n: usize, edges: &[GraphEdge]) -> Vec<RankPlan> {
+    // Directed-edge index doubles as the payload lane, so each direction
+    // carries a distinct, validator-known pattern. Per rank: (schedule,
+    // pack image, send elems, recv elems).
+    let mut plans: Vec<_> = (0..n)
+        .map(|_| (Vec::<NbrMsg>::new(), Vec::<f32>::new(), 0usize, 0usize))
+        .collect();
+    for (i, e) in edges.iter().enumerate() {
+        let (lane_uv, lane_vu) = (2 * i, 2 * i + 1);
+        let (tag_uv, tag_vu) = (HG_TAG + lane_uv as i32, HG_TAG + lane_vu as i32);
+        // u's view: sends u->v, receives v->u.
+        {
+            let (nbrs, image, soff, roff) = &mut plans[e.u];
+            for j in 0..e.elems_uv {
+                image.push(payload(e.u, lane_uv, j));
+            }
+            nbrs.push(NbrMsg {
+                peer: e.v,
+                tag_send: tag_uv,
+                tag_recv: tag_vu,
+                lane_recv: lane_vu,
+                send_off: *soff,
+                send_elems: e.elems_uv,
+                recv_off: *roff,
+                recv_elems: e.elems_vu,
+            });
+            *soff += e.elems_uv;
+            *roff += e.elems_vu;
+        }
+        // v's view: sends v->u, receives u->v.
+        {
+            let (nbrs, image, soff, roff) = &mut plans[e.v];
+            for j in 0..e.elems_vu {
+                image.push(payload(e.v, lane_vu, j));
+            }
+            nbrs.push(NbrMsg {
+                peer: e.u,
+                tag_send: tag_vu,
+                tag_recv: tag_uv,
+                lane_recv: lane_uv,
+                send_off: *soff,
+                send_elems: e.elems_vu,
+                recv_off: *roff,
+                recv_elems: e.elems_uv,
+            });
+            *soff += e.elems_vu;
+            *roff += e.elems_uv;
+        }
+    }
+    plans
+        .into_iter()
+        .map(|(nbrs, send_image, total_send, total_recv)| {
+            let send = w.bufs.alloc(total_send);
+            let recv = w.bufs.alloc(total_recv);
+            RankPlan { send, recv, total_send, send_image, nbrs }
+        })
+        .collect()
+}
+
+impl Workload for HaloGraph {
+    fn name(&self) -> &'static str {
+        "halograph"
+    }
+
+    fn description(&self) -> &'static str {
+        "sparse random-graph halo exchange, skewed arrivals stressing the unexpected path"
+    }
+
+    fn variants(&self) -> &'static [&'static str] {
+        &["baseline", "st", "st-shader", "kt"]
+    }
+
+    fn default_elems(&self) -> &'static [usize] {
+        // Upper bound of the per-edge size draw (sizes are 1..=elems).
+        &[16, 256, 4096]
+    }
+
+    fn configure(&self, cfg: &ScenarioCfg) -> Result<()> {
+        comm_variant("halograph", &cfg.variant)?;
+        if cfg.world_size() < 2 {
+            bail!("halograph needs at least two ranks");
+        }
+        if cfg.elems == 0 {
+            bail!("halograph: edges must carry at least one element");
+        }
+        if cfg.queues_per_rank == 0 {
+            bail!("halograph: at least one queue per rank");
+        }
+        // Multi-queue striping leans on the ring backbone's guaranteed
+        // degree of 2; random chords are not guaranteed per seed.
+        if cfg.queues_per_rank > 1 && (cfg.world_size() < 3 || cfg.queues_per_rank > 2) {
+            bail!(
+                "halograph: {} queues per rank exceed the guaranteed degree (2 on >= 3 ranks)",
+                cfg.queues_per_rank
+            );
+        }
+        if cfg.iters == 0 {
+            bail!("halograph: the last-iteration reference needs at least one iteration");
+        }
+        // Exact f32 validation: payload (< 8192) + iter stays exactly
+        // representable while iters is far below 2^24.
+        if cfg.iters > 2048 {
+            bail!("halograph: exact f32 validation bounds iters to 2048, got {}", cfg.iters);
+        }
+        Ok(())
+    }
+
+    fn run(&self, cfg: &ScenarioCfg) -> Result<ScenarioRun> {
+        self.configure(cfg)?;
+        let variant = comm_variant("halograph", &cfg.variant)?;
+        let n = cfg.world_size();
+        let edges = build_edges(n, cfg.elems, cfg.seed);
+        let mut skew_rng = SplitMix64::new(cfg.seed ^ 0x736b_6577); // "skew"
+        let skews = Arc::new(build_skews(n, cfg.iters, &mut skew_rng));
+
+        let mut world = build_world(cfg.cost.clone(), cfg.topology());
+        world.compute = ComputeMode::Real;
+        let plans = Arc::new(build_plans(&mut world, n, &edges));
+        let times = Timers::new(n);
+
+        let (iters, qpr) = (cfg.iters, cfg.queues_per_rank);
+        let (plans2, skews2, times2) = (plans.clone(), skews.clone(), times.clone());
+        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
+            let plan = &plans2[rank];
+            let comm = RankComm::new(ctx, rank, variant, qpr);
+            // Build-once: the whole irregular neighborhood is one plan;
+            // receives are *deferred* on every variant (host rounds fall
+            // back to late irecvs; KT rounds arm NIC triggered-receive
+            // descriptors).
+            let mut b = comm.builder();
+            for m in &plan.nbrs {
+                b.send(
+                    m.peer,
+                    BufSlice::new(plan.send, m.send_off, m.send_elems),
+                    m.tag_send,
+                    COMM_WORLD,
+                );
+                b.recv_deferred(
+                    SrcSel::Rank(m.peer),
+                    TagSel::Tag(m.tag_recv),
+                    COMM_WORLD,
+                    BufSlice::new(plan.recv, m.recv_off, m.recv_elems),
+                )
+                .expect("concrete selectors");
+            }
+            let cplan = b.build(ctx).expect("halograph plan build");
+
+            let t0 = ctx.now();
+            for iter in 0..iters {
+                // The skewed arrival order: ranks enter the round far
+                // apart, so fast neighbors' messages beat this rank's
+                // receive posts into the matching engine.
+                ctx.advance(skews2[iter][rank]);
+                let (send, total, plans_k) = (plan.send, plan.total_send, plans2.clone());
+                let pack = KernelSpec {
+                    name: "halograph_pack".into(),
+                    flops: 0,
+                    bytes: 2 * 4 * total as u64,
+                    payload: KernelPayload::Fn(Box::new(move |w, _| {
+                        let img = &plans_k[rank].send_image;
+                        let b = w.bufs.get_mut(send);
+                        for (dst, &x) in b[..total].iter_mut().zip(img) {
+                            *dst = x + iter as f32;
+                        }
+                    })),
+                };
+                let round = cplan.round(ctx, vec![pack]).expect("halograph round");
+                cplan.complete(ctx, round).expect("halograph complete");
+            }
+            // Drain inside the timed region, like every workload: KT's
+            // outstanding completions, then the stream (covers ST's
+            // final waitValue64 and the last pack kernel).
+            comm.drain_if_kt(ctx, &cplan, "halograph");
+            stream_synchronize(ctx, comm.sid);
+            times2.record(rank, ctx.now() - t0);
+            comm.finish(ctx, "halograph");
+        })
+        .map_err(|e| anyhow!("halograph run failed: {e}"))?;
+
+        // Reference: every receive slot holds the peer's last-iteration
+        // packed value for that directed edge.
+        let last = (cfg.iters - 1) as f32;
+        let pairs = plans.iter().flat_map(|plan| {
+            let recv = out.world.bufs.get(plan.recv);
+            plan.nbrs.iter().flat_map(move |m| {
+                (0..m.recv_elems).map(move |j| {
+                    (recv[m.recv_off + j], payload(m.peer, m.lane_recv, j) + last)
+                })
+            })
+        });
+        let validation = check_exact(pairs, |i| format!("halograph recv slot {i}"));
+        Ok(scenario_run(&out, &times, validation))
+    }
+}

@@ -31,6 +31,7 @@
 //! | `alltoall`  | transpose-style personalized exchange            |
 //! | `incast`    | N→1 hotspot stress on one NIC ingress port       |
 //! | `allgather` | ring gather phase over persistent `CommPlan`s    |
+//! | `halograph` | sparse random-graph halo, skewed arrivals driving the unexpected-message path |
 //!
 //! Every workload sweeps the [`crate::stx::Variant`] axis: the host
 //! baseline, the paper's stream-triggered path (`st` / `st-shader`),
@@ -46,6 +47,7 @@ mod allreduce;
 mod alltoall;
 mod faces;
 mod halo3d;
+mod halograph;
 mod incast;
 
 pub use campaign::{run_campaign, CampaignReport, CampaignSpec};
@@ -132,6 +134,21 @@ impl Validation {
     }
 }
 
+/// Per-queue-slot aggregate of a run's [`crate::stx::QueueStats`]-style
+/// counters: DWQ descriptor posts and slot-wait stalls, summed over all
+/// ranks for each *within-rank* queue slot. This is the per-queue split
+/// of the campaign report's aggregated `dwq waits` column — slot `s`
+/// collects the s-th queue every rank created.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QueueSlotStats {
+    /// Within-rank queue index (0..queues_per_rank).
+    pub slot: usize,
+    /// DWQ descriptor posts by this slot's queues, summed over ranks.
+    pub dwq_posts: u64,
+    /// DWQ slot-wait stalls by this slot's queues, summed over ranks.
+    pub dwq_slot_waits: u64,
+}
+
 /// Result of one scenario run: the figure of merit plus the counters the
 /// campaign report aggregates.
 #[derive(Debug)]
@@ -141,6 +158,10 @@ pub struct ScenarioRun {
     pub metrics: Metrics,
     pub stats: SimStats,
     pub validation: Validation,
+    /// Per-queue-slot DWQ counters (empty when the run created no
+    /// queues, or for adapters that cannot observe the world — the
+    /// `faces` adapter reports none).
+    pub per_queue: Vec<QueueSlotStats>,
 }
 
 /// A communication scenario runnable by the campaign driver.
@@ -186,6 +207,7 @@ pub fn registry() -> Vec<Box<dyn Workload>> {
         Box::new(alltoall::AllToAll),
         Box::new(incast::Incast),
         Box::new(allgather::Allgather),
+        Box::new(halograph::HaloGraph),
     ]
 }
 

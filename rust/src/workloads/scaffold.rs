@@ -20,7 +20,7 @@ use crate::sim::HostCtx;
 use crate::stx::{CommPlan, CommPlanBuilder, Queue, Variant};
 use crate::world::World;
 
-use super::{ScenarioRun, Validation};
+use super::{QueueSlotStats, ScenarioRun, Validation};
 
 /// One rank's communication context: its GPU stream plus the queue set
 /// its plans stripe over (`queues_per_rank` queues for queue-using
@@ -131,14 +131,34 @@ pub fn check_exact(
     Validation::Passed { checked }
 }
 
+/// Aggregate the run's per-queue counters by *within-rank* slot: the
+/// s-th queue each rank created contributes to slot `s`. Queues appear
+/// in `World::queues` in (deterministic) creation order, so the
+/// grouping is stable across reruns and sweep thread counts.
+pub fn per_queue_stats(world: &World) -> Vec<QueueSlotStats> {
+    let mut next_slot = vec![0usize; world.procs.len()];
+    let mut rows: Vec<QueueSlotStats> = Vec::new();
+    for q in &world.queues {
+        let slot = next_slot[q.rank];
+        next_slot[q.rank] += 1;
+        if rows.len() <= slot {
+            rows.push(QueueSlotStats { slot, dwq_posts: 0, dwq_slot_waits: 0 });
+        }
+        rows[slot].dwq_posts += q.dwq_posts;
+        rows[slot].dwq_slot_waits += q.dwq_slot_waits;
+    }
+    rows
+}
+
 /// Assemble the [`ScenarioRun`] summary every workload returns: the
-/// max-over-ranks figure of merit plus the run's metrics and engine
-/// stats.
+/// max-over-ranks figure of merit plus the run's metrics, engine stats,
+/// and per-queue-slot DWQ counters.
 pub fn scenario_run(out: &RunOutcome, times: &Timers, validation: Validation) -> ScenarioRun {
     ScenarioRun {
         time_ns: times.max_ns(),
         metrics: out.world.metrics.clone(),
         stats: out.stats.clone(),
         validation,
+        per_queue: per_queue_stats(&out.world),
     }
 }

@@ -6,9 +6,12 @@ use super::campaign::{json_parses, run_campaign, CampaignSpec};
 use super::{by_name, grid_for, names, registry, ScenarioCfg, Validation};
 
 #[test]
-fn registry_has_six_unique_workloads() {
+fn registry_has_seven_unique_workloads() {
     let names = names();
-    assert_eq!(names, vec!["faces", "halo3d", "allreduce", "alltoall", "incast", "allgather"]);
+    assert_eq!(
+        names,
+        vec!["faces", "halo3d", "allreduce", "alltoall", "incast", "allgather", "halograph"]
+    );
     for n in &names {
         let w = by_name(n).expect("by_name must resolve every registry name");
         assert_eq!(w.name(), *n);
@@ -57,6 +60,8 @@ fn validated_workloads_check_data_on_mixed_topology() {
         ("incast", "kt"),
         ("allgather", "st"),
         ("allgather", "kt"),
+        ("halograph", "st"),
+        ("halograph", "kt"),
     ] {
         let w = by_name(name).unwrap();
         let cfg = ScenarioCfg::smoke(variant, 2, 2, 40);
@@ -257,4 +262,87 @@ fn payload_values_are_small_exact_integers() {
             }
         }
     }
+}
+
+/// halograph is built to drive the unexpected-message path: every
+/// variant — host, ST, and the KT path whose receives are NIC
+/// triggered-receive descriptors — must see unexpected arrivals AND
+/// still validate exactly.
+#[test]
+fn halograph_drives_the_unexpected_path_on_every_variant() {
+    let w = by_name("halograph").unwrap();
+    for variant in ["baseline", "st", "st-shader", "kt"] {
+        let cfg = ScenarioCfg::smoke(variant, 2, 1, 24);
+        let r = w.run(&cfg).unwrap_or_else(|e| panic!("halograph::{variant}: {e}"));
+        match r.validation {
+            Validation::Passed { checked } => assert!(checked > 0),
+            other => panic!("halograph::{variant}: expected Passed, got {other:?}"),
+        }
+        assert!(
+            r.metrics.unexpected_msgs > 0,
+            "halograph::{variant}: the skewed arrival order must produce unexpected messages"
+        );
+    }
+}
+
+/// Under KT, halograph receives ride NIC triggered-receive descriptors
+/// (no progress thread on the receive path); under ST they stay
+/// progress-emulated — the paper-faithful contrast.
+#[test]
+fn halograph_kt_receives_are_nic_posted() {
+    let w = by_name("halograph").unwrap();
+    let kt = w.run(&ScenarioCfg::smoke("kt", 2, 1, 24)).unwrap();
+    let st = w.run(&ScenarioCfg::smoke("st", 2, 1, 24)).unwrap();
+    assert!(kt.metrics.triggered_recvs > 0, "KT receives must be NIC-posted");
+    assert_eq!(st.metrics.triggered_recvs, 0, "ST receives stay progress-emulated");
+    assert!(st.metrics.progress_ops > 0, "the ST emulation runs on the progress thread");
+    assert_eq!(
+        kt.metrics.bytes_wire, st.metrics.bytes_wire,
+        "same traffic under either receive story"
+    );
+    assert!(
+        kt.metrics.memops_executed < st.metrics.memops_executed,
+        "KT executes fewer stream memops than ST"
+    );
+}
+
+/// The per-queue report split is consistent: for every ran cell that
+/// observes its queues, per-slot DWQ waits sum to the aggregated
+/// metric, and the slot list matches the queues-per-rank axis.
+#[test]
+fn per_queue_split_sums_to_the_aggregate() {
+    // ST only: a KT round arms every slot's ops before its carrying
+    // kernel is enqueued, so KT cannot run with per-round demand above
+    // the slot capacity (DESIGN.md §Triggered receives).
+    let spec = CampaignSpec {
+        workloads: vec!["halo3d".into()],
+        variants: vec!["st".into()],
+        elems: vec![32],
+        topos: vec![(4, 1)],
+        queues: vec![2],
+        seeds: vec![5],
+        iters: 2,
+        jitter: 0.0,
+        dwq_slots: Some(2),
+        threads: Some(1),
+        ..CampaignSpec::default()
+    };
+    let report = run_campaign(&spec).unwrap();
+    assert!(report.all_ok(), "{}", report.to_markdown());
+    let mut saw_waits = false;
+    assert!(report.ran_cells() > 0);
+    for c in report.cells.iter().filter(|c| c.summary.is_some()) {
+        assert_eq!(c.per_queue.len(), 2, "{}/{}: one row per queue slot", c.workload, c.variant);
+        let wait_sum: u64 = c.per_queue.iter().map(|q| q.dwq_slot_waits).sum();
+        assert_eq!(
+            wait_sum, c.dwq_slot_waits,
+            "{}/{}: per-queue waits must sum to the aggregate",
+            c.workload, c.variant
+        );
+        saw_waits |= wait_sum > 0;
+        assert!(c.per_queue.iter().map(|q| q.dwq_posts).sum::<u64>() > 0);
+    }
+    assert!(saw_waits, "dwq_slots=2 must provoke at least one per-queue stall");
+    assert!(report.to_json().contains("\"dwq_queues\""));
+    assert!(json_parses(&report.to_json()));
 }

@@ -157,6 +157,10 @@ pub struct Metrics {
     pub dwq_peak: u64,
     /// Mid-kernel trigger actions fired (the kernel-triggered path).
     pub kt_triggers: u64,
+    /// Receive descriptors the NIC posted into the matching engine
+    /// itself — triggered-receive DWQ fires plus kernel doorbell posts
+    /// (the receive-side offload; no host, no progress thread).
+    pub triggered_recvs: u64,
     pub progress_ops: u64,
     pub unexpected_msgs: u64,
     pub matched_posted: u64,

@@ -308,3 +308,74 @@ fn kt_campaign_report_is_thread_count_invariant() {
     assert_eq!(serial.to_json(), parallel.to_json(), "1 thread vs 3 threads");
     assert_eq!(serial.to_markdown(), parallel.to_markdown());
 }
+
+/// KT-receive determinism (the triggered-receive tentpole): a
+/// halograph KT campaign — receives ride NIC triggered-receive
+/// descriptors and the skewed arrivals exercise the unexpected path —
+/// renders byte-identical reports across reruns and sweep worker-thread
+/// counts, with cost-model jitter live.
+#[test]
+fn halograph_kt_campaign_is_thread_count_invariant() {
+    let mut spec = CampaignSpec {
+        workloads: vec!["halograph".into()],
+        variants: vec!["st".into(), "kt".into()],
+        elems: vec![32],
+        topos: vec![(2, 1), (2, 2)],
+        seeds: vec![5, 9],
+        iters: 2,
+        jitter: 0.01,
+        threads: Some(1),
+        ..CampaignSpec::default()
+    };
+    let serial = run_campaign(&spec).unwrap();
+    assert!(serial.all_ok(), "halograph cells must validate:\n{}", serial.to_markdown());
+    for c in serial.cells.iter().filter(|c| c.summary.is_some()) {
+        assert!(
+            c.unexpected_msgs > 0,
+            "halograph/{} must report unexpected messages",
+            c.variant
+        );
+    }
+    spec.threads = Some(3);
+    let parallel = run_campaign(&spec).unwrap();
+    let parallel_again = run_campaign(&spec).unwrap();
+    assert_eq!(serial.to_json(), parallel.to_json(), "1 thread vs 3 threads");
+    assert_eq!(parallel.to_json(), parallel_again.to_json(), "repeated parallel runs");
+    assert_eq!(serial.to_markdown(), parallel.to_markdown());
+}
+
+/// The per-queue report split (`dwq_queues` JSON array / `dwq/q` column)
+/// is byte-identical across sweep worker-thread counts, with DWQ slots
+/// dialed down so the per-queue wait counters are actually non-zero.
+#[test]
+fn per_queue_report_split_is_thread_count_invariant() {
+    let mut spec = CampaignSpec {
+        workloads: vec!["halo3d".into()],
+        variants: vec!["st".into()],
+        elems: vec![32],
+        topos: vec![(4, 1)],
+        queues: vec![2],
+        seeds: vec![5, 9],
+        iters: 2,
+        jitter: 0.01,
+        dwq_slots: Some(2),
+        threads: Some(1),
+        ..CampaignSpec::default()
+    };
+    let serial = run_campaign(&spec).unwrap();
+    assert!(serial.all_ok(), "{}", serial.to_markdown());
+    assert!(serial.to_json().contains("\"dwq_queues\": [{\"slot\": 0"));
+    assert!(
+        serial
+            .cells
+            .iter()
+            .filter(|c| c.summary.is_some())
+            .any(|c| c.per_queue.iter().any(|q| q.dwq_slot_waits > 0)),
+        "tight DWQ slots must surface per-queue waits:\n{}",
+        serial.to_markdown()
+    );
+    spec.threads = Some(3);
+    let parallel = run_campaign(&spec).unwrap();
+    assert_eq!(serial.to_json(), parallel.to_json(), "1 thread vs 3 threads");
+    assert_eq!(serial.to_markdown(), parallel.to_markdown());
+}

@@ -291,3 +291,178 @@ fn prop_compute_mode_does_not_change_timing() {
     let real = run_faces(&cfg).unwrap();
     assert_eq!(modeled.time_ns, real.time_ns, "virtual time must not depend on numerics");
 }
+
+/// Matching-engine confluence: with the posting order and the arrival
+/// order each held fixed, the final match set (which message landed in
+/// which receive buffer, and what remains queued) is identical for
+/// EVERY interleaving of the two sequences — wildcard `src`/`tag`
+/// selectors included. Reruns of the same interleaving are additionally
+/// byte-identical in the `unexpected_msgs`/`matched_posted` split, and
+/// the accounting conserves: every message increments exactly one of
+/// the two counters.
+#[test]
+fn prop_matching_interleavings_converge_with_wildcards() {
+    use stmpi::mpi::{deliver_from_wire, post_recv};
+    use stmpi::nic::{Done, Envelope, WireMsg};
+    use stmpi::sim::Engine;
+
+    const RANK: usize = 3;
+
+    #[derive(Clone, Copy)]
+    struct MsgSpec {
+        src: usize,
+        tag: i32,
+        id: f32,
+    }
+    #[derive(Clone, Copy)]
+    struct RecvSpec {
+        src: SrcSel,
+        tag: TagSel,
+    }
+    #[derive(Clone, Debug, PartialEq)]
+    struct Outcome {
+        /// id landed in each receive buffer (0.0 = never matched).
+        landed: Vec<f32>,
+        /// (src, tag) of messages left in the unexpected queue, in order.
+        unexpected: Vec<(usize, i32)>,
+        posted_left: usize,
+        matched_posted: u64,
+        unexpected_msgs: u64,
+    }
+
+    /// Run one interleaving: `merge[i]` = true takes the next receive
+    /// post, false the next arrival; internal orders are preserved.
+    fn run_schedule(msgs: &[MsgSpec], recvs: &[RecvSpec], merge: &[bool]) -> Outcome {
+        let n_recvs = merge.iter().filter(|&&b| b).count();
+        let eng = Engine::new(build_world(cost(), Topology::new(4, 1)), 1);
+        let msgs = msgs.to_vec();
+        let recvs = recvs.to_vec();
+        let merge = merge.to_vec();
+        eng.setup(move |w, core| {
+            let bufs: Vec<BufId> = recvs.iter().map(|_| w.bufs.alloc(1)).collect();
+            let (mut mi, mut ri) = (0usize, 0usize);
+            for (step, &take_recv) in merge.iter().enumerate() {
+                // Distinct instants: each step is its own event, so the
+                // merge order IS the wall-clock order.
+                let at = (step as u64 + 1) * 1_000;
+                if take_recv {
+                    let r = recvs[ri];
+                    let dst = BufSlice::whole(bufs[ri], 1);
+                    ri += 1;
+                    core.schedule(
+                        at,
+                        Box::new(move |w, core| {
+                            post_recv(w, core, RANK, r.src, r.tag, 0, dst, Done::none());
+                        }),
+                    );
+                } else {
+                    let m = msgs[mi];
+                    mi += 1;
+                    core.schedule(
+                        at,
+                        Box::new(move |w, core| {
+                            let msg = WireMsg::Eager {
+                                env: Envelope {
+                                    src_rank: m.src,
+                                    dst_rank: RANK,
+                                    tag: m.tag,
+                                    comm: 0,
+                                    elems: 1,
+                                },
+                                payload: vec![m.id],
+                            };
+                            deliver_from_wire(w, core, msg);
+                        }),
+                    );
+                }
+            }
+        });
+        let (w, _) = eng.run().unwrap();
+        Outcome {
+            landed: (0..n_recvs).map(|i| w.bufs.get(BufId(i))[0]).collect(),
+            unexpected: w.procs[RANK]
+                .unexpected
+                .iter()
+                .map(|m| (m.env.src_rank, m.env.tag))
+                .collect(),
+            posted_left: w.procs[RANK].posted.len(),
+            matched_posted: w.metrics.matched_posted,
+            unexpected_msgs: w.metrics.unexpected_msgs,
+        }
+    }
+
+    for case in 0..10u64 {
+        let mut rng = SplitMix64::new(4200 + case);
+        let n_msgs = 3 + rng.below(5) as usize;
+        let n_recvs = 3 + rng.below(5) as usize;
+        let msgs: Vec<MsgSpec> = (0..n_msgs)
+            .map(|i| MsgSpec {
+                src: rng.below(3) as usize,
+                tag: rng.below(3) as i32,
+                id: (i + 1) as f32,
+            })
+            .collect();
+        let recvs: Vec<RecvSpec> = (0..n_recvs)
+            .map(|_| RecvSpec {
+                src: if rng.below(3) == 0 { SrcSel::Any } else { SrcSel::Rank(rng.below(3) as usize) },
+                tag: if rng.below(3) == 0 { TagSel::Any } else { TagSel::Tag(rng.below(3) as i32) },
+            })
+            .collect();
+
+        // A set of interleavings: all-recvs-first, all-arrivals-first,
+        // and seeded random merges of the two fixed sequences.
+        let mut merges: Vec<Vec<bool>> = Vec::new();
+        let mut m0 = vec![true; n_recvs];
+        m0.extend(std::iter::repeat(false).take(n_msgs));
+        merges.push(m0);
+        let mut m1 = vec![false; n_msgs];
+        m1.extend(std::iter::repeat(true).take(n_recvs));
+        merges.push(m1);
+        for _ in 0..3 {
+            let (mut r_left, mut m_left) = (n_recvs, n_msgs);
+            let mut m = Vec::with_capacity(n_recvs + n_msgs);
+            while r_left + m_left > 0 {
+                let take_recv = if r_left == 0 {
+                    false
+                } else if m_left == 0 {
+                    true
+                } else {
+                    rng.below((r_left + m_left) as u64) < r_left as u64
+                };
+                m.push(take_recv);
+                if take_recv {
+                    r_left -= 1;
+                } else {
+                    m_left -= 1;
+                }
+            }
+            merges.push(m);
+        }
+
+        let reference = run_schedule(&msgs, &recvs, &merges[0]);
+        for (k, merge) in merges.iter().enumerate() {
+            let got = run_schedule(&msgs, &recvs, merge);
+            // Determinism: an identical schedule reruns byte-identically,
+            // unexpected/matched split included.
+            let again = run_schedule(&msgs, &recvs, merge);
+            assert_eq!(got, again, "case {case} merge {k}: rerun must be identical");
+            // Conservation: each message counted exactly once.
+            assert_eq!(
+                got.matched_posted + got.unexpected_msgs,
+                n_msgs as u64,
+                "case {case} merge {k}: accounting"
+            );
+            // Confluence: the match set and the leftover queues depend
+            // only on the two internal orders, not on the interleaving.
+            assert_eq!(got.landed, reference.landed, "case {case} merge {k}: match set");
+            assert_eq!(
+                got.unexpected, reference.unexpected,
+                "case {case} merge {k}: leftover unexpected"
+            );
+            assert_eq!(
+                got.posted_left, reference.posted_left,
+                "case {case} merge {k}: leftover posted"
+            );
+        }
+    }
+}

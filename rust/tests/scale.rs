@@ -1,0 +1,73 @@
+//! 64-rank scale tests (ROADMAP "larger topologies" item): a campaign
+//! smoke at 64 ranks and the incast 63→1 cell that reproduces the
+//! paper's Fig-8-style congestion knee in `max_ingress_wait_ns`.
+//!
+//! Per-cell memory is deliberately guarded: payloads are tiny (the
+//! largest allocation below is the 63→1 root sink at 63 × 1024 × 4 B ≈
+//! 252 KiB) and each test runs one seed with one or two iterations, so
+//! a 64-rank cell stays bounded while still spawning the full 64 host
+//! actors.
+
+use stmpi::workloads::campaign::{json_parses, run_campaign, CampaignSpec};
+use stmpi::workloads::{by_name, ScenarioCfg};
+
+/// A tiny campaign at 64 ranks: the incast hotspot and the sparse-graph
+/// halo both run, validate exactly, and render a parseable report.
+#[test]
+fn campaign_smoke_at_64_ranks() {
+    let spec = CampaignSpec {
+        workloads: vec!["incast".into(), "halograph".into()],
+        variants: vec!["st".into()],
+        elems: vec![32],
+        topos: vec![(64, 1)],
+        queues: vec![1],
+        seeds: vec![7],
+        iters: 1,
+        jitter: 0.0,
+        dwq_slots: None,
+        threads: Some(2),
+    };
+    let report = run_campaign(&spec).unwrap();
+    assert!(report.all_ok(), "64-rank cells must validate:\n{}", report.to_markdown());
+    assert_eq!(report.ran_cells(), 2, "both 64-rank cells must run");
+    assert!(json_parses(&report.to_json()));
+    // The 63→1 pattern hammers the root ingress port, not egress.
+    let incast = report
+        .cells
+        .iter()
+        .find(|c| c.workload == "incast" && c.summary.is_some())
+        .expect("incast cell ran");
+    assert!(incast.max_ingress_wait_ns > 0, "63 senders must queue on the root ingress");
+    assert!(incast.max_ingress_wait_ns > incast.max_egress_wait_ns);
+}
+
+/// The Fig-8 congestion knee: scaling incast from 7→1 to 63→1 senders
+/// multiplies the worst ingress queueing delay far superlinearly in the
+/// sender count (store-and-forward serialization on the single root
+/// port), while the same cell's egress stays uncongested.
+#[test]
+fn incast_63_to_1_shows_fig8_congestion_knee() {
+    let w = by_name("incast").unwrap();
+    let elems = 1024; // 4 KiB messages — eager, and a bounded root sink
+    let run_at = |nodes: usize| {
+        let mut cfg = ScenarioCfg::smoke("st", nodes, 1, elems);
+        cfg.iters = 1;
+        w.run(&cfg).unwrap_or_else(|e| panic!("incast {nodes}x1: {e}"))
+    };
+    let small = run_at(8);
+    let big = run_at(64);
+    let (w8, w64) = (small.metrics.max_ingress_wait_ns, big.metrics.max_ingress_wait_ns);
+    assert!(w8 > 0, "even 7→1 queues a little");
+    // 61 waiting serializations vs 5: the knee is an ~12x step; require
+    // a conservative 6x so jitterless timing changes don't flake it.
+    assert!(
+        w64 > 6 * w8,
+        "expected a congestion knee: 63→1 ingress wait {w64} ns vs 7→1 {w8} ns"
+    );
+    assert!(
+        big.metrics.max_egress_wait_ns < w64 / 4,
+        "incast must be ingress-bound (egress {} vs ingress {w64})",
+        big.metrics.max_egress_wait_ns
+    );
+    assert!(big.validation.ok(), "63→1 must still validate exactly");
+}
