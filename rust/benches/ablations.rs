@@ -31,6 +31,7 @@ fn cfg_base() -> FacesConfig {
         check: false,
         seed: 11,
         cost: presets::frontier_like(),
+        faults: None,
     }
 }
 

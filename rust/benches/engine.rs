@@ -332,6 +332,7 @@ fn fig8_config() -> FacesConfig {
         check: false,
         seed: 11,
         cost: presets::frontier_like(),
+        faults: None,
     }
 }
 

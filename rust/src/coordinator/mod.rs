@@ -11,7 +11,7 @@ use crate::costmodel::CostModel;
 use crate::gpu::Gpu;
 use crate::mpi::Proc;
 use crate::nic::Nic;
-use crate::sim::{Engine, HostCtx, SimError, SimStats};
+use crate::sim::{Engine, HostCtx, SimError, SimStats, StallDetail};
 use crate::world::{ComputeMode, Topology, World};
 
 /// Build a fully-wired world: one NIC per node, one GPU + one MPI process
@@ -51,6 +51,39 @@ where
 {
     let world_size = world.topo.world_size();
     let mut eng = Engine::new(world, seed);
+    // If the run stalls (event heap drained with parked hosts), enrich
+    // the engine's StallReport with cluster-level state: every armed DWQ
+    // descriptor still waiting on its trigger, per-rank matching-queue
+    // depths, and (under fault injection) the recovery counters.
+    eng.set_stall_inspector(|w: &World, _core| {
+        let mut d = StallDetail::default();
+        for e in w.armed.pending() {
+            match e.queue {
+                Some(q) => d.armed.push(format!("nic{} queue {} {}", e.node, q, e.desc)),
+                None => d.armed.push(format!("nic{} {}", e.node, e.desc)),
+            }
+        }
+        for p in &w.procs {
+            if !p.posted.is_empty() || !p.unexpected.is_empty() {
+                d.notes.push(format!(
+                    "rank {}: {} posted recv(s) unmatched, {} unexpected message(s) queued",
+                    p.rank,
+                    p.posted.len(),
+                    p.unexpected.len()
+                ));
+            }
+        }
+        if let Some(f) = w.fault.as_ref() {
+            d.notes.push(format!(
+                "fault plan active: {} injected, {} retransmits, {} timeouts, {} payload(s) still lost",
+                w.metrics.faults_injected,
+                w.metrics.retries,
+                w.metrics.timeouts,
+                f.lost.len()
+            ));
+        }
+        d
+    });
     eng.setup(|w, _| w.rank_finish = vec![0; world_size]);
     for rank in 0..world_size {
         let program = program.clone();

@@ -56,6 +56,38 @@ pub fn transfer(
     left_src
 }
 
+/// Fault-injection entry point: like [`transfer`], but the message enters
+/// the fabric `extra_ns` late (a delayed wire message from an active
+/// [`crate::fault::FaultPlan`]). Because port busy-until state is only
+/// consulted at entry time, the delay composes with congestion exactly as
+/// a late NIC would. `done(w, core, left_src)` runs at entry with the
+/// time the payload fully left the source port (the local-completion
+/// anchor). With `extra_ns == 0` this is [`transfer`] plus an immediate
+/// `done` — same event sequence, same timing.
+pub fn transfer_delayed(
+    w: &mut World,
+    core: &mut Ctx,
+    src_node: usize,
+    dst_node: usize,
+    bytes: usize,
+    extra_ns: Time,
+    cb: Callback,
+    done: Box<dyn FnOnce(&mut World, &mut Ctx, Time) + Send>,
+) {
+    if extra_ns == 0 {
+        let left_src = transfer(w, core, src_node, dst_node, bytes, cb);
+        done(w, core, left_src);
+        return;
+    }
+    core.schedule(
+        extra_ns,
+        Box::new(move |w, core| {
+            let left_src = transfer(w, core, src_node, dst_node, bytes, cb);
+            done(w, core, left_src);
+        }),
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -207,6 +207,7 @@ pub fn run_figure(spec: &FigureSpec, seeds: &[u64], loops: Loops, g: usize) -> F
                 check: false,
                 seed,
                 cost: presets::frontier_like_jittered(),
+                faults: None,
             })
         })
         .collect();
@@ -279,6 +280,7 @@ pub fn run_kt_compare(gs: &[usize], seeds: &[u64], loops: Loops) -> Vec<KtCompar
                     check: false,
                     seed,
                     cost: presets::frontier_like_jittered(),
+                    faults: None,
                 })
             })
         })

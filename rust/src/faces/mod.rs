@@ -77,6 +77,10 @@ pub struct FacesConfig {
     pub check: bool,
     pub seed: u64,
     pub cost: CostModel,
+    /// Fault-injection plan for this run (`None` = no chaos; see
+    /// [`crate::fault`]). The decision stream is keyed by a fingerprint
+    /// of the run parameters, so chaos runs replay byte-identically.
+    pub faults: Option<crate::fault::FaultSpec>,
 }
 
 impl FacesConfig {
@@ -95,6 +99,7 @@ impl FacesConfig {
             check: false,
             seed: 1,
             cost: crate::costmodel::presets::frontier_like(),
+            faults: None,
         }
     }
 
@@ -314,16 +319,36 @@ pub fn run_faces(cfg: &FacesConfig) -> Result<FacesResult> {
         world.runtime = Some(Arc::new(rt));
     }
 
+    if let Some(spec) = &cfg.faults {
+        let label = format!(
+            "faces/{}/{}x{}/g{}/s{}",
+            cfg.variant.name(),
+            cfg.nodes,
+            cfg.ranks_per_node,
+            cfg.g,
+            cfg.seed
+        );
+        let fp = crate::fault::fingerprint(spec.seed, &label);
+        world.fault = Some(crate::fault::FaultState::new(crate::fault::FaultPlan::new(
+            spec.clone(),
+            fp,
+            grid.size(),
+        )));
+    }
+
     let plans = Arc::new(build_plans(&mut world, &grid, cfg.g));
     let times: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(vec![0; grid.size()]));
 
     let cfg2 = cfg.clone();
     let plans2 = plans.clone();
     let times2 = times.clone();
+    // `context` (not a reformatting anyhow!) so callers — the campaign's
+    // stalled-cell aggregation in particular — can still downcast to the
+    // engine's `SimError` and pull the structured StallReport out.
     let out = run_cluster(world, cfg.seed, move |rank, ctx| {
         rank_program(&cfg2, &plans2[rank], rank, ctx, &times2);
     })
-    .map_err(|e| anyhow::anyhow!("faces run failed: {e}"))?;
+    .context("faces run failed")?;
 
     let rank_time = times.lock().unwrap().clone();
     let time_ns = rank_time.iter().copied().max().unwrap_or(0);

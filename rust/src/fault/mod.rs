@@ -1,0 +1,361 @@
+//! Deterministic fault injection: seeded chaos for triggered operations.
+//!
+//! The premise of stream-triggered communication is that the host steps
+//! out of the loop — which means a dropped wire message, a NIC counter
+//! that never reaches its threshold, or a DWQ descriptor armed against a
+//! doorbell that never rings is a *silent hang* with no CPU thread
+//! watching. This module supplies the chaos half of the robustness
+//! contract (the diagnosis half is [`crate::sim::StallReport`]):
+//!
+//! * [`FaultSpec`] — the knob set: message drop / duplication / extra
+//!   delay probabilities on the wire path, delayed NIC trigger fire,
+//!   straggler ranks (cost-model perturbation of kernel durations), and
+//!   the recovery watchdog (timeout, bounded retries with exponential
+//!   backoff).
+//! * [`FaultPlan`] — a *per-run* decision stream: one [`SplitMix64`]
+//!   seeded from a campaign-cell [`fingerprint`], consumed in event
+//!   order. Because each simulation run is single-threaded and
+//!   event-ordered deterministically, the same `(spec, fingerprint)`
+//!   yields byte-identical fault decisions on every rerun and at any
+//!   `STMPI_SWEEP_THREADS`.
+//! * [`FaultState`] — the per-world runtime state: the plan, the ledger
+//!   of dropped payloads awaiting retransmission ([`LostMsg`]), and the
+//!   wire sequence counter used for idempotent duplicate resolution in
+//!   the matching engine.
+//!
+//! Injection sites (all inert when `World::fault` is `None` — the
+//! no-fault timeline is bit-for-bit unchanged):
+//!
+//! | fault            | site                                   | effect |
+//! |------------------|----------------------------------------|--------|
+//! | drop             | `nic::execute_send` (eager payload)    | remote delivery skipped; payload recorded in the lost ledger for watchdog retransmit |
+//! | duplicate        | `nic::execute_send` (eager payload)    | payload transferred twice with one sequence number; receiver discards the second copy |
+//! | delay            | `nic::execute_send` → `fabric::transfer_delayed` | wire transfer starts `delay` ns late |
+//! | trigger delay    | `nic` DWQ fire path                    | descriptor executes late after its counter trips |
+//! | straggler        | `gpu::cp_step` kernel duration         | a seeded subset of ranks runs kernels slower by a fixed factor |
+//!
+//! Recovery: `stx` arms a host watchdog (see `stx::arm_watchdog`) on
+//! `Queue::wait` / `CommPlan::complete` / drain whenever a fault plan is
+//! active; on expiry it retransmits everything in the lost ledger and
+//! re-arms with exponential backoff, up to [`FaultSpec::max_retries`].
+//! After the last retry the run either completes (counters reached) or
+//! the event heap drains and the engine emits a [`crate::sim::StallReport`]
+//! — never a hang, never a panic.
+
+use crate::nic::Envelope;
+use crate::sim::rng::SplitMix64;
+
+/// Fault-injection configuration: probabilities, magnitudes, and the
+/// recovery-watchdog contract. All probabilities are per-message (wire
+/// faults), per-fire (trigger delay), or per-rank (stragglers).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Probability an eager payload message is dropped on the wire.
+    pub drop_prob: f64,
+    /// Probability an eager payload message is duplicated.
+    pub dup_prob: f64,
+    /// Probability an eager payload message starts its transfer late.
+    pub delay_prob: f64,
+    /// Mean extra delay (ns) for delayed messages; the actual delay is
+    /// uniform in `[delay_ns/2, delay_ns*3/2)`.
+    pub delay_ns: u64,
+    /// Probability a tripped DWQ descriptor fires late.
+    pub trigger_delay_prob: f64,
+    /// Extra ns added to a delayed trigger fire.
+    pub trigger_delay_ns: u64,
+    /// Fraction of ranks perturbed into stragglers.
+    pub straggler_frac: f64,
+    /// Kernel-duration multiplier applied to straggler ranks.
+    pub straggler_factor: f64,
+    /// Watchdog timeout (ns) armed by `stx` completion waits; doubles on
+    /// every retry (exponential backoff).
+    pub watchdog_ns: u64,
+    /// Retransmission rounds before the watchdog gives up. After the
+    /// last round the run either completes or stalls with a report.
+    pub max_retries: u32,
+    /// Opt-in escape hatch: after the last retry, complete the blocked
+    /// drain gate anyway so the host can observe `StError::DrainTimeout`
+    /// and force-release queue resources (used by the leak-audit tests).
+    /// Default `false`: the run parks and the stall detector reports it.
+    pub timeout_error: bool,
+    /// Base seed mixed into the per-cell fingerprint.
+    pub seed: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        Self {
+            drop_prob: 0.0,
+            dup_prob: 0.0,
+            delay_prob: 0.0,
+            delay_ns: 4_000,
+            trigger_delay_prob: 0.0,
+            trigger_delay_ns: 2_000,
+            straggler_frac: 0.0,
+            straggler_factor: 3.0,
+            watchdog_ns: 2_000_000,
+            max_retries: 4,
+            timeout_error: false,
+            seed: 1,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// True when any injection knob is non-zero (a plan built from an
+    /// inactive spec injects nothing, but still arms watchdogs).
+    pub fn injects(&self) -> bool {
+        self.drop_prob > 0.0
+            || self.dup_prob > 0.0
+            || self.delay_prob > 0.0
+            || self.trigger_delay_prob > 0.0
+            || self.straggler_frac > 0.0
+    }
+
+    /// Drop-only plan (exercises the retransmit path).
+    pub fn drops(seed: u64) -> Self {
+        Self { drop_prob: 0.12, seed, ..Self::default() }
+    }
+
+    /// Duplication-only plan (exercises idempotent matching).
+    pub fn dups(seed: u64) -> Self {
+        Self { dup_prob: 0.15, seed, ..Self::default() }
+    }
+
+    /// Delay-only plan (wire + trigger-fire jitter; timing-only, no loss).
+    pub fn delays(seed: u64) -> Self {
+        Self {
+            delay_prob: 0.2,
+            trigger_delay_prob: 0.15,
+            straggler_frac: 0.25,
+            seed,
+            ..Self::default()
+        }
+    }
+
+    /// Everything at once — the chaos-campaign default.
+    pub fn chaos(seed: u64) -> Self {
+        Self {
+            drop_prob: 0.06,
+            dup_prob: 0.06,
+            delay_prob: 0.10,
+            trigger_delay_prob: 0.08,
+            straggler_frac: 0.25,
+            seed,
+            ..Self::default()
+        }
+    }
+}
+
+/// Decision for one eager payload message on the wire path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireFault {
+    /// Deliver normally.
+    None,
+    /// Skip remote delivery; record in the lost ledger.
+    Drop,
+    /// Deliver twice with the same sequence number.
+    Dup,
+    /// Start the wire transfer this many ns late.
+    Delay(u64),
+}
+
+/// Stable 64-bit fingerprint of a campaign cell: FNV-1a over the label,
+/// mixed with the spec seed. Keys the per-cell decision stream so chaos
+/// campaigns are byte-identical across reruns and thread counts.
+pub fn fingerprint(seed: u64, label: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325 ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    for b in label.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// The per-run fault decision stream plus precomputed per-rank straggler
+/// factors. Decisions are drawn in event order from a dedicated RNG —
+/// never from the simulation's shared RNG, so an *inactive* plan leaves
+/// the no-fault timeline untouched.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    spec: FaultSpec,
+    rng: SplitMix64,
+    /// Kernel-duration multiplier per rank (1.0 = unperturbed).
+    stragglers: Vec<f64>,
+}
+
+impl FaultPlan {
+    /// Build the plan for one campaign cell: `fp` from [`fingerprint`],
+    /// `world_size` fixes the straggler assignment.
+    pub fn new(spec: FaultSpec, fp: u64, world_size: usize) -> Self {
+        // Straggler assignment uses its own derived stream so wire-fault
+        // draws do not depend on world size.
+        let mut srng = SplitMix64::new(fp ^ 0xA5A5_5A5A_DEAD_BEEF);
+        let stragglers = (0..world_size)
+            .map(|_| {
+                if spec.straggler_frac > 0.0 && srng.next_f64() < spec.straggler_frac {
+                    spec.straggler_factor
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        Self { spec, rng: SplitMix64::new(fp), stragglers }
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Draw the fault decision for the next eager payload message.
+    pub fn wire_fault(&mut self) -> WireFault {
+        let p = self.rng.next_f64();
+        let s = &self.spec;
+        if p < s.drop_prob {
+            WireFault::Drop
+        } else if p < s.drop_prob + s.dup_prob {
+            WireFault::Dup
+        } else if p < s.drop_prob + s.dup_prob + s.delay_prob {
+            let d = s.delay_ns / 2 + self.rng.below(s.delay_ns.max(1));
+            WireFault::Delay(d)
+        } else {
+            WireFault::None
+        }
+    }
+
+    /// Extra ns before a tripped DWQ descriptor fires (0 = on time).
+    pub fn trigger_extra(&mut self) -> u64 {
+        if self.spec.trigger_delay_prob > 0.0 && self.rng.next_f64() < self.spec.trigger_delay_prob
+        {
+            self.spec.trigger_delay_ns
+        } else {
+            0
+        }
+    }
+
+    /// Kernel-duration multiplier for `rank` (1.0 when unperturbed or
+    /// out of range).
+    pub fn straggler_factor(&self, rank: usize) -> f64 {
+        self.stragglers.get(rank).copied().unwrap_or(1.0)
+    }
+}
+
+/// A dropped eager payload awaiting watchdog retransmission: everything
+/// `nic::retransmit` needs to put the identical message back on the wire
+/// (same envelope, same payload snapshot, same sequence number — the
+/// receiver-side dedup set makes a redundant retransmit harmless).
+#[derive(Debug, Clone)]
+pub struct LostMsg {
+    pub env: Envelope,
+    pub payload: Vec<f32>,
+    pub seq: u64,
+    pub src_node: usize,
+    pub dst_node: usize,
+    /// Wire size of the original message (the retransmit pays it again).
+    pub bytes: usize,
+}
+
+/// Per-world fault runtime state (lives at `World::fault`; `None` means
+/// the fault layer is fully inert).
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    pub plan: FaultPlan,
+    /// Dropped payloads awaiting retransmission by the stx watchdog.
+    pub lost: Vec<LostMsg>,
+    /// Next wire sequence number (0 is reserved for "unsequenced").
+    seq_next: u64,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> Self {
+        Self { plan, lost: Vec::new(), seq_next: 0 }
+    }
+
+    /// Allocate the next wire sequence number (starts at 1; 0 means
+    /// "unsequenced" on messages sent while no plan is active).
+    pub fn next_seq(&mut self) -> u64 {
+        self.seq_next += 1;
+        self.seq_next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_is_stable_and_label_sensitive() {
+        let a = fingerprint(7, "halo3d/st/48/2x1/q1/s5");
+        let b = fingerprint(7, "halo3d/st/48/2x1/q1/s5");
+        let c = fingerprint(7, "halo3d/kt/48/2x1/q1/s5");
+        let d = fingerprint(8, "halo3d/st/48/2x1/q1/s5");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn plan_decisions_replay_identically() {
+        let spec = FaultSpec::chaos(3);
+        let fp = fingerprint(spec.seed, "cell");
+        let mut p1 = FaultPlan::new(spec.clone(), fp, 8);
+        let mut p2 = FaultPlan::new(spec, fp, 8);
+        for _ in 0..256 {
+            assert_eq!(p1.wire_fault(), p2.wire_fault());
+            assert_eq!(p1.trigger_extra(), p2.trigger_extra());
+        }
+        for r in 0..8 {
+            let f1 = p1.straggler_factor(r);
+            let f2 = p2.straggler_factor(r);
+            assert_eq!(f1.to_bits(), f2.to_bits());
+        }
+    }
+
+    #[test]
+    fn inactive_spec_injects_nothing() {
+        let spec = FaultSpec::default();
+        assert!(!spec.injects());
+        let mut p = FaultPlan::new(spec, 99, 4);
+        for _ in 0..64 {
+            assert_eq!(p.wire_fault(), WireFault::None);
+            assert_eq!(p.trigger_extra(), 0);
+        }
+        for r in 0..4 {
+            let f = p.straggler_factor(r);
+            assert_eq!(f.to_bits(), 1.0f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn chaos_spec_draws_every_fault_kind() {
+        let spec = FaultSpec::chaos(5);
+        assert!(spec.injects());
+        let mut p = FaultPlan::new(spec, fingerprint(5, "mix"), 16);
+        let mut drops = 0;
+        let mut dups = 0;
+        let mut delays = 0;
+        let mut clean = 0;
+        for _ in 0..2000 {
+            match p.wire_fault() {
+                WireFault::Drop => drops += 1,
+                WireFault::Dup => dups += 1,
+                WireFault::Delay(d) => {
+                    assert!(d >= 2_000 && d < 6_000, "delay {d} outside [ns/2, 3ns/2)");
+                    delays += 1;
+                }
+                WireFault::None => clean += 1,
+            }
+        }
+        assert!(drops > 0 && dups > 0 && delays > 0 && clean > 0);
+        let stragglers = (0..16).filter(|&r| p.straggler_factor(r) > 1.0).count();
+        assert!(stragglers > 0 && stragglers < 16);
+    }
+
+    #[test]
+    fn sequence_numbers_start_at_one() {
+        let mut st = FaultState::new(FaultPlan::new(FaultSpec::drops(1), 1, 2));
+        assert_eq!(st.next_seq(), 1);
+        assert_eq!(st.next_seq(), 2);
+        assert!(st.lost.is_empty());
+    }
+}

@@ -316,6 +316,24 @@ pub fn completed_cell(w: &World, sid: StreamId) -> CellId {
     w.gpus[sid.gpu].streams[sid.stream].completed_cell
 }
 
+/// Straggler perturbation from an active fault plan: a seeded subset of
+/// ranks runs kernels slower by a fixed factor (gpu index == rank in
+/// `build_world`). Identity on no-fault runs — the multiplication is
+/// skipped entirely so the baseline timeline is bit-for-bit unchanged.
+fn straggled(w: &World, gpu: usize, dur: Time) -> Time {
+    match w.fault.as_ref() {
+        Some(f) => {
+            let factor = f.plan.straggler_factor(gpu);
+            if factor > 1.0 {
+                ((dur as f64) * factor).round() as Time
+            } else {
+                dur
+            }
+        }
+        None => dur,
+    }
+}
+
 /// CP state machine: start executing the head-of-queue op if idle.
 pub fn cp_step(w: &mut World, core: &mut Ctx, sid: StreamId) {
     let s = &mut w.gpus[sid.gpu].streams[sid.stream];
@@ -328,7 +346,7 @@ pub fn cp_step(w: &mut World, core: &mut Ctx, sid: StreamId) {
         StreamOp::Kernel(spec) => {
             w.metrics.kernels_launched += 1;
             let dur = w.cost.cp_dispatch + w.cost.kernel_time(spec.flops, spec.bytes);
-            let dur = w.cost.jittered(dur, core.rng());
+            let dur = straggled(w, sid.gpu, w.cost.jittered(dur, core.rng()));
             core.schedule(
                 dur,
                 Box::new(move |w, c| {
@@ -340,7 +358,7 @@ pub fn cp_step(w: &mut World, core: &mut Ctx, sid: StreamId) {
         StreamOp::KtKernel(spec, kt) => {
             w.metrics.kernels_launched += 1;
             let dur = w.cost.cp_dispatch + w.cost.kernel_time(spec.flops, spec.bytes);
-            let dur = w.cost.jittered(dur, core.rng());
+            let dur = straggled(w, sid.gpu, w.cost.jittered(dur, core.rng()));
             let desc = format!("gpu{}.s{} {} kt-prologue", sid.gpu, sid.stream, spec.name);
             let KernelCtx { waits, triggers } = kt;
             let payload = spec.payload;

@@ -23,6 +23,7 @@
 //! | [`gpu`] | streams + control processor, stream memory ops, KT kernel hooks |
 //! | [`nic`] | Slingshot-11 counters, deferred work queues (triggered sends/puts/receives), eager/rendezvous |
 //! | [`fabric`] | inter-node wire with per-port serialization + congestion metrics |
+//! | [`fault`] | deterministic fault injection (drop/dup/delay, trigger delay, stragglers) + recovery knobs |
 //! | [`mpi`] | two-sided matching engine, requests, progress threads |
 //! | [`stx`] | stx v2: typed [`stx::Queue`] handles, persistent [`stx::CommPlan`]s, KT hooks, the [`stx::Variant`] axis |
 //! | [`collectives`] | ST ring / ST recursive-doubling / KT ring allreduce |
@@ -41,6 +42,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod faces;
 pub mod fabric;
+pub mod fault;
 pub mod gpu;
 pub mod mpi;
 pub mod nic;

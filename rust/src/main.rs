@@ -21,6 +21,10 @@
 //!   campaign.sizes=256,4096  campaign.topos=2x1,4x1  campaign.seeds=11,23
 //!   campaign.queues=1,2 (queues per rank)  campaign.dwq_slots=4
 //!   campaign.iters=3  campaign.jitter=0.01  campaign.out=CAMPAIGN_report
+//!   campaign.faults=off|drops|dups|delays|chaos  campaign.fault_seed=11
+//!   (the chaos axis; `STMPI_FAULTS=1` in the environment is shorthand
+//!   for campaign.faults=chaos — stalled cells render as `stalled` rows
+//!   carrying their StallReport instead of aborting the sweep)
 //! `train` keys: train.nodes, train.rpn, train.steps, seed.
 //!
 //! `sweep` regenerates Figs 8-12, the ST-vs-KT figure (figkt), and the
@@ -30,6 +34,7 @@ use anyhow::{bail, Context, Result};
 
 use stmpi::coordinator::config::Config;
 use stmpi::costmodel::{presets, MemOpFlavor};
+use stmpi::fault::FaultSpec;
 use stmpi::faces::figures::{
     all_figures, render_kt_compare, run_figure, run_kt_compare, Loops, FIGURE_G, KT_COMPARE_GS,
     SEEDS,
@@ -106,6 +111,7 @@ fn cmd_faces(args: &[String]) -> Result<()> {
         check: c.bool_or("faces.check", real)?,
         seed: c.u64_or("seed", 11)?,
         cost,
+        faults: None,
     };
     println!(
         "faces: {:?} dist={:?} nodes={} rpn={} G={} loops={}x{}x{} compute={:?}",
@@ -180,6 +186,16 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         Some(v) => Some(v.parse::<usize>().context("campaign.dwq_slots")?),
         None => None,
     };
+    let fault_seed = c.u64_or("campaign.fault_seed", seeds.first().copied().unwrap_or(11))?;
+    let faults = match c.get("campaign.faults") {
+        Some(name) => fault_preset(name, fault_seed)?,
+        // `STMPI_FAULTS=1` is the CI chaos leg's shorthand for
+        // campaign.faults=chaos.
+        None if std::env::var("STMPI_FAULTS").is_ok_and(|v| v == "1") => {
+            Some(FaultSpec::chaos(fault_seed))
+        }
+        None => None,
+    };
     let spec = CampaignSpec {
         workloads: comma_list(&c, "campaign.workloads"),
         variants: comma_list(&c, "campaign.variants"),
@@ -191,6 +207,7 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         jitter: c.f64_or("campaign.jitter", defaults.jitter)?,
         dwq_slots,
         threads: None,
+        faults,
     };
     let report = run_campaign(&spec)?;
     println!("{}", report.to_markdown());
@@ -201,9 +218,25 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         .with_context(|| format!("writing {out}.md"))?;
     println!("wrote {out}.json and {out}.md");
     if !report.all_ok() {
+        let stalled: u64 = report.cells.iter().map(|c| c.stalls).sum();
+        if stalled > 0 {
+            bail!("campaign recorded {stalled} stalled run(s) (see `stalls` column above)");
+        }
         bail!("campaign validation failed (see report above)");
     }
     Ok(())
+}
+
+/// Parse the `campaign.faults` preset name into a [`FaultSpec`].
+fn fault_preset(name: &str, seed: u64) -> Result<Option<FaultSpec>> {
+    match name {
+        "off" => Ok(None),
+        "drops" => Ok(Some(FaultSpec::drops(seed))),
+        "dups" => Ok(Some(FaultSpec::dups(seed))),
+        "delays" => Ok(Some(FaultSpec::delays(seed))),
+        "chaos" => Ok(Some(FaultSpec::chaos(seed))),
+        other => bail!("unknown campaign.faults preset '{other}' (off|drops|dups|delays|chaos)"),
+    }
 }
 
 fn cmd_figures(names: &[String]) -> Result<()> {

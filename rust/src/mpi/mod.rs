@@ -21,7 +21,7 @@
 //! costs no closure allocation, and hosts blocked in [`wait`] are woken
 //! through the engine's zero-delay microtask queue.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 
 use crate::gpu;
 use crate::nic::{self, BufSlice, Done, Envelope, WireMsg};
@@ -109,6 +109,10 @@ pub struct Proc {
     pub posted: VecDeque<PostedRecv>,
     pub unexpected: VecDeque<UnexpMsg>,
     pub progress: ProgressThread,
+    /// Wire sequence numbers already delivered to this rank (idempotent
+    /// duplicate resolution under fault injection; empty on no-fault
+    /// runs, where every message carries seq 0 = unsequenced).
+    pub seen_seqs: HashSet<u64>,
 }
 
 impl Proc {
@@ -120,6 +124,7 @@ impl Proc {
             posted: VecDeque::new(),
             unexpected: VecDeque::new(),
             progress: ProgressThread::default(),
+            seen_seqs: HashSet::new(),
         }
     }
 }
@@ -183,6 +188,16 @@ fn take_matching_unexpected(
 pub fn deliver_from_wire(w: &mut World, core: &mut Ctx, msg: WireMsg) {
     let env = *msg.env();
     let rank = env.dst_rank;
+    // Idempotent duplicate resolution: sequenced eager payloads (an
+    // active fault plan assigns seq != 0 at the source NIC) deliver
+    // exactly once — a duplicated wire copy or a redundant watchdog
+    // retransmit of an already-delivered payload is discarded here,
+    // before it can touch the matching queues.
+    if let WireMsg::Eager { seq, .. } = &msg {
+        if *seq != 0 && !w.procs[rank].seen_seqs.insert(*seq) {
+            return;
+        }
+    }
     match take_matching_posted(w, rank, &env) {
         Some(posted) => match msg {
             WireMsg::Eager { payload, .. } => {

@@ -346,6 +346,7 @@ fn matching_conserves_message_accounting_with_wildcards() {
         let mk = |src: usize, tag: i32, id: f32| WireMsg::Eager {
             env: Envelope { src_rank: src, dst_rank: 1, tag, comm: 0, elems: 1 },
             payload: vec![id],
+            seq: 0,
         };
         deliver_from_wire(w, core, mk(0, 7, 1.0));
         deliver_from_wire(w, core, mk(0, 8, 2.0));
@@ -383,6 +384,7 @@ fn wildcard_matching_is_fifo_on_both_queues() {
         let mk = |src: usize, id: f32| WireMsg::Eager {
             env: Envelope { src_rank: src, dst_rank: 2, tag: 1, comm: 0, elems: 1 },
             payload: vec![id],
+            seq: 0,
         };
         // Posted order: (src1) before (Any). The src0 arrival must skip
         // the src1-selector and land in the Any receive.

@@ -30,8 +30,9 @@
 //!   equivalent of the NIC's list-processing engine).
 
 use crate::fabric::{self, Port};
+use crate::fault::{LostMsg, WireFault};
 use crate::sim::CellId;
-use crate::world::{BufId, Callback, Ctx, World};
+use crate::world::{ArmedEntry, BufId, Callback, Ctx, World};
 
 /// A contiguous f32 region of a device buffer.
 #[derive(Debug, Clone, Copy)]
@@ -124,8 +125,12 @@ impl std::fmt::Debug for Done {
 
 /// What arrives at a destination NIC for the matching engine.
 pub enum WireMsg {
-    /// Eager: the payload travelled with the envelope.
-    Eager { env: Envelope, payload: Vec<f32> },
+    /// Eager: the payload travelled with the envelope. `seq` is the wire
+    /// sequence number for idempotent duplicate resolution (0 =
+    /// unsequenced, assigned only while a fault plan is active; a
+    /// duplicate or redundant retransmit carries the original's `seq`
+    /// and is discarded by the matching engine).
+    Eager { env: Envelope, payload: Vec<f32>, seq: u64 },
     /// Rendezvous RTS: payload stays at the source until matched.
     Rts { env: Envelope, src: BufSlice, src_node: usize, src_done: Done },
 }
@@ -237,11 +242,57 @@ pub fn dwq_reserve(w: &mut World, core: &mut Ctx, node: usize) -> Result<(), Dwq
     Ok(())
 }
 
+/// Cancel-and-release one armed DWQ descriptor slot on `node` without a
+/// trigger fire: credits the released cell exactly as a fired trigger
+/// would, so producers blocked on a full DWQ observe the freed slot.
+/// Used by the force-free recovery path for queues abandoned after a
+/// watchdog timeout (their triggers will never fire).
+pub fn dwq_cancel(w: &mut World, core: &mut Ctx, node: usize) {
+    let rel = dwq_released_cell(w, core, node);
+    core.add_cell(rel, 1);
+}
+
+/// Origin of a deferred descriptor, for stall diagnosis: which stx queue
+/// (and what logical slot/operation) armed it. Carried into the
+/// [`crate::world::ArmedRegistry`] so a [`crate::sim::StallReport`] can
+/// name the exact queue and slot of every descriptor that never fired.
+#[derive(Debug, Clone)]
+pub struct DwqOrigin {
+    /// Owning stx queue id, when armed by a queue.
+    pub queue: Option<usize>,
+    /// Human label, e.g. `q3 slot 1 plan-send`.
+    pub label: String,
+}
+
+/// Track an armed descriptor in the world registry; the returned token is
+/// cleared by the trigger-fire callback.
+fn register_armed(w: &mut World, node: usize, origin: Option<DwqOrigin>, desc: &str) -> usize {
+    let (queue, label) = match origin {
+        Some(o) => (o.queue, format!("{desc} [{}]", o.label)),
+        None => (None, desc.to_string()),
+    };
+    w.armed.register(ArmedEntry { node, queue, desc: label })
+}
+
+/// Extra ns a tripped descriptor waits before firing (fault injection;
+/// 0 whenever no plan is active).
+fn trigger_fire_extra(w: &mut World) -> u64 {
+    let extra = match w.fault.as_mut() {
+        Some(f) => f.plan.trigger_extra(),
+        None => 0,
+    };
+    if extra > 0 {
+        w.metrics.faults_injected += 1;
+    }
+    extra
+}
+
 /// Post a *triggered* tagged send to the NIC command queue: it executes
 /// when `trigger >= threshold` (paper §II-C). The payload is read from
 /// GPU memory at execution time (RDMA), so kernels may mutate the buffer
 /// up to the stream-ordered trigger write — the exact semantics §III-B2
-/// requires.
+/// requires. `origin` labels the descriptor in stall reports.
+#[allow(clippy::too_many_arguments)]
 pub fn post_triggered_send(
     w: &mut World,
     core: &mut Ctx,
@@ -250,24 +301,31 @@ pub fn post_triggered_send(
     env: Envelope,
     src: BufSlice,
     send_done: Done,
+    origin: Option<DwqOrigin>,
 ) {
     let src_node = w.topo.node_of(env.src_rank);
     debug_assert!(
         !w.topo.same_node(env.src_rank, env.dst_rank),
         "triggered sends are inter-node; intra-node ST is progress-thread emulated"
     );
+    let desc = format!(
+        "nic{src_node} DWQ send {}->{} tag {}",
+        env.src_rank, env.dst_rank, env.tag
+    );
+    let token = register_armed(w, src_node, origin, &desc);
     core.on_ge(
         trigger,
         threshold,
-        format!("nic{src_node} DWQ send {}->{} tag {}", env.src_rank, env.dst_rank, env.tag),
+        desc,
         Box::new(move |w, core| {
+            w.armed.clear(token);
             w.metrics.dwq_triggered += 1;
             // The descriptor leaves the deferred-work queue: return its
             // slot (see `dwq_reserve`; callers that never reserved are
             // tolerated — occupancy saturates at zero).
             let rel = dwq_released_cell(w, core, src_node);
             core.add_cell(rel, 1);
-            let lat = w.cost.nic_trigger_latency;
+            let lat = w.cost.nic_trigger_latency + trigger_fire_extra(w);
             core.schedule(
                 lat,
                 Box::new(move |w, core| execute_send(w, core, env, src, send_done)),
@@ -319,28 +377,149 @@ pub fn execute_send(w: &mut World, core: &mut Ctx, env: Envelope, src: BufSlice,
                 } else {
                     Vec::new()
                 };
-                let msg = WireMsg::Eager { env, payload };
-                let match_cost = w.cost.nic_match;
-                let left_src = fabric::transfer(
-                    w,
-                    core,
-                    src_node,
-                    dst_node,
-                    bytes,
-                    Box::new(move |w, core| {
-                        core.schedule(
-                            match_cost,
-                            Box::new(move |w2, c2| crate::mpi::deliver_from_wire(w2, c2, msg)),
+                // Fault decision — inert (seq 0, WireFault::None, zero
+                // extra draws) when no plan is active. Only eager payload
+                // messages are faulted; RTS/rendezvous control traffic is
+                // out of scope (DESIGN.md §Fault model).
+                let mut seq = 0u64;
+                let mut fault = WireFault::None;
+                if let Some(f) = w.fault.as_mut() {
+                    seq = f.next_seq();
+                    fault = f.plan.wire_fault();
+                }
+                match fault {
+                    WireFault::None => {
+                        eager_wire_send(
+                            w, core, env, payload, seq, src_node, dst_node, bytes, send_done,
+                            0, true,
                         );
-                        let _ = w;
-                    }),
-                );
-                // Local send completion: payload has left the NIC.
-                let comp = left_src + w.cost.nic_completion;
-                send_done.schedule_fire_at(core, comp);
+                    }
+                    WireFault::Drop => {
+                        // The payload still leaves the source port (the
+                        // NIC believes it sent) but vanishes in the
+                        // fabric; the stx watchdog replays it from the
+                        // lost ledger.
+                        w.metrics.faults_injected += 1;
+                        if let Some(f) = w.fault.as_mut() {
+                            f.lost.push(LostMsg {
+                                env,
+                                payload: payload.clone(),
+                                seq,
+                                src_node,
+                                dst_node,
+                                bytes,
+                            });
+                        }
+                        eager_wire_send(
+                            w, core, env, payload, seq, src_node, dst_node, bytes, send_done,
+                            0, false,
+                        );
+                    }
+                    WireFault::Dup => {
+                        // Two copies, one sequence number: the matching
+                        // engine delivers the first and discards the
+                        // second (idempotent duplicate resolution).
+                        w.metrics.faults_injected += 1;
+                        eager_wire_send(
+                            w,
+                            core,
+                            env,
+                            payload.clone(),
+                            seq,
+                            src_node,
+                            dst_node,
+                            bytes,
+                            send_done,
+                            0,
+                            true,
+                        );
+                        eager_wire_send(
+                            w,
+                            core,
+                            env,
+                            payload,
+                            seq,
+                            src_node,
+                            dst_node,
+                            bytes,
+                            Done::none(),
+                            0,
+                            true,
+                        );
+                    }
+                    WireFault::Delay(extra) => {
+                        w.metrics.faults_injected += 1;
+                        eager_wire_send(
+                            w, core, env, payload, seq, src_node, dst_node, bytes, send_done,
+                            extra, true,
+                        );
+                    }
+                }
             }),
         );
     }
+}
+
+/// Put one eager payload on the wire: fabric transfer (optionally
+/// entering `extra_ns` late), remote delivery into the matching engine
+/// (unless `deliver` is false — a dropped message occupies the ports but
+/// vanishes before matching), and local completion through `send_done`.
+/// Shared by the normal path, every wire-fault flavor, and watchdog
+/// retransmits. With `extra_ns == 0` and `deliver == true` the event
+/// sequence is identical to the pre-fault-layer code path.
+#[allow(clippy::too_many_arguments)]
+fn eager_wire_send(
+    w: &mut World,
+    core: &mut Ctx,
+    env: Envelope,
+    payload: Vec<f32>,
+    seq: u64,
+    src_node: usize,
+    dst_node: usize,
+    bytes: usize,
+    send_done: Done,
+    extra_ns: u64,
+    deliver: bool,
+) {
+    let match_cost = w.cost.nic_match;
+    let cb: Callback = if deliver {
+        let msg = WireMsg::Eager { env, payload, seq };
+        Box::new(move |w, core| {
+            core.schedule(
+                match_cost,
+                Box::new(move |w2, c2| crate::mpi::deliver_from_wire(w2, c2, msg)),
+            );
+            let _ = w;
+        })
+    } else {
+        Box::new(|_, _| {})
+    };
+    fabric::transfer_delayed(
+        w,
+        core,
+        src_node,
+        dst_node,
+        bytes,
+        extra_ns,
+        cb,
+        Box::new(move |w, core, left_src| {
+            // Local send completion: payload has left the NIC.
+            let comp = left_src + w.cost.nic_completion;
+            send_done.schedule_fire_at(core, comp);
+            let _ = w;
+        }),
+    );
+}
+
+/// Replay a dropped eager payload from the lost ledger (stx watchdog
+/// recovery). Retransmits bypass further fault injection — they always
+/// reach the destination — so bounded retries converge; the receiver's
+/// sequence dedup makes a redundant replay harmless. Local completion
+/// already fired at the original send; only remote delivery is replayed.
+pub fn retransmit(w: &mut World, core: &mut Ctx, lost: LostMsg) {
+    w.metrics.retries += 1;
+    let LostMsg { env, payload, seq, src_node, dst_node, bytes } = lost;
+    eager_wire_send(w, core, env, payload, seq, src_node, dst_node, bytes, Done::none(), 0, true);
 }
 
 /// Post a *triggered* tagged receive to the NIC command queue: when
@@ -367,20 +546,24 @@ pub fn post_triggered_recv(
     comm: u16,
     dst: BufSlice,
     done: Done,
+    origin: Option<DwqOrigin>,
 ) {
     let node = w.topo.node_of(rank);
+    let desc = format!("nic{node} DWQ recv r{rank} from {src_rank} tag {tag}");
+    let token = register_armed(w, node, origin, &desc);
     core.on_ge(
         trigger,
         threshold,
-        format!("nic{node} DWQ recv r{rank} from {src_rank} tag {tag}"),
+        desc,
         Box::new(move |w, core| {
+            w.armed.clear(token);
             w.metrics.dwq_triggered += 1;
             // The descriptor leaves the deferred-work queue: return its
             // slot (callers that never reserved are tolerated, as with
             // triggered sends).
             let rel = dwq_released_cell(w, core, node);
             core.add_cell(rel, 1);
-            let lat = w.cost.nic_trigger_latency + w.cost.nic_recv_post;
+            let lat = w.cost.nic_trigger_latency + w.cost.nic_recv_post + trigger_fire_extra(w);
             core.schedule(
                 lat,
                 Box::new(move |w, core| {
@@ -495,13 +678,16 @@ pub fn post_triggered_put(
     dst_done: Done,
 ) {
     let src_node = w.topo.node_of(src_rank);
+    let desc = format!("nic{src_node} DWQ put {src_rank}->{dst_rank}");
+    let token = register_armed(w, src_node, None, &desc);
     core.on_ge(
         trigger,
         threshold,
-        format!("nic{src_node} DWQ put {src_rank}->{dst_rank}"),
+        desc,
         Box::new(move |w, core| {
+            w.armed.clear(token);
             w.metrics.dwq_triggered += 1;
-            let lat = w.cost.nic_trigger_latency + w.cost.nic_proc;
+            let lat = w.cost.nic_trigger_latency + w.cost.nic_proc + trigger_fire_extra(w);
             core.schedule(
                 lat,
                 Box::new(move |w, core| {
@@ -580,12 +766,13 @@ pub fn post_triggered_atomic_add(
     target: CellId,
     value: u64,
 ) {
-    let _ = w;
+    let token = register_armed(w, 0, None, "DWQ atomic add");
     core.on_ge(
         trigger,
         threshold,
         "DWQ atomic add".to_string(),
         Box::new(move |w, core| {
+            w.armed.clear(token);
             w.metrics.dwq_triggered += 1;
             let lat = w.cost.nic_trigger_latency + w.cost.nic_proc;
             // Typed event: the deferred atomic is exactly a cell add.

@@ -37,7 +37,7 @@ fn triggered_send_defers_until_threshold() {
                 *da.lock().unwrap() = core.now();
             })),
         );
-        post_triggered_send(w, core, trig, 1, env, BufSlice::whole(src, 16), Done::none());
+        post_triggered_send(w, core, trig, 1, env, BufSlice::whole(src, 16), Done::none(), None);
         // Trigger fires only at t = 50_000.
         core.schedule(50_000, Box::new(move |_, c| c.write_cell(trig, 1)));
     });
@@ -72,7 +72,7 @@ fn triggered_send_reads_buffer_at_trigger_time() {
                 *vs.lock().unwrap() = w.bufs.get(crate::world::BufId(1))[0];
             })),
         );
-        post_triggered_send(w, core, trig, 1, env, BufSlice::whole(src, 8), Done::none());
+        post_triggered_send(w, core, trig, 1, env, BufSlice::whole(src, 8), Done::none(), None);
         // Buffer is overwritten BEFORE the trigger fires.
         core.schedule(1_000, Box::new(move |w: &mut World, _c: &mut Ctx| {
             w.bufs.get_mut(crate::world::BufId(0)).fill(42.0);
@@ -254,7 +254,7 @@ fn dwq_slots_exhaust_and_release_on_trigger() {
         assert!(dwq_reserve(w, core, 0).is_ok());
         assert_eq!(dwq_reserve(w, core, 0), Err(DwqFull { node: 0 }), "one slot only");
         assert_eq!(w.metrics.dwq_peak, 1);
-        post_triggered_send(w, core, trig, 1, env, BufSlice::whole(src, 8), Done::none());
+        post_triggered_send(w, core, trig, 1, env, BufSlice::whole(src, 8), Done::none(), None);
         core.schedule(1_000, Box::new(move |_, c| c.write_cell(trig, 1)));
         // Once the trigger has fired the descriptor has left the DWQ.
         core.schedule(
@@ -295,6 +295,7 @@ fn triggered_recv_defers_until_threshold() {
                 assert_eq!(w.bufs.get(crate::world::BufId(1))[0], 3.5);
                 *la.lock().unwrap() = core.now();
             })),
+            None,
         );
         // The message is sent immediately; the recv descriptor fires
         // only at t = 80_000, so the arrival buffers as unexpected.
@@ -335,6 +336,7 @@ fn triggered_recv_before_arrival_matches_posted() {
             Done::call(Box::new(move |w, _| {
                 *gc.lock().unwrap() = w.bufs.get(crate::world::BufId(1))[0];
             })),
+            None,
         );
         // Trigger at once; the send only starts at t = 100_000.
         core.schedule(0, Box::new(move |_, c| c.write_cell(trig, 1)));
@@ -376,6 +378,7 @@ fn triggered_recv_releases_dwq_slot_on_fire() {
             0,
             BufSlice::whole(dst, 8),
             Done::none(),
+            None,
         );
         core.schedule(
             1_000,

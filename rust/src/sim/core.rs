@@ -152,6 +152,30 @@ pub(crate) struct Cell<W> {
     pub name: String,
 }
 
+/// Structured snapshot of one blocked waiter, taken when the event heap
+/// drains with work still pending (see [`super::engine::StallReport`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WaiterSnapshot {
+    /// Name of the counter cell the waiter is parked on.
+    pub cell_name: String,
+    /// The cell's value at stall time.
+    pub value: u64,
+    /// The threshold the waiter was armed against (never reached).
+    pub threshold: u64,
+    /// Human-readable description given at registration time.
+    pub desc: String,
+}
+
+impl std::fmt::Display for WaiterSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "cell '{}' = {} awaiting >= {} by {}",
+            self.cell_name, self.value, self.threshold, self.desc
+        )
+    }
+}
+
 /// Engine statistics, useful for perf work on the simulator itself.
 #[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct SimStats {
@@ -369,15 +393,18 @@ impl<W> Core<W> {
         }
     }
 
-    /// Diagnostic: blocked waiter descriptions for the deadlock report.
-    pub(crate) fn blocked_waiters(&self) -> Vec<String> {
+    /// Diagnostic: structured snapshots of every blocked waiter, for the
+    /// stall report. Order is (cell creation, threshold) — deterministic.
+    pub(crate) fn waiter_snapshots(&self) -> Vec<WaiterSnapshot> {
         let mut out = Vec::new();
         for c in &self.cells {
             for w in &c.waiters {
-                out.push(format!(
-                    "cell '{}' = {} awaiting >= {} by {}",
-                    c.name, c.value, w.threshold, w.desc
-                ));
+                out.push(WaiterSnapshot {
+                    cell_name: c.name.clone(),
+                    value: c.value,
+                    threshold: w.threshold,
+                    desc: w.desc.clone(),
+                });
             }
         }
         out

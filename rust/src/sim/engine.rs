@@ -17,7 +17,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
-use super::core::{CellId, Core, HostId, SimStats, SmallEv, Time};
+use super::core::{CellId, Core, HostId, SimStats, SmallEv, Time, WaiterSnapshot};
 use super::gate::Gate;
 
 /// Marker payload used to unwind host threads when the sim aborts.
@@ -51,12 +51,93 @@ struct HostSlot {
     advance_dt: Time,
 }
 
+/// World-level context appended to a [`StallReport`] by an inspector hook
+/// (see [`Engine::set_stall_inspector`]): the engine itself only knows
+/// about hosts and cell waiters; armed triggered-op descriptors and MPI
+/// matching-queue depths live in the user world.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StallDetail {
+    /// Armed-but-never-fired triggered operations (DWQ descriptors), each
+    /// labelled with its NIC, queue, and slot of origin.
+    pub armed: Vec<String>,
+    /// Free-form notes: unmatched posted receives, unexpected-queue
+    /// depths, fault-injection counters.
+    pub notes: Vec<String>,
+}
+
+/// One still-parked host actor at stall time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StalledHost {
+    /// Host actor name (e.g. `rank3`).
+    pub host: String,
+    /// Park state (`Sleeping`, `BlockedOnCell`, `Pending`, `Running`).
+    pub state: String,
+    /// The park site: the wait description or `advance(dt)`.
+    pub site: String,
+}
+
+/// Structured diagnosis returned when the event heap and microtask queue
+/// drain while host actors are still parked or waiters are still armed —
+/// the simulation can make no further progress (a deadlock in the
+/// simulated program, or a triggered operation whose counter will never
+/// reach its threshold).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StallReport {
+    /// Virtual time at which progress stopped.
+    pub time_ns: Time,
+    /// Every host actor not yet `Done`, with its park site.
+    pub hosts: Vec<StalledHost>,
+    /// Every armed cell waiter: counter value vs. threshold.
+    pub waiters: Vec<WaiterSnapshot>,
+    /// Armed triggered sends/recvs (from the world inspector hook).
+    pub armed: Vec<String>,
+    /// World notes: posted/unexpected queue depths, fault counters.
+    pub notes: Vec<String>,
+}
+
+impl std::fmt::Display for StallReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "virtual time {} ns", self.time_ns)?;
+        for h in &self.hosts {
+            writeln!(f, "  host '{}' state {} waiting on: {}", h.host, h.state, h.site)?;
+        }
+        for w in &self.waiters {
+            writeln!(f, "  waiter: {w}")?;
+        }
+        for a in &self.armed {
+            writeln!(f, "  armed: {a}")?;
+        }
+        for n in &self.notes {
+            writeln!(f, "  note: {n}")?;
+        }
+        Ok(())
+    }
+}
+
+impl StallReport {
+    /// One-line summary for report tables: the first parked host and its
+    /// park site (or the first waiter when no host is parked).
+    pub fn headline(&self) -> String {
+        if let Some(h) = self.hosts.first() {
+            format!("{} at {}", h.host, h.site)
+        } else if let Some(w) = self.waiters.first() {
+            format!("waiter {}", w.desc)
+        } else {
+            "no runnable events".to_string()
+        }
+    }
+}
+
+/// Inspector hook: builds world-level [`StallDetail`] at stall time.
+pub type StallInspector<W> = Box<dyn Fn(&W, &Core<W>) -> StallDetail + Send>;
+
 struct Inner<W> {
     core: Core<W>,
     world: W,
     hosts: Vec<HostSlot>,
     aborted: bool,
     host_panic: Option<String>,
+    stall_inspector: Option<StallInspector<W>>,
 }
 
 struct Shared<W> {
@@ -67,8 +148,10 @@ struct Shared<W> {
 /// Simulation failure modes.
 #[derive(Debug)]
 pub enum SimError {
-    /// The event heap drained while actors were still blocked.
-    Deadlock { report: String },
+    /// The event heap drained while actors were still blocked: the
+    /// simulated program can make no further progress. Carries the full
+    /// structured diagnosis.
+    Stall { report: StallReport },
     /// A host actor panicked (application bug).
     HostPanic { message: String },
 }
@@ -76,7 +159,9 @@ pub enum SimError {
 impl std::fmt::Display for SimError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            SimError::Deadlock { report } => write!(f, "simulation deadlock:\n{report}"),
+            SimError::Stall { report } => {
+                write!(f, "simulation stalled (deadlock):\n{report}")
+            }
             SimError::HostPanic { message } => write!(f, "host actor panicked: {message}"),
         }
     }
@@ -100,6 +185,7 @@ impl<W: Send + 'static> Engine<W> {
                     hosts: Vec::new(),
                     aborted: false,
                     host_panic: None,
+                    stall_inspector: None,
                 }),
                 driver_gate: Gate::new(),
             }),
@@ -113,6 +199,15 @@ impl<W: Send + 'static> Engine<W> {
         let mut g = self.shared.inner.lock().unwrap();
         let inner = &mut *g;
         f(&mut inner.world, &mut inner.core)
+    }
+
+    /// Install a hook that contributes world-level context ([`StallDetail`]:
+    /// armed triggered operations, matching-queue depths) to the
+    /// [`StallReport`] if the simulation stalls. The engine only knows
+    /// hosts and cells; the world knows what the pending work *means*.
+    pub fn set_stall_inspector(&self, f: impl Fn(&W, &Core<W>) -> StallDetail + Send + 'static) {
+        let mut g = self.shared.inner.lock().unwrap();
+        g.stall_inspector = Some(Box::new(f));
     }
 
     /// Spawn a host actor: an OS thread running `f` in virtual time.
@@ -208,9 +303,9 @@ impl<W: Send + 'static> Engine<W> {
                     if g.hosts.iter().all(|h| h.state == HostState::Done) {
                         return Ok(());
                     }
-                    let report = Self::deadlock_report(&g);
+                    let report = Self::stall_report(&g);
                     Self::abort(&mut g);
-                    return Err(SimError::Deadlock { report });
+                    return Err(SimError::Stall { report });
                 }
             };
             debug_assert!(time >= g.core.now, "time went backwards");
@@ -254,24 +349,35 @@ impl<W: Send + 'static> Engine<W> {
         }
     }
 
-    fn deadlock_report(g: &Inner<W>) -> String {
-        let mut lines = vec![format!("virtual time {} ns", g.core.now())];
+    fn stall_report(g: &Inner<W>) -> StallReport {
+        let mut hosts = Vec::new();
         for h in &g.hosts {
             if h.state != HostState::Done {
-                let desc = if h.state == HostState::Sleeping && h.advance_dt > 0 {
+                let site = if h.state == HostState::Sleeping && h.advance_dt > 0 {
                     format!("advance({})", h.advance_dt)
                 } else if h.wait_desc.is_empty() {
                     "<unknown>".to_string()
                 } else {
                     h.wait_desc.clone()
                 };
-                lines.push(format!("  host '{}' state {:?} waiting on: {desc}", h.name, h.state));
+                hosts.push(StalledHost {
+                    host: h.name.clone(),
+                    state: format!("{:?}", h.state),
+                    site,
+                });
             }
         }
-        for w in g.core.blocked_waiters() {
-            lines.push(format!("  waiter: {w}"));
+        let detail = match &g.stall_inspector {
+            Some(f) => f(&g.world, &g.core),
+            None => StallDetail::default(),
+        };
+        StallReport {
+            time_ns: g.core.now(),
+            hosts,
+            waiters: g.core.waiter_snapshots(),
+            armed: detail.armed,
+            notes: detail.notes,
         }
-        lines.join("\n")
     }
 }
 

@@ -28,11 +28,15 @@
 //! [`rng::SplitMix64`]. The same seed and workload always produce the
 //! identical virtual timeline (pinned by `rust/tests/determinism.rs`).
 //!
-//! Deadlock detection: if the event heap and microtask queue drain while
+//! Stall detection: if the event heap and microtask queue drain while
 //! host actors or waiters remain blocked, [`Engine::run`] returns a
-//! [`SimError::Deadlock`] naming every blocked entity and the cell value
-//! it awaits — which doubles as an MPI deadlock debugger for code built
-//! on top.
+//! [`SimError::Stall`] carrying a structured [`StallReport`] — every
+//! parked host with its park site, every armed waiter's counter value
+//! vs. threshold, plus world-level context (armed triggered-op
+//! descriptors, matching-queue depths) contributed through
+//! [`Engine::set_stall_inspector`]. A simulation never hangs or panics
+//! on a wedged program; it diagnoses it — which doubles as an MPI
+//! deadlock debugger for code built on top.
 //!
 //! Sweeps of many independent simulations run in parallel through
 //! [`sweep`], with deterministic per-run seeds.
@@ -43,8 +47,8 @@ pub mod gate;
 pub mod rng;
 pub mod sweep;
 
-pub use self::core::{CellId, Core, SimStats, Time};
-pub use self::engine::{Engine, HostCtx, SimError};
+pub use self::core::{CellId, Core, SimStats, Time, WaiterSnapshot};
+pub use self::engine::{Engine, HostCtx, SimError, StallDetail, StallReport, StalledHost};
 
 #[cfg(test)]
 mod tests;

@@ -177,11 +177,45 @@ fn deadlock_detected_and_reported() {
         ctx.wait_ge(cell, 1, "never>=1");
     });
     match eng.run() {
-        Err(SimError::Deadlock { report }) => {
-            assert!(report.contains("stuck"), "report: {report}");
-            assert!(report.contains("never"), "report: {report}");
+        Err(SimError::Stall { report }) => {
+            // Structured fields: the parked host and the armed waiter.
+            assert_eq!(report.hosts.len(), 1);
+            assert_eq!(report.hosts[0].host, "stuck");
+            assert_eq!(report.hosts[0].site, "never>=1");
+            assert_eq!(report.waiters.len(), 1);
+            assert_eq!(report.waiters[0].cell_name, "never");
+            assert_eq!(report.waiters[0].value, 0);
+            assert_eq!(report.waiters[0].threshold, 1);
+            // Rendered form still names every blocked entity.
+            let text = report.to_string();
+            assert!(text.contains("stuck"), "report: {text}");
+            assert!(text.contains("never"), "report: {text}");
+            assert!(report.headline().contains("stuck"), "headline: {}", report.headline());
         }
-        other => panic!("expected deadlock, got {other:?}", other = other.map(|_| ())),
+        other => panic!("expected stall, got {other:?}", other = other.map(|_| ())),
+    }
+}
+
+/// The stall inspector hook contributes world-level detail to the report.
+#[test]
+fn stall_inspector_detail_lands_in_report() {
+    let mut eng = Engine::new(TestWorld::default(), 1);
+    let cell = eng.setup(|_, core| core.new_cell("armed.ctr", 0));
+    eng.set_stall_inspector(|w, core| StallDetail {
+        armed: vec![format!("dwq descriptor on cell '{}'", core.cell_name(CellId(0)))],
+        notes: vec![format!("world log entries: {}", w.log.len())],
+    });
+    eng.spawn_host("parked", move |ctx| {
+        ctx.wait_ge(cell, 2, "armed.ctr>=2");
+    });
+    match eng.run() {
+        Err(SimError::Stall { report }) => {
+            assert_eq!(report.armed, vec!["dwq descriptor on cell 'armed.ctr'".to_string()]);
+            assert_eq!(report.notes, vec!["world log entries: 0".to_string()]);
+            let text = format!("{}", SimError::Stall { report });
+            assert!(text.contains("deadlock"), "display keeps the deadlock keyword: {text}");
+        }
+        other => panic!("expected stall, got {other:?}", other = other.map(|_| ())),
     }
 }
 

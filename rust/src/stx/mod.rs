@@ -52,6 +52,19 @@
 //! Wildcards are rejected (§III-D): deferred operations require a
 //! concrete source rank and tag, checked eagerly at plan-build time.
 //!
+//! **Recovery contract under fault injection** (`World::fault` set, see
+//! [`crate::fault`]): every host completion drain ([`Queue::drain`],
+//! [`CommPlan::drain`]) and stream completion wait ([`Queue::wait`])
+//! arms a recovery watchdog. On expiry the watchdog retransmits every
+//! dropped payload in the lost ledger and re-arms with exponential
+//! backoff; after [`crate::fault::FaultSpec::max_retries`] rounds the
+//! run either surfaces [`StError::DrainTimeout`] to the blocked host
+//! (opt-in `timeout_error` mode, enabling [`Queue::free_after_timeout`]
+//! force-release) or parks so the engine's stall detector emits a
+//! structured [`crate::sim::StallReport`] — never a silent hang. On
+//! no-fault runs the watchdog is never armed and the timeline is
+//! bit-for-bit identical to earlier releases.
+//!
 //! Beyond the paper's ST API this module also hosts the **kernel-
 //! triggered (KT)** hooks of the follow-on work (arXiv 2306.15773):
 //! [`Queue::kt_start`] folds the trigger write into a kernel's execution
@@ -73,7 +86,7 @@ use crate::gpu::{
     StreamOp, WriteMode,
 };
 use crate::mpi::{self, SrcSel, TagSel};
-use crate::nic::{self, BufSlice, Done, Envelope};
+use crate::nic::{self, BufSlice, Done, DwqOrigin, Envelope};
 use crate::sim::{CellId, HostCtx};
 use crate::world::World;
 
@@ -183,6 +196,17 @@ pub enum StError {
     PlanWithoutQueue,
     /// A [`CommPlan`] was built over a queue belonging to another rank.
     ForeignQueue(usize),
+    /// A watchdog-supervised drain (fault runs with
+    /// [`crate::fault::FaultSpec::timeout_error`] set) exhausted its
+    /// retransmission budget with operations still incomplete. The queue
+    /// is still live; [`Queue::free_after_timeout`] force-releases its
+    /// resources.
+    DrainTimeout {
+        /// The queue whose drain timed out.
+        queue: usize,
+        /// Started-but-incomplete operations at the final check.
+        outstanding: u64,
+    },
 }
 
 impl std::fmt::Display for StError {
@@ -207,6 +231,11 @@ impl std::fmt::Display for StError {
             StError::ForeignQueue(q) => {
                 write!(f, "CommPlan built over queue {q}, which belongs to another rank")
             }
+            StError::DrainTimeout { queue, outstanding } => write!(
+                f,
+                "MPIX_Queue {queue} drain timed out with {outstanding} operation(s) \
+                 incomplete after watchdog retries"
+            ),
         }
     }
 }
@@ -429,7 +458,11 @@ fn arm_send(
                 None
             },
         };
-        nic::post_triggered_send(w, core, trig, threshold, env, src, done);
+        let origin = DwqOrigin {
+            queue: Some(queue),
+            label: format!("q{queue} epoch {threshold} send r{rank}->r{dst} tag {tag}"),
+        };
+        nic::post_triggered_send(w, core, trig, threshold, env, src, done, Some(origin));
     }
 }
 
@@ -485,7 +518,14 @@ fn arm_recv(
         // Hardware triggered receive: the NIC bumps the completion
         // counter itself once the matched payload has landed.
         let done = hw_recv_done(req_cell, comp);
-        nic::post_triggered_recv(w, core, trig, threshold, rank, src_rank, tag, comm, dst, done);
+        let origin = DwqOrigin {
+            queue: Some(queue),
+            label: format!("q{queue} epoch {threshold} recv r{rank}<-r{src_rank} tag {tag}"),
+        };
+        nic::post_triggered_recv(
+            w, core, trig, threshold, rank, src_rank, tag, comm, dst, done,
+            Some(origin),
+        );
         return;
     }
 
@@ -629,12 +669,17 @@ fn wait_impl(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
             return Err(StError::QueueFreed(queue));
         }
         let q = &w.queues[queue];
-        let op = StreamOp::WaitValue64 {
-            cell: q.comp_ctr,
-            threshold: q.started_total,
-            flavor: q.flavor,
-        };
+        let (comp, target) = (q.comp_ctr, q.started_total);
+        let op = StreamOp::WaitValue64 { cell: comp, threshold: target, flavor: q.flavor };
         let sid = q.stream;
+        // Under fault injection the stream-side completion wait is
+        // watchdog-supervised too: the *stream* parks on the counter
+        // (never the host), so the watchdog contributes only its
+        // retransmit half — no gate. A stream stall that outlives every
+        // retry surfaces as a StallReport naming the waitValue64.
+        if w.fault.is_some() {
+            arm_watchdog(w, core, comp, target, None, 0);
+        }
         gpu::enqueue(w, core, sid, op);
         Ok(())
     })
@@ -679,16 +724,117 @@ fn kt_wait_impl(
 }
 
 fn drain_impl(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
-    let (cell, threshold, cost) = hctx.with(|w, _| {
+    let (cell, threshold, cost, fault) = hctx.with(|w, _| {
         if w.queues[queue].freed {
             return Err(StError::QueueFreed(queue));
         }
         let q = &w.queues[queue];
-        Ok((q.comp_ctr, q.started_total, w.cost.host_wait_overhead))
+        Ok((q.comp_ctr, q.started_total, w.cost.host_wait_overhead, w.fault.is_some()))
     })?;
     hctx.advance(cost);
-    hctx.wait_ge(cell, threshold, "MPIX queue drain");
+    if !fault {
+        hctx.wait_ge(cell, threshold, "MPIX queue drain");
+        return Ok(());
+    }
+    // Watchdog-supervised drain (fault runs only): the host parks on a
+    // gate that opens either when the completion counter reaches its
+    // threshold or — in `timeout_error` mode — when the watchdog
+    // exhausts its retransmission budget, so the host can observe
+    // `StError::DrainTimeout` instead of parking forever.
+    let gate = hctx.with(|w, core| {
+        let gate = core.new_cell(format!("q{queue}.drain.gate"), 0);
+        core.on_ge(
+            cell,
+            threshold,
+            format!("q{queue} drain watchdog gate"),
+            Box::new(move |_w, core| {
+                core.add_cell(gate, 1);
+            }),
+        );
+        arm_watchdog(w, core, cell, threshold, Some(gate), 0);
+        gate
+    });
+    hctx.wait_ge(gate, 1, "MPIX queue drain (watchdog)");
+    let outstanding = hctx.with(|_w, core| threshold.saturating_sub(core.cell(cell)));
+    if outstanding > 0 {
+        return Err(StError::DrainTimeout { queue, outstanding });
+    }
     Ok(())
+}
+
+/// One arm of the recovery watchdog (fault runs only). After the spec's
+/// timeout — doubled on every attempt, exponential backoff — check the
+/// completion counter; if it is still short of `target`, retransmit
+/// every payload in the lost ledger ([`crate::nic::retransmit`], which
+/// bypasses injection) and re-arm. After
+/// [`crate::fault::FaultSpec::max_retries`] attempts the watchdog
+/// records a timeout and either opens `gate` anyway (`timeout_error`
+/// mode: the blocked drain observes [`StError::DrainTimeout`] and can
+/// force-release resources) or goes quiet, in which case the event heap
+/// drains and the engine reports a [`crate::sim::StallReport`] — never
+/// a silent hang, never a panic.
+fn arm_watchdog(
+    w: &mut World,
+    core: &mut crate::world::Ctx,
+    comp: CellId,
+    target: u64,
+    gate: Option<CellId>,
+    attempt: u32,
+) {
+    let Some(f) = w.fault.as_ref() else { return };
+    let spec = f.plan.spec();
+    let delay = spec.watchdog_ns.saturating_mul(1u64 << attempt.min(20));
+    let max_retries = spec.max_retries;
+    let timeout_error = spec.timeout_error;
+    core.schedule(
+        delay,
+        Box::new(move |w, core| {
+            if core.cell(comp) >= target {
+                return; // completed while the watchdog slept
+            }
+            if attempt < max_retries {
+                let lost = match w.fault.as_mut() {
+                    Some(f) => std::mem::take(&mut f.lost),
+                    None => Vec::new(),
+                };
+                for m in lost {
+                    nic::retransmit(w, core, m);
+                }
+                arm_watchdog(w, core, comp, target, gate, attempt + 1);
+            } else {
+                w.metrics.timeouts += 1;
+                if let (true, Some(g)) = (timeout_error, gate) {
+                    core.add_cell(g, 1);
+                }
+            }
+        }),
+    );
+}
+
+/// Force-release a queue abandoned after a watchdog timeout: skip the
+/// busy check, cancel every DWQ descriptor the queue still has armed
+/// (crediting the released cell so producers blocked on a full DWQ see
+/// the slots come back), and return both hardware counters to the NIC
+/// pool. Returns the number of cancelled descriptors. Only sound for
+/// queues whose triggers will never fire.
+fn force_free_impl(hctx: &mut HostCtx<World>, queue: usize) -> Result<u64, StError> {
+    let call = hctx.with(|w, _| w.cost.host_enqueue_call);
+    hctx.advance(call);
+    hctx.with(|w, core| {
+        if w.queues[queue].freed {
+            return Err(StError::QueueFreed(queue));
+        }
+        let node = w.topo.node_of(w.queues[queue].rank);
+        w.queues[queue].freed = true;
+        let orphans = w.armed.drain_queue(queue);
+        let n = orphans.len() as u64;
+        for e in &orphans {
+            nic::dwq_cancel(w, core, e.node);
+        }
+        nic::release_counter(w, node);
+        nic::release_counter(w, node);
+        Ok(n)
+    })
 }
 
 /// Charge one enqueue call, then run `attempt` (a reserve-and-arm
@@ -729,14 +875,17 @@ fn arm_with_backpressure(
 /// even if a released slot is lost to a concurrent producer and the
 /// wait repeats).
 fn wait_for_dwq_slot(hctx: &mut HostCtx<World>, node: usize) {
-    let (cell, threshold) = hctx.with(|w, core| {
+    let (cell, threshold, cap) = hctx.with(|w, core| {
         let cell = nic::dwq_released_cell(w, core, node);
         let cap = w.cost.dwq_slots_per_nic as u64;
         // A slot frees once released >= posted - capacity + 1 (the DWQ
         // was full when we got here, so posted >= capacity).
-        (cell, w.nics[node].dwq_posted + 1 - cap)
+        (cell, w.nics[node].dwq_posted + 1 - cap, cap)
     });
-    hctx.wait_ge(cell, threshold, "stx DWQ slot");
+    // The wait description names the exhausted pool and its capacity so
+    // a stall here (pre-armed demand exceeding dwq_slots_per_nic with no
+    // fire in flight) yields a self-explanatory StallReport.
+    hctx.wait_ge(cell, threshold, &format!("stx DWQ slot on nic{node} (capacity {cap} exhausted)"));
 }
 
 // ---------------------------------------------------------------------
@@ -931,6 +1080,20 @@ impl Queue {
     pub fn free(self, hctx: &mut HostCtx<World>) -> Result<(), (Queue, StError)> {
         match free_queue_impl(hctx, self.id) {
             Ok(()) => Ok(()),
+            Err(e) => Err((self, e)),
+        }
+    }
+
+    /// Force-release this queue after a watchdog timeout
+    /// ([`StError::DrainTimeout`]): skips the busy check, cancels every
+    /// DWQ descriptor the queue still has armed (their slots return to
+    /// the node's pool immediately), and frees both hardware counters.
+    /// Returns the number of cancelled descriptors. Only sound when the
+    /// queue's triggers will never fire — the recovery half of the
+    /// fault-injection contract; on healthy queues use [`Queue::free`].
+    pub fn free_after_timeout(self, hctx: &mut HostCtx<World>) -> Result<u64, (Queue, StError)> {
+        match force_free_impl(hctx, self.id) {
+            Ok(n) => Ok(n),
             Err(e) => Err((self, e)),
         }
     }
@@ -1153,8 +1316,9 @@ impl CommPlanBuilder {
 /// Multi-queue plans stripe operations round-robin over their queues;
 /// each queue arms and triggers independently, contending for the NIC's
 /// DWQ slots (stalls surface as `dwq_slot_waits`). A round's per-queue
-/// slot demand must fit `cost.dwq_slots_per_nic`; the engine's deadlock
-/// reporter names the blocked arm otherwise.
+/// slot demand must fit `cost.dwq_slots_per_nic`; otherwise the engine's
+/// stall detector produces a [`crate::sim::StallReport`] naming the
+/// blocked arm and the exhausted pool.
 pub struct CommPlan {
     rank: usize,
     stream: StreamId,

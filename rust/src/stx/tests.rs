@@ -1120,3 +1120,148 @@ fn kt_plan_deferred_recvs_match_hand_kt_iterations() {
     }
     assert_eq!(run(true), run(false), "plan vs hand SimStats (KT deferred recvs)");
 }
+
+// ---------------------------------------------------------------------
+// Fault injection: watchdog timeout, force-free recovery, leak audit
+// ---------------------------------------------------------------------
+
+/// Exhaust-then-reuse leak audit for the recovery path: a queue
+/// abandoned with an armed-but-never-triggered send holds one DWQ slot
+/// and two NIC counters; `free_after_timeout` must cancel the orphaned
+/// descriptor (crediting the released cell so the pool is reusable) and
+/// return both counters — after which the exhausted resources can be
+/// re-acquired in the same run.
+#[test]
+fn force_free_reclaims_dwq_slots_and_counters() {
+    let mut c = cost();
+    c.dwq_slots_per_nic = 1;
+    let mut w = build_world(c, Topology::new(2, 1));
+    let s1 = w.bufs.alloc_init(vec![1.0; 8]);
+    let s2 = w.bufs.alloc_init(vec![2.0; 8]);
+    let d2 = w.bufs.alloc(8);
+    run_cluster(w, 1, move |rank, ctx| {
+        if rank == 0 {
+            let (_sid, q1) = make_queue(ctx, rank, Variant::StreamTriggered);
+            let (_sid2, q2) = make_queue(ctx, rank, Variant::StreamTriggered);
+            // q1's deferred send takes the single DWQ slot and is never
+            // started: its trigger will never fire.
+            q1.send(ctx, 1, BufSlice::whole(s1, 8), 1, crate::mpi::COMM_WORLD).unwrap();
+            match q2.send(ctx, 1, BufSlice::whole(s2, 8), 2, crate::mpi::COMM_WORLD) {
+                Err(StError::DwqFull(node)) => assert_eq!(node, 0),
+                other => panic!("expected DwqFull, got {other:?}"),
+            }
+            let before = ctx.with(|w, _| w.nics[0].counters_in_use);
+            let cancelled = q1.free_after_timeout(ctx).expect("force-free");
+            assert_eq!(cancelled, 1, "the armed-but-never-triggered send is cancelled");
+            ctx.with(move |w, _| {
+                assert_eq!(
+                    w.nics[0].counters_in_use,
+                    before - 2,
+                    "force-free returns both hardware counters"
+                );
+            });
+            // Exhaust-then-reuse: the cancelled descriptor's slot is
+            // observable as free, so the blocked send now arms, fires,
+            // and completes.
+            q2.send(ctx, 1, BufSlice::whole(s2, 8), 2, crate::mpi::COMM_WORLD)
+                .expect("slot reclaimed by dwq_cancel");
+            q2.start(ctx).unwrap();
+            q2.drain(ctx).unwrap();
+            q2.free(ctx).unwrap();
+        } else {
+            let req = crate::mpi::irecv(
+                ctx,
+                rank,
+                SrcSel::Rank(0),
+                TagSel::Tag(2),
+                crate::mpi::COMM_WORLD,
+                BufSlice::whole(d2, 8),
+            );
+            crate::mpi::wait(ctx, req);
+            ctx.with(move |w, _| assert_eq!(w.bufs.get(d2), &[2.0; 8]));
+        }
+    })
+    .unwrap();
+}
+
+/// `timeout_error` mode end to end: every wire payload is dropped and
+/// the watchdog has no retry budget, so the receiver's drain surfaces
+/// `StError::DrainTimeout` (instead of parking forever or stalling the
+/// engine), the abandoned queue force-frees, and the NIC pool is
+/// immediately reusable — all within one run, with the fault counters
+/// visible in `Metrics`.
+#[test]
+fn drain_timeout_error_mode_reports_and_recovers() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let spec = crate::fault::FaultSpec {
+        drop_prob: 1.0,
+        max_retries: 0,
+        timeout_error: true,
+        ..Default::default()
+    };
+    let fp = crate::fault::fingerprint(spec.seed, "stx/drain-timeout");
+    w.fault = Some(crate::fault::FaultState::new(crate::fault::FaultPlan::new(spec, fp, 2)));
+    let src = w.bufs.alloc_init(vec![4.0; 8]);
+    let dst = w.bufs.alloc(8);
+    let out = run_cluster(w, 1, move |rank, ctx| {
+        if rank == 0 {
+            // Plain eager send; the plan drops it on the wire (the
+            // sender still completes locally, so this host finishes).
+            let req =
+                crate::mpi::isend(ctx, rank, 1, BufSlice::whole(src, 8), 9, crate::mpi::COMM_WORLD);
+            crate::mpi::wait(ctx, req);
+        } else {
+            let (_sid, q) = make_queue(ctx, rank, Variant::StreamTriggered);
+            q.recv(ctx, 0, BufSlice::whole(dst, 8), 9, crate::mpi::COMM_WORLD).unwrap();
+            q.start(ctx).unwrap();
+            match q.drain(ctx) {
+                Err(StError::DrainTimeout { queue: _, outstanding }) => {
+                    assert_eq!(outstanding, 1, "the dropped payload never completed the recv")
+                }
+                other => panic!("expected DrainTimeout, got {other:?}"),
+            }
+            let before = ctx.with(|w, _| w.nics[1].counters_in_use);
+            let cancelled = q.free_after_timeout(ctx).expect("abandoned queue force-frees");
+            assert_eq!(cancelled, 0, "an ST recv rides the progress thread, not the DWQ");
+            ctx.with(move |w, _| assert_eq!(w.nics[1].counters_in_use, before - 2));
+            // The pool is reusable in the same run.
+            let (_sid2, q2) = make_queue(ctx, rank, Variant::StreamTriggered);
+            q2.free(ctx).unwrap();
+        }
+    })
+    .unwrap();
+    assert_eq!(out.world.metrics.faults_injected, 1, "exactly one drop was injected");
+    assert_eq!(out.world.metrics.timeouts, 1, "the watchdog gave up once");
+    assert_eq!(out.world.metrics.retries, 0, "no retry budget in this spec");
+}
+
+/// The recovery half under a budget: the same dropped payload, but the
+/// watchdog may retransmit — the receiver's drain then completes with
+/// the replayed data and validates, no timeout surfaced.
+#[test]
+fn watchdog_retransmit_recovers_a_dropped_payload() {
+    let mut w = build_world(cost(), Topology::new(2, 1));
+    let spec = crate::fault::FaultSpec { drop_prob: 1.0, ..Default::default() };
+    let fp = crate::fault::fingerprint(spec.seed, "stx/retransmit");
+    w.fault = Some(crate::fault::FaultState::new(crate::fault::FaultPlan::new(spec, fp, 2)));
+    let src = w.bufs.alloc_init(vec![6.5; 8]);
+    let dst = w.bufs.alloc(8);
+    let out = run_cluster(w, 1, move |rank, ctx| {
+        if rank == 0 {
+            let req =
+                crate::mpi::isend(ctx, rank, 1, BufSlice::whole(src, 8), 9, crate::mpi::COMM_WORLD);
+            crate::mpi::wait(ctx, req);
+        } else {
+            let (_sid, q) = make_queue(ctx, rank, Variant::StreamTriggered);
+            q.recv(ctx, 0, BufSlice::whole(dst, 8), 9, crate::mpi::COMM_WORLD).unwrap();
+            q.start(ctx).unwrap();
+            q.drain(ctx).expect("the retransmitted payload completes the drain");
+            ctx.with(move |w, _| assert_eq!(w.bufs.get(dst), &[6.5; 8]));
+            q.free(ctx).unwrap();
+        }
+    })
+    .unwrap();
+    assert_eq!(out.world.metrics.faults_injected, 1);
+    assert_eq!(out.world.metrics.retries, 1, "one watchdog retransmit recovered the payload");
+    assert_eq!(out.world.metrics.timeouts, 0);
+}

@@ -12,7 +12,7 @@
 //! (host). Validation is exact: slot `s` of every rank must hold
 //! `payload(s, 0, j)` after the final iteration.
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{build_world, run_cluster};
 use crate::gpu::{stream_synchronize, KernelPayload, KernelSpec};
@@ -20,7 +20,7 @@ use crate::mpi::{SrcSel, TagSel, COMM_WORLD};
 use crate::nic::BufSlice;
 use crate::world::ComputeMode;
 
-use super::scaffold::{check_exact, scenario_run, RankComm, Timers};
+use super::scaffold::{check_exact, install_faults, scenario_run, RankComm, Timers};
 use super::{comm_variant, payload, ScenarioCfg, ScenarioRun, Workload};
 
 pub struct Allgather;
@@ -76,6 +76,7 @@ impl Workload for Allgather {
         let elems = cfg.elems;
 
         let mut world = build_world(cfg.cost.clone(), cfg.topology());
+        install_faults(&mut world, "allgather", cfg);
         world.compute = ComputeMode::Real;
         // Per rank: the gathered vector (n blocks); block `rank` is its
         // own contribution, written by the pack kernel each iteration.
@@ -141,7 +142,7 @@ impl Workload for Allgather {
             times2.record(rank, ctx.now() - t0);
             comm.finish(ctx, "allgather");
         })
-        .map_err(|e| anyhow!("allgather run failed: {e}"))?;
+        .context("allgather run failed")?;
 
         // Reference: block s of every rank == payload(s, 0, j).
         let pairs = all.iter().flat_map(|b| {

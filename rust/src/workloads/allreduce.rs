@@ -25,7 +25,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::collectives::{
     chunks, recursive_doubling_allreduce_st, ring_ag_step, ring_allreduce_kt, ring_allreduce_st,
@@ -39,7 +39,7 @@ use crate::sim::HostCtx;
 use crate::stx::{Queue, Variant};
 use crate::world::{BufId, ComputeMode, World};
 
-use super::scaffold::{check_exact, scenario_run, Timers};
+use super::scaffold::{check_exact, install_faults, scenario_run, Timers};
 use super::{payload, ScenarioCfg, ScenarioRun, Workload};
 
 pub struct Allreduce;
@@ -178,6 +178,7 @@ impl Workload for Allreduce {
         let len = cfg.elems;
 
         let mut world = build_world(cfg.cost.clone(), cfg.topology());
+        install_faults(&mut world, "allreduce", cfg);
         world.compute = ComputeMode::Real;
         let data: Vec<BufId> = (0..n).map(|_| world.bufs.alloc(len)).collect();
         // `tmp` sized for the recursive-doubling full-vector exchange; the
@@ -243,7 +244,7 @@ impl Workload for Allreduce {
             }
             times2.record(rank, acc);
         })
-        .map_err(|e| anyhow!("allreduce run failed: {e}"))?;
+        .context("allreduce run failed")?;
 
         let expect_ref = &expect;
         let pairs = data.iter().flat_map(|d| {

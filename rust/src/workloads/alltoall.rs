@@ -13,7 +13,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{build_world, run_cluster};
 use crate::gpu::{host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
@@ -21,7 +21,7 @@ use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
 use crate::nic::BufSlice;
 use crate::world::ComputeMode;
 
-use super::scaffold::{check_exact, scenario_run, RankComm, Timers};
+use super::scaffold::{check_exact, install_faults, scenario_run, RankComm, Timers};
 use super::{comm_variant, payload, ScenarioCfg, ScenarioRun, Workload};
 
 pub struct AllToAll;
@@ -66,6 +66,7 @@ impl Workload for AllToAll {
         let elems = cfg.elems;
 
         let mut world = build_world(cfg.cost.clone(), cfg.topology());
+        install_faults(&mut world, "alltoall", cfg);
         world.compute = ComputeMode::Real;
         // Per rank: a send matrix and a recv matrix of n blocks each.
         let send: Vec<_> = (0..n).map(|_| world.bufs.alloc(n * elems)).collect();
@@ -150,7 +151,7 @@ impl Workload for AllToAll {
             times2.record(rank, ctx.now() - t0);
             comm.finish(ctx, "alltoall");
         })
-        .map_err(|e| anyhow!("alltoall run failed: {e}"))?;
+        .context("alltoall run failed")?;
 
         // Reference: recv block s on rank r == payload(s, r, j).
         let pairs = recv.iter().enumerate().flat_map(|(r, rb)| {

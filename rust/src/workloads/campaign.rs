@@ -12,7 +12,12 @@
 //!
 //! Infeasible cells (a workload's `configure` rejects the grid point,
 //! e.g. recursive doubling on a non-power-of-two world) are reported as
-//! `skipped` rows instead of failing the campaign.
+//! `skipped` rows instead of failing the campaign. Cells whose runs
+//! *stall* — the engine's stall detector fired, e.g. under injected
+//! faults the watchdog could not recover from, or the pinned KT
+//! tight-DWQ stress cell — are reported as `stalled` rows carrying the
+//! full [`crate::sim::StallReport`], again instead of aborting the
+//! sweep (EXPERIMENTS.md §Chaos axis).
 //!
 //! Every ran cell also carries a baseline-relative delta (`vs ref` /
 //! `delta_vs_ref_pct`): its figure of merit against the workload's
@@ -23,7 +28,8 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::report::{json_escape, markdown_table, pct_delta, Summary};
 use crate::costmodel::presets;
-use crate::sim::sweep;
+use crate::fault::FaultSpec;
+use crate::sim::{sweep, SimError};
 use crate::world::Topology;
 
 use super::{registry, QueueSlotStats, ScenarioCfg, ScenarioRun, Validation, Workload};
@@ -55,6 +61,15 @@ pub struct CampaignSpec {
     pub dwq_slots: Option<usize>,
     /// Sweep worker threads; None = `sweep::default_threads()`.
     pub threads: Option<usize>,
+    /// Fault-injection plan applied to every cell (the chaos axis).
+    /// `None` keeps the timeline bit-identical to fault-free releases;
+    /// `Some` keys each cell's decision stream off
+    /// [`ScenarioCfg::fault_label`], so chaos campaigns stay
+    /// byte-identical across reruns and `STMPI_SWEEP_THREADS`. Cells
+    /// that stall under injected faults are recorded as `stalled` rows
+    /// carrying the [`crate::sim::StallReport`] instead of aborting the
+    /// sweep.
+    pub faults: Option<FaultSpec>,
 }
 
 impl Default for CampaignSpec {
@@ -70,6 +85,7 @@ impl Default for CampaignSpec {
             jitter: 0.01,
             dwq_slots: None,
             threads: None,
+            faults: None,
         }
     }
 }
@@ -96,6 +112,38 @@ impl CampaignSpec {
             jitter: 0.0,
             dwq_slots: None,
             threads: None,
+            faults: None,
+        }
+    }
+
+    /// The smoke campaign under the full chaos preset ({drop, dup,
+    /// delay, trigger-delay, straggler} at once) — the CI chaos leg
+    /// (`STMPI_FAULTS=1`). Every cell must either exact-validate
+    /// (recovered via watchdog retransmit) or render as a `stalled` row;
+    /// the report stays byte-identical across reruns and thread counts.
+    pub fn chaos_smoke(seed: u64) -> Self {
+        Self { faults: Some(FaultSpec::chaos(seed)), ..Self::smoke() }
+    }
+
+    /// KT tight-DWQ stress cell: a kernel-triggered run whose pre-armed
+    /// descriptor demand exceeds `dwq_slots_per_nic`, pinned by tests to
+    /// fail fast with a [`crate::sim::StallReport`] naming the exhausted
+    /// slot pool (`stx DWQ slot on nic...`) rather than hanging. See
+    /// DESIGN.md §Fault model & stall diagnosis for the backpressure
+    /// contract.
+    pub fn kt_tight_dwq() -> Self {
+        Self {
+            workloads: vec!["alltoall".into()],
+            variants: vec!["kt".into()],
+            elems: vec![48],
+            topos: vec![(4, 1)],
+            queues: vec![1],
+            seeds: vec![5],
+            iters: 2,
+            jitter: 0.0,
+            dwq_slots: Some(1),
+            threads: None,
+            faults: None,
         }
     }
 }
@@ -144,6 +192,20 @@ pub struct CampaignCell {
     pub unexpected_msgs: u64,
     /// Engine events of the first seed's run.
     pub events: u64,
+    /// Wire faults injected (first completed seed's run; the chaos axis).
+    pub faults_injected: u64,
+    /// Watchdog retransmits of dropped payloads (first completed seed).
+    pub retries: u64,
+    /// Watchdogs that exhausted their retry budget (first completed
+    /// seed).
+    pub timeouts: u64,
+    /// Seeds of this cell that ended in a [`crate::sim::StallReport`]
+    /// instead of completing (recorded as a `stalled` row, not a sweep
+    /// abort).
+    pub stalls: u64,
+    /// Full stall diagnosis of the first stalled seed (park sites,
+    /// waiter counters, armed descriptors, unmatched receives).
+    pub stall_report: Option<String>,
 }
 
 impl CampaignCell {
@@ -205,13 +267,20 @@ impl CampaignReport {
                 c.ranks_per_node,
                 c.queues_per_rank
             ));
-            match &c.summary {
-                Some(sm) => s.push_str(&format!(
+            // `stalled` outranks `ok`: any stalled seed marks the row.
+            match (&c.summary, c.stalls) {
+                (Some(sm), 0) => s.push_str(&format!(
                     "\"status\": \"ok\", \"avg_ms\": {:.6}, \"min_ms\": {:.6}, \
                      \"max_ms\": {:.6}, ",
                     sm.avg, sm.min, sm.max
                 )),
-                None => s.push_str("\"status\": \"skipped\", "),
+                (Some(sm), _) => s.push_str(&format!(
+                    "\"status\": \"stalled\", \"avg_ms\": {:.6}, \"min_ms\": {:.6}, \
+                     \"max_ms\": {:.6}, ",
+                    sm.avg, sm.min, sm.max
+                )),
+                (None, 0) => s.push_str("\"status\": \"skipped\", "),
+                (None, _) => s.push_str("\"status\": \"stalled\", "),
             }
             match c.delta_vs_ref_pct {
                 Some(d) => s.push_str(&format!("\"delta_vs_ref_pct\": {d:.3}, ")),
@@ -232,7 +301,9 @@ impl CampaignReport {
                 "\"validation\": \"{}\", \"bytes_wire\": {}, \"wire_msgs\": {}, \
                  \"max_ingress_wait_ns\": {}, \"max_egress_wait_ns\": {}, \
                  \"dwq_slot_waits\": {}, \"dwq_peak\": {}, \"dwq_queues\": [{}], \
-                 \"unexpected_msgs\": {}, \"events\": {} }}",
+                 \"unexpected_msgs\": {}, \"events\": {}, \
+                 \"faults_injected\": {}, \"retries\": {}, \"timeouts\": {}, \
+                 \"stalls\": {}, \"stall_report\": {} }}",
                 json_escape(&c.validation),
                 c.bytes_wire,
                 c.wire_msgs,
@@ -242,7 +313,15 @@ impl CampaignReport {
                 c.dwq_peak,
                 dwq_queues,
                 c.unexpected_msgs,
-                c.events
+                c.events,
+                c.faults_injected,
+                c.retries,
+                c.timeouts,
+                c.stalls,
+                match &c.stall_report {
+                    Some(rep) => format!("\"{}\"", json_escape(rep)),
+                    None => "null".to_string(),
+                }
             ));
             s.push_str(if i + 1 == self.cells.len() { "\n" } else { ",\n" });
         }
@@ -271,6 +350,10 @@ impl CampaignReport {
             "dwq peak".to_string(),
             "dwq/q".to_string(),
             "unexp".to_string(),
+            "faults".to_string(),
+            "retries".to_string(),
+            "timeouts".to_string(),
+            "stalls".to_string(),
         ]];
         for c in &self.cells {
             let (avg, min, max) = match &c.summary {
@@ -315,6 +398,10 @@ impl CampaignReport {
                 c.dwq_peak.to_string(),
                 dwq_q,
                 c.unexpected_msgs.to_string(),
+                c.faults_injected.to_string(),
+                c.retries.to_string(),
+                c.timeouts.to_string(),
+                c.stalls.to_string(),
             ]);
         }
         format!(
@@ -423,6 +510,7 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
                             queues_per_rank: qpr,
                             seed: spec.seeds[0],
                             cost: cost.clone(),
+                            faults: spec.faults.clone(),
                         };
                         let skip = w.configure(&cfg).err().map(|e| format!("{e}"));
                         plans.push(CellPlan {
@@ -471,25 +559,41 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
             queues_per_rank: p.qpr,
             seed,
             cost: cost.clone(),
+            faults: spec.faults.clone(),
         };
         p.w.run(&cfg)
     });
 
-    // Group the results back per cell (job order is cell-major).
-    let mut by_cell: Vec<Vec<ScenarioRun>> = plans.iter().map(|_| Vec::new()).collect();
+    // Group the results back per cell (job order is cell-major). A seed
+    // that stalls — the engine's stall detector fired — becomes data
+    // (a `stalled` row carrying the report) instead of aborting the
+    // whole sweep; any other failure still propagates.
+    enum SeedOutcome {
+        Ran(ScenarioRun),
+        Stalled(crate::sim::StallReport),
+    }
+    let mut by_cell: Vec<Vec<SeedOutcome>> = plans.iter().map(|_| Vec::new()).collect();
     for (&(i, seed), res) in jobs.iter().zip(results) {
         let p = &plans[i];
-        let run = res.map_err(|e| {
-            anyhow!(
-                "campaign cell {}/{} elems={} {}x{} seed={seed} failed: {e}",
-                p.w.name(),
-                p.variant,
-                p.elems,
-                p.nodes,
-                p.rpn
-            )
-        })?;
-        by_cell[i].push(run);
+        match res {
+            Ok(run) => by_cell[i].push(SeedOutcome::Ran(run)),
+            Err(e) => {
+                // `.context(...)` in the workloads preserves the
+                // SimError payload for exactly this downcast.
+                if let Some(SimError::Stall { report }) = e.downcast_ref::<SimError>() {
+                    by_cell[i].push(SeedOutcome::Stalled(report.clone()));
+                } else {
+                    return Err(anyhow!(
+                        "campaign cell {}/{} elems={} {}x{} seed={seed} failed: {e}",
+                        p.w.name(),
+                        p.variant,
+                        p.elems,
+                        p.nodes,
+                        p.rpn
+                    ));
+                }
+            }
+        }
     }
 
     let mut cells = Vec::with_capacity(plans.len());
@@ -515,18 +619,46 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
                 per_queue: Vec::new(),
                 unexpected_msgs: 0,
                 events: 0,
+                faults_injected: 0,
+                retries: 0,
+                timeouts: 0,
+                stalls: 0,
+                stall_report: None,
             });
             continue;
         }
-        let runs = &by_cell[i];
+        let outcomes = &by_cell[i];
+        let runs: Vec<&ScenarioRun> = outcomes
+            .iter()
+            .filter_map(|o| match o {
+                SeedOutcome::Ran(r) => Some(r),
+                SeedOutcome::Stalled(_) => None,
+            })
+            .collect();
+        let stalled: Vec<&crate::sim::StallReport> = outcomes
+            .iter()
+            .filter_map(|o| match o {
+                SeedOutcome::Stalled(rep) => Some(rep),
+                SeedOutcome::Ran(_) => None,
+            })
+            .collect();
         let ms: Vec<f64> = runs.iter().map(|r| r.time_ns as f64 / 1e6).collect();
-        let mut validation = runs[0].validation.clone();
-        for r in runs {
-            if let Validation::Failed { .. } = &r.validation {
-                validation = r.validation.clone();
+        // A stalled seed dominates the cell's verdict: the row renders
+        // as `STALLED: <headline>` even when other seeds completed.
+        let validation = if let Some(rep) = stalled.first() {
+            format!("STALLED: {}", rep.headline())
+        } else {
+            let mut v = runs[0].validation.clone();
+            for r in &runs {
+                if let Validation::Failed { .. } = &r.validation {
+                    v = r.validation.clone();
+                }
             }
-        }
-        let first = &runs[0];
+            v.label()
+        };
+        let ok = stalled.is_empty() && runs.iter().all(|r| r.validation.ok());
+        let first: Option<&ScenarioRun> = runs.first().copied();
+        let m = |f: fn(&ScenarioRun) -> u64| first.map(f).unwrap_or(0);
         cells.push(CampaignCell {
             workload: p.w.name().to_string(),
             variant: p.variant.clone(),
@@ -534,19 +666,24 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
             nodes: p.nodes,
             ranks_per_node: p.rpn,
             queues_per_rank: p.qpr,
-            summary: Some(Summary::of(&ms)),
+            summary: if ms.is_empty() { None } else { Some(Summary::of(&ms)) },
             delta_vs_ref_pct: None,
-            validation: validation.label(),
-            ok: validation.ok(),
-            bytes_wire: first.metrics.bytes_wire,
-            wire_msgs: first.metrics.wire_msgs,
-            max_ingress_wait_ns: first.metrics.max_ingress_wait_ns,
-            max_egress_wait_ns: first.metrics.max_egress_wait_ns,
-            dwq_slot_waits: first.metrics.dwq_slot_waits,
-            dwq_peak: first.metrics.dwq_peak,
-            per_queue: first.per_queue.clone(),
-            unexpected_msgs: first.metrics.unexpected_msgs,
-            events: first.stats.events,
+            validation,
+            ok,
+            bytes_wire: m(|r| r.metrics.bytes_wire),
+            wire_msgs: m(|r| r.metrics.wire_msgs),
+            max_ingress_wait_ns: m(|r| r.metrics.max_ingress_wait_ns),
+            max_egress_wait_ns: m(|r| r.metrics.max_egress_wait_ns),
+            dwq_slot_waits: m(|r| r.metrics.dwq_slot_waits),
+            dwq_peak: m(|r| r.metrics.dwq_peak),
+            per_queue: first.map(|r| r.per_queue.clone()).unwrap_or_default(),
+            unexpected_msgs: m(|r| r.metrics.unexpected_msgs),
+            events: m(|r| r.stats.events),
+            faults_injected: m(|r| r.metrics.faults_injected),
+            retries: m(|r| r.metrics.retries),
+            timeouts: m(|r| r.metrics.timeouts),
+            stalls: stalled.len() as u64,
+            stall_report: stalled.first().map(|rep| format!("{rep}")),
         });
     }
 

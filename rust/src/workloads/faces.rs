@@ -70,6 +70,7 @@ impl Workload for FacesAdapter {
             check: false,
             seed: cfg.seed,
             cost: cfg.cost.clone(),
+            faults: cfg.faults.clone(),
         };
         let r = run_faces(&fc)?;
         Ok(ScenarioRun {

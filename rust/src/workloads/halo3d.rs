@@ -19,7 +19,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{build_world, run_cluster};
 use crate::faces::domain::ProcGrid;
@@ -30,7 +30,7 @@ use crate::sim::HostCtx;
 use crate::stx::Variant;
 use crate::world::{BufId, ComputeMode, World};
 
-use super::scaffold::{check_exact, scenario_run, RankComm, Timers};
+use super::scaffold::{check_exact, install_faults, scenario_run, RankComm, Timers};
 use super::{comm_variant, grid_for, payload, ScenarioCfg, ScenarioRun, Workload};
 
 pub struct Halo3d;
@@ -221,6 +221,7 @@ impl Workload for Halo3d {
         let (px, py, pz) = grid_for(cfg.world_size());
         let grid = ProcGrid::new(px, py, pz);
         let mut world = build_world(cfg.cost.clone(), cfg.topology());
+        install_faults(&mut world, "halo3d", cfg);
         world.compute = ComputeMode::Real; // Fn-payload kernels move real data
         let plans = Arc::new(build_plans(&mut world, &grid, cfg.elems));
         let times = Timers::new(grid.size());
@@ -231,7 +232,7 @@ impl Workload for Halo3d {
         let out = run_cluster(world, cfg.seed, move |rank, ctx| {
             rank_program(iters, &plans2, rank, ctx, variant, qpr, &times2);
         })
-        .map_err(|e| anyhow!("halo3d run failed: {e}"))?;
+        .context("halo3d run failed")?;
 
         // Host-side reference: every accumulator slot holds iters * the
         // neighbor's packed value for the opposing direction.

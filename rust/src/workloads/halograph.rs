@@ -33,7 +33,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{build_world, run_cluster};
 use crate::gpu::{stream_synchronize, KernelPayload, KernelSpec};
@@ -42,7 +42,7 @@ use crate::nic::BufSlice;
 use crate::sim::rng::SplitMix64;
 use crate::world::{BufId, ComputeMode, World};
 
-use super::scaffold::{check_exact, scenario_run, RankComm, Timers};
+use super::scaffold::{check_exact, install_faults, scenario_run, RankComm, Timers};
 use super::{comm_variant, payload, ScenarioCfg, ScenarioRun, Workload};
 
 pub struct HaloGraph;
@@ -257,6 +257,7 @@ impl Workload for HaloGraph {
         let skews = Arc::new(build_skews(n, cfg.iters, &mut skew_rng));
 
         let mut world = build_world(cfg.cost.clone(), cfg.topology());
+        install_faults(&mut world, "halograph", cfg);
         world.compute = ComputeMode::Real;
         let plans = Arc::new(build_plans(&mut world, n, &edges));
         let times = Timers::new(n);
@@ -318,7 +319,7 @@ impl Workload for HaloGraph {
             times2.record(rank, ctx.now() - t0);
             comm.finish(ctx, "halograph");
         })
-        .map_err(|e| anyhow!("halograph run failed: {e}"))?;
+        .context("halograph run failed")?;
 
         // Reference: every receive slot holds the peer's last-iteration
         // packed value for that directed edge.

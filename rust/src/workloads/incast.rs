@@ -17,7 +17,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{build_world, run_cluster};
 use crate::gpu::{stream_synchronize, KernelPayload, KernelSpec};
@@ -25,7 +25,7 @@ use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
 use crate::nic::BufSlice;
 use crate::world::ComputeMode;
 
-use super::scaffold::{check_exact, scenario_run, RankComm, Timers};
+use super::scaffold::{check_exact, install_faults, scenario_run, RankComm, Timers};
 use super::{comm_variant, payload, ScenarioCfg, ScenarioRun, Workload};
 
 pub struct Incast;
@@ -74,6 +74,7 @@ impl Workload for Incast {
         let elems = cfg.elems;
 
         let mut world = build_world(cfg.cost.clone(), cfg.topology());
+        install_faults(&mut world, "incast", cfg);
         world.compute = ComputeMode::Real;
         // Root sink: one slot per sender (senders 1..n land at slot s-1).
         let sink = world.bufs.alloc((n - 1) * elems);
@@ -143,7 +144,7 @@ impl Workload for Incast {
             times2.record(rank, ctx.now() - t0);
             comm.finish(ctx, "incast");
         })
-        .map_err(|e| anyhow!("incast run failed: {e}"))?;
+        .context("incast run failed")?;
 
         let got = out.world.bufs.get(sink);
         let pairs = (1..n)

@@ -55,6 +55,7 @@ pub use campaign::{run_campaign, CampaignReport, CampaignSpec};
 use anyhow::{anyhow, Result};
 
 use crate::costmodel::CostModel;
+use crate::fault::FaultSpec;
 use crate::sim::SimStats;
 use crate::stx::Variant;
 use crate::world::{Metrics, Topology};
@@ -79,6 +80,13 @@ pub struct ScenarioCfg {
     pub queues_per_rank: usize,
     pub seed: u64,
     pub cost: CostModel,
+    /// Fault-injection plan for this cell (`None` = no chaos; the
+    /// no-fault timeline is bit-for-bit identical to earlier releases).
+    /// The per-cell decision stream is keyed by
+    /// [`crate::fault::fingerprint`] over [`ScenarioCfg::fault_label`],
+    /// so chaos campaigns replay byte-identically at any sweep thread
+    /// count.
+    pub faults: Option<FaultSpec>,
 }
 
 impl ScenarioCfg {
@@ -95,6 +103,7 @@ impl ScenarioCfg {
             queues_per_rank: 1,
             seed: 7,
             cost,
+            faults: None,
         }
     }
 
@@ -104,6 +113,16 @@ impl ScenarioCfg {
 
     pub fn topology(&self) -> Topology {
         Topology::new(self.nodes, self.ranks_per_node)
+    }
+
+    /// Stable label identifying this cell for the fault fingerprint:
+    /// `workload/variant/elems/nodesxrpn/qN/sSEED`.
+    pub fn fault_label(&self, workload: &str) -> String {
+        format!(
+            "{workload}/{}/{}/{}x{}/q{}/s{}",
+            self.variant, self.elems, self.nodes, self.ranks_per_node, self.queues_per_rank,
+            self.seed
+        )
     }
 }
 

@@ -15,12 +15,25 @@ use std::cell::Cell;
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::RunOutcome;
+use crate::fault::{fingerprint, FaultPlan, FaultState};
 use crate::gpu::{self, StreamId};
 use crate::sim::HostCtx;
 use crate::stx::{CommPlan, CommPlanBuilder, Queue, Variant};
 use crate::world::World;
 
-use super::{QueueSlotStats, ScenarioRun, Validation};
+use super::{QueueSlotStats, ScenarioCfg, ScenarioRun, Validation};
+
+/// Install the cell's fault plan (if any) into a freshly built world:
+/// the per-cell decision stream is keyed by the fingerprint of
+/// [`ScenarioCfg::fault_label`], so the same cell replays its chaos
+/// byte-identically on every rerun and at any sweep thread count. A
+/// `None` spec leaves the world untouched (fully inert fault layer).
+pub fn install_faults(world: &mut World, workload: &str, cfg: &ScenarioCfg) {
+    if let Some(spec) = &cfg.faults {
+        let fp = fingerprint(spec.seed, &cfg.fault_label(workload));
+        world.fault = Some(FaultState::new(FaultPlan::new(spec.clone(), fp, cfg.world_size())));
+    }
+}
 
 /// One rank's communication context: its GPU stream plus the queue set
 /// its plans stripe over (`queues_per_rank` queues for queue-using

@@ -346,3 +346,66 @@ fn per_queue_split_sums_to_the_aggregate() {
     assert!(report.to_json().contains("\"dwq_queues\""));
     assert!(json_parses(&report.to_json()));
 }
+
+/// The pinned KT tight-DWQ stress cell: kernel-triggered pre-armed
+/// demand above `dwq_slots_per_nic` cannot make progress (a KT round
+/// arms every descriptor before its carrying kernel enqueues, so no
+/// trigger can ever free a slot). The campaign must fail fast with a
+/// `stalled` row whose report names the exhausted pool — never a silent
+/// hang, never a sweep abort.
+#[test]
+fn kt_tight_dwq_cell_stalls_with_a_report_naming_the_pool() {
+    let mut spec = CampaignSpec::kt_tight_dwq();
+    spec.threads = Some(1);
+    let report = run_campaign(&spec).expect("a stalled cell is a row, not a sweep abort");
+    let cell = report
+        .cells
+        .iter()
+        .find(|c| c.stalls > 0)
+        .expect("the tight-DWQ cell must record a stall");
+    assert!(cell.validation.starts_with("STALLED:"), "{}", cell.validation);
+    let rep = cell.stall_report.as_ref().expect("stalled cells carry the full report");
+    assert!(
+        rep.contains("stx DWQ slot") && rep.contains("exhausted"),
+        "the report must name the exhausted slot pool:\n{rep}"
+    );
+    assert!(!report.all_ok(), "a stalled cell is not ok");
+    assert!(report.to_json().contains("\"status\": \"stalled\""));
+    assert!(json_parses(&report.to_json()), "{}", report.to_json());
+    // Determinism: the stall diagnosis itself replays byte-identically.
+    let rerun = run_campaign(&spec).unwrap();
+    assert_eq!(report.to_json(), rerun.to_json());
+}
+
+/// The chaos smoke campaign ({drop, dup, delay, trigger-delay,
+/// straggler} everywhere): every cell either exact-validates after
+/// watchdog recovery or renders as a `stalled` row — and the chaos
+/// report is byte-identical across reruns and thread counts.
+#[test]
+fn chaos_smoke_campaign_recovers_or_stalls_and_is_deterministic() {
+    let mut spec = CampaignSpec::chaos_smoke(29);
+    spec.threads = Some(1);
+    let a = run_campaign(&spec).expect("chaos must not abort the sweep");
+    assert!(a.ran_cells() > 0 || a.cells.iter().any(|c| c.stalls > 0));
+    let mut saw_faults = false;
+    for c in &a.cells {
+        if c.stalls > 0 {
+            assert!(c.stall_report.is_some(), "{}/{}: stalled without report", c.workload, c.variant);
+            continue;
+        }
+        if c.summary.is_some() {
+            assert!(
+                c.ok,
+                "{}/{}: chaos cells must exact-validate after recovery: {}",
+                c.workload, c.variant, c.validation
+            );
+            saw_faults |= c.faults_injected > 0;
+        }
+    }
+    assert!(saw_faults, "the chaos preset must actually inject faults:\n{}", a.to_markdown());
+    assert!(json_parses(&a.to_json()));
+    spec.threads = Some(4);
+    let b = run_campaign(&spec).unwrap();
+    assert_eq!(a.to_json(), b.to_json(), "chaos report must not depend on thread count");
+    assert_eq!(a.to_markdown(), b.to_markdown());
+}

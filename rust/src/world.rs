@@ -7,6 +7,7 @@
 use std::sync::Arc;
 
 use crate::costmodel::CostModel;
+use crate::fault::FaultState;
 use crate::gpu::Gpu;
 use crate::mpi::{Proc, Req};
 use crate::nic::Nic;
@@ -164,6 +165,94 @@ pub struct Metrics {
     pub progress_ops: u64,
     pub unexpected_msgs: u64,
     pub matched_posted: u64,
+    /// Wire faults actually injected by an active `FaultPlan` (drops +
+    /// dups + delays + delayed trigger fires).
+    pub faults_injected: u64,
+    /// Dropped payloads retransmitted by the stx watchdog.
+    pub retries: u64,
+    /// Watchdogs that exhausted `max_retries` without completion.
+    pub timeouts: u64,
+    /// Runs that ended in a stall (set by the campaign aggregator on
+    /// stalled cells; always 0 inside a completed run).
+    pub stalls: u64,
+}
+
+/// One armed-but-not-yet-fired triggered operation (DWQ descriptor),
+/// tracked so a [`crate::sim::StallReport`] can name exactly which
+/// descriptors never fired — with their NIC, queue, and slot of origin.
+#[derive(Debug, Clone)]
+pub struct ArmedEntry {
+    /// NIC node the descriptor is posted on.
+    pub node: usize,
+    /// Owning stx queue id, when the descriptor came from a queue.
+    pub queue: Option<usize>,
+    /// Human-readable label: origin (queue/slot) + descriptor kind.
+    pub desc: String,
+}
+
+/// Registry of armed DWQ descriptors: slab with token-based clearing.
+/// `nic::post_triggered_*` registers an entry when a descriptor is armed
+/// and clears it when the trigger fires; whatever remains at stall time
+/// is exactly the set of descriptors whose counters never tripped.
+#[derive(Debug, Default)]
+pub struct ArmedRegistry {
+    entries: Vec<Option<ArmedEntry>>,
+    free: Vec<usize>,
+}
+
+impl ArmedRegistry {
+    /// Track an armed descriptor; returns the token to clear it with.
+    pub fn register(&mut self, entry: ArmedEntry) -> usize {
+        match self.free.pop() {
+            Some(i) => {
+                self.entries[i] = Some(entry);
+                i
+            }
+            None => {
+                self.entries.push(Some(entry));
+                self.entries.len() - 1
+            }
+        }
+    }
+
+    /// Clear a descriptor when its trigger fires (idempotent).
+    pub fn clear(&mut self, token: usize) {
+        if let Some(slot) = self.entries.get_mut(token) {
+            if slot.take().is_some() {
+                self.free.push(token);
+            }
+        }
+    }
+
+    /// Still-armed descriptors, in arming order.
+    pub fn pending(&self) -> impl Iterator<Item = &ArmedEntry> {
+        self.entries.iter().flatten()
+    }
+
+    /// Number of still-armed descriptors.
+    pub fn len(&self) -> usize {
+        self.entries.iter().flatten().count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drain every still-armed descriptor belonging to `queue` (used by
+    /// the force-release path after a watchdog timeout). Returns the
+    /// cleared entries so the caller can credit DWQ slots back.
+    pub fn drain_queue(&mut self, queue: usize) -> Vec<ArmedEntry> {
+        let mut out = Vec::new();
+        for (i, slot) in self.entries.iter_mut().enumerate() {
+            if slot.as_ref().is_some_and(|e| e.queue == Some(queue)) {
+                if let Some(e) = slot.take() {
+                    self.free.push(i);
+                    out.push(e);
+                }
+            }
+        }
+        out
+    }
 }
 
 /// The complete simulated cluster.
@@ -182,6 +271,12 @@ pub struct World {
     /// Virtual finish time of each rank's program (filled by the
     /// coordinator's run loop).
     pub rank_finish: Vec<u64>,
+    /// Fault-injection runtime state; `None` (the default) keeps every
+    /// fault and recovery path fully inert — the timeline is
+    /// bit-for-bit identical to a build without the fault layer.
+    pub fault: Option<FaultState>,
+    /// Armed-DWQ-descriptor registry feeding the stall inspector.
+    pub armed: ArmedRegistry,
 }
 
 impl World {
@@ -217,6 +312,8 @@ impl World {
             runtime: None,
             metrics: Metrics::default(),
             rank_finish: Vec::new(),
+            fault: None,
+            armed: ArmedRegistry::default(),
         }
     }
 

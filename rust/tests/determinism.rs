@@ -344,6 +344,48 @@ fn halograph_kt_campaign_is_thread_count_invariant() {
     assert_eq!(serial.to_markdown(), parallel.to_markdown());
 }
 
+/// The chaos axis upholds the same contract: a fault-injected campaign
+/// (drops + dups + delays + stragglers live, watchdog retransmits in
+/// play) renders byte-identical reports across reruns and across sweep
+/// worker-thread counts — the per-cell fault stream is keyed by the
+/// campaign fingerprint, not by worker scheduling.
+#[test]
+fn chaos_campaign_report_is_thread_count_invariant() {
+    let mut spec = CampaignSpec::chaos_smoke(29);
+    spec.threads = Some(1);
+    let serial = run_campaign(&spec).unwrap();
+    assert!(
+        serial.cells.iter().any(|c| c.faults_injected > 0),
+        "chaos campaign must actually inject faults:\n{}",
+        serial.to_markdown()
+    );
+    spec.threads = Some(4);
+    let parallel = run_campaign(&spec).unwrap();
+    let parallel_again = run_campaign(&spec).unwrap();
+    assert_eq!(serial.to_json(), parallel.to_json(), "1 thread vs 4 threads");
+    assert_eq!(parallel.to_json(), parallel_again.to_json(), "repeated parallel runs");
+    assert_eq!(serial.to_markdown(), parallel.to_markdown());
+}
+
+/// Stalled rows are deterministic too: the pinned KT tight-DWQ stress
+/// cell renders the same `stalled` row (full StallReport text included)
+/// across reruns and across sweep worker-thread counts.
+#[test]
+fn stalled_rows_are_thread_count_invariant() {
+    let mut spec = CampaignSpec::kt_tight_dwq();
+    spec.threads = Some(1);
+    let serial = run_campaign(&spec).unwrap();
+    assert!(
+        serial.cells.iter().any(|c| c.stalls > 0),
+        "tight-DWQ cell must stall:\n{}",
+        serial.to_markdown()
+    );
+    spec.threads = Some(4);
+    let parallel = run_campaign(&spec).unwrap();
+    assert_eq!(serial.to_json(), parallel.to_json(), "1 thread vs 4 threads");
+    assert_eq!(serial.to_markdown(), parallel.to_markdown());
+}
+
 /// The per-queue report split (`dwq_queues` JSON array / `dwq/q` column)
 /// is byte-identical across sweep worker-thread counts, with DWQ slots
 /// dialed down so the per-queue wait counters are actually non-zero.

@@ -2,29 +2,55 @@
 //!
 //! The build image has no crates.io access, so this workspace vendors the
 //! small slice of `anyhow` that stmpi actually uses: the [`Error`] type,
-//! the [`Result`] alias, the [`anyhow!`]/[`bail!`] macros, and the
-//! [`Context`] extension trait. Errors are message chains (each
-//! `context(..)` layer prepends to the display), which is all the crate's
-//! error reporting needs.
+//! the [`Result`] alias, the [`anyhow!`]/[`bail!`] macros, the
+//! [`Context`] extension trait, and [`Error::downcast_ref`]. Errors are
+//! message chains (each `context(..)` layer prepends to the display)
+//! carrying the original typed error as an opaque payload, so callers
+//! can recover structure from deep inside a chain — the campaign driver
+//! downcasts to `sim::SimError` to turn stalled runs into report rows.
 
+use std::any::Any;
 use std::fmt;
 
-/// A string-backed error value. Like `anyhow::Error` it deliberately does
-/// **not** implement `std::error::Error`, which is what makes the blanket
+/// A message-chain error value carrying the originating typed error as
+/// an opaque payload. Like `anyhow::Error` it deliberately does **not**
+/// implement `std::error::Error`, which is what makes the blanket
 /// `From<E: std::error::Error>` conversion below coherent.
 pub struct Error {
     msg: String,
+    source: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
-    /// Build an error from anything displayable.
+    /// Build an error from anything displayable (no typed payload).
     pub fn msg<M: fmt::Display>(m: M) -> Self {
-        Self { msg: m.to_string() }
+        Self { msg: m.to_string(), source: None }
     }
 
-    /// Prepend a context layer to the message chain.
+    /// Prepend a context layer to the message chain. The typed payload
+    /// of the original error is preserved through every layer.
     pub fn context<C: fmt::Display>(self, c: C) -> Self {
-        Self { msg: format!("{c}: {}", self.msg) }
+        Self { msg: format!("{c}: {}", self.msg), source: self.source }
+    }
+
+    /// Downcast to the typed error at the root of the chain, if the
+    /// chain was started from one (via `?` / `From` or `.context(..)` on
+    /// a typed `Result`). Errors built from [`anyhow!`]/[`bail!`] carry
+    /// no payload and return `None`.
+    pub fn downcast_ref<E: Any>(&self) -> Option<&E> {
+        self.source.as_ref()?.downcast_ref::<E>()
+    }
+
+    /// Normalize any displayable error value into an [`Error`]: an
+    /// `Error` passes through untouched (payload intact); anything else
+    /// becomes the root of a new chain and is kept as the payload.
+    fn from_any<E: fmt::Display + Any + Send + Sync>(e: E) -> Self {
+        let msg = e.to_string();
+        let any: Box<dyn Any + Send + Sync> = Box::new(e);
+        match any.downcast::<Error>() {
+            Ok(err) => *err,
+            Err(other) => Self { msg, source: Some(other) },
+        }
     }
 }
 
@@ -42,7 +68,8 @@ impl fmt::Debug for Error {
 
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Self {
-        Self { msg: e.to_string() }
+        let msg = e.to_string();
+        Self { msg, source: Some(Box::new(e)) }
     }
 }
 
@@ -66,9 +93,10 @@ macro_rules! bail {
 }
 
 /// Extension trait adding `.context(..)` / `.with_context(..)` to
-/// `Result`. A single blanket impl over `E: Display` covers both foreign
-/// errors (io, parse, ...) and [`Error`] itself without overlapping
-/// impls.
+/// `Result`. A single blanket impl over `E: Display + Any` covers both
+/// foreign errors (io, parse, ...) and [`Error`] itself without
+/// overlapping impls; [`Error::from_any`] routes each to the right
+/// construction.
 pub trait Context<T, E> {
     /// Wrap the error with a context message.
     fn context<C: fmt::Display>(self, context: C) -> Result<T>;
@@ -77,13 +105,13 @@ pub trait Context<T, E> {
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
 }
 
-impl<T, E: fmt::Display> Context<T, E> for Result<T, E> {
+impl<T, E: fmt::Display + Any + Send + Sync> Context<T, E> for Result<T, E> {
     fn context<C: fmt::Display>(self, context: C) -> Result<T> {
-        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+        self.map_err(|e| Error::from_any(e).context(context))
     }
 
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
-        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+        self.map_err(|e| Error::from_any(e).context(f()))
     }
 }
 
@@ -130,5 +158,40 @@ mod tests {
         let r: Result<()> = Err(anyhow!("inner"));
         let err = r.context("outer").unwrap_err();
         assert_eq!(format!("{err}"), "outer: inner");
+    }
+
+    #[derive(Debug, PartialEq)]
+    struct Typed(u32);
+    impl fmt::Display for Typed {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "typed error {}", self.0)
+        }
+    }
+    impl std::error::Error for Typed {}
+
+    #[test]
+    fn downcast_survives_question_mark_and_context_layers() {
+        fn inner() -> Result<()> {
+            Err(Typed(7))?;
+            Ok(())
+        }
+        let err = inner().unwrap_err().context("layer 1").context("layer 2");
+        assert_eq!(format!("{err}"), "layer 2: layer 1: typed error 7");
+        assert_eq!(err.downcast_ref::<Typed>(), Some(&Typed(7)));
+        assert!(err.downcast_ref::<std::io::Error>().is_none());
+    }
+
+    #[test]
+    fn downcast_survives_context_on_typed_result() {
+        let r: Result<(), Typed> = Err(Typed(9));
+        let err = r.context("outer").unwrap_err();
+        assert_eq!(format!("{err}"), "outer: typed error 9");
+        assert_eq!(err.downcast_ref::<Typed>(), Some(&Typed(9)));
+    }
+
+    #[test]
+    fn anyhow_macro_errors_have_no_payload() {
+        let err = anyhow!("plain");
+        assert!(err.downcast_ref::<Typed>().is_none());
     }
 }
