@@ -6,10 +6,11 @@
 //! 1. the CI smoke campaign (2 workloads × 3 variants each — host, ST,
 //!    KT — tiny sizes) with hard assertions: validation passes, the
 //!    JSON report parses, and a rerun is byte-identical;
-//! 2. the full default campaign — all seven registered workloads × every
+//! 2. the full default campaign — all eight registered workloads × every
 //!    variant × 2 sizes × 2 topologies × {1, 2} queues per rank × 2
 //!    seeds — which produces the report artifact CI uploads (including
-//!    the multi-queue cells).
+//!    the multi-queue cells and the achieved-overlap / critical-path
+//!    columns).
 //!
 //! Deterministic at any `STMPI_SWEEP_THREADS`.
 //!
@@ -49,14 +50,23 @@ fn main() {
     println!("{}", report.to_markdown());
     assert!(report.all_ok(), "campaign validation failed (see report above)");
     assert!(
-        report.workloads_covered() >= 7,
-        "expected >= 7 workloads, got {}",
+        report.workloads_covered() >= 8,
+        "expected >= 8 workloads, got {}",
         report.workloads_covered()
     );
     assert!(
         report.cells.iter().any(|c| c.queues_per_rank == 2 && c.summary.is_some()),
         "the multi-queue axis must contribute ran cells"
     );
+    assert!(
+        report
+            .cells
+            .iter()
+            .filter(|c| c.summary.is_some())
+            .all(|c| c.overlap_pct.is_some() && c.crit.is_some()),
+        "every ran cell must carry achieved-overlap and critical-path columns"
+    );
+    assert!(report.to_markdown().contains("overlap %"));
     assert!(json_parses(&report.to_json()), "full JSON report must parse");
     std::fs::write("CAMPAIGN_report.json", report.to_json()).expect("write CAMPAIGN_report.json");
     std::fs::write("CAMPAIGN_report.md", report.to_markdown()).expect("write CAMPAIGN_report.md");

@@ -1,6 +1,7 @@
 //! Microbenchmarks of the simulation substrate itself (the L3 hot path):
 //! raw event throughput, typed completion throughput, cell-waiter
-//! dispatch, host context switches, end-to-end Faces simulation rates,
+//! dispatch, host context switches, end-to-end Faces simulation rates
+//! (with trace recording off and on, pinning the obs layer's cost),
 //! and parallel-sweep scaling. Used by the perf pass (EXPERIMENTS.md
 //! §Perf).
 //!
@@ -417,6 +418,12 @@ fn write_json(
 fn main() {
     println!("== stmpi engine microbenchmarks (PR1 perf pass) ==\n");
 
+    // Substrate benches measure with trace recording disabled: every obs
+    // emit site reduces to its `Option` None branch, and the faces keys
+    // keep their historical meaning (pure simulation rate), so the CI
+    // trend line directly exposes any disabled-tracing cost regression.
+    std::env::set_var("STMPI_TRACE", "0");
+
     let legacy_chain = legacy_event_chain();
     let chain = new_event_chain();
     println!("event chain (boxed):   legacy {legacy_chain:>12.0} ev/s   new {chain:>12.0} ev/s   ({:.2}x)", chain / legacy_chain);
@@ -439,6 +446,20 @@ fn main() {
     let (rank_iters, sims) = bench_faces_rate();
     println!("faces fig8 ST:         {rank_iters:>12.0} rank-iters/s ({sims:.3} sims/s)");
 
+    // Recording cost: the same simulation with the trace recorder live
+    // (bounded ring, sim-time stamps under the engine lock).
+    std::env::set_var("STMPI_TRACE", "1");
+    let (traced_rank_iters, _) = bench_faces_rate();
+    std::env::set_var("STMPI_TRACE", "0");
+    let trace_overhead_pct = if traced_rank_iters > 0.0 {
+        (rank_iters / traced_rank_iters - 1.0) * 100.0
+    } else {
+        f64::INFINITY
+    };
+    println!(
+        "faces fig8 ST traced:  {traced_rank_iters:>12.0} rank-iters/s ({trace_overhead_pct:.1}% recording overhead)"
+    );
+
     let (threads, scaling) = bench_sweep_scaling();
     println!("sweep scaling:         {scaling:.2}x on {threads} threads (4 sims)");
 
@@ -450,11 +471,21 @@ fn main() {
     // threshold-ordered waiter dispatch must be >= 3x the legacy core.
     // Enforced (process exits nonzero) when STMPI_BENCH_ENFORCE=1, as CI
     // sets it.
-    let bar_ok = comp / legacy_comp >= 3.0 && scan / legacy_scan >= 3.0;
+    let mut bar_ok = comp / legacy_comp >= 3.0 && scan / legacy_scan >= 3.0;
     println!(
         "\nPR1 acceptance bar (completions & waiter dispatch >= 3x legacy): {}",
         if bar_ok { "PASS" } else { "FAIL" }
     );
+    // Obs acceptance bar: full-trace recording may cost at most 25% of
+    // the end-to-end faces rate. The DISABLED cost is pinned by the bars
+    // above plus the historical faces keys: every bench ran with
+    // recording off, through the same emit-site branches.
+    let trace_ok = traced_rank_iters >= rank_iters * 0.75;
+    println!(
+        "obs acceptance bar (traced faces rate >= 0.75x untraced): {}",
+        if trace_ok { "PASS" } else { "FAIL" }
+    );
+    bar_ok = bar_ok && trace_ok;
 
     write_json(
         &root,
@@ -474,6 +505,8 @@ fn main() {
             ("host_switches_per_s", switches),
             ("faces_fig8_rank_iters_per_s", rank_iters),
             ("faces_fig8_sims_per_s", sims),
+            ("faces_fig8_rank_iters_per_s_traced", traced_rank_iters),
+            ("trace_record_overhead_pct", trace_overhead_pct),
         ],
         threads,
         scaling,

@@ -11,6 +11,7 @@ use crate::costmodel::CostModel;
 use crate::gpu::Gpu;
 use crate::mpi::Proc;
 use crate::nic::Nic;
+use crate::obs::{self, CritPath, Overlap, TraceBuf, TraceMeta};
 use crate::sim::{Engine, HostCtx, SimError, SimStats, StallDetail};
 use crate::world::{ComputeMode, Topology, World};
 
@@ -18,6 +19,10 @@ use crate::world::{ComputeMode, Topology, World};
 /// per rank (the paper's one-rank-per-GPU mapping, §V-C).
 pub fn build_world(cost: CostModel, topo: Topology) -> World {
     let mut w = World::new(cost, topo.clone());
+    // Workload-level runs record a structured trace by default (the
+    // compile-free off-switch is `STMPI_TRACE=0`); raw-`Engine` users —
+    // the microbenchmarks — never pass through here and stay trace-free.
+    w.trace_cap = obs::recording_enabled().then_some(obs::DEFAULT_CAP);
     for n in 0..topo.nodes {
         w.nics.push(Nic::new(n));
     }
@@ -37,6 +42,45 @@ pub struct RunOutcome {
     pub rank_finish: Vec<u64>,
     /// max over ranks of finish time == the job's makespan.
     pub makespan: u64,
+    /// Structured event trace, present when the world requested one via
+    /// [`World::trace_cap`](crate::world::World). Byte-deterministic:
+    /// identical across reruns and `STMPI_SWEEP_THREADS` settings.
+    pub trace: Option<TraceBuf>,
+}
+
+/// Trace-derived analytics of a finished run (see [`crate::obs`]): the
+/// report-facing summary plus the raw buffer for Chrome-trace export.
+pub struct TraceAnalytics {
+    /// Achieved communication/computation overlap (`None` when tracing
+    /// was off or the run moved nothing over the wire).
+    pub overlap: Option<Overlap>,
+    /// Critical-path attribution for the last-finishing rank (`None`
+    /// when tracing was off).
+    pub crit: Option<CritPath>,
+    /// The raw event trace, moved out of the outcome.
+    pub trace: Option<TraceBuf>,
+}
+
+impl RunOutcome {
+    /// Move the trace buffer out and derive the report analytics: the
+    /// achieved overlap over the whole run, and the critical path of the
+    /// last-finishing rank (its timeline approximates the run's longest
+    /// dependency chain; finish-time ties break to the highest rank —
+    /// any deterministic choice works).
+    pub fn take_analytics(&mut self) -> TraceAnalytics {
+        let trace = self.trace.take();
+        let overlap = trace.as_ref().and_then(obs::achieved_overlap);
+        let crit = trace.as_ref().map(|tb| {
+            let rank = self
+                .rank_finish
+                .iter()
+                .enumerate()
+                .max_by_key(|&(i, t)| (*t, i))
+                .map(|(i, _)| i as u32);
+            obs::critical_path(tb, rank, self.makespan)
+        });
+        TraceAnalytics { overlap, crit, trace }
+    }
 }
 
 /// Launch `world_size` host actors (one per rank) running `program(rank,
@@ -55,8 +99,11 @@ where
     // the engine's StallReport with cluster-level state: every armed DWQ
     // descriptor still waiting on its trigger, per-rank matching-queue
     // depths, and (under fault injection) the recovery counters.
-    eng.set_stall_inspector(|w: &World, _core| {
+    eng.set_stall_inspector(|w: &World, core| {
         let mut d = StallDetail::default();
+        if let Some(tb) = core.trace() {
+            d.notes.push(obs::critical_path(tb, None, core.now()).headline());
+        }
         for e in w.armed.pending() {
             match e.queue {
                 Some(q) => d.armed.push(format!("nic{} queue {} {}", e.node, q, e.desc)),
@@ -84,7 +131,17 @@ where
         }
         d
     });
-    eng.setup(|w, _| w.rank_finish = vec![0; world_size]);
+    eng.setup(move |w, core| {
+        w.rank_finish = vec![0; world_size];
+        if let Some(cap) = w.trace_cap {
+            let meta = TraceMeta {
+                nodes: w.topo.nodes as u32,
+                ranks_per_node: w.topo.ranks_per_node as u32,
+                label: String::new(),
+            };
+            core.trace_start(TraceBuf::new(meta, cap));
+        }
+    });
     for rank in 0..world_size {
         let program = program.clone();
         eng.spawn_host(format!("rank{rank}"), move |ctx| {
@@ -93,10 +150,10 @@ where
             ctx.with(move |w, _| w.rank_finish[rank] = t);
         });
     }
-    let (world, stats) = eng.run()?;
+    let (world, stats, trace) = eng.run_traced()?;
     let rank_finish = world.rank_finish.clone();
     let makespan = rank_finish.iter().copied().max().unwrap_or(0);
-    Ok(RunOutcome { world, stats, rank_finish, makespan })
+    Ok(RunOutcome { world, stats, rank_finish, makespan, trace })
 }
 
 /// Convenience: build + run in one call.

@@ -7,6 +7,7 @@
 //! times give first-order congestion behaviour when many messages leave
 //! or arrive at one node simultaneously (the 64-rank Fig 8 case).
 
+use crate::obs::{Event, WireDir, NO_RANK};
 use crate::sim::Time;
 use crate::world::{Callback, Ctx, World};
 
@@ -15,6 +16,24 @@ use crate::world::{Callback, Ctx, World};
 pub struct Port {
     pub egress_busy_until: Time,
     pub ingress_busy_until: Time,
+}
+
+/// Trace attribution carried alongside a transfer (see [`crate::obs`]):
+/// which rank originated the payload and whether it is a watchdog
+/// retransmission. Purely observational — it never affects timing.
+#[derive(Debug, Clone, Copy)]
+pub struct WireTag {
+    /// Originating rank ([`crate::obs::NO_RANK`] when the caller sits
+    /// below the layer that knows it).
+    pub src_rank: u32,
+    /// True for watchdog-retransmitted payloads.
+    pub retransmit: bool,
+}
+
+impl Default for WireTag {
+    fn default() -> Self {
+        Self { src_rank: NO_RANK, retransmit: false }
+    }
 }
 
 /// Schedule delivery of `bytes` from `src_node` to `dst_node`; runs `cb`
@@ -26,6 +45,21 @@ pub fn transfer(
     src_node: usize,
     dst_node: usize,
     bytes: usize,
+    cb: Callback,
+) -> Time {
+    transfer_tagged(w, core, src_node, dst_node, bytes, WireTag::default(), cb)
+}
+
+/// [`transfer`] with an explicit [`WireTag`] for trace attribution (the
+/// NIC eager path passes the sending rank; the watchdog marks
+/// retransmissions). Timing is identical to the untagged call.
+pub fn transfer_tagged(
+    w: &mut World,
+    core: &mut Ctx,
+    src_node: usize,
+    dst_node: usize,
+    bytes: usize,
+    tag: WireTag,
     cb: Callback,
 ) -> Time {
     debug_assert_ne!(src_node, dst_node, "fabric::transfer is inter-node only");
@@ -52,6 +86,30 @@ pub fn transfer(
     w.nics[dst_node].port.ingress_busy_until = arrive;
     w.metrics.max_ingress_wait_ns = w.metrics.max_ingress_wait_ns.max(in_start - at_dst);
 
+    if core.trace_on() {
+        let (src_node, dst_node) = (src_node as u32, dst_node as u32);
+        core.trace_push(Event::Wire {
+            t0: start,
+            dur: ser,
+            src_node,
+            dst_node,
+            bytes: bytes as u64,
+            src_rank: tag.src_rank,
+            dir: WireDir::Egress,
+            retransmit: tag.retransmit,
+        });
+        core.trace_push(Event::Wire {
+            t0: in_start,
+            dur: ser,
+            src_node,
+            dst_node,
+            bytes: bytes as u64,
+            src_rank: tag.src_rank,
+            dir: WireDir::Ingress,
+            retransmit: tag.retransmit,
+        });
+    }
+
     core.schedule_at(arrive, cb);
     left_src
 }
@@ -74,15 +132,42 @@ pub fn transfer_delayed(
     cb: Callback,
     done: Box<dyn FnOnce(&mut World, &mut Ctx, Time) + Send>,
 ) {
+    transfer_delayed_tagged(
+        w,
+        core,
+        src_node,
+        dst_node,
+        bytes,
+        WireTag::default(),
+        extra_ns,
+        cb,
+        done,
+    )
+}
+
+/// [`transfer_delayed`] with an explicit [`WireTag`] (see
+/// [`transfer_tagged`]). Timing is identical to the untagged call.
+#[allow(clippy::too_many_arguments)]
+pub fn transfer_delayed_tagged(
+    w: &mut World,
+    core: &mut Ctx,
+    src_node: usize,
+    dst_node: usize,
+    bytes: usize,
+    tag: WireTag,
+    extra_ns: Time,
+    cb: Callback,
+    done: Box<dyn FnOnce(&mut World, &mut Ctx, Time) + Send>,
+) {
     if extra_ns == 0 {
-        let left_src = transfer(w, core, src_node, dst_node, bytes, cb);
+        let left_src = transfer_tagged(w, core, src_node, dst_node, bytes, tag, cb);
         done(w, core, left_src);
         return;
     }
     core.schedule(
         extra_ns,
         Box::new(move |w, core| {
-            let left_src = transfer(w, core, src_node, dst_node, bytes, cb);
+            let left_src = transfer_tagged(w, core, src_node, dst_node, bytes, tag, cb);
             done(w, core, left_src);
         }),
     );

@@ -124,6 +124,14 @@ pub struct FacesResult {
     /// Max relative error vs the CPU reference when checking was enabled
     /// (max |field - reference| / max |reference| over ranks).
     pub max_err: Option<f32>,
+    /// Achieved communication/computation overlap from the run's trace
+    /// (`None` when tracing is off — `STMPI_TRACE=0`).
+    pub overlap: Option<crate::obs::Overlap>,
+    /// Critical-path attribution for the last-finishing rank (`None`
+    /// when tracing is off).
+    pub crit: Option<crate::obs::CritPath>,
+    /// The raw event trace, for Chrome-trace export.
+    pub trace: Option<crate::obs::TraceBuf>,
 }
 
 impl FacesResult {
@@ -345,7 +353,7 @@ pub fn run_faces(cfg: &FacesConfig) -> Result<FacesResult> {
     // `context` (not a reformatting anyhow!) so callers — the campaign's
     // stalled-cell aggregation in particular — can still downcast to the
     // engine's `SimError` and pull the structured StallReport out.
-    let out = run_cluster(world, cfg.seed, move |rank, ctx| {
+    let mut out = run_cluster(world, cfg.seed, move |rank, ctx| {
         rank_program(&cfg2, &plans2[rank], rank, ctx, &times2);
     })
     .context("faces run failed")?;
@@ -372,12 +380,16 @@ pub fn run_faces(cfg: &FacesConfig) -> Result<FacesResult> {
         None
     };
 
+    let a = out.take_analytics();
     Ok(FacesResult {
         rank_time,
         time_ns,
         metrics: out.world.metrics.clone(),
         stats: out.stats,
         max_err,
+        overlap: a.overlap,
+        crit: a.crit,
+        trace: a.trace,
     })
 }
 

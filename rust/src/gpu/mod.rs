@@ -34,6 +34,7 @@ use std::collections::VecDeque;
 
 use crate::costmodel::MemOpFlavor;
 use crate::nic::{BufSlice, Done};
+use crate::obs::{Event, KtKind};
 use crate::sim::{CellId, Time};
 use crate::world::{BufId, Callback, ComputeMode, Ctx, World};
 
@@ -347,6 +348,16 @@ pub fn cp_step(w: &mut World, core: &mut Ctx, sid: StreamId) {
             w.metrics.kernels_launched += 1;
             let dur = w.cost.cp_dispatch + w.cost.kernel_time(spec.flops, spec.bytes);
             let dur = straggled(w, sid.gpu, w.cost.jittered(dur, core.rng()));
+            if core.trace_on() {
+                let name = core.trace_intern(&spec.name);
+                core.trace_push(Event::Kernel {
+                    t0: core.now(),
+                    dur,
+                    gpu: sid.gpu as u32,
+                    stream: sid.stream as u32,
+                    name,
+                });
+            }
             core.schedule(
                 dur,
                 Box::new(move |w, c| {
@@ -362,16 +373,27 @@ pub fn cp_step(w: &mut World, core: &mut Ctx, sid: StreamId) {
             let desc = format!("gpu{}.s{} {} kt-prologue", sid.gpu, sid.stream, spec.name);
             let KernelCtx { waits, triggers } = kt;
             let payload = spec.payload;
+            let kname = spec.name;
             let body: Callback = Box::new(move |w, c| {
                 // A KT kernel's numerics commit at body start: its stores
                 // must be globally visible before the earliest mid-kernel
                 // trigger reaches the NIC (timing is modeled separately).
+                if c.trace_on() {
+                    let name = c.trace_intern(&kname);
+                    c.trace_push(Event::Kernel {
+                        t0: c.now(),
+                        dur,
+                        gpu: sid.gpu as u32,
+                        stream: sid.stream as u32,
+                        name,
+                    });
+                }
                 run_kernel_payload(w, c, payload);
                 for t in triggers {
                     let off = ((dur as f64) * t.frac.clamp(0.0, 1.0)).round() as Time;
                     c.schedule(
                         off.min(dur),
-                        Box::new(move |w, c| fire_kt_action(w, c, t.action)),
+                        Box::new(move |w, c| fire_kt_action(w, c, t.action, sid.gpu)),
                     );
                 }
                 c.schedule(dur, Box::new(move |w, c| complete_op(w, c, sid)));
@@ -433,8 +455,16 @@ pub fn cp_step(w: &mut World, core: &mut Ctx, sid: StreamId) {
 }
 
 /// Retire one mid-kernel trigger action (the KT data path).
-fn fire_kt_action(w: &mut World, core: &mut Ctx, action: KtAction) {
+fn fire_kt_action(w: &mut World, core: &mut Ctx, action: KtAction, gpu: usize) {
     w.metrics.kt_triggers += 1;
+    if core.trace_on() {
+        let kind = match &action {
+            KtAction::CounterInc { .. } => KtKind::CounterInc,
+            KtAction::Put(_) => KtKind::Put,
+            KtAction::PostRecv(_) => KtKind::Recv,
+        };
+        core.trace_push(Event::KtDoorbell { t: core.now(), gpu: gpu as u32, kind });
+    }
     match action {
         KtAction::CounterInc { cell, value } => {
             // Device-scope release write: lands on the same engine cell

@@ -25,10 +25,11 @@
 //! | [`fabric`] | inter-node wire with per-port serialization + congestion metrics |
 //! | [`fault`] | deterministic fault injection (drop/dup/delay, trigger delay, stragglers) + recovery knobs |
 //! | [`mpi`] | two-sided matching engine, requests, progress threads |
+//! | [`obs`] | deterministic event tracing, Chrome-trace export, overlap + critical-path analytics |
 //! | [`stx`] | stx v2: typed [`stx::Queue`] handles, persistent [`stx::CommPlan`]s, KT hooks, the [`stx::Variant`] axis |
 //! | [`collectives`] | ST ring / ST recursive-doubling / KT ring allreduce |
 //! | [`faces`] | the Faces halo-exchange benchmark + figure harness |
-//! | [`workloads`] | `Workload` trait, seven scenarios, run scaffold, campaign driver |
+//! | [`workloads`] | `Workload` trait, eight scenarios, run scaffold, campaign driver |
 //! | [`coordinator`] | world building, cluster run loop, config, reporting |
 //! | [`runtime`] | PJRT loader for AOT HLO artifacts (feature `xla`) |
 //! | [`train`] | ST-allreduce data-parallel trainer |
@@ -46,6 +47,7 @@ pub mod fault;
 pub mod gpu;
 pub mod mpi;
 pub mod nic;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod stx;

@@ -16,7 +16,7 @@
 //!   faces.variant=baseline|st|st-shader|kt  faces.real=true  faces.check=true
 //!   seed=11  jitter=0.03
 //! `campaign` keys (comma lists; empty = defaults):
-//!   campaign.workloads=faces,halo3d,allreduce,alltoall,incast,allgather,halograph
+//!   campaign.workloads=faces,halo3d,allreduce,alltoall,incast,allgather,halograph,reduce-scatter
 //!   campaign.variants=baseline,st,kt,ring-st,rdbl-st,ring-kt
 //!   campaign.sizes=256,4096  campaign.topos=2x1,4x1  campaign.seeds=11,23
 //!   campaign.queues=1,2 (queues per rank)  campaign.dwq_slots=4
@@ -25,6 +25,11 @@
 //!   (the chaos axis; `STMPI_FAULTS=1` in the environment is shorthand
 //!   for campaign.faults=chaos — stalled cells render as `stalled` rows
 //!   carrying their StallReport instead of aborting the sweep)
+//!   campaign.trace=TRACE (Chrome-trace export: writes each cell's
+//!   first-seed event trace as `TRACE_<cell>.json`, loadable in
+//!   Perfetto / chrome://tracing; `STMPI_TRACE=1` in the environment is
+//!   shorthand for campaign.trace=TRACE, `STMPI_TRACE=0` disables
+//!   recording entirely and the overlap %/crit-path columns render `--`)
 //! `train` keys: train.nodes, train.rpn, train.steps, seed.
 //!
 //! `sweep` regenerates Figs 8-12, the ST-vs-KT figure (figkt), and the
@@ -196,6 +201,15 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         }
         None => None,
     };
+    let trace = match c.get("campaign.trace") {
+        Some(prefix) => Some(prefix.to_string()),
+        // `STMPI_TRACE=1` is shorthand for campaign.trace=TRACE (any
+        // other set value only toggles recording, handled in obs).
+        None if std::env::var("STMPI_TRACE").is_ok_and(|v| v == "1") => {
+            Some("TRACE".to_string())
+        }
+        None => None,
+    };
     let spec = CampaignSpec {
         workloads: comma_list(&c, "campaign.workloads"),
         variants: comma_list(&c, "campaign.variants"),
@@ -208,6 +222,7 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         dwq_slots,
         threads: None,
         faults,
+        trace,
     };
     let report = run_campaign(&spec)?;
     println!("{}", report.to_markdown());
@@ -217,6 +232,34 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
     std::fs::write(format!("{out}.md"), report.to_markdown())
         .with_context(|| format!("writing {out}.md"))?;
     println!("wrote {out}.json and {out}.md");
+    if let Some(prefix) = &spec.trace {
+        let mut wrote = 0usize;
+        for cell in &report.cells {
+            let Some(tj) = &cell.trace_json else { continue };
+            // The export inherits the recorder's determinism contract;
+            // a malformed trace is a bug, not an I/O condition.
+            if !stmpi::workloads::campaign::json_parses(tj) {
+                bail!(
+                    "internal error: Chrome trace for {}/{} elems={} is not valid JSON",
+                    cell.workload,
+                    cell.variant,
+                    cell.elems
+                );
+            }
+            let path = format!(
+                "{prefix}_{}_{}_{}_{}x{}_q{}.json",
+                cell.workload,
+                cell.variant,
+                cell.elems,
+                cell.nodes,
+                cell.ranks_per_node,
+                cell.queues_per_rank
+            );
+            std::fs::write(&path, tj).with_context(|| format!("writing {path}"))?;
+            wrote += 1;
+        }
+        println!("wrote {wrote} Chrome trace file(s) with prefix {prefix}");
+    }
     if !report.all_ok() {
         let stalled: u64 = report.cells.iter().map(|c| c.stalls).sum();
         if stalled > 0 {

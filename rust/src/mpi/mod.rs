@@ -25,6 +25,7 @@ use std::collections::{HashSet, VecDeque};
 
 use crate::gpu;
 use crate::nic::{self, BufSlice, Done, Envelope, WireMsg};
+use crate::obs::Event;
 use crate::sim::{HostCtx, Time};
 use crate::world::{Ctx, World};
 
@@ -161,10 +162,16 @@ fn env_matches(p: &PostedRecv, env: &Envelope) -> bool {
 }
 
 /// Find-and-remove the first posted receive matching `env` (FIFO).
-fn take_matching_posted(w: &mut World, rank: usize, env: &Envelope) -> Option<PostedRecv> {
+fn take_matching_posted(
+    w: &mut World,
+    core: &mut Ctx,
+    rank: usize,
+    env: &Envelope,
+) -> Option<PostedRecv> {
     let q = &mut w.procs[rank].posted;
     let idx = q.iter().position(|p| env_matches(p, env))?;
     w.metrics.matched_posted += 1;
+    core.trace_push(Event::Match { t: core.now(), rank: rank as u32, tag: env.tag });
     q.remove(idx)
 }
 
@@ -198,7 +205,7 @@ pub fn deliver_from_wire(w: &mut World, core: &mut Ctx, msg: WireMsg) {
             return;
         }
     }
-    match take_matching_posted(w, rank, &env) {
+    match take_matching_posted(w, core, rank, &env) {
         Some(posted) => match msg {
             WireMsg::Eager { payload, .. } => {
                 if w.is_real() {
@@ -216,6 +223,7 @@ pub fn deliver_from_wire(w: &mut World, core: &mut Ctx, msg: WireMsg) {
         },
         None => {
             w.metrics.unexpected_msgs += 1;
+            core.trace_push(Event::Unexpected { t: core.now(), rank: rank as u32, tag: env.tag });
             let body = match msg {
                 WireMsg::Eager { payload, .. } => UnexpBody::Eager(payload),
                 WireMsg::Rts { src, src_node, src_done, .. } => {
@@ -246,6 +254,11 @@ pub fn post_recv(
         }
         Some(unexp) => {
             debug_assert_eq!(unexp.env.elems, dst.elems, "recv size mismatch");
+            core.trace_push(Event::Match {
+                t: core.now(),
+                rank: rank as u32,
+                tag: unexp.env.tag,
+            });
             match unexp.body {
                 UnexpBody::Eager(payload) | UnexpBody::IntraEager(payload) => {
                     // Copy out of the bounce buffer.
@@ -327,7 +340,7 @@ fn intra_send(w: &mut World, core: &mut Ctx, env: Envelope, src: BufSlice, send_
                     Vec::new()
                 };
                 send_done.fire(w, core);
-                match take_matching_posted(w, rank, &env) {
+                match take_matching_posted(w, core, rank, &env) {
                     Some(posted) => {
                         if w.is_real() {
                             let d = w.bufs.get_mut(posted.dst.buf);
@@ -338,6 +351,11 @@ fn intra_send(w: &mut World, core: &mut Ctx, env: Envelope, src: BufSlice, send_
                     }
                     None => {
                         w.metrics.unexpected_msgs += 1;
+                        core.trace_push(Event::Unexpected {
+                            t: core.now(),
+                            rank: rank as u32,
+                            tag: env.tag,
+                        });
                         w.procs[rank]
                             .unexpected
                             .push_back(UnexpMsg { env, body: UnexpBody::IntraEager(payload) });
@@ -347,10 +365,15 @@ fn intra_send(w: &mut World, core: &mut Ctx, env: Envelope, src: BufSlice, send_
         );
     } else {
         // Large payload: zero-copy P2P DMA once both sides are known.
-        match take_matching_posted(w, rank, &env) {
+        match take_matching_posted(w, core, rank, &env) {
             Some(posted) => intra_zero_copy(w, core, src, posted.dst, send_done, posted.done),
             None => {
                 w.metrics.unexpected_msgs += 1;
+                core.trace_push(Event::Unexpected {
+                    t: core.now(),
+                    rank: rank as u32,
+                    tag: env.tag,
+                });
                 w.procs[rank].unexpected.push_back(UnexpMsg {
                     env,
                     body: UnexpBody::IntraZeroCopy { src, src_done: send_done },

@@ -29,8 +29,9 @@
 //!   (delivery calls into the per-rank matching engine, the moral
 //!   equivalent of the NIC's list-processing engine).
 
-use crate::fabric::{self, Port};
+use crate::fabric::{self, Port, WireTag};
 use crate::fault::{LostMsg, WireFault};
+use crate::obs::Event;
 use crate::sim::CellId;
 use crate::world::{ArmedEntry, BufId, Callback, Ctx, World};
 
@@ -239,6 +240,11 @@ pub fn dwq_reserve(w: &mut World, core: &mut Ctx, node: usize) -> Result<(), Dwq
     if in_use + 1 > w.metrics.dwq_peak {
         w.metrics.dwq_peak = in_use + 1;
     }
+    core.trace_push(Event::DwqReserve {
+        t: core.now(),
+        node: node as u32,
+        in_use: (in_use + 1) as u32,
+    });
     Ok(())
 }
 
@@ -249,6 +255,7 @@ pub fn dwq_reserve(w: &mut World, core: &mut Ctx, node: usize) -> Result<(), Dwq
 /// watchdog timeout (their triggers will never fire).
 pub fn dwq_cancel(w: &mut World, core: &mut Ctx, node: usize) {
     let rel = dwq_released_cell(w, core, node);
+    core.trace_push(Event::DwqRelease { t: core.now(), node: node as u32 });
     core.add_cell(rel, 1);
 }
 
@@ -312,6 +319,15 @@ pub fn post_triggered_send(
         "nic{src_node} DWQ send {}->{} tag {}",
         env.src_rank, env.dst_rank, env.tag
     );
+    if core.trace_on() {
+        let label = core.trace_intern(&desc);
+        core.trace_push(Event::TriggerArm {
+            t: core.now(),
+            node: src_node as u32,
+            threshold,
+            label,
+        });
+    }
     let token = register_armed(w, src_node, origin, &desc);
     core.on_ge(
         trigger,
@@ -324,8 +340,14 @@ pub fn post_triggered_send(
             // slot (see `dwq_reserve`; callers that never reserved are
             // tolerated — occupancy saturates at zero).
             let rel = dwq_released_cell(w, core, src_node);
+            core.trace_push(Event::DwqRelease { t: core.now(), node: src_node as u32 });
             core.add_cell(rel, 1);
             let lat = w.cost.nic_trigger_latency + trigger_fire_extra(w);
+            core.trace_push(Event::TriggerFire {
+                t0: core.now(),
+                dur: lat,
+                node: src_node as u32,
+            });
             core.schedule(
                 lat,
                 Box::new(move |w, core| execute_send(w, core, env, src, send_done)),
@@ -350,12 +372,13 @@ pub fn execute_send(w: &mut World, core: &mut Ctx, env: Envelope, src: BufSlice,
             Box::new(move |w, core| {
                 let msg = WireMsg::Rts { env, src, src_node, src_done: send_done };
                 let match_cost = w.cost.nic_match;
-                fabric::transfer(
+                fabric::transfer_tagged(
                     w,
                     core,
                     src_node,
                     dst_node,
                     64, // RTS descriptor size
+                    WireTag { src_rank: env.src_rank as u32, retransmit: false },
                     Box::new(move |w, core| {
                         core.schedule(
                             match_cost,
@@ -391,7 +414,7 @@ pub fn execute_send(w: &mut World, core: &mut Ctx, env: Envelope, src: BufSlice,
                     WireFault::None => {
                         eager_wire_send(
                             w, core, env, payload, seq, src_node, dst_node, bytes, send_done,
-                            0, true,
+                            0, true, false,
                         );
                     }
                     WireFault::Drop => {
@@ -412,7 +435,7 @@ pub fn execute_send(w: &mut World, core: &mut Ctx, env: Envelope, src: BufSlice,
                         }
                         eager_wire_send(
                             w, core, env, payload, seq, src_node, dst_node, bytes, send_done,
-                            0, false,
+                            0, false, false,
                         );
                     }
                     WireFault::Dup => {
@@ -432,6 +455,7 @@ pub fn execute_send(w: &mut World, core: &mut Ctx, env: Envelope, src: BufSlice,
                             send_done,
                             0,
                             true,
+                            false,
                         );
                         eager_wire_send(
                             w,
@@ -445,13 +469,14 @@ pub fn execute_send(w: &mut World, core: &mut Ctx, env: Envelope, src: BufSlice,
                             Done::none(),
                             0,
                             true,
+                            false,
                         );
                     }
                     WireFault::Delay(extra) => {
                         w.metrics.faults_injected += 1;
                         eager_wire_send(
                             w, core, env, payload, seq, src_node, dst_node, bytes, send_done,
-                            extra, true,
+                            extra, true, false,
                         );
                     }
                 }
@@ -465,8 +490,9 @@ pub fn execute_send(w: &mut World, core: &mut Ctx, env: Envelope, src: BufSlice,
 /// (unless `deliver` is false — a dropped message occupies the ports but
 /// vanishes before matching), and local completion through `send_done`.
 /// Shared by the normal path, every wire-fault flavor, and watchdog
-/// retransmits. With `extra_ns == 0` and `deliver == true` the event
-/// sequence is identical to the pre-fault-layer code path.
+/// retransmits (which set `retransmit` so the trace's wire spans carry
+/// the replay provenance). With `extra_ns == 0` and `deliver == true`
+/// the event sequence is identical to the pre-fault-layer code path.
 #[allow(clippy::too_many_arguments)]
 fn eager_wire_send(
     w: &mut World,
@@ -480,6 +506,7 @@ fn eager_wire_send(
     send_done: Done,
     extra_ns: u64,
     deliver: bool,
+    retransmit: bool,
 ) {
     let match_cost = w.cost.nic_match;
     let cb: Callback = if deliver {
@@ -494,12 +521,13 @@ fn eager_wire_send(
     } else {
         Box::new(|_, _| {})
     };
-    fabric::transfer_delayed(
+    fabric::transfer_delayed_tagged(
         w,
         core,
         src_node,
         dst_node,
         bytes,
+        WireTag { src_rank: env.src_rank as u32, retransmit },
         extra_ns,
         cb,
         Box::new(move |w, core, left_src| {
@@ -519,7 +547,20 @@ fn eager_wire_send(
 pub fn retransmit(w: &mut World, core: &mut Ctx, lost: LostMsg) {
     w.metrics.retries += 1;
     let LostMsg { env, payload, seq, src_node, dst_node, bytes } = lost;
-    eager_wire_send(w, core, env, payload, seq, src_node, dst_node, bytes, Done::none(), 0, true);
+    eager_wire_send(
+        w,
+        core,
+        env,
+        payload,
+        seq,
+        src_node,
+        dst_node,
+        bytes,
+        Done::none(),
+        0,
+        true,
+        true,
+    );
 }
 
 /// Post a *triggered* tagged receive to the NIC command queue: when
@@ -550,6 +591,10 @@ pub fn post_triggered_recv(
 ) {
     let node = w.topo.node_of(rank);
     let desc = format!("nic{node} DWQ recv r{rank} from {src_rank} tag {tag}");
+    if core.trace_on() {
+        let label = core.trace_intern(&desc);
+        core.trace_push(Event::TriggerArm { t: core.now(), node: node as u32, threshold, label });
+    }
     let token = register_armed(w, node, origin, &desc);
     core.on_ge(
         trigger,
@@ -562,8 +607,10 @@ pub fn post_triggered_recv(
             // slot (callers that never reserved are tolerated, as with
             // triggered sends).
             let rel = dwq_released_cell(w, core, node);
+            core.trace_push(Event::DwqRelease { t: core.now(), node: node as u32 });
             core.add_cell(rel, 1);
             let lat = w.cost.nic_trigger_latency + w.cost.nic_recv_post + trigger_fire_extra(w);
+            core.trace_push(Event::TriggerFire { t0: core.now(), dur: lat, node: node as u32 });
             core.schedule(
                 lat,
                 Box::new(move |w, core| {
@@ -592,6 +639,11 @@ pub fn execute_recv_post(
     done: Done,
 ) {
     w.metrics.triggered_recvs += 1;
+    core.trace_push(Event::RecvPost {
+        t: core.now(),
+        rank: rank as u32,
+        node: w.topo.node_of(rank) as u32,
+    });
     crate::mpi::post_recv(
         w,
         core,
@@ -679,6 +731,15 @@ pub fn post_triggered_put(
 ) {
     let src_node = w.topo.node_of(src_rank);
     let desc = format!("nic{src_node} DWQ put {src_rank}->{dst_rank}");
+    if core.trace_on() {
+        let label = core.trace_intern(&desc);
+        core.trace_push(Event::TriggerArm {
+            t: core.now(),
+            node: src_node as u32,
+            threshold,
+            label,
+        });
+    }
     let token = register_armed(w, src_node, None, &desc);
     core.on_ge(
         trigger,
@@ -688,6 +749,11 @@ pub fn post_triggered_put(
             w.armed.clear(token);
             w.metrics.dwq_triggered += 1;
             let lat = w.cost.nic_trigger_latency + w.cost.nic_proc + trigger_fire_extra(w);
+            core.trace_push(Event::TriggerFire {
+                t0: core.now(),
+                dur: lat,
+                node: src_node as u32,
+            });
             core.schedule(
                 lat,
                 Box::new(move |w, core| {
@@ -737,12 +803,13 @@ pub fn execute_put(
             }),
         );
     } else {
-        let left = fabric::transfer(
+        let left = fabric::transfer_tagged(
             w,
             core,
             src_node,
             dst_node,
             src.bytes(),
+            WireTag { src_rank: src_rank as u32, retransmit: false },
             Box::new(move |w, core| {
                 if w.is_real() {
                     let d = w.bufs.get_mut(dst.buf);

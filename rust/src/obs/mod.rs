@@ -1,0 +1,1076 @@
+//! Deterministic event tracing and overlap analytics.
+//!
+//! The paper family's thesis is not "ST finishes first" but "ST/KT
+//! *hide* communication behind kernels" (the MPI+X triggering taxonomy,
+//! arXiv 2406.05594, and the GPU-centric communication survey, arXiv
+//! 2503.24230, both evaluate these designs via timeline decomposition
+//! and overlap ratios). This module supplies the per-event visibility
+//! that makes the metric computable:
+//!
+//! * [`TraceBuf`] — a bounded, sim-time-stamped structured recorder
+//!   stored inside the engine core ([`crate::sim::Core`]). Recording is
+//!   **off by default** at the `Core` level (a single `Option` branch on
+//!   every emit site — the compile-free runtime off-switch whose
+//!   disabled cost is pinned by `benches/engine.rs`); workload runs
+//!   enable it through `World::trace_cap` unless `STMPI_TRACE=0`.
+//! * [`Event`] — the closed event taxonomy (host park/resume, microtask
+//!   dispatch, kernel windows, KT doorbells, trigger arm/fire, DWQ
+//!   reserve/release/backpressure, wire egress/ingress occupancy,
+//!   matching-engine match/unexpected, triggered-receive posts). Events
+//!   are fixed-size and heap-free; repeated labels go through a small
+//!   interned string table.
+//! * [`chrome_trace`] — Chrome trace-event JSON export (Perfetto /
+//!   `chrome://tracing` loadable): one process per node plus an engine
+//!   process, one thread per host / stream / NIC facility.
+//! * [`achieved_overlap`] — communication hidden ÷ communication total,
+//!   from wire-egress-span ∩ kernel-span interval overlap on the source
+//!   node. Surfaced as `overlap_pct` in campaign reports.
+//! * [`critical_path`] — a deterministic makespan decomposition into
+//!   compute / wire / trigger-latency / backpressure-wait / retransmit /
+//!   other buckets along the last-finishing rank's blocking timeline
+//!   (the longest chain approximation; see DESIGN.md §Observability).
+//!
+//! # Determinism contract
+//!
+//! Every event is appended while the engine's big lock is held, in the
+//! strict driver/host token order the engine already guarantees, and is
+//! stamped with virtual (not wall-clock) time. String-table ids are
+//! assigned in first-emission order. Consequently a trace — and every
+//! analytics result and exported byte derived from it — is
+//! byte-identical across reruns and across any `STMPI_SWEEP_THREADS`
+//! setting (each cell's run is single-token regardless of sweep
+//! parallelism). `tests/determinism.rs` pins this.
+
+use crate::coordinator::report::json_escape;
+
+/// Virtual time in nanoseconds (mirrors [`crate::sim::Time`]; duplicated
+/// here so `obs` stays dependency-free of `sim`).
+pub type Time = u64;
+
+/// Interned-string handle into [`TraceBuf::strings`].
+pub type StrId = u32;
+
+/// Sentinel [`StrId`] meaning "no label".
+pub const NO_STR: StrId = u32::MAX;
+
+/// Sentinel rank meaning "rank unknown" (e.g. wire traffic emitted
+/// below the layer that knows the owning rank).
+pub const NO_RANK: u32 = u32::MAX;
+
+/// Why a host actor parked (see [`Event::HostPark`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParkKind {
+    /// `advance(dt)`: charged host CPU time, resume already in the heap.
+    Advance,
+    /// `wait_ge`: blocked on a counter cell threshold.
+    WaitCell,
+}
+
+/// Which half of a wire transfer a [`Event::Wire`] span occupies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireDir {
+    /// Serialization through the source node's egress port.
+    Egress,
+    /// Serialization through the destination node's ingress port.
+    Ingress,
+}
+
+/// What a kernel-triggered doorbell ring carried ([`Event::KtDoorbell`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KtKind {
+    /// Device-scope counter increment (a KT trigger firing).
+    CounterInc,
+    /// Device-initiated put descriptor.
+    Put,
+    /// Device-initiated posted-receive descriptor.
+    Recv,
+}
+
+/// One trace event. Fixed-size, heap-free; labels are interned
+/// ([`TraceBuf::intern`]). Instants carry a single timestamp; spans
+/// carry `(t0, dur)` in virtual ns. The full taxonomy table lives in
+/// DESIGN.md §Observability.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// Host actor parked (instant; the matching resume closes the gap).
+    HostPark {
+        /// Park time.
+        t: Time,
+        /// Host id (== rank under `run_cluster`).
+        host: u32,
+        /// Why it parked.
+        kind: ParkKind,
+    },
+    /// Host actor handed the execution token (instant).
+    HostResume {
+        /// Resume time.
+        t: Time,
+        /// Host id.
+        host: u32,
+    },
+    /// One zero-delay microtask dispatched by the driver loop (instant).
+    Microtask {
+        /// Dispatch time.
+        t: Time,
+    },
+    /// A kernel's execution window on a GPU stream (span; includes the
+    /// CP dispatch cost, matching the cost model's kernel window).
+    Kernel {
+        /// Window start.
+        t0: Time,
+        /// Window length.
+        dur: u64,
+        /// GPU index (== rank: one GPU per rank).
+        gpu: u32,
+        /// Stream index on that GPU.
+        stream: u32,
+        /// Interned kernel name.
+        name: StrId,
+    },
+    /// A kernel rang the NIC doorbell from inside its window (instant).
+    KtDoorbell {
+        /// Ring time (at the trigger fraction of the kernel window).
+        t: Time,
+        /// GPU index.
+        gpu: u32,
+        /// What the doorbell carried.
+        kind: KtKind,
+    },
+    /// A triggered operation was armed in a NIC's deferred-work queue
+    /// (instant).
+    TriggerArm {
+        /// Arm time.
+        t: Time,
+        /// NIC / node index.
+        node: u32,
+        /// Trigger-counter threshold it waits for.
+        threshold: u64,
+        /// Interned descriptor label.
+        label: StrId,
+    },
+    /// A trigger fired: span covering the NIC trigger-handshake latency
+    /// between counter satisfaction and command execution.
+    TriggerFire {
+        /// Counter-satisfaction time.
+        t0: Time,
+        /// Handshake latency (`nic_trigger_latency` + injected extra).
+        dur: u64,
+        /// NIC / node index.
+        node: u32,
+    },
+    /// A DWQ descriptor slot was reserved (instant).
+    DwqReserve {
+        /// Reservation time.
+        t: Time,
+        /// NIC / node index.
+        node: u32,
+        /// Slots in use after the reservation.
+        in_use: u32,
+    },
+    /// A DWQ descriptor slot returned to the pool (instant).
+    DwqRelease {
+        /// Release time.
+        t: Time,
+        /// NIC / node index.
+        node: u32,
+    },
+    /// A host stalled waiting for a free DWQ descriptor slot (span).
+    DwqWait {
+        /// Stall start.
+        t0: Time,
+        /// Stall length.
+        dur: u64,
+        /// The exhausted NIC / node.
+        node: u32,
+        /// The stalled rank.
+        rank: u32,
+    },
+    /// Wire port occupancy (span): serialization of one message through
+    /// an egress or ingress port.
+    Wire {
+        /// Occupancy start.
+        t0: Time,
+        /// Serialization time.
+        dur: u64,
+        /// Source node.
+        src_node: u32,
+        /// Destination node.
+        dst_node: u32,
+        /// Payload bytes.
+        bytes: u64,
+        /// Sending rank ([`NO_RANK`] when unknown at the emit site).
+        src_rank: u32,
+        /// Egress or ingress half.
+        dir: WireDir,
+        /// True for watchdog retransmissions of dropped payloads.
+        retransmit: bool,
+    },
+    /// The matching engine matched a message to a posted receive
+    /// (instant).
+    Match {
+        /// Match time.
+        t: Time,
+        /// Receiving rank.
+        rank: u32,
+        /// Message tag.
+        tag: i32,
+    },
+    /// A message arrived with no posted receive and was queued
+    /// unexpected (instant).
+    Unexpected {
+        /// Arrival time.
+        t: Time,
+        /// Receiving rank.
+        rank: u32,
+        /// Message tag.
+        tag: i32,
+    },
+    /// The NIC list engine posted a triggered-receive descriptor into
+    /// the matching engine (instant).
+    RecvPost {
+        /// Post time.
+        t: Time,
+        /// Receiving rank.
+        rank: u32,
+        /// NIC / node index.
+        node: u32,
+    },
+}
+
+impl Event {
+    /// The event's (start) timestamp — the sort key used by the
+    /// exporter.
+    pub fn t(&self) -> Time {
+        match *self {
+            Event::HostPark { t, .. }
+            | Event::HostResume { t, .. }
+            | Event::Microtask { t }
+            | Event::KtDoorbell { t, .. }
+            | Event::TriggerArm { t, .. }
+            | Event::DwqReserve { t, .. }
+            | Event::DwqRelease { t, .. }
+            | Event::Match { t, .. }
+            | Event::Unexpected { t, .. }
+            | Event::RecvPost { t, .. } => t,
+            Event::Kernel { t0, .. }
+            | Event::TriggerFire { t0, .. }
+            | Event::DwqWait { t0, .. }
+            | Event::Wire { t0, .. } => t0,
+        }
+    }
+}
+
+/// Run-level metadata recorded alongside the events (topology mapping
+/// for rank→node attribution, plus a human label for the export).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct TraceMeta {
+    /// Nodes in the run's topology.
+    pub nodes: u32,
+    /// Ranks per node (rank `r` lives on node `r / ranks_per_node`).
+    pub ranks_per_node: u32,
+    /// Human label (workload/variant/size), shown in the export header.
+    pub label: String,
+}
+
+/// The bounded structured-trace recorder. Lives inside
+/// [`crate::sim::Core`] as `Option<Box<TraceBuf>>`: `None` is the
+/// off-switch (every emit site is a single branch), `Some` records until
+/// `cap` events and then counts drops instead of growing (`dropped`) —
+/// analytics over a truncated trace cover the recorded prefix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceBuf {
+    /// Run metadata (topology mapping + label).
+    pub meta: TraceMeta,
+    /// Recorded events, in emission (= deterministic engine) order.
+    pub events: Vec<Event>,
+    /// Interned strings referenced by [`StrId`]s in events.
+    pub strings: Vec<String>,
+    /// Maximum number of events kept.
+    pub cap: usize,
+    /// Events discarded after the buffer filled.
+    pub dropped: u64,
+}
+
+/// Default recorder capacity (events). Small campaign cells record a few
+/// thousand events; this bound keeps a pathological run at ~40 MB.
+pub const DEFAULT_CAP: usize = 1 << 20;
+
+/// The compile-free runtime off-switch for workload-level recording:
+/// `STMPI_TRACE=0` disables it (overlap/critical-path report columns
+/// render as absent). Any other value — including unset — leaves the
+/// default recording on, so campaign reports always carry `overlap_pct`.
+pub fn recording_enabled() -> bool {
+    std::env::var("STMPI_TRACE").map(|v| v != "0").unwrap_or(true)
+}
+
+impl TraceBuf {
+    /// A recorder with the given metadata and capacity.
+    pub fn new(meta: TraceMeta, cap: usize) -> Self {
+        Self { meta, events: Vec::new(), strings: Vec::new(), cap, dropped: 0 }
+    }
+
+    /// Append one event (drops and counts once `cap` is reached).
+    #[inline]
+    pub fn push(&mut self, ev: Event) {
+        if self.events.len() < self.cap {
+            self.events.push(ev);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Intern `s`, returning a stable id (first-emission order; linear
+    /// scan — the unique-label population is small).
+    pub fn intern(&mut self, s: &str) -> StrId {
+        if let Some(i) = self.strings.iter().position(|x| x == s) {
+            return i as StrId;
+        }
+        self.strings.push(s.to_string());
+        (self.strings.len() - 1) as StrId
+    }
+
+    /// Resolve an interned id (empty string for [`NO_STR`]).
+    pub fn lookup(&self, id: StrId) -> &str {
+        self.strings.get(id as usize).map(String::as_str).unwrap_or("")
+    }
+
+    /// Node hosting `rank` under this trace's topology.
+    fn node_of(&self, rank: u32) -> u32 {
+        if self.meta.ranks_per_node == 0 {
+            0
+        } else {
+            rank / self.meta.ranks_per_node
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Interval arithmetic (the achieved-overlap primitive)
+// ---------------------------------------------------------------------
+
+/// Merge half-open intervals `[start, end)` into a disjoint, sorted
+/// union. Zero-length and inverted inputs are discarded; adjacent
+/// intervals coalesce.
+pub fn union_intervals(mut v: Vec<(u64, u64)>) -> Vec<(u64, u64)> {
+    v.retain(|&(s, e)| e > s);
+    v.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::with_capacity(v.len());
+    for (s, e) in v {
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+/// Length of `span ∩ union`, where `union` is disjoint and sorted (the
+/// output shape of [`union_intervals`]).
+pub fn overlap_with_union(union: &[(u64, u64)], span: (u64, u64)) -> u64 {
+    let (s, e) = span;
+    if e <= s {
+        return 0;
+    }
+    // First interval that could intersect: end > s.
+    let i = union.partition_point(|&(_, ue)| ue <= s);
+    let mut hidden = 0;
+    for &(us, ue) in &union[i..] {
+        if us >= e {
+            break;
+        }
+        hidden += e.min(ue).saturating_sub(s.max(us));
+    }
+    hidden
+}
+
+// ---------------------------------------------------------------------
+// Achieved overlap
+// ---------------------------------------------------------------------
+
+/// Achieved communication/computation overlap: of all wire-egress
+/// occupancy, how much was hidden behind a kernel executing on the
+/// sending node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Overlap {
+    /// Total wire-egress occupancy (ns) across the run.
+    pub wire_ns: u64,
+    /// The part of `wire_ns` during which a kernel was executing on the
+    /// source node.
+    pub hidden_ns: u64,
+}
+
+impl Overlap {
+    /// Hidden ÷ total as a percentage in `[0, 100]` (0 when no wire
+    /// traffic was recorded).
+    pub fn pct(&self) -> f64 {
+        if self.wire_ns == 0 {
+            0.0
+        } else {
+            100.0 * self.hidden_ns as f64 / self.wire_ns as f64
+        }
+    }
+}
+
+/// Compute [`Overlap`] from a recorded trace: for every wire-egress span
+/// the hidden part is its intersection with the union of kernel windows
+/// on the *source* node's GPUs. Returns `None` when the trace recorded
+/// no wire-egress spans (intra-node-only or empty runs), so reports can
+/// distinguish "no communication" from "0 % hidden".
+pub fn achieved_overlap(t: &TraceBuf) -> Option<Overlap> {
+    let nodes = t.meta.nodes.max(1) as usize;
+    let mut kernels: Vec<Vec<(u64, u64)>> = vec![Vec::new(); nodes];
+    for ev in &t.events {
+        if let Event::Kernel { t0, dur, gpu, .. } = *ev {
+            let n = t.node_of(gpu) as usize;
+            if n < nodes {
+                kernels[n].push((t0, t0 + dur));
+            }
+        }
+    }
+    let unions: Vec<Vec<(u64, u64)>> = kernels.into_iter().map(union_intervals).collect();
+    let mut o = Overlap::default();
+    let mut saw_wire = false;
+    for ev in &t.events {
+        if let Event::Wire { t0, dur, src_node, dir: WireDir::Egress, .. } = *ev {
+            saw_wire = true;
+            o.wire_ns += dur;
+            if let Some(u) = unions.get(src_node as usize) {
+                o.hidden_ns += overlap_with_union(u, (t0, t0 + dur));
+            }
+        }
+    }
+    saw_wire.then_some(o)
+}
+
+// ---------------------------------------------------------------------
+// Critical-path extraction
+// ---------------------------------------------------------------------
+
+/// Deterministic decomposition of a makespan into blocking-activity
+/// buckets along one rank's timeline (or the whole run's): at every
+/// instant of `[0, finish]` the highest-priority active span category
+/// claims the time. Priority (highest first): retransmit, backpressure
+/// wait, trigger latency, wire, compute; uncovered time is `other_ns`
+/// (host code, progress-thread charges, enqueue gaps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CritPath {
+    /// The decomposed window length (== finish time).
+    pub total_ns: u64,
+    /// Kernel windows on the subject rank's GPU.
+    pub compute_ns: u64,
+    /// Wire egress/ingress occupancy touching the subject node.
+    pub wire_ns: u64,
+    /// NIC trigger-handshake latency on the subject node.
+    pub trigger_ns: u64,
+    /// Host stalls waiting for DWQ descriptor slots.
+    pub backpressure_ns: u64,
+    /// Wire occupancy of watchdog-retransmitted payloads.
+    pub retransmit_ns: u64,
+    /// Uncovered remainder.
+    pub other_ns: u64,
+}
+
+impl CritPath {
+    fn pct(&self, x: u64) -> f64 {
+        if self.total_ns == 0 {
+            0.0
+        } else {
+            100.0 * x as f64 / self.total_ns as f64
+        }
+    }
+
+    /// Compact table cell: `c62/w20/t5/b0/r0/o13` (percent of the
+    /// decomposed window per bucket, rounded).
+    pub fn md_cell(&self) -> String {
+        format!(
+            "c{:.0}/w{:.0}/t{:.0}/b{:.0}/r{:.0}/o{:.0}",
+            self.pct(self.compute_ns),
+            self.pct(self.wire_ns),
+            self.pct(self.trigger_ns),
+            self.pct(self.backpressure_ns),
+            self.pct(self.retransmit_ns),
+            self.pct(self.other_ns)
+        )
+    }
+
+    /// JSON object rendering (used by campaign reports and stall notes).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"total_ns\": {}, \"compute_ns\": {}, \"wire_ns\": {}, \"trigger_ns\": {}, \
+             \"backpressure_ns\": {}, \"retransmit_ns\": {}, \"other_ns\": {}}}",
+            self.total_ns,
+            self.compute_ns,
+            self.wire_ns,
+            self.trigger_ns,
+            self.backpressure_ns,
+            self.retransmit_ns,
+            self.other_ns
+        )
+    }
+
+    /// One-line summary for [`crate::sim::StallReport`] notes.
+    pub fn headline(&self) -> String {
+        format!(
+            "trace attribution: compute {:.0}% wire {:.0}% trigger {:.0}% \
+             backpressure {:.0}% retransmit {:.0}% other {:.0}%",
+            self.pct(self.compute_ns),
+            self.pct(self.wire_ns),
+            self.pct(self.trigger_ns),
+            self.pct(self.backpressure_ns),
+            self.pct(self.retransmit_ns),
+            self.pct(self.other_ns)
+        )
+    }
+}
+
+/// Bucket priority indices for the sweep (lower wins).
+const CAT_RETRANSMIT: usize = 0;
+const CAT_BACKPRESSURE: usize = 1;
+const CAT_TRIGGER: usize = 2;
+const CAT_WIRE: usize = 3;
+const CAT_COMPUTE: usize = 4;
+const N_CATS: usize = 5;
+
+/// Extract the critical-path bucket decomposition of `[0, finish]`.
+///
+/// `rank = Some(r)` restricts attribution to rank `r`'s timeline (its
+/// GPU's kernels, its node's NIC/wire activity, its own backpressure
+/// stalls) — the campaign uses the last-finishing rank, approximating
+/// the longest dependency chain. `rank = None` attributes over all
+/// nodes at once (used for stall-time attribution, where no rank has
+/// finished).
+pub fn critical_path(t: &TraceBuf, rank: Option<u32>, finish: Time) -> CritPath {
+    let node = rank.map(|r| t.node_of(r));
+    let mut spans: Vec<(u64, u64, usize)> = Vec::new();
+    let mut add = |t0: Time, dur: u64, cat: usize| {
+        let e = (t0 + dur).min(finish);
+        if e > t0 {
+            spans.push((t0, e, cat));
+        }
+    };
+    for ev in &t.events {
+        match *ev {
+            Event::Kernel { t0, dur, gpu, .. } => {
+                if rank.is_none() || rank == Some(gpu) {
+                    add(t0, dur, CAT_COMPUTE);
+                }
+            }
+            Event::Wire { t0, dur, src_node, dst_node, retransmit, .. } => {
+                let mine =
+                    node.is_none() || node == Some(src_node) || node == Some(dst_node);
+                if mine {
+                    add(t0, dur, if retransmit { CAT_RETRANSMIT } else { CAT_WIRE });
+                }
+            }
+            Event::TriggerFire { t0, dur, node: n } => {
+                if node.is_none() || node == Some(n) {
+                    add(t0, dur, CAT_TRIGGER);
+                }
+            }
+            Event::DwqWait { t0, dur, rank: r, .. } => {
+                if rank.is_none() || rank == Some(r) {
+                    add(t0, dur, CAT_BACKPRESSURE);
+                }
+            }
+            _ => {}
+        }
+    }
+    // Boundary sweep: at each segment between consecutive boundaries the
+    // highest-priority active category claims the time.
+    let mut points: Vec<(u64, usize, i32)> = Vec::with_capacity(spans.len() * 2);
+    for &(s, e, c) in &spans {
+        points.push((s, c, 1));
+        points.push((e, c, -1));
+    }
+    points.sort_unstable();
+    let mut out = CritPath { total_ns: finish, ..CritPath::default() };
+    let mut active = [0i32; N_CATS];
+    let mut prev = 0u64;
+    let mut covered = 0u64;
+    let mut i = 0;
+    while i < points.len() {
+        let t_here = points[i].0;
+        if t_here > prev {
+            if let Some(cat) = active.iter().position(|&n| n > 0) {
+                let len = t_here.min(finish) - prev.min(finish);
+                covered += len;
+                match cat {
+                    CAT_RETRANSMIT => out.retransmit_ns += len,
+                    CAT_BACKPRESSURE => out.backpressure_ns += len,
+                    CAT_TRIGGER => out.trigger_ns += len,
+                    CAT_WIRE => out.wire_ns += len,
+                    _ => out.compute_ns += len,
+                }
+            }
+            prev = t_here;
+        }
+        while i < points.len() && points[i].0 == t_here {
+            active[points[i].1] += points[i].2;
+            i += 1;
+        }
+    }
+    out.other_ns = finish.saturating_sub(covered);
+    out
+}
+
+// ---------------------------------------------------------------------
+// Chrome trace-event export
+// ---------------------------------------------------------------------
+
+/// Render `ns` as Chrome's microsecond timestamps with exact
+/// nanosecond precision (`123456` ns → `"123.456"`). Pure integer
+/// formatting — byte-deterministic.
+fn us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+struct ChromeWriter {
+    out: String,
+    first: bool,
+}
+
+impl ChromeWriter {
+    fn event(&mut self, body: String) {
+        if !self.first {
+            self.out.push_str(",\n");
+        }
+        self.first = false;
+        self.out.push_str("    ");
+        self.out.push_str(&body);
+    }
+
+    fn span(&mut self, name: &str, t0: Time, dur: u64, pid: u32, tid: u32, args: &str) {
+        self.event(format!(
+            "{{\"name\": \"{}\", \"ph\": \"X\", \"ts\": {}, \"dur\": {}, \
+             \"pid\": {}, \"tid\": {}, \"args\": {{{}}}}}",
+            json_escape(name),
+            us(t0),
+            us(dur),
+            pid,
+            tid,
+            args
+        ));
+    }
+
+    fn instant(&mut self, name: &str, t: Time, pid: u32, tid: u32, args: &str) {
+        self.event(format!(
+            "{{\"name\": \"{}\", \"ph\": \"i\", \"ts\": {}, \"s\": \"t\", \
+             \"pid\": {}, \"tid\": {}, \"args\": {{{}}}}}",
+            json_escape(name),
+            us(t),
+            pid,
+            tid,
+            args
+        ));
+    }
+
+    fn meta(&mut self, kind: &str, pid: u32, tid: u32, name: &str) {
+        self.event(format!(
+            "{{\"name\": \"{kind}\", \"ph\": \"M\", \"pid\": {pid}, \"tid\": {tid}, \
+             \"args\": {{\"name\": \"{}\"}}}}",
+            json_escape(name)
+        ));
+    }
+}
+
+/// Track ids within a node process: hosts and streams get low ids, NIC
+/// and wire facilities fixed high ids.
+const TID_NIC: u32 = 1000;
+const TID_WIRE_EGRESS: u32 = 1001;
+const TID_WIRE_INGRESS: u32 = 1002;
+const TID_HOST_STRIDE: u32 = 16;
+
+/// Export a recorded trace as Chrome trace-event JSON (Perfetto /
+/// `chrome://tracing` loadable). One process per node (pid = node), one
+/// extra process for the engine (pid = nodes); per node: one thread per
+/// host rank, one per GPU stream, plus NIC / wire-egress / wire-ingress
+/// facility threads. Output bytes are a pure function of the trace —
+/// the export inherits the recorder's determinism contract.
+pub fn chrome_trace(t: &TraceBuf) -> String {
+    let rpn = t.meta.ranks_per_node.max(1);
+    let engine_pid = t.meta.nodes.max(1);
+    let node_pid = |rank: u32| (rank / rpn).min(engine_pid - 1);
+    let host_tid = |rank: u32| (rank % rpn) * TID_HOST_STRIDE;
+    let stream_tid = |rank: u32, stream: u32| (rank % rpn) * TID_HOST_STRIDE + 1 + stream;
+
+    let mut w = ChromeWriter { out: String::new(), first: true };
+    w.out.push_str("{\n  \"displayTimeUnit\": \"ns\",\n  \"otherData\": {");
+    w.out.push_str(&format!(
+        "\"label\": \"{}\", \"nodes\": {}, \"ranks_per_node\": {}, \"events\": {}, \
+         \"dropped\": {}",
+        json_escape(&t.meta.label),
+        t.meta.nodes,
+        t.meta.ranks_per_node,
+        t.events.len(),
+        t.dropped
+    ));
+    w.out.push_str("},\n  \"traceEvents\": [\n");
+
+    // Process/thread name metadata, in deterministic (node, track) order.
+    for n in 0..t.meta.nodes.max(1) {
+        w.meta("process_name", n, 0, &format!("node{n}"));
+        for lr in 0..rpn {
+            let rank = n * rpn + lr;
+            w.meta("thread_name", n, lr * TID_HOST_STRIDE, &format!("rank{rank} host"));
+        }
+        w.meta("thread_name", n, TID_NIC, &format!("nic{n}"));
+        w.meta("thread_name", n, TID_WIRE_EGRESS, &format!("nic{n} wire egress"));
+        w.meta("thread_name", n, TID_WIRE_INGRESS, &format!("nic{n} wire ingress"));
+    }
+    w.meta("process_name", engine_pid, 0, "engine");
+    w.meta("thread_name", engine_pid, 0, "driver");
+
+    for ev in &t.events {
+        match *ev {
+            Event::HostPark { t, host, kind } => {
+                let name = match kind {
+                    ParkKind::Advance => "park(advance)",
+                    ParkKind::WaitCell => "park(wait)",
+                };
+                w.instant(name, t, node_pid(host), host_tid(host), "");
+            }
+            Event::HostResume { t, host } => {
+                w.instant("resume", t, node_pid(host), host_tid(host), "");
+            }
+            Event::Microtask { t } => {
+                w.instant("microtask", t, engine_pid, 0, "");
+            }
+            Event::Kernel { t0, dur, gpu, stream, name } => {
+                w.span(
+                    t.lookup(name),
+                    t0,
+                    dur,
+                    node_pid(gpu),
+                    stream_tid(gpu, stream),
+                    &format!("\"gpu\": {gpu}, \"stream\": {stream}"),
+                );
+            }
+            Event::KtDoorbell { t: tt, gpu, kind } => {
+                let name = match kind {
+                    KtKind::CounterInc => "kt_doorbell(counter)",
+                    KtKind::Put => "kt_doorbell(put)",
+                    KtKind::Recv => "kt_doorbell(recv)",
+                };
+                w.instant(name, tt, node_pid(gpu), TID_NIC, &format!("\"gpu\": {gpu}"));
+            }
+            Event::TriggerArm { t: tt, node, threshold, label } => {
+                w.instant(
+                    "trigger_arm",
+                    tt,
+                    node.min(engine_pid - 1),
+                    TID_NIC,
+                    &format!(
+                        "\"threshold\": {threshold}, \"label\": \"{}\"",
+                        json_escape(t.lookup(label))
+                    ),
+                );
+            }
+            Event::TriggerFire { t0, dur, node } => {
+                w.span("trigger_fire", t0, dur, node.min(engine_pid - 1), TID_NIC, "");
+            }
+            Event::DwqReserve { t: tt, node, in_use } => {
+                w.instant(
+                    "dwq_reserve",
+                    tt,
+                    node.min(engine_pid - 1),
+                    TID_NIC,
+                    &format!("\"in_use\": {in_use}"),
+                );
+            }
+            Event::DwqRelease { t: tt, node } => {
+                w.instant("dwq_release", tt, node.min(engine_pid - 1), TID_NIC, "");
+            }
+            Event::DwqWait { t0, dur, node, rank } => {
+                w.span(
+                    "dwq_wait",
+                    t0,
+                    dur,
+                    node_pid(rank),
+                    host_tid(rank),
+                    &format!("\"nic\": {node}"),
+                );
+            }
+            Event::Wire { t0, dur, src_node, dst_node, bytes, src_rank, dir, retransmit } => {
+                let (name, pid, tid) = match dir {
+                    WireDir::Egress => (
+                        if retransmit { "wire_egress(retransmit)" } else { "wire_egress" },
+                        src_node.min(engine_pid - 1),
+                        TID_WIRE_EGRESS,
+                    ),
+                    WireDir::Ingress => (
+                        if retransmit { "wire_ingress(retransmit)" } else { "wire_ingress" },
+                        dst_node.min(engine_pid - 1),
+                        TID_WIRE_INGRESS,
+                    ),
+                };
+                let rank_arg = if src_rank == NO_RANK {
+                    String::from("null")
+                } else {
+                    src_rank.to_string()
+                };
+                w.span(
+                    name,
+                    t0,
+                    dur,
+                    pid,
+                    tid,
+                    &format!(
+                        "\"src_node\": {src_node}, \"dst_node\": {dst_node}, \
+                         \"bytes\": {bytes}, \"src_rank\": {rank_arg}, \
+                         \"retransmit\": {retransmit}"
+                    ),
+                );
+            }
+            Event::Match { t: tt, rank, tag } => {
+                w.instant(
+                    "match",
+                    tt,
+                    node_pid(rank),
+                    TID_NIC,
+                    &format!("\"rank\": {rank}, \"tag\": {tag}"),
+                );
+            }
+            Event::Unexpected { t: tt, rank, tag } => {
+                w.instant(
+                    "unexpected",
+                    tt,
+                    node_pid(rank),
+                    TID_NIC,
+                    &format!("\"rank\": {rank}, \"tag\": {tag}"),
+                );
+            }
+            Event::RecvPost { t: tt, rank, node } => {
+                w.instant(
+                    "triggered_recv_post",
+                    tt,
+                    node.min(engine_pid - 1),
+                    TID_NIC,
+                    &format!("\"rank\": {rank}"),
+                );
+            }
+        }
+    }
+    w.out.push_str("\n  ]\n}\n");
+    w.out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- interval-overlap unit battery -------------------------------
+
+    #[test]
+    fn union_merges_overlapping_and_adjacent() {
+        assert_eq!(
+            union_intervals(vec![(0, 10), (5, 15), (15, 20)]),
+            vec![(0, 20)],
+            "overlapping + adjacent intervals coalesce"
+        );
+    }
+
+    #[test]
+    fn union_keeps_disjoint_and_drops_zero_length() {
+        assert_eq!(
+            union_intervals(vec![(30, 40), (0, 10), (20, 20), (50, 45)]),
+            vec![(0, 10), (30, 40)],
+            "disjoint stay split; zero-length and inverted vanish"
+        );
+    }
+
+    #[test]
+    fn overlap_nested_span_is_fully_hidden() {
+        let u = union_intervals(vec![(0, 100)]);
+        assert_eq!(overlap_with_union(&u, (20, 30)), 10);
+    }
+
+    #[test]
+    fn overlap_disjoint_span_is_zero() {
+        let u = union_intervals(vec![(0, 10), (50, 60)]);
+        assert_eq!(overlap_with_union(&u, (20, 40)), 0);
+    }
+
+    #[test]
+    fn overlap_adjacent_half_open_touch_is_zero() {
+        let u = union_intervals(vec![(0, 10)]);
+        assert_eq!(overlap_with_union(&u, (10, 20)), 0, "half-open: touching ends do not overlap");
+        assert_eq!(overlap_with_union(&u, (5, 10)), 5);
+    }
+
+    #[test]
+    fn overlap_zero_length_span_is_zero() {
+        let u = union_intervals(vec![(0, 100)]);
+        assert_eq!(overlap_with_union(&u, (50, 50)), 0);
+    }
+
+    #[test]
+    fn overlap_spanning_multiple_union_pieces() {
+        let u = union_intervals(vec![(0, 10), (20, 30), (40, 50)]);
+        assert_eq!(overlap_with_union(&u, (5, 45)), 5 + 10 + 5);
+    }
+
+    // ---- achieved overlap --------------------------------------------
+
+    fn buf(nodes: u32, rpn: u32) -> TraceBuf {
+        TraceBuf::new(
+            TraceMeta { nodes, ranks_per_node: rpn, label: "test".into() },
+            DEFAULT_CAP,
+        )
+    }
+
+    fn kernel(t0: u64, dur: u64, gpu: u32) -> Event {
+        Event::Kernel { t0, dur, gpu, stream: 0, name: NO_STR }
+    }
+
+    fn wire(t0: u64, dur: u64, src_node: u32, dst_node: u32) -> Event {
+        Event::Wire {
+            t0,
+            dur,
+            src_node,
+            dst_node,
+            bytes: 100,
+            src_rank: src_node,
+            dir: WireDir::Egress,
+            retransmit: false,
+        }
+    }
+
+    #[test]
+    fn achieved_overlap_counts_only_source_node_kernels() {
+        let mut t = buf(2, 1);
+        t.push(kernel(0, 100, 0)); // node 0
+        t.push(kernel(0, 100, 1)); // node 1
+        t.push(wire(50, 100, 0, 1)); // egress from node 0: half hidden
+        let o = achieved_overlap(&t).unwrap();
+        assert_eq!(o.wire_ns, 100);
+        assert_eq!(o.hidden_ns, 50);
+        assert!((o.pct() - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn achieved_overlap_none_without_wire_traffic() {
+        let mut t = buf(1, 2);
+        t.push(kernel(0, 100, 0));
+        assert_eq!(achieved_overlap(&t), None);
+    }
+
+    #[test]
+    fn achieved_overlap_pct_stays_in_range() {
+        let mut t = buf(2, 1);
+        t.push(kernel(0, 1000, 0));
+        t.push(wire(0, 400, 0, 1));
+        t.push(wire(900, 400, 0, 1)); // partially uncovered
+        let o = achieved_overlap(&t).unwrap();
+        assert!(o.hidden_ns <= o.wire_ns);
+        assert!((0.0..=100.0).contains(&o.pct()));
+    }
+
+    // ---- critical path -----------------------------------------------
+
+    #[test]
+    fn critical_path_buckets_partition_the_window() {
+        let mut t = buf(2, 1);
+        t.push(kernel(0, 100, 0));
+        t.push(wire(80, 60, 0, 1)); // 20ns overlap with kernel: wire loses
+        t.push(Event::TriggerFire { t0: 200, dur: 25, node: 0 });
+        t.push(Event::DwqWait { t0: 300, dur: 40, node: 0, rank: 0 });
+        let cp = critical_path(&t, Some(0), 400);
+        assert_eq!(cp.total_ns, 400);
+        assert_eq!(cp.compute_ns, 100);
+        assert_eq!(cp.wire_ns, 40, "kernel window wins overlapped 20ns (priority)");
+        assert_eq!(cp.trigger_ns, 25);
+        assert_eq!(cp.backpressure_ns, 40);
+        assert_eq!(cp.retransmit_ns, 0);
+        let sum = cp.compute_ns
+            + cp.wire_ns
+            + cp.trigger_ns
+            + cp.backpressure_ns
+            + cp.retransmit_ns
+            + cp.other_ns;
+        assert_eq!(sum, cp.total_ns, "buckets partition the makespan exactly");
+    }
+
+    #[test]
+    fn critical_path_wire_outranks_compute_under_priority() {
+        // Priority order is retransmit > backpressure > trigger > wire >
+        // compute: a retransmitted wire span claims time even inside a
+        // kernel window.
+        let mut t = buf(2, 1);
+        t.push(kernel(0, 100, 0));
+        t.push(Event::Wire {
+            t0: 10,
+            dur: 30,
+            src_node: 0,
+            dst_node: 1,
+            bytes: 1,
+            src_rank: 0,
+            dir: WireDir::Egress,
+            retransmit: true,
+        });
+        let cp = critical_path(&t, Some(0), 100);
+        assert_eq!(cp.retransmit_ns, 30);
+        assert_eq!(cp.compute_ns, 70);
+    }
+
+    #[test]
+    fn critical_path_clips_to_finish() {
+        let mut t = buf(1, 1);
+        t.push(kernel(50, 100, 0));
+        let cp = critical_path(&t, Some(0), 100);
+        assert_eq!(cp.compute_ns, 50);
+        assert_eq!(cp.other_ns, 50);
+    }
+
+    // ---- recorder ----------------------------------------------------
+
+    #[test]
+    fn recorder_caps_and_counts_drops() {
+        let mut t = TraceBuf::new(TraceMeta::default(), 2);
+        t.push(Event::Microtask { t: 1 });
+        t.push(Event::Microtask { t: 2 });
+        t.push(Event::Microtask { t: 3 });
+        assert_eq!(t.events.len(), 2);
+        assert_eq!(t.dropped, 1);
+    }
+
+    #[test]
+    fn intern_dedups_and_lookup_roundtrips() {
+        let mut t = TraceBuf::new(TraceMeta::default(), 8);
+        let a = t.intern("faces_ax");
+        let b = t.intern("faces_pack");
+        let a2 = t.intern("faces_ax");
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_eq!(t.lookup(a), "faces_ax");
+        assert_eq!(t.lookup(NO_STR), "");
+    }
+
+    // ---- chrome export -----------------------------------------------
+
+    #[test]
+    fn chrome_trace_is_valid_json_and_deterministic() {
+        let mut t = buf(2, 2);
+        let name = t.intern("faces_ax");
+        t.push(Event::HostResume { t: 0, host: 1 });
+        t.push(Event::Kernel { t0: 10, dur: 500, gpu: 1, stream: 0, name });
+        t.push(Event::TriggerArm { t: 20, node: 0, threshold: 1, label: t.intern("q0 send") });
+        t.push(Event::TriggerFire { t0: 520, dur: 900, node: 0 });
+        t.push(wire(1500, 1000, 0, 1));
+        t.push(Event::Match { t: 2600, rank: 2, tag: 7 });
+        t.push(Event::HostPark { t: 2700, host: 1, kind: ParkKind::WaitCell });
+        let a = chrome_trace(&t);
+        let b = chrome_trace(&t);
+        assert_eq!(a, b, "export is a pure function of the trace");
+        assert!(crate::workloads::campaign::json_parses(&a), "export must be valid JSON");
+        assert!(a.contains("\"faces_ax\""));
+        assert!(a.contains("wire_egress"));
+    }
+
+    #[test]
+    fn chrome_timestamps_are_exact_microseconds() {
+        assert_eq!(us(0), "0.000");
+        assert_eq!(us(999), "0.999");
+        assert_eq!(us(123_456), "123.456");
+        assert_eq!(us(1_000_000), "1000.000");
+    }
+}

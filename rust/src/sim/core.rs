@@ -43,6 +43,7 @@ use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
 
 use super::rng::SplitMix64;
+use crate::obs::{Event, StrId, TraceBuf};
 
 /// Virtual time in nanoseconds.
 pub type Time = u64;
@@ -201,6 +202,9 @@ pub struct Core<W> {
     /// Names of host actors, indexed by HostId (for diagnostics only).
     #[allow(dead_code)]
     pub(crate) host_names: Vec<String>,
+    /// Structured trace recorder (`None` = tracing off; see
+    /// [`crate::obs`]). Boxed so the off path carries one pointer.
+    trace: Option<Box<TraceBuf>>,
 }
 
 impl<W> Core<W> {
@@ -215,6 +219,7 @@ impl<W> Core<W> {
             rng: SplitMix64::new(seed),
             stats: SimStats::default(),
             host_names: Vec::new(),
+            trace: None,
         }
     }
 
@@ -232,6 +237,50 @@ impl<W> Core<W> {
 
     pub fn stats(&self) -> &SimStats {
         &self.stats
+    }
+
+    // ---- tracing -----------------------------------------------------
+
+    /// Start recording into `buf`. Tracing is off (`None`) by default;
+    /// every emit site below costs one branch in that state, which the
+    /// engine bench guard pins as unmeasurable.
+    pub fn trace_start(&mut self, buf: TraceBuf) {
+        self.trace = Some(Box::new(buf));
+    }
+
+    /// Whether a trace recorder is installed. Emit sites that need to
+    /// build an event payload (format a label, look up a rank) should
+    /// guard on this first.
+    #[inline]
+    pub fn trace_on(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    /// Record one event (no-op when tracing is off).
+    #[inline]
+    pub fn trace_push(&mut self, ev: Event) {
+        if let Some(t) = &mut self.trace {
+            t.push(ev);
+        }
+    }
+
+    /// Intern a label for use in trace events. Returns
+    /// [`crate::obs::NO_STR`] when tracing is off.
+    pub fn trace_intern(&mut self, s: &str) -> StrId {
+        match &mut self.trace {
+            Some(t) => t.intern(s),
+            None => crate::obs::NO_STR,
+        }
+    }
+
+    /// Read access to the recorded trace (stall inspectors, analytics).
+    pub fn trace(&self) -> Option<&TraceBuf> {
+        self.trace.as_deref()
+    }
+
+    /// Detach the recorded trace, turning tracing off.
+    pub fn take_trace(&mut self) -> Option<TraceBuf> {
+        self.trace.take().map(|b| *b)
     }
 
     // ---- events ------------------------------------------------------
@@ -290,6 +339,9 @@ impl<W> Core<W> {
     pub(crate) fn next_event(&mut self) -> Option<(Time, SmallEv)> {
         if let Some(kind) = self.micro.pop_front() {
             self.stats.microtasks += 1;
+            if let Some(tb) = &mut self.trace {
+                tb.push(Event::Microtask { t: self.now });
+            }
             return Some((self.now, kind));
         }
         let ev = self.heap.pop()?;

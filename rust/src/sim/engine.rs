@@ -19,6 +19,7 @@ use std::thread::JoinHandle;
 
 use super::core::{CellId, Core, HostId, SimStats, SmallEv, Time, WaiterSnapshot};
 use super::gate::Gate;
+use crate::obs::{Event, ParkKind, TraceBuf};
 
 /// Marker payload used to unwind host threads when the sim aborts.
 struct SimAbort;
@@ -275,7 +276,13 @@ impl<W: Send + 'static> Engine<W> {
 
     /// Drive the simulation to completion. Returns the final world and
     /// engine statistics, or a deadlock/panic report.
-    pub fn run(mut self) -> Result<(W, SimStats), SimError> {
+    pub fn run(self) -> Result<(W, SimStats), SimError> {
+        self.run_traced().map(|(w, s, _)| (w, s))
+    }
+
+    /// Like [`Engine::run`], but also detaches and returns the recorded
+    /// trace (if `Core::trace_start` was called during setup).
+    pub fn run_traced(mut self) -> Result<(W, SimStats, Option<TraceBuf>), SimError> {
         let result = self.drive();
         // Ensure all host threads have exited before returning the world.
         for h in self.handles.drain(..) {
@@ -283,9 +290,12 @@ impl<W: Send + 'static> Engine<W> {
         }
         let shared = Arc::try_unwrap(self.shared)
             .unwrap_or_else(|_| panic!("host threads still hold engine references"));
-        let inner = shared.inner.into_inner().unwrap();
+        let mut inner = shared.inner.into_inner().unwrap();
         match result {
-            Ok(()) => Ok((inner.world, inner.core.stats().clone())),
+            Ok(()) => {
+                let trace = inner.core.take_trace();
+                Ok((inner.world, inner.core.stats().clone(), trace))
+            }
             Err(e) => Err(e),
         }
     }
@@ -325,6 +335,7 @@ impl<W: Send + 'static> Engine<W> {
                         continue; // stale resume; ignore
                     }
                     g.core.stats.host_switches += 1;
+                    g.core.trace_push(Event::HostResume { t: time, host: h.0 });
                     let slot = &mut g.hosts[h.0 as usize];
                     slot.state = HostState::Running;
                     slot.wait_desc.clear();
@@ -405,6 +416,8 @@ impl<W: Send + 'static> HostCtx<W> {
         let mut g = self.shared.inner.lock().unwrap();
         let t = g.core.now() + dt;
         g.core.schedule_resume(t, self.id);
+        g.core
+            .trace_push(Event::HostPark { t: t - dt, host: self.id.0, kind: ParkKind::Advance });
         {
             let slot = &mut g.hosts[self.id.0 as usize];
             slot.state = HostState::Sleeping;
@@ -423,6 +436,8 @@ impl<W: Send + 'static> HostCtx<W> {
         if satisfied {
             return;
         }
+        let t_now = g.core.now();
+        g.core.trace_push(Event::HostPark { t: t_now, host: self.id.0, kind: ParkKind::WaitCell });
         {
             let slot = &mut g.hosts[self.id.0 as usize];
             slot.state = HostState::BlockedOnCell;

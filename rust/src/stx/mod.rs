@@ -856,14 +856,17 @@ fn arm_with_backpressure(
     loop {
         match hctx.with(&mut attempt) {
             Err(StError::DwqFull(node)) => {
-                if !stalled {
+                let rank = if !stalled {
                     stalled = true;
                     hctx.with(|w, _| {
                         w.metrics.dwq_slot_waits += 1;
                         w.queues[qid].dwq_slot_waits += 1;
-                    });
-                }
-                wait_for_dwq_slot(hctx, node);
+                        w.queues[qid].rank
+                    })
+                } else {
+                    hctx.with(|w, _| w.queues[qid].rank)
+                };
+                wait_for_dwq_slot(hctx, node, rank);
             }
             other => return other,
         }
@@ -874,7 +877,7 @@ fn arm_with_backpressure(
 /// descriptor. The *caller* records the stall (once per logical wait,
 /// even if a released slot is lost to a concurrent producer and the
 /// wait repeats).
-fn wait_for_dwq_slot(hctx: &mut HostCtx<World>, node: usize) {
+fn wait_for_dwq_slot(hctx: &mut HostCtx<World>, node: usize, rank: usize) {
     let (cell, threshold, cap) = hctx.with(|w, core| {
         let cell = nic::dwq_released_cell(w, core, node);
         let cap = w.cost.dwq_slots_per_nic as u64;
@@ -885,7 +888,22 @@ fn wait_for_dwq_slot(hctx: &mut HostCtx<World>, node: usize) {
     // The wait description names the exhausted pool and its capacity so
     // a stall here (pre-armed demand exceeding dwq_slots_per_nic with no
     // fire in flight) yields a self-explanatory StallReport.
+    let t0 = hctx.now();
     hctx.wait_ge(cell, threshold, &format!("stx DWQ slot on nic{node} (capacity {cap} exhausted)"));
+    let dur = hctx.now() - t0;
+    if dur > 0 {
+        // Backpressure span for the trace: how long this rank's host sat
+        // on the exhausted descriptor pool (the critical-path
+        // `backpressure` bucket; see `crate::obs`).
+        hctx.with(|_, core| {
+            core.trace_push(crate::obs::Event::DwqWait {
+                t0,
+                dur,
+                node: node as u32,
+                rank: rank as u32,
+            });
+        });
+    }
 }
 
 // ---------------------------------------------------------------------

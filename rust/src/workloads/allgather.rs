@@ -85,7 +85,7 @@ impl Workload for Allgather {
         let times = Timers::new(n);
         let (iters, qpr) = (cfg.iters, cfg.queues_per_rank);
         let (all2, times2) = (all.clone(), times.clone());
-        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
+        let mut out = run_cluster(world, cfg.seed, move |rank, ctx| {
             let comm = RankComm::new(ctx, rank, variant, qpr);
             let buf = all2[rank];
             let next = (rank + 1) % n;
@@ -154,6 +154,6 @@ impl Workload for Allgather {
             let (r, s, j) = (i / (n * elems), (i / elems) % n, i % elems);
             format!("allgather rank {r} block {s} elem {j}")
         });
-        Ok(scenario_run(&out, &times, validation))
+        Ok(scenario_run(&mut out, &times, validation))
     }
 }

@@ -193,7 +193,7 @@ impl Workload for Allreduce {
         let iters = cfg.iters;
         let (data2, tmp2, images2, times2) =
             (data.clone(), tmp.clone(), images.clone(), times.clone());
-        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
+        let mut out = run_cluster(world, cfg.seed, move |rank, ctx| {
             let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
             let queue = match mode {
                 Mode::HostRing => None,
@@ -253,6 +253,6 @@ impl Workload for Allreduce {
         });
         let validation =
             check_exact(pairs, |i| format!("allreduce rank {} elem {}", i / len, i % len));
-        Ok(scenario_run(&out, &times, validation))
+        Ok(scenario_run(&mut out, &times, validation))
     }
 }

@@ -86,7 +86,7 @@ impl Workload for AllToAll {
         let (iters, qpr) = (cfg.iters, cfg.queues_per_rank);
         let (send2, recv2, images2, times2) =
             (send.clone(), recv.clone(), images.clone(), times.clone());
-        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
+        let mut out = run_cluster(world, cfg.seed, move |rank, ctx| {
             let comm = RankComm::new(ctx, rank, variant, qpr);
             let (sb, rb) = (send2[rank], recv2[rank]);
             // Build-once: n-1 personalized sends + n-1 posted receives
@@ -163,6 +163,6 @@ impl Workload for AllToAll {
             let (r, s, j) = (i / (n * elems), (i / elems) % n, i % elems);
             format!("alltoall rank {r} block {s} elem {j}")
         });
-        Ok(scenario_run(&out, &times, validation))
+        Ok(scenario_run(&mut out, &times, validation))
     }
 }

@@ -29,6 +29,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::coordinator::report::{json_escape, markdown_table, pct_delta, Summary};
 use crate::costmodel::presets;
 use crate::fault::FaultSpec;
+use crate::obs::{self, CritPath};
 use crate::sim::{sweep, SimError};
 use crate::world::Topology;
 
@@ -70,6 +71,13 @@ pub struct CampaignSpec {
     /// carrying the [`crate::sim::StallReport`] instead of aborting the
     /// sweep.
     pub faults: Option<FaultSpec>,
+    /// Chrome-trace export prefix: `Some(prefix)` renders each cell's
+    /// first-seed event trace as
+    /// `<prefix>_<workload>_<variant>_<elems>_<topo>_q<q>.json`
+    /// (Perfetto-loadable; written by the CLI). `None` skips the export
+    /// — the overlap/critical-path columns are computed either way
+    /// (tracing itself is only off under `STMPI_TRACE=0`).
+    pub trace: Option<String>,
 }
 
 impl Default for CampaignSpec {
@@ -86,6 +94,7 @@ impl Default for CampaignSpec {
             dwq_slots: None,
             threads: None,
             faults: None,
+            trace: None,
         }
     }
 }
@@ -113,6 +122,7 @@ impl CampaignSpec {
             dwq_slots: None,
             threads: None,
             faults: None,
+            trace: None,
         }
     }
 
@@ -144,6 +154,7 @@ impl CampaignSpec {
             dwq_slots: Some(1),
             threads: None,
             faults: None,
+            trace: None,
         }
     }
 }
@@ -206,6 +217,19 @@ pub struct CampaignCell {
     /// Full stall diagnosis of the first stalled seed (park sites,
     /// waiter counters, armed descriptors, unmatched receives).
     pub stall_report: Option<String>,
+    /// Achieved communication/computation overlap of the first seed's
+    /// run, in percent (wire-egress occupancy hidden behind source-node
+    /// kernels ÷ total; see [`crate::obs::achieved_overlap`]). `None`
+    /// when tracing was off (`STMPI_TRACE=0`), the cell was skipped, or
+    /// the run moved nothing over the wire.
+    pub overlap_pct: Option<f64>,
+    /// Critical-path attribution of the first seed's run
+    /// (last-finishing rank; see [`crate::obs::critical_path`]).
+    pub crit: Option<CritPath>,
+    /// Rendered Chrome-trace JSON of the first seed's run, present only
+    /// when [`CampaignSpec::trace`] requested an export (the CLI writes
+    /// it to disk; not embedded in the report JSON).
+    pub trace_json: Option<String>,
 }
 
 impl CampaignCell {
@@ -286,6 +310,14 @@ impl CampaignReport {
                 Some(d) => s.push_str(&format!("\"delta_vs_ref_pct\": {d:.3}, ")),
                 None => s.push_str("\"delta_vs_ref_pct\": null, "),
             }
+            match c.overlap_pct {
+                Some(p) => s.push_str(&format!("\"overlap_pct\": {p:.3}, ")),
+                None => s.push_str("\"overlap_pct\": null, "),
+            }
+            match &c.crit {
+                Some(cp) => s.push_str(&format!("\"critical_path\": {}, ", cp.to_json())),
+                None => s.push_str("\"critical_path\": null, "),
+            }
             let dwq_queues = c
                 .per_queue
                 .iter()
@@ -341,6 +373,8 @@ impl CampaignReport {
             "min ms".to_string(),
             "max ms".to_string(),
             "vs ref".to_string(),
+            "overlap %".to_string(),
+            "crit path".to_string(),
             "validation".to_string(),
             "wire B".to_string(),
             "wire msgs".to_string(),
@@ -368,6 +402,14 @@ impl CampaignReport {
                 Some(d) => format!("{d:+.1}%"),
                 None => "--".to_string(),
             };
+            let overlap = match c.overlap_pct {
+                Some(p) => format!("{p:.1}"),
+                None => "--".to_string(),
+            };
+            let crit = match &c.crit {
+                Some(cp) => cp.md_cell(),
+                None => "--".to_string(),
+            };
             // Per-queue split, slot-ordered: "posts:waits/posts:waits"
             // (slash-separated — a pipe would break the Markdown table).
             let dwq_q = if c.per_queue.is_empty() {
@@ -389,6 +431,8 @@ impl CampaignReport {
                 min,
                 max,
                 vs_ref,
+                overlap,
+                crit,
                 c.validation.clone(),
                 c.bytes_wire.to_string(),
                 c.wire_msgs.to_string(),
@@ -561,7 +605,16 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
             cost: cost.clone(),
             faults: spec.faults.clone(),
         };
-        p.w.run(&cfg)
+        p.w.run(&cfg).map(|mut r| {
+            // Keep the raw event buffer only where the export needs it
+            // (first seed of each cell, export requested) so the sweep
+            // never holds every cell's trace at once; the derived
+            // overlap/crit fields are already computed and stay.
+            if spec.trace.is_none() || seed != spec.seeds[0] {
+                r.trace = None;
+            }
+            r
+        })
     });
 
     // Group the results back per cell (job order is cell-major). A seed
@@ -624,6 +677,9 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
                 timeouts: 0,
                 stalls: 0,
                 stall_report: None,
+                overlap_pct: None,
+                crit: None,
+                trace_json: None,
             });
             continue;
         }
@@ -684,6 +740,21 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
             timeouts: m(|r| r.metrics.timeouts),
             stalls: stalled.len() as u64,
             stall_report: stalled.first().map(|rep| format!("{rep}")),
+            overlap_pct: first.and_then(|r| r.overlap.map(|o| o.pct())),
+            crit: first.and_then(|r| r.crit),
+            trace_json: first.and_then(|r| {
+                let mut tb = r.trace.clone()?;
+                tb.meta.label = format!(
+                    "{}/{}/{}/{}x{}/q{}",
+                    p.w.name(),
+                    p.variant,
+                    p.elems,
+                    p.nodes,
+                    p.rpn,
+                    p.qpr
+                );
+                Some(obs::chrome_trace(&tb))
+            }),
         });
     }
 

@@ -81,6 +81,9 @@ impl Workload for FacesAdapter {
             // run_faces returns no world handle, so the adapter cannot
             // observe per-queue counters (reports render `--`).
             per_queue: Vec::new(),
+            overlap: r.overlap,
+            crit: r.crit,
+            trace: r.trace,
         })
     }
 }

@@ -229,7 +229,7 @@ impl Workload for Halo3d {
         let (iters, qpr) = (cfg.iters, cfg.queues_per_rank);
         let plans2 = plans.clone();
         let times2 = times.clone();
-        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
+        let mut out = run_cluster(world, cfg.seed, move |rank, ctx| {
             rank_program(iters, &plans2, rank, ctx, variant, qpr, &times2);
         })
         .context("halo3d run failed")?;
@@ -245,6 +245,6 @@ impl Workload for Halo3d {
             })
         });
         let validation = check_exact(pairs, |i| format!("halo3d acc slot {i}"));
-        Ok(scenario_run(&out, &times, validation))
+        Ok(scenario_run(&mut out, &times, validation))
     }
 }

@@ -264,7 +264,7 @@ impl Workload for HaloGraph {
 
         let (iters, qpr) = (cfg.iters, cfg.queues_per_rank);
         let (plans2, skews2, times2) = (plans.clone(), skews.clone(), times.clone());
-        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
+        let mut out = run_cluster(world, cfg.seed, move |rank, ctx| {
             let plan = &plans2[rank];
             let comm = RankComm::new(ctx, rank, variant, qpr);
             // Build-once: the whole irregular neighborhood is one plan;
@@ -333,6 +333,6 @@ impl Workload for HaloGraph {
             })
         });
         let validation = check_exact(pairs, |i| format!("halograph recv slot {i}"));
-        Ok(scenario_run(&out, &times, validation))
+        Ok(scenario_run(&mut out, &times, validation))
     }
 }

@@ -85,7 +85,7 @@ impl Workload for Incast {
         let times = Timers::new(n);
         let (iters, qpr) = (cfg.iters, cfg.queues_per_rank);
         let (send2, images2, times2) = (send.clone(), images.clone(), times.clone());
-        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
+        let mut out = run_cluster(world, cfg.seed, move |rank, ctx| {
             if rank == ROOT {
                 // The root only receives — no stream, no queue, no plan.
                 let t0 = ctx.now();
@@ -152,6 +152,6 @@ impl Workload for Incast {
         let validation = check_exact(pairs, |i| {
             format!("incast root slot for sender {} elem {}", 1 + i / elems, i % elems)
         });
-        Ok(scenario_run(&out, &times, validation))
+        Ok(scenario_run(&mut out, &times, validation))
     }
 }

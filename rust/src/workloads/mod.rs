@@ -32,6 +32,7 @@
 //! | `incast`    | N→1 hotspot stress on one NIC ingress port       |
 //! | `allgather` | ring gather phase over persistent `CommPlan`s    |
 //! | `halograph` | sparse random-graph halo, skewed arrivals driving the unexpected-message path |
+//! | `reduce-scatter` | ring reduce phase: serialized add-kernel chain over per-step CommPlans |
 //!
 //! Every workload sweeps the [`crate::stx::Variant`] axis: the host
 //! baseline, the paper's stream-triggered path (`st` / `st-shader`),
@@ -49,6 +50,7 @@ mod faces;
 mod halo3d;
 mod halograph;
 mod incast;
+mod reduce_scatter;
 
 pub use campaign::{run_campaign, CampaignReport, CampaignSpec};
 
@@ -56,6 +58,7 @@ use anyhow::{anyhow, Result};
 
 use crate::costmodel::CostModel;
 use crate::fault::FaultSpec;
+use crate::obs::{CritPath, Overlap, TraceBuf};
 use crate::sim::SimStats;
 use crate::stx::Variant;
 use crate::world::{Metrics, Topology};
@@ -181,6 +184,17 @@ pub struct ScenarioRun {
     /// queues, or for adapters that cannot observe the world — the
     /// `faces` adapter reports none).
     pub per_queue: Vec<QueueSlotStats>,
+    /// Achieved communication/computation overlap from the run's trace
+    /// (`None` when tracing is off — `STMPI_TRACE=0` — or the run moved
+    /// nothing over the wire).
+    pub overlap: Option<Overlap>,
+    /// Critical-path time attribution for the last-finishing rank
+    /// (`None` when tracing is off).
+    pub crit: Option<CritPath>,
+    /// The raw event trace, for Chrome-trace export (`None` when
+    /// tracing is off). Campaign cells drop it unless an export was
+    /// requested, so sweeps don't hold every cell's buffer.
+    pub trace: Option<TraceBuf>,
 }
 
 /// A communication scenario runnable by the campaign driver.
@@ -227,6 +241,7 @@ pub fn registry() -> Vec<Box<dyn Workload>> {
         Box::new(incast::Incast),
         Box::new(allgather::Allgather),
         Box::new(halograph::HaloGraph),
+        Box::new(reduce_scatter::ReduceScatter),
     ]
 }
 

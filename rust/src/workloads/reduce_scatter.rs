@@ -1,0 +1,214 @@
+//! `reduce-scatter` workload: the ring's reduce phase as a standalone,
+//! sweepable scenario — the dual of [`super::allgather`]. Each of the
+//! n-1 ring steps is one persistent [`crate::stx::CommPlan`] (send the
+//! running partial sum of chunk `rank-s` to `next`, deferred-receive
+//! chunk `rank-s-1` from `prev` into a per-step staging slot) built
+//! before the timed region and re-armed every iteration.
+//!
+//! Per iteration: step 0's round carries the init kernel (resets all n
+//! chunks to this rank's contribution, so iterations accumulate
+//! idempotently); step s ≥ 1 carries the add kernel folding the staged
+//! chunk received at step s-1 into the chunk step s sends — the
+//! serialized dependence chain that makes reduce-scatter harder to
+//! overlap than allgather's pure relay. After the loop a final fold
+//! kernel adds the last staged chunk into the rank's owned chunk
+//! `(rank+1) % n`; KT drains its queues first, because the fold rides a
+//! bare stream kernel with no plan prologue to order it after the last
+//! triggered receive. Validation is exact: the owned chunk must hold
+//! `Σ_src payload(src, own, j)` (integer payloads keep f32 sums exact).
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{build_world, run_cluster};
+use crate::gpu::{host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
+use crate::mpi::{SrcSel, TagSel, COMM_WORLD};
+use crate::nic::BufSlice;
+use crate::world::ComputeMode;
+
+use super::scaffold::{check_exact, install_faults, scenario_run, RankComm, Timers};
+use super::{comm_variant, payload, ScenarioCfg, ScenarioRun, Workload};
+
+pub struct ReduceScatter;
+
+/// Tag base; disjoint from the collectives' 1000/2000/3000 and
+/// allgather's 4000 spaces.
+const RS_TAG: i32 = 5000;
+
+impl Workload for ReduceScatter {
+    fn name(&self) -> &'static str {
+        "reduce-scatter"
+    }
+
+    fn description(&self) -> &'static str {
+        "ring reduce-scatter (the ring's reduce phase), add-kernel chain over persistent CommPlans"
+    }
+
+    fn variants(&self) -> &'static [&'static str] {
+        &["baseline", "st", "st-shader", "kt"]
+    }
+
+    fn default_elems(&self) -> &'static [usize] {
+        &[256, 4096, 65536]
+    }
+
+    fn configure(&self, cfg: &ScenarioCfg) -> Result<()> {
+        comm_variant("reduce-scatter", &cfg.variant)?;
+        if cfg.world_size() < 2 {
+            bail!("reduce-scatter needs at least two ranks");
+        }
+        if cfg.elems == 0 {
+            bail!("reduce-scatter: chunks must carry at least one element");
+        }
+        if cfg.queues_per_rank == 0 {
+            bail!("reduce-scatter: at least one queue per rank");
+        }
+        // Exact f32 validation: sums of n payloads (each < 8192) stay
+        // exactly representable while n * 8191 < 2^24.
+        if cfg.world_size() > 2048 {
+            bail!("reduce-scatter: exact f32 validation bounds the world to 2048 ranks");
+        }
+        // Each ring step is one single-send plan; plans rotate over the
+        // queue set, so multi-queue runs need at least as many steps as
+        // queues or the extra queues would sit idle.
+        if cfg.queues_per_rank > 1 && cfg.world_size() - 1 < cfg.queues_per_rank {
+            bail!(
+                "reduce-scatter: {} queues per rank need at least {} ranks (one ring step per queue)",
+                cfg.queues_per_rank,
+                cfg.queues_per_rank + 1
+            );
+        }
+        Ok(())
+    }
+
+    fn run(&self, cfg: &ScenarioCfg) -> Result<ScenarioRun> {
+        self.configure(cfg)?;
+        let variant = comm_variant("reduce-scatter", &cfg.variant)?;
+        let n = cfg.world_size();
+        let elems = cfg.elems;
+
+        let mut world = build_world(cfg.cost.clone(), cfg.topology());
+        install_faults(&mut world, "reduce-scatter", cfg);
+        world.compute = ComputeMode::Real;
+        // Per rank: the working vector (n chunks of running partial
+        // sums) plus one staging slot per ring step for the incoming
+        // chunk (the fold kernel reads it after the receive lands).
+        let work: Vec<_> = (0..n).map(|_| world.bufs.alloc(n * elems)).collect();
+        let stage: Vec<_> = (0..n).map(|_| world.bufs.alloc((n - 1) * elems)).collect();
+
+        let times = Timers::new(n);
+        let (iters, qpr) = (cfg.iters, cfg.queues_per_rank);
+        let (work2, stage2, times2) = (work.clone(), stage.clone(), times.clone());
+        let mut out = run_cluster(world, cfg.seed, move |rank, ctx| {
+            let comm = RankComm::new(ctx, rank, variant, qpr);
+            let (wbuf, sbuf) = (work2[rank], stage2[rank]);
+            let next = (rank + 1) % n;
+            let prev = (rank + n - 1) % n;
+            // Build-once: one persistent plan per ring step. Step s
+            // sends the partial sum of chunk (rank - s) onward and
+            // lands chunk (rank - s - 1) in staging slot s.
+            let steps: Vec<_> = (0..n - 1)
+                .map(|s| {
+                    let send_c = (rank + n - s) % n;
+                    let tag = RS_TAG + s as i32;
+                    let mut b = comm.builder();
+                    b.send(next, BufSlice::new(wbuf, send_c * elems, elems), tag, COMM_WORLD);
+                    b.recv_deferred(
+                        SrcSel::Rank(prev),
+                        TagSel::Tag(tag),
+                        COMM_WORLD,
+                        BufSlice::new(sbuf, s * elems, elems),
+                    )
+                    .expect("concrete selectors");
+                    b.build(ctx).expect("reduce-scatter plan build")
+                })
+                .collect();
+
+            let t0 = ctx.now();
+            for _iter in 0..iters {
+                for (s, plan) in steps.iter().enumerate() {
+                    // Step 0 rides the init kernel (reset all chunks to
+                    // this rank's own contribution); step s >= 1 rides
+                    // the add kernel folding the chunk staged at step
+                    // s-1 into the chunk this step sends.
+                    let spec = if s == 0 {
+                        KernelSpec {
+                            name: "rs_init".into(),
+                            flops: 0,
+                            bytes: 2 * 4 * (n * elems) as u64,
+                            payload: KernelPayload::Fn(Box::new(move |w, _| {
+                                let b = w.bufs.get_mut(wbuf);
+                                for c in 0..n {
+                                    for j in 0..elems {
+                                        b[c * elems + j] = payload(rank, c, j);
+                                    }
+                                }
+                            })),
+                        }
+                    } else {
+                        let fold_c = (rank + n - s) % n;
+                        KernelSpec {
+                            name: "rs_add".into(),
+                            flops: elems as u64,
+                            bytes: 3 * 4 * elems as u64,
+                            payload: KernelPayload::Fn(Box::new(move |w, _| {
+                                let (dst, src) =
+                                    (fold_c * elems, (s - 1) * elems);
+                                for j in 0..elems {
+                                    let x = w.bufs.get(sbuf)[src + j];
+                                    w.bufs.get_mut(wbuf)[dst + j] += x;
+                                }
+                            })),
+                        }
+                    };
+                    let round = plan.round(ctx, vec![spec]).expect("reduce-scatter round");
+                    plan.complete(ctx, round).expect("reduce-scatter complete");
+                }
+                // Final fold: the chunk staged by the last step is this
+                // rank's owned chunk (rank + 1) % n. It rides a bare
+                // stream kernel, so KT must drain its queues first —
+                // Host/ST are already ordered (waitall / waitValue64).
+                for plan in &steps {
+                    comm.drain_if_kt(ctx, plan, "reduce-scatter");
+                }
+                let own = (rank + 1) % n;
+                host_enqueue(
+                    ctx,
+                    comm.sid,
+                    StreamOp::Kernel(KernelSpec {
+                        name: "rs_fold".into(),
+                        flops: elems as u64,
+                        bytes: 3 * 4 * elems as u64,
+                        payload: KernelPayload::Fn(Box::new(move |w, _| {
+                            let (dst, src) = (own * elems, (n - 2) * elems);
+                            for j in 0..elems {
+                                let x = w.bufs.get(sbuf)[src + j];
+                                w.bufs.get_mut(wbuf)[dst + j] += x;
+                            }
+                        })),
+                    }),
+                );
+                stream_synchronize(ctx, comm.sid);
+            }
+            times2.record(rank, ctx.now() - t0);
+            comm.finish(ctx, "reduce-scatter");
+        })
+        .context("reduce-scatter run failed")?;
+
+        // Reference: rank r's owned chunk (r+1) % n holds the full sum
+        // over ranks; the other chunks hold partial sums and are not
+        // part of the reduce-scatter contract.
+        let pairs = work.iter().enumerate().flat_map(|(r, wb)| {
+            let got = out.world.bufs.get(*wb);
+            let own = (r + 1) % n;
+            (0..elems).map(move |j| {
+                let expect: f32 = (0..n).map(|src| payload(src, own, j)).sum();
+                (got[own * elems + j], expect)
+            })
+        });
+        let validation = check_exact(pairs, |i| {
+            let (r, j) = (i / elems, i % elems);
+            format!("reduce-scatter rank {r} owned chunk elem {j}")
+        });
+        Ok(scenario_run(&mut out, &times, validation))
+    }
+}

@@ -165,13 +165,19 @@ pub fn per_queue_stats(world: &World) -> Vec<QueueSlotStats> {
 
 /// Assemble the [`ScenarioRun`] summary every workload returns: the
 /// max-over-ranks figure of merit plus the run's metrics, engine stats,
-/// and per-queue-slot DWQ counters.
-pub fn scenario_run(out: &RunOutcome, times: &Timers, validation: Validation) -> ScenarioRun {
+/// per-queue-slot DWQ counters, and — when the run recorded a trace —
+/// the achieved-overlap and critical-path analytics. Takes the outcome
+/// by `&mut` to move the trace buffer out instead of cloning it.
+pub fn scenario_run(out: &mut RunOutcome, times: &Timers, validation: Validation) -> ScenarioRun {
+    let a = out.take_analytics();
     ScenarioRun {
         time_ns: times.max_ns(),
         metrics: out.world.metrics.clone(),
         stats: out.stats.clone(),
         validation,
         per_queue: per_queue_stats(&out.world),
+        overlap: a.overlap,
+        crit: a.crit,
+        trace: a.trace,
     }
 }

@@ -6,11 +6,20 @@ use super::campaign::{json_parses, run_campaign, CampaignSpec};
 use super::{by_name, grid_for, names, registry, ScenarioCfg, Validation};
 
 #[test]
-fn registry_has_seven_unique_workloads() {
+fn registry_has_eight_unique_workloads() {
     let names = names();
     assert_eq!(
         names,
-        vec!["faces", "halo3d", "allreduce", "alltoall", "incast", "allgather", "halograph"]
+        vec![
+            "faces",
+            "halo3d",
+            "allreduce",
+            "alltoall",
+            "incast",
+            "allgather",
+            "halograph",
+            "reduce-scatter"
+        ]
     );
     for n in &names {
         let w = by_name(n).expect("by_name must resolve every registry name");
@@ -62,6 +71,8 @@ fn validated_workloads_check_data_on_mixed_topology() {
         ("allgather", "kt"),
         ("halograph", "st"),
         ("halograph", "kt"),
+        ("reduce-scatter", "st"),
+        ("reduce-scatter", "kt"),
     ] {
         let w = by_name(name).unwrap();
         let cfg = ScenarioCfg::smoke(variant, 2, 2, 40);

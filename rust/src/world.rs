@@ -277,6 +277,11 @@ pub struct World {
     pub fault: Option<FaultState>,
     /// Armed-DWQ-descriptor registry feeding the stall inspector.
     pub armed: ArmedRegistry,
+    /// Trace-recorder capacity request (events); `None` (the default)
+    /// leaves tracing off. The coordinator's run loop installs a
+    /// [`crate::obs::TraceBuf`] of this capacity before the clock starts
+    /// (see [`crate::obs`] for the determinism contract).
+    pub trace_cap: Option<usize>,
 }
 
 impl World {
@@ -314,6 +319,7 @@ impl World {
             rank_finish: Vec::new(),
             fault: None,
             armed: ArmedRegistry::default(),
+            trace_cap: None,
         }
     }
 

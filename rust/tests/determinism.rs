@@ -421,3 +421,79 @@ fn per_queue_report_split_is_thread_count_invariant() {
     assert_eq!(serial.to_json(), parallel.to_json(), "1 thread vs 3 threads");
     assert_eq!(serial.to_markdown(), parallel.to_markdown());
 }
+
+/// Trace byte-identity (the obs tentpole): the Chrome-trace export of a
+/// traced run is byte-identical across reruns and across sweep
+/// worker-thread counts, with cost-model jitter live. Trace emissions
+/// happen under the engine lock in token order, so worker scheduling
+/// cannot reorder or interleave them.
+#[test]
+fn chrome_trace_bytes_are_thread_count_and_rerun_invariant() {
+    let variants = [Variant::Host, Variant::StreamTriggered, Variant::KernelTriggered];
+    let jobs: Vec<FacesConfig> = variants.into_iter().map(|v| jittered_cfg(v, 17)).collect();
+    let run = |threads: usize| -> Vec<String> {
+        sweep::map(&jobs, threads, |_, cfg| {
+            let r = run_faces(cfg).unwrap();
+            stmpi::obs::chrome_trace(&r.trace.expect("tracing is on by default"))
+        })
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    let parallel_again = run(4);
+    assert_eq!(serial, parallel, "1 thread vs 4 threads");
+    assert_eq!(parallel, parallel_again, "repeated parallel runs");
+    for t in &serial {
+        assert!(
+            stmpi::workloads::campaign::json_parses(t),
+            "exported Chrome trace must be valid JSON"
+        );
+    }
+}
+
+/// Campaign trace export: with `trace` set, every ran cell embeds a
+/// Chrome-trace JSON that parses, plus overlap/critical-path columns —
+/// and the whole report (traces included) is byte-identical across
+/// sweep worker-thread counts and reruns. Doubles as the end-to-end
+/// exercise of the reduce-scatter workload across its variants.
+#[test]
+fn campaign_trace_export_is_thread_count_invariant() {
+    let mut spec = CampaignSpec {
+        workloads: vec!["reduce-scatter".into()],
+        variants: vec!["baseline".into(), "st".into(), "kt".into()],
+        elems: vec![32],
+        topos: vec![(2, 1), (2, 2)],
+        seeds: vec![5, 9],
+        iters: 2,
+        jitter: 0.01,
+        threads: Some(1),
+        trace: Some("TRACE".into()),
+        ..CampaignSpec::default()
+    };
+    let serial = run_campaign(&spec).unwrap();
+    assert!(serial.all_ok(), "reduce-scatter cells must validate:\n{}", serial.to_markdown());
+    assert!(serial.ran_cells() >= 6, "the grid must actually run");
+    for c in serial.cells.iter().filter(|c| c.summary.is_some()) {
+        let t = c.trace_json.as_ref().expect("trace export was requested for every ran cell");
+        assert!(
+            stmpi::workloads::campaign::json_parses(t),
+            "{}: embedded Chrome trace must be valid JSON",
+            c.variant
+        );
+        assert!(
+            c.overlap_pct.is_some(),
+            "{}: an inter-node cell must report achieved overlap",
+            c.variant
+        );
+        assert!(c.crit.is_some(), "{}: ran cells must report a critical path", c.variant);
+    }
+    spec.threads = Some(3);
+    let parallel = run_campaign(&spec).unwrap();
+    let parallel_again = run_campaign(&spec).unwrap();
+    assert_eq!(serial.to_json(), parallel.to_json(), "1 thread vs 3 threads");
+    assert_eq!(parallel.to_json(), parallel_again.to_json(), "repeated parallel runs");
+    let traces = |r: &stmpi::workloads::CampaignReport| -> Vec<Option<String>> {
+        r.cells.iter().map(|c| c.trace_json.clone()).collect()
+    };
+    assert_eq!(traces(&serial), traces(&parallel), "trace bytes: 1 thread vs 3 threads");
+    assert_eq!(traces(&parallel), traces(&parallel_again), "trace bytes: reruns");
+}

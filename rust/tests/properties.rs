@@ -528,3 +528,85 @@ fn prop_chaos_plans_validate_or_stall_never_panic() {
     // both outcomes satisfy the contract. Keep the counter observable.
     let _ = stalled;
 }
+
+/// Trace-analytics invariants across the whole registry: every traced
+/// run (recording defaults on) carries a non-empty trace; achieved
+/// overlap is present on inter-node cells with `hidden <= wire` (so
+/// `pct() ∈ [0, 100]`); and the critical-path buckets exactly partition
+/// the decomposed window — no instant double-counted, none dropped.
+#[test]
+fn prop_overlap_bounded_and_crit_path_partitions_makespan() {
+    use stmpi::workloads::{registry, ScenarioCfg};
+
+    let mut traced = 0u64;
+    for w in registry() {
+        for &variant in w.variants() {
+            // Two single-rank nodes: every payload crosses the wire.
+            let cfg = ScenarioCfg::smoke(variant, 2, 1, 16);
+            if w.configure(&cfg).is_err() {
+                continue;
+            }
+            let r = w
+                .run(&cfg)
+                .unwrap_or_else(|e| panic!("{}::{variant}: {e:#}", w.name()));
+            assert!(r.validation.ok(), "{}::{variant}: {}", w.name(), r.validation.label());
+            let tb = r
+                .trace
+                .as_ref()
+                .unwrap_or_else(|| panic!("{}::{variant}: tracing defaults on", w.name()));
+            assert!(!tb.events.is_empty(), "{}::{variant}: empty trace", w.name());
+            traced += 1;
+            let o = r.overlap.unwrap_or_else(|| {
+                panic!("{}::{variant}: a 2-node cell must record wire egress", w.name())
+            });
+            assert!(
+                o.hidden_ns <= o.wire_ns,
+                "{}::{variant}: hidden {} > wire {}",
+                w.name(),
+                o.hidden_ns,
+                o.wire_ns
+            );
+            let pct = o.pct();
+            assert!(
+                (0.0..=100.0).contains(&pct),
+                "{}::{variant}: overlap {pct}% out of range",
+                w.name()
+            );
+            let cp = r.crit.expect("traced runs carry a critical path");
+            let sum = cp.compute_ns
+                + cp.wire_ns
+                + cp.trigger_ns
+                + cp.backpressure_ns
+                + cp.retransmit_ns
+                + cp.other_ns;
+            assert_eq!(
+                sum, cp.total_ns,
+                "{}::{variant}: buckets must partition the window",
+                w.name()
+            );
+        }
+    }
+    assert!(traced >= 20, "the grid must actually run, got {traced}");
+}
+
+/// The paper's premise as an invariant: on an inter-node faces cell the
+/// triggered variants hide at least as much wire time behind kernels as
+/// the host baseline, whose host-driven round trips serialize compute
+/// against the fabric.
+#[test]
+fn prop_triggered_overlap_at_least_host_on_faces() {
+    let run = |variant| {
+        let mut cfg = FacesConfig::smoke(2, 1, (2, 1, 1));
+        cfg.cost = cost();
+        cfg.variant = variant;
+        cfg.g = 16;
+        cfg.inner = 6;
+        let r = run_faces(&cfg).unwrap();
+        r.overlap.expect("inter-node faces crosses the wire").pct()
+    };
+    let host = run(Variant::Host);
+    let st = run(Variant::StreamTriggered);
+    let kt = run(Variant::KernelTriggered);
+    assert!(st >= host, "ST overlap {st:.1}% must be >= host {host:.1}%");
+    assert!(kt >= host, "KT overlap {kt:.1}% must be >= host {host:.1}%");
+}

@@ -1,0 +1,51 @@
+//! The `STMPI_TRACE=0` off-switch, isolated in its own test binary:
+//! `obs::recording_enabled` reads the process environment live, so this
+//! file keeps the env flip away from the (parallel-threaded) tests in
+//! `determinism.rs` that rely on recording being on. Cargo runs
+//! integration-test binaries one at a time, and this binary holds a
+//! single test, so the mutation cannot race anything.
+
+use stmpi::costmodel::presets;
+use stmpi::faces::{run_faces, FacesConfig, Variant};
+use stmpi::workloads::campaign::{run_campaign, CampaignSpec};
+
+/// `STMPI_TRACE=0` is a hard off-switch: no buffer is attached, no
+/// analytics are computed, no export is emitted, and the report
+/// surfaces still render (with `null` JSON values and `--` table
+/// cells) — runs themselves are unaffected.
+#[test]
+fn trace_off_switch_yields_no_buffers_and_null_columns() {
+    std::env::set_var("STMPI_TRACE", "0");
+    let mut cfg = FacesConfig::smoke(2, 2, (4, 1, 1));
+    cfg.variant = Variant::StreamTriggered;
+    cfg.cost = presets::frontier_like_jittered();
+    let faces = run_faces(&cfg);
+    let campaign = run_campaign(&CampaignSpec {
+        workloads: vec!["allgather".into()],
+        variants: vec!["st".into()],
+        elems: vec![32],
+        topos: vec![(2, 1)],
+        seeds: vec![5],
+        iters: 2,
+        jitter: 0.0,
+        threads: Some(1),
+        trace: Some("TRACE".into()),
+        ..CampaignSpec::default()
+    });
+    std::env::remove_var("STMPI_TRACE");
+
+    let faces = faces.unwrap();
+    assert!(faces.trace.is_none(), "STMPI_TRACE=0 must disable recording");
+    assert!(faces.overlap.is_none(), "no trace, no overlap analytics");
+    assert!(faces.crit.is_none(), "no trace, no critical path");
+
+    let report = campaign.unwrap();
+    assert!(report.all_ok(), "{}", report.to_markdown());
+    for c in report.cells.iter().filter(|c| c.summary.is_some()) {
+        assert!(c.trace_json.is_none(), "nothing to export when recording is off");
+        assert!(c.overlap_pct.is_none(), "overlap column must be absent");
+        assert!(c.crit.is_none(), "crit-path column must be absent");
+    }
+    assert!(report.to_json().contains("\"overlap_pct\": null"));
+    assert!(report.to_json().contains("\"critical_path\": null"));
+}

@@ -1,0 +1,44 @@
+//! The committed sample Chrome trace (`tests/data/TRACE_sample.json`)
+//! documents the export schema for tooling and must always stay loadable
+//! by Perfetto / `chrome://tracing` — and faithful to what the live
+//! exporter actually emits.
+
+use stmpi::faces::{run_faces, FacesConfig, Variant};
+
+/// Schema markers every export carries: container keys, the three
+/// trace-event phases, the process/thread naming metadata, and the
+/// facility tracks the analytics read.
+const MARKERS: &[&str] = &[
+    "\"displayTimeUnit\": \"ns\"",
+    "\"traceEvents\": [",
+    "\"ph\": \"M\"",
+    "\"ph\": \"X\"",
+    "\"ph\": \"i\"",
+    "process_name",
+    "thread_name",
+    "wire egress",
+];
+
+#[test]
+fn committed_sample_chrome_trace_parses() {
+    let sample = include_str!("data/TRACE_sample.json");
+    assert!(
+        stmpi::workloads::campaign::json_parses(sample),
+        "committed TRACE_sample.json must be valid JSON"
+    );
+    for m in MARKERS {
+        assert!(sample.contains(m), "committed sample lost schema marker {m}");
+    }
+}
+
+#[test]
+fn live_export_matches_sample_schema() {
+    let mut cfg = FacesConfig::smoke(2, 1, (2, 1, 1));
+    cfg.variant = Variant::StreamTriggered;
+    let r = run_faces(&cfg).unwrap();
+    let live = stmpi::obs::chrome_trace(&r.trace.expect("tracing defaults on"));
+    assert!(stmpi::workloads::campaign::json_parses(&live), "live export must be valid JSON");
+    for m in MARKERS {
+        assert!(live.contains(m), "live export lost schema marker {m}");
+    }
+}
