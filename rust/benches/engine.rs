@@ -372,6 +372,27 @@ fn bench_sweep_scaling() -> (usize, f64) {
     (threads, if dtn > 0.0 { dt1 / dtn } else { 1.0 })
 }
 
+/// Campaign-cell throughput: many tiny independent scenario cells (the
+/// 100K-cell campaign shape) driven through the workload runner, so the
+/// world snapshot-and-reset path — per-thread world pool, recycled event
+/// arenas, recycled buffer backing stores — is what gets measured. Each
+/// sweep worker cold-builds one world for the shared reuse key and then
+/// leases/resets it for every subsequent cell it claims.
+fn bench_cells_per_s(cells: usize, threads: usize) -> f64 {
+    use stmpi::workloads::{by_name, ScenarioCfg};
+    let w = by_name("incast").expect("incast workload registered");
+    let seeds: Vec<u64> = (1..=cells as u64).collect();
+    let t0 = Instant::now();
+    let times = sweep::map(&seeds, threads, |_, &seed| {
+        let mut cfg = ScenarioCfg::smoke("st", 2, 1, 4);
+        cfg.iters = 1;
+        cfg.seed = seed;
+        w.run(&cfg).unwrap().time_ns
+    });
+    assert_eq!(times.len(), cells);
+    rate(cells as u64, t0.elapsed().as_secs_f64())
+}
+
 // ---------------------------------------------------------------------
 // Reporting
 // ---------------------------------------------------------------------
@@ -402,7 +423,9 @@ fn write_json(
     body.push_str(
         "  \"note\": \"legacy_* entries are measured from an in-binary replica of the pre-PR1 \
          event core (heap of boxed closures, unordered waiter scan); speedup_* = new/legacy on \
-         the same machine. Regenerate with: cargo bench --bench engine\",\n",
+         the same machine. cells_per_s_* measure campaign-cell throughput over the world \
+         snapshot-and-reset path (tiny incast cells). Regenerate with: cargo bench --bench \
+         engine\",\n",
     );
     for (k, v) in pairs {
         body.push_str(&format!("  \"{k}\": {},\n", json_f(*v)));
@@ -463,6 +486,17 @@ fn main() {
     let (threads, scaling) = bench_sweep_scaling();
     println!("sweep scaling:         {scaling:.2}x on {threads} threads (4 sims)");
 
+    // Campaign-cell throughput over the snapshot-and-reset path: the
+    // 1K-cell curve maps thread scaling, the 100K-cell point is the
+    // headline campaign shape from the reset-lifecycle pass.
+    let cells_1k: Vec<(usize, f64)> =
+        [1usize, 2, 4, 8].iter().map(|&t| (t, bench_cells_per_s(1_000, t))).collect();
+    for &(t, r) in &cells_1k {
+        println!("campaign cells (1K, {t} thr):   {r:>10.0} cells/s");
+    }
+    let cells_100k_t8 = bench_cells_per_s(100_000, 8);
+    println!("campaign cells (100K, 8 thr): {cells_100k_t8:>10.0} cells/s");
+
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .expect("rust/ has a parent")
@@ -507,6 +541,11 @@ fn main() {
             ("faces_fig8_sims_per_s", sims),
             ("faces_fig8_rank_iters_per_s_traced", traced_rank_iters),
             ("trace_record_overhead_pct", trace_overhead_pct),
+            ("cells_per_s_1k_t1", cells_1k[0].1),
+            ("cells_per_s_1k_t2", cells_1k[1].1),
+            ("cells_per_s_1k_t4", cells_1k[2].1),
+            ("cells_per_s_1k_t8", cells_1k[3].1),
+            ("cells_per_s_100k_t8", cells_100k_t8),
         ],
         threads,
         scaling,

@@ -7,13 +7,15 @@
 pub mod config;
 pub mod report;
 
+use std::cell::RefCell;
+
 use crate::costmodel::CostModel;
 use crate::gpu::Gpu;
 use crate::mpi::Proc;
 use crate::nic::Nic;
 use crate::obs::{self, CritPath, Overlap, TraceBuf, TraceMeta};
 use crate::sim::{Engine, HostCtx, SimError, SimStats, StallDetail};
-use crate::world::{ComputeMode, Topology, World};
+use crate::world::{ComputeMode, Topology, World, WorldSnapshot};
 
 /// Build a fully-wired world: one NIC per node, one GPU + one MPI process
 /// per rank (the paper's one-rank-per-GPU mapping, §V-C).
@@ -32,6 +34,65 @@ pub fn build_world(cost: CostModel, topo: Topology) -> World {
         w.procs.push(Proc::new(r, node, r));
     }
     w
+}
+
+/// Max worlds parked per worker thread. A campaign worker touches a
+/// handful of (workload, variant, topology, queues, dwq-slots) tuples;
+/// 16 comfortably covers the grids in [`crate::workloads::campaign`]
+/// without hoarding memory.
+const WORLD_POOL_CAP: usize = 16;
+
+std::thread_local! {
+    /// Per-thread pool of reset worlds keyed by reuse key (see
+    /// `workloads::scaffold`): build once per key, snapshot, then
+    /// reset-and-release per cell. Thread-local so sweep workers never
+    /// contend; `sim::sweep::map` with one thread runs on the caller
+    /// thread, so single-threaded campaigns keep their pool across calls.
+    static WORLD_POOL: RefCell<Vec<(String, World, WorldSnapshot)>> =
+        const { RefCell::new(Vec::new()) };
+}
+
+/// Lease a world for `key`: a pooled world is rewound via
+/// [`World::reset`] — same wiring and buffer backing stores, fresh run
+/// state, byte-identical behavior to a cold build (pinned by the
+/// reset-equivalence blitz in `rust/tests/properties.rs`). On a pool
+/// miss the world is built cold via [`build_world`]. Tracing capacity is
+/// re-derived at lease time so the `STMPI_TRACE` / recording-override
+/// state of the *calling* thread wins, exactly as in a cold build.
+pub fn lease_world(key: &str, cost: CostModel, topo: Topology) -> World {
+    let hit = WORLD_POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        pool.iter().position(|(k, _, _)| k == key).map(|i| pool.remove(i))
+    });
+    match hit {
+        Some((_, mut w, snap)) => {
+            w.reset(&snap);
+            w.trace_cap = obs::recording_enabled().then_some(obs::DEFAULT_CAP);
+            w
+        }
+        None => build_world(cost, topo),
+    }
+}
+
+/// Return a finished world to this thread's pool under `key`, reset and
+/// ready for the next [`lease_world`]. At most [`WORLD_POOL_CAP`]
+/// entries are kept; the oldest is evicted.
+pub fn stash_world(key: &str, mut w: World) {
+    let snap = w.snapshot();
+    w.reset(&snap);
+    WORLD_POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        pool.push((key.to_string(), w, snap));
+        if pool.len() > WORLD_POOL_CAP {
+            pool.remove(0);
+        }
+    });
+}
+
+/// Drop every pooled world on this thread. Tests call this to force the
+/// cold-build path (and then rerun to exercise the reset path).
+pub fn clear_world_pool() {
+    WORLD_POOL.with(|p| p.borrow_mut().clear());
 }
 
 /// Result of a cluster run.
@@ -182,6 +243,25 @@ mod tests {
         assert_eq!(w.procs.len(), 8);
         assert_eq!(w.procs[5].node, 2);
         assert_eq!(w.gpus[5].node, 2);
+    }
+
+    #[test]
+    fn world_pool_round_trip_reuses_wiring() {
+        clear_world_pool();
+        let topo = Topology::new(3, 2);
+        let w = lease_world("pool-test-key", presets::frontier_like(), topo.clone());
+        assert_eq!(w.nics.len(), 3);
+        assert_eq!(w.gpus.len(), 6);
+        stash_world("pool-test-key", w);
+        // Same key leases the pooled world (reset, wiring intact)...
+        let w2 = lease_world("pool-test-key", presets::frontier_like(), topo.clone());
+        assert_eq!(w2.nics.len(), 3);
+        assert_eq!(w2.procs.len(), 6);
+        assert!(w2.queues.is_empty() && w2.requests.is_empty());
+        // ...and the pool is now empty again: a different key builds cold.
+        let w3 = lease_world("other-key", presets::frontier_like(), Topology::new(2, 1));
+        assert_eq!(w3.nics.len(), 2);
+        clear_world_pool();
     }
 
     #[test]

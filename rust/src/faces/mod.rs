@@ -41,7 +41,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{build_world, run_cluster};
+use crate::coordinator::{lease_world, run_cluster, stash_world};
 use crate::costmodel::CostModel;
 use crate::gpu::{self, host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
 use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
@@ -313,7 +313,20 @@ pub fn run_faces(cfg: &FacesConfig) -> Result<FacesResult> {
     }
 
     let topo = Topology::new(cfg.nodes, cfg.ranks_per_node);
-    let mut world = build_world(cfg.cost.clone(), topo);
+    // World-reuse key (see `coordinator::lease_world`): everything that
+    // shapes world structure or lease-time setup — the grid edge decides
+    // buffer sizes, the compute mode decides whether a Runtime is loaded.
+    // Seed and faults are per-run state, reinstalled below on every lease.
+    let reuse = format!(
+        "faces/{}/{}x{}/g{}/{:?}/{:?}",
+        cfg.variant.name(),
+        cfg.nodes,
+        cfg.ranks_per_node,
+        cfg.g,
+        cfg.compute,
+        cfg.cost
+    );
+    let mut world = lease_world(&reuse, cfg.cost.clone(), topo);
     world.compute = cfg.compute;
     if real {
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -381,7 +394,7 @@ pub fn run_faces(cfg: &FacesConfig) -> Result<FacesResult> {
     };
 
     let a = out.take_analytics();
-    Ok(FacesResult {
+    let result = FacesResult {
         rank_time,
         time_ns,
         metrics: out.world.metrics.clone(),
@@ -390,7 +403,11 @@ pub fn run_faces(cfg: &FacesConfig) -> Result<FacesResult> {
         overlap: a.overlap,
         crit: a.crit,
         trace: a.trace,
-    })
+    };
+    // Clean runs park the world for the next same-shape cell; error paths
+    // return early above, so a stalled world is dropped, never pooled.
+    stash_world(&reuse, out.world);
+    Ok(result)
 }
 
 /// The per-rank host program (what the application process runs).

@@ -277,6 +277,14 @@ impl Gpu {
     pub fn new(node: usize) -> Self {
         Self { node, streams: Vec::new() }
     }
+
+    /// Rewind to the just-built state (part of
+    /// [`crate::world::World::reset`]): streams hold per-run cell ids
+    /// and op deques, so they are dropped; the next run re-creates them
+    /// with identical indices and cell ids.
+    pub fn reset(&mut self) {
+        self.streams.clear();
+    }
 }
 
 /// Create a stream on `gpu`; returns its id.

@@ -128,6 +128,18 @@ impl Proc {
             seen_seqs: HashSet::new(),
         }
     }
+
+    /// Rewind to the just-built state, keeping the matching-engine
+    /// deque/set allocations for the next run (part of
+    /// [`crate::world::World::reset`]). `posted` entries hold cell ids
+    /// of the previous run's core, so they must not survive; clearing
+    /// keeps capacity, which is unobservable.
+    pub fn reset(&mut self) {
+        self.posted.clear();
+        self.unexpected.clear();
+        self.progress = ProgressThread::default();
+        self.seen_seqs.clear();
+    }
 }
 
 /// An MPI request: completion is a cell reaching 1.

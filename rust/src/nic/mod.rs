@@ -176,6 +176,23 @@ impl Nic {
             dwq_released: None,
         }
     }
+
+    /// Rewind to the just-built state (part of
+    /// [`crate::world::World::reset`]): port busy-until times, the full
+    /// hardware counter pool, and the whole DWQ slot pool come back —
+    /// including slots a leaked or force-freed descriptor still held —
+    /// because the next run gets a fresh engine core and fresh cells.
+    /// `dwq_released` refers to a cell of the *previous* run's core, so
+    /// it must be dropped here (the next run lazily re-creates it with
+    /// an identical cell id, keeping reset runs byte-identical to cold
+    /// ones).
+    pub fn reset(&mut self) {
+        self.port = Port::default();
+        self.counters_allocated = 0;
+        self.counters_in_use = 0;
+        self.dwq_posted = 0;
+        self.dwq_released = None;
+    }
 }
 
 /// Allocate a NIC hardware counter, mapped GPU-visible (an engine cell).

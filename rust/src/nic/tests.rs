@@ -397,3 +397,45 @@ fn triggered_recv_releases_dwq_slot_on_fire() {
     let (w, _) = eng.run().unwrap();
     assert_eq!(w.metrics.triggered_recvs, 1);
 }
+
+/// Snapshot-and-reset leak audit at the NIC layer: exhaust the hardware
+/// counter pool and hit `DwqFull` backpressure, carry the exhausted
+/// world through `World::reset`, and verify the next run starts from a
+/// full pool — no counter or DWQ slot leaks across the reset boundary.
+#[test]
+fn reset_restores_counter_and_dwq_capacity_after_exhaustion() {
+    let mut cost = presets::frontier_like();
+    cost.jitter_sigma = 0.0;
+    cost.nic_counter_limit = 3;
+    cost.dwq_slots_per_nic = 2;
+    let eng = Engine::new(build_world(cost, Topology::new(2, 1)), 1);
+    eng.setup(|w, core| {
+        for i in 0..3 {
+            assert!(alloc_counter(w, core, 0, "x").is_some(), "counter {i} fits the pool");
+        }
+        assert!(alloc_counter(w, core, 0, "over").is_none(), "pool of 3 must exhaust");
+        assert!(dwq_reserve(w, core, 0).is_ok());
+        assert!(dwq_reserve(w, core, 0).is_ok());
+        assert_eq!(dwq_reserve(w, core, 0), Err(DwqFull { node: 0 }), "DWQ backpressure");
+    });
+    let (mut w, _) = eng.run().unwrap();
+    assert_eq!(w.nics[0].counters_in_use, 3);
+    assert_eq!(w.nics[0].dwq_posted, 2);
+    let snap = w.snapshot();
+    w.reset(&snap);
+    assert_eq!(w.nics[0].counters_allocated, 0, "reset returns the whole counter pool");
+    assert_eq!(w.nics[0].counters_in_use, 0);
+    assert_eq!(w.nics[0].dwq_posted, 0, "reset returns every DWQ slot");
+    // The reset world offers full capacity again (fresh core, fresh
+    // lazily-created release cell).
+    let eng = Engine::new(w, 2);
+    eng.setup(|w, core| {
+        for i in 0..3 {
+            assert!(alloc_counter(w, core, 0, "again").is_some(), "counter {i} after reset");
+        }
+        assert!(dwq_reserve(w, core, 0).is_ok());
+        assert!(dwq_reserve(w, core, 0).is_ok());
+        assert_eq!(dwq_reserve(w, core, 0), Err(DwqFull { node: 0 }));
+    });
+    eng.run().unwrap();
+}

@@ -295,11 +295,32 @@ pub struct TraceBuf {
 /// thousand events; this bound keeps a pathological run at ~40 MB.
 pub const DEFAULT_CAP: usize = 1 << 20;
 
+std::thread_local! {
+    /// Per-thread override of the `STMPI_TRACE` switch (see
+    /// [`set_recording_override`]).
+    static RECORD_OVERRIDE: std::cell::Cell<Option<bool>> =
+        const { std::cell::Cell::new(None) };
+}
+
+/// Override [`recording_enabled`] for the current thread: `Some(on)`
+/// forces the switch, `None` restores the `STMPI_TRACE` environment
+/// default. Thread-local on purpose — tests that exercise both the
+/// traced and untraced paths (the reset-equivalence blitz) can flip it
+/// without racing concurrently running tests the way a process-global
+/// `set_var` would.
+pub fn set_recording_override(on: Option<bool>) {
+    RECORD_OVERRIDE.with(|c| c.set(on));
+}
+
 /// The compile-free runtime off-switch for workload-level recording:
 /// `STMPI_TRACE=0` disables it (overlap/critical-path report columns
 /// render as absent). Any other value — including unset — leaves the
 /// default recording on, so campaign reports always carry `overlap_pct`.
+/// A thread-local [`set_recording_override`] outranks the environment.
 pub fn recording_enabled() -> bool {
+    if let Some(on) = RECORD_OVERRIDE.with(|c| c.get()) {
+        return on;
+    }
     std::env::var("STMPI_TRACE").map(|v| v != "0").unwrap_or(true)
 }
 

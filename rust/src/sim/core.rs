@@ -190,6 +190,51 @@ pub struct SimStats {
     pub max_heap: usize,
 }
 
+/// The recyclable container allocations of a [`Core`]: event heap,
+/// microtask queue, callback arena, cell table, host-name table — the
+/// structures whose growth dominates per-run setup cost in a sweep.
+/// [`Core::with_arena`] adopts one (cleared), [`Core::into_arena`]
+/// returns it after a run; the per-thread recycler in [`super::sweep`]
+/// carries arenas between back-to-back cells so a 100K-cell campaign
+/// stops re-growing them from empty every run. Purely an allocation
+/// cache: a recycled arena is observationally identical to
+/// `CoreArena::default()` (pinned by the reset-equivalence blitz).
+pub struct CoreArena<W> {
+    heap: BinaryHeap<Ev>,
+    micro: VecDeque<SmallEv>,
+    cb_slots: Vec<Option<Cb<W>>>,
+    cb_free: Vec<u32>,
+    cells: Vec<Cell<W>>,
+    host_names: Vec<String>,
+}
+
+// Manual impl: a derive would demand `W: Default` for no reason.
+impl<W> Default for CoreArena<W> {
+    fn default() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            micro: VecDeque::new(),
+            cb_slots: Vec::new(),
+            cb_free: Vec::new(),
+            cells: Vec::new(),
+            host_names: Vec::new(),
+        }
+    }
+}
+
+impl<W> CoreArena<W> {
+    /// Drop all contents (closures, cell names, pending events), keeping
+    /// the container allocations.
+    fn clear(&mut self) {
+        self.heap.clear();
+        self.micro.clear();
+        self.cb_slots.clear();
+        self.cb_free.clear();
+        self.cells.clear();
+        self.host_names.clear();
+    }
+}
+
 pub struct Core<W> {
     pub(crate) now: Time,
     pub(crate) seq: u64,
@@ -209,18 +254,42 @@ pub struct Core<W> {
 
 impl<W> Core<W> {
     pub(crate) fn new(seed: u64) -> Self {
+        Self::with_arena(seed, CoreArena::default())
+    }
+
+    /// Build a core adopting `arena`'s container allocations. The arena
+    /// is cleared first, so a recycled arena behaves exactly like a
+    /// fresh one — same cell ids, same event order, same stats.
+    pub(crate) fn with_arena(seed: u64, mut arena: CoreArena<W>) -> Self {
+        arena.clear();
         Self {
             now: 0,
             seq: 0,
-            heap: BinaryHeap::new(),
-            micro: VecDeque::new(),
-            cbs: CbSlab::new(),
-            cells: Vec::new(),
+            heap: arena.heap,
+            micro: arena.micro,
+            cbs: CbSlab { slots: arena.cb_slots, free: arena.cb_free },
+            cells: arena.cells,
             rng: SplitMix64::new(seed),
             stats: SimStats::default(),
-            host_names: Vec::new(),
+            host_names: arena.host_names,
             trace: None,
         }
+    }
+
+    /// Retire this core's container allocations for reuse by a later
+    /// [`Core::with_arena`] (contents are dropped here — closures may
+    /// close over `Arc`s that must not outlive the run).
+    pub(crate) fn into_arena(self) -> CoreArena<W> {
+        let mut arena = CoreArena {
+            heap: self.heap,
+            micro: self.micro,
+            cb_slots: self.cbs.slots,
+            cb_free: self.cbs.free,
+            cells: self.cells,
+            host_names: self.host_names,
+        };
+        arena.clear();
+        arena
     }
 
     /// Current virtual time (ns).

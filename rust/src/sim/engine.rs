@@ -17,8 +17,9 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
-use super::core::{CellId, Core, HostId, SimStats, SmallEv, Time, WaiterSnapshot};
+use super::core::{CellId, Core, CoreArena, HostId, SimStats, SmallEv, Time, WaiterSnapshot};
 use super::gate::Gate;
+use super::sweep;
 use crate::obs::{Event, ParkKind, TraceBuf};
 
 /// Marker payload used to unwind host threads when the sim aborts.
@@ -181,7 +182,10 @@ impl<W: Send + 'static> Engine<W> {
         Self {
             shared: Arc::new(Shared {
                 inner: Mutex::new(Inner {
-                    core: Core::new(seed),
+                    // Adopt the arena recycled by the previous run on this
+                    // thread (if any) — a pure allocation cache; behavior
+                    // is identical to a cold `Core::new`.
+                    core: Core::with_arena(seed, sweep::recycle_take::<CoreArena<W>>()),
                     world,
                     hosts: Vec::new(),
                     aborted: false,
@@ -294,9 +298,14 @@ impl<W: Send + 'static> Engine<W> {
         match result {
             Ok(()) => {
                 let trace = inner.core.take_trace();
-                Ok((inner.world, inner.core.stats().clone(), trace))
+                let stats = inner.core.stats().clone();
+                sweep::recycle_put(inner.core.into_arena());
+                Ok((inner.world, stats, trace))
             }
-            Err(e) => Err(e),
+            Err(e) => {
+                sweep::recycle_put(inner.core.into_arena());
+                Err(e)
+            }
         }
     }
 

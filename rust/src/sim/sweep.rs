@@ -14,8 +14,42 @@
 //! matter how many worker threads run or how the OS schedules them
 //! (pinned by `rust/tests/determinism.rs`).
 
+use std::any::{Any, TypeId};
+use std::cell::RefCell;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+std::thread_local! {
+    /// Per-worker-thread recycling bin, keyed by concrete type. Holds at
+    /// most one spare value per type — enough to carry a [`crate::sim`]
+    /// event arena (or any other allocation-heavy scratch structure)
+    /// from one sweep cell to the next on the same worker without any
+    /// cross-thread traffic or locking.
+    static RECYCLER: RefCell<HashMap<TypeId, Box<dyn Any>>> = RefCell::new(HashMap::new());
+}
+
+/// Take the recycled spare of type `T` stashed on this thread by a prior
+/// [`recycle_put`], or `T::default()` if none is stashed. Recycled values
+/// must be observationally identical to fresh ones — callers are expected
+/// to clear them on the put or take side (determinism depends on it).
+pub fn recycle_take<T: Default + Any>() -> T {
+    RECYCLER.with(|r| {
+        r.borrow_mut()
+            .remove(&TypeId::of::<T>())
+            .and_then(|b| b.downcast::<T>().ok().map(|b| *b))
+            .unwrap_or_default()
+    })
+}
+
+/// Stash `v` as this thread's spare of type `T` for a later
+/// [`recycle_take`]. An already-stashed spare of the same type is
+/// replaced (the older one is dropped).
+pub fn recycle_put<T: Any>(v: T) {
+    RECYCLER.with(|r| {
+        r.borrow_mut().insert(TypeId::of::<T>(), Box::new(v));
+    });
+}
 
 /// Number of worker threads to use by default: the `STMPI_SWEEP_THREADS`
 /// environment variable if set (>= 1), else the machine's available

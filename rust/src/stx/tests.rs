@@ -1265,3 +1265,74 @@ fn watchdog_retransmit_recovers_a_dropped_payload() {
     assert_eq!(out.world.metrics.retries, 1, "one watchdog retransmit recovered the payload");
     assert_eq!(out.world.metrics.timeouts, 0);
 }
+
+/// Snapshot-and-reset leak audit for the recovery paths: one run
+/// force-frees a timed-out queue, a second run abandons an
+/// armed-but-never-triggered send outright (hosts exit with the
+/// descriptor still armed, so the run completes holding a DWQ slot, two
+/// counters, and an armed-registry entry). `World::reset` must return
+/// every slot and counter and empty the armed registry — and the reused
+/// world must then drive a full send/recv exchange with the whole pool
+/// available again (exhaust → reset → reuse).
+#[test]
+fn reset_reclaims_abandoned_queue_resources_for_reuse() {
+    let mut c = cost();
+    c.dwq_slots_per_nic = 1;
+    let mut w = build_world(c, Topology::new(2, 1));
+    let s1 = w.bufs.alloc_init(vec![1.0; 8]);
+
+    // Run 1: arm a deferred send on the only DWQ slot and never start
+    // the queue. Nobody waits on it, so the run completes "leaking" the
+    // slot, both hardware counters, and the armed descriptor.
+    let out = run_cluster(w, 1, move |rank, ctx| {
+        if rank == 0 {
+            let (_sid, q1) = make_queue(ctx, rank, Variant::StreamTriggered);
+            q1.send(ctx, 1, BufSlice::whole(s1, 8), 1, crate::mpi::COMM_WORLD).unwrap();
+        }
+    })
+    .unwrap();
+    let mut w = out.world;
+    assert_eq!(w.nics[0].counters_in_use, 2, "abandoned queue still holds its counters");
+    assert_eq!(w.nics[0].dwq_posted, 1, "the armed send holds the only DWQ slot");
+    assert_eq!(w.armed.len(), 1, "the descriptor is still registered as armed");
+
+    let snap = w.snapshot();
+    w.reset(&snap);
+    assert_eq!(w.nics[0].counters_in_use, 0, "reset returns the hardware counters");
+    assert_eq!(w.nics[0].dwq_posted, 0, "reset returns the DWQ slot");
+    assert!(w.armed.is_empty(), "reset empties the armed registry");
+
+    // Run 2 on the SAME world: a timed-out queue force-frees (the other
+    // recovery path), then the full pool carries a complete exchange.
+    let s2 = w.bufs.alloc_init(vec![2.0; 8]);
+    let s3 = w.bufs.alloc_init(vec![3.0; 8]);
+    let d3 = w.bufs.alloc(8);
+    let out = run_cluster(w, 2, move |rank, ctx| {
+        if rank == 0 {
+            let (_sid, q1) = make_queue(ctx, rank, Variant::StreamTriggered);
+            q1.send(ctx, 1, BufSlice::whole(s2, 8), 1, crate::mpi::COMM_WORLD)
+                .expect("the reset world's DWQ slot is free");
+            let cancelled = q1.free_after_timeout(ctx).expect("force-free");
+            assert_eq!(cancelled, 1, "the armed send is cancelled, crediting the slot");
+            let (_sid2, q2) = make_queue(ctx, rank, Variant::StreamTriggered);
+            q2.send(ctx, 1, BufSlice::whole(s3, 8), 2, crate::mpi::COMM_WORLD)
+                .expect("slot credited by the force-free");
+            q2.start(ctx).unwrap();
+            q2.drain(ctx).unwrap();
+            q2.free(ctx).unwrap();
+        } else {
+            let req = crate::mpi::irecv(
+                ctx,
+                rank,
+                SrcSel::Rank(0),
+                TagSel::Tag(2),
+                crate::mpi::COMM_WORLD,
+                BufSlice::whole(d3, 8),
+            );
+            crate::mpi::wait(ctx, req);
+            ctx.with(move |w, _| assert_eq!(w.bufs.get(d3), &[3.0; 8]));
+        }
+    })
+    .unwrap();
+    assert_eq!(out.world.nics[0].dwq_posted, 2, "run 2 posted the cancelled and replayed sends");
+}

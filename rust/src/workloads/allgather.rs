@@ -14,13 +14,13 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{build_world, run_cluster};
+use crate::coordinator::run_cluster;
 use crate::gpu::{stream_synchronize, KernelPayload, KernelSpec};
 use crate::mpi::{SrcSel, TagSel, COMM_WORLD};
 use crate::nic::BufSlice;
 use crate::world::ComputeMode;
 
-use super::scaffold::{check_exact, install_faults, scenario_run, RankComm, Timers};
+use super::scaffold::{check_exact, lease_world, scenario_run, RankComm, Timers};
 use super::{comm_variant, payload, ScenarioCfg, ScenarioRun, Workload};
 
 pub struct Allgather;
@@ -75,8 +75,7 @@ impl Workload for Allgather {
         let n = cfg.world_size();
         let elems = cfg.elems;
 
-        let mut world = build_world(cfg.cost.clone(), cfg.topology());
-        install_faults(&mut world, "allgather", cfg);
+        let mut world = lease_world("allgather", cfg);
         world.compute = ComputeMode::Real;
         // Per rank: the gathered vector (n blocks); block `rank` is its
         // own contribution, written by the pack kernel each iteration.
@@ -85,7 +84,7 @@ impl Workload for Allgather {
         let times = Timers::new(n);
         let (iters, qpr) = (cfg.iters, cfg.queues_per_rank);
         let (all2, times2) = (all.clone(), times.clone());
-        let mut out = run_cluster(world, cfg.seed, move |rank, ctx| {
+        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
             let comm = RankComm::new(ctx, rank, variant, qpr);
             let buf = all2[rank];
             let next = (rank + 1) % n;
@@ -154,6 +153,6 @@ impl Workload for Allgather {
             let (r, s, j) = (i / (n * elems), (i / elems) % n, i % elems);
             format!("allgather rank {r} block {s} elem {j}")
         });
-        Ok(scenario_run(&mut out, &times, validation))
+        Ok(scenario_run("allgather", cfg, out, &times, validation))
     }
 }

@@ -31,7 +31,7 @@ use crate::collectives::{
     chunks, recursive_doubling_allreduce_st, ring_ag_step, ring_allreduce_kt, ring_allreduce_st,
     ring_rs_step,
 };
-use crate::coordinator::{build_world, run_cluster};
+use crate::coordinator::run_cluster;
 use crate::gpu::{self, host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
 use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
 use crate::nic::BufSlice;
@@ -39,7 +39,7 @@ use crate::sim::HostCtx;
 use crate::stx::{Queue, Variant};
 use crate::world::{BufId, ComputeMode, World};
 
-use super::scaffold::{check_exact, install_faults, scenario_run, Timers};
+use super::scaffold::{check_exact, lease_world, scenario_run, Timers};
 use super::{payload, ScenarioCfg, ScenarioRun, Workload};
 
 pub struct Allreduce;
@@ -177,8 +177,7 @@ impl Workload for Allreduce {
         let n = cfg.world_size();
         let len = cfg.elems;
 
-        let mut world = build_world(cfg.cost.clone(), cfg.topology());
-        install_faults(&mut world, "allreduce", cfg);
+        let mut world = lease_world("allreduce", cfg);
         world.compute = ComputeMode::Real;
         let data: Vec<BufId> = (0..n).map(|_| world.bufs.alloc(len)).collect();
         // `tmp` sized for the recursive-doubling full-vector exchange; the
@@ -193,7 +192,7 @@ impl Workload for Allreduce {
         let iters = cfg.iters;
         let (data2, tmp2, images2, times2) =
             (data.clone(), tmp.clone(), images.clone(), times.clone());
-        let mut out = run_cluster(world, cfg.seed, move |rank, ctx| {
+        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
             let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
             let queue = match mode {
                 Mode::HostRing => None,
@@ -253,6 +252,6 @@ impl Workload for Allreduce {
         });
         let validation =
             check_exact(pairs, |i| format!("allreduce rank {} elem {}", i / len, i % len));
-        Ok(scenario_run(&mut out, &times, validation))
+        Ok(scenario_run("allreduce", cfg, out, &times, validation))
     }
 }

@@ -15,13 +15,13 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{build_world, run_cluster};
+use crate::coordinator::run_cluster;
 use crate::gpu::{host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
 use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
 use crate::nic::BufSlice;
 use crate::world::ComputeMode;
 
-use super::scaffold::{check_exact, install_faults, scenario_run, RankComm, Timers};
+use super::scaffold::{check_exact, lease_world, scenario_run, RankComm, Timers};
 use super::{comm_variant, payload, ScenarioCfg, ScenarioRun, Workload};
 
 pub struct AllToAll;
@@ -65,8 +65,7 @@ impl Workload for AllToAll {
         let n = cfg.world_size();
         let elems = cfg.elems;
 
-        let mut world = build_world(cfg.cost.clone(), cfg.topology());
-        install_faults(&mut world, "alltoall", cfg);
+        let mut world = lease_world("alltoall", cfg);
         world.compute = ComputeMode::Real;
         // Per rank: a send matrix and a recv matrix of n blocks each.
         let send: Vec<_> = (0..n).map(|_| world.bufs.alloc(n * elems)).collect();
@@ -86,7 +85,7 @@ impl Workload for AllToAll {
         let (iters, qpr) = (cfg.iters, cfg.queues_per_rank);
         let (send2, recv2, images2, times2) =
             (send.clone(), recv.clone(), images.clone(), times.clone());
-        let mut out = run_cluster(world, cfg.seed, move |rank, ctx| {
+        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
             let comm = RankComm::new(ctx, rank, variant, qpr);
             let (sb, rb) = (send2[rank], recv2[rank]);
             // Build-once: n-1 personalized sends + n-1 posted receives
@@ -163,6 +162,6 @@ impl Workload for AllToAll {
             let (r, s, j) = (i / (n * elems), (i / elems) % n, i % elems);
             format!("alltoall rank {r} block {s} elem {j}")
         });
-        Ok(scenario_run(&mut out, &times, validation))
+        Ok(scenario_run("alltoall", cfg, out, &times, validation))
     }
 }

@@ -581,7 +581,7 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
     }
 
     // Fan the feasible (cell × seed) grid out on the sweep executor.
-    let jobs: Vec<(usize, u64)> = plans
+    let mut jobs: Vec<(usize, u64)> = plans
         .iter()
         .enumerate()
         .filter(|(_, p)| p.skip.is_none())
@@ -591,6 +591,19 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
         let reason = plans.iter().find_map(|p| p.skip.clone()).unwrap_or_default();
         bail!("campaign: every planned cell was skipped as infeasible (e.g. {reason})");
     }
+    // Group jobs by world-reuse key (workload, variant, topology, queue
+    // count — see `scaffold::reuse_key`; payload size and seed share a
+    // world) so sweep workers drive the snapshot-and-reset path instead
+    // of cold-building a world per cell; a key change falls back to a
+    // cold build. The sort is stable and keyed only on cell identity, so
+    // seeds keep their spec order within a cell and the per-cell
+    // regrouping below (keyed on the cell index riding with each job) is
+    // byte-identical to the unsorted order.
+    jobs.sort_by(|&(a, _), &(b, _)| {
+        let (pa, pb) = (&plans[a], &plans[b]);
+        (pa.w.name(), &pa.variant, pa.nodes, pa.rpn, pa.qpr, a)
+            .cmp(&(pb.w.name(), &pb.variant, pb.nodes, pb.rpn, pb.qpr, b))
+    });
     let threads = spec.threads.unwrap_or_else(sweep::default_threads);
     let results: Vec<Result<ScenarioRun>> = sweep::map(&jobs, threads, |_, &(i, seed)| {
         let p = &plans[i];

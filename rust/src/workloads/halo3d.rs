@@ -21,7 +21,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{build_world, run_cluster};
+use crate::coordinator::run_cluster;
 use crate::faces::domain::ProcGrid;
 use crate::gpu::{host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
 use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
@@ -30,7 +30,7 @@ use crate::sim::HostCtx;
 use crate::stx::Variant;
 use crate::world::{BufId, ComputeMode, World};
 
-use super::scaffold::{check_exact, install_faults, scenario_run, RankComm, Timers};
+use super::scaffold::{check_exact, lease_world, scenario_run, RankComm, Timers};
 use super::{comm_variant, grid_for, payload, ScenarioCfg, ScenarioRun, Workload};
 
 pub struct Halo3d;
@@ -220,8 +220,7 @@ impl Workload for Halo3d {
         let variant = comm_variant("halo3d", &cfg.variant)?;
         let (px, py, pz) = grid_for(cfg.world_size());
         let grid = ProcGrid::new(px, py, pz);
-        let mut world = build_world(cfg.cost.clone(), cfg.topology());
-        install_faults(&mut world, "halo3d", cfg);
+        let mut world = lease_world("halo3d", cfg);
         world.compute = ComputeMode::Real; // Fn-payload kernels move real data
         let plans = Arc::new(build_plans(&mut world, &grid, cfg.elems));
         let times = Timers::new(grid.size());
@@ -229,7 +228,7 @@ impl Workload for Halo3d {
         let (iters, qpr) = (cfg.iters, cfg.queues_per_rank);
         let plans2 = plans.clone();
         let times2 = times.clone();
-        let mut out = run_cluster(world, cfg.seed, move |rank, ctx| {
+        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
             rank_program(iters, &plans2, rank, ctx, variant, qpr, &times2);
         })
         .context("halo3d run failed")?;
@@ -245,6 +244,6 @@ impl Workload for Halo3d {
             })
         });
         let validation = check_exact(pairs, |i| format!("halo3d acc slot {i}"));
-        Ok(scenario_run(&mut out, &times, validation))
+        Ok(scenario_run("halo3d", cfg, out, &times, validation))
     }
 }

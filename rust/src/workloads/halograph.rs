@@ -35,14 +35,14 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{build_world, run_cluster};
+use crate::coordinator::run_cluster;
 use crate::gpu::{stream_synchronize, KernelPayload, KernelSpec};
 use crate::mpi::{SrcSel, TagSel, COMM_WORLD};
 use crate::nic::BufSlice;
 use crate::sim::rng::SplitMix64;
 use crate::world::{BufId, ComputeMode, World};
 
-use super::scaffold::{check_exact, install_faults, scenario_run, RankComm, Timers};
+use super::scaffold::{check_exact, lease_world, scenario_run, RankComm, Timers};
 use super::{comm_variant, payload, ScenarioCfg, ScenarioRun, Workload};
 
 pub struct HaloGraph;
@@ -256,15 +256,14 @@ impl Workload for HaloGraph {
         let mut skew_rng = SplitMix64::new(cfg.seed ^ 0x736b_6577); // "skew"
         let skews = Arc::new(build_skews(n, cfg.iters, &mut skew_rng));
 
-        let mut world = build_world(cfg.cost.clone(), cfg.topology());
-        install_faults(&mut world, "halograph", cfg);
+        let mut world = lease_world("halograph", cfg);
         world.compute = ComputeMode::Real;
         let plans = Arc::new(build_plans(&mut world, n, &edges));
         let times = Timers::new(n);
 
         let (iters, qpr) = (cfg.iters, cfg.queues_per_rank);
         let (plans2, skews2, times2) = (plans.clone(), skews.clone(), times.clone());
-        let mut out = run_cluster(world, cfg.seed, move |rank, ctx| {
+        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
             let plan = &plans2[rank];
             let comm = RankComm::new(ctx, rank, variant, qpr);
             // Build-once: the whole irregular neighborhood is one plan;
@@ -333,6 +332,6 @@ impl Workload for HaloGraph {
             })
         });
         let validation = check_exact(pairs, |i| format!("halograph recv slot {i}"));
-        Ok(scenario_run(&mut out, &times, validation))
+        Ok(scenario_run("halograph", cfg, out, &times, validation))
     }
 }

@@ -19,13 +19,13 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{build_world, run_cluster};
+use crate::coordinator::run_cluster;
 use crate::gpu::{stream_synchronize, KernelPayload, KernelSpec};
 use crate::mpi::{self, SrcSel, TagSel, COMM_WORLD};
 use crate::nic::BufSlice;
 use crate::world::ComputeMode;
 
-use super::scaffold::{check_exact, install_faults, scenario_run, RankComm, Timers};
+use super::scaffold::{check_exact, lease_world, scenario_run, RankComm, Timers};
 use super::{comm_variant, payload, ScenarioCfg, ScenarioRun, Workload};
 
 pub struct Incast;
@@ -73,8 +73,7 @@ impl Workload for Incast {
         let n = cfg.world_size();
         let elems = cfg.elems;
 
-        let mut world = build_world(cfg.cost.clone(), cfg.topology());
-        install_faults(&mut world, "incast", cfg);
+        let mut world = lease_world("incast", cfg);
         world.compute = ComputeMode::Real;
         // Root sink: one slot per sender (senders 1..n land at slot s-1).
         let sink = world.bufs.alloc((n - 1) * elems);
@@ -85,7 +84,7 @@ impl Workload for Incast {
         let times = Timers::new(n);
         let (iters, qpr) = (cfg.iters, cfg.queues_per_rank);
         let (send2, images2, times2) = (send.clone(), images.clone(), times.clone());
-        let mut out = run_cluster(world, cfg.seed, move |rank, ctx| {
+        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
             if rank == ROOT {
                 // The root only receives — no stream, no queue, no plan.
                 let t0 = ctx.now();
@@ -152,6 +151,6 @@ impl Workload for Incast {
         let validation = check_exact(pairs, |i| {
             format!("incast root slot for sender {} elem {}", 1 + i / elems, i % elems)
         });
-        Ok(scenario_run(&mut out, &times, validation))
+        Ok(scenario_run("incast", cfg, out, &times, validation))
     }
 }

@@ -172,8 +172,10 @@ pub struct QueueSlotStats {
 }
 
 /// Result of one scenario run: the figure of merit plus the counters the
-/// campaign report aggregates.
-#[derive(Debug)]
+/// campaign report aggregates. `Eq` on the whole struct is what the
+/// reset-equivalence blitz compares: a snapshot-reset world must
+/// reproduce a fresh build byte-for-byte, trace included.
+#[derive(Debug, PartialEq, Eq)]
 pub struct ScenarioRun {
     /// Max over ranks of accumulated timed-region wall time (virtual ns).
     pub time_ns: u64,

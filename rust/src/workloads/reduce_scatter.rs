@@ -19,13 +19,13 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{build_world, run_cluster};
+use crate::coordinator::run_cluster;
 use crate::gpu::{host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
 use crate::mpi::{SrcSel, TagSel, COMM_WORLD};
 use crate::nic::BufSlice;
 use crate::world::ComputeMode;
 
-use super::scaffold::{check_exact, install_faults, scenario_run, RankComm, Timers};
+use super::scaffold::{check_exact, lease_world, scenario_run, RankComm, Timers};
 use super::{comm_variant, payload, ScenarioCfg, ScenarioRun, Workload};
 
 pub struct ReduceScatter;
@@ -86,8 +86,7 @@ impl Workload for ReduceScatter {
         let n = cfg.world_size();
         let elems = cfg.elems;
 
-        let mut world = build_world(cfg.cost.clone(), cfg.topology());
-        install_faults(&mut world, "reduce-scatter", cfg);
+        let mut world = lease_world("reduce-scatter", cfg);
         world.compute = ComputeMode::Real;
         // Per rank: the working vector (n chunks of running partial
         // sums) plus one staging slot per ring step for the incoming
@@ -98,7 +97,7 @@ impl Workload for ReduceScatter {
         let times = Timers::new(n);
         let (iters, qpr) = (cfg.iters, cfg.queues_per_rank);
         let (work2, stage2, times2) = (work.clone(), stage.clone(), times.clone());
-        let mut out = run_cluster(world, cfg.seed, move |rank, ctx| {
+        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
             let comm = RankComm::new(ctx, rank, variant, qpr);
             let (wbuf, sbuf) = (work2[rank], stage2[rank]);
             let next = (rank + 1) % n;
@@ -209,6 +208,6 @@ impl Workload for ReduceScatter {
             let (r, j) = (i / elems, i % elems);
             format!("reduce-scatter rank {r} owned chunk elem {j}")
         });
-        Ok(scenario_run(&mut out, &times, validation))
+        Ok(scenario_run("reduce-scatter", cfg, out, &times, validation))
     }
 }

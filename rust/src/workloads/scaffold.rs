@@ -14,12 +14,12 @@
 use std::cell::Cell;
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::RunOutcome;
+use crate::coordinator::{self, RunOutcome};
 use crate::fault::{fingerprint, FaultPlan, FaultState};
 use crate::gpu::{self, StreamId};
 use crate::sim::HostCtx;
 use crate::stx::{CommPlan, CommPlanBuilder, Queue, Variant};
-use crate::world::World;
+use crate::world::{Topology, World};
 
 use super::{QueueSlotStats, ScenarioCfg, ScenarioRun, Validation};
 
@@ -33,6 +33,31 @@ pub fn install_faults(world: &mut World, workload: &str, cfg: &ScenarioCfg) {
         let fp = fingerprint(spec.seed, &cfg.fault_label(workload));
         world.fault = Some(FaultState::new(FaultPlan::new(spec.clone(), fp, cfg.world_size())));
     }
+}
+
+/// World-reuse key for a cell: everything that shapes the *structure* of
+/// the world — workload, variant, topology, queue count, and the full
+/// cost model (which carries the DWQ slot depth and jitter knobs).
+/// Payload size, seed, iteration count, and fault spec are deliberately
+/// excluded: they only shape per-run state, which [`World::reset`]
+/// rewinds (faults are re-installed per lease by [`lease_world`]).
+pub fn reuse_key(workload: &str, cfg: &ScenarioCfg) -> String {
+    format!(
+        "{workload}/{}/{}x{}/q{}/{:?}",
+        cfg.variant, cfg.nodes, cfg.ranks_per_node, cfg.queues_per_rank, cfg.cost
+    )
+}
+
+/// Lease a world for this cell from the per-thread pool (see
+/// [`coordinator::lease_world`]) and install the cell's fault plan. On a
+/// pool miss this is exactly the old cold-build path; on a hit, the
+/// pooled world is rewound and behaves byte-identically. Pair with
+/// [`scenario_run`], which stashes the world back after a clean run.
+pub fn lease_world(workload: &str, cfg: &ScenarioCfg) -> World {
+    let topo = Topology::new(cfg.nodes, cfg.ranks_per_node);
+    let mut world = coordinator::lease_world(&reuse_key(workload, cfg), cfg.cost.clone(), topo);
+    install_faults(&mut world, workload, cfg);
+    world
 }
 
 /// One rank's communication context: its GPU stream plus the queue set
@@ -166,11 +191,20 @@ pub fn per_queue_stats(world: &World) -> Vec<QueueSlotStats> {
 /// Assemble the [`ScenarioRun`] summary every workload returns: the
 /// max-over-ranks figure of merit plus the run's metrics, engine stats,
 /// per-queue-slot DWQ counters, and — when the run recorded a trace —
-/// the achieved-overlap and critical-path analytics. Takes the outcome
-/// by `&mut` to move the trace buffer out instead of cloning it.
-pub fn scenario_run(out: &mut RunOutcome, times: &Timers, validation: Validation) -> ScenarioRun {
+/// the achieved-overlap and critical-path analytics. Consumes the
+/// outcome: once the summary is assembled, the world goes back to the
+/// per-thread pool under [`reuse_key`] so the next cell with the same
+/// shape skips the cold build (error paths never reach here, so a
+/// stalled world is dropped, not pooled).
+pub fn scenario_run(
+    workload: &str,
+    cfg: &ScenarioCfg,
+    mut out: RunOutcome,
+    times: &Timers,
+    validation: Validation,
+) -> ScenarioRun {
     let a = out.take_analytics();
-    ScenarioRun {
+    let run = ScenarioRun {
         time_ns: times.max_ns(),
         metrics: out.world.metrics.clone(),
         stats: out.stats.clone(),
@@ -179,5 +213,7 @@ pub fn scenario_run(out: &mut RunOutcome, times: &Timers, validation: Validation
         overlap: a.overlap,
         crit: a.crit,
         trace: a.trace,
-    }
+    };
+    coordinator::stash_world(&reuse_key(workload, cfg), out.world);
+    run
 }

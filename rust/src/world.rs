@@ -37,16 +37,45 @@ pub enum ComputeMode {
 pub struct BufId(pub usize);
 
 /// Pool of simulated device buffers (f32 payloads).
+///
+/// Backing stores are recycled across [`World::reset`] cycles: `reset`
+/// drains the live buffers into a bounded spare list and `alloc` reuses
+/// a spare allocation (cleared and zero-filled, so the observable value
+/// is exactly `vec![0.0; len]`) before touching the system allocator —
+/// the per-cell cost a 100K-cell campaign would otherwise pay.
 #[derive(Default)]
 pub struct BufPool {
     bufs: Vec<Vec<f32>>,
+    /// Retired backing stores awaiting reuse (never observable: contents
+    /// are reset to zeros on re-allocation).
+    spare: Vec<Vec<f32>>,
 }
+
+/// Retired backing stores kept across resets; beyond this the allocator
+/// takes over (bounds held memory for long heterogeneous sweeps).
+const BUF_SPARE_CAP: usize = 256;
 
 impl BufPool {
     pub fn alloc(&mut self, len: usize) -> BufId {
         let id = BufId(self.bufs.len());
-        self.bufs.push(vec![0.0; len]);
+        match self.spare.pop() {
+            Some(mut b) => {
+                // Byte-identical to `vec![0.0; len]`: same length, all
+                // zeros; only the (unobservable) capacity may differ.
+                b.clear();
+                b.resize(len, 0.0);
+                self.bufs.push(b);
+            }
+            None => self.bufs.push(vec![0.0; len]),
+        }
         id
+    }
+
+    /// Rewind to the empty pool, retiring backing stores for reuse by
+    /// later `alloc` calls (see [`World::reset`]).
+    fn reset(&mut self) {
+        self.spare.append(&mut self.bufs);
+        self.spare.truncate(BUF_SPARE_CAP);
     }
 
     pub fn alloc_init(&mut self, data: Vec<f32>) -> BufId {
@@ -238,6 +267,13 @@ impl ArmedRegistry {
         self.len() == 0
     }
 
+    /// Rewind to the empty registry (keeps allocations); part of
+    /// [`World::reset`].
+    pub fn reset(&mut self) {
+        self.entries.clear();
+        self.free.clear();
+    }
+
     /// Drain every still-armed descriptor belonging to `queue` (used by
     /// the force-release path after a watchdog timeout). Returns the
     /// cleared entries so the caller can credit DWQ slots back.
@@ -253,6 +289,20 @@ impl ArmedRegistry {
         }
         out
     }
+}
+
+/// Structural fingerprint of a freshly wired [`World`], captured by
+/// [`World::snapshot`] right after the coordinator builds it and checked
+/// by [`World::reset`]: a reset may only rewind *mutable run state* — it
+/// must never be asked to reshape the cluster (that is a cold rebuild,
+/// keyed by the campaign driver's reuse key; see DESIGN.md §Snapshot &
+/// reset lifecycle).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorldSnapshot {
+    nodes: usize,
+    nics: usize,
+    gpus: usize,
+    procs: usize,
 }
 
 /// The complete simulated cluster.
@@ -323,6 +373,56 @@ impl World {
         }
     }
 
+    /// Capture the structural fingerprint of this (freshly wired) world
+    /// for later [`World::reset`] validation.
+    pub fn snapshot(&self) -> WorldSnapshot {
+        WorldSnapshot {
+            nodes: self.topo.nodes,
+            nics: self.nics.len(),
+            gpus: self.gpus.len(),
+            procs: self.procs.len(),
+        }
+    }
+
+    /// Rewind every piece of mutable run state to the just-built world
+    /// the snapshot was captured from, keeping the wiring (topology,
+    /// NICs, GPUs, procs) and the recycled allocations (buffer backing
+    /// stores, matching-engine deques, counter pools).
+    ///
+    /// Equivalence contract (pinned by the reset-equivalence blitz in
+    /// `tests/properties.rs`): a run on a reset world produces
+    /// byte-identical `SimStats`, `Metrics`, per-queue stats, and trace
+    /// to the same run on a cold-built world. Streams, queues, requests,
+    /// and plans hold per-run ids, so they are cleared here and rebuilt
+    /// by the run itself; what survives is the wiring and the memory.
+    pub fn reset(&mut self, snap: &WorldSnapshot) {
+        debug_assert_eq!(
+            *snap,
+            self.snapshot(),
+            "World::reset may only rewind run state, never reshape the cluster"
+        );
+        self.bufs.reset();
+        for g in &mut self.gpus {
+            g.reset();
+        }
+        for n in &mut self.nics {
+            n.reset();
+        }
+        for p in &mut self.procs {
+            p.reset();
+        }
+        self.queues.clear();
+        self.requests.clear();
+        self.compute = ComputeMode::Real;
+        self.runtime = None;
+        self.metrics = Metrics::default();
+        self.rank_finish.clear();
+        self.fault = None;
+        self.armed.reset();
+        // `trace_cap` is left as-is: the lease path re-derives it from
+        // the recording switch before every run.
+    }
+
     /// Allocate a fresh MPI request; returns its id.
     pub fn new_request(&mut self, core: &mut Ctx, what: &str) -> usize {
         let done = core.new_cell(format!("req.{}.{}", self.requests.len(), what), 0);
@@ -369,6 +469,69 @@ mod tests {
         assert_eq!(t.node_of(63), 7);
         assert!(t.same_node(0, 7));
         assert!(!t.same_node(7, 8));
+    }
+
+    #[test]
+    fn bufpool_reset_recycles_backing_stores_with_identical_values() {
+        let mut p = BufPool::default();
+        let a = p.alloc(4);
+        p.get_mut(a).copy_from_slice(&[9.0, 8.0, 7.0, 6.0]);
+        let b = p.alloc(2);
+        p.get_mut(b)[0] = 5.0;
+        p.reset();
+        assert_eq!(p.len(), 0);
+        // Recycled allocations must be value-identical to fresh ones:
+        // same ids, same lengths, all zeros — stale data never leaks.
+        let a2 = p.alloc(3);
+        let b2 = p.alloc(8);
+        assert_eq!(a2, BufId(0));
+        assert_eq!(b2, BufId(1));
+        assert_eq!(p.get(a2), &[0.0; 3]);
+        assert_eq!(p.get(b2), &[0.0; 8]);
+    }
+
+    #[test]
+    fn armed_registry_reset_restores_fresh_token_sequence() {
+        let mut r = ArmedRegistry::default();
+        let entry = |q| ArmedEntry { node: 0, queue: Some(q), desc: "d".into() };
+        let t0 = r.register(entry(0));
+        let _t1 = r.register(entry(1));
+        r.clear(t0);
+        r.reset();
+        assert!(r.is_empty());
+        // Tokens restart from 0 exactly as on a fresh registry, so a
+        // reset world replays the same token ids as a cold-built one.
+        assert_eq!(r.register(entry(2)), 0);
+        assert_eq!(r.register(entry(3)), 1);
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn world_reset_rewinds_run_state_and_keeps_wiring() {
+        let mut w = crate::coordinator::build_world(
+            crate::costmodel::presets::frontier_like(),
+            Topology::new(2, 1),
+        );
+        let snap = w.snapshot();
+        let first = w.bufs.alloc(16);
+        w.bufs.get_mut(first)[3] = 42.0;
+        w.metrics.eager_sends = 7;
+        w.rank_finish = vec![1, 2];
+        w.compute = ComputeMode::Modeled;
+        w.armed.register(ArmedEntry { node: 0, queue: None, desc: "leak".into() });
+        w.reset(&snap);
+        assert_eq!(w.bufs.len(), 0);
+        assert_eq!(w.metrics, Metrics::default());
+        assert!(w.rank_finish.is_empty());
+        assert_eq!(w.compute, ComputeMode::Real);
+        assert!(w.armed.is_empty());
+        assert!(w.queues.is_empty() && w.requests.is_empty());
+        assert_eq!(w.nics.len(), 2);
+        assert_eq!(w.gpus.len(), 2);
+        assert_eq!(w.procs.len(), 2);
+        // A post-reset allocation replays the cold-build id sequence.
+        assert_eq!(w.bufs.alloc(16), first);
+        assert_eq!(w.bufs.get(first), &[0.0; 16]);
     }
 
     #[test]

@@ -497,3 +497,47 @@ fn campaign_trace_export_is_thread_count_invariant() {
     assert_eq!(traces(&serial), traces(&parallel), "trace bytes: 1 thread vs 3 threads");
     assert_eq!(traces(&parallel), traces(&parallel_again), "trace bytes: reruns");
 }
+
+/// The snapshot-reset lifecycle under the sweep executor: a many-seed
+/// campaign (seeds of a cell share one world-reuse key, so after each
+/// worker's first cell per key every run goes through `World::reset`
+/// instead of a cold build) must be byte-identical across worker-thread
+/// counts and reruns. One thread runs on the caller and keeps its world
+/// pool across the whole campaign; four threads each warm a private
+/// pool — neither path may leak one cell's state into the next. CI also
+/// runs this whole suite under `STMPI_SWEEP_THREADS=1` and `=4`,
+/// covering the env-driven default thread count.
+#[test]
+fn reset_path_campaign_is_thread_count_invariant() {
+    let mut spec = CampaignSpec {
+        workloads: vec!["incast".into(), "halograph".into()],
+        elems: vec![16],
+        topos: vec![(2, 1), (2, 2)],
+        seeds: (1..=6).collect(),
+        iters: 1,
+        jitter: 0.01,
+        threads: Some(1),
+        ..CampaignSpec::default()
+    };
+    let serial = run_campaign(&spec).unwrap();
+    assert!(serial.all_ok(), "reset-path cells must validate:\n{}", serial.to_markdown());
+    assert!(serial.ran_cells() >= 8, "the grid must actually run");
+    spec.threads = Some(4);
+    let parallel = run_campaign(&spec).unwrap();
+    let parallel_again = run_campaign(&spec).unwrap();
+    assert_eq!(serial.to_json(), parallel.to_json(), "1 thread vs 4 threads");
+    assert_eq!(parallel.to_json(), parallel_again.to_json(), "repeated parallel runs");
+
+    // Same grid under chaos: stalled rows and recovery counters must
+    // come out identical on reset worlds at any thread count too.
+    spec.faults = Some(stmpi::fault::FaultSpec::chaos(31));
+    spec.threads = Some(1);
+    let chaos_serial = run_campaign(&spec).unwrap();
+    spec.threads = Some(4);
+    let chaos_parallel = run_campaign(&spec).unwrap();
+    assert_eq!(
+        chaos_serial.to_json(),
+        chaos_parallel.to_json(),
+        "chaos reset path: 1 thread vs 4 threads"
+    );
+}

@@ -610,3 +610,70 @@ fn prop_triggered_overlap_at_least_host_on_faces() {
     assert!(st >= host, "ST overlap {st:.1}% must be >= host {host:.1}%");
     assert!(kt >= host, "KT overlap {kt:.1}% must be >= host {host:.1}%");
 }
+
+/// The snapshot-and-reset contract, blitzed across the whole registry:
+/// for every workload × variant × fault preset × trace on/off, a run on
+/// a freshly built world and a rerun on the pooled snapshot-reset world
+/// must be byte-identical — figure of merit, `Metrics`, engine
+/// `SimStats`, validation, per-queue DWQ counters, overlap/critical-path
+/// analytics, and the raw `TraceBuf` (compared via `ScenarioRun`'s `Eq`).
+/// Cells that stall under chaos must stall identically on both paths
+/// (a stalled world is dropped, never pooled, so both legs run cold).
+#[test]
+fn prop_snapshot_reset_runs_equal_fresh_builds() {
+    use stmpi::fault::FaultSpec;
+    use stmpi::workloads::{registry, ScenarioCfg};
+
+    type Preset = Option<fn(u64) -> FaultSpec>;
+    let presets: [(&str, Preset); 3] =
+        [("none", None), ("drops", Some(FaultSpec::drops)), ("chaos", Some(FaultSpec::chaos))];
+    let (mut case, mut compared) = (0u64, 0u64);
+    for trace_on in [true, false] {
+        // Thread-local override: this test's runs record (or don't)
+        // regardless of STMPI_TRACE, without racing parallel tests.
+        stmpi::obs::set_recording_override(Some(trace_on));
+        for w in registry() {
+            for &variant in w.variants() {
+                for (plan_name, preset) in &presets {
+                    let mut cfg = ScenarioCfg::smoke(variant, 2, 1, 16);
+                    cfg.faults = preset.map(|p| p(4200 + case));
+                    case += 1;
+                    if w.configure(&cfg).is_err() {
+                        continue;
+                    }
+                    // Empty pool => the first run cold-builds its world
+                    // (and stashes it on clean completion).
+                    stmpi::coordinator::clear_world_pool();
+                    let fresh = w.run(&cfg);
+                    // Identical cell again => the second run leases the
+                    // stashed world through World::reset.
+                    let reset = w.run(&cfg);
+                    let ctx = format!(
+                        "{}::{variant} under {plan_name} (trace={trace_on})",
+                        w.name()
+                    );
+                    match (fresh, reset) {
+                        (Ok(a), Ok(b)) => {
+                            assert_eq!(a, b, "{ctx}: reset run differs from fresh run");
+                            compared += 1;
+                        }
+                        (Err(a), Err(b)) => assert_eq!(
+                            a.to_string(),
+                            b.to_string(),
+                            "{ctx}: both legs failed but differently"
+                        ),
+                        (a, b) => panic!(
+                            "{ctx}: fresh and reset runs disagree on success: \
+                             fresh={:?} reset={:?}",
+                            a.map(|r| r.validation),
+                            b.map(|r| r.validation)
+                        ),
+                    }
+                }
+            }
+        }
+    }
+    stmpi::obs::set_recording_override(None);
+    stmpi::coordinator::clear_world_pool();
+    assert!(compared >= 40, "the blitz must compare a real grid, got {compared}");
+}

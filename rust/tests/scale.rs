@@ -26,6 +26,7 @@ fn campaign_smoke_at_64_ranks() {
         jitter: 0.0,
         dwq_slots: None,
         threads: Some(2),
+        ..CampaignSpec::default()
     };
     let report = run_campaign(&spec).unwrap();
     assert!(report.all_ok(), "64-rank cells must validate:\n{}", report.to_markdown());
@@ -70,4 +71,44 @@ fn incast_63_to_1_shows_fig8_congestion_knee() {
         big.metrics.max_egress_wait_ns
     );
     assert!(big.validation.ok(), "63→1 must still validate exactly");
+}
+
+/// The snapshot-and-reset headline: a 100K-cell campaign (faces +
+/// halograph, tiny payloads, 50 000 seeds per cell) completes, stays
+/// byte-identical between one sweep worker and eight, and finishes
+/// inside a generous wall-clock guard. Per-cell cost is deliberately
+/// minimal — two ranks, 8-elem payloads, one iteration — so the
+/// dominant work IS the per-cell lifecycle this PR rebuilt: after each
+/// worker's first cell per reuse key, every run leases a pooled world
+/// through `World::reset` and a recycled event arena instead of
+/// cold-building both. The guard is an anti-blowup tripwire (a
+/// quadratic leak in the pool, arenas, or report aggregation would
+/// blow it), not a perf bar.
+#[test]
+fn campaign_100k_cells_resets_worlds_and_stays_thread_invariant() {
+    let t0 = std::time::Instant::now();
+    let mut spec = CampaignSpec {
+        workloads: vec!["faces".into(), "halograph".into()],
+        variants: vec!["st".into()],
+        elems: vec![8],
+        topos: vec![(2, 1)],
+        queues: vec![1],
+        seeds: (1..=50_000).collect(),
+        iters: 1,
+        jitter: 0.0,
+        threads: Some(8),
+        ..CampaignSpec::default()
+    };
+    let parallel = run_campaign(&spec).unwrap();
+    assert!(parallel.all_ok(), "100K-cell campaign must be clean:\n{}", parallel.to_markdown());
+    assert_eq!(parallel.ran_cells(), 2, "both workloads' cells must run");
+    spec.threads = Some(1);
+    let serial = run_campaign(&spec).unwrap();
+    assert_eq!(
+        serial.to_json(),
+        parallel.to_json(),
+        "100K-cell campaign: 1 worker vs 8 workers must be byte-identical"
+    );
+    let elapsed = t0.elapsed().as_secs();
+    assert!(elapsed < 1200, "100K-cell guard budget blown: took {elapsed}s (tripwire, not a bar)");
 }
