@@ -6,7 +6,7 @@
 //! 1. the CI smoke campaign (2 workloads × 3 variants each — host, ST,
 //!    KT — tiny sizes) with hard assertions: validation passes, the
 //!    JSON report parses, and a rerun is byte-identical;
-//! 2. the full default campaign — all eight registered workloads × every
+//! 2. the full default campaign — all nine registered workloads × every
 //!    variant × 2 sizes × 2 topologies × {1, 2} queues per rank × 2
 //!    seeds — which produces the report artifact CI uploads (including
 //!    the multi-queue cells and the achieved-overlap / critical-path
@@ -50,8 +50,8 @@ fn main() {
     println!("{}", report.to_markdown());
     assert!(report.all_ok(), "campaign validation failed (see report above)");
     assert!(
-        report.workloads_covered() >= 8,
-        "expected >= 8 workloads, got {}",
+        report.workloads_covered() >= 9,
+        "expected >= 9 workloads, got {}",
         report.workloads_covered()
     );
     assert!(

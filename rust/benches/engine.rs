@@ -393,6 +393,53 @@ fn bench_cells_per_s(cells: usize, threads: usize) -> f64 {
     rate(cells as u64, t0.elapsed().as_secs_f64())
 }
 
+/// Campaign-driver throughput with the content-addressed store in play:
+/// the same tiny-cell shape as [`bench_cells_per_s`] but driven through
+/// `run_campaign`, as (a) store-less, (b) store-backed cold (simulate +
+/// fingerprint + upsert + flush), and (c) store-backed warm (every
+/// fingerprint hits). Returns (nostore, cold, warm) rates in jobs/s and
+/// asserts the byte-identity contract along the way.
+fn bench_campaign_cells_per_s(jobs: usize) -> (f64, f64, f64) {
+    use stmpi::workloads::{run_campaign, CampaignSpec};
+    let dir = std::env::temp_dir().join(format!("stmpi-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut spec = CampaignSpec {
+        workloads: vec!["incast".into()],
+        variants: vec!["st".into()],
+        elems: vec![4],
+        topos: vec![(2, 1)],
+        queues: vec![1],
+        seeds: (1..=jobs as u64).collect(),
+        iters: 1,
+        jitter: 0.0,
+        dwq_slots: None,
+        threads: Some(8),
+        faults: None,
+        trace: None,
+        store: None,
+        cost_overrides: Vec::new(),
+    };
+    let t0 = Instant::now();
+    let plain = run_campaign(&spec).unwrap();
+    let nostore = rate(jobs as u64, t0.elapsed().as_secs_f64());
+
+    spec.store = Some(dir.to_string_lossy().into_owned());
+    let t0 = Instant::now();
+    let cold = run_campaign(&spec).unwrap();
+    let cold_rate = rate(jobs as u64, t0.elapsed().as_secs_f64());
+    assert_eq!(cold.cache.misses as usize, jobs, "fresh store must simulate every job");
+    assert_eq!(plain.to_json(), cold.to_json(), "the store must not change report bytes");
+
+    let t0 = Instant::now();
+    let warm = run_campaign(&spec).unwrap();
+    let warm_rate = rate(jobs as u64, t0.elapsed().as_secs_f64());
+    assert_eq!(warm.cache.misses, 0, "warm rerun must simulate nothing");
+    assert_eq!(cold.to_json(), warm.to_json(), "cached rows must be byte-identical");
+
+    let _ = std::fs::remove_dir_all(&dir);
+    (nostore, cold_rate, warm_rate)
+}
+
 // ---------------------------------------------------------------------
 // Reporting
 // ---------------------------------------------------------------------
@@ -497,6 +544,14 @@ fn main() {
     let cells_100k_t8 = bench_cells_per_s(100_000, 8);
     println!("campaign cells (100K, 8 thr): {cells_100k_t8:>10.0} cells/s");
 
+    // Store-backed campaign throughput (PR 9): the same tiny-cell shape
+    // through the campaign driver without a store, against a cold store,
+    // and against a warm store.
+    let (camp_nostore, camp_cold, camp_warm) = bench_campaign_cells_per_s(1_000);
+    println!("campaign driver (1K, no store): {camp_nostore:>10.0} jobs/s");
+    println!("campaign driver (1K, cold store): {camp_cold:>8.0} jobs/s");
+    println!("campaign driver (1K, warm store): {camp_warm:>8.0} jobs/s");
+
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .expect("rust/ has a parent")
@@ -520,6 +575,17 @@ fn main() {
         if trace_ok { "PASS" } else { "FAIL" }
     );
     bar_ok = bar_ok && trace_ok;
+    // Store acceptance bars (PR 9), the cells_per_s regression pins:
+    // fingerprinting + upserting must not tax the cold campaign path by
+    // more than 40%, and serving a warm rerun from the store must be at
+    // least 3x faster than re-simulating — both relative to the same
+    // run on the same machine, so they hold on any CI hardware.
+    let store_ok = camp_cold >= camp_nostore * 0.6 && camp_warm >= camp_cold * 3.0;
+    println!(
+        "store acceptance bar (cold >= 0.6x no-store, warm >= 3x cold): {}",
+        if store_ok { "PASS" } else { "FAIL" }
+    );
+    bar_ok = bar_ok && store_ok;
 
     write_json(
         &root,
@@ -546,6 +612,10 @@ fn main() {
             ("cells_per_s_1k_t4", cells_1k[2].1),
             ("cells_per_s_1k_t8", cells_1k[3].1),
             ("cells_per_s_100k_t8", cells_100k_t8),
+            ("campaign_jobs_per_s_nostore", camp_nostore),
+            ("campaign_jobs_per_s_store_cold", camp_cold),
+            ("campaign_jobs_per_s_store_warm", camp_warm),
+            ("store_warm_speedup", camp_warm / camp_cold),
         ],
         threads,
         scaling,

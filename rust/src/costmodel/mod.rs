@@ -183,6 +183,113 @@ impl CostModel {
     pub fn is_rendezvous(&self, bytes: usize) -> bool {
         bytes > self.eager_threshold
     }
+
+    /// The full, ordered (name, value-as-f64) field list. Single source
+    /// of truth for [`CostModel::stable_hash`] and
+    /// [`CostModel::apply_override`]: adding a field to the struct and
+    /// to this table automatically extends both.
+    fn fields(&self) -> [(&'static str, f64); 33] {
+        [
+            ("host_mpi_call", self.host_mpi_call as f64),
+            ("host_enqueue_call", self.host_enqueue_call as f64),
+            ("host_wait_overhead", self.host_wait_overhead as f64),
+            ("kernel_enqueue", self.kernel_enqueue as f64),
+            ("cp_dispatch", self.cp_dispatch as f64),
+            ("stream_sync", self.stream_sync as f64),
+            ("memop_hip", self.memop_hip as f64),
+            ("memop_shader", self.memop_shader as f64),
+            ("gpu_flops_per_ns", self.gpu_flops_per_ns),
+            ("gpu_mem_bw", self.gpu_mem_bw),
+            ("kernel_fixed", self.kernel_fixed as f64),
+            ("nic_cmd_post", self.nic_cmd_post as f64),
+            ("nic_proc", self.nic_proc as f64),
+            ("nic_trigger_latency", self.nic_trigger_latency as f64),
+            ("nic_match", self.nic_match as f64),
+            ("nic_recv_post", self.nic_recv_post as f64),
+            ("nic_completion", self.nic_completion as f64),
+            ("wire_latency", self.wire_latency as f64),
+            ("wire_bw", self.wire_bw),
+            ("eager_threshold", self.eager_threshold as f64),
+            ("rendezvous_ctrl", self.rendezvous_ctrl as f64),
+            ("host_rendezvous_progression", self.host_rendezvous_progression as f64),
+            ("ipc_latency", self.ipc_latency as f64),
+            ("ipc_bw", self.ipc_bw),
+            ("memcpy_small", self.memcpy_small as f64),
+            ("memcpy_threshold", self.memcpy_threshold as f64),
+            ("progress_wakeup", self.progress_wakeup as f64),
+            ("progress_per_op", self.progress_per_op as f64),
+            ("progress_completion", self.progress_completion as f64),
+            ("progress_rendezvous_assist", self.progress_rendezvous_assist as f64),
+            ("nic_counter_limit", self.nic_counter_limit as f64),
+            ("dwq_slots_per_nic", self.dwq_slots_per_nic as f64),
+            ("jitter_sigma", self.jitter_sigma),
+        ]
+    }
+
+    /// Stable FNV-1a fingerprint of every tunable cost, by field name
+    /// and IEEE bit pattern. Any semantic change to the model — a preset
+    /// tweak, a `--diff` override, a campaign jitter/dwq knob — changes
+    /// this hash, which is exactly the invalidation rule the campaign
+    /// store needs: cached cells keyed on it are re-simulated if and
+    /// only if the model they were produced under changed.
+    pub fn stable_hash(&self) -> u64 {
+        let mut h = crate::sim::rng::Fnv64::new();
+        for (name, value) in self.fields() {
+            h.write_str(name).write_f64(value);
+        }
+        h.finish()
+    }
+
+    /// Set one field by name (cost-model diffing and the `stmpi diff`
+    /// CLI). Integer fields round the given value; unknown names error
+    /// with the full list of valid ones.
+    pub fn apply_override(&mut self, field: &str, value: f64) -> anyhow::Result<()> {
+        if !value.is_finite() || value < 0.0 {
+            anyhow::bail!("cost override {field}={value}: value must be finite and >= 0");
+        }
+        let t = value.round() as Time;
+        let u = value.round() as usize;
+        match field {
+            "host_mpi_call" => self.host_mpi_call = t,
+            "host_enqueue_call" => self.host_enqueue_call = t,
+            "host_wait_overhead" => self.host_wait_overhead = t,
+            "kernel_enqueue" => self.kernel_enqueue = t,
+            "cp_dispatch" => self.cp_dispatch = t,
+            "stream_sync" => self.stream_sync = t,
+            "memop_hip" => self.memop_hip = t,
+            "memop_shader" => self.memop_shader = t,
+            "gpu_flops_per_ns" => self.gpu_flops_per_ns = value,
+            "gpu_mem_bw" => self.gpu_mem_bw = value,
+            "kernel_fixed" => self.kernel_fixed = t,
+            "nic_cmd_post" => self.nic_cmd_post = t,
+            "nic_proc" => self.nic_proc = t,
+            "nic_trigger_latency" => self.nic_trigger_latency = t,
+            "nic_match" => self.nic_match = t,
+            "nic_recv_post" => self.nic_recv_post = t,
+            "nic_completion" => self.nic_completion = t,
+            "wire_latency" => self.wire_latency = t,
+            "wire_bw" => self.wire_bw = value,
+            "eager_threshold" => self.eager_threshold = u,
+            "rendezvous_ctrl" => self.rendezvous_ctrl = t,
+            "host_rendezvous_progression" => self.host_rendezvous_progression = t,
+            "ipc_latency" => self.ipc_latency = t,
+            "ipc_bw" => self.ipc_bw = value,
+            "memcpy_small" => self.memcpy_small = t,
+            "memcpy_threshold" => self.memcpy_threshold = u,
+            "progress_wakeup" => self.progress_wakeup = t,
+            "progress_per_op" => self.progress_per_op = t,
+            "progress_completion" => self.progress_completion = t,
+            "progress_rendezvous_assist" => self.progress_rendezvous_assist = t,
+            "nic_counter_limit" => self.nic_counter_limit = u,
+            "dwq_slots_per_nic" => self.dwq_slots_per_nic = u,
+            "jitter_sigma" => self.jitter_sigma = value,
+            other => {
+                let names: Vec<&str> = self.fields().iter().map(|(n, _)| *n).collect();
+                anyhow::bail!("unknown cost-model field {other:?}; valid: {}", names.join(", "));
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -231,6 +338,34 @@ mod tests {
         let cm = presets::frontier_like();
         assert!(!cm.is_rendezvous(cm.eager_threshold));
         assert!(cm.is_rendezvous(cm.eager_threshold + 1));
+    }
+
+    #[test]
+    fn stable_hash_is_deterministic_and_field_sensitive() {
+        let base = presets::frontier_like();
+        assert_eq!(base.stable_hash(), presets::frontier_like().stable_hash());
+        // Every overridable field must perturb the hash (the store's
+        // invalidation rule depends on it).
+        for (name, value) in base.fields() {
+            let mut cm = presets::frontier_like();
+            cm.apply_override(name, value + 1.0).unwrap();
+            assert_ne!(cm.stable_hash(), base.stable_hash(), "field {name} must change the hash");
+        }
+    }
+
+    #[test]
+    fn apply_override_sets_fields_and_rejects_unknown() {
+        let mut cm = presets::frontier_like();
+        cm.apply_override("wire_bw", 50.0).unwrap();
+        assert_eq!(cm.wire_bw, 50.0);
+        cm.apply_override("eager_threshold", 1024.0).unwrap();
+        assert_eq!(cm.eager_threshold, 1024);
+        cm.apply_override("wire_latency", 900.0).unwrap();
+        assert_eq!(cm.wire_latency, 900);
+        let err = cm.apply_override("no_such_field", 1.0).unwrap_err().to_string();
+        assert!(err.contains("no_such_field") && err.contains("wire_bw"), "{err}");
+        assert!(cm.apply_override("wire_bw", f64::NAN).is_err());
+        assert!(cm.apply_override("wire_bw", -1.0).is_err());
     }
 
     #[test]

@@ -31,6 +31,7 @@
 //! | drop             | `nic::execute_send` (eager payload)    | remote delivery skipped; payload recorded in the lost ledger for watchdog retransmit |
 //! | duplicate        | `nic::execute_send` (eager payload)    | payload transferred twice with one sequence number; receiver discards the second copy |
 //! | delay            | `nic::execute_send` → `fabric::transfer_delayed` | wire transfer starts `delay` ns late |
+//! | rendezvous drop  | `nic::execute_send` (rendezvous RTS)   | the RTS control message occupies the wire but never reaches matching; the send descriptor (not the payload — that only moves on the Get pull) is recorded in the lost ledger for watchdog replay |
 //! | trigger delay    | `nic` DWQ fire path                    | descriptor executes late after its counter trips |
 //! | straggler        | `gpu::cp_step` kernel duration         | a seeded subset of ranks runs kernels slower by a fixed factor |
 //!
@@ -59,6 +60,13 @@ pub struct FaultSpec {
     /// Mean extra delay (ns) for delayed messages; the actual delay is
     /// uniform in `[delay_ns/2, delay_ns*3/2)`.
     pub delay_ns: u64,
+    /// Probability a rendezvous RTS control message is dropped on the
+    /// wire (the rendezvous-path fault: the receiver never learns the
+    /// payload exists, so without the watchdog replay the send side
+    /// would hang silently). Drawn from the shared decision stream, but
+    /// *only* when non-zero — eager-only specs keep their exact
+    /// historical decision sequences.
+    pub rdv_drop_prob: f64,
     /// Probability a tripped DWQ descriptor fires late.
     pub trigger_delay_prob: f64,
     /// Extra ns added to a delayed trigger fire.
@@ -89,6 +97,7 @@ impl Default for FaultSpec {
             dup_prob: 0.0,
             delay_prob: 0.0,
             delay_ns: 4_000,
+            rdv_drop_prob: 0.0,
             trigger_delay_prob: 0.0,
             trigger_delay_ns: 2_000,
             straggler_frac: 0.0,
@@ -108,6 +117,7 @@ impl FaultSpec {
         self.drop_prob > 0.0
             || self.dup_prob > 0.0
             || self.delay_prob > 0.0
+            || self.rdv_drop_prob > 0.0
             || self.trigger_delay_prob > 0.0
             || self.straggler_frac > 0.0
     }
@@ -133,7 +143,17 @@ impl FaultSpec {
         }
     }
 
-    /// Everything at once — the chaos-campaign default.
+    /// Rendezvous-drop-only plan (exercises the RTS replay path; only
+    /// messages above the eager threshold are at risk).
+    pub fn rdv_drops(seed: u64) -> Self {
+        Self { rdv_drop_prob: 0.25, seed, ..Self::default() }
+    }
+
+    /// Everything at once — the chaos-campaign default. Deliberately
+    /// leaves `rdv_drop_prob` at zero so the chaos decision streams
+    /// pinned by earlier releases stay byte-identical; rendezvous
+    /// chaos is opted into via [`FaultSpec::rdv_drops`] or an explicit
+    /// spec.
     pub fn chaos(seed: u64) -> Self {
         Self {
             drop_prob: 0.06,
@@ -144,6 +164,51 @@ impl FaultSpec {
             seed,
             ..Self::default()
         }
+    }
+
+    /// Look up a named preset — the vocabulary of the
+    /// `campaign.faults=`/`STMPI_FAULTS=` CLI shorthands and of fault
+    /// fields in store-server campaign specs. `None` for unknown names;
+    /// [`FaultSpec::preset_names`] lists the valid ones.
+    pub fn preset(name: &str, seed: u64) -> Option<Self> {
+        match name {
+            "drops" => Some(Self::drops(seed)),
+            "dups" => Some(Self::dups(seed)),
+            "delays" => Some(Self::delays(seed)),
+            "rdv-drops" | "rdv_drops" => Some(Self::rdv_drops(seed)),
+            "chaos" => Some(Self::chaos(seed)),
+            _ => None,
+        }
+    }
+
+    /// The names [`FaultSpec::preset`] accepts (for error messages).
+    pub fn preset_names() -> &'static [&'static str] {
+        &["drops", "dups", "delays", "rdv-drops", "chaos"]
+    }
+
+    /// Stable FNV-1a fingerprint of the full spec, by field name and
+    /// IEEE bit pattern — the fault component of the campaign store's
+    /// cell keys. Two cells share it iff their specs are semantically
+    /// identical. Extending the spec extends this fold, which shifts
+    /// every hash — that is the correct invalidation behavior, since a
+    /// new knob means the old decision streams are no longer
+    /// reproducible guarantees.
+    pub fn stable_hash(&self) -> u64 {
+        let mut h = crate::sim::rng::Fnv64::new();
+        h.write_str("drop_prob").write_f64(self.drop_prob);
+        h.write_str("dup_prob").write_f64(self.dup_prob);
+        h.write_str("delay_prob").write_f64(self.delay_prob);
+        h.write_str("delay_ns").write_u64(self.delay_ns);
+        h.write_str("rdv_drop_prob").write_f64(self.rdv_drop_prob);
+        h.write_str("trigger_delay_prob").write_f64(self.trigger_delay_prob);
+        h.write_str("trigger_delay_ns").write_u64(self.trigger_delay_ns);
+        h.write_str("straggler_frac").write_f64(self.straggler_frac);
+        h.write_str("straggler_factor").write_f64(self.straggler_factor);
+        h.write_str("watchdog_ns").write_u64(self.watchdog_ns);
+        h.write_str("max_retries").write_u64(u64::from(self.max_retries));
+        h.write_str("timeout_error").write_u64(u64::from(self.timeout_error));
+        h.write_str("seed").write_u64(self.seed);
+        h.finish()
     }
 }
 
@@ -223,6 +288,14 @@ impl FaultPlan {
         }
     }
 
+    /// Decide whether the next rendezvous RTS is dropped. Consumes a
+    /// decision draw *only* when `rdv_drop_prob` is set, so the eager
+    /// decision sequences of pre-existing (eager-only) specs replay
+    /// bit-identically.
+    pub fn rdv_drop(&mut self) -> bool {
+        self.spec.rdv_drop_prob > 0.0 && self.rng.next_f64() < self.spec.rdv_drop_prob
+    }
+
     /// Extra ns before a tripped DWQ descriptor fires (0 = on time).
     pub fn trigger_extra(&mut self) -> u64 {
         if self.spec.trigger_delay_prob > 0.0 && self.rng.next_f64() < self.spec.trigger_delay_prob
@@ -240,24 +313,44 @@ impl FaultPlan {
     }
 }
 
-/// A dropped eager payload awaiting watchdog retransmission: everything
-/// `nic::retransmit` needs to put the identical message back on the wire
-/// (same envelope, same payload snapshot, same sequence number — the
-/// receiver-side dedup set makes a redundant retransmit harmless).
-#[derive(Debug, Clone)]
-pub struct LostMsg {
-    pub env: Envelope,
-    pub payload: Vec<f32>,
-    pub seq: u64,
-    pub src_node: usize,
-    pub dst_node: usize,
-    /// Wire size of the original message (the retransmit pays it again).
-    pub bytes: usize,
+/// A dropped wire message awaiting watchdog replay: everything
+/// `nic::retransmit` needs to put the identical traffic back on the
+/// wire.
+#[derive(Debug)]
+pub enum LostMsg {
+    /// A dropped eager payload (same envelope, same payload snapshot,
+    /// same sequence number — the receiver-side dedup set makes a
+    /// redundant retransmit harmless).
+    Eager {
+        env: Envelope,
+        payload: Vec<f32>,
+        seq: u64,
+        src_node: usize,
+        dst_node: usize,
+        /// Wire size of the original message (the retransmit pays it
+        /// again).
+        bytes: usize,
+    },
+    /// A dropped rendezvous RTS. The payload never left the source (it
+    /// only moves on the Get pull), so the ledger holds the send
+    /// *descriptor*: the source slice the matched receiver will pull
+    /// from, and the source-side completion (`src_done`) that fires
+    /// once that pull drains — which is also why this variant (and thus
+    /// the ledger) is not `Clone`: a completion must fire exactly once.
+    Rts {
+        env: Envelope,
+        src: crate::nic::BufSlice,
+        src_node: usize,
+        dst_node: usize,
+        src_done: crate::nic::Done,
+    },
 }
 
 /// Per-world fault runtime state (lives at `World::fault`; `None` means
-/// the fault layer is fully inert).
-#[derive(Debug, Clone)]
+/// the fault layer is fully inert). Not `Clone`: the lost ledger can
+/// hold single-fire completions (see [`LostMsg::Rts`]), and
+/// `World::reset`/`snapshot` drop fault state rather than copy it.
+#[derive(Debug)]
 pub struct FaultState {
     pub plan: FaultPlan,
     /// Dropped payloads awaiting retransmission by the stx watchdog.
@@ -349,6 +442,54 @@ mod tests {
         assert!(drops > 0 && dups > 0 && delays > 0 && clean > 0);
         let stragglers = (0..16).filter(|&r| p.straggler_factor(r) > 1.0).count();
         assert!(stragglers > 0 && stragglers < 16);
+    }
+
+    #[test]
+    fn rdv_drop_gate_consumes_no_draws_when_inactive() {
+        // An eager-only spec must keep its exact decision sequence even
+        // if the rendezvous site polls the plan between eager draws.
+        let spec = FaultSpec::chaos(9);
+        assert_eq!(spec.rdv_drop_prob, 0.0, "chaos stays eager-only by design");
+        let fp = fingerprint(spec.seed, "gate");
+        let mut with_polls = FaultPlan::new(spec.clone(), fp, 4);
+        let mut without = FaultPlan::new(spec, fp, 4);
+        for _ in 0..256 {
+            assert!(!with_polls.rdv_drop(), "inactive knob must never drop");
+            assert_eq!(with_polls.wire_fault(), without.wire_fault());
+        }
+    }
+
+    #[test]
+    fn rdv_drops_preset_injects_on_the_rendezvous_path() {
+        let spec = FaultSpec::rdv_drops(4);
+        assert!(spec.injects());
+        assert_eq!(spec.drop_prob, 0.0, "rdv preset leaves eager traffic clean");
+        let mut p = FaultPlan::new(spec, fingerprint(4, "rdv"), 4);
+        let drops = (0..400).filter(|_| p.rdv_drop()).count();
+        assert!(drops > 0 && drops < 400, "rdv_drop_prob=0.25 must drop some, not all: {drops}");
+    }
+
+    #[test]
+    fn preset_lookup_covers_the_published_names() {
+        for name in FaultSpec::preset_names() {
+            let spec = FaultSpec::preset(name, 3);
+            assert!(spec.is_some_and(|s| s.injects() && s.seed == 3), "preset {name}");
+        }
+        assert!(FaultSpec::preset("no-such", 3).is_none());
+    }
+
+    #[test]
+    fn stable_hash_is_deterministic_and_field_sensitive() {
+        let base = FaultSpec::chaos(7);
+        assert_eq!(base.stable_hash(), FaultSpec::chaos(7).stable_hash());
+        let mut tweaked = base.clone();
+        tweaked.rdv_drop_prob = 0.01;
+        assert_ne!(base.stable_hash(), tweaked.stable_hash());
+        assert_ne!(base.stable_hash(), FaultSpec::chaos(8).stable_hash());
+        assert_ne!(FaultSpec::drops(7).stable_hash(), FaultSpec::dups(7).stable_hash());
+        let mut wd = base.clone();
+        wd.watchdog_ns += 1;
+        assert_ne!(base.stable_hash(), wd.stable_hash());
     }
 
     #[test]

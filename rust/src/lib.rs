@@ -29,7 +29,8 @@
 //! | [`stx`] | stx v2: typed [`stx::Queue`] handles, persistent [`stx::CommPlan`]s, KT hooks, the [`stx::Variant`] axis |
 //! | [`collectives`] | ST ring / ST recursive-doubling / KT ring allreduce |
 //! | [`faces`] | the Faces halo-exchange benchmark + figure harness |
-//! | [`workloads`] | `Workload` trait, eight scenarios, run scaffold, campaign driver |
+//! | [`workloads`] | `Workload` trait, nine scenarios, run scaffold, campaign driver |
+//! | [`store`] | content-addressed campaign store: cell fingerprints, segment-log persistence, incremental reruns, query service |
 //! | [`coordinator`] | world building, cluster run loop, config, reporting |
 //! | [`runtime`] | PJRT loader for AOT HLO artifacts (feature `xla`) |
 //! | [`train`] | ST-allreduce data-parallel trainer |
@@ -50,6 +51,7 @@ pub mod nic;
 pub mod obs;
 pub mod runtime;
 pub mod sim;
+pub mod store;
 pub mod stx;
 pub mod train;
 pub mod workloads;

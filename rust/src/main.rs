@@ -6,6 +6,8 @@
 //! stmpi faces [--config faces.toml] [key=value ...]
 //! stmpi sweep                      # regenerate Figs 8-12
 //! stmpi campaign [key=value ...]   # workload-engine comparative report
+//! stmpi serve [key=value ...]      # campaign store as a TCP query service
+//! stmpi diff [key=value ...]       # re-cost a campaign under overrides
 //! stmpi train [key=value ...]
 //! stmpi figures fig9 fig11         # selected figures
 //! ```
@@ -16,12 +18,12 @@
 //!   faces.variant=baseline|st|st-shader|kt  faces.real=true  faces.check=true
 //!   seed=11  jitter=0.03
 //! `campaign` keys (comma lists; empty = defaults):
-//!   campaign.workloads=faces,halo3d,allreduce,alltoall,incast,allgather,halograph,reduce-scatter
+//!   campaign.workloads=faces,halo3d,allreduce,alltoall,incast,allgather,halograph,reduce-scatter,broadcast
 //!   campaign.variants=baseline,st,kt,ring-st,rdbl-st,ring-kt
 //!   campaign.sizes=256,4096  campaign.topos=2x1,4x1  campaign.seeds=11,23
 //!   campaign.queues=1,2 (queues per rank)  campaign.dwq_slots=4
 //!   campaign.iters=3  campaign.jitter=0.01  campaign.out=CAMPAIGN_report
-//!   campaign.faults=off|drops|dups|delays|chaos  campaign.fault_seed=11
+//!   campaign.faults=off|drops|dups|delays|rdv-drops|chaos  campaign.fault_seed=11
 //!   (the chaos axis; `STMPI_FAULTS=1` in the environment is shorthand
 //!   for campaign.faults=chaos — stalled cells render as `stalled` rows
 //!   carrying their StallReport instead of aborting the sweep)
@@ -30,6 +32,19 @@
 //!   Perfetto / chrome://tracing; `STMPI_TRACE=1` in the environment is
 //!   shorthand for campaign.trace=TRACE, `STMPI_TRACE=0` disables
 //!   recording entirely and the overlap %/crit-path columns render `--`)
+//!   campaign.store=STORE (content-addressed result store directory:
+//!   per-(cell x seed) results persist to an append-only segment log and
+//!   reruns serve fingerprint hits from cache instead of simulating —
+//!   byte-identical report either way; cache stats land in
+//!   `<out>_STORE_stats.json`; `STMPI_STORE=DIR` is the env shorthand)
+//!   campaign.cost=field:value,... (cost-model overrides, applied before
+//!   fingerprinting — changed costs re-simulate every affected cell)
+//! `serve` keys: serve.addr=127.0.0.1:7878  serve.store=STORE — the
+//!   line-oriented JSON protocol is documented in `store::server`.
+//! `diff` keys: every campaign.* key plus the required
+//!   diff.overrides=field:value,... — runs the same grid under the base
+//!   and overridden cost models (both legs incremental when
+//!   campaign.store is set) and writes DIFF_report.{json,md}.
 //! `train` keys: train.nodes, train.rpn, train.steps, seed.
 //!
 //! `sweep` regenerates Figs 8-12, the ST-vs-KT figure (figkt), and the
@@ -45,8 +60,10 @@ use stmpi::faces::figures::{
     SEEDS,
 };
 use stmpi::faces::{run_faces, FacesConfig, Variant};
+use stmpi::store::server::Server;
+use stmpi::store::Store;
 use stmpi::train::{train, TrainConfig};
-use stmpi::workloads::{run_campaign, CampaignSpec};
+use stmpi::workloads::{diff_cost_models, run_campaign, CampaignSpec};
 use stmpi::world::ComputeMode;
 
 fn main() {
@@ -62,11 +79,14 @@ fn run() -> Result<()> {
         Some("faces") => cmd_faces(&args[1..]),
         Some("sweep") => cmd_sweep(),
         Some("campaign") => cmd_campaign(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("diff") => cmd_diff(&args[1..]),
         Some("figures") => cmd_figures(&args[1..]),
         Some("train") => cmd_train(&args[1..]),
         Some("--help") | Some("-h") | None => {
             println!(
-                "usage: stmpi <faces|sweep|campaign|figures|train> [--config FILE] [key=value ...]"
+                "usage: stmpi <faces|sweep|campaign|serve|diff|figures|train> \
+                 [--config FILE] [key=value ...]"
             );
             println!("see module docs in rust/src/main.rs for the key list");
             Ok(())
@@ -148,14 +168,33 @@ fn comma_list(c: &Config, key: &str) -> Vec<String> {
         .unwrap_or_default()
 }
 
-fn cmd_campaign(args: &[String]) -> Result<()> {
-    let c = load_config(args)?;
+/// Parse `field:value,...` cost-model override pairs (the value side of
+/// `campaign.cost=` / `diff.overrides=`; `:` separates because `=` is
+/// taken by the key=value CLI grammar).
+fn parse_cost_pairs(list: &[String], key: &str) -> Result<Vec<(String, f64)>> {
+    list.iter()
+        .map(|pair| -> Result<(String, f64)> {
+            let (field, value) = pair
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("{key} entry '{pair}' (want field:value)"))?;
+            let value = value
+                .trim()
+                .parse::<f64>()
+                .with_context(|| format!("{key} entry '{pair}'"))?;
+            Ok((field.trim().to_string(), value))
+        })
+        .collect()
+}
+
+/// Build a [`CampaignSpec`] from the shared `campaign.*` key vocabulary
+/// (used by both `stmpi campaign` and `stmpi diff`).
+fn campaign_spec(c: &Config) -> Result<CampaignSpec> {
     let defaults = CampaignSpec::default();
-    let elems = comma_list(&c, "campaign.sizes")
+    let elems = comma_list(c, "campaign.sizes")
         .iter()
         .map(|s| s.parse::<usize>().with_context(|| format!("campaign.sizes entry '{s}'")))
         .collect::<Result<Vec<_>>>()?;
-    let topo_list = comma_list(&c, "campaign.topos");
+    let topo_list = comma_list(c, "campaign.topos");
     let topos = if topo_list.is_empty() {
         defaults.topos.clone()
     } else {
@@ -169,7 +208,7 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
             })
             .collect::<Result<Vec<_>>>()?
     };
-    let seed_list = comma_list(&c, "campaign.seeds");
+    let seed_list = comma_list(c, "campaign.seeds");
     let seeds = if seed_list.is_empty() {
         defaults.seeds.clone()
     } else {
@@ -178,7 +217,7 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
             .map(|s| s.parse::<u64>().with_context(|| format!("campaign.seeds entry '{s}'")))
             .collect::<Result<Vec<_>>>()?
     };
-    let queue_list = comma_list(&c, "campaign.queues");
+    let queue_list = comma_list(c, "campaign.queues");
     let queues = if queue_list.is_empty() {
         defaults.queues.clone()
     } else {
@@ -210,9 +249,16 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         }
         None => None,
     };
-    let spec = CampaignSpec {
-        workloads: comma_list(&c, "campaign.workloads"),
-        variants: comma_list(&c, "campaign.variants"),
+    let store = match c.get("campaign.store") {
+        Some(dir) => Some(dir.to_string()),
+        // `STMPI_STORE=DIR` is the CI incremental leg's shorthand for
+        // campaign.store=DIR.
+        None => std::env::var("STMPI_STORE").ok().filter(|d| !d.is_empty()),
+    };
+    let cost_overrides = parse_cost_pairs(&comma_list(c, "campaign.cost"), "campaign.cost")?;
+    Ok(CampaignSpec {
+        workloads: comma_list(c, "campaign.workloads"),
+        variants: comma_list(c, "campaign.variants"),
         elems,
         topos,
         queues,
@@ -223,7 +269,14 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         threads: None,
         faults,
         trace,
-    };
+        store,
+        cost_overrides,
+    })
+}
+
+fn cmd_campaign(args: &[String]) -> Result<()> {
+    let c = load_config(args)?;
+    let spec = campaign_spec(&c)?;
     let report = run_campaign(&spec)?;
     println!("{}", report.to_markdown());
     let out = c.str_or("campaign.out", "CAMPAIGN_report");
@@ -260,6 +313,21 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         }
         println!("wrote {wrote} Chrome trace file(s) with prefix {prefix}");
     }
+    if let Some(dir) = &spec.store {
+        // Cache accounting stays out of the report bytes (warm and cold
+        // runs must render identically); it lands in its own artifact.
+        let store = Store::open(std::path::Path::new(dir))?;
+        let stats = store.stats_json(&report.cache);
+        let path = format!("{out}_STORE_stats.json");
+        std::fs::write(&path, &stats).with_context(|| format!("writing {path}"))?;
+        println!(
+            "store {dir}: {} hit(s), {} simulated, {:.3} ms of virtual time served from cache \
+             (stats in {path})",
+            report.cache.hits,
+            report.cache.misses,
+            report.cache.simulated_ns_saved as f64 / 1e6
+        );
+    }
     if !report.all_ok() {
         let stalled: u64 = report.cells.iter().map(|c| c.stalls).sum();
         if stalled > 0 {
@@ -272,14 +340,55 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
 
 /// Parse the `campaign.faults` preset name into a [`FaultSpec`].
 fn fault_preset(name: &str, seed: u64) -> Result<Option<FaultSpec>> {
-    match name {
-        "off" => Ok(None),
-        "drops" => Ok(Some(FaultSpec::drops(seed))),
-        "dups" => Ok(Some(FaultSpec::dups(seed))),
-        "delays" => Ok(Some(FaultSpec::delays(seed))),
-        "chaos" => Ok(Some(FaultSpec::chaos(seed))),
-        other => bail!("unknown campaign.faults preset '{other}' (off|drops|dups|delays|chaos)"),
+    if name == "off" {
+        return Ok(None);
     }
+    match FaultSpec::preset(name, seed) {
+        Some(spec) => Ok(Some(spec)),
+        None => bail!(
+            "unknown campaign.faults preset '{name}' (off or one of {:?})",
+            FaultSpec::preset_names()
+        ),
+    }
+}
+
+/// `stmpi serve`: run the campaign store as a line-oriented TCP query
+/// service (see `store::server` for the protocol). Blocks until a
+/// client sends `{"op":"shutdown"}`.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let c = load_config(args)?;
+    let addr = c.str_or("serve.addr", "127.0.0.1:7878");
+    let dir = c.str_or("serve.store", "STORE");
+    let server = Server::bind(addr, std::path::Path::new(dir))?;
+    println!("stmpi serve: store {dir} on {}", server.local_addr()?);
+    server.serve()
+}
+
+/// `stmpi diff`: run the configured campaign grid under the base cost
+/// model and under `diff.overrides`, and report the per-cell deltas.
+fn cmd_diff(args: &[String]) -> Result<()> {
+    let c = load_config(args)?;
+    let spec = campaign_spec(&c)?;
+    let pairs = comma_list(&c, "diff.overrides");
+    if pairs.is_empty() {
+        bail!("diff needs diff.overrides=field:value,... (cost-model fields to perturb)");
+    }
+    let overrides = parse_cost_pairs(&pairs, "diff.overrides")?;
+    let diff = diff_cost_models(&spec, &overrides)?;
+    println!("{}", diff.to_markdown());
+    let out = c.str_or("diff.out", "DIFF_report");
+    std::fs::write(format!("{out}.json"), diff.to_json())
+        .with_context(|| format!("writing {out}.json"))?;
+    std::fs::write(format!("{out}.md"), diff.to_markdown())
+        .with_context(|| format!("writing {out}.md"))?;
+    println!("wrote {out}.json and {out}.md");
+    if let Some(dir) = &spec.store {
+        println!(
+            "store {dir}: {} hit(s), {} simulated across both cost legs",
+            diff.cache.hits, diff.cache.misses
+        );
+    }
+    Ok(())
 }
 
 fn cmd_figures(names: &[String]) -> Result<()> {

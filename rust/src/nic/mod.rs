@@ -387,6 +387,38 @@ pub fn execute_send(w: &mut World, core: &mut Ctx, env: Envelope, src: BufSlice,
         core.schedule(
             proc_delay,
             Box::new(move |w, core| {
+                // Rendezvous-path fault decision. `FaultPlan::rdv_drop`
+                // consumes a draw only when `rdv_drop_prob` is set, so
+                // eager-only specs keep their exact decision streams.
+                if w.fault.as_mut().is_some_and(|f| f.plan.rdv_drop()) {
+                    // The RTS leaves the source port (the NIC believes
+                    // it sent) but vanishes in the fabric: the receiver
+                    // never learns the payload exists — the silent-hang
+                    // scenario — until the stx watchdog replays the
+                    // send descriptor from the lost ledger. The payload
+                    // itself never moved (it only travels on the Get
+                    // pull), so only the descriptor is recorded.
+                    w.metrics.faults_injected += 1;
+                    if let Some(f) = w.fault.as_mut() {
+                        f.lost.push(LostMsg::Rts {
+                            env,
+                            src,
+                            src_node,
+                            dst_node,
+                            src_done: send_done,
+                        });
+                    }
+                    fabric::transfer_tagged(
+                        w,
+                        core,
+                        src_node,
+                        dst_node,
+                        64, // RTS descriptor size
+                        WireTag { src_rank: env.src_rank as u32, retransmit: false },
+                        Box::new(|_, _| {}),
+                    );
+                    return;
+                }
                 let msg = WireMsg::Rts { env, src, src_node, src_done: send_done };
                 let match_cost = w.cost.nic_match;
                 fabric::transfer_tagged(
@@ -418,9 +450,10 @@ pub fn execute_send(w: &mut World, core: &mut Ctx, env: Envelope, src: BufSlice,
                     Vec::new()
                 };
                 // Fault decision — inert (seq 0, WireFault::None, zero
-                // extra draws) when no plan is active. Only eager payload
-                // messages are faulted; RTS/rendezvous control traffic is
-                // out of scope (DESIGN.md §Fault model).
+                // extra draws) when no plan is active. Eager payloads
+                // take the full drop/dup/delay menu; the rendezvous
+                // path has its own RTS-drop site above (DESIGN.md
+                // §Fault model).
                 let mut seq = 0u64;
                 let mut fault = WireFault::None;
                 if let Some(f) = w.fault.as_mut() {
@@ -441,7 +474,7 @@ pub fn execute_send(w: &mut World, core: &mut Ctx, env: Envelope, src: BufSlice,
                         // lost ledger.
                         w.metrics.faults_injected += 1;
                         if let Some(f) = w.fault.as_mut() {
-                            f.lost.push(LostMsg {
+                            f.lost.push(LostMsg::Eager {
                                 env,
                                 payload: payload.clone(),
                                 seq,
@@ -556,28 +589,54 @@ fn eager_wire_send(
     );
 }
 
-/// Replay a dropped eager payload from the lost ledger (stx watchdog
+/// Replay a dropped message from the lost ledger (stx watchdog
 /// recovery). Retransmits bypass further fault injection — they always
-/// reach the destination — so bounded retries converge; the receiver's
-/// sequence dedup makes a redundant replay harmless. Local completion
-/// already fired at the original send; only remote delivery is replayed.
+/// reach the destination — so bounded retries converge. For eager
+/// payloads the receiver's sequence dedup makes a redundant replay
+/// harmless, and only remote delivery is replayed (local completion
+/// already fired at the original send). For a dropped rendezvous RTS
+/// the whole control message is replayed — the source completion rides
+/// in it and fires exactly once, when the matched receiver's Get pull
+/// finally drains the payload.
 pub fn retransmit(w: &mut World, core: &mut Ctx, lost: LostMsg) {
     w.metrics.retries += 1;
-    let LostMsg { env, payload, seq, src_node, dst_node, bytes } = lost;
-    eager_wire_send(
-        w,
-        core,
-        env,
-        payload,
-        seq,
-        src_node,
-        dst_node,
-        bytes,
-        Done::none(),
-        0,
-        true,
-        true,
-    );
+    match lost {
+        LostMsg::Eager { env, payload, seq, src_node, dst_node, bytes } => {
+            eager_wire_send(
+                w,
+                core,
+                env,
+                payload,
+                seq,
+                src_node,
+                dst_node,
+                bytes,
+                Done::none(),
+                0,
+                true,
+                true,
+            );
+        }
+        LostMsg::Rts { env, src, src_node, dst_node, src_done } => {
+            let msg = WireMsg::Rts { env, src, src_node, src_done };
+            let match_cost = w.cost.nic_match;
+            fabric::transfer_tagged(
+                w,
+                core,
+                src_node,
+                dst_node,
+                64, // RTS descriptor size
+                WireTag { src_rank: env.src_rank as u32, retransmit: true },
+                Box::new(move |w, core| {
+                    core.schedule(
+                        match_cost,
+                        Box::new(move |w2, c2| crate::mpi::deliver_from_wire(w2, c2, msg)),
+                    );
+                    let _ = w;
+                }),
+            );
+        }
+    }
 }
 
 /// Post a *triggered* tagged receive to the NIC command queue: when

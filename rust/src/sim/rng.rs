@@ -58,9 +58,112 @@ impl SplitMix64 {
     }
 }
 
+/// Incremental FNV-1a 64-bit hasher.
+///
+/// This is the repo's canonical *stable* hash: unlike
+/// `std::collections::hash_map::DefaultHasher` its output is pinned by
+/// the algorithm itself, so values may be persisted (the campaign
+/// store's cell fingerprints), compared across processes, and golden-
+/// tested. The single-shot variant in `fault::fingerprint` uses the
+/// same constants.
+#[derive(Debug, Clone)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+impl Fnv64 {
+    /// FNV-1a offset basis.
+    pub const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    /// FNV-1a prime.
+    pub const PRIME: u64 = 0x0000_0100_0000_01B3;
+
+    /// Start a new hash at the offset basis.
+    pub fn new() -> Self {
+        Self { state: Self::OFFSET }
+    }
+
+    /// Fold raw bytes into the hash.
+    #[inline]
+    pub fn write_bytes(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(Self::PRIME);
+        }
+        self
+    }
+
+    /// Fold a UTF-8 string into the hash.
+    #[inline]
+    pub fn write_str(&mut self, s: &str) -> &mut Self {
+        self.write_bytes(s.as_bytes())
+    }
+
+    /// Fold a `u64` into the hash, little-endian byte order.
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) -> &mut Self {
+        self.write_bytes(&v.to_le_bytes())
+    }
+
+    /// Fold an `f64` into the hash via its IEEE-754 bit pattern, so
+    /// that semantically distinct values (including `-0.0` vs `0.0`)
+    /// hash distinctly and equal values hash equally.
+    #[inline]
+    pub fn write_f64(&mut self, v: f64) -> &mut Self {
+        self.write_u64(v.to_bits())
+    }
+
+    /// The current hash value.
+    #[inline]
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+
+    /// One-shot hash of a string.
+    pub fn hash_str(s: &str) -> u64 {
+        let mut h = Self::new();
+        h.write_str(s);
+        h.finish()
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fnv_matches_published_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(Fnv64::hash_str(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(Fnv64::hash_str("a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(Fnv64::hash_str("foobar"), 0x85dd_35c9_7569_6088);
+    }
+
+    #[test]
+    fn fnv_incremental_equals_one_shot() {
+        let mut h = Fnv64::new();
+        h.write_str("foo").write_str("bar");
+        assert_eq!(h.finish(), Fnv64::hash_str("foobar"));
+    }
+
+    #[test]
+    fn fnv_u64_and_f64_are_order_sensitive() {
+        let mut a = Fnv64::new();
+        a.write_u64(1).write_u64(2);
+        let mut b = Fnv64::new();
+        b.write_u64(2).write_u64(1);
+        assert_ne!(a.finish(), b.finish());
+        let mut c = Fnv64::new();
+        c.write_f64(1.5);
+        let mut d = Fnv64::new();
+        d.write_u64(1.5_f64.to_bits());
+        assert_eq!(c.finish(), d.finish());
+    }
 
     #[test]
     fn deterministic_for_seed() {

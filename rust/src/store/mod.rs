@@ -1,0 +1,1113 @@
+//! Campaign store: a content-addressed, persistent result cache.
+//!
+//! The campaign driver's unit of work is one `(cell × seed)` job — a
+//! deterministic function of its full configuration. This module gives
+//! every job a **canonical fingerprint** ([`CellKey`]) and persists its
+//! result ([`SeedRecord`]) in an on-disk index, so reruns are
+//! *incremental*: jobs whose fingerprint is already present are served
+//! from the store byte-identically, and only new fingerprints are
+//! simulated. On top of it, `store::server` exposes the whole engine as
+//! a long-running queryable service.
+//!
+//! ## Fingerprint canon
+//!
+//! A key canonicalizes exactly the inputs a run is a function of:
+//! workload, variant, payload size, topology, queues-per-rank, the
+//! explicit DWQ-slot override, iteration count, seed, the
+//! [`crate::costmodel::CostModel::stable_hash`] of the *effective* cost
+//! model (which already folds in campaign jitter, DWQ-slot and `diff`
+//! overrides), the [`crate::fault::FaultSpec::stable_hash`] of the
+//! fault spec (or its absence), and whether event recording was enabled
+//! ([`crate::obs::recording_enabled`] — the overlap/critical-path
+//! columns exist only when it was). The canon is rendered as one pinned
+//! string (see [`CellKey::canon`]) and hashed with the repo's stable
+//! FNV-1a ([`crate::sim::rng::Fnv64`]); [`SCHEMA_VERSION`] leads the
+//! string, so a format change invalidates every old key at once instead
+//! of misreading old records.
+//!
+//! ## Segment log
+//!
+//! A store directory holds append-only JSON-lines segments
+//! (`seg-NNNNNN.log`), one record per line, each line carrying its key.
+//! [`Store::open`] replays every segment in name order into an
+//! in-memory map (later records win — that is the upsert rule); each
+//! process appends to a fresh segment, so the single-committer writer
+//! (the campaign thread; sweep workers only simulate) never interleaves
+//! with historical data. A segment that fails to parse is **quarantined,
+//! not fatal**: the valid prefix of its records is kept, the file is
+//! renamed `*.quarantined`, and the open continues — a truncated tail
+//! from a killed process costs at most the cells of that tail, which
+//! the next campaign simply re-simulates.
+//!
+//! Everything here is hand-rolled std (no serde, no async): the JSON
+//! layer is [`Json`], a minimal value parser that keeps numbers as raw
+//! text so `u64` counters survive without an `f64` round-trip.
+
+pub mod server;
+
+use std::collections::HashMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::report::json_escape;
+use crate::obs::{CritPath, Overlap};
+use crate::sim::rng::Fnv64;
+use crate::workloads::QueueSlotStats;
+
+/// Store schema version, folded into every [`CellKey`]. Bump it when
+/// the record schema, the key canon, or any hash feeding the canon
+/// changes meaning: old segments remain parseable history but all old
+/// keys stop matching, which is the safe failure mode.
+pub const SCHEMA_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------
+// Cell keys
+// ---------------------------------------------------------------------
+
+/// The canonical identity of one `(cell × seed)` campaign job — the
+/// content address of its result. See the module docs for exactly what
+/// is (and is not) part of the canon.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CellKey<'a> {
+    pub workload: &'a str,
+    pub variant: &'a str,
+    pub elems: usize,
+    pub nodes: usize,
+    pub rpn: usize,
+    pub queues: usize,
+    /// The campaign's explicit DWQ-slot override (`None` = preset
+    /// default). Also folded into `cost_hash`; kept explicit so the
+    /// canon string stays a readable record of the grid point.
+    pub dwq_slots: Option<usize>,
+    pub iters: usize,
+    pub seed: u64,
+    /// [`crate::costmodel::CostModel::stable_hash`] of the *effective*
+    /// model (jitter, DWQ and diff overrides applied).
+    pub cost_hash: u64,
+    /// [`crate::fault::FaultSpec::stable_hash`], `None` when the
+    /// campaign runs fault-free.
+    pub fault_hash: Option<u64>,
+    /// Whether event recording was enabled for the run
+    /// ([`crate::obs::recording_enabled`]): it decides whether the
+    /// overlap/critical-path fields exist, so it is result-relevant.
+    pub trace_on: bool,
+}
+
+impl CellKey<'_> {
+    /// The pinned canonical string. Format (`-` marks an absent
+    /// optional component):
+    ///
+    /// ```text
+    /// stmpi-store/v1|<workload>|<variant>|e<elems>|<nodes>x<rpn>|q<queues>|dwq<slots|->|i<iters>|s<seed>|c<cost_hash:016x>|f<fault_hash:016x|->|t<0|1>
+    /// ```
+    pub fn canon(&self) -> String {
+        let dwq = match self.dwq_slots {
+            Some(n) => n.to_string(),
+            None => "-".to_string(),
+        };
+        let fault = match self.fault_hash {
+            Some(h) => format!("{h:016x}"),
+            None => "-".to_string(),
+        };
+        format!(
+            "stmpi-store/v{}|{}|{}|e{}|{}x{}|q{}|dwq{}|i{}|s{}|c{:016x}|f{}|t{}",
+            SCHEMA_VERSION,
+            self.workload,
+            self.variant,
+            self.elems,
+            self.nodes,
+            self.rpn,
+            self.queues,
+            dwq,
+            self.iters,
+            self.seed,
+            self.cost_hash,
+            fault,
+            u8::from(self.trace_on),
+        )
+    }
+
+    /// Stable FNV-1a fingerprint of [`CellKey::canon`] — the store key.
+    pub fn fingerprint(&self) -> u64 {
+        Fnv64::hash_str(&self.canon())
+    }
+}
+
+/// Render a store key the way segment lines and query responses carry
+/// it: 16 lowercase hex digits.
+pub fn key_hex(key: u64) -> String {
+    format!("{key:016x}")
+}
+
+/// Parse a 16-hex-digit store key (the inverse of [`key_hex`]).
+pub fn parse_key_hex(s: &str) -> Option<u64> {
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+// ---------------------------------------------------------------------
+// Seed records
+// ---------------------------------------------------------------------
+
+/// The persisted result of one `(cell × seed)` job: every field the
+/// campaign report reads when assembling a cell row, in the exact
+/// integer domains the report math uses — which is what makes a cached
+/// row **byte-identical** to the cold row it replaced. Stall outcomes
+/// are records too (`stalled == true` with the diagnosis strings), so a
+/// chaos campaign is just as cacheable as a clean one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeedRecord {
+    pub workload: String,
+    pub variant: String,
+    pub elems: usize,
+    pub nodes: usize,
+    pub rpn: usize,
+    pub qpr: usize,
+    pub seed: u64,
+    /// True when this seed ended in a stall report instead of
+    /// completing; the metric fields below are then zero and the two
+    /// `stall_*` strings carry the diagnosis.
+    pub stalled: bool,
+    /// Figure of merit in virtual ns (0 for stalled seeds).
+    pub time_ns: u64,
+    pub validation_ok: bool,
+    /// The rendered [`crate::workloads::Validation::label`].
+    pub validation_label: String,
+    pub bytes_wire: u64,
+    pub wire_msgs: u64,
+    pub max_ingress_wait_ns: u64,
+    pub max_egress_wait_ns: u64,
+    pub dwq_slot_waits: u64,
+    pub dwq_peak: u64,
+    pub unexpected_msgs: u64,
+    pub events: u64,
+    pub faults_injected: u64,
+    pub retries: u64,
+    pub timeouts: u64,
+    pub per_queue: Vec<QueueSlotStats>,
+    /// Raw overlap counters (the report derives the percentage).
+    pub overlap: Option<Overlap>,
+    pub crit: Option<CritPath>,
+    /// [`crate::sim::StallReport`] headline (empty unless stalled).
+    pub stall_headline: String,
+    /// Full rendered stall report (empty unless stalled).
+    pub stall_report: String,
+}
+
+impl SeedRecord {
+    /// Serialize as one segment-log line (no trailing newline), keyed.
+    pub fn to_json_line(&self, key: u64) -> String {
+        let pq = self
+            .per_queue
+            .iter()
+            .map(|q| format!("[{},{},{}]", q.slot, q.dwq_posts, q.dwq_slot_waits))
+            .collect::<Vec<_>>()
+            .join(",");
+        let overlap = match &self.overlap {
+            Some(o) => format!("[{},{}]", o.wire_ns, o.hidden_ns),
+            None => "null".to_string(),
+        };
+        let crit = match &self.crit {
+            Some(c) => format!(
+                "[{},{},{},{},{},{},{}]",
+                c.total_ns,
+                c.compute_ns,
+                c.wire_ns,
+                c.trigger_ns,
+                c.backpressure_ns,
+                c.retransmit_ns,
+                c.other_ns
+            ),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"key\":\"{}\",\"workload\":\"{}\",\"variant\":\"{}\",\"elems\":{},\
+             \"nodes\":{},\"rpn\":{},\"qpr\":{},\"seed\":{},\"stalled\":{},\
+             \"time_ns\":{},\"validation_ok\":{},\"validation_label\":\"{}\",\
+             \"bytes_wire\":{},\"wire_msgs\":{},\"max_ingress_wait_ns\":{},\
+             \"max_egress_wait_ns\":{},\"dwq_slot_waits\":{},\"dwq_peak\":{},\
+             \"unexpected_msgs\":{},\"events\":{},\"faults_injected\":{},\
+             \"retries\":{},\"timeouts\":{},\"per_queue\":[{}],\"overlap\":{},\
+             \"crit\":{},\"stall_headline\":\"{}\",\"stall_report\":\"{}\"}}",
+            key_hex(key),
+            json_escape(&self.workload),
+            json_escape(&self.variant),
+            self.elems,
+            self.nodes,
+            self.rpn,
+            self.qpr,
+            self.seed,
+            self.stalled,
+            self.time_ns,
+            self.validation_ok,
+            json_escape(&self.validation_label),
+            self.bytes_wire,
+            self.wire_msgs,
+            self.max_ingress_wait_ns,
+            self.max_egress_wait_ns,
+            self.dwq_slot_waits,
+            self.dwq_peak,
+            self.unexpected_msgs,
+            self.events,
+            self.faults_injected,
+            self.retries,
+            self.timeouts,
+            pq,
+            overlap,
+            crit,
+            json_escape(&self.stall_headline),
+            json_escape(&self.stall_report),
+        )
+    }
+
+    /// Decode one segment-log line. `None` on any structural or type
+    /// mismatch — the store treats that as corruption and quarantines
+    /// the segment.
+    pub fn from_json_line(line: &str) -> Option<(u64, SeedRecord)> {
+        let v = Json::parse(line)?;
+        let key = parse_key_hex(v.get("key")?.as_str()?)?;
+        let per_queue = v
+            .get("per_queue")?
+            .as_arr()?
+            .iter()
+            .map(|q| {
+                let t = q.as_arr()?;
+                if t.len() != 3 {
+                    return None;
+                }
+                Some(QueueSlotStats {
+                    slot: t[0].as_u64()? as usize,
+                    dwq_posts: t[1].as_u64()?,
+                    dwq_slot_waits: t[2].as_u64()?,
+                })
+            })
+            .collect::<Option<Vec<_>>>()?;
+        let overlap = match v.get("overlap")? {
+            Json::Null => None,
+            o => {
+                let t = o.as_arr()?;
+                if t.len() != 2 {
+                    return None;
+                }
+                Some(Overlap { wire_ns: t[0].as_u64()?, hidden_ns: t[1].as_u64()? })
+            }
+        };
+        let crit = match v.get("crit")? {
+            Json::Null => None,
+            c => {
+                let t = c.as_arr()?;
+                if t.len() != 7 {
+                    return None;
+                }
+                Some(CritPath {
+                    total_ns: t[0].as_u64()?,
+                    compute_ns: t[1].as_u64()?,
+                    wire_ns: t[2].as_u64()?,
+                    trigger_ns: t[3].as_u64()?,
+                    backpressure_ns: t[4].as_u64()?,
+                    retransmit_ns: t[5].as_u64()?,
+                    other_ns: t[6].as_u64()?,
+                })
+            }
+        };
+        let rec = SeedRecord {
+            workload: v.get("workload")?.as_str()?.to_string(),
+            variant: v.get("variant")?.as_str()?.to_string(),
+            elems: v.get("elems")?.as_u64()? as usize,
+            nodes: v.get("nodes")?.as_u64()? as usize,
+            rpn: v.get("rpn")?.as_u64()? as usize,
+            qpr: v.get("qpr")?.as_u64()? as usize,
+            seed: v.get("seed")?.as_u64()?,
+            stalled: v.get("stalled")?.as_bool()?,
+            time_ns: v.get("time_ns")?.as_u64()?,
+            validation_ok: v.get("validation_ok")?.as_bool()?,
+            validation_label: v.get("validation_label")?.as_str()?.to_string(),
+            bytes_wire: v.get("bytes_wire")?.as_u64()?,
+            wire_msgs: v.get("wire_msgs")?.as_u64()?,
+            max_ingress_wait_ns: v.get("max_ingress_wait_ns")?.as_u64()?,
+            max_egress_wait_ns: v.get("max_egress_wait_ns")?.as_u64()?,
+            dwq_slot_waits: v.get("dwq_slot_waits")?.as_u64()?,
+            dwq_peak: v.get("dwq_peak")?.as_u64()?,
+            unexpected_msgs: v.get("unexpected_msgs")?.as_u64()?,
+            events: v.get("events")?.as_u64()?,
+            faults_injected: v.get("faults_injected")?.as_u64()?,
+            retries: v.get("retries")?.as_u64()?,
+            timeouts: v.get("timeouts")?.as_u64()?,
+            per_queue,
+            overlap,
+            crit,
+            stall_headline: v.get("stall_headline")?.as_str()?.to_string(),
+            stall_report: v.get("stall_report")?.as_str()?.to_string(),
+        };
+        Some((key, rec))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Minimal JSON value parser
+// ---------------------------------------------------------------------
+
+/// A parsed JSON value. Numbers keep their raw text
+/// ([`Json::as_u64`]/[`Json::as_f64`] parse on demand), so 64-bit
+/// counters never round-trip through `f64`. This is the decoding
+/// counterpart of the campaign module's syntax-only
+/// [`crate::workloads::campaign::json_parses`] validator; string
+/// escapes are decoded exactly as
+/// [`crate::coordinator::report::json_escape`] emits them (plus the
+/// spec's remaining standard escapes).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Raw number text, e.g. `"18446744073709551615"` or `"-1.5e3"`.
+    Num(String),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+/// Recursion guard for the parser: segment lines and service requests
+/// are shallow; anything deeper is treated as corrupt rather than
+/// risking the stack.
+const MAX_DEPTH: usize = 128;
+
+impl Json {
+    /// Parse one complete JSON value (surrounding whitespace allowed;
+    /// trailing garbage rejects). `None` on any syntax error.
+    pub fn parse(s: &str) -> Option<Json> {
+        let b = s.as_bytes();
+        let mut i = 0usize;
+        let v = parse_value(b, &mut i, 0)?;
+        skip_ws(b, &mut i);
+        if i == b.len() {
+            Some(v)
+        } else {
+            None
+        }
+    }
+
+    /// Object field lookup (first occurrence; `None` on non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Exact unsigned 64-bit parse of the raw number text (no `f64`
+    /// round-trip; rejects signs, fractions, and exponents).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) => n.parse::<u64>().ok(),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => n.parse::<f64>().ok(),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], i: &mut usize) {
+    while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+        *i += 1;
+    }
+}
+
+fn parse_value(b: &[u8], i: &mut usize, depth: usize) -> Option<Json> {
+    if depth > MAX_DEPTH {
+        return None;
+    }
+    skip_ws(b, i);
+    match b.get(*i).copied()? {
+        b'{' => parse_obj(b, i, depth),
+        b'[' => parse_arr(b, i, depth),
+        b'"' => parse_str(b, i).map(Json::Str),
+        b't' => parse_lit(b, i, b"true").then_some(Json::Bool(true)),
+        b'f' => parse_lit(b, i, b"false").then_some(Json::Bool(false)),
+        b'n' => parse_lit(b, i, b"null").then_some(Json::Null),
+        c if c == b'-' || c.is_ascii_digit() => parse_num(b, i),
+        _ => None,
+    }
+}
+
+fn parse_lit(b: &[u8], i: &mut usize, lit: &[u8]) -> bool {
+    if b[*i..].starts_with(lit) {
+        *i += lit.len();
+        true
+    } else {
+        false
+    }
+}
+
+fn parse_num(b: &[u8], i: &mut usize) -> Option<Json> {
+    let start = *i;
+    if b.get(*i).copied() == Some(b'-') {
+        *i += 1;
+    }
+    let d0 = *i;
+    while *i < b.len() && b[*i].is_ascii_digit() {
+        *i += 1;
+    }
+    if *i == d0 {
+        return None;
+    }
+    if b.get(*i).copied() == Some(b'.') {
+        *i += 1;
+        let f0 = *i;
+        while *i < b.len() && b[*i].is_ascii_digit() {
+            *i += 1;
+        }
+        if *i == f0 {
+            return None;
+        }
+    }
+    if matches!(b.get(*i).copied(), Some(b'e') | Some(b'E')) {
+        *i += 1;
+        if matches!(b.get(*i).copied(), Some(b'+') | Some(b'-')) {
+            *i += 1;
+        }
+        let e0 = *i;
+        while *i < b.len() && b[*i].is_ascii_digit() {
+            *i += 1;
+        }
+        if *i == e0 {
+            return None;
+        }
+    }
+    // The slice is ASCII by construction.
+    Some(Json::Num(String::from_utf8_lossy(&b[start..*i]).into_owned()))
+}
+
+fn parse_str(b: &[u8], i: &mut usize) -> Option<String> {
+    debug_assert_eq!(b.get(*i).copied(), Some(b'"'));
+    *i += 1;
+    let mut out = String::new();
+    let mut run = *i; // start of the current unescaped byte run
+    while *i < b.len() {
+        match b[*i] {
+            b'"' => {
+                out.push_str(std::str::from_utf8(&b[run..*i]).ok()?);
+                *i += 1;
+                return Some(out);
+            }
+            b'\\' => {
+                out.push_str(std::str::from_utf8(&b[run..*i]).ok()?);
+                *i += 1;
+                let esc = b.get(*i).copied()?;
+                *i += 1;
+                match esc {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'b' => out.push('\u{0008}'),
+                    b'f' => out.push('\u{000C}'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        let cp = parse_hex4(b, i)?;
+                        // Combine surrogate pairs; a lone surrogate is
+                        // corruption.
+                        let ch = if (0xD800..0xDC00).contains(&cp) {
+                            if b.get(*i).copied() != Some(b'\\')
+                                || b.get(*i + 1).copied() != Some(b'u')
+                            {
+                                return None;
+                            }
+                            *i += 2;
+                            let lo = parse_hex4(b, i)?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return None;
+                            }
+                            let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                            char::from_u32(c)?
+                        } else {
+                            char::from_u32(cp)?
+                        };
+                        out.push(ch);
+                    }
+                    _ => return None,
+                }
+                run = *i;
+            }
+            c if c < 0x20 => return None, // raw control char
+            _ => *i += 1,
+        }
+    }
+    None
+}
+
+fn parse_hex4(b: &[u8], i: &mut usize) -> Option<u32> {
+    if *i + 4 > b.len() {
+        return None;
+    }
+    let s = std::str::from_utf8(&b[*i..*i + 4]).ok()?;
+    let v = u32::from_str_radix(s, 16).ok()?;
+    *i += 4;
+    Some(v)
+}
+
+fn parse_obj(b: &[u8], i: &mut usize, depth: usize) -> Option<Json> {
+    *i += 1; // consume '{'
+    let mut fields = Vec::new();
+    skip_ws(b, i);
+    if b.get(*i).copied() == Some(b'}') {
+        *i += 1;
+        return Some(Json::Obj(fields));
+    }
+    loop {
+        skip_ws(b, i);
+        if b.get(*i).copied() != Some(b'"') {
+            return None;
+        }
+        let key = parse_str(b, i)?;
+        skip_ws(b, i);
+        if b.get(*i).copied() != Some(b':') {
+            return None;
+        }
+        *i += 1;
+        let val = parse_value(b, i, depth + 1)?;
+        fields.push((key, val));
+        skip_ws(b, i);
+        match b.get(*i).copied() {
+            Some(b',') => *i += 1,
+            Some(b'}') => {
+                *i += 1;
+                return Some(Json::Obj(fields));
+            }
+            _ => return None,
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], i: &mut usize, depth: usize) -> Option<Json> {
+    *i += 1; // consume '['
+    let mut items = Vec::new();
+    skip_ws(b, i);
+    if b.get(*i).copied() == Some(b']') {
+        *i += 1;
+        return Some(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(b, i, depth + 1)?);
+        skip_ws(b, i);
+        match b.get(*i).copied() {
+            Some(b',') => *i += 1,
+            Some(b']') => {
+                *i += 1;
+                return Some(Json::Arr(items));
+            }
+            _ => return None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The store
+// ---------------------------------------------------------------------
+
+/// Cache accounting of one store-backed campaign (rendered into
+/// `STORE_stats.json` and the CLI summary — deliberately *not* into the
+/// campaign report, whose bytes must not depend on cache temperature).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Jobs served from the store.
+    pub hits: u64,
+    /// Jobs that had to be simulated.
+    pub misses: u64,
+    /// Virtual ns of simulation served from the store instead of rerun
+    /// (the sum of cached records' figures of merit).
+    pub simulated_ns_saved: u64,
+}
+
+/// The persistent campaign store: an in-memory map rebuilt from the
+/// segment log on open, plus one append segment for this process's
+/// upserts. See the module docs for the on-disk format and the
+/// quarantine rule.
+#[derive(Debug)]
+pub struct Store {
+    dir: PathBuf,
+    map: HashMap<u64, SeedRecord>,
+    /// Lazily created on first upsert, so read-only opens add no files.
+    seg: Option<File>,
+    next_seg_idx: u64,
+    /// Segments replayed cleanly on open.
+    pub segments_loaded: usize,
+    /// Records replayed on open (before dedup by key).
+    pub records_loaded: usize,
+    /// Segments renamed `*.quarantined` on open (parse failure; their
+    /// valid prefix was kept).
+    pub quarantined: usize,
+    /// Records appended by this process.
+    pub upserts: u64,
+}
+
+impl Store {
+    /// Open (or create) a store directory and replay its segment log.
+    pub fn open(dir: &Path) -> Result<Store> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("store: creating {}", dir.display()))?;
+        let mut segs: Vec<(u64, PathBuf)> = Vec::new();
+        for entry in
+            fs::read_dir(dir).with_context(|| format!("store: listing {}", dir.display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if let Some(idx) = segment_index(&name) {
+                segs.push((idx, entry.path()));
+            }
+        }
+        segs.sort();
+        let mut store = Store {
+            dir: dir.to_path_buf(),
+            map: HashMap::new(),
+            seg: None,
+            next_seg_idx: segs.iter().map(|&(i, _)| i + 1).max().unwrap_or(1),
+            segments_loaded: 0,
+            records_loaded: 0,
+            quarantined: 0,
+            upserts: 0,
+        };
+        for (_, path) in segs {
+            store.replay_segment(&path)?;
+        }
+        Ok(store)
+    }
+
+    /// Replay one segment into the map; on a malformed line, keep the
+    /// valid prefix and quarantine the file. Only real I/O errors
+    /// propagate.
+    fn replay_segment(&mut self, path: &Path) -> Result<()> {
+        let text = match fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                // Not UTF-8 — treat like any other corruption.
+                self.quarantine(path)?;
+                return Ok(());
+            }
+            Err(e) => {
+                return Err(anyhow!(e)).with_context(|| format!("store: reading {}", path.display()))
+            }
+        };
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match SeedRecord::from_json_line(line) {
+                Some((key, rec)) => {
+                    self.records_loaded += 1;
+                    self.map.insert(key, rec);
+                }
+                None => {
+                    self.quarantine(path)?;
+                    return Ok(());
+                }
+            }
+        }
+        self.segments_loaded += 1;
+        Ok(())
+    }
+
+    fn quarantine(&mut self, path: &Path) -> Result<()> {
+        let mut to = path.as_os_str().to_owned();
+        to.push(".quarantined");
+        fs::rename(path, &to)
+            .with_context(|| format!("store: quarantining {}", path.display()))?;
+        self.quarantined += 1;
+        Ok(())
+    }
+
+    /// The store directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Records currently addressable.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look a record up by its fingerprint.
+    pub fn get(&self, key: u64) -> Option<&SeedRecord> {
+        self.map.get(&key)
+    }
+
+    /// Insert-or-replace a record and append it to this process's
+    /// segment. An upsert identical to the stored record is a no-op
+    /// (no segment growth on re-simulating known cells).
+    pub fn upsert(&mut self, key: u64, rec: &SeedRecord) -> Result<()> {
+        if self.map.get(&key) == Some(rec) {
+            return Ok(());
+        }
+        let line = rec.to_json_line(key);
+        if self.seg.is_none() {
+            let path = self.dir.join(format!("seg-{:06}.log", self.next_seg_idx));
+            let f = OpenOptions::new()
+                .create_new(true)
+                .append(true)
+                .open(&path)
+                .with_context(|| format!("store: creating segment {}", path.display()))?;
+            self.seg = Some(f);
+        }
+        if let Some(f) = self.seg.as_mut() {
+            writeln!(f, "{line}").context("store: appending segment record")?;
+        }
+        self.map.insert(key, rec.clone());
+        self.upserts += 1;
+        Ok(())
+    }
+
+    /// Flush the append segment to disk (campaigns call this once per
+    /// batch of committed results).
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(f) = self.seg.as_mut() {
+            f.flush().context("store: flushing segment")?;
+        }
+        Ok(())
+    }
+
+    /// All records matching the optional filters, in a deterministic
+    /// order (cell identity, then seed, then key).
+    pub fn query(
+        &self,
+        workload: Option<&str>,
+        variant: Option<&str>,
+        elems: Option<usize>,
+    ) -> Vec<(u64, &SeedRecord)> {
+        let mut out: Vec<(u64, &SeedRecord)> = self
+            .map
+            .iter()
+            .filter(|(_, r)| {
+                workload.is_none_or(|w| r.workload == w)
+                    && variant.is_none_or(|v| r.variant == v)
+                    && elems.is_none_or(|e| r.elems == e)
+            })
+            .map(|(&k, r)| (k, r))
+            .collect();
+        out.sort_by(|a, b| {
+            let ka = (&a.1.workload, &a.1.variant, a.1.elems, a.1.nodes, a.1.rpn, a.1.qpr, a.1.seed, a.0);
+            let kb = (&b.1.workload, &b.1.variant, b.1.elems, b.1.nodes, b.1.rpn, b.1.qpr, b.1.seed, b.0);
+            ka.cmp(&kb)
+        });
+        out
+    }
+
+    /// Render the `STORE_stats.json` payload: store shape + this run's
+    /// cache accounting.
+    pub fn stats_json(&self, cache: &CacheStats) -> String {
+        format!(
+            "{{\n  \"records\": {},\n  \"segments_loaded\": {},\n  \"records_loaded\": {},\n  \
+             \"quarantined\": {},\n  \"upserts\": {},\n  \"cache_hits\": {},\n  \
+             \"cache_misses\": {},\n  \"simulated_ns_saved\": {}\n}}\n",
+            self.len(),
+            self.segments_loaded,
+            self.records_loaded,
+            self.quarantined,
+            self.upserts,
+            cache.hits,
+            cache.misses,
+            cache.simulated_ns_saved,
+        )
+    }
+}
+
+impl Drop for Store {
+    fn drop(&mut self) {
+        if let Some(f) = self.seg.as_mut() {
+            let _ = f.flush();
+        }
+    }
+}
+
+/// Parse `seg-NNNNNN.log` → `NNNNNN` (quarantined and foreign files
+/// return `None` and are ignored by [`Store::open`]).
+fn segment_index(name: &str) -> Option<u64> {
+    let idx = name.strip_prefix("seg-")?.strip_suffix(".log")?;
+    idx.parse::<u64>().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_record(seed: u64) -> SeedRecord {
+        SeedRecord {
+            workload: "halo3d".into(),
+            variant: "st".into(),
+            elems: 48,
+            nodes: 2,
+            rpn: 1,
+            qpr: 1,
+            seed,
+            stalled: false,
+            time_ns: 1_234_567,
+            validation_ok: true,
+            validation_label: "passed(96)".into(),
+            bytes_wire: 18_446_744_073_709_551_615, // u64::MAX survives
+            wire_msgs: 52,
+            max_ingress_wait_ns: 3,
+            max_egress_wait_ns: 4,
+            dwq_slot_waits: 5,
+            dwq_peak: 6,
+            unexpected_msgs: 7,
+            events: 8_000,
+            faults_injected: 0,
+            retries: 0,
+            timeouts: 0,
+            per_queue: vec![QueueSlotStats { slot: 0, dwq_posts: 12, dwq_slot_waits: 1 }],
+            overlap: Some(Overlap { wire_ns: 100, hidden_ns: 40 }),
+            crit: Some(CritPath {
+                total_ns: 7,
+                compute_ns: 1,
+                wire_ns: 2,
+                trigger_ns: 1,
+                backpressure_ns: 0,
+                retransmit_ns: 0,
+                other_ns: 3,
+            }),
+            stall_headline: String::new(),
+            stall_report: String::new(),
+        }
+    }
+
+    #[test]
+    fn cell_key_canon_and_fingerprint_are_pinned() {
+        // Golden values: any drift here silently invalidates (or worse,
+        // aliases) every persisted store in the wild — bump
+        // SCHEMA_VERSION instead of editing the expectations.
+        let key = CellKey {
+            workload: "halo3d",
+            variant: "st",
+            elems: 48,
+            nodes: 2,
+            rpn: 1,
+            queues: 1,
+            dwq_slots: None,
+            iters: 2,
+            seed: 5,
+            cost_hash: 0x0123_4567_89ab_cdef,
+            fault_hash: None,
+            trace_on: true,
+        };
+        assert_eq!(
+            key.canon(),
+            "stmpi-store/v1|halo3d|st|e48|2x1|q1|dwq-|i2|s5|c0123456789abcdef|f-|t1"
+        );
+        assert_eq!(key.fingerprint(), 0x72f5_c907_68e2_233d);
+        assert_eq!(key_hex(key.fingerprint()), "72f5c90768e2233d");
+        assert_eq!(parse_key_hex("72f5c90768e2233d"), Some(0x72f5_c907_68e2_233d));
+    }
+
+    #[test]
+    fn cell_key_components_all_matter() {
+        let base = CellKey {
+            workload: "halo3d",
+            variant: "st",
+            elems: 48,
+            nodes: 2,
+            rpn: 1,
+            queues: 1,
+            dwq_slots: None,
+            iters: 2,
+            seed: 5,
+            cost_hash: 1,
+            fault_hash: None,
+            trace_on: true,
+        };
+        let fp = base.fingerprint();
+        let variants = [
+            CellKey { workload: "allreduce", ..base },
+            CellKey { variant: "kt", ..base },
+            CellKey { elems: 64, ..base },
+            CellKey { nodes: 4, ..base },
+            CellKey { rpn: 2, ..base },
+            CellKey { queues: 2, ..base },
+            CellKey { dwq_slots: Some(8), ..base },
+            CellKey { iters: 3, ..base },
+            CellKey { seed: 6, ..base },
+            CellKey { cost_hash: 2, ..base },
+            CellKey { fault_hash: Some(1), ..base },
+            CellKey { trace_on: false, ..base },
+        ];
+        for v in variants {
+            assert_ne!(v.fingerprint(), fp, "component change must change the key: {v:?}");
+        }
+    }
+
+    #[test]
+    fn seed_record_round_trips_through_a_segment_line() {
+        let rec = sample_record(5);
+        let line = rec.to_json_line(0xdead_beef_0000_0001);
+        let (key, back) = SeedRecord::from_json_line(&line).unwrap();
+        assert_eq!(key, 0xdead_beef_0000_0001);
+        assert_eq!(back, rec);
+        // And the line is valid JSON by the syntax checker too.
+        assert!(crate::workloads::campaign::json_parses(&line));
+    }
+
+    #[test]
+    fn stalled_record_round_trips_with_escaped_report() {
+        let mut rec = sample_record(9);
+        rec.stalled = true;
+        rec.overlap = None;
+        rec.crit = None;
+        rec.stall_headline = "2 parked hosts".into();
+        rec.stall_report = "line1\nline2\t\"quoted\" \\ backslash\u{1}".into();
+        let line = rec.to_json_line(7);
+        assert!(!line.contains('\n'), "segment lines must stay single-line");
+        let (key, back) = SeedRecord::from_json_line(&line).unwrap();
+        assert_eq!(key, 7);
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn json_parser_decodes_escapes_and_keeps_numbers_raw() {
+        let v = Json::parse(
+            "{\"s\": \"a\\n\\\"b\\\"\\u0041\\u00e9\", \"big\": 18446744073709551615, \
+             \"f\": -1.5e3, \"arr\": [1, null, true]}",
+        )
+        .unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a\n\"b\"A\u{e9}"));
+        assert_eq!(v.get("big").unwrap().as_u64(), Some(u64::MAX));
+        assert_eq!(v.get("f").unwrap().as_f64(), Some(-1500.0));
+        let arr = v.get("arr").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[0].as_u64(), Some(1));
+        assert_eq!(arr[1], Json::Null);
+        assert_eq!(arr[2].as_bool(), Some(true));
+        // Surrogate pair.
+        let v = Json::parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(v.as_str(), Some("\u{1F600}"));
+        // Rejections: trailing garbage, lone surrogate, raw control,
+        // unterminated, absurd depth.
+        assert!(Json::parse("{} x").is_none());
+        assert!(Json::parse("\"\\ud83d\"").is_none());
+        assert!(Json::parse("\"a\u{1}b\"").is_none());
+        assert!(Json::parse("\"abc").is_none());
+        assert!(Json::parse(&("[".repeat(200) + &"]".repeat(200))).is_none());
+    }
+
+    #[test]
+    fn store_persists_reopens_and_dedups_identical_upserts() {
+        let dir = std::env::temp_dir()
+            .join(format!("stmpi-store-unit-{}-persist", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        {
+            let mut st = Store::open(&dir).unwrap();
+            assert!(st.is_empty());
+            st.upsert(1, &sample_record(5)).unwrap();
+            st.upsert(2, &sample_record(9)).unwrap();
+            st.upsert(1, &sample_record(5)).unwrap(); // identical — no growth
+            assert_eq!(st.upserts, 2);
+            st.flush().unwrap();
+        }
+        {
+            let mut st = Store::open(&dir).unwrap();
+            assert_eq!(st.len(), 2);
+            assert_eq!(st.segments_loaded, 1);
+            assert_eq!(st.records_loaded, 2);
+            assert_eq!(st.get(1), Some(&sample_record(5)));
+            // Upsert with changed content wins on the next open.
+            let mut newer = sample_record(5);
+            newer.time_ns = 42;
+            st.upsert(1, &newer).unwrap();
+            st.flush().unwrap();
+        }
+        let st = Store::open(&dir).unwrap();
+        assert_eq!(st.len(), 2);
+        assert_eq!(st.get(1).map(|r| r.time_ns), Some(42));
+        assert_eq!(st.quarantined, 0);
+        let q = st.query(Some("halo3d"), Some("st"), None);
+        assert_eq!(q.len(), 2);
+        assert!(q[0].1.seed <= q[1].1.seed, "query order is deterministic");
+        assert!(st.query(Some("nope"), None, None).is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_segment_is_quarantined_with_valid_prefix_kept() {
+        let dir = std::env::temp_dir()
+            .join(format!("stmpi-store-unit-{}-corrupt", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        {
+            let mut st = Store::open(&dir).unwrap();
+            st.upsert(1, &sample_record(5)).unwrap();
+            st.upsert(2, &sample_record(9)).unwrap();
+            st.flush().unwrap();
+        }
+        // Truncate the tail of the segment mid-line (killed-process
+        // shape) — the valid prefix must survive, the file must be
+        // quarantined, and nothing may panic.
+        let seg = dir.join("seg-000001.log");
+        let text = fs::read_to_string(&seg).unwrap();
+        let cut = text.len() - 25;
+        fs::write(&seg, &text[..cut]).unwrap();
+        let st = Store::open(&dir).unwrap();
+        assert_eq!(st.quarantined, 1);
+        assert_eq!(st.len(), 1, "valid prefix record kept");
+        assert_eq!(st.get(1), Some(&sample_record(5)));
+        assert!(dir.join("seg-000001.log.quarantined").exists());
+        assert!(!seg.exists());
+        // A fresh write after quarantine gets a new segment name.
+        let mut st = Store::open(&dir).unwrap();
+        st.upsert(3, &sample_record(11)).unwrap();
+        st.flush().unwrap();
+        let st = Store::open(&dir).unwrap();
+        assert_eq!(st.len(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn garbage_file_quarantines_without_losing_other_segments() {
+        let dir = std::env::temp_dir()
+            .join(format!("stmpi-store-unit-{}-garbage", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        {
+            let mut st = Store::open(&dir).unwrap();
+            st.upsert(1, &sample_record(5)).unwrap();
+            st.flush().unwrap();
+        }
+        fs::write(dir.join("seg-000002.log"), b"not json at all\n").unwrap();
+        fs::write(dir.join("seg-000003.log"), [0xFF, 0xFE, 0x00]).unwrap(); // not UTF-8
+        fs::write(dir.join("README.txt"), b"ignored\n").unwrap();
+        let st = Store::open(&dir).unwrap();
+        assert_eq!(st.quarantined, 2);
+        assert_eq!(st.segments_loaded, 1);
+        assert_eq!(st.len(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

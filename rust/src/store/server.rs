@@ -1,0 +1,401 @@
+//! `stmpi serve`: the campaign store as a long-running query service.
+//!
+//! A deliberately thin front-end — one `std::net::TcpListener`, no
+//! async, no threads per connection: connections are served
+//! sequentially and every request/response is a single JSON line
+//! (except `campaign`, which streams progress lines before its final
+//! `done` line). The protocol is line-oriented so a shell client is
+//! enough:
+//!
+//! ```text
+//! $ printf '{"op":"query","workload":"halo3d"}\n' | nc 127.0.0.1 7878
+//! ```
+//!
+//! Operations (field `op`):
+//!
+//! | op | request fields | response |
+//! |---|---|---|
+//! | `ping` | — | `{"ok":true,"pong":true}` |
+//! | `stats` | — | store shape: records, segments, quarantined |
+//! | `get` | `key` (16 hex digits) | `found` + the full record object |
+//! | `query` | `workload`/`variant`/`elems` filters, `limit` | `rows` (capped, deterministic order) |
+//! | `campaign` | `spec` (see [`spec_from_json`]) | progress lines, then `done` + the report JSON |
+//! | `diff` | `spec` + `overrides` `[["field",v],…]` | joined per-cell delta table |
+//! | `shutdown` | — | `{"ok":true,"bye":true}`, then the server exits |
+//!
+//! Any malformed request yields `{"ok":false,"error":"…"}` on that
+//! line; the connection stays up. Submitted campaigns always run
+//! against the server's store directory (a client cannot point the
+//! server at foreign paths), so every run is incremental over the same
+//! store the `get`/`query` ops read.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::report::json_escape;
+use crate::fault::FaultSpec;
+use crate::workloads::campaign::{diff_cost_models, run_campaign_observed, CampaignSpec};
+
+use super::{key_hex, parse_key_hex, Json, Store};
+
+/// Default row cap for `query` responses (override per request with
+/// `limit`, itself clamped to this value).
+pub const MAX_QUERY_ROWS: usize = 256;
+
+/// The campaign-store service. [`Server::bind`] then [`Server::serve`];
+/// `serve` blocks until a client sends `{"op":"shutdown"}`.
+pub struct Server {
+    listener: TcpListener,
+    store_dir: PathBuf,
+}
+
+impl Server {
+    /// Bind the listener (use port 0 to let the OS pick — tests do).
+    pub fn bind(addr: &str, store_dir: &Path) -> Result<Server> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("serve: binding {addr}"))?;
+        Ok(Server { listener, store_dir: store_dir.to_path_buf() })
+    }
+
+    /// The bound address (for logging and for tests using port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept and serve connections sequentially until a `shutdown`
+    /// request arrives. I/O errors on one connection drop that
+    /// connection, not the server.
+    pub fn serve(self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            match self.handle_conn(stream) {
+                Ok(true) => return Ok(()),
+                Ok(false) => {}
+                Err(_) => {} // connection-level failure; keep serving
+            }
+        }
+        Ok(())
+    }
+
+    /// Serve one connection; `Ok(true)` means shutdown was requested.
+    fn handle_conn(&self, stream: TcpStream) -> Result<bool> {
+        let mut writer = stream.try_clone()?;
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            match self.handle_line(&line, &mut writer) {
+                Ok(true) => return Ok(true),
+                Ok(false) => {}
+                Err(e) => {
+                    writeln!(writer, "{}", err_line(&format!("{e:#}")))?;
+                }
+            }
+        }
+        Ok(false)
+    }
+
+    /// Dispatch one request line; `Ok(true)` means shutdown.
+    fn handle_line(&self, line: &str, out: &mut dyn Write) -> Result<bool> {
+        let req = Json::parse(line).ok_or_else(|| anyhow!("request is not valid JSON"))?;
+        let op = req
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("request needs a string \"op\" field"))?;
+        match op {
+            "ping" => {
+                writeln!(out, "{{\"ok\":true,\"pong\":true}}")?;
+                Ok(false)
+            }
+            "shutdown" => {
+                writeln!(out, "{{\"ok\":true,\"bye\":true}}")?;
+                Ok(true)
+            }
+            "stats" => {
+                let store = Store::open(&self.store_dir)?;
+                writeln!(
+                    out,
+                    "{{\"ok\":true,\"records\":{},\"segments_loaded\":{},\
+                     \"records_loaded\":{},\"quarantined\":{}}}",
+                    store.len(),
+                    store.segments_loaded,
+                    store.records_loaded,
+                    store.quarantined
+                )?;
+                Ok(false)
+            }
+            "get" => {
+                let key = req
+                    .get("key")
+                    .and_then(Json::as_str)
+                    .and_then(parse_key_hex)
+                    .ok_or_else(|| anyhow!("get needs \"key\": 16 hex digits"))?;
+                let store = Store::open(&self.store_dir)?;
+                match store.get(key) {
+                    Some(rec) => writeln!(
+                        out,
+                        "{{\"ok\":true,\"found\":true,\"record\":{}}}",
+                        rec.to_json_line(key)
+                    )?,
+                    None => writeln!(
+                        out,
+                        "{{\"ok\":true,\"found\":false,\"key\":\"{}\"}}",
+                        key_hex(key)
+                    )?,
+                }
+                Ok(false)
+            }
+            "query" => {
+                let workload = req.get("workload").and_then(Json::as_str);
+                let variant = req.get("variant").and_then(Json::as_str);
+                let elems = req.get("elems").and_then(Json::as_u64).map(|e| e as usize);
+                let limit = req
+                    .get("limit")
+                    .and_then(Json::as_u64)
+                    .map(|l| (l as usize).min(MAX_QUERY_ROWS))
+                    .unwrap_or(MAX_QUERY_ROWS);
+                let store = Store::open(&self.store_dir)?;
+                let rows = store.query(workload, variant, elems);
+                let body = rows
+                    .iter()
+                    .take(limit)
+                    .map(|(k, r)| r.to_json_line(*k))
+                    .collect::<Vec<_>>()
+                    .join(",");
+                writeln!(
+                    out,
+                    "{{\"ok\":true,\"matched\":{},\"returned\":{},\"rows\":[{}]}}",
+                    rows.len(),
+                    rows.len().min(limit),
+                    body
+                )?;
+                Ok(false)
+            }
+            "campaign" => {
+                let spec = self.spec_for_run(&req)?;
+                let mut sink = &mut *out;
+                let report = run_campaign_observed(&spec, &mut |p| {
+                    // Progress write failures (client gone) are ignored:
+                    // the campaign itself must complete and commit.
+                    let _ = writeln!(
+                        sink,
+                        "{{\"ok\":true,\"event\":\"progress\",\"total_jobs\":{},\
+                         \"cached_jobs\":{},\"simulated_jobs\":{},\"pending_jobs\":{}}}",
+                        p.total_jobs, p.cached_jobs, p.simulated_jobs, p.pending_jobs
+                    );
+                    let _ = sink.flush();
+                })?;
+                writeln!(
+                    out,
+                    "{{\"ok\":true,\"event\":\"done\",\"cells\":{},\"ran\":{},\
+                     \"all_ok\":{},\"cache_hits\":{},\"cache_misses\":{},\
+                     \"simulated_ns_saved\":{},\"report\":\"{}\"}}",
+                    report.cells.len(),
+                    report.ran_cells(),
+                    report.all_ok(),
+                    report.cache.hits,
+                    report.cache.misses,
+                    report.cache.simulated_ns_saved,
+                    json_escape(&report.to_json())
+                )?;
+                Ok(false)
+            }
+            "diff" => {
+                let spec = self.spec_for_run(&req)?;
+                let overrides = parse_overrides(
+                    req.get("overrides")
+                        .ok_or_else(|| anyhow!("diff needs \"overrides\": [[\"field\",value],…]"))?,
+                )?;
+                let diff = diff_cost_models(&spec, &overrides)?;
+                writeln!(
+                    out,
+                    "{{\"ok\":true,\"rows\":{},\"cache_hits\":{},\"cache_misses\":{},\
+                     \"diff\":\"{}\"}}",
+                    diff.rows.len(),
+                    diff.cache.hits,
+                    diff.cache.misses,
+                    json_escape(&diff.to_json())
+                )?;
+                Ok(false)
+            }
+            other => bail!("unknown op '{other}'"),
+        }
+    }
+
+    /// Build the spec a submitted run executes: the client's `spec`
+    /// pinned to the server's store directory.
+    fn spec_for_run(&self, req: &Json) -> Result<CampaignSpec> {
+        let mut spec = match req.get("spec") {
+            Some(s) => spec_from_json(s)?,
+            None => bail!("needs a \"spec\" object"),
+        };
+        spec.store = Some(self.store_dir.to_string_lossy().into_owned());
+        Ok(spec)
+    }
+}
+
+fn err_line(msg: &str) -> String {
+    format!("{{\"ok\":false,\"error\":\"{}\"}}", json_escape(msg))
+}
+
+/// Decode a client-submitted campaign spec. Starts from
+/// [`CampaignSpec::default`]; unknown fields are rejected (a typo'd
+/// filter silently running the full default grid would be far worse).
+/// Trace exports and explicit store paths are not accepted over the
+/// wire — the server pins the store, and traces are a CLI concern.
+pub fn spec_from_json(v: &Json) -> Result<CampaignSpec> {
+    let Json::Obj(fields) = v else { bail!("spec must be a JSON object") };
+    let mut spec = CampaignSpec::default();
+    for (key, val) in fields {
+        match key.as_str() {
+            "workloads" => spec.workloads = str_vec(val, "workloads")?,
+            "variants" => spec.variants = str_vec(val, "variants")?,
+            "elems" => {
+                spec.elems = u64_vec(val, "elems")?.into_iter().map(|e| e as usize).collect()
+            }
+            "queues" => {
+                spec.queues = u64_vec(val, "queues")?.into_iter().map(|q| q as usize).collect()
+            }
+            "seeds" => spec.seeds = u64_vec(val, "seeds")?,
+            "topos" => {
+                let arr = val.as_arr().ok_or_else(|| anyhow!("topos must be an array"))?;
+                let mut topos = Vec::with_capacity(arr.len());
+                for t in arr {
+                    let pair = t.as_arr().filter(|p| p.len() == 2).ok_or_else(|| {
+                        anyhow!("each topo must be a [nodes, ranks_per_node] pair")
+                    })?;
+                    let nodes = pair[0].as_u64().ok_or_else(|| anyhow!("topo nodes"))?;
+                    let rpn = pair[1].as_u64().ok_or_else(|| anyhow!("topo ranks_per_node"))?;
+                    topos.push((nodes as usize, rpn as usize));
+                }
+                spec.topos = topos;
+            }
+            "iters" => {
+                spec.iters =
+                    val.as_u64().ok_or_else(|| anyhow!("iters must be an integer"))? as usize
+            }
+            "jitter" => {
+                spec.jitter = val.as_f64().ok_or_else(|| anyhow!("jitter must be a number"))?
+            }
+            "dwq_slots" => {
+                spec.dwq_slots = match val {
+                    Json::Null => None,
+                    v => Some(
+                        v.as_u64().ok_or_else(|| anyhow!("dwq_slots must be an integer"))?
+                            as usize,
+                    ),
+                }
+            }
+            "threads" => {
+                spec.threads = match val {
+                    Json::Null => None,
+                    v => Some(
+                        v.as_u64().ok_or_else(|| anyhow!("threads must be an integer"))? as usize,
+                    ),
+                }
+            }
+            "fault_preset" => {
+                spec.faults = match val {
+                    Json::Null => None,
+                    v => {
+                        let name = v
+                            .as_str()
+                            .ok_or_else(|| anyhow!("fault_preset must be a preset name"))?;
+                        Some(FaultSpec::preset(name, 0).ok_or_else(|| {
+                            anyhow!(
+                                "unknown fault preset '{name}' (known: {:?})",
+                                FaultSpec::preset_names()
+                            )
+                        })?)
+                    }
+                }
+            }
+            "fault_seed" => {
+                let seed =
+                    val.as_u64().ok_or_else(|| anyhow!("fault_seed must be an integer"))?;
+                match spec.faults.as_mut() {
+                    Some(f) => f.seed = seed,
+                    None => bail!("fault_seed needs fault_preset first (field order matters)"),
+                }
+            }
+            "cost_overrides" => spec.cost_overrides = parse_overrides(val)?,
+            other => bail!(
+                "unknown spec field '{other}' (known: workloads, variants, elems, topos, \
+                 queues, seeds, iters, jitter, dwq_slots, threads, fault_preset, fault_seed, \
+                 cost_overrides)"
+            ),
+        }
+    }
+    Ok(spec)
+}
+
+/// Decode `[["field", value], …]` cost-model override pairs.
+pub fn parse_overrides(v: &Json) -> Result<Vec<(String, f64)>> {
+    let arr = v.as_arr().ok_or_else(|| anyhow!("overrides must be an array of pairs"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for pair in arr {
+        let p = pair
+            .as_arr()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| anyhow!("each override must be a [\"field\", value] pair"))?;
+        let field =
+            p[0].as_str().ok_or_else(|| anyhow!("override field must be a string"))?;
+        let value = p[1].as_f64().ok_or_else(|| anyhow!("override value must be a number"))?;
+        out.push((field.to_string(), value));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_from_json_decodes_and_rejects() {
+        let v = Json::parse(
+            "{\"workloads\": [\"halo3d\"], \"variants\": [\"st\"], \"elems\": [48], \
+             \"topos\": [[2, 1]], \"seeds\": [5], \"iters\": 2, \"jitter\": 0.0, \
+             \"threads\": 1, \"fault_preset\": \"rdv-drops\", \"fault_seed\": 7, \
+             \"cost_overrides\": [[\"wire_latency\", 2000]]}",
+        )
+        .unwrap();
+        let spec = spec_from_json(&v).unwrap();
+        assert_eq!(spec.workloads, vec!["halo3d".to_string()]);
+        assert_eq!(spec.variants, vec!["st".to_string()]);
+        assert_eq!(spec.elems, vec![48]);
+        assert_eq!(spec.topos, vec![(2, 1)]);
+        assert_eq!(spec.seeds, vec![5]);
+        assert_eq!(spec.iters, 2);
+        assert_eq!(spec.threads, Some(1));
+        let f = spec.faults.expect("fault preset decoded");
+        assert!(f.rdv_drop_prob > 0.0);
+        assert_eq!(f.seed, 7);
+        assert_eq!(spec.cost_overrides, vec![("wire_latency".to_string(), 2000.0)]);
+
+        let bad = Json::parse("{\"workload\": [\"halo3d\"]}").unwrap();
+        let err = format!("{:#}", spec_from_json(&bad).unwrap_err());
+        assert!(err.contains("unknown spec field"), "{err}");
+        let bad = Json::parse("{\"fault_preset\": \"nope\"}").unwrap();
+        assert!(spec_from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn parse_overrides_validates_shape() {
+        let v = Json::parse("[[\"wire_bw\", 1.5], [\"nic_match\", 40]]").unwrap();
+        let o = parse_overrides(&v).unwrap();
+        assert_eq!(
+            o,
+            vec![("wire_bw".to_string(), 1.5), ("nic_match".to_string(), 40.0)]
+        );
+        assert!(parse_overrides(&Json::parse("[\"wire_bw\"]").unwrap()).is_err());
+        assert!(parse_overrides(&Json::parse("[[\"wire_bw\"]]").unwrap()).is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! `broadcast` workload: root-to-all propagation over a binomial tree —
+//! the latency-bound complement of the bandwidth patterns (ring
+//! allgather / reduce-scatter): ⌈log2 n⌉ dependent rounds, each rank's
+//! forwarding gated on its own receive landing first.
+//!
+//! Tree shape (root 0): in round `k` every rank `r < 2^k` holding the
+//! data sends it to `r + 2^k` (when that target exists), so rank `r > 0`
+//! receives exactly once, in round `⌊log2 r⌋`, from `r - 2^⌊log2 r⌋`.
+//! Each participating round is one persistent [`crate::stx::CommPlan`]
+//! — a recv-only plan for the incoming edge, a send-only plan per
+//! outgoing edge — processed in round order with
+//! [`crate::stx::CommPlan::complete`] between them: the receive-before-
+//! forward relay idiom the allgather workload established, here forming
+//! a tree instead of a ring. The root's first send plan carries the pack
+//! kernel that refreshes the payload every iteration.
+//!
+//! Validation is exact: after the final iteration every rank's buffer
+//! must hold `payload(0, 0, j)` for all `j`.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::run_cluster;
+use crate::gpu::{stream_synchronize, KernelPayload, KernelSpec};
+use crate::mpi::{SrcSel, TagSel, COMM_WORLD};
+use crate::nic::BufSlice;
+use crate::world::ComputeMode;
+
+use super::scaffold::{check_exact, lease_world, scenario_run, RankComm, Timers};
+use super::{comm_variant, payload, ScenarioCfg, ScenarioRun, Workload};
+
+pub struct Broadcast;
+
+const ROOT: usize = 0;
+/// Tag base; one tag per tree round, disjoint from the other workloads'
+/// spaces that could share a run (each workload runs its own world, but
+/// disjoint bases keep traces readable).
+const BC_TAG: i32 = 6000;
+
+/// Round in which rank `r > 0` receives: the index of its highest set
+/// bit (`⌊log2 r⌋`).
+fn recv_round(r: usize) -> u32 {
+    debug_assert!(r > 0);
+    usize::BITS - 1 - r.leading_zeros()
+}
+
+impl Workload for Broadcast {
+    fn name(&self) -> &'static str {
+        "broadcast"
+    }
+
+    fn description(&self) -> &'static str {
+        "binomial-tree broadcast: log-depth relay over per-round persistent CommPlans"
+    }
+
+    fn variants(&self) -> &'static [&'static str] {
+        &["baseline", "st", "st-shader", "kt"]
+    }
+
+    fn default_elems(&self) -> &'static [usize] {
+        // 65536 elems = 256 KiB: well past the eager/rendezvous
+        // threshold, so the tree's relay edges exercise the RTS/Get
+        // path too.
+        &[256, 4096, 65536]
+    }
+
+    fn configure(&self, cfg: &ScenarioCfg) -> Result<()> {
+        comm_variant("broadcast", &cfg.variant)?;
+        if cfg.world_size() < 2 {
+            bail!("broadcast needs at least two ranks");
+        }
+        if cfg.elems == 0 {
+            bail!("broadcast: the payload must carry at least one element");
+        }
+        // The tree is one dependency chain per rank (receive, then
+        // forward): extra queues cannot be striped without breaking the
+        // receive-before-forward gate, so q>1 cells are rejected (the
+        // campaign reports them as skipped).
+        if cfg.queues_per_rank != 1 {
+            bail!("broadcast: the relay chain is sequential and cannot stripe over queues");
+        }
+        Ok(())
+    }
+
+    fn run(&self, cfg: &ScenarioCfg) -> Result<ScenarioRun> {
+        self.configure(cfg)?;
+        let variant = comm_variant("broadcast", &cfg.variant)?;
+        let n = cfg.world_size();
+        let elems = cfg.elems;
+        let rounds = usize::BITS - (n - 1).leading_zeros(); // ⌈log2 n⌉
+
+        let mut world = lease_world("broadcast", cfg);
+        world.compute = ComputeMode::Real;
+        let bufs: Vec<_> = (0..n).map(|_| world.bufs.alloc(elems)).collect();
+
+        let times = Timers::new(n);
+        let (iters, qpr) = (cfg.iters, cfg.queues_per_rank);
+        let (bufs2, times2) = (bufs.clone(), times.clone());
+        let out = run_cluster(world, cfg.seed, move |rank, ctx| {
+            let comm = RankComm::new(ctx, rank, variant, qpr);
+            let buf = bufs2[rank];
+            // Build-once: the incoming edge (ranks > 0), then one plan
+            // per outgoing edge, in round order. Rank r sends in round k
+            // iff it already holds the data (r < 2^k) and the target
+            // exists (r + 2^k < n).
+            let first_send_round = if rank == ROOT { 0 } else { recv_round(rank) + 1 };
+            let recv_plan = (rank != ROOT).then(|| {
+                let k = recv_round(rank);
+                let parent = rank - (1 << k);
+                let mut b = comm.builder();
+                b.recv_deferred(
+                    SrcSel::Rank(parent),
+                    TagSel::Tag(BC_TAG + k as i32),
+                    COMM_WORLD,
+                    BufSlice::whole(buf, elems),
+                )
+                .expect("concrete selectors");
+                b.build(ctx).expect("broadcast recv plan build")
+            });
+            let send_plans: Vec<_> = (first_send_round..rounds)
+                .filter(|&k| rank + (1usize << k) < n)
+                .map(|k| {
+                    let child = rank + (1usize << k);
+                    let mut b = comm.builder();
+                    b.send(child, BufSlice::whole(buf, elems), BC_TAG + k as i32, COMM_WORLD);
+                    b.build(ctx).expect("broadcast send plan build")
+                })
+                .collect();
+
+            let t0 = ctx.now();
+            for _iter in 0..iters {
+                if let Some(plan) = &recv_plan {
+                    let round = plan.round(ctx, Vec::new()).expect("broadcast recv round");
+                    // The relay gate: the forwarding sends below must
+                    // not start until the payload has landed.
+                    plan.complete(ctx, round).expect("broadcast recv complete");
+                }
+                for (s, plan) in send_plans.iter().enumerate() {
+                    // The root's first outgoing edge rides the pack
+                    // kernel that refreshes the payload; every other
+                    // edge forwards in place.
+                    let kernels = if rank == ROOT && s == 0 {
+                        vec![KernelSpec {
+                            name: "bc_pack".into(),
+                            flops: 0,
+                            bytes: 2 * 4 * elems as u64,
+                            payload: KernelPayload::Fn(Box::new(move |w, _| {
+                                let b = w.bufs.get_mut(buf);
+                                for j in 0..elems {
+                                    b[j] = payload(ROOT, 0, j);
+                                }
+                            })),
+                        }]
+                    } else {
+                        Vec::new()
+                    };
+                    let round = plan.round(ctx, kernels).expect("broadcast send round");
+                    plan.complete(ctx, round).expect("broadcast send complete");
+                }
+                stream_synchronize(ctx, comm.sid);
+            }
+            if let Some(plan) = &recv_plan {
+                comm.drain_if_kt(ctx, plan, "broadcast");
+            }
+            for plan in &send_plans {
+                comm.drain_if_kt(ctx, plan, "broadcast");
+            }
+            times2.record(rank, ctx.now() - t0);
+            comm.finish(ctx, "broadcast");
+        })
+        .context("broadcast run failed")?;
+
+        // Reference: every rank's buffer == the root's payload.
+        let pairs = bufs.iter().flat_map(|b| {
+            let got = out.world.bufs.get(*b);
+            (0..elems).map(move |j| (got[j], payload(ROOT, 0, j)))
+        });
+        let validation = check_exact(pairs, |i| {
+            format!("broadcast rank {} elem {}", i / elems, i % elems)
+        });
+        Ok(scenario_run("broadcast", cfg, out, &times, validation))
+    }
+}

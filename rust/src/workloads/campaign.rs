@@ -23,17 +23,31 @@
 //! `delta_vs_ref_pct`): its figure of merit against the workload's
 //! reference variant at the same size and topology, so ST and KT
 //! speedups are readable directly from the report.
+//!
+//! With [`CampaignSpec::store`] set, the campaign is *incremental*: each
+//! `(cell × seed)` job is fingerprinted ([`crate::store::CellKey`]) and
+//! jobs already present in the campaign store are served from disk
+//! instead of simulated. Cell assembly consumes only
+//! [`crate::store::SeedRecord`]s — the same type whether a job ran cold
+//! or came from the cache — so a warm rerun's report is byte-identical
+//! to the cold one while simulating zero cells. Cache accounting lands
+//! in [`CampaignReport::cache`] (and `STORE_stats.json`), deliberately
+//! outside the rendered report bytes. [`diff_cost_models`] builds on
+//! this to compare one grid under two cost models cell-by-cell.
 
-use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context as _, Result};
 
 use crate::coordinator::report::{json_escape, markdown_table, pct_delta, Summary};
 use crate::costmodel::presets;
 use crate::fault::FaultSpec;
-use crate::obs::{self, CritPath};
-use crate::sim::{sweep, SimError};
+use crate::obs::{self, CritPath, TraceBuf};
+use crate::sim::{sweep, SimError, StallReport};
+use crate::store::{CacheStats, CellKey, SeedRecord, Store};
 use crate::world::Topology;
 
-use super::{registry, QueueSlotStats, ScenarioCfg, ScenarioRun, Validation, Workload};
+use super::{registry, QueueSlotStats, ScenarioCfg, ScenarioRun, Workload};
 
 /// What to run: empty vectors mean "use the defaults" (all workloads,
 /// each workload's own variants and default sizes).
@@ -78,6 +92,20 @@ pub struct CampaignSpec {
     /// — the overlap/critical-path columns are computed either way
     /// (tracing itself is only off under `STMPI_TRACE=0`).
     pub trace: Option<String>,
+    /// Campaign-store directory: `Some(dir)` makes the run incremental
+    /// — jobs whose [`crate::store::CellKey`] fingerprint is already in
+    /// the store are served from disk, fresh results are upserted. A
+    /// trace export ([`CampaignSpec::trace`]) disables store *reads*
+    /// for the run (cached records carry no event buffers to render)
+    /// but results are still written. `None` = every job simulates.
+    pub store: Option<String>,
+    /// Cost-model field overrides (`(field, value)` pairs applied via
+    /// [`crate::costmodel::CostModel::apply_override`] after jitter and
+    /// DWQ handling) — the cost-model diff axis. Overrides change the
+    /// effective model's stable hash, so a store-backed run under an
+    /// override re-simulates every cell instead of aliasing cached
+    /// baseline results.
+    pub cost_overrides: Vec<(String, f64)>,
 }
 
 impl Default for CampaignSpec {
@@ -95,6 +123,8 @@ impl Default for CampaignSpec {
             threads: None,
             faults: None,
             trace: None,
+            store: None,
+            cost_overrides: Vec::new(),
         }
     }
 }
@@ -123,6 +153,8 @@ impl CampaignSpec {
             threads: None,
             faults: None,
             trace: None,
+            store: None,
+            cost_overrides: Vec::new(),
         }
     }
 
@@ -155,6 +187,8 @@ impl CampaignSpec {
             threads: None,
             faults: None,
             trace: None,
+            store: None,
+            cost_overrides: Vec::new(),
         }
     }
 }
@@ -244,6 +278,12 @@ pub struct CampaignReport {
     pub seeds: Vec<u64>,
     pub iters: usize,
     pub cells: Vec<CampaignCell>,
+    /// Cache accounting of this run (zero unless [`CampaignSpec::store`]
+    /// was set). Deliberately excluded from [`CampaignReport::to_json`]
+    /// and [`CampaignReport::to_markdown`]: the rendered report must be
+    /// byte-identical whether its rows simulated or came from the store.
+    /// The CLI writes it to `STORE_stats.json` instead.
+    pub cache: CacheStats,
 }
 
 impl CampaignReport {
@@ -463,9 +503,119 @@ impl CampaignReport {
     }
 }
 
+/// Progress snapshot of one campaign run: reported once after the
+/// cache partition (so `cached_jobs` is final immediately) and again
+/// after every committed batch of simulations. `stmpi serve` streams
+/// these to the client as JSON lines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CampaignProgress {
+    /// All feasible `(cell × seed)` jobs in the grid.
+    pub total_jobs: usize,
+    /// Jobs served from the campaign store.
+    pub cached_jobs: usize,
+    /// Jobs simulated and committed so far.
+    pub simulated_jobs: usize,
+    /// Jobs still waiting to simulate.
+    pub pending_jobs: usize,
+}
+
+/// One planned grid cell (shared by the run loop and the record
+/// converters below).
+struct CellPlan<'a> {
+    w: &'a dyn Workload,
+    variant: String,
+    elems: usize,
+    nodes: usize,
+    rpn: usize,
+    qpr: usize,
+    /// Why the cell was skipped (configure rejection), if it was.
+    skip: Option<String>,
+}
+
+/// Convert one completed run into its persistent record — the *only*
+/// path from a `ScenarioRun` to report-visible numbers, so cached and
+/// fresh rows cannot diverge.
+fn record_of(p: &CellPlan<'_>, seed: u64, r: &ScenarioRun) -> SeedRecord {
+    SeedRecord {
+        workload: p.w.name().to_string(),
+        variant: p.variant.clone(),
+        elems: p.elems,
+        nodes: p.nodes,
+        rpn: p.rpn,
+        qpr: p.qpr,
+        seed,
+        stalled: false,
+        time_ns: r.time_ns,
+        validation_ok: r.validation.ok(),
+        validation_label: r.validation.label(),
+        bytes_wire: r.metrics.bytes_wire,
+        wire_msgs: r.metrics.wire_msgs,
+        max_ingress_wait_ns: r.metrics.max_ingress_wait_ns,
+        max_egress_wait_ns: r.metrics.max_egress_wait_ns,
+        dwq_slot_waits: r.metrics.dwq_slot_waits,
+        dwq_peak: r.metrics.dwq_peak,
+        unexpected_msgs: r.metrics.unexpected_msgs,
+        events: r.stats.events,
+        faults_injected: r.metrics.faults_injected,
+        retries: r.metrics.retries,
+        timeouts: r.metrics.timeouts,
+        per_queue: r.per_queue.clone(),
+        overlap: r.overlap,
+        crit: r.crit,
+        stall_headline: String::new(),
+        stall_report: String::new(),
+    }
+}
+
+/// Convert one stalled seed into its persistent record (stalls are data
+/// — and they are cacheable data: a warm rerun serves the stall row
+/// from the store too).
+fn stall_record_of(p: &CellPlan<'_>, seed: u64, rep: &StallReport) -> SeedRecord {
+    SeedRecord {
+        workload: p.w.name().to_string(),
+        variant: p.variant.clone(),
+        elems: p.elems,
+        nodes: p.nodes,
+        rpn: p.rpn,
+        qpr: p.qpr,
+        seed,
+        stalled: true,
+        time_ns: 0,
+        validation_ok: false,
+        validation_label: String::new(),
+        bytes_wire: 0,
+        wire_msgs: 0,
+        max_ingress_wait_ns: 0,
+        max_egress_wait_ns: 0,
+        dwq_slot_waits: 0,
+        dwq_peak: 0,
+        unexpected_msgs: 0,
+        events: 0,
+        faults_injected: 0,
+        retries: 0,
+        timeouts: 0,
+        per_queue: Vec::new(),
+        overlap: None,
+        crit: None,
+        stall_headline: rep.headline(),
+        stall_report: format!("{rep}"),
+    }
+}
+
 /// Run a campaign: enumerate the grid, fan the (cell × seed) jobs out on
-/// the sweep executor, aggregate per-cell summaries.
+/// the sweep executor, aggregate per-cell summaries. With
+/// [`CampaignSpec::store`] set the run is incremental (see the module
+/// docs).
 pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
+    run_campaign_observed(spec, &mut |_| {})
+}
+
+/// [`run_campaign`] with a progress callback (used by `stmpi serve` to
+/// stream job counts while a submitted campaign runs).
+pub fn run_campaign_observed(
+    spec: &CampaignSpec,
+    on_progress: &mut dyn FnMut(&CampaignProgress),
+) -> Result<CampaignReport> {
     if spec.seeds.is_empty() {
         bail!("campaign needs at least one seed");
     }
@@ -501,16 +651,9 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
     if let Some(slots) = spec.dwq_slots {
         cost.dwq_slots_per_nic = slots;
     }
-
-    struct CellPlan<'a> {
-        w: &'a dyn Workload,
-        variant: String,
-        elems: usize,
-        nodes: usize,
-        rpn: usize,
-        qpr: usize,
-        /// Why the cell was skipped (configure rejection), if it was.
-        skip: Option<String>,
+    for (field, value) in &spec.cost_overrides {
+        cost.apply_override(field, *value)
+            .with_context(|| format!("campaign cost override {field}={value}"))?;
     }
 
     let mut plans: Vec<CellPlan<'_>> = Vec::new();
@@ -605,61 +748,148 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
             .cmp(&(pb.w.name(), &pb.variant, pb.nodes, pb.rpn, pb.qpr, b))
     });
     let threads = spec.threads.unwrap_or_else(sweep::default_threads);
-    let results: Vec<Result<ScenarioRun>> = sweep::map(&jobs, threads, |_, &(i, seed)| {
+
+    // Content-address every job. The effective cost model (jitter, DWQ
+    // and diff overrides already folded in) is hashed once; the fault
+    // spec likewise.
+    let cost_hash = cost.stable_hash();
+    let fault_hash = spec.faults.as_ref().map(|f| f.stable_hash());
+    let trace_on = obs::recording_enabled();
+    let fp = |i: usize, seed: u64| -> u64 {
         let p = &plans[i];
-        let cfg = ScenarioCfg {
-            variant: p.variant.clone(),
+        CellKey {
+            workload: p.w.name(),
+            variant: &p.variant,
             elems: p.elems,
             nodes: p.nodes,
-            ranks_per_node: p.rpn,
+            rpn: p.rpn,
+            queues: p.qpr,
+            dwq_slots: spec.dwq_slots,
             iters: spec.iters,
-            queues_per_rank: p.qpr,
             seed,
-            cost: cost.clone(),
-            faults: spec.faults.clone(),
-        };
-        p.w.run(&cfg).map(|mut r| {
-            // Keep the raw event buffer only where the export needs it
-            // (first seed of each cell, export requested) so the sweep
-            // never holds every cell's trace at once; the derived
-            // overlap/crit fields are already computed and stay.
-            if spec.trace.is_none() || seed != spec.seeds[0] {
-                r.trace = None;
-            }
-            r
-        })
-    });
+            cost_hash,
+            fault_hash,
+            trace_on,
+        }
+        .fingerprint()
+    };
+    let mut store = match &spec.store {
+        Some(dir) => Some(Store::open(Path::new(dir))?),
+        None => None,
+    };
+    // A trace export needs live event buffers, which the store does not
+    // persist — so an export run reads nothing from the store (every
+    // job simulates) but still commits its results for later reruns.
+    let read_from_store = store.is_some() && spec.trace.is_none();
 
-    // Group the results back per cell (job order is cell-major). A seed
-    // that stalls — the engine's stall detector fired — becomes data
-    // (a `stalled` row carrying the report) instead of aborting the
-    // whole sweep; any other failure still propagates.
-    enum SeedOutcome {
-        Ran(ScenarioRun),
-        Stalled(crate::sim::StallReport),
-    }
-    let mut by_cell: Vec<Vec<SeedOutcome>> = plans.iter().map(|_| Vec::new()).collect();
-    for (&(i, seed), res) in jobs.iter().zip(results) {
-        let p = &plans[i];
-        match res {
-            Ok(run) => by_cell[i].push(SeedOutcome::Ran(run)),
-            Err(e) => {
-                // `.context(...)` in the workloads preserves the
-                // SimError payload for exactly this downcast.
-                if let Some(SimError::Stall { report }) = e.downcast_ref::<SimError>() {
-                    by_cell[i].push(SeedOutcome::Stalled(report.clone()));
-                } else {
-                    return Err(anyhow!(
-                        "campaign cell {}/{} elems={} {}x{} seed={seed} failed: {e}",
-                        p.w.name(),
-                        p.variant,
-                        p.elems,
-                        p.nodes,
-                        p.rpn
-                    ));
-                }
+    // Partition jobs into cache hits (records served from the store)
+    // and misses (still to simulate). `records` is job-indexed; cell
+    // assembly below consumes only this vector, so it cannot tell a
+    // cached record from a fresh one.
+    let mut records: Vec<Option<SeedRecord>> = vec![None; jobs.len()];
+    let mut traces: Vec<Option<TraceBuf>> = vec![None; jobs.len()];
+    let mut cache = CacheStats::default();
+    let mut to_sim: Vec<usize> = Vec::new();
+    for (j, &(i, seed)) in jobs.iter().enumerate() {
+        if read_from_store {
+            if let Some(rec) = store.as_ref().and_then(|s| s.get(fp(i, seed))) {
+                cache.hits += 1;
+                cache.simulated_ns_saved += rec.time_ns;
+                records[j] = Some(rec.clone());
+                continue;
             }
         }
+        cache.misses += 1;
+        to_sim.push(j);
+    }
+    let mut progress = CampaignProgress {
+        total_jobs: jobs.len(),
+        cached_jobs: cache.hits as usize,
+        simulated_jobs: 0,
+        pending_jobs: to_sim.len(),
+    };
+    on_progress(&progress);
+
+    // Simulate the misses on the sweep executor. Store-backed runs go
+    // in batches so results commit (and progress streams)
+    // incrementally; the plain path keeps the single fan-out. Batch
+    // boundaries cannot change bytes: every job is an independent
+    // deterministic function of its config, placed by job index. A seed
+    // that stalls — the engine's stall detector fired — becomes data (a
+    // `stalled` row carrying the report) instead of aborting the whole
+    // sweep; any other failure still propagates.
+    let batch = if store.is_some() { 512 } else { to_sim.len().max(1) };
+    for chunk in to_sim.chunks(batch) {
+        let chunk_jobs: Vec<(usize, u64)> = chunk.iter().map(|&j| jobs[j]).collect();
+        let results: Vec<Result<ScenarioRun>> =
+            sweep::map(&chunk_jobs, threads, |_, &(i, seed)| {
+                let p = &plans[i];
+                let cfg = ScenarioCfg {
+                    variant: p.variant.clone(),
+                    elems: p.elems,
+                    nodes: p.nodes,
+                    ranks_per_node: p.rpn,
+                    iters: spec.iters,
+                    queues_per_rank: p.qpr,
+                    seed,
+                    cost: cost.clone(),
+                    faults: spec.faults.clone(),
+                };
+                p.w.run(&cfg).map(|mut r| {
+                    // Keep the raw event buffer only where the export
+                    // needs it (first seed of each cell, export
+                    // requested) so the sweep never holds every cell's
+                    // trace at once; the derived overlap/crit fields
+                    // are already computed and stay.
+                    if spec.trace.is_none() || seed != spec.seeds[0] {
+                        r.trace = None;
+                    }
+                    r
+                })
+            });
+        for (&j, res) in chunk.iter().zip(results) {
+            let (i, seed) = jobs[j];
+            let p = &plans[i];
+            let rec = match res {
+                Ok(mut run) => {
+                    traces[j] = run.trace.take();
+                    record_of(p, seed, &run)
+                }
+                Err(e) => {
+                    // `.context(...)` in the workloads preserves the
+                    // SimError payload for exactly this downcast.
+                    if let Some(SimError::Stall { report }) = e.downcast_ref::<SimError>() {
+                        stall_record_of(p, seed, report)
+                    } else {
+                        return Err(anyhow!(
+                            "campaign cell {}/{} elems={} {}x{} seed={seed} failed: {e}",
+                            p.w.name(),
+                            p.variant,
+                            p.elems,
+                            p.nodes,
+                            p.rpn
+                        ));
+                    }
+                }
+            };
+            if let Some(st) = store.as_mut() {
+                st.upsert(fp(i, seed), &rec)?;
+            }
+            records[j] = Some(rec);
+        }
+        if let Some(st) = store.as_mut() {
+            st.flush()?;
+        }
+        progress.simulated_jobs += chunk.len();
+        progress.pending_jobs -= chunk.len();
+        on_progress(&progress);
+    }
+
+    // Group the job-indexed records back per cell (job order is
+    // cell-major with seeds in spec order).
+    let mut by_cell: Vec<Vec<usize>> = plans.iter().map(|_| Vec::new()).collect();
+    for (j, &(i, _)) in jobs.iter().enumerate() {
+        by_cell[i].push(j);
     }
 
     let mut cells = Vec::with_capacity(plans.len());
@@ -696,38 +926,50 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
             });
             continue;
         }
-        let outcomes = &by_cell[i];
-        let runs: Vec<&ScenarioRun> = outcomes
-            .iter()
-            .filter_map(|o| match o {
-                SeedOutcome::Ran(r) => Some(r),
-                SeedOutcome::Stalled(_) => None,
-            })
-            .collect();
-        let stalled: Vec<&crate::sim::StallReport> = outcomes
-            .iter()
-            .filter_map(|o| match o {
-                SeedOutcome::Stalled(rep) => Some(rep),
-                SeedOutcome::Ran(_) => None,
-            })
-            .collect();
-        let ms: Vec<f64> = runs.iter().map(|r| r.time_ns as f64 / 1e6).collect();
+        let recs: Vec<&SeedRecord> =
+            by_cell[i].iter().filter_map(|&j| records[j].as_ref()).collect();
+        let ran: Vec<&SeedRecord> = recs.iter().copied().filter(|r| !r.stalled).collect();
+        let stalled: Vec<&SeedRecord> = recs.iter().copied().filter(|r| r.stalled).collect();
+        let ms: Vec<f64> = ran.iter().map(|r| r.time_ns as f64 / 1e6).collect();
         // A stalled seed dominates the cell's verdict: the row renders
         // as `STALLED: <headline>` even when other seeds completed.
         let validation = if let Some(rep) = stalled.first() {
-            format!("STALLED: {}", rep.headline())
+            format!("STALLED: {}", rep.stall_headline)
         } else {
-            let mut v = runs[0].validation.clone();
-            for r in &runs {
-                if let Validation::Failed { .. } = &r.validation {
-                    v = r.validation.clone();
+            // The last failing seed's label wins, matching the
+            // pre-store assembly (`Validation::ok()` is false exactly
+            // for `Failed`).
+            let mut v = ran[0].validation_label.clone();
+            for r in &ran {
+                if !r.validation_ok {
+                    v = r.validation_label.clone();
                 }
             }
-            v.label()
+            v
         };
-        let ok = stalled.is_empty() && runs.iter().all(|r| r.validation.ok());
-        let first: Option<&ScenarioRun> = runs.first().copied();
-        let m = |f: fn(&ScenarioRun) -> u64| first.map(f).unwrap_or(0);
+        let ok = stalled.is_empty() && ran.iter().all(|r| r.validation_ok);
+        let first: Option<&SeedRecord> = ran.first().copied();
+        let m = |f: fn(&SeedRecord) -> u64| first.map(f).unwrap_or(0);
+        // The export trace of the first completed seed, if the sweep
+        // kept one (store hits never carry traces; export runs bypass
+        // store reads precisely so this buffer exists).
+        let trace_json = by_cell[i]
+            .iter()
+            .find(|&&j| records[j].as_ref().is_some_and(|r| !r.stalled))
+            .and_then(|&j| traces[j].as_ref())
+            .map(|tb| {
+                let mut tb = tb.clone();
+                tb.meta.label = format!(
+                    "{}/{}/{}/{}x{}/q{}",
+                    p.w.name(),
+                    p.variant,
+                    p.elems,
+                    p.nodes,
+                    p.rpn,
+                    p.qpr
+                );
+                obs::chrome_trace(&tb)
+            });
         cells.push(CampaignCell {
             workload: p.w.name().to_string(),
             variant: p.variant.clone(),
@@ -739,35 +981,23 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
             delta_vs_ref_pct: None,
             validation,
             ok,
-            bytes_wire: m(|r| r.metrics.bytes_wire),
-            wire_msgs: m(|r| r.metrics.wire_msgs),
-            max_ingress_wait_ns: m(|r| r.metrics.max_ingress_wait_ns),
-            max_egress_wait_ns: m(|r| r.metrics.max_egress_wait_ns),
-            dwq_slot_waits: m(|r| r.metrics.dwq_slot_waits),
-            dwq_peak: m(|r| r.metrics.dwq_peak),
+            bytes_wire: m(|r| r.bytes_wire),
+            wire_msgs: m(|r| r.wire_msgs),
+            max_ingress_wait_ns: m(|r| r.max_ingress_wait_ns),
+            max_egress_wait_ns: m(|r| r.max_egress_wait_ns),
+            dwq_slot_waits: m(|r| r.dwq_slot_waits),
+            dwq_peak: m(|r| r.dwq_peak),
             per_queue: first.map(|r| r.per_queue.clone()).unwrap_or_default(),
-            unexpected_msgs: m(|r| r.metrics.unexpected_msgs),
-            events: m(|r| r.stats.events),
-            faults_injected: m(|r| r.metrics.faults_injected),
-            retries: m(|r| r.metrics.retries),
-            timeouts: m(|r| r.metrics.timeouts),
+            unexpected_msgs: m(|r| r.unexpected_msgs),
+            events: m(|r| r.events),
+            faults_injected: m(|r| r.faults_injected),
+            retries: m(|r| r.retries),
+            timeouts: m(|r| r.timeouts),
             stalls: stalled.len() as u64,
-            stall_report: stalled.first().map(|rep| format!("{rep}")),
+            stall_report: stalled.first().map(|r| r.stall_report.clone()),
             overlap_pct: first.and_then(|r| r.overlap.map(|o| o.pct())),
             crit: first.and_then(|r| r.crit),
-            trace_json: first.and_then(|r| {
-                let mut tb = r.trace.clone()?;
-                tb.meta.label = format!(
-                    "{}/{}/{}/{}x{}/q{}",
-                    p.w.name(),
-                    p.variant,
-                    p.elems,
-                    p.nodes,
-                    p.rpn,
-                    p.qpr
-                );
-                Some(obs::chrome_trace(&tb))
-            }),
+            trace_json,
         });
     }
 
@@ -805,7 +1035,218 @@ pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
         c.delta_vs_ref_pct = d;
     }
 
-    Ok(CampaignReport { seeds: spec.seeds.clone(), iters: spec.iters, cells })
+    Ok(CampaignReport { seeds: spec.seeds.clone(), iters: spec.iters, cells, cache })
+}
+
+// ---------------------------------------------------------------------
+// Cost-model diff
+// ---------------------------------------------------------------------
+
+/// One joined row of a cost-model diff: the same grid cell under the
+/// base and the overridden cost model.
+#[derive(Debug, Clone)]
+pub struct DiffRow {
+    pub workload: String,
+    pub variant: String,
+    pub elems: usize,
+    pub nodes: usize,
+    pub ranks_per_node: usize,
+    pub queues_per_rank: usize,
+    /// `"ok"` / `"stalled"` / `"skipped"` under the base model.
+    pub base_status: String,
+    /// Same, under the overridden model.
+    pub alt_status: String,
+    pub base_avg_ms: Option<f64>,
+    pub alt_avg_ms: Option<f64>,
+    /// Percent delta of the override vs the base (positive = the
+    /// override made the cell slower); `None` unless both sides ran
+    /// clean.
+    pub delta_pct: Option<f64>,
+}
+
+/// The assembled cost-model diff (see [`diff_cost_models`]).
+#[derive(Debug, Clone)]
+pub struct CostDiff {
+    /// The cost-model overrides the alternative side ran under.
+    pub overrides: Vec<(String, f64)>,
+    pub rows: Vec<DiffRow>,
+    /// Combined cache accounting of the two underlying runs.
+    pub cache: CacheStats,
+}
+
+impl CostDiff {
+    /// Deterministic JSON rendering.
+    pub fn to_json(&self) -> String {
+        let overrides = self
+            .overrides
+            .iter()
+            .map(|(f, v)| format!("{{\"field\": \"{}\", \"value\": {v}}}", json_escape(f)))
+            .collect::<Vec<_>>()
+            .join(", ");
+        let mut s = String::new();
+        s.push_str("{\n  \"cost_diff\": {\n");
+        s.push_str(&format!("    \"overrides\": [{overrides}],\n"));
+        s.push_str("    \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            let fmt_ms = |v: Option<f64>| match v {
+                Some(ms) => format!("{ms:.6}"),
+                None => "null".to_string(),
+            };
+            let delta = match r.delta_pct {
+                Some(d) => format!("{d:.3}"),
+                None => "null".to_string(),
+            };
+            s.push_str(&format!(
+                "      {{ \"workload\": \"{}\", \"variant\": \"{}\", \"elems\": {}, \
+                 \"nodes\": {}, \"ranks_per_node\": {}, \"queues_per_rank\": {}, \
+                 \"base_status\": \"{}\", \"alt_status\": \"{}\", \
+                 \"base_avg_ms\": {}, \"alt_avg_ms\": {}, \"delta_pct\": {} }}{}",
+                json_escape(&r.workload),
+                json_escape(&r.variant),
+                r.elems,
+                r.nodes,
+                r.ranks_per_node,
+                r.queues_per_rank,
+                json_escape(&r.base_status),
+                json_escape(&r.alt_status),
+                fmt_ms(r.base_avg_ms),
+                fmt_ms(r.alt_avg_ms),
+                delta,
+                if i + 1 == self.rows.len() { "\n" } else { ",\n" }
+            ));
+        }
+        s.push_str("    ]\n  }\n}\n");
+        s
+    }
+
+    /// Deterministic Markdown rendering.
+    pub fn to_markdown(&self) -> String {
+        let overrides = self
+            .overrides
+            .iter()
+            .map(|(f, v)| format!("`{f}={v}`"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        let mut rows = vec![vec![
+            "workload".to_string(),
+            "variant".to_string(),
+            "elems".to_string(),
+            "topo".to_string(),
+            "q".to_string(),
+            "base ms".to_string(),
+            "alt ms".to_string(),
+            "delta".to_string(),
+            "base".to_string(),
+            "alt".to_string(),
+        ]];
+        for r in &self.rows {
+            let fmt_ms = |v: Option<f64>| match v {
+                Some(ms) => format!("{ms:.3}"),
+                None => "--".to_string(),
+            };
+            let delta = match r.delta_pct {
+                Some(d) => format!("{d:+.1}%"),
+                None => "--".to_string(),
+            };
+            rows.push(vec![
+                r.workload.clone(),
+                r.variant.clone(),
+                r.elems.to_string(),
+                Topology::new(r.nodes, r.ranks_per_node).label(),
+                r.queues_per_rank.to_string(),
+                fmt_ms(r.base_avg_ms),
+                fmt_ms(r.alt_avg_ms),
+                delta,
+                r.base_status.clone(),
+                r.alt_status.clone(),
+            ]);
+        }
+        format!(
+            "# stmpi cost-model diff\n\noverrides: {}\n\n{}",
+            overrides,
+            markdown_table(&rows)
+        )
+    }
+}
+
+fn cell_status(c: &CampaignCell) -> &'static str {
+    if c.stalls > 0 {
+        "stalled"
+    } else if c.summary.is_some() {
+        "ok"
+    } else {
+        "skipped"
+    }
+}
+
+/// Run the same campaign grid under the base cost model and under
+/// `overrides` (applied via
+/// [`crate::costmodel::CostModel::apply_override`]), and join the two
+/// reports cell-by-cell. The join key is the cell identity — every
+/// fingerprint component except the cost hash — so with
+/// [`CampaignSpec::store`] set, whichever side is already cached is
+/// served from the store and only the other side simulates.
+pub fn diff_cost_models(spec: &CampaignSpec, overrides: &[(String, f64)]) -> Result<CostDiff> {
+    if overrides.is_empty() {
+        bail!("cost-model diff needs at least one field=value override");
+    }
+    let mut base_spec = spec.clone();
+    base_spec.trace = None; // exports would force store bypass for no benefit
+    base_spec.cost_overrides = Vec::new();
+    let mut alt_spec = base_spec.clone();
+    alt_spec.cost_overrides = overrides.to_vec();
+    let base = run_campaign(&base_spec)?;
+    let alt = run_campaign(&alt_spec)?;
+    // The two specs differ only in cost-model overrides, so the grids
+    // enumerate identically and the join is positional.
+    if base.cells.len() != alt.cells.len() {
+        bail!(
+            "cost diff: grids diverged ({} vs {} cells) — this is a bug",
+            base.cells.len(),
+            alt.cells.len()
+        );
+    }
+    let mut rows = Vec::with_capacity(base.cells.len());
+    for (b, a) in base.cells.iter().zip(&alt.cells) {
+        if (b.workload.as_str(), b.variant.as_str(), b.elems, b.nodes, b.ranks_per_node, b.queues_per_rank)
+            != (a.workload.as_str(), a.variant.as_str(), a.elems, a.nodes, a.ranks_per_node, a.queues_per_rank)
+        {
+            bail!(
+                "cost diff: cell identity diverged ({}/{} vs {}/{}) — this is a bug",
+                b.workload,
+                b.variant,
+                a.workload,
+                a.variant
+            );
+        }
+        let base_status = cell_status(b);
+        let alt_status = cell_status(a);
+        let base_avg_ms = b.summary.as_ref().map(|s| s.avg);
+        let alt_avg_ms = a.summary.as_ref().map(|s| s.avg);
+        let delta_pct = match (base_status, alt_status, base_avg_ms, alt_avg_ms) {
+            ("ok", "ok", Some(bm), Some(am)) => Some(pct_delta(bm, am)),
+            _ => None,
+        };
+        rows.push(DiffRow {
+            workload: b.workload.clone(),
+            variant: b.variant.clone(),
+            elems: b.elems,
+            nodes: b.nodes,
+            ranks_per_node: b.ranks_per_node,
+            queues_per_rank: b.queues_per_rank,
+            base_status: base_status.to_string(),
+            alt_status: alt_status.to_string(),
+            base_avg_ms,
+            alt_avg_ms,
+            delta_pct,
+        });
+    }
+    let cache = CacheStats {
+        hits: base.cache.hits + alt.cache.hits,
+        misses: base.cache.misses + alt.cache.misses,
+        simulated_ns_saved: base.cache.simulated_ns_saved + alt.cache.simulated_ns_saved,
+    };
+    Ok(CostDiff { overrides: overrides.to_vec(), rows, cache })
 }
 
 // ---------------------------------------------------------------------

@@ -33,6 +33,7 @@
 //! | `allgather` | ring gather phase over persistent `CommPlan`s    |
 //! | `halograph` | sparse random-graph halo, skewed arrivals driving the unexpected-message path |
 //! | `reduce-scatter` | ring reduce phase: serialized add-kernel chain over per-step CommPlans |
+//! | `broadcast` | binomial-tree root-to-all relay: log-depth receive-before-forward chains |
 //!
 //! Every workload sweeps the [`crate::stx::Variant`] axis: the host
 //! baseline, the paper's stream-triggered path (`st` / `st-shader`),
@@ -46,13 +47,17 @@ pub mod scaffold;
 mod allgather;
 mod allreduce;
 mod alltoall;
+mod broadcast;
 mod faces;
 mod halo3d;
 mod halograph;
 mod incast;
 mod reduce_scatter;
 
-pub use campaign::{run_campaign, CampaignReport, CampaignSpec};
+pub use campaign::{
+    diff_cost_models, run_campaign, run_campaign_observed, CampaignProgress, CampaignReport,
+    CampaignSpec, CostDiff,
+};
 
 use anyhow::{anyhow, Result};
 
@@ -244,6 +249,7 @@ pub fn registry() -> Vec<Box<dyn Workload>> {
         Box::new(allgather::Allgather),
         Box::new(halograph::HaloGraph),
         Box::new(reduce_scatter::ReduceScatter),
+        Box::new(broadcast::Broadcast),
     ]
 }
 

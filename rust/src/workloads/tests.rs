@@ -6,7 +6,7 @@ use super::campaign::{json_parses, run_campaign, CampaignSpec};
 use super::{by_name, grid_for, names, registry, ScenarioCfg, Validation};
 
 #[test]
-fn registry_has_eight_unique_workloads() {
+fn registry_has_nine_unique_workloads() {
     let names = names();
     assert_eq!(
         names,
@@ -18,7 +18,8 @@ fn registry_has_eight_unique_workloads() {
             "incast",
             "allgather",
             "halograph",
-            "reduce-scatter"
+            "reduce-scatter",
+            "broadcast"
         ]
     );
     for n in &names {
@@ -73,9 +74,14 @@ fn validated_workloads_check_data_on_mixed_topology() {
         ("halograph", "kt"),
         ("reduce-scatter", "st"),
         ("reduce-scatter", "kt"),
+        ("broadcast", "st"),
+        ("broadcast", "kt"),
     ] {
         let w = by_name(name).unwrap();
-        let cfg = ScenarioCfg::smoke(variant, 2, 2, 40);
+        // broadcast's relay chain is sequential: it only admits one
+        // queue per rank, so the mixed-topology leg keeps qpr=1 there.
+        let qpr = if name == "broadcast" { 1 } else { 2 };
+        let cfg = ScenarioCfg::smoke(variant, 2, qpr, 40);
         let r = w.run(&cfg).unwrap_or_else(|e| panic!("{name}::{variant}: {e}"));
         match r.validation {
             Validation::Passed { checked } => {
@@ -386,6 +392,46 @@ fn kt_tight_dwq_cell_stalls_with_a_report_naming_the_pool() {
     // Determinism: the stall diagnosis itself replays byte-identically.
     let rerun = run_campaign(&spec).unwrap();
     assert_eq!(report.to_json(), rerun.to_json());
+}
+
+/// broadcast propagates the root payload down a binomial tree: every
+/// variant exact-validates on a non-power-of-two world (so some ranks
+/// have no children and the last round is partial), and the sequential
+/// relay chain rejects queue striping at configure time.
+#[test]
+fn broadcast_tree_validates_on_non_power_of_two_worlds() {
+    let w = by_name("broadcast").unwrap();
+    for variant in ["baseline", "st", "st-shader", "kt"] {
+        // 3 nodes x 1 rank: rounds ⌈log2 3⌉ = 2, rank 2's receive edge
+        // comes from the tree's second round.
+        let cfg = ScenarioCfg::smoke(variant, 3, 1, 24);
+        let r = w.run(&cfg).unwrap_or_else(|e| panic!("broadcast::{variant}: {e}"));
+        match r.validation {
+            Validation::Passed { checked } => {
+                assert_eq!(checked, 3 * 24, "broadcast::{variant} must check every element")
+            }
+            other => panic!("broadcast::{variant}: expected Passed, got {other:?}"),
+        }
+        assert!(r.time_ns > 0);
+    }
+    assert!(w.configure(&ScenarioCfg::smoke("st", 2, 2, 24)).is_err(), "qpr>1 must be rejected");
+    assert!(w.configure(&ScenarioCfg::smoke("st", 1, 1, 24)).is_err(), "needs two ranks");
+}
+
+/// The broadcast tree is latency-bound: ST offloads the relay to the
+/// NIC (DWQ triggers fire), KT additionally fires from inside kernels,
+/// and wire traffic is identical across variants (n-1 receive edges).
+#[test]
+fn broadcast_st_and_kt_ride_the_triggered_path() {
+    let w = by_name("broadcast").unwrap();
+    let base = w.run(&ScenarioCfg::smoke("baseline", 4, 1, 24)).unwrap();
+    let st = w.run(&ScenarioCfg::smoke("st", 4, 1, 24)).unwrap();
+    let kt = w.run(&ScenarioCfg::smoke("kt", 4, 1, 24)).unwrap();
+    assert!(st.metrics.dwq_triggered > 0, "ST broadcast must trigger NIC deferred work");
+    assert_eq!(base.metrics.dwq_triggered, 0, "baseline must not touch the DWQ");
+    assert!(kt.metrics.kt_triggers > 0, "KT broadcast must fire mid-kernel triggers");
+    assert_eq!(st.metrics.bytes_wire, base.metrics.bytes_wire, "same tree either way");
+    assert_eq!(kt.metrics.bytes_wire, st.metrics.bytes_wire, "same tree either way");
 }
 
 /// The chaos smoke campaign ({drop, dup, delay, trigger-delay,

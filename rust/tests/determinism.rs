@@ -367,6 +367,41 @@ fn chaos_campaign_report_is_thread_count_invariant() {
     assert_eq!(serial.to_markdown(), parallel.to_markdown());
 }
 
+/// The rendezvous fault axis upholds the contract too: an `rdv_drops`
+/// campaign at a size past the eager threshold (32 KiB messages, so
+/// every inter-node send rides the RTS/Get path) injects RTS drops and
+/// watchdog replays, yet renders byte-identical reports across reruns
+/// and sweep worker-thread counts. Stalled rows (a watchdog that
+/// exhausts its retries) are allowed — they must simply be identical.
+#[test]
+fn rdv_drops_campaign_report_is_thread_count_invariant() {
+    let mut spec = CampaignSpec {
+        workloads: vec!["incast".into()],
+        variants: vec!["st".into(), "kt".into()],
+        elems: vec![8192],
+        topos: vec![(4, 1)],
+        queues: vec![1],
+        seeds: vec![5, 9],
+        iters: 3,
+        jitter: 0.0,
+        faults: Some(stmpi::fault::FaultSpec::rdv_drops(17)),
+        threads: Some(1),
+        ..CampaignSpec::default()
+    };
+    let serial = run_campaign(&spec).unwrap();
+    assert!(
+        serial.cells.iter().any(|c| c.faults_injected > 0),
+        "rdv-drops campaign must actually drop RTS messages:\n{}",
+        serial.to_markdown()
+    );
+    spec.threads = Some(4);
+    let parallel = run_campaign(&spec).unwrap();
+    let parallel_again = run_campaign(&spec).unwrap();
+    assert_eq!(serial.to_json(), parallel.to_json(), "1 thread vs 4 threads");
+    assert_eq!(parallel.to_json(), parallel_again.to_json(), "repeated parallel runs");
+    assert_eq!(serial.to_markdown(), parallel.to_markdown());
+}
+
 /// Stalled rows are deterministic too: the pinned KT tight-DWQ stress
 /// cell renders the same `stalled` row (full StallReport text included)
 /// across reruns and across sweep worker-thread counts.

@@ -529,6 +529,78 @@ fn prop_chaos_plans_validate_or_stall_never_panic() {
     let _ = stalled;
 }
 
+/// Rendezvous-path chaos: payloads above the 16 KiB eager threshold
+/// move via RTS/Get, and the RTS control message is exactly what the
+/// `rdv_drops` plan kills — without watchdog replay the receiver never
+/// learns the payload exists. Same contract as the eager blitz above:
+/// every cell either completes AND exact-validates or surfaces a
+/// structured `SimError::Stall` with a non-empty report — never a host
+/// panic, never a hang, never corrupt data. A combined chaos+rdv plan
+/// keeps both ledgers (eager payloads and RTS descriptors) live at once.
+#[test]
+fn prop_rendezvous_chaos_validates_or_stalls_never_panics() {
+    use stmpi::fault::FaultSpec;
+    use stmpi::sim::SimError;
+    use stmpi::workloads::{registry, ScenarioCfg};
+
+    // 8192 f32 elems = 32 KiB per message: past the eager threshold on
+    // the frontier-like preset, so inter-node payloads take RTS/Get.
+    const ELEMS: usize = 8192;
+    fn chaos_rdv(seed: u64) -> FaultSpec {
+        FaultSpec { rdv_drop_prob: 0.2, ..FaultSpec::chaos(seed) }
+    }
+    let plans: [(&str, fn(u64) -> FaultSpec); 2] =
+        [("rdv-drops", FaultSpec::rdv_drops), ("chaos+rdv", chaos_rdv)];
+    let (mut cells, mut stalled, mut rdv_cells) = (0u64, 0u64, 0u64);
+    for w in registry() {
+        for &variant in w.variants() {
+            for (plan_name, plan) in &plans {
+                let mut cfg = ScenarioCfg::smoke(variant, 2, 1, ELEMS);
+                cfg.faults = Some(plan(2600 + cells));
+                if w.configure(&cfg).is_err() {
+                    continue;
+                }
+                cells += 1;
+                match w.run(&cfg) {
+                    Ok(r) => {
+                        assert!(
+                            r.validation.ok(),
+                            "{}::{variant} under {plan_name}: recovered runs must \
+                             exact-validate: {}",
+                            w.name(),
+                            r.validation.label()
+                        );
+                        rdv_cells += u64::from(r.metrics.rendezvous_sends > 0);
+                    }
+                    Err(e) => match e.downcast_ref::<SimError>() {
+                        Some(SimError::Stall { report }) => {
+                            assert!(
+                                !report.hosts.is_empty() || !report.waiters.is_empty(),
+                                "{}::{variant} under {plan_name}: empty stall report",
+                                w.name()
+                            );
+                            stalled += 1;
+                        }
+                        other => panic!(
+                            "{}::{variant} under {plan_name}: expected clean completion or \
+                             a StallReport, got {other:?} ({e:#})",
+                            w.name()
+                        ),
+                    },
+                }
+            }
+        }
+    }
+    assert!(cells >= 20, "the blitz must cover the workload x variant grid, got {cells}");
+    assert!(
+        rdv_cells > 0,
+        "at 32 KiB payloads at least one clean cell must actually take the rendezvous path"
+    );
+    // As in the eager blitz, whether any cell stalls is seed-dependent;
+    // both outcomes satisfy the contract.
+    let _ = stalled;
+}
+
 /// Trace-analytics invariants across the whole registry: every traced
 /// run (recording defaults on) carries a non-empty trace; achieved
 /// overlap is present on inter-node cells with `hidden <= wire` (so

@@ -1,0 +1,275 @@
+//! Campaign-store integration (PR 9): incremental reruns served from
+//! the content-addressed cache are byte-identical to cold runs at any
+//! worker-thread count, cost-model changes invalidate every affected
+//! cell, a corrupted segment is quarantined (never fatal) and heals on
+//! the next run, and the `stmpi serve` TCP service answers cell queries,
+//! runs incremental campaigns, and diffs cost models over the wire.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+
+use stmpi::store::server::Server;
+use stmpi::store::{Json, Store};
+use stmpi::workloads::campaign::{diff_cost_models, json_parses, run_campaign, CampaignSpec};
+
+/// Fresh per-test store directory under the system tempdir (integration
+/// tests may run in parallel; the name keys on pid + test).
+fn tmpdir(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("stmpi-store-it-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The smoke grid pointed at `dir`, pinned to `threads` sweep workers.
+fn store_spec(dir: &Path, threads: usize) -> CampaignSpec {
+    let mut spec = CampaignSpec::smoke();
+    spec.threads = Some(threads);
+    spec.store = Some(dir.to_string_lossy().into_owned());
+    spec
+}
+
+/// The acceptance contract: a warm rerun simulates **zero** jobs yet
+/// renders a byte-identical report — across reruns, across worker-thread
+/// counts, and identically to a store-less run of the same spec.
+#[test]
+fn warm_rerun_simulates_nothing_and_is_byte_identical() {
+    let dir = tmpdir("warm");
+    let cold = run_campaign(&store_spec(&dir, 1)).unwrap();
+    assert!(cold.all_ok(), "{}", cold.to_markdown());
+    assert_eq!(cold.cache.hits, 0, "a fresh store has nothing to serve");
+    assert!(cold.cache.misses > 0);
+    assert_eq!(cold.cache.simulated_ns_saved, 0);
+
+    let warm = run_campaign(&store_spec(&dir, 1)).unwrap();
+    assert_eq!(warm.cache.misses, 0, "warm rerun must simulate nothing");
+    assert_eq!(warm.cache.hits, cold.cache.misses, "every job served from the store");
+    assert!(warm.cache.simulated_ns_saved > 0);
+    assert_eq!(cold.to_json(), warm.to_json(), "cached rows must be byte-identical");
+    assert_eq!(cold.to_markdown(), warm.to_markdown());
+
+    // Worker-thread count must not matter for hits either (batching in
+    // the store path cannot leak into the report).
+    let warm4 = run_campaign(&store_spec(&dir, 4)).unwrap();
+    assert_eq!(warm4.cache.misses, 0);
+    assert_eq!(cold.to_json(), warm4.to_json());
+
+    // And the store must be invisible in the report bytes: the same
+    // spec without a store renders identically.
+    let mut plain = CampaignSpec::smoke();
+    plain.threads = Some(1);
+    let p = run_campaign(&plain).unwrap();
+    assert_eq!(p.to_json(), cold.to_json(), "the store must not change report bytes");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A cold run on 4 sweep threads populates a store that a 1-thread rerun
+/// hits completely — the fingerprint is a function of the job, not of
+/// the execution schedule.
+#[test]
+fn cache_keys_are_schedule_independent() {
+    let dir = tmpdir("sched");
+    let cold = run_campaign(&store_spec(&dir, 4)).unwrap();
+    let warm = run_campaign(&store_spec(&dir, 1)).unwrap();
+    assert_eq!(warm.cache.misses, 0);
+    assert_eq!(warm.cache.hits, cold.cache.misses);
+    assert_eq!(cold.to_json(), warm.to_json());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Changing the cost model changes every fingerprint: nothing is served
+/// stale, every cell re-simulates, and both populations coexist in the
+/// store afterwards (the base rerun still hits).
+#[test]
+fn cost_override_invalidates_every_cell() {
+    let dir = tmpdir("cost");
+    let base = run_campaign(&store_spec(&dir, 1)).unwrap();
+
+    let mut tweaked = store_spec(&dir, 1);
+    tweaked.cost_overrides = vec![("wire_latency".to_string(), 2_500.0)];
+    let alt = run_campaign(&tweaked).unwrap();
+    assert_eq!(alt.cache.hits, 0, "a changed cost model must miss every cell");
+    assert_eq!(alt.cache.misses, base.cache.misses);
+    assert_ne!(alt.to_json(), base.to_json(), "the override must actually move timings");
+
+    // Both cost models are now resident: each rerun is fully warm.
+    let warm_alt = run_campaign(&tweaked).unwrap();
+    assert_eq!(warm_alt.cache.misses, 0);
+    assert_eq!(warm_alt.to_json(), alt.to_json());
+    let warm_base = run_campaign(&store_spec(&dir, 1)).unwrap();
+    assert_eq!(warm_base.cache.misses, 0);
+    assert_eq!(warm_base.to_json(), base.to_json());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A segment truncated mid-line (killed process) is quarantined with its
+/// valid prefix kept; the next campaign re-simulates only the lost tail
+/// and still renders the identical report.
+#[test]
+fn corrupted_segment_quarantines_and_the_rerun_heals() {
+    let dir = tmpdir("quarantine");
+    let cold = run_campaign(&store_spec(&dir, 1)).unwrap();
+
+    let seg = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .find(|p| p.extension().is_some_and(|x| x == "log"))
+        .expect("the cold run must have written a segment");
+    let text = std::fs::read_to_string(&seg).unwrap();
+    assert!(text.lines().count() > 1, "need several records to keep a prefix");
+    std::fs::write(&seg, &text[..text.len() - 25]).unwrap();
+
+    let healed = run_campaign(&store_spec(&dir, 1)).unwrap();
+    assert!(healed.cache.hits > 0, "the valid prefix must still serve");
+    assert!(healed.cache.misses > 0, "the truncated tail must re-simulate");
+    assert_eq!(cold.to_json(), healed.to_json(), "healing must be byte-faithful");
+    assert!(
+        std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .any(|e| e.file_name().to_string_lossy().ends_with(".quarantined")),
+        "the damaged segment must be renamed, not deleted or left live"
+    );
+
+    // After healing, the store is whole again.
+    let warm = run_campaign(&store_spec(&dir, 1)).unwrap();
+    assert_eq!(warm.cache.misses, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `diff_cost_models` joins the base and overridden runs cell-by-cell,
+/// carries real deltas for clean cells, and is itself incremental: a
+/// repeated diff over the same store simulates nothing.
+#[test]
+fn cost_model_diff_joins_cells_and_is_incremental() {
+    let dir = tmpdir("diff");
+    let spec = store_spec(&dir, 1);
+    let overrides = vec![("wire_latency".to_string(), 3_000.0)];
+    let diff = diff_cost_models(&spec, &overrides).unwrap();
+    assert!(!diff.rows.is_empty());
+    let mut saw_ok = false;
+    for r in &diff.rows {
+        // The smoke grid crosses every variant with every workload, so
+        // infeasible combinations appear as `skipped` on BOTH sides —
+        // cost overrides cannot change feasibility.
+        assert_eq!(r.base_status, r.alt_status, "{}/{}", r.workload, r.variant);
+        if r.base_status == "ok" {
+            saw_ok = true;
+            assert!(r.delta_pct.is_some(), "clean cells must carry a delta");
+        } else {
+            assert!(r.delta_pct.is_none());
+        }
+    }
+    assert!(saw_ok, "the smoke grid must contribute clean cells");
+    assert!(
+        diff.rows.iter().any(|r| r.delta_pct.unwrap_or(0.0).abs() > 0.0),
+        "a 3µs wire latency must move at least one cell"
+    );
+    assert!(json_parses(&diff.to_json()), "{}", diff.to_json());
+    assert!(diff.to_markdown().contains("stmpi cost-model diff"));
+
+    let again = diff_cost_models(&spec, &overrides).unwrap();
+    assert_eq!(again.cache.misses, 0, "a repeated diff must be fully cached");
+    assert_eq!(diff.to_json(), again.to_json());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// One server conversation end to end over a real socket: ping, an
+/// incremental campaign submission (progress lines then `done`), a cell
+/// query, a `get` by key, a cost-model diff, and shutdown.
+#[test]
+fn server_answers_campaigns_queries_and_diffs_over_tcp() {
+    let dir = tmpdir("serve");
+    // Seed the store so the submitted campaign below is fully warm.
+    run_campaign(&store_spec(&dir, 1)).unwrap();
+
+    let server = Server::bind("127.0.0.1:0", &dir).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.serve());
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    let mut send = |req: &str| {
+        writeln!(w, "{req}").unwrap();
+        w.flush().unwrap();
+    };
+    let mut recv = || {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        Json::parse(&line).unwrap_or_else(|| panic!("server sent invalid JSON: {line}"))
+    };
+    let ok = |v: &Json| v.get("ok").and_then(Json::as_bool) == Some(true);
+
+    send("{\"op\":\"ping\"}");
+    let v = recv();
+    assert!(ok(&v) && v.get("pong").and_then(Json::as_bool) == Some(true));
+
+    // Malformed requests answer an error line and keep the connection.
+    send("{\"op\":\"no-such-op\"}");
+    let v = recv();
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(v.get("error").and_then(Json::as_str).is_some());
+
+    // Submit the smoke grid: everything is already resident, so the run
+    // must report zero simulated jobs and finish with the full report.
+    let spec = "{\"workloads\": [\"halo3d\", \"allreduce\"], \
+                \"variants\": [\"baseline\", \"st\", \"kt\", \"ring-st\", \"ring-kt\"], \
+                \"elems\": [48], \"topos\": [[2, 1]], \"seeds\": [5, 9], \
+                \"iters\": 2, \"jitter\": 0.0, \"threads\": 1}";
+    send(&format!("{{\"op\":\"campaign\",\"spec\":{spec}}}"));
+    let done = loop {
+        let v = recv();
+        assert!(ok(&v), "campaign stream must stay ok");
+        match v.get("event").and_then(Json::as_str) {
+            Some("progress") => continue,
+            Some("done") => break v,
+            other => panic!("unexpected event {other:?}"),
+        }
+    };
+    assert_eq!(done.get("cache_misses").and_then(Json::as_u64), Some(0));
+    assert!(done.get("cache_hits").and_then(Json::as_u64).unwrap_or(0) > 0);
+    assert_eq!(done.get("all_ok").and_then(Json::as_bool), Some(true));
+    assert!(done.get("report").and_then(Json::as_str).is_some());
+
+    // Query one workload's rows and fetch the first row again by key.
+    send("{\"op\":\"query\",\"workload\":\"halo3d\",\"variant\":\"st\"}");
+    let v = recv();
+    assert!(ok(&v));
+    let rows = v.get("rows").and_then(Json::as_arr).expect("rows array");
+    assert!(!rows.is_empty(), "halo3d/st must be resident");
+    for row in rows {
+        assert_eq!(row.get("workload").and_then(Json::as_str), Some("halo3d"));
+        assert_eq!(row.get("variant").and_then(Json::as_str), Some("st"));
+    }
+    let key = rows[0].get("key").and_then(Json::as_str).expect("rows carry keys").to_string();
+    send(&format!("{{\"op\":\"get\",\"key\":\"{key}\"}}"));
+    let v = recv();
+    assert!(ok(&v) && v.get("found").and_then(Json::as_bool) == Some(true));
+    assert_eq!(
+        v.get("record").and_then(|r| r.get("key")).and_then(Json::as_str),
+        Some(key.as_str())
+    );
+
+    // Diff two cost models over the wire (both legs warm on one side).
+    send(&format!(
+        "{{\"op\":\"diff\",\"spec\":{spec},\"overrides\":[[\"wire_latency\",2500]]}}"
+    ));
+    let v = recv();
+    assert!(ok(&v), "{v:?}");
+    assert!(v.get("rows").and_then(Json::as_u64).unwrap_or(0) > 0);
+    assert!(v.get("diff").and_then(Json::as_str).is_some());
+
+    send("{\"op\":\"shutdown\"}");
+    let v = recv();
+    assert!(ok(&v) && v.get("bye").and_then(Json::as_bool) == Some(true));
+    handle.join().unwrap().unwrap();
+
+    // The server's campaigns committed to the same store the CLI reads.
+    let store = Store::open(&dir).unwrap();
+    assert!(store.len() > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
