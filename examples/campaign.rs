@@ -3,9 +3,9 @@
 //! report (written to CAMPAIGN_report.{json,md} in the working dir).
 //!
 //! Two parts:
-//! 1. the CI smoke campaign (2 workloads × 3 variants each — host, ST,
-//!    KT — tiny sizes) with hard assertions: validation passes, the
-//!    JSON report parses, and a rerun is byte-identical;
+//! 1. the CI smoke campaign (2 workloads × 4 variants each — host, ST,
+//!    KT, and GI — tiny sizes) with hard assertions: validation passes,
+//!    the JSON report parses, and a rerun is byte-identical;
 //! 2. the full default campaign — all nine registered workloads × every
 //!    variant × 2 sizes × 2 topologies × {1, 2} queues per rank × 2
 //!    seeds — which produces the report artifact CI uploads (including
@@ -57,6 +57,13 @@ fn main() {
     assert!(
         report.cells.iter().any(|c| c.queues_per_rank == 2 && c.summary.is_some()),
         "the multi-queue axis must contribute ran cells"
+    );
+    assert!(
+        report
+            .cells
+            .iter()
+            .any(|c| c.variant.contains("gi") && c.summary.is_some() && c.gi_posts > 0),
+        "the GPU-initiated axis must contribute ran cells that post through the command ring"
     );
     assert!(
         report

@@ -1,8 +1,9 @@
 //! Collectives built on the triggered-op primitives: a ring allreduce
 //! and a recursive-doubling allreduce whose every communication step is
-//! stream-triggered, plus a kernel-triggered ring
-//! ([`ring_allreduce_kt`]) where the per-step trigger/wait pair rides
-//! the reduction kernels themselves.
+//! stream-triggered, a kernel-triggered ring ([`ring_allreduce_kt`])
+//! where the per-step trigger/wait pair rides the reduction kernels
+//! themselves, and a GPU-initiated ring ([`ring_allreduce_gi`]) where
+//! the kernels build the per-step command-ring descriptors outright.
 //!
 //! This demonstrates the paper's API composing into higher-level
 //! operations: each ST step enqueues a deferred send + receive, one
@@ -226,6 +227,121 @@ pub fn ring_allreduce_kt(
             }
         };
         host_enqueue(ctx, sid, StreamOp::KtKernel(spec, kt));
+    }
+}
+
+/// GPU-initiated ring allreduce (sum): the same two-phase schedule as
+/// [`ring_allreduce_st`] / [`ring_allreduce_kt`] — guaranteed, all
+/// three call [`ring_rs_step`] / [`ring_ag_step`] — but every step's
+/// send and receive become command-ring descriptors the step's kernel
+/// builds itself ([`crate::gpu::StreamOp::GiKernel`]): no host arming
+/// cost, no trigger counters, no DWQ slots, at the price of
+/// `cost.gi_descr_build_ns` of device time per descriptor inside the
+/// kernel window. Step `s`'s completion wait rides the prologue of the
+/// kernel that consumes its data (threshold shipped as a kernel
+/// argument), and step `s+1`'s descriptors are built at that same
+/// kernel's tail. The allgather phase rides tiny device-side progress
+/// kernels, exactly like the KT ring. Where KT kicks step 0 with one
+/// host-enqueued stream memop, GI uses a tiny leading kick *kernel*
+/// whose tail builds step 0's descriptors: the GI path enqueues no
+/// stream memory ops at all. The last kernel's prologue waits through
+/// the final step, so a trailing `stream_synchronize` leaves the queue
+/// idle.
+#[allow(clippy::too_many_arguments)]
+pub fn ring_allreduce_gi(
+    ctx: &mut HostCtx<World>,
+    rank: usize,
+    n: usize,
+    q: &Queue,
+    sid: gpu::StreamId,
+    data: BufId,
+    len: usize,
+    tmp: BufId,
+    comm: u16,
+) {
+    if n <= 1 {
+        return;
+    }
+    let next = (rank + 1) % n;
+    let prev = (rank + n - 1) % n;
+    let ch = chunks(len, n);
+    let rs_steps = n - 1;
+    let total_steps = 2 * (n - 1);
+
+    // Post one step's send + receive into a GI descriptor plan
+    // (reduce-scatter steps stage the incoming chunk in `tmp`;
+    // allgather steps land in place).
+    let post_step = |ctx: &mut HostCtx<World>, gi: &mut gpu::GiCtx, i: usize| {
+        let (send_c, recv_c, tag, stage) = if i < rs_steps {
+            let (s, r, t) = ring_rs_step(rank, n, i);
+            (s, r, t, true)
+        } else {
+            let (s, r, t) = ring_ag_step(rank, n, i - rs_steps);
+            (s, r, t, false)
+        };
+        let (soff, slen) = ch[send_c];
+        let (roff, rlen) = ch[recv_c];
+        q.gi_send(ctx, gi, next, BufSlice::new(data, soff, slen), tag, comm)
+            .expect("gi ring send");
+        let dst = if stage { BufSlice::new(tmp, 0, rlen) } else { BufSlice::new(data, roff, rlen) };
+        q.gi_recv(ctx, gi, prev, dst, tag, comm).expect("gi ring recv");
+    };
+
+    // Kick kernel: builds step 0's descriptors at its tail (data is
+    // ready at entry, so it waits on nothing).
+    let mut kick = gpu::GiCtx::new();
+    post_step(ctx, &mut kick, 0);
+    host_enqueue(
+        ctx,
+        sid,
+        StreamOp::GiKernel(
+            KernelSpec {
+                name: "gi_ring_kick".into(),
+                flops: 0,
+                bytes: 0,
+                payload: KernelPayload::None,
+            },
+            kick,
+        ),
+    );
+
+    for i in 0..total_steps {
+        let mut gi = gpu::GiCtx::new();
+        // This step's send+recv completion rides the kernel prologue
+        // (threshold snapshot taken before step i+1's posts are
+        // recorded, so it covers exactly steps 0..=i).
+        q.gi_wait(ctx, &mut gi).expect("gi ring wait");
+        if i + 1 < total_steps {
+            // The next step's descriptors are built at this kernel's
+            // tail, once the chunk it sends is globally visible.
+            post_step(ctx, &mut gi, i + 1);
+        }
+        let spec = if i < rs_steps {
+            let (_, recv_c, _) = ring_rs_step(rank, n, i);
+            let (roff, rlen) = ch[recv_c];
+            KernelSpec {
+                name: format!("gi_ring_acc[{i}]"),
+                flops: rlen as u64,
+                bytes: 3 * 4 * rlen as u64,
+                payload: KernelPayload::Fn(Box::new(move |w, _| {
+                    let t = w.bufs.get(tmp)[..rlen].to_vec();
+                    let d = w.bufs.get_mut(data);
+                    for (dst, src) in d[roff..roff + rlen].iter_mut().zip(&t) {
+                        *dst += src;
+                    }
+                })),
+            }
+        } else {
+            // Device-side progress kernel: carries the wait and builds
+            // the next allgather step's descriptors.
+            KernelSpec {
+                name: format!("gi_ring_step[{i}]"),
+                flops: 0,
+                bytes: 0,
+                payload: KernelPayload::None,
+            }
+        };
+        host_enqueue(ctx, sid, StreamOp::GiKernel(spec, gi));
     }
 }
 
@@ -501,6 +617,83 @@ mod tests {
         assert_eq!(m.kt_triggers, (n as u64) * (2 * (n as u64 - 1) - 1));
         // The only memop per rank is the step-0 kick.
         assert_eq!(m.memops_executed, n as u64);
+    }
+
+    fn run_gi_allreduce(nodes: usize, rpn: usize, len: usize) {
+        let n = nodes * rpn;
+        let mut cost = presets::frontier_like();
+        cost.jitter_sigma = 0.0;
+        let mut w = build_world(cost, Topology::new(nodes, rpn));
+        let data: Vec<BufId> = (0..n)
+            .map(|r| w.bufs.alloc_init((0..len).map(|i| (r * len + i) as f32).collect()))
+            .collect();
+        let tmp: Vec<BufId> = (0..n).map(|_| w.bufs.alloc(len / n + 1)).collect();
+        let expect: Vec<f32> = (0..len)
+            .map(|i| (0..n).map(|r| (r * len + i) as f32).sum())
+            .collect();
+        let data2 = data.clone();
+        let out = run_cluster(w, 1, move |rank, ctx| {
+            let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+            let q = Queue::create(ctx, rank, sid, Variant::GpuInitiated).unwrap();
+            ring_allreduce_gi(ctx, rank, n, &q, sid, data2[rank], len, tmp[rank], COMM_WORLD);
+            stream_synchronize(ctx, sid);
+            q.free(ctx).expect("queue idle after GI ring");
+        })
+        .unwrap();
+        for r in 0..n {
+            assert_eq!(
+                out.world.bufs.get(data[r]),
+                &expect[..],
+                "rank {r} gi-allreduce result wrong"
+            );
+        }
+    }
+
+    #[test]
+    fn gi_allreduce_two_ranks_inter_node() {
+        run_gi_allreduce(2, 1, 16);
+    }
+
+    #[test]
+    fn gi_allreduce_four_ranks_intra_node() {
+        run_gi_allreduce(1, 4, 32);
+    }
+
+    #[test]
+    fn gi_allreduce_mixed_topology_odd_len() {
+        run_gi_allreduce(2, 2, 37);
+    }
+
+    /// GI posts every step's send+recv as command-ring descriptors built
+    /// by the kernels themselves: the run must record ring consumptions,
+    /// no stream memops at all (not even KT's step-0 kick), and no DWQ
+    /// descriptor posts (the NIC drains the ring directly).
+    #[test]
+    fn gi_allreduce_uses_command_rings_not_memops_or_dwq() {
+        let n = 4;
+        let len = 32;
+        let mut cost = presets::frontier_like();
+        cost.jitter_sigma = 0.0;
+        let mut w = build_world(cost, Topology::new(n, 1));
+        let data: Vec<BufId> = (0..n).map(|_| w.bufs.alloc(len)).collect();
+        let tmp: Vec<BufId> = (0..n).map(|_| w.bufs.alloc(len)).collect();
+        let out = run_cluster(w, 1, move |rank, ctx| {
+            let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+            let q = Queue::create(ctx, rank, sid, Variant::GpuInitiated).unwrap();
+            ring_allreduce_gi(ctx, rank, n, &q, sid, data[rank], len, tmp[rank], COMM_WORLD);
+            stream_synchronize(ctx, sid);
+            q.free(ctx).expect("queue idle after GI ring");
+        })
+        .unwrap();
+        let m = &out.world.metrics;
+        // Every step's send+recv rides the ring: at least 2 * 2(n-1)
+        // descriptors per rank (sends past GI_CHUNK_BYTES would add
+        // more; these chunks are tiny, so exactly one each).
+        assert_eq!(m.gi_posts, (n as u64) * 2 * 2 * (n as u64 - 1));
+        assert_eq!(m.memops_executed, 0);
+        assert_eq!(m.kt_triggers, 0);
+        let dwq_posts: u64 = out.world.queues.iter().map(|q| q.dwq_posts).sum();
+        assert_eq!(dwq_posts, 0);
     }
 
     fn run_rd_allreduce(nodes: usize, rpn: usize, len: usize) {

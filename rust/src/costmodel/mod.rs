@@ -27,6 +27,13 @@ pub enum MemOpFlavor {
     Shader,
 }
 
+/// Default [`CostModel::gi_descr_build_ns`]: building a fixed-size
+/// work-queue element with device-scope stores is cheaper than one host
+/// `MPIX_Enqueue_*` call (300 ns) but far from free — GICC-style
+/// measurements put a per-WQE doorbell + descriptor write in the
+/// ~100 ns range.
+pub const GI_DESCR_BUILD_NS_DEFAULT: Time = 120;
+
 /// All tunable costs of the simulated testbed.
 #[derive(Debug, Clone)]
 pub struct CostModel {
@@ -79,6 +86,17 @@ pub struct CostModel {
     pub nic_recv_post: Time,
     /// NIC completion-counter update cost.
     pub nic_completion: Time,
+    /// Device-side cost for a kernel's threads to build ONE command-ring
+    /// descriptor on the GPU-initiated path ([`crate::gpu::GiCtx`]).
+    /// Paid serially inside the kernel window — it extends the kernel —
+    /// once per [`crate::gpu::GI_CHUNK_BYTES`] granule of send payload
+    /// (receives are a single descriptor). The GI analogue of the host's
+    /// `host_enqueue_call` arming cost on the ST/KT paths.
+    ///
+    /// Default [`GI_DESCR_BUILD_NS_DEFAULT`]. Deliberately NOT part of
+    /// [`CostModel::fields`]: it folds into [`CostModel::stable_hash`]
+    /// only when overridden, so pre-GI store fingerprints stay valid.
+    pub gi_descr_build_ns: Time,
     /// One-way wire latency between any two nodes (Slingshot ~1.8 µs MPI).
     pub wire_latency: Time,
     /// Wire bandwidth in bytes/ns (200 Gb/s = 25 GB/s = 25 B/ns).
@@ -237,6 +255,14 @@ impl CostModel {
         for (name, value) in self.fields() {
             h.write_str(name).write_f64(value);
         }
+        // Fields added after the store's schema was frozen fold in only
+        // when they differ from their default: a model that never
+        // touches them hashes exactly as it did before the field
+        // existed, so pre-existing store cells stay valid (the
+        // zero-invalidation contract for canon extensions).
+        if self.gi_descr_build_ns != GI_DESCR_BUILD_NS_DEFAULT {
+            h.write_str("gi_descr_build_ns").write_f64(self.gi_descr_build_ns as f64);
+        }
         h.finish()
     }
 
@@ -283,8 +309,12 @@ impl CostModel {
             "nic_counter_limit" => self.nic_counter_limit = u,
             "dwq_slots_per_nic" => self.dwq_slots_per_nic = u,
             "jitter_sigma" => self.jitter_sigma = value,
+            "gi_descr_build_ns" => self.gi_descr_build_ns = t,
             other => {
-                let names: Vec<&str> = self.fields().iter().map(|(n, _)| *n).collect();
+                let mut names: Vec<&str> = self.fields().iter().map(|(n, _)| *n).collect();
+                // Conditionally-hashed fields live outside fields(); keep
+                // them discoverable in the error message.
+                names.push("gi_descr_build_ns");
                 anyhow::bail!("unknown cost-model field {other:?}; valid: {}", names.join(", "));
             }
         }
@@ -354,6 +384,21 @@ mod tests {
     }
 
     #[test]
+    fn gi_descr_build_hashes_only_when_overridden() {
+        // The zero-invalidation contract: at its default the field must
+        // NOT perturb the hash (pre-GI store cells stay valid) …
+        let base = presets::frontier_like();
+        assert_eq!(base.gi_descr_build_ns, GI_DESCR_BUILD_NS_DEFAULT);
+        // … but any override must invalidate, like every other field.
+        let mut cm = presets::frontier_like();
+        cm.apply_override("gi_descr_build_ns", (GI_DESCR_BUILD_NS_DEFAULT + 1) as f64).unwrap();
+        assert_ne!(cm.stable_hash(), base.stable_hash());
+        // Round-tripping back to the default restores the exact hash.
+        cm.apply_override("gi_descr_build_ns", GI_DESCR_BUILD_NS_DEFAULT as f64).unwrap();
+        assert_eq!(cm.stable_hash(), base.stable_hash());
+    }
+
+    #[test]
     fn apply_override_sets_fields_and_rejects_unknown() {
         let mut cm = presets::frontier_like();
         cm.apply_override("wire_bw", 50.0).unwrap();
@@ -362,8 +407,11 @@ mod tests {
         assert_eq!(cm.eager_threshold, 1024);
         cm.apply_override("wire_latency", 900.0).unwrap();
         assert_eq!(cm.wire_latency, 900);
+        cm.apply_override("gi_descr_build_ns", 90.0).unwrap();
+        assert_eq!(cm.gi_descr_build_ns, 90);
         let err = cm.apply_override("no_such_field", 1.0).unwrap_err().to_string();
         assert!(err.contains("no_such_field") && err.contains("wire_bw"), "{err}");
+        assert!(err.contains("gi_descr_build_ns"), "{err}");
         assert!(cm.apply_override("wire_bw", f64::NAN).is_err());
         assert!(cm.apply_override("wire_bw", -1.0).is_err());
     }

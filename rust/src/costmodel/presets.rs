@@ -39,6 +39,7 @@ pub fn frontier_like() -> CostModel {
         nic_match: 120,
         nic_recv_post: 280,
         nic_completion: 200,
+        gi_descr_build_ns: super::GI_DESCR_BUILD_NS_DEFAULT,
         wire_latency: 1_800,
         wire_bw: 25.0, // 25 GB/s
         eager_threshold: 16 * 1024,

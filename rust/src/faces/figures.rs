@@ -6,7 +6,8 @@
 //! produces the paper-style avg/min/max rows plus the baseline-relative
 //! deltas. The benches under `benches/` are thin wrappers that print
 //! these reports; `examples/faces_sweep.rs` runs them all, plus the
-//! ST-vs-KT message-size sweep ([`run_kt_compare`]).
+//! ST-vs-KT message-size sweep ([`run_kt_compare`]) and the KT-vs-GI
+//! crossover sweep ([`run_gi_compare`], the `figgi` artifact).
 
 use crate::coordinator::report::{pct_delta, render_table, Summary};
 use crate::costmodel::presets;
@@ -327,6 +328,114 @@ pub fn render_kt_compare(rows: &[KtCompareRow]) -> String {
     )
 }
 
+// ---------------------------------------------------------------------
+// KT-vs-GI message-size sweep (the figgi crossover)
+// ---------------------------------------------------------------------
+
+/// One row of the KT-vs-GI message-size sweep.
+#[derive(Debug)]
+pub struct GiCompareRow {
+    /// Faces block edge; the face payload is `4 * g * g` bytes.
+    pub g: usize,
+    pub kt: Summary,
+    pub gi: Summary,
+}
+
+impl GiCompareRow {
+    /// GI delta vs KT in percent (negative = GI faster).
+    pub fn delta_pct(&self) -> f64 {
+        pct_delta(self.kt.avg, self.gi.avg)
+    }
+}
+
+/// Block edges swept by the KT-vs-GI comparison: face payloads from
+/// 4 KiB (one command-ring descriptor) to 144 KiB (18 descriptors).
+pub const GI_COMPARE_GS: [usize; 4] = [32, 64, 128, 192];
+
+/// The KT-vs-GI crossover figure (`figgi`): for every block edge in
+/// `gs`, run Faces on the inter-node 2x2x2 topology under KT and GI.
+///
+/// The two variants trade different overheads, so the sweep crosses
+/// over with message size:
+///
+/// * **GI wins small messages** — KT still pays host arming per message
+///   (trigger/DWQ bookkeeping) every iteration; GI ships the pattern as
+///   kernel arguments and pays only one `gi_descr_build_ns` descriptor
+///   per message inside the kernel window.
+/// * **KT wins large messages** — GI's descriptor count grows with
+///   payload (one per [`crate::gpu::GI_CHUNK_BYTES`]), built serially
+///   at the kernel tail, while KT's pre-armed DWQ descriptors cost the
+///   same regardless of size.
+///
+/// The crossover is pinned by this module's tests: GI faster at the
+/// smallest edge, KT faster at the largest.
+pub fn run_gi_compare(gs: &[usize], seeds: &[u64], loops: Loops) -> Vec<GiCompareRow> {
+    let variants = [Variant::KernelTriggered, Variant::GpuInitiated];
+    let jobs: Vec<FacesConfig> = gs
+        .iter()
+        .flat_map(|&g| {
+            variants.iter().flat_map(move |&variant| {
+                seeds.iter().map(move |&seed| FacesConfig {
+                    dist: (2, 2, 2),
+                    nodes: 8,
+                    ranks_per_node: 1,
+                    g,
+                    outer: loops.outer,
+                    middle: loops.middle,
+                    inner: loops.inner,
+                    variant,
+                    compute: ComputeMode::Modeled,
+                    check: false,
+                    seed,
+                    cost: presets::frontier_like_jittered(),
+                    faults: None,
+                })
+            })
+        })
+        .collect();
+    let ms = sweep::map_default(&jobs, |_, cfg| {
+        run_faces(cfg).expect("gi-compare run failed").time_ns as f64 / 1e6
+    });
+    let per_g = variants.len() * seeds.len();
+    gs.iter()
+        .enumerate()
+        .map(|(gi, &g)| {
+            let base = gi * per_g;
+            GiCompareRow {
+                g,
+                kt: Summary::of(&ms[base..base + seeds.len()]),
+                gi: Summary::of(&ms[base + seeds.len()..base + per_g]),
+            }
+        })
+        .collect()
+}
+
+/// Render the KT-vs-GI sweep as a paper-style table.
+pub fn render_gi_compare(rows: &[GiCompareRow]) -> String {
+    let mut t = vec![vec![
+        "G".to_string(),
+        "face KiB".to_string(),
+        "kt avg (ms)".to_string(),
+        "gi avg (ms)".to_string(),
+        "gi vs kt".to_string(),
+    ]];
+    for r in rows {
+        t.push(vec![
+            r.g.to_string(),
+            format!("{:.0}", (4 * r.g * r.g) as f64 / 1024.0),
+            format!("{:.3}", r.kt.avg),
+            format!("{:.3}", r.gi.avg),
+            format!("{:+.1}%", r.delta_pct()),
+        ]);
+    }
+    format!(
+        "== figgi-sweep — KT vs GI across message sizes ==\n\
+         expectation: GI wins the smallest sizes (no host arming), KT the largest\n\
+         (GI descriptor build scales with payload; crossover in between)\n{}",
+        render_table(&t)
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -386,6 +495,31 @@ mod tests {
         }
         let text = render_kt_compare(&rows);
         assert!(text.contains("kt vs st"));
+    }
+
+    /// The figgi crossover, pinned: GI must beat KT at the smallest
+    /// block edge (no host arming; one descriptor per message) and KT
+    /// must beat GI at the largest (GI's serial descriptor build grows
+    /// with payload — 18 chunks per 144 KiB face).
+    #[test]
+    fn gi_compare_crossover_pinned() {
+        let loops = Loops { outer: 1, middle: 1, inner: 8 };
+        let rows = run_gi_compare(&[32, 192], &[11, 23], loops);
+        assert_eq!(rows.len(), 2);
+        assert!(
+            rows[0].gi.avg < rows[0].kt.avg,
+            "GI must win at G=32: gi {:.3} vs kt {:.3} ms",
+            rows[0].gi.avg,
+            rows[0].kt.avg
+        );
+        assert!(
+            rows[1].kt.avg < rows[1].gi.avg,
+            "KT must win at G=192: kt {:.3} vs gi {:.3} ms",
+            rows[1].kt.avg,
+            rows[1].gi.avg
+        );
+        let text = render_gi_compare(&rows);
+        assert!(text.contains("gi vs kt"));
     }
 
     #[test]

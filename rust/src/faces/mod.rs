@@ -19,6 +19,10 @@
 //!       and the completion wait rides the next iteration's pack
 //!       prologue — no stream memory ops at all (the follow-on design
 //!       of arXiv 2306.15773);
+//!     — **GI**: the last pack kernel builds the neighbor sends as
+//!       command-ring descriptors itself; the NIC drains the ring with
+//!       no trigger counters and no pre-armed DWQ slots (the
+//!       GPU-initiated design of arXiv 2503.24230);
 //!
 //! All three send protocols run through one per-rank
 //! [`stx::CommPlan`] built once before the timed region (`iteration` in
@@ -463,12 +467,12 @@ fn rank_program(
                 iteration(cfg, plan, ctx, sid, &cplan, inner % 2, real);
             }
             // Drain the device before stopping the clock (every variant
-            // ends the timed region fully synchronized). KT additionally
-            // drains its send completions here — ST already waited for
-            // them via the stream wait — so the figures of merit compare
-            // like for like.
-            if cfg.variant == Variant::KernelTriggered {
-                cplan.drain(ctx).expect("KT queue drain");
+            // ends the timed region fully synchronized). KT and GI
+            // additionally drain their send completions here — ST
+            // already waited for them via the stream wait — so the
+            // figures of merit compare like for like.
+            if matches!(cfg.variant, Variant::KernelTriggered | Variant::GpuInitiated) {
+                cplan.drain(ctx).expect("KT/GI queue drain");
             }
             stream_synchronize(ctx, sid);
             acc += ctx.now() - t0;
@@ -493,6 +497,12 @@ fn rank_program(
 ///   completion wait for the previous iteration's sends rides the first
 ///   pack kernel's prologue — no `writeValue64`, no `waitValue64`, no
 ///   stream stall between operations.
+/// * **GI** (arXiv 2503.24230): like KT for waits, but the last pack
+///   kernel *builds* the neighbor-send descriptors into its
+///   per-thread-block command ring (`cost.gi_descr_build_ns` per
+///   descriptor, one per [`crate::gpu::GI_CHUNK_BYTES`] of payload) and
+///   the NIC consumes them directly — no trigger counters, no DWQ
+///   slots.
 fn iteration(
     cfg: &FacesConfig,
     plan: &RankPlan,

@@ -34,17 +34,26 @@
 //! | rendezvous drop  | `nic::execute_send` (rendezvous RTS)   | the RTS control message occupies the wire but never reaches matching; the send descriptor (not the payload — that only moves on the Get pull) is recorded in the lost ledger for watchdog replay |
 //! | trigger delay    | `nic` DWQ fire path                    | descriptor executes late after its counter trips |
 //! | straggler        | `gpu::cp_step` kernel duration         | a seeded subset of ranks runs kernels slower by a fixed factor |
+//! | counter flip     | `gpu` doorbell writes (`writeValue64` set, KT counter inc) | the low bit of a trigger-counter update is lost (the edge never lands), so the counter under-counts; recorded as a [`PoisonedCounter`] and named in the armed registry so a stall report identifies it |
 //!
 //! Recovery: `stx` arms a host watchdog (see `stx::arm_watchdog`) on
 //! `Queue::wait` / `CommPlan::complete` / drain whenever a fault plan is
-//! active; on expiry it retransmits everything in the lost ledger and
-//! re-arms with exponential backoff, up to [`FaultSpec::max_retries`].
-//! After the last retry the run either completes (counters reached) or
-//! the event heap drains and the engine emits a [`crate::sim::StallReport`]
-//! — never a hang, never a panic.
+//! active; on expiry it retransmits everything in the lost ledger,
+//! repairs every [`PoisonedCounter`] (rewriting the intended doorbell
+//! value, or adding back a lost increment), and re-arms with exponential
+//! backoff, up to [`FaultSpec::max_retries`]. After the last retry the
+//! run either completes (counters reached) or the event heap drains and
+//! the engine emits a [`crate::sim::StallReport`] — never a hang, never
+//! a panic. A poisoned counter no watchdog repairs (e.g. a KT run whose
+//! host never parks on a supervised wait) stalls with the report naming
+//! it; a flip can never make a run validate wrong data silently, because
+//! it only ever *under*-counts — data movement waits longer, it does not
+//! start early. GPU-initiated (GI) traffic is immune by construction:
+//! command-ring descriptors carry no trigger counters at all.
 
 use crate::nic::Envelope;
 use crate::sim::rng::SplitMix64;
+use crate::sim::CellId;
 
 /// Fault-injection configuration: probabilities, magnitudes, and the
 /// recovery-watchdog contract. All probabilities are per-message (wire
@@ -71,6 +80,13 @@ pub struct FaultSpec {
     pub trigger_delay_prob: f64,
     /// Extra ns added to a delayed trigger fire.
     pub trigger_delay_ns: u64,
+    /// Probability a trigger-counter doorbell update loses its low bit
+    /// (a flipped doorbell edge): the counter under-counts and every
+    /// descriptor armed against the intended threshold hangs until the
+    /// watchdog repairs it. Drawn from the shared decision stream, but
+    /// *only* when non-zero — pre-existing specs keep their exact
+    /// historical decision sequences.
+    pub counter_flip_prob: f64,
     /// Fraction of ranks perturbed into stragglers.
     pub straggler_frac: f64,
     /// Kernel-duration multiplier applied to straggler ranks.
@@ -100,6 +116,7 @@ impl Default for FaultSpec {
             rdv_drop_prob: 0.0,
             trigger_delay_prob: 0.0,
             trigger_delay_ns: 2_000,
+            counter_flip_prob: 0.0,
             straggler_frac: 0.0,
             straggler_factor: 3.0,
             watchdog_ns: 2_000_000,
@@ -119,6 +136,7 @@ impl FaultSpec {
             || self.delay_prob > 0.0
             || self.rdv_drop_prob > 0.0
             || self.trigger_delay_prob > 0.0
+            || self.counter_flip_prob > 0.0
             || self.straggler_frac > 0.0
     }
 
@@ -149,6 +167,14 @@ impl FaultSpec {
         Self { rdv_drop_prob: 0.25, seed, ..Self::default() }
     }
 
+    /// Counter-flip-only plan (exercises the poisoned-counter repair
+    /// path: lost doorbell edges on ST/KT trigger counters). GI traffic
+    /// is immune by construction — command-ring descriptors carry no
+    /// trigger counters.
+    pub fn counter_flips(seed: u64) -> Self {
+        Self { counter_flip_prob: 0.3, seed, ..Self::default() }
+    }
+
     /// Everything at once — the chaos-campaign default. Deliberately
     /// leaves `rdv_drop_prob` at zero so the chaos decision streams
     /// pinned by earlier releases stay byte-identical; rendezvous
@@ -176,6 +202,7 @@ impl FaultSpec {
             "dups" => Some(Self::dups(seed)),
             "delays" => Some(Self::delays(seed)),
             "rdv-drops" | "rdv_drops" => Some(Self::rdv_drops(seed)),
+            "flips" => Some(Self::counter_flips(seed)),
             "chaos" => Some(Self::chaos(seed)),
             _ => None,
         }
@@ -183,7 +210,7 @@ impl FaultSpec {
 
     /// The names [`FaultSpec::preset`] accepts (for error messages).
     pub fn preset_names() -> &'static [&'static str] {
-        &["drops", "dups", "delays", "rdv-drops", "chaos"]
+        &["drops", "dups", "delays", "rdv-drops", "flips", "chaos"]
     }
 
     /// Stable FNV-1a fingerprint of the full spec, by field name and
@@ -202,6 +229,7 @@ impl FaultSpec {
         h.write_str("rdv_drop_prob").write_f64(self.rdv_drop_prob);
         h.write_str("trigger_delay_prob").write_f64(self.trigger_delay_prob);
         h.write_str("trigger_delay_ns").write_u64(self.trigger_delay_ns);
+        h.write_str("counter_flip_prob").write_f64(self.counter_flip_prob);
         h.write_str("straggler_frac").write_f64(self.straggler_frac);
         h.write_str("straggler_factor").write_f64(self.straggler_factor);
         h.write_str("watchdog_ns").write_u64(self.watchdog_ns);
@@ -296,6 +324,14 @@ impl FaultPlan {
         self.spec.rdv_drop_prob > 0.0 && self.rng.next_f64() < self.spec.rdv_drop_prob
     }
 
+    /// Decide whether the next trigger-counter doorbell update loses
+    /// its low bit. Consumes a decision draw *only* when
+    /// `counter_flip_prob` is set, so pre-existing specs replay their
+    /// exact historical decision sequences.
+    pub fn counter_flip(&mut self) -> bool {
+        self.spec.counter_flip_prob > 0.0 && self.rng.next_f64() < self.spec.counter_flip_prob
+    }
+
     /// Extra ns before a tripped DWQ descriptor fires (0 = on time).
     pub fn trigger_extra(&mut self) -> u64 {
         if self.spec.trigger_delay_prob > 0.0 && self.rng.next_f64() < self.spec.trigger_delay_prob
@@ -346,6 +382,25 @@ pub enum LostMsg {
     },
 }
 
+/// A trigger counter that lost a doorbell bit and now *under-counts*:
+/// every descriptor armed against `intended` hangs until the watchdog
+/// repairs the cell. Under-counting is the sound direction — a poisoned
+/// counter can delay validation but can never validate wrong data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoisonedCounter {
+    /// The trigger-counter cell whose update lost its low bit.
+    pub cell: CellId,
+    /// The value the counter *should* hold after the poisoned update
+    /// (repair target for set-mode doorbells, where `lost` is 0).
+    pub intended: u64,
+    /// The increment amount that was lost (repair delta for add-mode
+    /// doorbells; 0 for set-mode poisons).
+    pub lost: u64,
+    /// Armed-registry token naming the poison in stall reports; the
+    /// watchdog clears it on repair.
+    pub token: usize,
+}
+
 /// Per-world fault runtime state (lives at `World::fault`; `None` means
 /// the fault layer is fully inert). Not `Clone`: the lost ledger can
 /// hold single-fire completions (see [`LostMsg::Rts`]), and
@@ -355,13 +410,16 @@ pub struct FaultState {
     pub plan: FaultPlan,
     /// Dropped payloads awaiting retransmission by the stx watchdog.
     pub lost: Vec<LostMsg>,
+    /// Trigger counters that lost a doorbell bit, awaiting watchdog
+    /// repair (see [`PoisonedCounter`]).
+    pub poisoned: Vec<PoisonedCounter>,
     /// Next wire sequence number (0 is reserved for "unsequenced").
     seq_next: u64,
 }
 
 impl FaultState {
     pub fn new(plan: FaultPlan) -> Self {
-        Self { plan, lost: Vec::new(), seq_next: 0 }
+        Self { plan, lost: Vec::new(), poisoned: Vec::new(), seq_next: 0 }
     }
 
     /// Allocate the next wire sequence number (starts at 1; 0 means
@@ -490,6 +548,41 @@ mod tests {
         let mut wd = base.clone();
         wd.watchdog_ns += 1;
         assert_ne!(base.stable_hash(), wd.stable_hash());
+        let mut flip = base.clone();
+        flip.counter_flip_prob = 0.3;
+        assert_ne!(base.stable_hash(), flip.stable_hash());
+    }
+
+    #[test]
+    fn counter_flip_gate_consumes_no_draws_when_inactive() {
+        // A spec without the flip knob must keep its exact decision
+        // sequence even if the doorbell sites poll the plan between
+        // wire draws.
+        let spec = FaultSpec::chaos(11);
+        assert_eq!(spec.counter_flip_prob, 0.0, "chaos leaves doorbells clean by design");
+        let fp = fingerprint(spec.seed, "flip-gate");
+        let mut with_polls = FaultPlan::new(spec.clone(), fp, 4);
+        let mut without = FaultPlan::new(spec, fp, 4);
+        for _ in 0..256 {
+            assert!(!with_polls.counter_flip(), "inactive knob must never flip");
+            assert_eq!(with_polls.wire_fault(), without.wire_fault());
+        }
+    }
+
+    #[test]
+    fn counter_flips_preset_injects_on_the_doorbell_path() {
+        let spec = FaultSpec::counter_flips(6);
+        assert!(spec.injects());
+        assert_eq!(spec.drop_prob, 0.0, "flip preset leaves the wire clean");
+        let mut p = FaultPlan::new(spec, fingerprint(6, "flips"), 4);
+        let flips = (0..400).filter(|_| p.counter_flip()).count();
+        assert!(flips > 0 && flips < 400, "counter_flip_prob=0.3 must flip some, not all: {flips}");
+    }
+
+    #[test]
+    fn poisoned_ledger_starts_empty() {
+        let st = FaultState::new(FaultPlan::new(FaultSpec::counter_flips(1), 1, 2));
+        assert!(st.poisoned.is_empty());
     }
 
     #[test]

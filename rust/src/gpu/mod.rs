@@ -33,10 +33,11 @@
 use std::collections::VecDeque;
 
 use crate::costmodel::MemOpFlavor;
-use crate::nic::{BufSlice, Done};
+use crate::fault::PoisonedCounter;
+use crate::nic::{BufSlice, Done, Envelope};
 use crate::obs::{Event, KtKind};
 use crate::sim::{CellId, Time};
-use crate::world::{BufId, Callback, ComputeMode, Ctx, World};
+use crate::world::{ArmedEntry, BufId, Callback, ComputeMode, Ctx, World};
 
 /// Identifies one stream on one GPU.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -224,6 +225,112 @@ impl std::fmt::Debug for KernelCtx {
     }
 }
 
+// ---------------------------------------------------------------------
+// GPU-initiated (GI) communication: device-built command rings
+// ---------------------------------------------------------------------
+
+/// Payload granule one GI ring descriptor covers: a command-ring entry
+/// is a fixed-size work-queue element with a bounded scatter-gather
+/// reach, so device threads emit one descriptor per `GI_CHUNK_BYTES` of
+/// send payload. This is what makes GI's device overhead grow with
+/// message size while KT's per-message host arming cost stays flat —
+/// the mechanism behind the `figgi` crossover.
+pub const GI_CHUNK_BYTES: u64 = 8192;
+
+/// Descriptor slots in one per-thread-block command ring. A producer
+/// wavefront that finds the ring full stalls until the NIC consumes the
+/// oldest in-flight descriptor (`Metrics::gi_ring_full_waits`).
+pub const GI_RING_SLOTS: usize = 16;
+
+/// Number of ring descriptors a send of `bytes` payload needs (at least
+/// one; receives are always a single fixed-size match entry).
+pub fn gi_chunks(bytes: u64) -> u64 {
+    1 + bytes.saturating_sub(1) / GI_CHUNK_BYTES
+}
+
+/// What a GI descriptor chain does once the NIC has consumed its final
+/// chunk (see [`crate::nic::gi_consume`]).
+pub enum GiAction {
+    /// Tagged send: routed by locality exactly like a fired triggered
+    /// send (eager/rendezvous over the wire, IPC intra-node).
+    Send {
+        /// Match envelope of the message.
+        env: Envelope,
+        /// Source payload slice.
+        src: BufSlice,
+        /// Completion actions (request cell + completion counter).
+        done: Done,
+    },
+    /// Posted receive: a fixed-size match entry handed to the NIC list
+    /// engine, completion-counted in hardware like a KT doorbell recv.
+    Recv(KtRecv),
+}
+
+impl std::fmt::Debug for GiAction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GiAction::Send { env, .. } => {
+                write!(f, "Send({}->{})", env.src_rank, env.dst_rank)
+            }
+            GiAction::Recv(r) => write!(f, "Recv(r{} from {})", r.rank, r.src_rank),
+        }
+    }
+}
+
+/// One GI message: `chunks` ring descriptors built back-to-back by the
+/// kernel's closing wavefronts, whose final chunk hands `action` to the
+/// NIC.
+pub struct GiPost {
+    /// Ring descriptors this message occupies ([`gi_chunks`]; `>= 1`).
+    pub chunks: u64,
+    /// What the NIC does after consuming the last chunk.
+    pub action: GiAction,
+}
+
+/// The device-side descriptor plan attached to a [`StreamOp::GiKernel`]:
+/// prologue completion waits (shared shape with [`KernelCtx`]) plus the
+/// ordered list of messages the kernel's threads post into their
+/// command ring. Descriptor builds are serial, `cost.gi_descr_build_ns`
+/// apart, starting at the end of the compute window — they *extend* the
+/// kernel's modeled duration, which is exactly the per-message device
+/// overhead GI pays for dodging host arming and pre-armed DWQ slots.
+#[derive(Default)]
+pub struct GiCtx {
+    /// Completion waits folded into the kernel prologue (registration
+    /// order), same contract as [`KernelCtx::waits`].
+    pub waits: Vec<KtWait>,
+    /// Messages posted through the command ring, in order.
+    pub posts: Vec<GiPost>,
+}
+
+impl GiCtx {
+    /// Empty plan.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True when the kernel carries no GI behavior at all.
+    pub fn is_empty(&self) -> bool {
+        self.waits.is_empty() && self.posts.is_empty()
+    }
+
+    /// Fold a completion wait into the kernel prologue.
+    pub fn wait_ge(&mut self, cell: CellId, threshold: u64) {
+        self.waits.push(KtWait { cell, threshold });
+    }
+
+    /// Append one message to the descriptor plan.
+    pub fn post(&mut self, post: GiPost) {
+        self.posts.push(post);
+    }
+}
+
+impl std::fmt::Debug for GiCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "GiCtx(waits={}, posts={})", self.waits.len(), self.posts.len())
+    }
+}
+
 /// One device operation in a stream.
 pub enum StreamOp {
     Kernel(KernelSpec),
@@ -233,6 +340,12 @@ pub enum StreamOp {
     /// execution window — no separate stream memory ops (the KT variant
     /// axis).
     KtKernel(KernelSpec, KernelCtx),
+    /// A compute kernel participating in GPU-initiated communication:
+    /// its [`GiCtx`] folds completion waits into the prologue and makes
+    /// the kernel's closing wavefronts build command-ring descriptors
+    /// for every recorded message, extending the kernel window by the
+    /// serial build time (the GI variant axis).
+    GiKernel(KernelSpec, GiCtx),
     /// `hipStreamWriteValue64`-style: write `value` to a GPU-visible word
     /// (here: an engine cell — NIC counters are mapped to these).
     WriteValue64 { cell: CellId, value: u64, mode: WriteMode, flavor: MemOpFlavor },
@@ -249,6 +362,7 @@ impl std::fmt::Debug for StreamOp {
         match self {
             StreamOp::Kernel(k) => write!(f, "Kernel({})", k.name),
             StreamOp::KtKernel(k, kt) => write!(f, "KtKernel({}, {kt:?})", k.name),
+            StreamOp::GiKernel(k, gi) => write!(f, "GiKernel({}, {gi:?})", k.name),
             StreamOp::WriteValue64 { value, .. } => write!(f, "WriteValue64({value})"),
             StreamOp::WaitValue64 { threshold, .. } => write!(f, "WaitValue64(>={threshold})"),
             StreamOp::Run { .. } => write!(f, "Run(..)"),
@@ -418,18 +532,87 @@ pub fn cp_step(w: &mut World, core: &mut Ctx, sid: StreamId) {
             }
             entry(w, core);
         }
+        StreamOp::GiKernel(spec, gi) => {
+            w.metrics.kernels_launched += 1;
+            let dur = w.cost.cp_dispatch + w.cost.kernel_time(spec.flops, spec.bytes);
+            let dur = straggled(w, sid.gpu, w.cost.jittered(dur, core.rng()));
+            let desc = format!("gpu{}.s{} {} gi-prologue", sid.gpu, sid.stream, spec.name);
+            let GiCtx { waits, posts } = gi;
+            let payload = spec.payload;
+            let kname = spec.name;
+            let body: Callback = Box::new(move |w, c| {
+                // Like a KT kernel, numerics commit at body start: the
+                // stores a descriptor's payload covers must be globally
+                // visible before the NIC consumes it.
+                run_kernel_payload(w, c, payload);
+                // The closing wavefronts build one ring descriptor per
+                // chunk, serially, starting at the end of the compute
+                // window — the builds EXTEND the kernel's duration. The
+                // NIC consumes each descriptor nic_cmd_post + nic_proc
+                // after its post, freeing the ring slot; a producer that
+                // finds all GI_RING_SLOTS occupied stalls until the
+                // oldest in-flight descriptor is consumed.
+                let build = w.cost.gi_descr_build_ns;
+                let consume = w.cost.nic_cmd_post + w.cost.nic_proc;
+                let mut ring: VecDeque<Time> = VecDeque::new();
+                let mut t = dur;
+                for p in posts {
+                    for _ in 0..p.chunks.max(1) {
+                        let mut at = t + build;
+                        while ring.front().is_some_and(|&ct| ct <= at) {
+                            ring.pop_front();
+                        }
+                        if ring.len() >= GI_RING_SLOTS {
+                            w.metrics.gi_ring_full_waits += 1;
+                            if let Some(&front) = ring.front() {
+                                at = at.max(front);
+                            }
+                            while ring.front().is_some_and(|&ct| ct <= at) {
+                                ring.pop_front();
+                            }
+                        }
+                        ring.push_back(at + consume);
+                        t = at;
+                    }
+                    // The NIC picks up the chain at the final chunk's
+                    // post time (gi_consume charges its own fetch
+                    // latency and bumps Metrics::gi_posts).
+                    let chunks = p.chunks.max(1);
+                    let action = p.action;
+                    c.schedule(
+                        t,
+                        Box::new(move |w, c| crate::nic::gi_consume(w, c, chunks, action)),
+                    );
+                }
+                if c.trace_on() {
+                    let name = c.trace_intern(&kname);
+                    c.trace_push(Event::Kernel {
+                        t0: c.now(),
+                        dur: t,
+                        gpu: sid.gpu as u32,
+                        stream: sid.stream as u32,
+                        name,
+                    });
+                }
+                c.schedule(t, Box::new(move |w, c| complete_op(w, c, sid)));
+            });
+            // Prologue waits fold around the body exactly like a KT
+            // kernel's.
+            let mut entry = body;
+            for kw in waits.into_iter().rev() {
+                let d = desc.clone();
+                let inner = entry;
+                entry = Box::new(move |_w, c| c.on_ge(kw.cell, kw.threshold, d, inner));
+            }
+            entry(w, core);
+        }
         StreamOp::WriteValue64 { cell, value, mode, flavor } => {
             w.metrics.memops_executed += 1;
             let dur = w.cost.jittered(w.cost.memop(flavor), core.rng());
             core.schedule(
                 dur,
                 Box::new(move |w, c| {
-                    match mode {
-                        WriteMode::Set => c.write_cell(cell, value),
-                        WriteMode::Add => {
-                            c.add_cell(cell, value);
-                        }
-                    }
+                    doorbell_update(w, c, cell, value, mode, sid.gpu);
                     complete_op(w, c, sid);
                 }),
             );
@@ -462,6 +645,61 @@ pub fn cp_step(w: &mut World, core: &mut Ctx, sid: StreamId) {
     }
 }
 
+/// Land one doorbell update on a trigger-counter cell, possibly losing
+/// its low bit to an injected counter flip (see [`crate::fault`]). On a
+/// flip the update lands with the bit cleared — the counter
+/// *under-counts*, so waiters hang rather than fire early; the
+/// shortfall is recorded as a [`PoisonedCounter`] for the stx watchdog
+/// to repair, and the poison is named in the armed registry so stall
+/// reports point at the exact cell. Even-valued updates have no low
+/// bit to lose and consume no fault draw.
+fn doorbell_update(
+    w: &mut World,
+    core: &mut Ctx,
+    cell: CellId,
+    value: u64,
+    mode: WriteMode,
+    gpu: usize,
+) {
+    let flipped =
+        value & 1 == 1 && w.fault.as_mut().is_some_and(|f| f.plan.counter_flip());
+    if !flipped {
+        match mode {
+            WriteMode::Set => core.write_cell(cell, value),
+            WriteMode::Add => {
+                core.add_cell(cell, value);
+            }
+        }
+        return;
+    }
+    // Set-mode poisons record the absolute repair target (`lost` = 0);
+    // add-mode poisons record the lost delta, which stays a safe repair
+    // no matter how far later increments advance the counter.
+    let (intended, lost) = match mode {
+        WriteMode::Set => {
+            core.write_cell(cell, value & !1);
+            (value, 0)
+        }
+        WriteMode::Add => {
+            let intended = core.cell(cell) + value;
+            core.add_cell(cell, value & !1);
+            (intended, 1)
+        }
+    };
+    let token = w.armed.register(ArmedEntry {
+        node: w.topo.node_of(gpu),
+        queue: None,
+        desc: format!(
+            "POISONED trigger counter {cell:?} (lost doorbell bit): \
+             threshold {intended} unreachable without repair"
+        ),
+    });
+    w.metrics.faults_injected += 1;
+    if let Some(f) = w.fault.as_mut() {
+        f.poisoned.push(PoisonedCounter { cell, intended, lost, token });
+    }
+}
+
 /// Retire one mid-kernel trigger action (the KT data path).
 fn fire_kt_action(w: &mut World, core: &mut Ctx, action: KtAction, gpu: usize) {
     w.metrics.kt_triggers += 1;
@@ -478,7 +716,7 @@ fn fire_kt_action(w: &mut World, core: &mut Ctx, action: KtAction, gpu: usize) {
             // Device-scope release write: lands on the same engine cell
             // the NIC's deferred-work waiters watch, so it releases them
             // exactly like a CP `writeValue64` or a NIC DWQ atomic.
-            core.add_cell(cell, value);
+            doorbell_update(w, core, cell, value, WriteMode::Add, gpu);
         }
         KtAction::Put(p) => {
             // The kernel rings the NIC doorbell; command validation and

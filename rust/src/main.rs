@@ -15,11 +15,11 @@
 //! `faces` keys (TOML-subset config file and/or CLI overrides):
 //!   faces.dist=2x2x2  faces.nodes=8  faces.rpn=1  faces.g=128
 //!   faces.outer=1 faces.middle=2 faces.inner=25
-//!   faces.variant=baseline|st|st-shader|kt  faces.real=true  faces.check=true
+//!   faces.variant=baseline|st|st-shader|kt|gi  faces.real=true  faces.check=true
 //!   seed=11  jitter=0.03
 //! `campaign` keys (comma lists; empty = defaults):
 //!   campaign.workloads=faces,halo3d,allreduce,alltoall,incast,allgather,halograph,reduce-scatter,broadcast
-//!   campaign.variants=baseline,st,kt,ring-st,rdbl-st,ring-kt
+//!   campaign.variants=baseline,st,kt,gi,ring-st,rdbl-st,ring-kt,ring-gi
 //!   campaign.sizes=256,4096  campaign.topos=2x1,4x1  campaign.seeds=11,23
 //!   campaign.queues=1,2 (queues per rank)  campaign.dwq_slots=4
 //!   campaign.iters=3  campaign.jitter=0.01  campaign.out=CAMPAIGN_report
@@ -47,8 +47,9 @@
 //!   campaign.store is set) and writes DIFF_report.{json,md}.
 //! `train` keys: train.nodes, train.rpn, train.steps, seed.
 //!
-//! `sweep` regenerates Figs 8-12, the ST-vs-KT figure (figkt), and the
-//! ST-vs-KT message-size sweep; `figures` takes fig8..fig12 or figkt.
+//! `sweep` regenerates Figs 8-12, the ST-vs-KT figure (figkt), the
+//! ST-vs-KT message-size sweep, and the KT-vs-GI crossover sweep
+//! (figgi); `figures` takes fig8..fig12, figkt, or figgi.
 
 use anyhow::{bail, Context, Result};
 
@@ -56,8 +57,8 @@ use stmpi::coordinator::config::Config;
 use stmpi::costmodel::{presets, MemOpFlavor};
 use stmpi::fault::FaultSpec;
 use stmpi::faces::figures::{
-    all_figures, render_kt_compare, run_figure, run_kt_compare, Loops, FIGURE_G, KT_COMPARE_GS,
-    SEEDS,
+    all_figures, render_gi_compare, render_kt_compare, run_figure, run_gi_compare, run_kt_compare,
+    Loops, FIGURE_G, GI_COMPARE_GS, KT_COMPARE_GS, SEEDS,
 };
 use stmpi::faces::{run_faces, FacesConfig, Variant};
 use stmpi::store::server::Server;
@@ -115,7 +116,7 @@ fn load_config(args: &[String]) -> Result<Config> {
 
 fn parse_variant(s: &str) -> Result<Variant> {
     Variant::parse(s)
-        .ok_or_else(|| anyhow::anyhow!("unknown variant '{s}' (baseline|st|st-shader|kt)"))
+        .ok_or_else(|| anyhow::anyhow!("unknown variant '{s}' (baseline|st|st-shader|kt|gi)"))
 }
 
 fn cmd_faces(args: &[String]) -> Result<()> {
@@ -159,6 +160,8 @@ fn cmd_sweep() -> Result<()> {
     }
     let rows = run_kt_compare(&KT_COMPARE_GS, &SEEDS, Loops::default());
     println!("{}", render_kt_compare(&rows));
+    let rows = run_gi_compare(&GI_COMPARE_GS, &SEEDS, Loops::default());
+    println!("{}", render_gi_compare(&rows));
     Ok(())
 }
 
@@ -393,9 +396,15 @@ fn cmd_diff(args: &[String]) -> Result<()> {
 
 fn cmd_figures(names: &[String]) -> Result<()> {
     if names.is_empty() {
-        bail!("figures: name at least one of fig8..fig12");
+        bail!("figures: name at least one of fig8..fig12, figkt, figgi");
     }
     for name in names {
+        if name == "figgi" {
+            // figgi is a message-size sweep, not a fixed-size figure.
+            let rows = run_gi_compare(&GI_COMPARE_GS, &SEEDS, Loops::default());
+            println!("{}", render_gi_compare(&rows));
+            continue;
+        }
         let spec = all_figures()
             .into_iter()
             .find(|s| s.id == name)

@@ -27,7 +27,13 @@
 //!   `stx`/DESIGN.md §Triggered receives);
 //! * **eager/rendezvous** protocols with hardware tag matching on arrival
 //!   (delivery calls into the per-rank matching engine, the moral
-//!   equivalent of the NIC's list-processing engine).
+//!   equivalent of the NIC's list-processing engine);
+//! * **GPU-initiated consumption** ([`gi_consume`]) — the fourth variant
+//!   axis (GICC / NVSHMEM-style): device threads build descriptors into
+//!   per-thread-block command rings ([`crate::gpu::GiCtx`]) and the NIC
+//!   drains them directly — no trigger counters and no pre-armed DWQ
+//!   slots, in exchange for per-descriptor device build cost inside the
+//!   kernel window.
 
 use crate::fabric::{self, Port, WireTag};
 use crate::fault::{LostMsg, WireFault};
@@ -730,6 +736,40 @@ pub fn execute_recv_post(
         dst,
         done,
     );
+}
+
+/// Consume one GPU-initiated command-ring descriptor chain (the GI
+/// variant's NIC path, [`crate::gpu::GiCtx`]): the kernel's closing
+/// wavefronts built `chunks` ring descriptors; the NIC fetches the
+/// chain — charged `nic_cmd_post + nic_proc` like any doorbell'd
+/// command — and executes the action. No trigger counter, no threshold,
+/// and crucially **no pre-armed DWQ slot**: GI dodges the KT
+/// total-DWQ-demand caveat entirely, paying the per-descriptor device
+/// build cost (`cost.gi_descr_build_ns`, inside the kernel window)
+/// instead. Sends route by locality through [`crate::mpi::do_send`]
+/// (eager/rendezvous over the wire with the full wire-fault menu, IPC
+/// intra-node); receives take the shared list-engine append
+/// ([`execute_recv_post`]) after the receive-descriptor charge.
+pub fn gi_consume(w: &mut World, core: &mut Ctx, chunks: u64, action: crate::gpu::GiAction) {
+    w.metrics.gi_posts += chunks;
+    let lat = w.cost.nic_cmd_post + w.cost.nic_proc;
+    match action {
+        crate::gpu::GiAction::Send { env, src, done } => {
+            core.schedule(
+                lat,
+                Box::new(move |w, core| crate::mpi::do_send(w, core, env, src, done)),
+            );
+        }
+        crate::gpu::GiAction::Recv(r) => {
+            let lat = lat + w.cost.nic_recv_post;
+            core.schedule(
+                lat,
+                Box::new(move |w, core| {
+                    execute_recv_post(w, core, r.rank, r.src_rank, r.tag, r.comm, r.dst, r.done)
+                }),
+            );
+        }
+    }
 }
 
 /// Issue the rendezvous Get: the destination NIC (having matched an RTS)

@@ -184,6 +184,13 @@ pub struct SeedRecord {
     pub max_egress_wait_ns: u64,
     pub dwq_slot_waits: u64,
     pub dwq_peak: u64,
+    /// GPU-initiated command-ring descriptors the NIC consumed (zero
+    /// for every non-GI variant — and for records written before the
+    /// GI variant existed, which decode tolerantly; see
+    /// [`SeedRecord::from_json_line`]).
+    pub gi_posts: u64,
+    /// Kernel tails that stalled on a full per-launch command ring.
+    pub gi_ring_full_waits: u64,
     pub unexpected_msgs: u64,
     pub events: u64,
     pub faults_injected: u64,
@@ -231,6 +238,7 @@ impl SeedRecord {
              \"time_ns\":{},\"validation_ok\":{},\"validation_label\":\"{}\",\
              \"bytes_wire\":{},\"wire_msgs\":{},\"max_ingress_wait_ns\":{},\
              \"max_egress_wait_ns\":{},\"dwq_slot_waits\":{},\"dwq_peak\":{},\
+             \"gi_posts\":{},\"gi_ring_full_waits\":{},\
              \"unexpected_msgs\":{},\"events\":{},\"faults_injected\":{},\
              \"retries\":{},\"timeouts\":{},\"per_queue\":[{}],\"overlap\":{},\
              \"crit\":{},\"stall_headline\":\"{}\",\"stall_report\":\"{}\"}}",
@@ -252,6 +260,8 @@ impl SeedRecord {
             self.max_egress_wait_ns,
             self.dwq_slot_waits,
             self.dwq_peak,
+            self.gi_posts,
+            self.gi_ring_full_waits,
             self.unexpected_msgs,
             self.events,
             self.faults_injected,
@@ -267,7 +277,11 @@ impl SeedRecord {
 
     /// Decode one segment-log line. `None` on any structural or type
     /// mismatch — the store treats that as corruption and quarantines
-    /// the segment.
+    /// the segment. Exception: the `gi_*` counters (added with the
+    /// GPU-initiated variant) decode *tolerantly*, defaulting to 0 when
+    /// absent, so segments written before GI existed replay unchanged —
+    /// a warm rerun of a pre-GI store must serve every old host/ST/KT
+    /// cell from disk instead of re-keying or quarantining it.
     pub fn from_json_line(line: &str) -> Option<(u64, SeedRecord)> {
         let v = Json::parse(line)?;
         let key = parse_key_hex(v.get("key")?.as_str()?)?;
@@ -333,6 +347,11 @@ impl SeedRecord {
             max_egress_wait_ns: v.get("max_egress_wait_ns")?.as_u64()?,
             dwq_slot_waits: v.get("dwq_slot_waits")?.as_u64()?,
             dwq_peak: v.get("dwq_peak")?.as_u64()?,
+            gi_posts: v.get("gi_posts").and_then(|x| x.as_u64()).unwrap_or(0),
+            gi_ring_full_waits: v
+                .get("gi_ring_full_waits")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(0),
             unexpected_msgs: v.get("unexpected_msgs")?.as_u64()?,
             events: v.get("events")?.as_u64()?,
             faults_injected: v.get("faults_injected")?.as_u64()?,
@@ -883,6 +902,8 @@ mod tests {
             max_egress_wait_ns: 4,
             dwq_slot_waits: 5,
             dwq_peak: 6,
+            gi_posts: 48,
+            gi_ring_full_waits: 2,
             unexpected_msgs: 7,
             events: 8_000,
             faults_injected: 0,
@@ -977,6 +998,25 @@ mod tests {
         assert_eq!(back, rec);
         // And the line is valid JSON by the syntax checker too.
         assert!(crate::workloads::campaign::json_parses(&line));
+    }
+
+    #[test]
+    fn pre_gi_segment_line_decodes_with_zero_gi_counters() {
+        // A segment line written before the GI variant existed carries
+        // no `gi_*` fields. It must decode (tolerant default 0), not
+        // quarantine — warm reruns of old stores depend on this.
+        let rec = sample_record(5);
+        let line = rec.to_json_line(17);
+        let old_line = line
+            .replace("\"gi_posts\":48,", "")
+            .replace("\"gi_ring_full_waits\":2,", "");
+        assert!(!old_line.contains("gi_"), "old-format line fully stripped");
+        let (key, back) = SeedRecord::from_json_line(&old_line).unwrap();
+        assert_eq!(key, 17);
+        assert_eq!(back.gi_posts, 0);
+        assert_eq!(back.gi_ring_full_waits, 0);
+        // Every other field survives untouched.
+        assert_eq!(back, SeedRecord { gi_posts: 0, gi_ring_full_waits: 0, ..rec });
     }
 
     #[test]

@@ -28,10 +28,19 @@
 //! against the server's store directory (a client cannot point the
 //! server at foreign paths), so every run is incremental over the same
 //! store the `get`/`query` ops read.
+//!
+//! Because connections are served sequentially, one client must never
+//! be able to wedge the service for everyone else. Two guards enforce
+//! that: every read carries a timeout ([`Server::set_read_timeout`];
+//! an idle connection is dropped, releasing the accept loop), and
+//! request lines are capped at [`MAX_LINE_BYTES`] (an oversized line
+//! gets an error response and the connection is dropped — the unread
+//! tail cannot be resynced to a line boundary).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -45,11 +54,22 @@ use super::{key_hex, parse_key_hex, Json, Store};
 /// `limit`, itself clamped to this value).
 pub const MAX_QUERY_ROWS: usize = 256;
 
+/// Request-line length cap. Generous for every real request (the
+/// largest — a campaign spec — is a few hundred bytes) while keeping a
+/// hostile or confused client from growing an unbounded buffer.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// Default per-read idle timeout: how long a connected client may sit
+/// silent before the (sequential) server drops it and accepts the next
+/// connection.
+pub const DEFAULT_READ_TIMEOUT: Duration = Duration::from_secs(5);
+
 /// The campaign-store service. [`Server::bind`] then [`Server::serve`];
 /// `serve` blocks until a client sends `{"op":"shutdown"}`.
 pub struct Server {
     listener: TcpListener,
     store_dir: PathBuf,
+    read_timeout: Duration,
 }
 
 impl Server {
@@ -57,7 +77,17 @@ impl Server {
     pub fn bind(addr: &str, store_dir: &Path) -> Result<Server> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("serve: binding {addr}"))?;
-        Ok(Server { listener, store_dir: store_dir.to_path_buf() })
+        Ok(Server {
+            listener,
+            store_dir: store_dir.to_path_buf(),
+            read_timeout: DEFAULT_READ_TIMEOUT,
+        })
+    }
+
+    /// Override the per-read idle timeout (tests shorten it so an idle
+    /// connection releases the accept loop quickly).
+    pub fn set_read_timeout(&mut self, timeout: Duration) {
+        self.read_timeout = timeout;
     }
 
     /// The bound address (for logging and for tests using port 0).
@@ -85,10 +115,40 @@ impl Server {
 
     /// Serve one connection; `Ok(true)` means shutdown was requested.
     fn handle_conn(&self, stream: TcpStream) -> Result<bool> {
+        // The read timeout is the anti-wedge guard: connections are
+        // served sequentially, so without it one idle client would
+        // block every later client's accept forever.
+        stream
+            .set_read_timeout(Some(self.read_timeout))
+            .context("serve: setting read timeout")?;
         let mut writer = stream.try_clone()?;
-        let reader = BufReader::new(stream);
-        for line in reader.lines() {
-            let line = line?;
+        let mut reader = BufReader::new(stream);
+        loop {
+            let line = match read_line_bounded(&mut reader, MAX_LINE_BYTES) {
+                Ok(LineRead::Line(bytes)) => match String::from_utf8(bytes) {
+                    Ok(s) => s,
+                    Err(_) => {
+                        writeln!(writer, "{}", err_line("request line is not UTF-8"))?;
+                        continue;
+                    }
+                },
+                Ok(LineRead::Eof) => return Ok(false),
+                Ok(LineRead::Oversized) => {
+                    // Tell the client why, then drop the connection:
+                    // the unread tail of the oversized line cannot be
+                    // resynced to a line boundary.
+                    writeln!(
+                        writer,
+                        "{}",
+                        err_line(&format!("request line exceeds {MAX_LINE_BYTES} bytes"))
+                    )?;
+                    return Ok(false);
+                }
+                // Timed out waiting for the next request (or any other
+                // read failure): drop this connection and release the
+                // accept loop for the next client.
+                Err(_) => return Ok(false),
+            };
             if line.trim().is_empty() {
                 continue;
             }
@@ -100,7 +160,6 @@ impl Server {
                 }
             }
         }
-        Ok(false)
     }
 
     /// Dispatch one request line; `Ok(true)` means shutdown.
@@ -242,6 +301,52 @@ impl Server {
     }
 }
 
+/// One attempt to read a request line.
+enum LineRead {
+    /// A complete line (newline stripped; also returned for a non-empty
+    /// final line at EOF, matching `BufRead::lines`).
+    Line(Vec<u8>),
+    /// Clean end of stream at a line boundary.
+    Eof,
+    /// The line exceeded the cap before its newline arrived.
+    Oversized,
+}
+
+/// Read one newline-terminated line of at most `max` bytes. Unlike
+/// `BufRead::read_until`, the buffer cannot grow past the cap: the
+/// moment the accumulated prefix exceeds it, the read stops with
+/// [`LineRead::Oversized`]. Timeouts and I/O failures surface as `Err`.
+fn read_line_bounded(
+    reader: &mut BufReader<TcpStream>,
+    max: usize,
+) -> std::io::Result<LineRead> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let buf = reader.fill_buf()?;
+        if buf.is_empty() {
+            return Ok(if line.is_empty() { LineRead::Eof } else { LineRead::Line(line) });
+        }
+        match buf.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                if line.len() + pos > max {
+                    return Ok(LineRead::Oversized);
+                }
+                line.extend_from_slice(&buf[..pos]);
+                reader.consume(pos + 1);
+                return Ok(LineRead::Line(line));
+            }
+            None => {
+                let n = buf.len();
+                if line.len() + n > max {
+                    return Ok(LineRead::Oversized);
+                }
+                line.extend_from_slice(buf);
+                reader.consume(n);
+            }
+        }
+    }
+}
+
 fn err_line(msg: &str) -> String {
     format!("{{\"ok\":false,\"error\":\"{}\"}}", json_escape(msg))
 }
@@ -357,6 +462,85 @@ pub fn parse_overrides(v: &Json) -> Result<Vec<(String, f64)>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    use std::io::Read as _;
+
+    fn bind_test_server(tag: &str, timeout: Duration) -> (std::path::PathBuf, SocketAddr, std::thread::JoinHandle<Result<()>>) {
+        let dir = std::env::temp_dir()
+            .join(format!("stmpi-serve-unit-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut srv = Server::bind("127.0.0.1:0", &dir).expect("bind 127.0.0.1:0");
+        srv.set_read_timeout(timeout);
+        let addr = srv.local_addr().expect("local addr");
+        let handle = std::thread::spawn(move || srv.serve());
+        (dir, addr, handle)
+    }
+
+    fn request_line(stream: &mut TcpStream, line: &str) -> String {
+        writeln!(stream, "{line}").expect("request write");
+        let mut rd = BufReader::new(stream.try_clone().expect("clone"));
+        let mut resp = String::new();
+        rd.read_line(&mut resp).expect("response read");
+        resp
+    }
+
+    /// Regression: an idle connection must not wedge the sequential
+    /// serve loop — the read timeout drops it and the next client's
+    /// `ping` is answered.
+    #[test]
+    fn idle_connection_does_not_wedge_the_next_client() {
+        let (dir, addr, handle) =
+            bind_test_server("idle", Duration::from_millis(100));
+        // First client connects and never sends a byte.
+        let idle = TcpStream::connect(addr).expect("idle connect");
+        // Give the accept loop a moment to pick the idle connection up
+        // first, so the second client genuinely queues behind it.
+        std::thread::sleep(Duration::from_millis(30));
+        let mut c2 = TcpStream::connect(addr).expect("second connect");
+        c2.set_read_timeout(Some(Duration::from_secs(30))).expect("client timeout");
+        let resp = request_line(&mut c2, "{\"op\":\"ping\"}");
+        assert!(resp.contains("\"pong\":true"), "second client served: {resp}");
+        // Shut down from a fresh connection: c2 may itself have been
+        // timed out by now (the short test timeout applies to every
+        // connection), and that must not matter.
+        drop(idle);
+        drop(c2);
+        let mut c3 = TcpStream::connect(addr).expect("shutdown connect");
+        c3.set_read_timeout(Some(Duration::from_secs(30))).expect("client timeout");
+        let bye = request_line(&mut c3, "{\"op\":\"shutdown\"}");
+        assert!(bye.contains("\"bye\":true"), "{bye}");
+        handle.join().expect("server thread").expect("serve exits clean");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// An oversized request line gets an error response and the
+    /// connection is dropped; later clients are unaffected.
+    #[test]
+    fn oversized_request_line_is_rejected_then_dropped() {
+        let (dir, addr, handle) =
+            bind_test_server("oversize", Duration::from_secs(5));
+        let mut c = TcpStream::connect(addr).expect("connect");
+        c.set_read_timeout(Some(Duration::from_secs(30))).expect("client timeout");
+        let big = vec![b'x'; MAX_LINE_BYTES + 16];
+        c.write_all(&big).expect("oversized write");
+        c.write_all(b"\n").expect("newline write");
+        let mut resp = String::new();
+        let mut rd = BufReader::new(c.try_clone().expect("clone"));
+        rd.read_line(&mut resp).expect("error response");
+        assert!(resp.contains("\"ok\":false"), "{resp}");
+        assert!(resp.contains("exceeds"), "{resp}");
+        // The server dropped the connection after responding.
+        let mut rest = Vec::new();
+        rd.read_to_end(&mut rest).expect("eof after error");
+        assert!(rest.is_empty(), "connection closed after the error line");
+        // And a fresh client is still served.
+        let mut c2 = TcpStream::connect(addr).expect("second connect");
+        c2.set_read_timeout(Some(Duration::from_secs(30))).expect("client timeout");
+        let bye = request_line(&mut c2, "{\"op\":\"shutdown\"}");
+        assert!(bye.contains("\"bye\":true"), "{bye}");
+        handle.join().expect("server thread").expect("serve exits clean");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 
     #[test]
     fn spec_from_json_decodes_and_rejects() {

@@ -26,8 +26,8 @@
 //!   selectors eagerly, allocates persistent requests, and then every
 //!   iteration is [`CommPlan::round`] / [`CommPlan::complete`] /
 //!   [`CommPlan::drain`] — no per-iteration descriptor allocation, and
-//!   the host baseline, ST, ST-shader, and KT variants all run through
-//!   the same plan object.
+//!   the host baseline, ST, ST-shader, KT, and GI variants all run
+//!   through the same plan object.
 //!
 //! Routing mirrors §IV faithfully for the paper's ST variants:
 //! * inter-node sends → NIC DWQ triggered sends (full hardware offload);
@@ -48,6 +48,17 @@
 //! descriptor at a chosen fraction of its window (1.0 = epilogue), the
 //! device-side dual of the prologue completion wait
 //! ([`Queue::kt_wait`]). See DESIGN.md §Triggered receives.
+//!
+//! The [`Variant::GpuInitiated`] path completes the taxonomy (GICC /
+//! NVSHMEM-style, arXiv 2503.24230): [`Queue::gi_send`] /
+//! [`Queue::gi_recv`] / [`Queue::gi_wait`] record the pattern into a
+//! [`crate::gpu::GiCtx`] whose kernel builds per-thread-block
+//! command-ring descriptors itself — zero host arming cost, no trigger
+//! counters, no pre-armed DWQ slots, but `cost.gi_descr_build_ns` of
+//! device time per descriptor inside the kernel window (one descriptor
+//! per [`crate::gpu::GI_CHUNK_BYTES`] of send payload). The NIC drains
+//! the ring directly ([`crate::nic::gi_consume`]). See DESIGN.md
+//! §GPU-initiated communication.
 //!
 //! Wildcards are rejected (§III-D): deferred operations require a
 //! concrete source rank and tag, checked eagerly at plan-build time.
@@ -82,7 +93,7 @@
 
 use crate::costmodel::MemOpFlavor;
 use crate::gpu::{
-    self, host_enqueue, stream_synchronize, KernelCtx, KernelPayload, KernelSpec, StreamId,
+    self, host_enqueue, stream_synchronize, GiCtx, KernelCtx, KernelPayload, KernelSpec, StreamId,
     StreamOp, WriteMode,
 };
 use crate::mpi::{self, SrcSel, TagSel};
@@ -106,6 +117,14 @@ use crate::world::World;
 ///   next kernel's prologue, so an iteration pays no `enqueue_start`
 ///   memop and no `MPIX_Enqueue_waitall`-style stream stall at all —
 ///   completion rides the kernel's own tail.
+/// * [`Variant::GpuInitiated`] — the taxonomy's fourth shape (GICC /
+///   NVSHMEM-style, arXiv 2503.24230 §GPU-initiated): device threads
+///   build and post the communication descriptors *themselves* into
+///   per-thread-block command rings ([`crate::gpu::GiCtx`]). No host
+///   arming, no trigger counters, no pre-armed DWQ slots — but every
+///   message pays `cost.gi_descr_build_ns` per ring descriptor inside
+///   the kernel window, so GI wins at small-message/high-rate and KT
+///   at large-message/pre-plannable (the `figgi` crossover).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Variant {
     /// GPU-aware MPI: host synchronizes at kernel boundaries.
@@ -116,6 +135,9 @@ pub enum Variant {
     StreamTriggeredShader,
     /// Kernel-triggered: triggers fire from inside running kernels.
     KernelTriggered,
+    /// GPU-initiated: device threads build and post descriptors into
+    /// command rings; the NIC consumes them without pre-armed DWQ slots.
+    GpuInitiated,
 }
 
 impl Variant {
@@ -126,6 +148,7 @@ impl Variant {
             Variant::StreamTriggered => "st",
             Variant::StreamTriggeredShader => "st-shader",
             Variant::KernelTriggered => "kt",
+            Variant::GpuInitiated => "gi",
         }
     }
 
@@ -137,12 +160,14 @@ impl Variant {
             "st" => Variant::StreamTriggered,
             "st-shader" | "shader" => Variant::StreamTriggeredShader,
             "kt" => Variant::KernelTriggered,
+            "gi" => Variant::GpuInitiated,
             _ => return None,
         })
     }
 
-    /// Stream-memop flavor this variant binds its queue with (KT queues
-    /// keep the HIP flavor: their hot path never executes a memop).
+    /// Stream-memop flavor this variant binds its queue with (KT and GI
+    /// queues keep the HIP flavor: their hot paths never execute a
+    /// memop).
     pub fn flavor(self) -> MemOpFlavor {
         match self {
             Variant::StreamTriggeredShader => MemOpFlavor::Shader,
@@ -157,12 +182,13 @@ impl Variant {
     }
 
     /// All variants, in report order.
-    pub fn all() -> [Variant; 4] {
+    pub fn all() -> [Variant; 5] {
         [
             Variant::Host,
             Variant::StreamTriggered,
             Variant::StreamTriggeredShader,
             Variant::KernelTriggered,
+            Variant::GpuInitiated,
         ]
     }
 }
@@ -638,6 +664,132 @@ fn kt_recv_impl(
     })
 }
 
+/// Record one GPU-initiated send into a kernel's descriptor plan: the
+/// kernel's closing wavefronts build [`crate::gpu::gi_chunks`] command-
+/// ring descriptors (one per [`crate::gpu::GI_CHUNK_BYTES`] of payload)
+/// and the NIC executes the send on consuming the last one, routed by
+/// locality exactly like a fired triggered send. The op joins
+/// `started_total` directly — GI uses no trigger epochs — and charges
+/// **zero host time**: the pattern ships as kernel arguments, which is
+/// the host-side saving GI buys over KT's per-op arming calls.
+/// Rendezvous inter-node sends keep the small progress-thread completion
+/// assist (§V-E): descriptor *initiation* moved to the device, but the
+/// NIC still cannot finish a rendezvous alone.
+#[allow(clippy::too_many_arguments)]
+fn gi_arm_send(
+    w: &mut World,
+    queue: usize,
+    gi: &mut GiCtx,
+    dst: usize,
+    src: BufSlice,
+    tag: i32,
+    comm: u16,
+    req_cell: CellId,
+) {
+    let rendezvous = w.cost.is_rendezvous(src.bytes());
+    let inter = !w.topo.same_node(w.queues[queue].rank, dst);
+    let q = &mut w.queues[queue];
+    q.started_total += 1;
+    let rank = q.rank;
+    let comp = q.comp_ctr;
+    let env = Envelope { src_rank: rank, dst_rank: dst, tag, comm, elems: src.elems };
+    let done = Done {
+        cells: vec![req_cell, comp],
+        cb: if inter && rendezvous {
+            Some(Box::new(move |w, core| {
+                let c = w.cost.progress_rendezvous_assist;
+                let _ = mpi::progress_charge(w, core, rank, c);
+            }))
+        } else {
+            None
+        },
+    };
+    gi.post(gpu::GiPost {
+        chunks: gpu::gi_chunks(src.bytes() as u64),
+        action: gpu::GiAction::Send { env, src, done },
+    });
+}
+
+/// Record one GPU-initiated receive: a single fixed-size match entry in
+/// the command ring (receives carry no payload, so they never chunk);
+/// the NIC's list engine appends it to the matching engine on
+/// consumption and the completion counter is bumped in hardware, like a
+/// KT doorbell receive. Zero host time, joins `started_total` directly.
+fn gi_arm_recv(
+    w: &mut World,
+    queue: usize,
+    gi: &mut GiCtx,
+    src_rank: usize,
+    dst: BufSlice,
+    tag: i32,
+    comm: u16,
+    req_cell: CellId,
+) {
+    let q = &mut w.queues[queue];
+    q.started_total += 1;
+    let rank = q.rank;
+    let comp = q.comp_ctr;
+    let done = hw_recv_done(req_cell, comp);
+    gi.post(gpu::GiPost {
+        chunks: 1,
+        action: gpu::GiAction::Recv(gpu::KtRecv { rank, src_rank, tag, comm, dst, done }),
+    });
+}
+
+fn gi_send_impl(
+    hctx: &mut HostCtx<World>,
+    queue: usize,
+    gi: &mut GiCtx,
+    dst: usize,
+    src: BufSlice,
+    tag: i32,
+    comm: u16,
+) -> Result<usize, StError> {
+    hctx.with(|w, core| {
+        if w.queues[queue].freed {
+            return Err(StError::QueueFreed(queue));
+        }
+        let req = w.new_request(core, "gi_send");
+        let req_cell = w.request_done_cell(req);
+        gi_arm_send(w, queue, gi, dst, src, tag, comm, req_cell);
+        Ok(req)
+    })
+}
+
+fn gi_recv_impl(
+    hctx: &mut HostCtx<World>,
+    queue: usize,
+    gi: &mut GiCtx,
+    src_rank: usize,
+    dst: BufSlice,
+    tag: i32,
+    comm: u16,
+) -> Result<usize, StError> {
+    hctx.with(|w, core| {
+        if w.queues[queue].freed {
+            return Err(StError::QueueFreed(queue));
+        }
+        let req = w.new_request(core, "gi_recv");
+        let req_cell = w.request_done_cell(req);
+        gi_arm_recv(w, queue, gi, src_rank, dst, tag, comm, req_cell);
+        Ok(req)
+    })
+}
+
+/// Fold this queue's completion wait into a GI kernel's prologue
+/// (threshold snapshot at call time, like [`kt_wait_impl`]) — zero host
+/// time, the threshold ships as a kernel argument.
+fn gi_wait_impl(hctx: &mut HostCtx<World>, queue: usize, gi: &mut GiCtx) -> Result<(), StError> {
+    hctx.with(|w, _| {
+        if w.queues[queue].freed {
+            return Err(StError::QueueFreed(queue));
+        }
+        let q = &w.queues[queue];
+        gi.wait_ge(q.comp_ctr, q.started_total);
+        Ok(())
+    })
+}
+
 fn start_impl(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
     let (call, enq) = hctx.with(|w, _| (w.cost.host_enqueue_call, w.cost.kernel_enqueue));
     hctx.advance(call + enq);
@@ -766,7 +918,9 @@ fn drain_impl(hctx: &mut HostCtx<World>, queue: usize) -> Result<(), StError> {
 /// timeout — doubled on every attempt, exponential backoff — check the
 /// completion counter; if it is still short of `target`, retransmit
 /// every payload in the lost ledger ([`crate::nic::retransmit`], which
-/// bypasses injection) and re-arm. After
+/// bypasses injection), repair any poisoned trigger counters
+/// ([`crate::fault::PoisonedCounter`] — lost doorbell bits replayed
+/// without regressing the counter), and re-arm. After
 /// [`crate::fault::FaultSpec::max_retries`] attempts the watchdog
 /// records a timeout and either opens `gate` anyway (`timeout_error`
 /// mode: the blocked drain observes [`StError::DrainTimeout`] and can
@@ -799,6 +953,26 @@ fn arm_watchdog(
                 };
                 for m in lost {
                     nic::retransmit(w, core, m);
+                }
+                // Repair poisoned trigger counters (lost doorbell bits).
+                // Add-mode poisons replay the lost delta — always safe
+                // for a monotonic counter. Set-mode poisons rewrite the
+                // intended value, but only if the counter is still short
+                // of it: a later set may already have advanced past the
+                // poisoned epoch, and the repair must never regress it.
+                let poisoned = match w.fault.as_mut() {
+                    Some(f) => std::mem::take(&mut f.poisoned),
+                    None => Vec::new(),
+                };
+                for p in poisoned {
+                    w.armed.clear(p.token);
+                    if p.lost > 0 {
+                        core.add_cell(p.cell, p.lost);
+                        w.metrics.retries += 1;
+                    } else if core.cell(p.cell) < p.intended {
+                        core.write_cell(p.cell, p.intended);
+                        w.metrics.retries += 1;
+                    }
                 }
                 arm_watchdog(w, core, comp, target, gate, attempt + 1);
             } else {
@@ -1069,9 +1243,53 @@ impl Queue {
         kt_recv_impl(hctx, self.id, kernel, frac, src_rank, dst, tag, comm)
     }
 
+    /// GPU-initiated send — the GI counterpart of [`Queue::send`]: the
+    /// message is recorded into `gi`'s descriptor plan, and the kernel
+    /// the plan is attached to ([`crate::gpu::StreamOp::GiKernel`])
+    /// builds its command-ring descriptors itself (one per
+    /// [`crate::gpu::GI_CHUNK_BYTES`] of payload, each costing
+    /// `cost.gi_descr_build_ns` inside the kernel window). No host
+    /// arming cost, no trigger epoch, no DWQ slot. Returns a request id
+    /// usable with host-side `mpi::wait`.
+    pub fn gi_send(
+        &self,
+        hctx: &mut HostCtx<World>,
+        gi: &mut GiCtx,
+        dst: usize,
+        src: BufSlice,
+        tag: i32,
+        comm: u16,
+    ) -> Result<usize, StError> {
+        gi_send_impl(hctx, self.id, gi, dst, src, tag, comm)
+    }
+
+    /// GPU-initiated receive — a single fixed-size match entry in the
+    /// command ring; the NIC's list engine posts it into the matching
+    /// engine on consumption, completion-counted in hardware. Zero host
+    /// time, like [`Queue::gi_send`]. Returns a request id.
+    pub fn gi_recv(
+        &self,
+        hctx: &mut HostCtx<World>,
+        gi: &mut GiCtx,
+        src_rank: usize,
+        dst: BufSlice,
+        tag: i32,
+        comm: u16,
+    ) -> Result<usize, StError> {
+        gi_recv_impl(hctx, self.id, gi, src_rank, dst, tag, comm)
+    }
+
+    /// GPU-initiated completion wait — folds this queue's completion
+    /// threshold (snapshot at call time) into a GI kernel's prologue,
+    /// the GI counterpart of [`Queue::kt_wait`]. Zero host time: the
+    /// threshold ships as a kernel argument.
+    pub fn gi_wait(&self, hctx: &mut HostCtx<World>, gi: &mut GiCtx) -> Result<(), StError> {
+        gi_wait_impl(hctx, self.id, gi)
+    }
+
     /// Host-side completion drain: block the host until every started
-    /// operation has completed. KT timed regions call this once at their
-    /// very end; it returns immediately on a quiet queue.
+    /// operation has completed. KT and GI timed regions call this once
+    /// at their very end; it returns immediately on a quiet queue.
     pub fn drain(&self, hctx: &mut HostCtx<World>) -> Result<(), StError> {
         drain_impl(hctx, self.id)
     }
@@ -1304,9 +1522,9 @@ impl CommPlanBuilder {
 /// A persistent communication pattern (stx v2): descriptors, selectors,
 /// and requests are allocated **once** at build; every iteration re-arms
 /// them with [`CommPlan::round`] / [`CommPlan::complete`] — the host
-/// baseline, ST, ST-shader, and KT variants all run through the same
-/// plan object, so workload code contains no per-variant communication
-/// branches and no per-iteration enqueue calls.
+/// baseline, ST, ST-shader, KT, and GI variants all run through the
+/// same plan object, so workload code contains no per-variant
+/// communication branches and no per-iteration enqueue calls.
 ///
 /// One iteration ("round") of a plan:
 ///
@@ -1330,6 +1548,12 @@ impl CommPlanBuilder {
 ///   inside the last kernel at the plan's KT fraction; `complete` is a
 ///   no-op (the next round's prologue — or [`CommPlan::drain`] — covers
 ///   completion).
+/// * **GI** — like KT for completion (previous round's wait in the
+///   first kernel's prologue, `complete` a no-op), but the round's
+///   messages are *built by the last kernel itself* as command-ring
+///   descriptors: no host arming calls, no trigger counters, no DWQ
+///   slots — per-descriptor device build time inside the kernel window
+///   instead.
 ///
 /// Multi-queue plans stripe operations round-robin over their queues;
 /// each queue arms and triggers independently, contending for the NIC's
@@ -1515,6 +1739,66 @@ impl CommPlan {
                 }
                 Ok(Round { host_reqs: Vec::new() })
             }
+            Variant::GpuInitiated => {
+                let mut kernels = kernels;
+                if kernels.is_empty() {
+                    // Device-side progress kernel carrying the ring work.
+                    kernels.push(KernelSpec {
+                        name: "plan_progress".into(),
+                        flops: 0,
+                        bytes: 0,
+                        payload: KernelPayload::None,
+                    });
+                }
+                let mut gis: Vec<GiCtx> = kernels.iter().map(|_| GiCtx::new()).collect();
+                // Previous rounds' completion rides the first kernel's
+                // prologue, over the plan's WHOLE queue set (same chained
+                // small-plan reasoning as the KT arm above).
+                for slot in 0..self.queues.len() {
+                    gi_wait_impl(hctx, self.queues[slot], &mut gis[0])?;
+                }
+                // The round's messages all land in the LAST kernel's
+                // descriptor plan: its closing wavefronts build the
+                // command-ring entries after the producers have run.
+                // No host arming, no DWQ slots, no trigger epochs —
+                // and no host time charged: the pattern ships as kernel
+                // arguments.
+                for &slot in &self.active {
+                    let qid = self.queues[slot];
+                    let last = gis.last_mut().expect("at least one kernel");
+                    hctx.with(|w, _| {
+                        if w.queues[qid].freed {
+                            return Err(StError::QueueFreed(qid));
+                        }
+                        for s in self.sends.iter().filter(|s| s.rec.qslot == slot) {
+                            let d = &s.rec;
+                            gi_arm_send(w, qid, last, d.dst, d.src, d.tag, d.comm, s.req_cell);
+                        }
+                        for r in
+                            self.recvs.iter().filter(|r| r.rec.deferred && r.rec.qslot == slot)
+                        {
+                            let (src, tag) = match (r.rec.src, r.rec.tag) {
+                                (SrcSel::Rank(s), TagSel::Tag(t)) => (s, t),
+                                // Unreachable: recv_deferred validated.
+                                _ => return Err(StError::WildcardUnsupported),
+                            };
+                            let req_cell =
+                                r.req_cell.expect("deferred recv carries a persistent request");
+                            gi_arm_recv(w, qid, last, src, r.rec.bufs[0], tag, r.rec.comm, req_cell);
+                        }
+                        Ok(())
+                    })?;
+                }
+                for (k, gi) in kernels.into_iter().zip(gis) {
+                    let op = if gi.is_empty() {
+                        StreamOp::Kernel(k)
+                    } else {
+                        StreamOp::GiKernel(k, gi)
+                    };
+                    host_enqueue(hctx, self.stream, op);
+                }
+                Ok(Round { host_reqs: Vec::new() })
+            }
             _ => {
                 for k in kernels {
                     host_enqueue(hctx, self.stream, StreamOp::Kernel(k));
@@ -1542,7 +1826,9 @@ impl CommPlan {
                 mpi::waitall(hctx, &round.host_reqs);
                 Ok(())
             }
-            Variant::KernelTriggered => Ok(()),
+            // KT and GI completion rides the next round's kernel
+            // prologue (or CommPlan::drain): nothing to do here.
+            Variant::KernelTriggered | Variant::GpuInitiated => Ok(()),
             _ => {
                 for &slot in &self.active {
                     wait_impl(hctx, self.queues[slot])?;

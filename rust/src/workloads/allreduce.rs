@@ -16,6 +16,10 @@
 //!   ring schedule, kernel-triggered — each step's trigger/wait pair
 //!   rides the reduction kernels themselves, with no per-step stream
 //!   memory ops (arXiv 2306.15773).
+//! * `ring-gi` — [`crate::collectives::ring_allreduce_gi`]: the same
+//!   ring schedule, GPU-initiated — the kernels build each step's
+//!   command-ring descriptors outright, with no stream memory ops at
+//!   all and no DWQ slots (arXiv 2503.24230).
 //!
 //! The collectives drive one typed [`crate::stx::Queue`] per rank.
 //! Each of the `iters` repetitions re-initializes the vector (untimed),
@@ -28,8 +32,8 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::collectives::{
-    chunks, recursive_doubling_allreduce_st, ring_ag_step, ring_allreduce_kt, ring_allreduce_st,
-    ring_rs_step,
+    chunks, recursive_doubling_allreduce_st, ring_ag_step, ring_allreduce_gi, ring_allreduce_kt,
+    ring_allreduce_st, ring_rs_step,
 };
 use crate::coordinator::run_cluster;
 use crate::gpu::{self, host_enqueue, stream_synchronize, KernelPayload, KernelSpec, StreamOp};
@@ -50,6 +54,7 @@ enum Mode {
     RingSt,
     RdblSt,
     RingKt,
+    RingGi,
 }
 
 fn mode_of(variant: &str) -> Result<Mode> {
@@ -58,6 +63,7 @@ fn mode_of(variant: &str) -> Result<Mode> {
         "ring-st" => Mode::RingSt,
         "rdbl-st" => Mode::RdblSt,
         "ring-kt" => Mode::RingKt,
+        "ring-gi" => Mode::RingGi,
         other => bail!("allreduce: unknown variant '{other}'"),
     })
 }
@@ -142,11 +148,11 @@ impl Workload for Allreduce {
     }
 
     fn description(&self) -> &'static str {
-        "allreduce(sum): host ring vs ST ring vs ST recursive doubling vs KT ring"
+        "allreduce(sum): host ring vs ST ring vs ST recursive doubling vs KT ring vs GI ring"
     }
 
     fn variants(&self) -> &'static [&'static str] {
-        &["baseline", "ring-st", "rdbl-st", "ring-kt"]
+        &["baseline", "ring-st", "rdbl-st", "ring-kt", "ring-gi"]
     }
 
     fn default_elems(&self) -> &'static [usize] {
@@ -200,6 +206,10 @@ impl Workload for Allreduce {
                     Queue::create(ctx, rank, sid, Variant::KernelTriggered)
                         .expect("NIC counter pool exhausted"),
                 ),
+                Mode::RingGi => Some(
+                    Queue::create(ctx, rank, sid, Variant::GpuInitiated)
+                        .expect("NIC counter pool exhausted"),
+                ),
                 _ => Some(
                     Queue::create(ctx, rank, sid, Variant::StreamTriggered)
                         .expect("NIC counter pool exhausted"),
@@ -226,6 +236,9 @@ impl Workload for Allreduce {
                     }
                     (Mode::RingKt, Some(q)) => {
                         ring_allreduce_kt(ctx, rank, n, q, sid, d, len, t, COMM_WORLD)
+                    }
+                    (Mode::RingGi, Some(q)) => {
+                        ring_allreduce_gi(ctx, rank, n, q, sid, d, len, t, COMM_WORLD)
                     }
                     (Mode::RdblSt, Some(q)) => {
                         recursive_doubling_allreduce_st(

@@ -53,7 +53,7 @@ impl Workload for Broadcast {
     }
 
     fn variants(&self) -> &'static [&'static str] {
-        &["baseline", "st", "st-shader", "kt"]
+        &["baseline", "st", "st-shader", "kt", "gi"]
     }
 
     fn default_elems(&self) -> &'static [usize] {

@@ -130,8 +130,8 @@ impl Default for CampaignSpec {
 }
 
 impl CampaignSpec {
-    /// Tiny smoke campaign (2 workloads × 3 variants each — host, ST,
-    /// and KT — × 1 size × 1 topo): fast enough for CI and the
+    /// Tiny smoke campaign (2 workloads × 4 variants each — host, ST,
+    /// KT, and GI — × 1 size × 1 topo): fast enough for CI and the
     /// `campaign` example's assertions.
     pub fn smoke() -> Self {
         Self {
@@ -140,8 +140,10 @@ impl CampaignSpec {
                 "baseline".into(),
                 "st".into(),
                 "kt".into(),
+                "gi".into(),
                 "ring-st".into(),
                 "ring-kt".into(),
+                "ring-gi".into(),
             ],
             elems: vec![48],
             topos: vec![(2, 1)],
@@ -227,6 +229,13 @@ pub struct CampaignCell {
     /// Peak concurrent DWQ occupancy of the first seed's run (HTQ
     /// pressure high-water mark).
     pub dwq_peak: u64,
+    /// GPU-initiated command-ring descriptors the NIC consumed (first
+    /// seed's run; see `Metrics::gi_posts`). Zero for every non-GI
+    /// variant.
+    pub gi_posts: u64,
+    /// Kernel tails that stalled on a full per-launch command ring
+    /// (first seed's run; see `Metrics::gi_ring_full_waits`).
+    pub gi_ring_full_waits: u64,
     /// The aggregated `dwq waits`/`dwq posts` split per within-rank
     /// queue slot (first seed's run; empty when the run created no
     /// queues or the workload cannot observe them).
@@ -373,6 +382,7 @@ impl CampaignReport {
                 "\"validation\": \"{}\", \"bytes_wire\": {}, \"wire_msgs\": {}, \
                  \"max_ingress_wait_ns\": {}, \"max_egress_wait_ns\": {}, \
                  \"dwq_slot_waits\": {}, \"dwq_peak\": {}, \"dwq_queues\": [{}], \
+                 \"gi_posts\": {}, \"gi_ring_full_waits\": {}, \
                  \"unexpected_msgs\": {}, \"events\": {}, \
                  \"faults_injected\": {}, \"retries\": {}, \"timeouts\": {}, \
                  \"stalls\": {}, \"stall_report\": {} }}",
@@ -384,6 +394,8 @@ impl CampaignReport {
                 c.dwq_slot_waits,
                 c.dwq_peak,
                 dwq_queues,
+                c.gi_posts,
+                c.gi_ring_full_waits,
                 c.unexpected_msgs,
                 c.events,
                 c.faults_injected,
@@ -423,6 +435,8 @@ impl CampaignReport {
             "dwq waits".to_string(),
             "dwq peak".to_string(),
             "dwq/q".to_string(),
+            "gi posts".to_string(),
+            "gi ring waits".to_string(),
             "unexp".to_string(),
             "faults".to_string(),
             "retries".to_string(),
@@ -481,6 +495,8 @@ impl CampaignReport {
                 c.dwq_slot_waits.to_string(),
                 c.dwq_peak.to_string(),
                 dwq_q,
+                c.gi_posts.to_string(),
+                c.gi_ring_full_waits.to_string(),
                 c.unexpected_msgs.to_string(),
                 c.faults_injected.to_string(),
                 c.retries.to_string(),
@@ -554,6 +570,8 @@ fn record_of(p: &CellPlan<'_>, seed: u64, r: &ScenarioRun) -> SeedRecord {
         max_egress_wait_ns: r.metrics.max_egress_wait_ns,
         dwq_slot_waits: r.metrics.dwq_slot_waits,
         dwq_peak: r.metrics.dwq_peak,
+        gi_posts: r.metrics.gi_posts,
+        gi_ring_full_waits: r.metrics.gi_ring_full_waits,
         unexpected_msgs: r.metrics.unexpected_msgs,
         events: r.stats.events,
         faults_injected: r.metrics.faults_injected,
@@ -589,6 +607,8 @@ fn stall_record_of(p: &CellPlan<'_>, seed: u64, rep: &StallReport) -> SeedRecord
         max_egress_wait_ns: 0,
         dwq_slot_waits: 0,
         dwq_peak: 0,
+        gi_posts: 0,
+        gi_ring_full_waits: 0,
         unexpected_msgs: 0,
         events: 0,
         faults_injected: 0,
@@ -912,6 +932,8 @@ pub fn run_campaign_observed(
                 max_egress_wait_ns: 0,
                 dwq_slot_waits: 0,
                 dwq_peak: 0,
+                gi_posts: 0,
+                gi_ring_full_waits: 0,
                 per_queue: Vec::new(),
                 unexpected_msgs: 0,
                 events: 0,
@@ -987,6 +1009,8 @@ pub fn run_campaign_observed(
             max_egress_wait_ns: m(|r| r.max_egress_wait_ns),
             dwq_slot_waits: m(|r| r.dwq_slot_waits),
             dwq_peak: m(|r| r.dwq_peak),
+            gi_posts: m(|r| r.gi_posts),
+            gi_ring_full_waits: m(|r| r.gi_ring_full_waits),
             per_queue: first.map(|r| r.per_queue.clone()).unwrap_or_default(),
             unexpected_msgs: m(|r| r.unexpected_msgs),
             events: m(|r| r.events),

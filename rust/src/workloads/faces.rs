@@ -35,7 +35,7 @@ impl Workload for FacesAdapter {
     }
 
     fn variants(&self) -> &'static [&'static str] {
-        &["baseline", "st", "st-shader", "kt"]
+        &["baseline", "st", "st-shader", "kt", "gi"]
     }
 
     fn default_elems(&self) -> &'static [usize] {

@@ -170,9 +170,9 @@ fn rank_program(
         //    next iteration's receives reuse the buffers.
         stream_synchronize(ctx, comm.sid);
     }
-    // KT drains its outstanding send completions inside the timed region
-    // (ST already waited via the stream), keeping the variants' figures
-    // of merit comparable.
+    // KT/GI drain their outstanding send completions inside the timed
+    // region (ST already waited via the stream), keeping the variants'
+    // figures of merit comparable.
     comm.drain_if_kt(ctx, &cplan, "halo3d");
     times.record(rank, ctx.now() - t0);
     comm.finish(ctx, "halo3d");
@@ -188,7 +188,7 @@ impl Workload for Halo3d {
     }
 
     fn variants(&self) -> &'static [&'static str] {
-        &["baseline", "st", "st-shader", "kt"]
+        &["baseline", "st", "st-shader", "kt", "gi"]
     }
 
     fn default_elems(&self) -> &'static [usize] {

@@ -43,7 +43,7 @@ impl Workload for Incast {
     }
 
     fn variants(&self) -> &'static [&'static str] {
-        &["baseline", "st", "st-shader", "kt"]
+        &["baseline", "st", "st-shader", "kt", "gi"]
     }
 
     fn default_elems(&self) -> &'static [usize] {

@@ -27,7 +27,7 @@
 //! |-------------|--------------------------------------------------|
 //! | `faces`     | adapter over [`crate::faces::run_faces`]         |
 //! | `halo3d`    | 27-point stencil exchange (faces+edges+corners)  |
-//! | `allreduce` | host / ST / KT ring + ST recursive-doubling      |
+//! | `allreduce` | host / ST / KT / GI ring + ST recursive-doubling |
 //! | `alltoall`  | transpose-style personalized exchange            |
 //! | `incast`    | N→1 hotspot stress on one NIC ingress port       |
 //! | `allgather` | ring gather phase over persistent `CommPlan`s    |
@@ -37,9 +37,13 @@
 //!
 //! Every workload sweeps the [`crate::stx::Variant`] axis: the host
 //! baseline, the paper's stream-triggered path (`st` / `st-shader`),
-//! and the kernel-triggered path (`kt`, arXiv 2306.15773) in which
+//! the kernel-triggered path (`kt`, arXiv 2306.15773) in which
 //! triggers fire from inside kernels and completion waits ride kernel
-//! prologues — no per-iteration stream memory ops at all.
+//! prologues — no per-iteration stream memory ops at all — and the
+//! GPU-initiated path (`gi`, arXiv 2503.24230) in which the kernel
+//! itself builds command-ring descriptors the NIC drains, trading zero
+//! host arming cost for per-descriptor device time
+//! (`cost.gi_descr_build_ns`).
 
 pub mod campaign;
 pub mod scaffold;
@@ -266,11 +270,12 @@ pub fn names() -> Vec<&'static str> {
 /// Shared variant axis for the point-to-point workloads — the
 /// [`crate::stx::Variant`] names: `baseline` (host-synchronized MPI),
 /// `st`/`st-shader` (stream-triggered with the HIP or hand-coded-shader
-/// memop flavor, paper §V-F), and `kt` (kernel-triggered, arXiv
-/// 2306.15773). `workload` names the caller in the rejection message.
+/// memop flavor, paper §V-F), `kt` (kernel-triggered, arXiv 2306.15773),
+/// and `gi` (GPU-initiated command rings, arXiv 2503.24230). `workload`
+/// names the caller in the rejection message.
 pub(crate) fn comm_variant(workload: &str, variant: &str) -> Result<Variant> {
     Variant::parse(variant).ok_or_else(|| {
-        anyhow!("{workload}: unknown variant '{variant}' (known: baseline, st, st-shader, kt)")
+        anyhow!("{workload}: unknown variant '{variant}' (known: baseline, st, st-shader, kt, gi)")
     })
 }
 

@@ -110,12 +110,13 @@ impl RankComm {
         b
     }
 
-    /// KT epilogue inside the timed region: drain the plan's outstanding
-    /// send completions (ST already waited via its stream waits), so the
-    /// variants' figures of merit compare like for like.
+    /// KT/GI epilogue inside the timed region: drain the plan's
+    /// outstanding send completions (ST already waited via its stream
+    /// waits), so the variants' figures of merit compare like for like.
     pub fn drain_if_kt(&self, ctx: &mut HostCtx<World>, plan: &CommPlan, what: &str) {
-        if self.variant == Variant::KernelTriggered {
-            plan.drain(ctx).unwrap_or_else(|e| panic!("{what}: KT queue drain: {e}"));
+        if matches!(self.variant, Variant::KernelTriggered | Variant::GpuInitiated) {
+            plan.drain(ctx)
+                .unwrap_or_else(|e| panic!("{what}: {} queue drain: {e}", self.variant.name()));
         }
     }
 

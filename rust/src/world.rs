@@ -204,6 +204,14 @@ pub struct Metrics {
     /// Runs that ended in a stall (set by the campaign aggregator on
     /// stalled cells; always 0 inside a completed run).
     pub stalls: u64,
+    /// Command-ring descriptors the NIC consumed on the GPU-initiated
+    /// path (one per `gpu::GI_CHUNK_BYTES` send granule, one per
+    /// receive; no pre-armed DWQ slots anywhere on this path).
+    pub gi_posts: u64,
+    /// Times a GI kernel's producing wavefront found its command ring
+    /// full and stalled until the NIC consumed the oldest descriptor
+    /// (the GI backpressure signal, analogous to `dwq_slot_waits`).
+    pub gi_ring_full_waits: u64,
 }
 
 /// One armed-but-not-yet-fired triggered operation (DWQ descriptor),

@@ -35,6 +35,7 @@ fn same_config_same_seed_is_byte_identical() {
         Variant::StreamTriggered,
         Variant::StreamTriggeredShader,
         Variant::KernelTriggered,
+        Variant::GpuInitiated,
     ];
     for variant in all {
         let cfg = jittered_cfg(variant, 42);
@@ -178,6 +179,84 @@ fn plan_rounds_match_hand_iterations_across_thread_counts() {
     assert_eq!(serial[2], serial[3], "hand vs plan SimStats (repeat)");
 }
 
+/// The GI variant upholds the build-once / start-many contract too: a
+/// GPU-initiated `CommPlan` started N times is byte-identical
+/// (SimStats) to N hand-built `GiCtx` epochs over the same queue — the
+/// plan round and the hand round enqueue the same command-ring kernel —
+/// and stays so across sweep worker-thread counts.
+#[test]
+fn gi_plan_rounds_match_hand_iterations_across_thread_counts() {
+    fn one(use_plan: bool) -> SimStats {
+        let mut cost = presets::frontier_like();
+        cost.jitter_sigma = 0.0;
+        let mut w = build_world(cost, Topology::new(2, 1));
+        let src = w.bufs.alloc_init(vec![3.0; 32]);
+        let dst = w.bufs.alloc(32);
+        let out = run_cluster(w, 1, move |rank, ctx| {
+            let sid = ctx.with(move |w, core| gpu::create_stream(w, core, rank));
+            let q = Queue::create(ctx, rank, sid, stmpi::stx::Variant::GpuInitiated).unwrap();
+            if rank == 0 {
+                let qs = std::slice::from_ref(&q);
+                let mut b = CommPlan::builder(rank, sid, q.variant(), qs);
+                b.send(1, BufSlice::whole(src, 32), 9, COMM_WORLD);
+                let plan = b.build(ctx).unwrap();
+                mpi::barrier(ctx, rank, 2, COMM_WORLD, 0);
+                for _iter in 0..3 {
+                    if use_plan {
+                        let r = plan.round(ctx, Vec::new()).unwrap();
+                        plan.complete(ctx, r).unwrap();
+                    } else {
+                        let mut gi = gpu::GiCtx::new();
+                        q.gi_wait(ctx, &mut gi).unwrap();
+                        q.gi_send(ctx, &mut gi, 1, BufSlice::whole(src, 32), 9, COMM_WORLD)
+                            .unwrap();
+                        host_enqueue(
+                            ctx,
+                            sid,
+                            StreamOp::GiKernel(
+                                KernelSpec {
+                                    name: "plan_progress".into(),
+                                    flops: 0,
+                                    bytes: 0,
+                                    payload: KernelPayload::None,
+                                },
+                                gi,
+                            ),
+                        );
+                    }
+                    stream_synchronize(ctx, sid);
+                }
+                q.drain(ctx).unwrap();
+            } else {
+                mpi::barrier(ctx, rank, 2, COMM_WORLD, 0);
+                for _iter in 0..3 {
+                    let req = mpi::irecv(
+                        ctx,
+                        rank,
+                        SrcSel::Rank(0),
+                        TagSel::Tag(9),
+                        COMM_WORLD,
+                        BufSlice::whole(dst, 32),
+                    );
+                    mpi::wait(ctx, req);
+                }
+            }
+            q.free(ctx).unwrap();
+        })
+        .unwrap();
+        out.stats
+    }
+    let jobs = [false, true, false, true];
+    let run = |threads: usize| -> Vec<SimStats> {
+        sweep::map(&jobs, threads, |_, &use_plan| one(use_plan))
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_eq!(serial, parallel, "1 thread vs 4 threads");
+    assert_eq!(serial[0], serial[1], "hand vs plan SimStats (GI)");
+    assert_eq!(serial[2], serial[3], "hand vs plan SimStats (GI, repeat)");
+}
+
 /// Multi-queue determinism: KT and ST starts mixed on two queues of one
 /// rank yield byte-identical stats across reruns and sweep thread
 /// counts.
@@ -309,6 +388,40 @@ fn kt_campaign_report_is_thread_count_invariant() {
     assert_eq!(serial.to_markdown(), parallel.to_markdown());
 }
 
+/// The GPU-initiated axis upholds the same contract: a GI-only
+/// campaign (every workload's gi/ring-gi cells — command-ring
+/// descriptor builds inside the kernel window, NIC ring consumption,
+/// no DWQ slots) renders byte-identical reports across reruns and
+/// across sweep worker-thread counts, with cost-model jitter live.
+#[test]
+fn gi_campaign_report_is_thread_count_invariant() {
+    let mut spec = CampaignSpec {
+        workloads: vec!["halo3d".into(), "allreduce".into(), "incast".into()],
+        variants: vec!["gi".into(), "ring-gi".into()],
+        elems: vec![32],
+        topos: vec![(2, 1), (2, 2)],
+        seeds: vec![5, 9],
+        iters: 2,
+        jitter: 0.01,
+        threads: Some(1),
+        ..CampaignSpec::default()
+    };
+    let serial = run_campaign(&spec).unwrap();
+    assert!(serial.all_ok(), "GI cells must validate:\n{}", serial.to_markdown());
+    assert!(serial.ran_cells() >= 4, "GI cells must actually run");
+    assert!(
+        serial.cells.iter().filter(|c| c.summary.is_some()).all(|c| c.gi_posts > 0),
+        "every ran GI cell must post through the command ring:\n{}",
+        serial.to_markdown()
+    );
+    spec.threads = Some(3);
+    let parallel = run_campaign(&spec).unwrap();
+    let parallel_again = run_campaign(&spec).unwrap();
+    assert_eq!(serial.to_json(), parallel.to_json(), "1 thread vs 3 threads");
+    assert_eq!(parallel.to_json(), parallel_again.to_json(), "repeated parallel runs");
+    assert_eq!(serial.to_markdown(), parallel.to_markdown());
+}
+
 /// KT-receive determinism (the triggered-receive tentpole): a
 /// halograph KT campaign — receives ride NIC triggered-receive
 /// descriptors and the skewed arrivals exercise the unexpected path —
@@ -392,6 +505,41 @@ fn rdv_drops_campaign_report_is_thread_count_invariant() {
     assert!(
         serial.cells.iter().any(|c| c.faults_injected > 0),
         "rdv-drops campaign must actually drop RTS messages:\n{}",
+        serial.to_markdown()
+    );
+    spec.threads = Some(4);
+    let parallel = run_campaign(&spec).unwrap();
+    let parallel_again = run_campaign(&spec).unwrap();
+    assert_eq!(serial.to_json(), parallel.to_json(), "1 thread vs 4 threads");
+    assert_eq!(parallel.to_json(), parallel_again.to_json(), "repeated parallel runs");
+    assert_eq!(serial.to_markdown(), parallel.to_markdown());
+}
+
+/// The counter-flip fault axis upholds the contract: a `flips`
+/// campaign (lost doorbell bits on ST/KT trigger counters, watchdog
+/// repairs in play) renders byte-identical reports across reruns and
+/// sweep worker-thread counts — and the repaired runs still validate
+/// exactly, because a poisoned counter can only under-count, never
+/// validate wrong data.
+#[test]
+fn counter_flip_campaign_report_is_thread_count_invariant() {
+    let mut spec = CampaignSpec {
+        workloads: vec!["halo3d".into()],
+        variants: vec!["st".into(), "kt".into()],
+        elems: vec![32],
+        topos: vec![(2, 1), (2, 2)],
+        queues: vec![1],
+        seeds: vec![5, 9],
+        iters: 2,
+        jitter: 0.0,
+        faults: Some(stmpi::fault::FaultSpec::counter_flips(23)),
+        threads: Some(1),
+        ..CampaignSpec::default()
+    };
+    let serial = run_campaign(&spec).unwrap();
+    assert!(
+        serial.cells.iter().any(|c| c.faults_injected > 0),
+        "flip campaign must actually poison counters:\n{}",
         serial.to_markdown()
     );
     spec.threads = Some(4);

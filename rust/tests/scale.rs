@@ -73,6 +73,39 @@ fn incast_63_to_1_shows_fig8_congestion_knee() {
     assert!(big.validation.ok(), "63→1 must still validate exactly");
 }
 
+/// Chaos at scale: a 64-rank halograph cell with the full chaos plan
+/// live (drops, dups, delays, stragglers, watchdog replays across 64
+/// host actors) must render byte-identical reports across sweep
+/// worker-thread counts. Memory is guarded the same way as the smoke
+/// above — tiny payloads, one seed, one iteration — so the cell stays
+/// bounded while every fault path runs at the full actor count.
+#[test]
+fn halograph_64_rank_chaos_is_thread_count_invariant() {
+    let mut spec = CampaignSpec {
+        workloads: vec!["halograph".into()],
+        variants: vec!["st".into()],
+        elems: vec![32],
+        topos: vec![(64, 1)],
+        queues: vec![1],
+        seeds: vec![7],
+        iters: 1,
+        jitter: 0.0,
+        faults: Some(stmpi::fault::FaultSpec::chaos(13)),
+        threads: Some(1),
+        ..CampaignSpec::default()
+    };
+    let serial = run_campaign(&spec).unwrap();
+    assert!(
+        serial.cells.iter().any(|c| c.faults_injected > 0),
+        "64-rank chaos must actually inject faults:\n{}",
+        serial.to_markdown()
+    );
+    spec.threads = Some(4);
+    let parallel = run_campaign(&spec).unwrap();
+    assert_eq!(serial.to_json(), parallel.to_json(), "1 thread vs 4 threads");
+    assert_eq!(serial.to_markdown(), parallel.to_markdown());
+}
+
 /// The snapshot-and-reset headline: a 100K-cell campaign (faces +
 /// halograph, tiny payloads, 50 000 seeds per cell) completes, stays
 /// byte-identical between one sweep worker and eight, and finishes
